@@ -1,0 +1,106 @@
+//! Single-input end-to-end latency (paper §IV.D): vehicle classification
+//! split as Input/L1/L2 on the N2 and L3/L4-L5 on the i7, over 100 Mbit
+//! Ethernet, with a **feedback socket** from the server's L4-L5 actor back
+//! to the endpoint signalling inference completion.  The endpoint's wall
+//! clock from frame capture to feedback arrival is the paper's 31.2 ms
+//! end-to-end latency, broken down 57% endpoint / 23% network / 20%
+//! server.
+//!
+//!   cargo run --release --example latency_breakdown [repeats]
+
+use edge_prune::compiler::compile;
+use edge_prune::explorer::precedence_order;
+use edge_prune::models::builder::{build_graph, KernelOptions, DEFAULT_CAPACITY};
+use edge_prune::models::manifest::{EdgeMeta, Manifest};
+use edge_prune::platform::configs::Configs;
+use edge_prune::platform::{Mapping, PlatformGraph};
+use edge_prune::runtime::distributed::run_deployment;
+use edge_prune::runtime::xla_exec::{Variant, XlaService};
+use std::collections::BTreeMap;
+
+const TIME_SCALE: f64 = 4.0;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let repeats: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
+
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let configs = Configs::load_default()?;
+    // Vehicle graph + the Sec IV.D feedback edge (l45 -> feedback, 16 B).
+    let mut meta = manifest.model("vehicle")?.clone();
+    meta.actors.push("feedback".to_string());
+    meta.edges.push(EdgeMeta { src: "l45".into(), dst: "feedback".into(), bytes: 16 });
+    let graph = build_graph(&meta, DEFAULT_CAPACITY)?;
+    let order = precedence_order(&meta)?;
+
+    let mut n2 = configs.device("n2", "vehicle")?;
+    let mut i7 = configs.device("i7", "vehicle")?;
+    n2.time_scale = TIME_SCALE;
+    i7.time_scale = TIME_SCALE;
+    let link = configs.link("n2_i7_eth")?;
+
+    // Input, L1, L2 + the feedback receiver on the endpoint.
+    let mut mapping = Mapping::new();
+    for a in &order {
+        let dev = if ["input", "l1", "l2", "feedback"].contains(&a.as_str()) {
+            "n2"
+        } else {
+            "i7"
+        };
+        mapping.assign(a, dev);
+    }
+    let mut pg = PlatformGraph::new();
+    pg.add_device(n2.clone());
+    pg.add_device(i7.clone());
+    pg.add_link("n2", "i7", link.scaled(TIME_SCALE));
+
+    let svc_e = XlaService::spawn(&manifest.root, &meta, Variant::Jnp)?;
+    let svc_s = XlaService::spawn(&manifest.root, &meta, Variant::Jnp)?;
+    let services: BTreeMap<String, XlaService> =
+        [("n2".to_string(), svc_e), ("i7".to_string(), svc_s)].into_iter().collect();
+    let devices: BTreeMap<String, _> =
+        [("n2".to_string(), n2.clone()), ("i7".to_string(), i7.clone())]
+            .into_iter()
+            .collect();
+
+    println!("latency_breakdown: single image, feedback socket, {repeats} repeats");
+    let mut e2e = Vec::new();
+    let mut endpoint_ms = Vec::new();
+    let mut server_ms = Vec::new();
+    for rep in 0..repeats {
+        let plan = compile(&graph, &pg, &mapping, 17_500 + rep as u16 * 100)?;
+        let opts = KernelOptions { frames: 1, seed: 7 + rep as u64, keep_last: false };
+        let reports = run_deployment(&plan, &meta, &services, &devices, &opts)?;
+        let e = &reports["n2"];
+        let s = &reports["i7"];
+        // Endpoint wall covers capture -> ... -> feedback arrival = E2E.
+        e2e.push(e.wall.as_secs_f64() * 1e3 / TIME_SCALE);
+        let busy = |r: &edge_prune::runtime::metrics::RunReport, names: &[&str]| -> f64 {
+            names
+                .iter()
+                .filter_map(|n| r.actors.get(*n))
+                .map(|s| s.busy.as_secs_f64() * 1e3)
+                .sum::<f64>()
+                / TIME_SCALE
+        };
+        endpoint_ms.push(busy(e, &["input", "l1", "l2"]));
+        server_ms.push(busy(s, &["l3", "l45"]));
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (e2e, ep, srv) = (avg(&e2e), avg(&endpoint_ms), avg(&server_ms));
+    let comm = (e2e - ep - srv).max(0.0);
+    println!("end-to-end latency: {e2e:.1} ms   (paper: 31.2 ms)");
+    println!(
+        "  endpoint inference {ep:5.1} ms = {:4.1}%  (paper: 17.5 ms / 57%)",
+        ep / e2e * 100.0
+    );
+    println!(
+        "  communication      {comm:5.1} ms = {:4.1}%  (paper:  7.3 ms / 23%)",
+        comm / e2e * 100.0
+    );
+    println!(
+        "  server inference   {srv:5.1} ms = {:4.1}%  (paper:  6.3 ms / 20%)",
+        srv / e2e * 100.0
+    );
+    Ok(())
+}

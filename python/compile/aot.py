@@ -1,0 +1,122 @@
+"""AOT pipeline: lower every compute actor to HLO text + dump weights.
+
+Run once at build time (``make artifacts``); the Rust runtime is then
+self-contained.  Interchange format is HLO *text*, not serialized
+HloModuleProto — jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out-dir (default ../artifacts):
+  vehicle/<actor>.hlo.txt         pure-jnp variant (timing-fidelity path)
+  vehicle/<actor>.pallas.hlo.txt  Pallas-kernel variant (interpret=True)
+  ssd/<actor>.hlo.txt
+  weights/<model>.<actor>.<w>.bin raw little-endian f32
+  manifest.json                   graph + artifact index (read by Rust)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ActorDef, vehicle_actors, vehicle_graph_meta
+from .ssd import ssd_actors, ssd_graph_meta
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_actor(actor: ActorDef, pallas: bool) -> str:
+    fn = actor.fn_pallas if pallas else actor.fn_jnp
+    assert fn is not None, f"{actor.name}: no pallas variant"
+    in_specs = [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for s in actor.in_shapes]
+    w_specs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in actor.weight_arrays()]
+    lowered = jax.jit(fn).lower(*in_specs, *w_specs)
+    return to_hlo_text(lowered)
+
+
+def emit_model(name: str, actors: list, meta: dict, out_dir: str,
+               pallas_variants: bool) -> dict:
+    model_dir = os.path.join(out_dir, name)
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(model_dir, exist_ok=True)
+    os.makedirs(wdir, exist_ok=True)
+    entries = []
+    for a in actors:
+        hlo = lower_actor(a, pallas=False)
+        hlo_path = f"{name}/{a.name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_path), "w") as f:
+            f.write(hlo)
+        entry = {
+            "name": a.name,
+            "hlo": hlo_path,
+            "inputs": [{"shape": list(s), "dtype": "f32"} for s in a.in_shapes],
+            "out_shape": list(a.out_shape),
+            "out_bytes": a.out_bytes,
+            "flops": int(a.flops),
+            "weights": [],
+        }
+        if pallas_variants and a.fn_pallas is not None:
+            hlo_p = lower_actor(a, pallas=True)
+            p_path = f"{name}/{a.name}.pallas.hlo.txt"
+            with open(os.path.join(out_dir, p_path), "w") as f:
+                f.write(hlo_p)
+            entry["hlo_pallas"] = p_path
+        for wname, warr in a.weights:
+            wpath = f"weights/{name}.{a.name}.{wname}.bin"
+            warr.astype("<f4").tofile(os.path.join(out_dir, wpath))
+            entry["weights"].append({"file": wpath, "shape": list(warr.shape)})
+        entries.append(entry)
+        print(f"  {name}/{a.name}: hlo {len(hlo)//1024} KiB, "
+              f"{sum(w.size for _, w in a.weights)} params")
+    meta = dict(meta)
+    meta["hlo_entries"] = entries
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default="vehicle,ssd")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    # Merge with an existing manifest so partial rebuilds (--models
+    # vehicle) keep the other models' entries.
+    mpath_existing = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(mpath_existing):
+        with open(mpath_existing) as f:
+            manifest = json.load(f)
+    else:
+        manifest = {"version": 1, "models": {}}
+    want = set(args.models.split(","))
+    if "vehicle" in want:
+        print("lowering vehicle CNN actors (jnp + pallas variants)...")
+        acts = vehicle_actors(seed=args.seed)
+        manifest["models"]["vehicle"] = emit_model(
+            "vehicle", acts, vehicle_graph_meta(acts), out_dir,
+            pallas_variants=True)
+    if "ssd" in want:
+        print("lowering SSD-Mobilenet actors (34 HLO executables)...")
+        acts = ssd_actors(seed=args.seed + 4)
+        manifest["models"]["ssd"] = emit_model(
+            "ssd", acts, ssd_graph_meta(acts), out_dir, pallas_variants=False)
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

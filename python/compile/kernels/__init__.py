@@ -1,0 +1,7 @@
+"""L1 Pallas kernels + pure-jnp oracles (ref)."""
+
+from .conv2d import conv2d_pallas, same_pad  # noqa: F401
+from .dwconv import dwconv2d_pallas  # noqa: F401
+from .dense import dense_pallas  # noqa: F401
+from .pool import maxpool2d_pallas  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,96 @@
+"""Pallas 2-D convolution kernel (L1 hot-spot of the vehicle CNN / SSD).
+
+Structure (and the TPU story it encodes):
+
+- The output is blocked over rows: each grid step produces a
+  ``(TH, OW, Cout)`` tile, the natural VMEM-resident unit.  For the paper's
+  shapes the largest tile is 8 x 150 x 64 x 4 B = 300 KiB, far below the
+  ~16 MiB VMEM budget, leaving room for double-buffering the input rows.
+- The inner operation is a ``(TH*OW, Cin) @ (Cin, Cout)`` contraction per
+  kernel tap — exactly the MXU-systolic-array shape (the GPU papers' im2col
+  + tensor-core WMMA trick, re-expressed for TPU: BlockSpec provides the
+  HBM->VMEM schedule that threadblock tiling provided on GPU).
+- ``interpret=True`` is mandatory on this testbed: real-TPU lowering emits a
+  Mosaic custom-call that the CPU PJRT plugin cannot execute.  Numerics are
+  validated against ``ref.conv2d_ref`` by pytest/hypothesis.
+
+MXU-utilization estimate (TPU, structural): with Cin >= 32 and Cout >= 32
+the per-tap contraction keeps the 128x128 MXU at ~Cin/128 * Cout/128 lane
+occupancy; for SSD's 512x512 layers this is full occupancy, for the vehicle
+CNN's 3->32 first layer it is input-bound (as on any accelerator).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_tile(oh: int, preferred: int = 8) -> int:
+    """Largest divisor of ``oh`` that is <= 2*preferred (VMEM-friendly)."""
+    best = 1
+    for th in range(1, min(oh, 2 * preferred) + 1):
+        if oh % th == 0:
+            best = th
+    return best
+
+
+def same_pad(h: int, k: int, stride: int) -> tuple[int, int]:
+    """TF-style SAME padding amounts (lo, hi) for one spatial dim."""
+    oh = -(-h // stride)  # ceil
+    total = max((oh - 1) * stride + k - h, 0)
+    return total // 2, total - total // 2
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, stride: int, th: int):
+    i = pl.program_id(0)
+    row0 = i * th * stride
+    span = (th - 1) * stride + k
+    xblk = x_ref[pl.ds(row0, span)]  # (span, Wp, Cin)
+    ow = o_ref.shape[1]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for ki in range(k):
+        for kj in range(k):
+            patch = xblk[ki::stride][:th]
+            patch = patch[:, kj::stride][:, :ow]
+            # (TH, OW, Cin) x (Cin, Cout) -> (TH, OW, Cout): MXU-shaped.
+            acc = acc + jax.lax.dot_general(
+                patch,
+                w_ref[ki, kj],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = acc + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "row_tile"))
+def conv2d_pallas(x, w, b, stride: int = 1, padding: str = "SAME", row_tile: int = 8):
+    """Conv2d via Pallas. x: (H,W,Cin); w: (K,K,Cin,Cout); b: (Cout,)."""
+    h, wdt, cin = x.shape
+    k, _, _, cout = w.shape
+    if padding == "SAME":
+        (plo_h, phi_h) = same_pad(h, k, stride)
+        (plo_w, phi_w) = same_pad(wdt, k, stride)
+    elif padding == "VALID":
+        plo_h = phi_h = plo_w = phi_w = 0
+    else:
+        raise ValueError(f"unsupported padding {padding!r}")
+    xp = jnp.pad(x, ((plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+    hp, wp = xp.shape[0], xp.shape[1]
+    oh = (hp - k) // stride + 1
+    ow = (wp - k) // stride + 1
+    th = _row_tile(oh, row_tile)
+    grid = (oh // th,)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, k=k, stride=stride, th=th),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((th, ow, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, cout), jnp.float32),
+        interpret=True,
+    )(xp, w, b)

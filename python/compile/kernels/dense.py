@@ -1,0 +1,56 @@
+"""Pallas dense (vector-matrix) kernel for the classifier head actors.
+
+Blocked over output columns: each grid step computes a ``(TN,)`` slice of
+the output as ``(1, In) @ (In, TN)`` — the degenerate-M MXU case.  The
+vehicle CNN's L3 actor (18432 -> 100) is the big one: the (In, TN) weight
+block at TN=50 is 18432 x 50 x 4 B = 3.6 MiB, VMEM-resident; the input
+vector (72 KiB) is broadcast to every step (on TPU it would stay pinned in
+VMEM across the grid).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _col_tile(n: int, preferred: int = 64) -> int:
+    best = 1
+    for tn in range(1, min(n, 2 * preferred) + 1):
+        if n % tn == 0:
+            best = tn
+    return best
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    # x: (In,); w block: (In, TN); b block: (TN,); o block: (TN,)
+    o_ref[...] = (
+        jax.lax.dot_general(
+            x_ref[...],
+            w_ref[...],
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("col_tile",))
+def dense_pallas(x, w, b, col_tile: int = 64):
+    """Dense layer via Pallas. x: (In,); w: (In, Out); b: (Out,)."""
+    n_in, n_out = w.shape
+    tn = _col_tile(n_out, col_tile)
+    grid = (n_out // tn,)
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+            pl.BlockSpec((n_in, tn), lambda i: (0, i)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.float32),
+        interpret=True,
+    )(x, w, b)

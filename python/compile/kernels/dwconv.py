@@ -1,0 +1,64 @@
+"""Pallas depthwise 2-D convolution kernel (MobileNet DWCL actors).
+
+Same row-tiled structure as ``conv2d.py``, but the inner op is an
+elementwise multiply-accumulate per channel — on TPU this is VPU (vector
+unit) work, not MXU work, which is exactly why MobileNet pairs it with a
+1x1 pointwise conv (an MXU matmul, handled by ``conv2d_pallas`` with K=1).
+VMEM per tile: (span x Wp x C + TH x OW x C) x 4 B; worst paper shape
+(150x150x64, TH=10) ~ 1.1 MiB — comfortably resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import _row_tile, same_pad
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, stride: int, th: int):
+    i = pl.program_id(0)
+    row0 = i * th * stride
+    span = (th - 1) * stride + k
+    xblk = x_ref[pl.ds(row0, span)]  # (span, Wp, C)
+    ow = o_ref.shape[1]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for ki in range(k):
+        for kj in range(k):
+            patch = xblk[ki::stride][:th]
+            patch = patch[:, kj::stride][:, :ow]  # (TH, OW, C)
+            acc = acc + patch * w_ref[ki, kj]  # broadcast over (C,)
+    o_ref[...] = acc + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "row_tile"))
+def dwconv2d_pallas(x, w, b, stride: int = 1, padding: str = "SAME", row_tile: int = 8):
+    """Depthwise conv2d via Pallas. x: (H,W,C); w: (K,K,C); b: (C,)."""
+    h, wdt, c = x.shape
+    k = w.shape[0]
+    if padding == "SAME":
+        (plo_h, phi_h) = same_pad(h, k, stride)
+        (plo_w, phi_w) = same_pad(wdt, k, stride)
+    elif padding == "VALID":
+        plo_h = phi_h = plo_w = phi_w = 0
+    else:
+        raise ValueError(f"unsupported padding {padding!r}")
+    xp = jnp.pad(x, ((plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+    hp, wp = xp.shape[0], xp.shape[1]
+    oh = (hp - k) // stride + 1
+    ow = (wp - k) // stride + 1
+    th = _row_tile(oh, row_tile)
+    grid = (oh // th,)
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, k=k, stride=stride, th=th),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((th, ow, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.float32),
+        interpret=True,
+    )(xp, w, b)

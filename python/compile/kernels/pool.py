@@ -1,0 +1,45 @@
+"""Pallas max-pooling kernel (the vehicle CNN's downsampling stages).
+
+Row-tiled like the conv kernels; pure VPU work (max over the window taps).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import _row_tile
+
+
+def _pool_kernel(x_ref, o_ref, *, window: int, stride: int, th: int):
+    i = pl.program_id(0)
+    row0 = i * th * stride
+    span = (th - 1) * stride + window
+    xblk = x_ref[pl.ds(row0, span)]
+    ow = o_ref.shape[1]
+    acc = jnp.full(o_ref.shape, -jnp.inf, jnp.float32)
+    for ki in range(window):
+        for kj in range(window):
+            patch = xblk[ki::stride][:th]
+            patch = patch[:, kj::stride][:, :ow]
+            acc = jnp.maximum(acc, patch)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("window", "stride", "row_tile"))
+def maxpool2d_pallas(x, window: int = 2, stride: int = 2, row_tile: int = 8):
+    """Max-pool via Pallas, VALID padding. x: (H, W, C)."""
+    h, w, c = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    th = _row_tile(oh, row_tile)
+    grid = (oh // th,)
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, window=window, stride=stride, th=th),
+        grid=grid,
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((th, ow, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.float32),
+        interpret=True,
+    )(x)

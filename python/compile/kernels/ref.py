@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an oracle here with an identical
+signature; pytest (and hypothesis sweeps) assert allclose between the two.
+The oracles are also the implementations used for the "jnp" artifact
+variants (see nn.py) — the full-size SSD-Mobilenet actor executables are
+built from these for timing fidelity, while the Pallas variants prove the
+kernel path end-to-end on the vehicle CNN.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, b, stride=1, padding="SAME"):
+    """2-D convolution, NHWC / HWIO, f32.
+
+    x: (H, W, Cin); w: (K, K, Cin, Cout); b: (Cout,)
+    Returns (H', W', Cout).
+    """
+    out = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    return out + b
+
+
+def dwconv2d_ref(x, w, b, stride=1, padding="SAME"):
+    """Depthwise 2-D convolution.
+
+    x: (H, W, C); w: (K, K, C); b: (C,). Returns (H', W', C).
+    """
+    c = x.shape[-1]
+    out = lax.conv_general_dilated(
+        x[None],
+        w[:, :, None, :],  # (K, K, 1, C) HWIO with feature_group_count=C
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )[0]
+    return out + b
+
+
+def dense_ref(x, w, b):
+    """x: (In,); w: (In, Out); b: (Out,). Returns (Out,)."""
+    return x @ w + b
+
+
+def maxpool2d_ref(x, window=2, stride=2):
+    """x: (H, W, C) -> floor((H-window)/stride)+1 rows, VALID padding."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(window, window, 1),
+        window_strides=(stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def softmax_ref(x, axis=-1):
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)

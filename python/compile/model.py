@@ -1,0 +1,176 @@
+"""L2 model definitions — vehicle-classification CNN (paper Fig. 2).
+
+Each dataflow *actor* of the paper's application graph becomes one pure JAX
+function ``fn(x, *weights) -> y`` that is AOT-lowered to its own HLO
+executable by ``aot.py``.  Per-actor executables are what make Edge-PRUNE's
+arbitrary partition points possible: the Rust runtime loads one PJRT
+executable per compute actor and the mapping file decides which device runs
+which actor.
+
+Geometry (reconstructed from the paper's token sizes, all f32):
+
+  Input  96x96x3      -> 110592 B   (PP1 raw-offload token)
+  L1  conv5x5x32 + maxpool/2 + ReLU -> 48x48x32 -> 294912 B  (paper: 294912)
+  L2  conv5x5x32 + maxpool/2 + ReLU -> 24x24x32 -> 73728 B   (paper: 73728)
+  L3  dense 18432->100 + ReLU       -> 400 B
+  L4-L5  dense 100->100 + ReLU, dense 100->NUM_CLASSES + softmax -> 16 B
+
+Both a Pallas-kernel variant (the L1 hot-spot path, interpret=True) and a
+pure-jnp variant (the oracle / timing-fidelity path) of each actor are
+emitted; pytest asserts they agree.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d_pallas, dense_pallas, dwconv2d_pallas, maxpool2d_pallas
+from .kernels import ref
+
+NUM_CLASSES = 4
+INPUT_SHAPE = (96, 96, 3)
+
+
+@dataclass
+class ActorDef:
+    """One dataflow actor's compute definition for AOT lowering."""
+
+    name: str
+    fn_jnp: Callable  # pure-jnp implementation (oracle / timing artifact)
+    fn_pallas: Callable | None  # Pallas-kernel implementation (may be None)
+    in_shapes: list  # list of input tensor shapes (without weights)
+    out_shape: tuple
+    weights: list = field(default_factory=list)  # [(name, np.ndarray), ...]
+    flops: int = 0
+
+    @property
+    def out_bytes(self) -> int:
+        return int(np.prod(self.out_shape)) * 4
+
+    def weight_arrays(self):
+        return [w for (_, w) in self.weights]
+
+
+def conv_flops(oh, ow, cout, k, cin):
+    return oh * ow * cout * k * k * cin * 2
+
+
+def dense_flops(n_in, n_out):
+    return n_in * n_out * 2
+
+
+def _init(rng, shape, fan_in):
+    return np.asarray(
+        rng.standard_normal(shape) * np.sqrt(2.0 / fan_in), dtype=np.float32
+    )
+
+
+def vehicle_actors(seed: int = 7) -> list[ActorDef]:
+    """The 5 actors of Fig. 2 (Input is a source; 4 compute actors here)."""
+    rng = np.random.default_rng(seed)
+    w1 = _init(rng, (5, 5, 3, 32), 5 * 5 * 3)
+    b1 = np.zeros(32, np.float32)
+    w2 = _init(rng, (5, 5, 32, 32), 5 * 5 * 32)
+    b2 = np.zeros(32, np.float32)
+    w3 = _init(rng, (24 * 24 * 32, 100), 24 * 24 * 32)
+    b3 = np.zeros(100, np.float32)
+    w4 = _init(rng, (100, 100), 100)
+    b4 = np.zeros(100, np.float32)
+    w5 = _init(rng, (100, NUM_CLASSES), 100)
+    b5 = np.zeros(NUM_CLASSES, np.float32)
+
+    def l1_jnp(x, w, b):
+        return ref.relu_ref(ref.maxpool2d_ref(ref.conv2d_ref(x, w, b)))
+
+    def l1_pallas(x, w, b):
+        return jnp.maximum(maxpool2d_pallas(conv2d_pallas(x, w, b)), 0.0)
+
+    def l2_jnp(x, w, b):
+        return ref.relu_ref(ref.maxpool2d_ref(ref.conv2d_ref(x, w, b)))
+
+    def l2_pallas(x, w, b):
+        return jnp.maximum(maxpool2d_pallas(conv2d_pallas(x, w, b)), 0.0)
+
+    def l3_jnp(x, w, b):
+        return ref.relu_ref(ref.dense_ref(x.reshape(-1), w, b))
+
+    def l3_pallas(x, w, b):
+        return jnp.maximum(dense_pallas(x.reshape(-1), w, b), 0.0)
+
+    def l45_jnp(x, wa, ba, wb, bb):
+        h = ref.relu_ref(ref.dense_ref(x, wa, ba))
+        return ref.softmax_ref(ref.dense_ref(h, wb, bb))
+
+    def l45_pallas(x, wa, ba, wb, bb):
+        h = jnp.maximum(dense_pallas(x, wa, ba), 0.0)
+        return ref.softmax_ref(dense_pallas(h, wb, bb))
+
+    def l45_dual_jnp(xa, xb, wa, ba, wb, bb):
+        # Two-input join (paper Sec IV.C): element-wise fusion of the two
+        # branch embeddings, then the same classifier head.
+        x = (xa + xb) * 0.5
+        h = ref.relu_ref(ref.dense_ref(x, wa, ba))
+        return ref.softmax_ref(ref.dense_ref(h, wb, bb))
+
+    def l45_dual_pallas(xa, xb, wa, ba, wb, bb):
+        x = (xa + xb) * 0.5
+        h = jnp.maximum(dense_pallas(x, wa, ba), 0.0)
+        return ref.softmax_ref(dense_pallas(h, wb, bb))
+
+    return [
+        ActorDef(
+            "l1", l1_jnp, l1_pallas, [INPUT_SHAPE], (48, 48, 32),
+            [("w", w1), ("b", b1)], conv_flops(96, 96, 32, 5, 3),
+        ),
+        ActorDef(
+            "l2", l2_jnp, l2_pallas, [(48, 48, 32)], (24, 24, 32),
+            [("w", w2), ("b", b2)], conv_flops(48, 48, 32, 5, 32),
+        ),
+        ActorDef(
+            "l3", l3_jnp, l3_pallas, [(24, 24, 32)], (100,),
+            [("w", w3), ("b", b3)], dense_flops(24 * 24 * 32, 100),
+        ),
+        ActorDef(
+            "l45", l45_jnp, l45_pallas, [(100,)], (NUM_CLASSES,),
+            [("wa", w4), ("ba", b4), ("wb", w5), ("bb", b5)],
+            dense_flops(100, 100) + dense_flops(100, NUM_CLASSES),
+        ),
+        ActorDef(
+            "l45_dual", l45_dual_jnp, l45_dual_pallas, [(100,), (100,)],
+            (NUM_CLASSES,),
+            [("wa", w4), ("ba", b4), ("wb", w5), ("bb", b5)],
+            dense_flops(100, 100) + dense_flops(100, NUM_CLASSES) + 200,
+        ),
+    ]
+
+
+# Paper Fig. 2 token sizes (bytes), edge (src -> dst) order.
+VEHICLE_TOKEN_BYTES = {
+    "input->l1": 110592,
+    "l1->l2": 294912,
+    "l2->l3": 73728,
+    "l3->l45": 400,
+    "l45->sink": 16,
+}
+
+
+def vehicle_graph_meta(actors: list[ActorDef]) -> dict:
+    """Graph metadata for the manifest (cross-checked by the Rust side)."""
+    edges = [
+        {"src": "input", "dst": "l1", "bytes": 110592},
+        {"src": "l1", "dst": "l2", "bytes": actors[0].out_bytes},
+        {"src": "l2", "dst": "l3", "bytes": actors[1].out_bytes},
+        {"src": "l3", "dst": "l45", "bytes": actors[2].out_bytes},
+        {"src": "l45", "dst": "sink", "bytes": actors[3].out_bytes},
+    ]
+    assert edges[1]["bytes"] == VEHICLE_TOKEN_BYTES["l1->l2"]
+    assert edges[2]["bytes"] == VEHICLE_TOKEN_BYTES["l2->l3"]
+    return {
+        "name": "vehicle",
+        "input_shape": list(INPUT_SHAPE),
+        "num_classes": NUM_CLASSES,
+        "actors": ["input", "l1", "l2", "l3", "l45", "sink"],
+        "edges": edges,
+    }

@@ -1,0 +1,77 @@
+"""AOT pipeline tests: HLO text emission + manifest integrity.
+
+These run against a temp dir (vehicle only — SSD lowering is exercised by
+``make artifacts``) so they are hermetic and fast.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile.aot import lower_actor, to_hlo_text
+from compile.model import vehicle_actors
+
+ACTORS = vehicle_actors()
+
+
+def test_hlo_text_is_parseable_entry():
+    txt = lower_actor(ACTORS[2], pallas=False)  # l3: dense
+    assert "ENTRY" in txt and "HloModule" in txt
+    assert "f32[18432,100]" in txt  # weight parameter shape present
+
+
+def test_hlo_text_pallas_variant():
+    txt = lower_actor(ACTORS[2], pallas=True)
+    assert "ENTRY" in txt
+    # interpret=True must lower to plain HLO: no Mosaic custom-calls.
+    assert "mosaic" not in txt.lower()
+
+
+def test_all_vehicle_actors_lower_both_variants():
+    for a in ACTORS:
+        for pallas in (False, True):
+            txt = lower_actor(a, pallas=pallas)
+            assert txt.startswith("HloModule"), a.name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    ),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_integrity():
+    root = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    with open(os.path.join(root, "manifest.json")) as f:
+        m = json.load(f)
+    assert set(m["models"]) >= {"vehicle"}
+    for model_name, model in m["models"].items():
+        for e in model["hlo_entries"]:
+            assert os.path.exists(os.path.join(root, e["hlo"])), e["hlo"]
+            for w in e["weights"]:
+                p = os.path.join(root, w["file"])
+                assert os.path.exists(p)
+                n = int(np.prod(w["shape"]))
+                assert os.path.getsize(p) == n * 4, w["file"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    ),
+    reason="artifacts not built",
+)
+def test_manifest_vehicle_token_sizes():
+    root = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    with open(os.path.join(root, "manifest.json")) as f:
+        m = json.load(f)
+    edges = {f"{e['src']}->{e['dst']}": e["bytes"]
+             for e in m["models"]["vehicle"]["edges"]}
+    assert edges["l1->l2"] == 294912
+    assert edges["l2->l3"] == 73728

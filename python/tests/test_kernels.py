@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes / strides / paddings; every kernel must match its
+``ref.py`` oracle to f32 tolerance.  This is the core correctness signal
+for the AOT artifacts the Rust runtime executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    conv2d_pallas,
+    dense_pallas,
+    dwconv2d_pallas,
+    maxpool2d_pallas,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def arr(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+def assert_close(a, b, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------- conv2d
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(4, 14),
+    w=st.integers(4, 14),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+)
+def test_conv2d_matches_ref(h, w, cin, cout, k, stride, padding):
+    if padding == "VALID" and (h < k or w < k):
+        return
+    x, wt, b = arr(h, w, cin), arr(k, k, cin, cout), arr(cout)
+    got = conv2d_pallas(x, wt, b, stride=stride, padding=padding)
+    want = ref.conv2d_ref(x, wt, b, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    assert_close(got, want)
+
+
+def test_conv2d_vehicle_l1_shape():
+    x, wt, b = arr(96, 96, 3), arr(5, 5, 3, 32), arr(32)
+    got = conv2d_pallas(x, wt, b)
+    assert got.shape == (96, 96, 32)
+    assert_close(got, ref.conv2d_ref(x, wt, b), tol=5e-4)
+
+
+def test_conv2d_rejects_bad_padding():
+    with pytest.raises(ValueError):
+        conv2d_pallas(arr(4, 4, 1), arr(3, 3, 1, 1), arr(1), padding="FULL")
+
+
+# -------------------------------------------------------------- dwconv2d
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(4, 14),
+    w=st.integers(4, 14),
+    c=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+)
+def test_dwconv2d_matches_ref(h, w, c, stride):
+    x, wt, b = arr(h, w, c), arr(3, 3, c), arr(c)
+    got = dwconv2d_pallas(x, wt, b, stride=stride)
+    want = ref.dwconv2d_ref(x, wt, b, stride=stride)
+    assert got.shape == want.shape
+    assert_close(got, want)
+
+
+def test_dwconv2d_stride2_shape():
+    x, wt, b = arr(10, 10, 4), arr(3, 3, 4), arr(4)
+    assert dwconv2d_pallas(x, wt, b, stride=2).shape == (5, 5, 4)
+
+
+# ----------------------------------------------------------------- dense
+@settings(max_examples=25, deadline=None)
+@given(n_in=st.integers(1, 64), n_out=st.integers(1, 64))
+def test_dense_matches_ref(n_in, n_out):
+    x, wt, b = arr(n_in), arr(n_in, n_out), arr(n_out)
+    assert_close(dense_pallas(x, wt, b), ref.dense_ref(x, wt, b))
+
+
+def test_dense_vehicle_l3_shape():
+    x, wt, b = arr(18432), arr(18432, 100), arr(100)
+    got = dense_pallas(x, wt, b)
+    assert got.shape == (100,)
+    assert_close(got, ref.dense_ref(x, wt, b), tol=2e-3)
+
+
+# --------------------------------------------------------------- maxpool
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(4, 16),
+    w=st.integers(4, 16),
+    c=st.integers(1, 8),
+    window=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_maxpool_matches_ref(h, w, c, window, stride):
+    x = arr(h, w, c)
+    got = maxpool2d_pallas(x, window=window, stride=stride)
+    want = ref.maxpool2d_ref(x, window=window, stride=stride)
+    assert got.shape == want.shape
+    assert_close(got, want, tol=0)
+
+
+def test_maxpool_is_max():
+    x = jnp.arange(16.0, dtype=jnp.float32).reshape(4, 4, 1)
+    got = maxpool2d_pallas(x)
+    assert float(got[0, 0, 0]) == 5.0 and float(got[1, 1, 0]) == 15.0

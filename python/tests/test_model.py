@@ -1,0 +1,84 @@
+"""L2 model tests: vehicle CNN actor chain + Fig-2 token sizes; pallas vs
+jnp actor-variant equivalence (the artifact-level correctness signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    INPUT_SHAPE,
+    NUM_CLASSES,
+    VEHICLE_TOKEN_BYTES,
+    vehicle_actors,
+    vehicle_graph_meta,
+)
+
+RNG = np.random.default_rng(5)
+ACTORS = vehicle_actors()[:4]  # the Fig-2 chain (l45_dual is the Sec IV.C join variant)
+
+
+def run_chain(actors, x, pallas=False):
+    for a in actors:
+        fn = a.fn_pallas if pallas else a.fn_jnp
+        x = fn(x, *[jnp.asarray(w) for w in a.weight_arrays()])
+    return x
+
+
+def test_actor_shapes_chain():
+    x = jnp.asarray(RNG.standard_normal(INPUT_SHAPE), jnp.float32)
+    shapes = []
+    for a in ACTORS:
+        x = a.fn_jnp(x, *[jnp.asarray(w) for w in a.weight_arrays()])
+        shapes.append(x.shape)
+    assert shapes == [(48, 48, 32), (24, 24, 32), (100,), (NUM_CLASSES,)]
+
+
+def test_fig2_token_bytes():
+    meta = vehicle_graph_meta(ACTORS)
+    got = {f"{e['src']}->{e['dst']}": e["bytes"] for e in meta["edges"]}
+    assert got == VEHICLE_TOKEN_BYTES
+
+
+def test_softmax_output_is_distribution():
+    x = jnp.asarray(RNG.standard_normal(INPUT_SHAPE), jnp.float32)
+    y = run_chain(ACTORS, x)
+    np.testing.assert_allclose(float(jnp.sum(y)), 1.0, rtol=1e-5)
+    assert float(jnp.min(y)) >= 0.0
+
+
+def test_pallas_variant_matches_jnp_end_to_end():
+    x = jnp.asarray(RNG.standard_normal(INPUT_SHAPE), jnp.float32)
+    y_jnp = run_chain(ACTORS, x, pallas=False)
+    y_pal = run_chain(ACTORS, x, pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(y_pal), np.asarray(y_jnp), rtol=1e-3, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("idx,name", [(0, "l1"), (1, "l2"), (2, "l3"), (3, "l45")])
+def test_per_actor_pallas_matches_jnp(idx, name):
+    a = ACTORS[idx]
+    assert a.name == name
+    x = jnp.asarray(RNG.standard_normal(a.in_shapes[0]), jnp.float32)
+    ws = [jnp.asarray(w) for w in a.weight_arrays()]
+    np.testing.assert_allclose(
+        np.asarray(a.fn_pallas(x, *ws)),
+        np.asarray(a.fn_jnp(x, *ws)),
+        rtol=2e-3,
+        atol=2e-4,
+    )
+
+
+def test_deterministic_weights():
+    a1 = vehicle_actors(seed=7)
+    a2 = vehicle_actors(seed=7)
+    for x, y in zip(a1, a2):
+        for (_, wa), (_, wb) in zip(x.weights, y.weights):
+            np.testing.assert_array_equal(wa, wb)
+
+
+def test_flops_positive_and_ordered():
+    # conv2 (L2) is the FLOPs-dominant actor in this CNN.
+    flops = {a.name: a.flops for a in ACTORS}
+    assert all(f > 0 for f in flops.values())
+    assert flops["l2"] > flops["l1"] > flops["l3"] > flops["l45"]

@@ -1,0 +1,89 @@
+"""SSD-Mobilenet graph tests: Fig-3 structural counts and shape algebra."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.ssd import (
+    DW_BLOCKS,
+    INPUT_HW,
+    NUM_CLASSES,
+    TAPS,
+    backbone_shapes,
+    num_anchors,
+    ssd_actors,
+    ssd_graph_meta,
+)
+
+ACTORS = ssd_actors()
+META = ssd_graph_meta(ACTORS)
+
+
+def test_fig3_actor_and_edge_counts():
+    # "The entire dataflow graph consists of 53 actors and 69 edges",
+    # of which 47 are DNN actors and 6 are aux (I/O, NMS, tracking).
+    assert len(META["actors"]) == 53
+    assert len(META["edges"]) == 69
+    aux = {"input", "concat_conf_softmax", "box_decode", "nms", "tracker", "sink"}
+    assert len([a for a in META["actors"] if a not in aux]) == 47
+
+
+def test_34_hlo_compiled_actors():
+    assert len(ACTORS) == 34
+    names = [a.name for a in ACTORS]
+    assert names[0] == "conv1"
+    assert names[1:14] == [f"dwcl{i}" for i in range(1, 14)]
+
+
+def test_backbone_shapes():
+    s = backbone_shapes()
+    assert s["conv1"] == (150, 150, 32)
+    assert s["dwcl1"] == (150, 150, 64)
+    assert s["dwcl5"] == (38, 38, 256)
+    assert s["dwcl11"] == (19, 19, 512)
+    assert s["dwcl13"] == (10, 10, 1024)
+    assert s["c17_2"] == (1, 1, 128)
+
+
+def test_dwcl9_cut_token_bytes():
+    # The Ethernet-optimal cut in Fig 6 sends DWCL9's output.
+    edges = {(e["src"], e["dst"]): e["bytes"] for e in META["edges"]}
+    assert edges[("dwcl9", "dwcl10")] == 19 * 19 * 512 * 4  # 739328 B
+
+
+def test_anchor_count():
+    assert num_anchors() == 1917  # 19^2*3 + 100*6 + 25*6 + 9*6 + 4*6 + 1*6
+
+
+def test_edges_reference_known_actors():
+    names = set(META["actors"])
+    for e in META["edges"]:
+        assert e["src"] in names and e["dst"] in names
+        assert e["bytes"] > 0
+
+
+def test_graph_is_acyclic_by_precedence():
+    order = {n: i for i, n in enumerate(META["actors"])}
+    for e in META["edges"]:
+        assert order[e["src"]] < order[e["dst"]], (e["src"], e["dst"])
+
+
+def test_head_output_channels():
+    by_name = {a.name: a for a in ACTORS}
+    for i, (tap, a) in enumerate(TAPS):
+        assert by_name[f"loc{i}"].out_shape[2] == 4 * a
+        assert by_name[f"conf{i}"].out_shape[2] == NUM_CLASSES * a
+
+
+def test_actor_execution_smoke():
+    # Run the three cheapest actors end of chain for shape correctness.
+    rng = np.random.default_rng(0)
+    for a in [ACTORS[0], ACTORS[14], ACTORS[-1]]:  # conv1, c14_1, conf5
+        x = jnp.asarray(rng.standard_normal(a.in_shapes[0]), jnp.float32)
+        y = a.fn_jnp(x, *[jnp.asarray(w) for w in a.weight_arrays()])
+        assert y.shape == a.out_shape
+
+
+def test_total_flops_magnitude():
+    total = sum(a.flops for a in ACTORS)
+    # MobileNet-SSD at 300x300 is ~2.4 GFLOPs (1.2 GMACs).
+    assert 1.5e9 < total < 4e9, total

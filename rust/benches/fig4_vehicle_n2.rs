@@ -1,0 +1,60 @@
+//! Fig. 4 — Vehicle classification endpoint inference time, N2 <-> i7, at
+//! every partition point, over Ethernet and WiFi.
+//!
+//! Paper reference points: full endpoint 18.9 ms; Ethernet PP1 (raw
+//! offload) 9.0 ms; best privacy-preserving cut PP3 = 14.9 ms (Ethernet)
+//! / 17.1 ms (WiFi); raw offload on WiFi is slower than full-endpoint
+//! inference.  Env knobs: EP_FRAMES (default 24), EP_TIME_SCALE (4).
+
+use edge_prune::benchkit::{env_or, header, row};
+use edge_prune::explorer::{format_table, sweep, SweepConfig};
+use edge_prune::models::manifest::Manifest;
+use edge_prune::platform::configs::Configs;
+use edge_prune::runtime::xla_exec::Variant;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let configs = Configs::load_default()?;
+    let frames: u64 = env_or("EP_FRAMES", 24);
+    let time_scale: f64 = env_or("EP_TIME_SCALE", 4.0);
+
+    header("Fig. 4: vehicle classification, N2 endpoint <-> i7 server");
+    let mut summaries = Vec::new();
+    for (link_name, base_port) in [("n2_i7_eth", 20_000u16), ("n2_i7_wifi", 21_000u16)] {
+        let cfg = SweepConfig {
+            model: "vehicle".into(),
+            endpoint: configs.device("n2", "vehicle")?,
+            server: configs.device("i7", "vehicle")?,
+            link: configs.link(link_name)?,
+            frames,
+            pps: (1..=6).collect(),
+            base_port,
+            variant: Variant::Jnp,
+            time_scale,
+            seed: 4,
+        };
+        let report = sweep(&manifest, &cfg)?;
+        print!("{}", format_table(&report));
+        summaries.push((link_name, report));
+    }
+
+    header("Fig. 4 paper-vs-measured checkpoints");
+    let (eth, wifi) = (&summaries[0].1, &summaries[1].1);
+    let at = |r: &edge_prune::explorer::SweepReport, pp: usize| {
+        r.results.iter().find(|x| x.pp == pp).map(|x| x.endpoint_ms).unwrap_or(f64::NAN)
+    };
+    println!("{}", row("full endpoint inference", 18.9, eth.full_endpoint_ms, "ms"));
+    println!("{}", row("PP1 raw offload (Ethernet)", 9.0, at(eth, 1), "ms"));
+    println!("{}", row("PP3 privacy-optimal (Ethernet)", 14.9, at(eth, 3), "ms"));
+    println!("{}", row("PP3 privacy-optimal (WiFi)", 17.1, at(wifi, 3), "ms"));
+    let wifi_pp1 = at(wifi, 1);
+    println!(
+        "WiFi raw offload slower than full endpoint: paper=yes, measured={} ({:.1} vs {:.1} ms)",
+        wifi_pp1 > eth.full_endpoint_ms,
+        wifi_pp1,
+        eth.full_endpoint_ms
+    );
+    let best = eth.best_private().map(|b| b.pp);
+    println!("best privacy-preserving PP on Ethernet: paper=3, measured={best:?}");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Fig. 5 — Vehicle classification endpoint inference time, N270 <-> i7.
+//!
+//! The single-core Atom N270 cannot overlap compute with transmission, so
+//! the endpoint time is the *sum* of compute and TX serialization (vs the
+//! N2's max).  Paper reference points: full endpoint 443 ms; raw offload
+//! 28.6 ms (Ethernet) / 38.9 ms (WiFi); privacy-optimal PP2 (Input+L1 on
+//! the endpoint) = 167 ms (Ethernet) / 191 ms (WiFi).
+//! Env knobs: EP_FRAMES (default 8), EP_TIME_SCALE (1).
+
+use edge_prune::benchkit::{env_or, header, row};
+use edge_prune::explorer::{format_table, sweep, SweepConfig};
+use edge_prune::models::manifest::Manifest;
+use edge_prune::platform::configs::Configs;
+use edge_prune::runtime::xla_exec::Variant;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let configs = Configs::load_default()?;
+    let frames: u64 = env_or("EP_FRAMES", 8);
+    let time_scale: f64 = env_or("EP_TIME_SCALE", 1.0);
+
+    header("Fig. 5: vehicle classification, N270 endpoint <-> i7 server");
+    let mut summaries = Vec::new();
+    for (link_name, base_port) in [("n270_i7_eth", 22_000u16), ("n270_i7_wifi", 23_000u16)] {
+        let cfg = SweepConfig {
+            model: "vehicle".into(),
+            endpoint: configs.device("n270", "vehicle")?,
+            server: configs.device("i7", "vehicle")?,
+            link: configs.link(link_name)?,
+            frames,
+            pps: (1..=6).collect(),
+            base_port,
+            variant: Variant::Jnp,
+            time_scale,
+            seed: 5,
+        };
+        let report = sweep(&manifest, &cfg)?;
+        print!("{}", format_table(&report));
+        summaries.push(report);
+    }
+
+    header("Fig. 5 paper-vs-measured checkpoints");
+    let (eth, wifi) = (&summaries[0], &summaries[1]);
+    let at = |r: &edge_prune::explorer::SweepReport, pp: usize| {
+        r.results.iter().find(|x| x.pp == pp).map(|x| x.endpoint_ms).unwrap_or(f64::NAN)
+    };
+    println!("{}", row("full endpoint inference", 443.0, eth.full_endpoint_ms, "ms"));
+    println!("{}", row("PP1 raw offload (Ethernet)", 28.6, at(eth, 1), "ms"));
+    println!("{}", row("PP1 raw offload (WiFi)", 38.9, at(wifi, 1), "ms"));
+    println!("{}", row("PP2 privacy-optimal (Ethernet)", 167.0, at(eth, 2), "ms"));
+    println!("{}", row("PP2 privacy-optimal (WiFi)", 191.0, at(wifi, 2), "ms"));
+    println!(
+        "best privacy-preserving PP: paper=2, measured eth={:?} wifi={:?}",
+        eth.best_private().map(|b| b.pp),
+        wifi.best_private().map(|b| b.pp)
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Fig. 6 — SSD-Mobilenet object-tracking endpoint inference time,
+//! N2 <-> i7, at partition points along the MobileNet backbone.
+//!
+//! Paper reference points: full endpoint 2360 ms; Ethernet optimum =
+//! Input..DWCL9 on the endpoint (PP11 here) at 406 ms -> 5.8x speedup;
+//! WiFi optimum at PP9 (Input..DWCL7) at 470 ms.
+//! Env knobs: EP_FRAMES (default 3), EP_TIME_SCALE (1.5),
+//! EP_SSD_PPS (comma list, default backbone sweep).
+
+use edge_prune::benchkit::{env_or, header, row};
+use edge_prune::explorer::{format_table, sweep, SweepConfig};
+use edge_prune::models::manifest::Manifest;
+use edge_prune::platform::configs::Configs;
+use edge_prune::runtime::xla_exec::Variant;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let configs = Configs::load_default()?;
+    let frames: u64 = env_or("EP_FRAMES", 4);
+    let time_scale: f64 = env_or("EP_TIME_SCALE", 3.0);
+    // PPs over the backbone: PP k = first k of [input, conv1, dwcl1..13].
+    let pps: Vec<usize> = match std::env::var("EP_SSD_PPS") {
+        Ok(s) => s.split(',').map(|x| x.trim().parse().unwrap()).collect(),
+        Err(_) => vec![1, 2, 3, 5, 7, 8, 9, 10, 11, 12, 13, 15],
+    };
+
+    header("Fig. 6: SSD-Mobilenet object tracking, N2 endpoint <-> i7 server");
+    println!("(compiling 2x34 HLO executables once; sweeping {} PPs)", pps.len());
+    let mut summaries = Vec::new();
+    for (link_name, base_port) in [("n2_i7_eth", 24_000u16), ("n2_i7_wifi", 26_000u16)] {
+        let cfg = SweepConfig {
+            model: "ssd".into(),
+            endpoint: configs.device("n2", "ssd")?,
+            server: configs.device("i7", "ssd")?,
+            link: configs.link(link_name)?,
+            frames,
+            pps: pps.clone(),
+            base_port,
+            variant: Variant::Jnp,
+            time_scale,
+            seed: 6,
+        };
+        let report = sweep(&manifest, &cfg)?;
+        print!("{}", format_table(&report));
+        summaries.push(report);
+    }
+
+    header("Fig. 6 paper-vs-measured checkpoints");
+    let (eth, wifi) = (&summaries[0], &summaries[1]);
+    let at = |r: &edge_prune::explorer::SweepReport, pp: usize| {
+        r.results.iter().find(|x| x.pp == pp).map(|x| x.endpoint_ms).unwrap_or(f64::NAN)
+    };
+    println!("{}", row("full endpoint inference", 2360.0, eth.full_endpoint_ms, "ms"));
+    println!("{}", row("PP11 (Input..DWCL9, Ethernet)", 406.0, at(eth, 11), "ms"));
+    println!("{}", row("PP9 (Input..DWCL7, WiFi)", 470.0, at(wifi, 9), "ms"));
+    let best_eth = eth.best().unwrap();
+    let best_wifi = wifi.best().unwrap();
+    println!(
+        "Ethernet best: paper PP11/406 ms (5.8x); measured PP{} / {:.0} ms ({:.1}x)",
+        best_eth.pp,
+        best_eth.endpoint_ms,
+        eth.full_endpoint_ms / best_eth.endpoint_ms
+    );
+    println!(
+        "WiFi best: paper PP9/470 ms; measured PP{} / {:.0} ms ({:.1}x)",
+        best_wifi.pp,
+        best_wifi.endpoint_ms,
+        wifi.full_endpoint_ms / best_wifi.endpoint_ms
+    );
+    println!(
+        "collaborative >> full-endpoint on both links: {}",
+        best_eth.endpoint_ms < 0.5 * eth.full_endpoint_ms
+            && best_wifi.endpoint_ms < 0.5 * wifi.full_endpoint_ms
+    );
+    Ok(())
+}

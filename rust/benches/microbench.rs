@@ -1,0 +1,192 @@
+//! Microbenchmarks + ablations over the framework substrates: FIFO
+//! throughput, engine scheduling overhead, XLA per-actor execution
+//! latency, vision post-processing, JSON parsing — plus the DESIGN.md
+//! ablations (FIFO capacity sweep, netsim on/off).
+//!
+//! These are the numbers the §Perf optimization pass tracks.
+
+use edge_prune::benchkit::{header, stats, throughput, time_iters};
+use edge_prune::dataflow::{AppGraph, Token};
+use edge_prune::models::builder::{build_graph, make_kernels, KernelOptions};
+use edge_prune::models::manifest::Manifest;
+use edge_prune::runtime::device::DeviceModel;
+use edge_prune::runtime::engine::Engine;
+use edge_prune::runtime::fifo::Fifo;
+use edge_prune::runtime::kernels::{ActorKernel, MapKernel, SinkKernel, SourceKernel};
+use edge_prune::runtime::xla_exec::{Variant, XlaService};
+use edge_prune::util::json::Json;
+use edge_prune::util::tensor;
+use edge_prune::vision::anchors::gen_anchors;
+use edge_prune::vision::nms::{detections_to_token, nms, Detection, MAX_DETS};
+use edge_prune::vision::tracker::IouTracker;
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+fn bench_fifo() {
+    header("fifo: push/pop throughput (tokens/s)");
+    for cap in [1usize, 4, 64] {
+        let f = Arc::new(Fifo::new(cap));
+        let n = 200_000usize;
+        let f2 = f.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                f2.push(Token::new(Vec::new(), i as u64));
+            }
+            f2.close();
+        });
+        let (ms, tps) = throughput(n, || while f.pop_n(1).is_some() {});
+        producer.join().unwrap();
+        println!("  capacity {cap:>3}: {:.1} ms for {n} tokens = {:.2} Mtokens/s", ms, tps / 1e6);
+    }
+}
+
+fn bench_engine_overhead() {
+    header("engine: scheduling overhead per firing (3-actor chain, empty kernels)");
+    let frames = 20_000u64;
+    let mut g = AppGraph::new();
+    let a = g.add_spa("src");
+    let b = g.add_spa("mid");
+    let c = g.add_spa("snk");
+    g.connect(a, b, 8, 4);
+    g.connect(b, c, 8, 4);
+    let engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+    let nsk = Arc::new(AtomicU64::new(0));
+    let mut kernels: BTreeMap<String, Box<dyn ActorKernel>> = BTreeMap::new();
+    kernels.insert("src".into(), Box::new(SourceKernel::new(frames, 8, 1, 1)));
+    kernels.insert("mid".into(), Box::new(MapKernel { f: |b: &[u8]| b.to_vec(), out_ports: 1 }));
+    kernels.insert("snk".into(), Box::new(SinkKernel::new(nsk)));
+    let t0 = std::time::Instant::now();
+    let report = engine.run(kernels).unwrap();
+    let us_per_firing = t0.elapsed().as_secs_f64() * 1e6 / (frames as f64 * 3.0);
+    println!(
+        "  {} frames x 3 actors in {:.1} ms -> {:.2} us/firing",
+        report.frames,
+        t0.elapsed().as_secs_f64() * 1e3,
+        us_per_firing
+    );
+}
+
+fn bench_xla(manifest: &Manifest) {
+    header("xla_exec: per-actor execution latency (vehicle, jnp variant)");
+    let meta = manifest.model("vehicle").unwrap();
+    let svc = XlaService::spawn(&manifest.root, meta, Variant::Jnp).unwrap();
+    for name in ["l1", "l2", "l3", "l45"] {
+        let e = &meta.hlo_entries[name];
+        let n: usize = e.in_shapes[0].iter().product();
+        let input = tensor::f32_to_bytes(&vec![0.1f32; n]);
+        let samples = time_iters(2, 10, || {
+            svc.execute(name, vec![input.clone()]).unwrap();
+        });
+        let s = stats(&samples);
+        println!("  {name:<5} p50 {:.2} ms  p95 {:.2} ms", s.p50, s.p95);
+    }
+}
+
+fn bench_vision() {
+    header("vision: anchors / NMS / tracker");
+    let samples = time_iters(1, 10, || {
+        let _ = gen_anchors(0, 19, 19, 3);
+    });
+    println!("  gen_anchors(19x19x3): p50 {:.3} ms", stats(&samples).p50);
+
+    // NMS over the full SSD head: 1917 anchors x 21 classes.
+    let n = 1917;
+    let mut rng = edge_prune::util::rng::Rng::new(3);
+    let scores: Vec<f32> = (0..n * 21).map(|_| rng.f32_range(0.0, 0.12)).collect();
+    let boxes: Vec<f32> = (0..n)
+        .flat_map(|_| {
+            let x = rng.f32_range(0.0, 0.8);
+            let y = rng.f32_range(0.0, 0.8);
+            vec![x, y, x + 0.15, y + 0.15]
+        })
+        .collect();
+    let samples = time_iters(1, 10, || {
+        let _ = nms(&scores, &boxes, 21, 0.05, 0.5, MAX_DETS);
+    });
+    println!("  nms(1917x21): p50 {:.3} ms", stats(&samples).p50);
+
+    let dets: Vec<Detection> = (0..20)
+        .map(|i| Detection {
+            class: 1 + i % 3,
+            score: 0.5,
+            bbox: [0.04 * i as f32, 0.04 * i as f32, 0.04 * i as f32 + 0.1, 0.04 * i as f32 + 0.1],
+        })
+        .collect();
+    let token = detections_to_token(&dets, MAX_DETS);
+    let mut tracker = IouTracker::new(0.3, 3);
+    let samples = time_iters(1, 10, || {
+        let d = edge_prune::vision::nms::token_to_detections(&token);
+        tracker.update(&d);
+    });
+    println!("  tracker.update(20 dets): p50 {:.3} ms", stats(&samples).p50);
+}
+
+fn bench_json() {
+    header("util::json: manifest parse");
+    let text = std::fs::read_to_string(Manifest::default_dir().join("manifest.json")).unwrap();
+    let samples = time_iters(1, 5, || {
+        let _ = Json::parse(&text).unwrap();
+    });
+    println!(
+        "  {} KiB manifest: p50 {:.2} ms",
+        text.len() / 1024,
+        stats(&samples).p50
+    );
+}
+
+/// Ablation: FIFO capacity vs local pipeline throughput (pipelining depth).
+fn ablation_capacity(manifest: &Manifest) {
+    header("ablation: FIFO capacity vs vehicle local pipeline (native host)");
+    let meta = manifest.model("vehicle").unwrap();
+    let svc = XlaService::spawn(&manifest.root, meta, Variant::Jnp).unwrap();
+    for cap in [1usize, 2, 4, 8] {
+        let graph = build_graph(meta, cap).unwrap();
+        let opts = KernelOptions { frames: 12, seed: 1, keep_last: false };
+        let (kernels, _) = make_kernels(meta, &graph, &svc, &opts).unwrap();
+        let engine = Engine::new(graph, DeviceModel::native("host")).unwrap();
+        let report = engine.run(kernels).unwrap();
+        println!("  capacity {cap}: {:.2} ms/frame", report.ms_per_frame());
+    }
+}
+
+/// Ablation: netsim on/off at the Fig-4 PP3 cut (isolates the
+/// communication share of endpoint time).
+fn ablation_netsim(manifest: &Manifest) {
+    use edge_prune::explorer::{sweep, SweepConfig};
+    use edge_prune::platform::configs::Configs;
+    use edge_prune::runtime::netsim::LinkModel;
+    header("ablation: netsim on/off at vehicle PP3 (N2 endpoint)");
+    let configs = Configs::load_default().unwrap();
+    for (label, link, port) in [
+        ("shaped eth", configs.link("n2_i7_eth").unwrap(), 29_000u16),
+        ("ideal link", LinkModel::ideal(), 29_500u16),
+    ] {
+        let cfg = SweepConfig {
+            model: "vehicle".into(),
+            endpoint: configs.device("n2", "vehicle").unwrap(),
+            server: configs.device("i7", "vehicle").unwrap(),
+            link,
+            frames: 12,
+            pps: vec![3],
+            base_port: port,
+            variant: Variant::Jnp,
+            time_scale: 4.0,
+            seed: 2,
+        };
+        let report = sweep(manifest, &cfg).unwrap();
+        println!("  {label}: {:.2} ms/frame", report.results[0].endpoint_ms);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    bench_fifo();
+    bench_engine_overhead();
+    bench_xla(&manifest);
+    bench_vision();
+    bench_json();
+    ablation_capacity(&manifest);
+    ablation_netsim(&manifest);
+    Ok(())
+}

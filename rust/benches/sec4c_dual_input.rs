@@ -1,0 +1,78 @@
+//! §IV.C — Dual-input vehicle image classification across three devices.
+//!
+//! Paper reference: per-frame time 49 ms on the N270 (2nd Input only),
+//! 154 ms on the N2 (Input..L3 of branch 1), 157 ms on the i7 server
+//! (branch 2's L1..L3 + the two-input L4L5 join).
+//! Env knobs: EP_FRAMES (default 16), EP_TIME_SCALE (4).
+
+use edge_prune::benchkit::{env_or, header, row};
+use edge_prune::compiler::compile;
+use edge_prune::models::builder::{build_graph, KernelOptions, DEFAULT_CAPACITY};
+use edge_prune::models::manifest::Manifest;
+use edge_prune::models::vehicle::{dual_mapping, dual_meta};
+use edge_prune::platform::configs::Configs;
+use edge_prune::platform::PlatformGraph;
+use edge_prune::runtime::distributed::run_deployment;
+use edge_prune::runtime::xla_exec::{Variant, XlaService};
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let configs = Configs::load_default()?;
+    let frames: u64 = env_or("EP_FRAMES", 16);
+    let time_scale: f64 = env_or("EP_TIME_SCALE", 4.0);
+
+    header("Sec IV.C: dual-input vehicle classification (N2 + N270 -> i7)");
+    let meta = dual_meta(manifest.model("vehicle")?)?;
+    let graph = build_graph(&meta, DEFAULT_CAPACITY)?;
+    println!(
+        "{} actors / {} edges; two Input..L3 branches joining at l45_dual",
+        graph.actors.len(),
+        graph.edges.len()
+    );
+
+    let mut devices = BTreeMap::new();
+    for name in ["n2", "n270", "i7"] {
+        let mut d = configs.device(name, "vehicle")?;
+        d.time_scale = time_scale;
+        devices.insert(name.to_string(), d);
+    }
+    let mut pg = PlatformGraph::new();
+    for d in devices.values() {
+        pg.add_device(d.clone());
+    }
+    pg.add_link("n2", "i7", configs.link("n2_i7_eth")?.scaled(time_scale));
+    pg.add_link("n270", "i7", configs.link("n270_i7_eth")?.scaled(time_scale));
+
+    let plan = compile(&graph, &pg, &dual_mapping(), 27_000)?;
+    println!("compiler: {} TX/RX FIFO pairs", plan.cut_edges());
+
+    let services: BTreeMap<String, XlaService> = ["n2", "n270", "i7"]
+        .iter()
+        .map(|d| {
+            Ok((d.to_string(), XlaService::spawn(&manifest.root, &meta, Variant::Jnp)?))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let opts = KernelOptions { frames, seed: 13, keep_last: false };
+    let reports = run_deployment(&plan, &meta, &services, &devices, &opts)?;
+
+    header("Sec IV.C paper-vs-measured");
+    for (dev, paper) in [("n270", 49.0), ("n2", 154.0), ("i7", 157.0)] {
+        let measured = reports
+            .get(dev)
+            .map(|r| r.ms_per_frame() / time_scale)
+            .unwrap_or(f64::NAN);
+        println!("{}", row(&format!("{dev} per-frame time"), paper, measured, "ms"));
+    }
+    println!(
+        "join fired on every frame: {}",
+        reports["i7"].actors.get("l45_dual").map(|s| s.firings).unwrap_or(0) == frames
+    );
+    println!(
+        "note: the paper's absolute Sec IV.C numbers include join-\n\
+         synchronization stalls it does not characterize; we reproduce the\n\
+         configuration and report the ordering (N270 least loaded) + join\n\
+         correctness. See EXPERIMENTS.md."
+    );
+    Ok(())
+}

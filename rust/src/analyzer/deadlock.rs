@@ -1,0 +1,201 @@
+//! Deadlock / buffer-overflow analysis by abstract execution.
+//!
+//! Executes one complete iteration (each actor fires its repetition-vector
+//! count) over abstract FIFO fill levels, using a demand-driven scheduler.
+//! If the schedule stalls before completing the iteration, the graph
+//! deadlocks under the given capacities; the per-edge max occupancy gives
+//! the buffer bound certificate the paper's "design time analysis for
+//! buffer overflow or deadlock" refers to.
+
+use crate::dataflow::AppGraph;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    /// Max tokens simultaneously resident per edge during the iteration.
+    pub max_occupancy: Vec<usize>,
+    /// Total firings executed per actor (== repetition vector on success).
+    pub firings: Vec<u64>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DeadlockError {
+    #[error(
+        "deadlock: iteration stalls with remaining firings {remaining:?}; \
+         blocked actors: {blocked}"
+    )]
+    Deadlock { remaining: Vec<u64>, blocked: String },
+}
+
+/// Simulate one iteration; Err on deadlock (incl. capacity-induced).
+pub fn simulate_iteration(g: &AppGraph, reps: &[u64]) -> Result<SimResult, DeadlockError> {
+    let n = g.actors.len();
+    let mut fill: Vec<usize> = g.edges.iter().map(|e| e.initial_tokens).collect();
+    let mut max_occ = fill.clone();
+    let mut remaining: Vec<u64> = reps.to_vec();
+    let mut fired: Vec<u64> = vec![0; n];
+
+    // Port rates at url (worst case; matches sdf.rs).
+    let prod_rate = |ei: usize| -> usize {
+        let e = &g.edges[ei];
+        g.actors[e.src.actor.0].out_ports[e.src.port].rate.url as usize
+    };
+    let cons_rate = |ei: usize| -> usize {
+        let e = &g.edges[ei];
+        g.actors[e.dst.actor.0].in_ports[e.dst.port].rate.url as usize
+    };
+
+    let can_fire = |a: usize, fill: &[usize], remaining: &[u64]| -> bool {
+        if remaining[a] == 0 {
+            return false;
+        }
+        for (ei, e) in g.edges.iter().enumerate() {
+            if e.dst.actor.0 == a && fill[ei] < cons_rate(ei) {
+                return false;
+            }
+            if e.src.actor.0 == a {
+                // Self-loops both consume and produce; net space needed is
+                // prod - (consumed this firing on the same edge).
+                let consumed = if e.dst.actor.0 == a { cons_rate(ei) } else { 0 };
+                if fill[ei] - consumed + prod_rate(ei) > e.capacity {
+                    return false;
+                }
+            }
+        }
+        true
+    };
+
+    loop {
+        let mut progressed = false;
+        for a in 0..n {
+            while can_fire(a, &fill, &remaining) {
+                // Consume then produce.
+                for (ei, e) in g.edges.iter().enumerate() {
+                    if e.dst.actor.0 == a {
+                        fill[ei] -= cons_rate(ei);
+                    }
+                }
+                for (ei, e) in g.edges.iter().enumerate() {
+                    if e.src.actor.0 == a {
+                        fill[ei] += prod_rate(ei);
+                        max_occ[ei] = max_occ[ei].max(fill[ei]);
+                    }
+                }
+                remaining[a] -= 1;
+                fired[a] += 1;
+                progressed = true;
+            }
+        }
+        if remaining.iter().all(|&r| r == 0) {
+            return Ok(SimResult { max_occupancy: max_occ, firings: fired });
+        }
+        if !progressed {
+            let blocked: Vec<String> = (0..n)
+                .filter(|&a| remaining[a] > 0)
+                .map(|a| g.actors[a].name.clone())
+                .collect();
+            return Err(DeadlockError::Deadlock {
+                remaining,
+                blocked: blocked.join(", "),
+            });
+        }
+    }
+}
+
+/// Minimum per-edge capacities that keep the canonical schedule live:
+/// runs the simulation with "infinite" capacities and reports max occupancy.
+pub fn minimal_buffer_bounds(g: &AppGraph, reps: &[u64]) -> Result<Vec<usize>, DeadlockError> {
+    let mut relaxed = g.clone();
+    for e in &mut relaxed.edges {
+        e.capacity = usize::MAX / 2;
+    }
+    simulate_iteration(&relaxed, reps).map(|r| r.max_occupancy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::sdf::repetition_vector;
+    use crate::dataflow::{AppGraph, RateSpec};
+
+    #[test]
+    fn chain_completes_one_iteration() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        let c = g.add_spa("c");
+        g.connect(a, b, 4, 1);
+        g.connect(b, c, 4, 1);
+        let reps = repetition_vector(&g).unwrap();
+        let sim = simulate_iteration(&g, &reps).unwrap();
+        assert_eq!(sim.firings, vec![1, 1, 1]);
+        assert_eq!(sim.max_occupancy, vec![1, 1]);
+    }
+
+    #[test]
+    fn cycle_without_initial_tokens_deadlocks() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 2);
+        g.connect(b, a, 4, 2);
+        let sim = simulate_iteration(&g, &[1, 1]);
+        assert!(matches!(sim, Err(DeadlockError::Deadlock { .. })));
+    }
+
+    #[test]
+    fn cycle_with_initial_token_is_live() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 2);
+        g.connect_rated(b, a, 4, 2, RateSpec::fixed(1), 1);
+        let sim = simulate_iteration(&g, &[1, 1]).unwrap();
+        assert_eq!(sim.firings, vec![1, 1]);
+    }
+
+    #[test]
+    fn undersized_capacity_detected_as_deadlock() {
+        // a fires 3x per iteration producing 1 each; b consumes 3 at once.
+        // capacity 2 < 3 means a cannot complete its firings: deadlock.
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 2);
+        g.actors[a.0].out_ports[0].rate = RateSpec::fixed(1);
+        g.actors[b.0].in_ports[0].rate = RateSpec::fixed(3);
+        let reps = repetition_vector(&g).unwrap();
+        assert_eq!(reps, vec![3, 1]);
+        assert!(simulate_iteration(&g, &reps).is_err());
+        // With capacity 3 the same graph is live.
+        g.edges[0].capacity = 3;
+        let sim = simulate_iteration(&g, &reps).unwrap();
+        assert_eq!(sim.max_occupancy, vec![3]);
+    }
+
+    #[test]
+    fn minimal_buffer_bounds_match_occupancy() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 1);
+        g.actors[a.0].out_ports[0].rate = RateSpec::fixed(2);
+        g.actors[b.0].in_ports[0].rate = RateSpec::fixed(4);
+        let reps = repetition_vector(&g).unwrap(); // [2, 1]
+        let bounds = minimal_buffer_bounds(&g, &reps).unwrap();
+        assert_eq!(bounds, vec![4]);
+    }
+
+    #[test]
+    fn self_loop_with_state_token() {
+        // Tracker-style actor with a state self-edge: 1 initial token keeps
+        // it live; occupancy never exceeds 1.
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let t = g.add_spa("tracker");
+        g.connect(src, t, 4, 1);
+        g.connect_rated(t, t, 4, 1, RateSpec::fixed(1), 1);
+        let reps = repetition_vector(&g).unwrap();
+        let sim = simulate_iteration(&g, &reps).unwrap();
+        assert_eq!(sim.firings, vec![1, 1]);
+    }
+}

@@ -1,0 +1,199 @@
+//! Dynamic processing subgraph (DPG) design rules (paper §III.A):
+//!
+//! * DAs, DPAs and CAs may only appear within DPGs;
+//! * a DPG consists of exactly one CA, exactly two DAs (the entry and exit
+//!   boundary), and any number of DPAs and/or SPAs;
+//! * the CA sets the current token rate within the DPG, so it must reach
+//!   every variable-rate actor of its DPG (a control edge);
+//! * variable-rate ports may only occur on DA / DPA / CA actors;
+//! * edges may not cross between two different DPGs (a DPG couples to the
+//!   static graph only through its DAs).
+//!
+//! Graphs following these rules are compile-time analyzable for
+//! consistency (no deadlock / overflow for any atr setting), which is what
+//! `analyzer::deadlock` then certifies at url.
+
+use crate::dataflow::{ActorKind, AppGraph};
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DpgError {
+    #[error("DPG {0}: must contain exactly one CA, found {1}")]
+    CaCount(usize, usize),
+    #[error("DPG {0}: must contain exactly two DAs, found {1}")]
+    DaCount(usize, usize),
+    #[error("actor {0}: variable-rate port on non-dynamic actor")]
+    VariableRateOnStatic(String),
+    #[error("edge {0}->{1} crosses between DPG {2} and DPG {3}")]
+    CrossDpgEdge(String, String, usize, usize),
+    #[error("DPG {0}: CA {1} does not reach dynamic actor {2}")]
+    CaUnreachable(usize, String, String),
+}
+
+/// Validate all DPG rules; returns the number of DPGs.
+pub fn check_dpgs(g: &AppGraph) -> Result<usize, DpgError> {
+    let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, a) in g.actors.iter().enumerate() {
+        if let Some(d) = a.dpg {
+            groups.entry(d).or_default().push(i);
+        }
+        // Variable-rate ports only on dynamic actors.
+        if a.kind == ActorKind::Spa {
+            let any_var = a
+                .in_ports
+                .iter()
+                .chain(a.out_ports.iter())
+                .any(|p| !p.rate.is_static());
+            if any_var {
+                return Err(DpgError::VariableRateOnStatic(a.name.clone()));
+            }
+        }
+    }
+
+    // No edge may connect two *different* DPGs.
+    for e in &g.edges {
+        let sd = g.actors[e.src.actor.0].dpg;
+        let dd = g.actors[e.dst.actor.0].dpg;
+        if let (Some(x), Some(y)) = (sd, dd) {
+            if x != y {
+                return Err(DpgError::CrossDpgEdge(
+                    g.actors[e.src.actor.0].name.clone(),
+                    g.actors[e.dst.actor.0].name.clone(),
+                    x,
+                    y,
+                ));
+            }
+        }
+    }
+
+    for (&dpg_id, members) in &groups {
+        let count = |k: ActorKind| members.iter().filter(|&&i| g.actors[i].kind == k).count();
+        let cas = count(ActorKind::Ca);
+        if cas != 1 {
+            return Err(DpgError::CaCount(dpg_id, cas));
+        }
+        let das = count(ActorKind::Da);
+        if das != 2 {
+            return Err(DpgError::DaCount(dpg_id, das));
+        }
+        // CA must reach every DA/DPA in its DPG through intra-DPG edges.
+        let ca = members
+            .iter()
+            .copied()
+            .find(|&i| g.actors[i].kind == ActorKind::Ca)
+            .unwrap();
+        let mut reach = vec![false; g.actors.len()];
+        reach[ca] = true;
+        let mut stack = vec![ca];
+        while let Some(i) = stack.pop() {
+            for e in &g.edges {
+                if e.src.actor.0 == i
+                    && g.actors[e.dst.actor.0].dpg == Some(dpg_id)
+                    && !reach[e.dst.actor.0]
+                {
+                    reach[e.dst.actor.0] = true;
+                    stack.push(e.dst.actor.0);
+                }
+            }
+        }
+        for &m in members {
+            if matches!(g.actors[m].kind, ActorKind::Da | ActorKind::Dpa) && !reach[m] {
+                return Err(DpgError::CaUnreachable(
+                    dpg_id,
+                    g.actors[ca].name.clone(),
+                    g.actors[m].name.clone(),
+                ));
+            }
+        }
+    }
+    Ok(groups.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{ActorSpec, AppGraph, RateSpec};
+
+    /// A minimal legal DPG: src(SPA) -> DA-in -> DPA -> DA-out -> snk(SPA),
+    /// with CA controlling DA-in, DPA, DA-out.
+    fn legal_dpg() -> AppGraph {
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let da_in = g.add_actor(ActorSpec::new("da_in", ActorKind::Da).in_dpg(0));
+        let dpa = g.add_actor(ActorSpec::new("dpa", ActorKind::Dpa).in_dpg(0));
+        let da_out = g.add_actor(ActorSpec::new("da_out", ActorKind::Da).in_dpg(0));
+        let ca = g.add_actor(ActorSpec::new("ca", ActorKind::Ca).in_dpg(0));
+        let snk = g.add_spa("snk");
+        g.connect(src, da_in, 4, 2);
+        g.connect_rated(da_in, dpa, 4, 4, RateSpec::variable(0, 2), 0);
+        g.connect_rated(dpa, da_out, 4, 4, RateSpec::variable(0, 2), 0);
+        g.connect(da_out, snk, 4, 2);
+        // CA control edges.
+        g.connect(ca, da_in, 4, 2);
+        g.connect(ca, dpa, 4, 2);
+        g.connect(ca, da_out, 4, 2);
+        g
+    }
+
+    #[test]
+    fn legal_dpg_passes() {
+        let g = legal_dpg();
+        assert_eq!(check_dpgs(&g).unwrap(), 1);
+    }
+
+    #[test]
+    fn missing_ca_detected() {
+        let mut g = legal_dpg();
+        let ca = g.actor_by_name("ca").unwrap();
+        g.actors[ca.0].kind = ActorKind::Dpa; // demote CA
+        assert_eq!(check_dpgs(&g), Err(DpgError::CaCount(0, 0)));
+    }
+
+    #[test]
+    fn wrong_da_count_detected() {
+        let mut g = legal_dpg();
+        let d = g.actor_by_name("dpa").unwrap();
+        g.actors[d.0].kind = ActorKind::Da; // now 3 DAs
+        assert_eq!(check_dpgs(&g), Err(DpgError::DaCount(0, 3)));
+    }
+
+    #[test]
+    fn variable_rate_on_spa_detected() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect_rated(a, b, 4, 4, RateSpec::variable(0, 2), 0);
+        assert_eq!(
+            check_dpgs(&g),
+            Err(DpgError::VariableRateOnStatic("a".into()))
+        );
+    }
+
+    #[test]
+    fn cross_dpg_edge_detected() {
+        let mut g = AppGraph::new();
+        let a = g.add_actor(ActorSpec::new("a", ActorKind::Dpa).in_dpg(0));
+        let b = g.add_actor(ActorSpec::new("b", ActorKind::Dpa).in_dpg(1));
+        g.connect(a, b, 4, 2);
+        assert!(matches!(check_dpgs(&g), Err(DpgError::CrossDpgEdge(..))));
+    }
+
+    #[test]
+    fn ca_must_reach_all_dynamic_actors() {
+        let mut g = legal_dpg();
+        // Remove CA -> dpa control edge (edge index 5).
+        g.edges.remove(5);
+        // Also remove da_in -> dpa so dpa is unreachable from CA entirely.
+        g.edges.remove(1);
+        assert!(matches!(check_dpgs(&g), Err(DpgError::CaUnreachable(..))));
+    }
+
+    #[test]
+    fn static_graph_has_zero_dpgs() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 2);
+        assert_eq!(check_dpgs(&g).unwrap(), 0);
+    }
+}

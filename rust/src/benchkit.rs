@@ -1,0 +1,104 @@
+//! Bench harness substrate (criterion is not vendored): timing helpers,
+//! simple statistics, and paper-vs-measured row printing shared by the
+//! `rust/benches/*` binaries that regenerate the paper's tables/figures.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+pub fn stats(samples: &[f64]) -> Stats {
+    assert!(!samples.is_empty());
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| s[((s.len() - 1) as f64 * p).round() as usize];
+    Stats {
+        mean: s.iter().sum::<f64>() / s.len() as f64,
+        p50: q(0.5),
+        p95: q(0.95),
+        min: s[0],
+        max: *s.last().unwrap(),
+        n: s.len(),
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` ones; returns ms/iter
+/// samples.
+pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect()
+}
+
+/// Throughput helper: run `f` once, return (elapsed_ms, items/s).
+pub fn throughput(items: usize, f: impl FnOnce()) -> (f64, f64) {
+    let t0 = Instant::now();
+    f();
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    (ms, items as f64 / (ms / 1e3))
+}
+
+/// Paper-vs-measured row with a deviation column.
+pub fn row(label: &str, paper: f64, measured: f64, unit: &str) -> String {
+    let dev = if paper > 0.0 { (measured / paper - 1.0) * 100.0 } else { f64::NAN };
+    format!("{label:<34} paper {paper:>9.1} {unit:<4} measured {measured:>9.1} {unit:<4} ({dev:+6.1}%)")
+}
+
+pub fn header(title: &str) {
+    println!("\n==== {title} ====");
+}
+
+/// Env-var override helper for bench knobs (EP_FRAMES, EP_TIME_SCALE...).
+pub fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_iters_counts() {
+        let mut calls = 0;
+        let samples = time_iters(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(samples.len(), 5);
+    }
+
+    #[test]
+    fn row_formats_deviation() {
+        let r = row("x", 10.0, 12.0, "ms");
+        assert!(r.contains("+20.0%"), "{r}");
+    }
+
+    #[test]
+    fn env_or_parses() {
+        std::env::set_var("EP_TEST_KNOB_XYZ", "42");
+        assert_eq!(env_or::<usize>("EP_TEST_KNOB_XYZ", 1), 42);
+        assert_eq!(env_or::<usize>("EP_TEST_KNOB_MISSING", 7), 7);
+    }
+}

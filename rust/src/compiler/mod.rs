@@ -1,0 +1,238 @@
+//! Compiler / code synthesis (paper §III.B/C): from the application graph,
+//! the platform graph and a mapping file, synthesize one *device plan* per
+//! processing platform.  TX and RX FIFOs are inserted automatically on
+//! every edge that crosses devices — "introduction of TX and RX FIFOs
+//! requires no changes to the application graph ... the same application
+//! graph and actor descriptions can be used for local (single system) and
+//! distributed code generation".  Each TX/RX FIFO pair receives a
+//! dedicated TCP port (base_port + edge index).
+
+pub mod plan;
+
+pub use plan::{DeploymentPlan, DevicePlan, RxSpec, TxSpec};
+
+use crate::dataflow::{ActorSpec, AppGraph};
+use crate::platform::{Mapping, PlatformGraph};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Synthesize the deployment: one local subgraph per device with TX/RX
+/// boundary actors spliced in, preserving per-actor port order (edges are
+/// re-connected in original insertion order).
+pub fn compile(
+    graph: &AppGraph,
+    platform: &PlatformGraph,
+    mapping: &Mapping,
+    base_port: u16,
+) -> Result<DeploymentPlan> {
+    graph.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    platform.validate_mapping(mapping, graph)?;
+
+    let mut per_device: BTreeMap<String, DevicePlan> = BTreeMap::new();
+    for dev in mapping.devices_used() {
+        per_device.insert(
+            dev.to_string(),
+            DevicePlan {
+                device: dev.to_string(),
+                graph: AppGraph::new(),
+                actor_ids: BTreeMap::new(),
+                original_actors: Vec::new(),
+                tx: Vec::new(),
+                rx: Vec::new(),
+            },
+        );
+    }
+
+    // 1. Replicate each actor into its device's subgraph (ports are
+    //    rebuilt below in edge order).
+    for a in &graph.actors {
+        let dev = mapping.device_of(&a.name)?.to_string();
+        let plan = per_device.get_mut(&dev).unwrap();
+        let mut spec = ActorSpec::new(a.name.clone(), a.kind);
+        spec.dpg = a.dpg;
+        let id = plan.graph.add_actor(spec);
+        plan.actor_ids.insert(a.name.clone(), id);
+        plan.original_actors.push(a.name.clone());
+    }
+
+    // 2. Re-connect edges in original order; splice TX/RX at cuts.
+    for (ei, e) in graph.edges.iter().enumerate() {
+        let src_name = &graph.actors[e.src.actor.0].name;
+        let dst_name = &graph.actors[e.dst.actor.0].name;
+        let src_dev = mapping.device_of(src_name)?.to_string();
+        let dst_dev = mapping.device_of(dst_name)?.to_string();
+        let rate = graph.actors[e.src.actor.0].out_ports[e.src.port].rate;
+        if src_dev == dst_dev {
+            let plan = per_device.get_mut(&src_dev).unwrap();
+            let s = plan.actor_ids[src_name];
+            let d = plan.actor_ids[dst_name];
+            plan.graph.connect_rated(s, d, e.token_bytes, e.capacity, rate, e.initial_tokens);
+        } else {
+            // Link must exist (validated); port = base + edge index.
+            let link = platform.link(&src_dev, &dst_dev)?.clone();
+            let port = base_port + ei as u16;
+            // TX side: src -> __tx<ei> (structural sink).
+            {
+                let plan = per_device.get_mut(&src_dev).unwrap();
+                let tx_name = format!("__tx{ei}");
+                let tx_id = plan.graph.add_actor(ActorSpec::new(
+                    tx_name.clone(),
+                    crate::dataflow::ActorKind::Spa,
+                ));
+                let s = plan.actor_ids[src_name];
+                plan.graph.connect_rated(s, tx_id, e.token_bytes, e.capacity, rate, 0);
+                plan.tx.push(TxSpec {
+                    actor: tx_name,
+                    edge_index: ei,
+                    port,
+                    peer_device: dst_dev.clone(),
+                    token_bytes: e.token_bytes,
+                    link: link.clone(),
+                });
+            }
+            // RX side: __rx<ei> -> dst (structural source).
+            {
+                let plan = per_device.get_mut(&dst_dev).unwrap();
+                let rx_name = format!("__rx{ei}");
+                let rx_id = plan.graph.add_actor(ActorSpec::new(
+                    rx_name.clone(),
+                    crate::dataflow::ActorKind::Spa,
+                ));
+                let d = plan.actor_ids[dst_name];
+                plan.graph.connect_rated(rx_id, d, e.token_bytes, e.capacity, rate, e.initial_tokens);
+                plan.rx.push(RxSpec {
+                    actor: rx_name,
+                    edge_index: ei,
+                    port,
+                    peer_device: src_dev.clone(),
+                    token_bytes: e.token_bytes,
+                    link,
+                });
+            }
+        }
+    }
+
+    for plan in per_device.values() {
+        plan.graph.validate().map_err(|e| anyhow::anyhow!("{}: {e}", plan.device))?;
+    }
+    Ok(DeploymentPlan { per_device, base_port })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::device::DeviceModel;
+    use crate::runtime::netsim::LinkModel;
+
+    fn chain_graph() -> AppGraph {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        let c = g.add_spa("c");
+        let d = g.add_spa("d");
+        g.connect(a, b, 16, 4);
+        g.connect(b, c, 8, 4);
+        g.connect(c, d, 4, 4);
+        g
+    }
+
+    fn platform() -> PlatformGraph {
+        let mut pg = PlatformGraph::new();
+        pg.add_device(DeviceModel::native("edge"));
+        pg.add_device(DeviceModel::native("server"));
+        pg.add_link("edge", "server", LinkModel::ideal());
+        pg
+    }
+
+    #[test]
+    fn local_mapping_has_no_tx_rx() {
+        let g = chain_graph();
+        let pg = platform();
+        let order: Vec<String> = ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        let m = Mapping::partition_point(&order, 4, "edge", "server");
+        let plan = compile(&g, &pg, &m, 7000).unwrap();
+        assert_eq!(plan.per_device.len(), 1);
+        let dp = &plan.per_device["edge"];
+        assert!(dp.tx.is_empty() && dp.rx.is_empty());
+        assert_eq!(dp.graph.actors.len(), 4);
+        assert_eq!(dp.graph.edges.len(), 3);
+    }
+
+    #[test]
+    fn cut_inserts_tx_rx_pair_with_same_port() {
+        let g = chain_graph();
+        let pg = platform();
+        let order: Vec<String> = ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        let m = Mapping::partition_point(&order, 2, "edge", "server");
+        let plan = compile(&g, &pg, &m, 7000).unwrap();
+        let e = &plan.per_device["edge"];
+        let s = &plan.per_device["server"];
+        assert_eq!(e.tx.len(), 1);
+        assert_eq!(s.rx.len(), 1);
+        assert_eq!(e.tx[0].port, s.rx[0].port);
+        assert_eq!(e.tx[0].port, 7001); // edge index 1 (b->c)
+        assert_eq!(e.tx[0].token_bytes, 8);
+        // Edge subgraph: a, b, __tx1 with 2 edges.
+        assert_eq!(e.graph.actors.len(), 3);
+        assert!(e.graph.actor_by_name("__tx1").is_some());
+        // Server subgraph: __rx1, c, d.
+        assert!(s.graph.actor_by_name("__rx1").is_some());
+        assert_eq!(s.graph.edges.len(), 2);
+    }
+
+    #[test]
+    fn multi_cut_assigns_distinct_ports() {
+        // Map b to server but c back to edge: edges a->b, b->c, c->d all cross.
+        let g = chain_graph();
+        let pg = platform();
+        let mut m = Mapping::new();
+        m.assign("a", "edge");
+        m.assign("b", "server");
+        m.assign("c", "edge");
+        m.assign("d", "server");
+        let plan = compile(&g, &pg, &m, 9000).unwrap();
+        let e = &plan.per_device["edge"];
+        let s = &plan.per_device["server"];
+        let mut ports: Vec<u16> = e.tx.iter().chain(s.tx.iter()).map(|t| t.port).collect();
+        ports.sort();
+        assert_eq!(ports, vec![9000, 9001, 9002]);
+        assert_eq!(e.rx.len(), 1); // b -> c comes back
+    }
+
+    #[test]
+    fn port_order_preserved_for_branching_actor() {
+        // src fans out to x (local) and y (remote); src's out-port order
+        // must match the original edge order.
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let x = g.add_spa("x");
+        let y = g.add_spa("y");
+        g.connect(src, x, 4, 2);
+        g.connect(src, y, 8, 2);
+        let pg = platform();
+        let mut m = Mapping::new();
+        m.assign("src", "edge");
+        m.assign("x", "edge");
+        m.assign("y", "server");
+        let plan = compile(&g, &pg, &m, 7100).unwrap();
+        let e = &plan.per_device["edge"];
+        let src_id = e.graph.actor_by_name("src").unwrap();
+        let outs = e.graph.out_edges(src_id);
+        assert_eq!(outs.len(), 2);
+        // Port 0 carries 4-byte tokens (to x), port 1 carries 8 (to __tx1).
+        let spec = e.graph.actor(src_id);
+        assert_eq!(spec.out_ports[0].token_bytes, 4);
+        assert_eq!(spec.out_ports[1].token_bytes, 8);
+    }
+
+    #[test]
+    fn missing_link_rejected() {
+        let g = chain_graph();
+        let mut pg = PlatformGraph::new();
+        pg.add_device(DeviceModel::native("edge"));
+        pg.add_device(DeviceModel::native("server"));
+        let order: Vec<String> = ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        let m = Mapping::partition_point(&order, 2, "edge", "server");
+        assert!(compile(&g, &pg, &m, 7000).is_err());
+    }
+}

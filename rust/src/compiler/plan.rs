@@ -1,0 +1,150 @@
+//! Deployment plan structures: the synthesized per-device "top-level
+//! application file" of the paper's compiler, serializable to JSON so the
+//! leader can hand each device its plan (`edge-prune compile --out ...`).
+
+use crate::dataflow::{ActorId, AppGraph};
+use crate::runtime::netsim::LinkModel;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct TxSpec {
+    /// Generated boundary actor name (`__tx<edge>`).
+    pub actor: String,
+    /// Index of the cut edge in the *original* application graph.
+    pub edge_index: usize,
+    /// Dedicated TCP port of this TX/RX FIFO pair.
+    pub port: u16,
+    pub peer_device: String,
+    pub token_bytes: usize,
+    pub link: LinkModel,
+}
+
+#[derive(Debug, Clone)]
+pub struct RxSpec {
+    pub actor: String,
+    pub edge_index: usize,
+    pub port: u16,
+    pub peer_device: String,
+    pub token_bytes: usize,
+    pub link: LinkModel,
+}
+
+#[derive(Debug)]
+pub struct DevicePlan {
+    pub device: String,
+    /// Local subgraph including the spliced `__tx*` / `__rx*` actors.
+    pub graph: AppGraph,
+    pub actor_ids: BTreeMap<String, ActorId>,
+    /// Original (application-level) actors mapped to this device.
+    pub original_actors: Vec<String>,
+    pub tx: Vec<TxSpec>,
+    pub rx: Vec<RxSpec>,
+}
+
+#[derive(Debug)]
+pub struct DeploymentPlan {
+    pub per_device: BTreeMap<String, DevicePlan>,
+    pub base_port: u16,
+}
+
+impl DeploymentPlan {
+    /// Total number of TX/RX FIFO pairs (cut edges).
+    pub fn cut_edges(&self) -> usize {
+        self.per_device.values().map(|p| p.tx.len()).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let devices: Vec<Json> = self
+            .per_device
+            .values()
+            .map(|p| {
+                let actors: Vec<Json> = p
+                    .graph
+                    .actors
+                    .iter()
+                    .map(|a| Json::from(a.name.as_str()))
+                    .collect();
+                let edges: Vec<Json> = p
+                    .graph
+                    .edges
+                    .iter()
+                    .map(|e| {
+                        Json::from_pairs(vec![
+                            ("src", Json::from(p.graph.actors[e.src.actor.0].name.as_str())),
+                            ("dst", Json::from(p.graph.actors[e.dst.actor.0].name.as_str())),
+                            ("bytes", Json::from(e.token_bytes)),
+                            ("capacity", Json::from(e.capacity)),
+                        ])
+                    })
+                    .collect();
+                let tx: Vec<Json> = p
+                    .tx
+                    .iter()
+                    .map(|t| {
+                        Json::from_pairs(vec![
+                            ("actor", Json::from(t.actor.as_str())),
+                            ("edge", Json::from(t.edge_index)),
+                            ("port", Json::from(t.port as usize)),
+                            ("peer", Json::from(t.peer_device.as_str())),
+                            ("bytes", Json::from(t.token_bytes)),
+                        ])
+                    })
+                    .collect();
+                let rx: Vec<Json> = p
+                    .rx
+                    .iter()
+                    .map(|r| {
+                        Json::from_pairs(vec![
+                            ("actor", Json::from(r.actor.as_str())),
+                            ("edge", Json::from(r.edge_index)),
+                            ("port", Json::from(r.port as usize)),
+                            ("peer", Json::from(r.peer_device.as_str())),
+                        ])
+                    })
+                    .collect();
+                Json::from_pairs(vec![
+                    ("device", Json::from(p.device.as_str())),
+                    ("actors", Json::Arr(actors)),
+                    ("edges", Json::Arr(edges)),
+                    ("tx_fifos", Json::Arr(tx)),
+                    ("rx_fifos", Json::Arr(rx)),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("base_port", Json::from(self.base_port as usize)),
+            ("devices", Json::Arr(devices)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{Mapping, PlatformGraph};
+    use crate::runtime::device::DeviceModel;
+
+    #[test]
+    fn plan_json_includes_tx_rx() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 2);
+        let mut pg = PlatformGraph::new();
+        pg.add_device(DeviceModel::native("e"));
+        pg.add_device(DeviceModel::native("s"));
+        pg.add_link("e", "s", LinkModel::ideal());
+        let mut m = Mapping::new();
+        m.assign("a", "e");
+        m.assign("b", "s");
+        let plan = crate::compiler::compile(&g, &pg, &m, 8000).unwrap();
+        assert_eq!(plan.cut_edges(), 1);
+        let j = plan.to_json();
+        let devs = j.get("devices").unwrap().arr().unwrap();
+        assert_eq!(devs.len(), 2);
+        let txt = j.to_string();
+        assert!(txt.contains("__tx0") && txt.contains("__rx0"));
+        assert!(txt.contains("8000"));
+    }
+}

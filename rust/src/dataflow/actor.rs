@@ -1,0 +1,134 @@
+//! Actor specifications (paper §III.A): every actor is one of four types —
+//! static processing actor (SPA), dynamic actor (DA), configuration actor
+//! (CA) or dynamic processing actor (DPA).  DA/CA/DPA may only appear
+//! inside dynamic processing subgraphs (DPGs).
+
+use super::rates::RateSpec;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ActorId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActorKind {
+    /// Static processing actor: fixed token rates on every port.
+    Spa,
+    /// Dynamic actor: the entry/exit boundary of a DPG, translating between
+    /// static rates outside and variable rates inside.
+    Da,
+    /// Configuration actor: sets the current token rate within its DPG.
+    Ca,
+    /// Dynamic processing actor: variable-rate computation inside a DPG.
+    Dpa,
+}
+
+#[derive(Debug, Clone)]
+pub struct PortSpec {
+    pub rate: RateSpec,
+    /// Size of one token on this port, in bytes.
+    pub token_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ActorSpec {
+    pub name: String,
+    pub kind: ActorKind,
+    /// DPG membership (None for the static part of the graph).
+    pub dpg: Option<usize>,
+    pub in_ports: Vec<PortSpec>,
+    pub out_ports: Vec<PortSpec>,
+}
+
+impl ActorSpec {
+    pub fn new(name: impl Into<String>, kind: ActorKind) -> Self {
+        ActorSpec {
+            name: name.into(),
+            kind,
+            dpg: None,
+            in_ports: Vec::new(),
+            out_ports: Vec::new(),
+        }
+    }
+
+    pub fn in_dpg(mut self, dpg: usize) -> Self {
+        self.dpg = Some(dpg);
+        self
+    }
+
+    pub fn is_source(&self) -> bool {
+        self.in_ports.is_empty()
+    }
+
+    pub fn is_sink(&self) -> bool {
+        self.out_ports.is_empty()
+    }
+
+    /// SPA ports must all be static-rate (VR-PRUNE design rule).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, p) in self.in_ports.iter().chain(self.out_ports.iter()).enumerate() {
+            p.rate.validate().map_err(|e| format!("{}: port {i}: {e}", self.name))?;
+        }
+        if self.kind == ActorKind::Spa {
+            for p in self.in_ports.iter().chain(self.out_ports.iter()) {
+                if !p.rate.is_static() {
+                    return Err(format!(
+                        "{}: SPA may not have variable-rate ports",
+                        self.name
+                    ));
+                }
+            }
+        }
+        if matches!(self.kind, ActorKind::Da | ActorKind::Ca | ActorKind::Dpa)
+            && self.dpg.is_none()
+        {
+            return Err(format!(
+                "{}: {:?} actors may only appear within a DPG",
+                self.name, self.kind
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn port(rate: RateSpec) -> PortSpec {
+        PortSpec { rate, token_bytes: 4 }
+    }
+
+    #[test]
+    fn spa_rejects_variable_ports() {
+        let mut a = ActorSpec::new("a", ActorKind::Spa);
+        a.in_ports.push(port(RateSpec::variable(0, 2)));
+        assert!(a.validate().is_err());
+        let mut b = ActorSpec::new("b", ActorKind::Spa);
+        b.in_ports.push(port(RateSpec::fixed(1)));
+        assert!(b.validate().is_ok());
+    }
+
+    #[test]
+    fn dynamic_actors_require_dpg() {
+        let a = ActorSpec::new("ca", ActorKind::Ca);
+        assert!(a.validate().is_err());
+        let b = ActorSpec::new("ca", ActorKind::Ca).in_dpg(0);
+        assert!(b.validate().is_ok());
+    }
+
+    #[test]
+    fn source_sink_classification() {
+        let mut src = ActorSpec::new("src", ActorKind::Spa);
+        src.out_ports.push(port(RateSpec::fixed(1)));
+        assert!(src.is_source() && !src.is_sink());
+        let mut snk = ActorSpec::new("snk", ActorKind::Spa);
+        snk.in_ports.push(port(RateSpec::fixed(1)));
+        assert!(snk.is_sink() && !snk.is_source());
+    }
+
+    #[test]
+    fn invalid_port_rate_propagates() {
+        let mut a = ActorSpec::new("a", ActorKind::Spa);
+        a.in_ports.push(port(RateSpec { lrl: 2, url: 1 }));
+        assert!(a.validate().is_err());
+    }
+}

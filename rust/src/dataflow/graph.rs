@@ -1,0 +1,335 @@
+//! Application graph G = (A, F): actors + FIFO buffer edges, with a
+//! builder API used by the model definitions (`crate::models`) and by the
+//! tests.  Validation covers port/edge consistency and the design-time
+//! half of the symmetric token rate requirement (identical [lrl, url]
+//! bands on the two endpoints of every edge — the runtime half, identical
+//! atr, is enforced structurally by the shared `AtrCell`).
+
+use super::actor::{ActorId, ActorKind, ActorSpec, PortSpec};
+use super::rates::RateSpec;
+use std::collections::{BTreeMap, VecDeque};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EdgeId(pub usize);
+
+/// (actor, port index) endpoint of an edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PortRef {
+    pub actor: ActorId,
+    pub port: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct EdgeSpec {
+    pub src: PortRef,
+    pub dst: PortRef,
+    /// Maximum number of tokens the FIFO can hold at any moment.
+    pub capacity: usize,
+    pub token_bytes: usize,
+    /// Initial tokens ("delays" in dataflow terms) — used by feedback
+    /// edges such as the tracker's state self-edge.
+    pub initial_tokens: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum GraphError {
+    #[error("unknown actor id {0}")]
+    UnknownActor(usize),
+    #[error("actor {actor}: {msg}")]
+    Actor { actor: String, msg: String },
+    #[error("edge {src}->{dst}: {msg}")]
+    Edge { src: String, dst: String, msg: String },
+    #[error("graph has a cycle with no initial tokens through actor {0}")]
+    Cycle(String),
+    #[error("duplicate actor name {0}")]
+    DuplicateName(String),
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct AppGraph {
+    pub actors: Vec<ActorSpec>,
+    pub edges: Vec<EdgeSpec>,
+}
+
+impl AppGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_actor(&mut self, spec: ActorSpec) -> ActorId {
+        self.actors.push(spec);
+        ActorId(self.actors.len() - 1)
+    }
+
+    /// Convenience: add an SPA with no ports yet.
+    pub fn add_spa(&mut self, name: &str) -> ActorId {
+        self.add_actor(ActorSpec::new(name, ActorKind::Spa))
+    }
+
+    /// Connect `src` to `dst` with a fixed rate-1 edge carrying
+    /// `token_bytes`-sized tokens; creates one new port on each side.
+    pub fn connect(
+        &mut self,
+        src: ActorId,
+        dst: ActorId,
+        token_bytes: usize,
+        capacity: usize,
+    ) -> EdgeId {
+        self.connect_rated(src, dst, token_bytes, capacity, RateSpec::fixed(1), 0)
+    }
+
+    pub fn connect_rated(
+        &mut self,
+        src: ActorId,
+        dst: ActorId,
+        token_bytes: usize,
+        capacity: usize,
+        rate: RateSpec,
+        initial_tokens: usize,
+    ) -> EdgeId {
+        let sp = PortSpec { rate, token_bytes };
+        self.actors[src.0].out_ports.push(sp.clone());
+        let src_port = self.actors[src.0].out_ports.len() - 1;
+        self.actors[dst.0].in_ports.push(sp);
+        let dst_port = self.actors[dst.0].in_ports.len() - 1;
+        self.edges.push(EdgeSpec {
+            src: PortRef { actor: src, port: src_port },
+            dst: PortRef { actor: dst, port: dst_port },
+            capacity,
+            token_bytes,
+            initial_tokens,
+        });
+        EdgeId(self.edges.len() - 1)
+    }
+
+    pub fn actor(&self, id: ActorId) -> &ActorSpec {
+        &self.actors[id.0]
+    }
+
+    pub fn actor_by_name(&self, name: &str) -> Option<ActorId> {
+        self.actors.iter().position(|a| a.name == name).map(ActorId)
+    }
+
+    pub fn in_edges(&self, id: ActorId) -> Vec<(EdgeId, &EdgeSpec)> {
+        self.edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.dst.actor == id)
+            .map(|(i, e)| (EdgeId(i), e))
+            .collect()
+    }
+
+    pub fn out_edges(&self, id: ActorId) -> Vec<(EdgeId, &EdgeSpec)> {
+        self.edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.src.actor == id)
+            .map(|(i, e)| (EdgeId(i), e))
+            .collect()
+    }
+
+    /// Full structural validation: per-actor rules, unique names, port/edge
+    /// agreement, symmetric rate bands, capacity sanity.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let mut names = BTreeMap::new();
+        for (i, a) in self.actors.iter().enumerate() {
+            if let Some(_prev) = names.insert(a.name.clone(), i) {
+                return Err(GraphError::DuplicateName(a.name.clone()));
+            }
+            a.validate()
+                .map_err(|msg| GraphError::Actor { actor: a.name.clone(), msg })?;
+        }
+        for e in &self.edges {
+            let sa = self
+                .actors
+                .get(e.src.actor.0)
+                .ok_or(GraphError::UnknownActor(e.src.actor.0))?;
+            let da = self
+                .actors
+                .get(e.dst.actor.0)
+                .ok_or(GraphError::UnknownActor(e.dst.actor.0))?;
+            let err = |msg: String| GraphError::Edge {
+                src: sa.name.clone(),
+                dst: da.name.clone(),
+                msg,
+            };
+            let sp = sa
+                .out_ports
+                .get(e.src.port)
+                .ok_or_else(|| err(format!("missing src port {}", e.src.port)))?;
+            let dp = da
+                .in_ports
+                .get(e.dst.port)
+                .ok_or_else(|| err(format!("missing dst port {}", e.dst.port)))?;
+            if sp.token_bytes != dp.token_bytes {
+                return Err(err(format!(
+                    "token size mismatch {} vs {}",
+                    sp.token_bytes, dp.token_bytes
+                )));
+            }
+            // Symmetric token rate requirement, design-time half: the rate
+            // bands must be identical so atr(p_a) == atr(p_b) is satisfiable
+            // for every setting.
+            if sp.rate != dp.rate {
+                return Err(err(format!(
+                    "asymmetric rate bands [{},{}] vs [{},{}]",
+                    sp.rate.lrl, sp.rate.url, dp.rate.lrl, dp.rate.url
+                )));
+            }
+            if e.capacity == 0 {
+                return Err(err("zero capacity".into()));
+            }
+            if e.capacity < e.src_rate_max(self) as usize {
+                return Err(err(format!(
+                    "capacity {} below max rate {}",
+                    e.capacity,
+                    e.src_rate_max(self)
+                )));
+            }
+            if e.initial_tokens > e.capacity {
+                return Err(err("initial tokens exceed capacity".into()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Precedence (topological) order, treating edges with initial tokens
+    /// as broken (they are the legal way to close a cycle).  This is the
+    /// ordering the Explorer uses to index partition points.
+    pub fn topo_order(&self) -> Result<Vec<ActorId>, GraphError> {
+        let n = self.actors.len();
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            if e.initial_tokens > 0 || e.src.actor == e.dst.actor {
+                continue; // feedback edge: pre-loaded, breaks the cycle
+            }
+            indeg[e.dst.actor.0] += 1;
+            adj[e.src.actor.0].push(e.dst.actor.0);
+        }
+        let mut q: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = q.pop_front() {
+            order.push(ActorId(i));
+            for &j in &adj[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    q.push_back(j);
+                }
+            }
+        }
+        if order.len() != n {
+            let stuck = (0..n).find(|&i| indeg[i] > 0).unwrap();
+            return Err(GraphError::Cycle(self.actors[stuck].name.clone()));
+        }
+        Ok(order)
+    }
+}
+
+impl EdgeSpec {
+    fn src_rate_max(&self, g: &AppGraph) -> u32 {
+        g.actors[self.src.actor.0].out_ports[self.src.port].rate.url
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain3() -> (AppGraph, ActorId, ActorId, ActorId) {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        let c = g.add_spa("c");
+        g.connect(a, b, 16, 4);
+        g.connect(b, c, 8, 4);
+        (g, a, b, c)
+    }
+
+    #[test]
+    fn build_and_validate_chain() {
+        let (g, a, _, c) = chain3();
+        g.validate().unwrap();
+        assert!(g.actor(a).is_source());
+        assert!(g.actor(c).is_sink());
+        assert_eq!(g.edges.len(), 2);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let (g, a, b, c) = chain3();
+        let order = g.topo_order().unwrap();
+        let pos = |id: ActorId| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(a) < pos(b) && pos(b) < pos(c));
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut g = AppGraph::new();
+        g.add_spa("x");
+        g.add_spa("x");
+        assert!(matches!(g.validate(), Err(GraphError::DuplicateName(_))));
+    }
+
+    #[test]
+    fn cycle_without_initial_tokens_detected() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 2);
+        g.connect(b, a, 4, 2);
+        assert!(matches!(g.topo_order(), Err(GraphError::Cycle(_))));
+    }
+
+    #[test]
+    fn cycle_with_initial_tokens_allowed() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 2);
+        g.connect_rated(b, a, 4, 2, RateSpec::fixed(1), 1);
+        g.validate().unwrap();
+        assert!(g.topo_order().is_ok());
+    }
+
+    #[test]
+    fn zero_capacity_rejected() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect(a, b, 4, 0);
+        assert!(matches!(g.validate(), Err(GraphError::Edge { .. })));
+    }
+
+    #[test]
+    fn capacity_below_rate_rejected() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect_rated(a, b, 4, 2, RateSpec::fixed(4), 0);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn initial_tokens_above_capacity_rejected() {
+        let mut g = AppGraph::new();
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        g.connect_rated(a, b, 4, 2, RateSpec::fixed(1), 3);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn in_out_edge_queries() {
+        let (g, _, b, _) = chain3();
+        assert_eq!(g.in_edges(b).len(), 1);
+        assert_eq!(g.out_edges(b).len(), 1);
+    }
+
+    #[test]
+    fn actor_by_name() {
+        let (g, a, ..) = chain3();
+        assert_eq!(g.actor_by_name("a"), Some(a));
+        assert_eq!(g.actor_by_name("zzz"), None);
+    }
+}

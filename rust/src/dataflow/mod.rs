@@ -1,0 +1,27 @@
+//! VR-PRUNE model of computation (paper §III.A).
+//!
+//! A DNN application is a directed graph G = (A, F): nodes are *actors*
+//! (computation, e.g. DNN layers), edges are FIFO buffers carrying *tokens*
+//! (tensors) in FIFO order.  An actor *fires* when every input port has at
+//! least its active token rate (atr) of tokens available; firing consumes
+//! atr tokens per input port and produces atr tokens per output port.
+//!
+//! Two features distinguish VR-PRUNE from plain SDF:
+//! * **variable token rates** — each port carries a design-time fixed
+//!   `lrl(p) <= url(p)` band and a runtime-settable `atr(p)` within it;
+//! * **the symmetric token rate requirement** — `atr(p_a) == atr(p_b)` for
+//!   the two endpoints of every edge, always.
+//!
+//! Actors are typed SPA / DA / CA / DPA; DA, DPA and CA may only appear
+//! inside *dynamic processing subgraphs* (DPGs) that encapsulate the
+//! variable-rate behaviour (validated by `crate::analyzer::dpg`).
+
+pub mod actor;
+pub mod graph;
+pub mod rates;
+pub mod token;
+
+pub use actor::{ActorId, ActorKind, ActorSpec};
+pub use graph::{AppGraph, EdgeId, EdgeSpec, GraphError, PortRef};
+pub use rates::RateSpec;
+pub use token::Token;

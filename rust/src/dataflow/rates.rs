@@ -1,0 +1,128 @@
+//! Variable token rates (paper §III.A): for each port p, design-time fixed
+//! `lower rate limit lrl(p)` and `upper rate limit url(p)`, and a runtime
+//! `active token rate atr(p)` with `lrl(p) <= atr(p) <= url(p)`.
+//!
+//! A *static* port has lrl == url (its atr can never vary) — this is what
+//! SPA ports must use.  The runtime stores atr in an atomic cell so a CA
+//! can set the rate of its DPG before each firing.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RateSpec {
+    pub lrl: u32,
+    pub url: u32,
+}
+
+impl RateSpec {
+    /// Static rate: lrl == atr == url, the SDF special case.
+    pub fn fixed(rate: u32) -> Self {
+        RateSpec { lrl: rate, url: rate }
+    }
+
+    /// Variable rate band [lrl, url].
+    pub fn variable(lrl: u32, url: u32) -> Self {
+        RateSpec { lrl, url }
+    }
+
+    pub fn is_static(&self) -> bool {
+        self.lrl == self.url
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.lrl > self.url {
+            return Err(format!("lrl {} > url {}", self.lrl, self.url));
+        }
+        if self.url == 0 {
+            return Err("url must be >= 1".to_string());
+        }
+        Ok(())
+    }
+
+    pub fn contains(&self, atr: u32) -> bool {
+        self.lrl <= atr && atr <= self.url
+    }
+}
+
+/// Runtime-shared active token rate cell.  One cell is shared by the two
+/// ports of an edge, which *enforces* the symmetric token rate requirement
+/// (atr(p_a) == atr(p_b)) by construction.
+#[derive(Debug, Clone)]
+pub struct AtrCell {
+    spec: RateSpec,
+    atr: Arc<AtomicU32>,
+}
+
+impl AtrCell {
+    pub fn new(spec: RateSpec) -> Self {
+        // Initial atr = url (the "full rate" default used by PRUNE).
+        AtrCell { spec, atr: Arc::new(AtomicU32::new(spec.url)) }
+    }
+
+    pub fn spec(&self) -> RateSpec {
+        self.spec
+    }
+
+    pub fn get(&self) -> u32 {
+        self.atr.load(Ordering::Acquire)
+    }
+
+    /// Set the active rate; rejects values outside [lrl, url].
+    pub fn set(&self, atr: u32) -> Result<(), String> {
+        if !self.spec.contains(atr) {
+            return Err(format!(
+                "atr {atr} outside [{}, {}]",
+                self.spec.lrl, self.spec.url
+            ));
+        }
+        self.atr.store(atr, Ordering::Release);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_rate_is_static() {
+        let r = RateSpec::fixed(2);
+        assert!(r.is_static());
+        assert!(r.validate().is_ok());
+        assert!(r.contains(2) && !r.contains(1));
+    }
+
+    #[test]
+    fn variable_band() {
+        let r = RateSpec::variable(0, 3);
+        assert!(!r.is_static());
+        assert!(r.contains(0) && r.contains(3) && !r.contains(4));
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!(RateSpec { lrl: 3, url: 1 }.validate().is_err());
+        assert!(RateSpec { lrl: 0, url: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn atr_cell_enforces_band() {
+        let c = AtrCell::new(RateSpec::variable(1, 4));
+        assert_eq!(c.get(), 4); // defaults to url
+        c.set(2).unwrap();
+        assert_eq!(c.get(), 2);
+        assert!(c.set(0).is_err());
+        assert!(c.set(5).is_err());
+    }
+
+    #[test]
+    fn atr_cell_shared_between_clones() {
+        // The shared cell is the mechanism behind the symmetric token rate
+        // requirement: both edge endpoints observe the same atr.
+        let a = AtrCell::new(RateSpec::variable(1, 8));
+        let b = a.clone();
+        a.set(3).unwrap();
+        assert_eq!(b.get(), 3);
+    }
+}

@@ -1,0 +1,57 @@
+//! Tokens: fixed-size data packets flowing through FIFO edges.  In the
+//! machine-learning context a token is a tensor of intermediate features.
+//! The payload is reference-counted so branch edges (SSD's six head taps)
+//! broadcast without copying.
+
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// Raw little-endian payload (f32 tensor bytes for DNN tokens).
+    pub data: Arc<Vec<u8>>,
+    /// Frame / iteration index the token belongs to (diagnostics + tests).
+    pub seq: u64,
+}
+
+impl Token {
+    pub fn new(data: Vec<u8>, seq: u64) -> Self {
+        Token { data: Arc::new(data), seq }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Interpret the payload as f32s (tokens are 4-byte aligned tensors).
+    pub fn as_f32(&self) -> Vec<f32> {
+        crate::util::tensor::bytes_to_f32(&self.data)
+    }
+
+    pub fn from_f32(vals: &[f32], seq: u64) -> Self {
+        Token::new(crate::util::tensor::f32_to_bytes(vals), seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_roundtrip_f32() {
+        let t = Token::from_f32(&[1.0, -2.5], 3);
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.as_f32(), vec![1.0, -2.5]);
+        assert_eq!(t.seq, 3);
+    }
+
+    #[test]
+    fn clone_shares_payload() {
+        let t = Token::new(vec![1, 2, 3], 0);
+        let u = t.clone();
+        assert!(Arc::ptr_eq(&t.data, &u.data));
+    }
+}

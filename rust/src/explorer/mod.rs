@@ -1,0 +1,401 @@
+//! Explorer (paper §III.C): design-space exploration of the endpoint /
+//! server partition point.  "The Edge-PRUNE Explorer tool indexes the N
+//! actors of the application graph into an ascending order based on
+//! precedence, and generates N mapping file pairs ... by shifting the
+//! client-server partitioning point actor-by-actor from the inference
+//! input towards the inference output", then profiles every alternative.
+//!
+//! Two modes:
+//! * `sweep` — live profiling: compile each PP's deployment, run endpoint +
+//!   server engines over shaped localhost TCP, measure endpoint
+//!   ms/frame (this regenerates Figs 4-6);
+//! * `predict` — the analytic cost model (pipelined `max` for multicore
+//!   endpoints, serialized sum for single-core ones), used for quick
+//!   what-if queries and cross-checked against `sweep` in tests.
+
+use crate::compiler::compile;
+use crate::models::builder::{build_graph, KernelOptions, DEFAULT_CAPACITY};
+use crate::models::manifest::{Manifest, ModelMeta};
+use crate::platform::{Mapping, PlatformGraph};
+use crate::runtime::device::DeviceModel;
+use crate::runtime::distributed::run_deployment;
+use crate::runtime::netsim::LinkModel;
+use crate::runtime::xla_exec::{Variant, XlaService};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub model: String,
+    pub endpoint: DeviceModel,
+    pub server: DeviceModel,
+    pub link: LinkModel,
+    pub frames: u64,
+    /// Partition points to profile (1 = only `input` on the endpoint).
+    pub pps: Vec<usize>,
+    pub base_port: u16,
+    pub variant: Variant,
+    /// Inflate sim targets + slow the link by this factor; results are
+    /// reported divided by it (keeps real XLA compute under sim targets).
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PpResult {
+    pub pp: usize,
+    /// Last endpoint-side actor (the cut is just after it).
+    pub cut_actor: String,
+    /// Bytes crossing the cut per frame (sum over cut edges).
+    pub cut_bytes: usize,
+    /// Measured endpoint time per frame, ms (time-scale normalized).
+    pub endpoint_ms: f64,
+    /// Measured server time per frame, ms.
+    pub server_ms: f64,
+    /// Analytic prediction for the endpoint, ms.
+    pub predicted_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub config_name: String,
+    pub results: Vec<PpResult>,
+    /// Full-endpoint (no offload) reference, ms.
+    pub full_endpoint_ms: f64,
+}
+
+impl SweepReport {
+    pub fn best(&self) -> Option<&PpResult> {
+        self.results
+            .iter()
+            .min_by(|a, b| a.endpoint_ms.partial_cmp(&b.endpoint_ms).unwrap())
+    }
+
+    /// Best among privacy-preserving cuts (at least one compute actor on
+    /// the endpoint, i.e. pp >= 2 — raw input never leaves the device).
+    pub fn best_private(&self) -> Option<&PpResult> {
+        self.results
+            .iter()
+            .filter(|r| r.pp >= 2)
+            .min_by(|a, b| a.endpoint_ms.partial_cmp(&b.endpoint_ms).unwrap())
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.best().map(|b| self.full_endpoint_ms / b.endpoint_ms).unwrap_or(f64::NAN)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("config", Json::from(self.config_name.as_str())),
+            ("full_endpoint_ms", Json::from(self.full_endpoint_ms)),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("pp", Json::from(r.pp)),
+                                ("cut_actor", Json::from(r.cut_actor.as_str())),
+                                ("cut_bytes", Json::from(r.cut_bytes)),
+                                ("endpoint_ms", Json::from(r.endpoint_ms)),
+                                ("server_ms", Json::from(r.server_ms)),
+                                ("predicted_ms", Json::from(r.predicted_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Precedence order of a model's actors (the Explorer's PP indexing).
+pub fn precedence_order(meta: &ModelMeta) -> Result<Vec<String>> {
+    let g = build_graph(meta, DEFAULT_CAPACITY)?;
+    Ok(g.topo_order()?
+        .iter()
+        .map(|&id| g.actor(id).name.clone())
+        .collect())
+}
+
+/// Bytes crossing the cut for partition point `pp` under `order`.
+pub fn cut_bytes(meta: &ModelMeta, order: &[String], pp: usize) -> usize {
+    let endpoint: std::collections::BTreeSet<&String> = order[..pp.min(order.len())].iter().collect();
+    meta.edges
+        .iter()
+        .filter(|e| endpoint.contains(&e.src) != endpoint.contains(&e.dst))
+        .map(|e| e.bytes)
+        .sum()
+}
+
+/// Analytic endpoint cost model (per frame, unscaled ms).
+/// Multicore endpoints pipeline compute against TX serialization
+/// (steady-state = max); single-core endpoints serialize them (sum).
+pub fn predict_endpoint_ms(
+    meta: &ModelMeta,
+    endpoint: &DeviceModel,
+    link: &LinkModel,
+    order: &[String],
+    pp: usize,
+) -> f64 {
+    let flops = meta.flops_map();
+    let compute: f64 = order[..pp.min(order.len())]
+        .iter()
+        .map(|a| endpoint.target_ms(a, flops.get(a).copied().unwrap_or(0)))
+        .sum();
+    let bytes = cut_bytes(meta, order, pp);
+    let tx = if bytes > 0 { link.tx_time_ms(bytes) } else { 0.0 };
+    if endpoint.cores == 1 {
+        compute + tx
+    } else {
+        // Latency is pipeline fill, not steady-state cost.
+        let ser = tx - if bytes > 0 { link.latency_ms } else { 0.0 };
+        compute.max(ser)
+    }
+}
+
+/// Full-endpoint (local) per-frame time from the cost model.
+pub fn predict_full_local_ms(meta: &ModelMeta, endpoint: &DeviceModel) -> f64 {
+    let flops = meta.flops_map();
+    meta.actors
+        .iter()
+        .map(|a| endpoint.target_ms(a, flops.get(a).copied().unwrap_or(0)))
+        .sum()
+}
+
+/// Live partition-point sweep.  XLA services are compiled once and shared
+/// across all PPs (the paper's Explorer reuses built binaries similarly).
+pub fn sweep(manifest: &Manifest, cfg: &SweepConfig) -> Result<SweepReport> {
+    let meta = manifest.model(&cfg.model)?.clone();
+    let order = precedence_order(&meta)?;
+    let graph = build_graph(&meta, DEFAULT_CAPACITY)?;
+
+    let mut endpoint = cfg.endpoint.clone();
+    endpoint.time_scale = cfg.time_scale;
+    let mut server = cfg.server.clone();
+    server.time_scale = cfg.time_scale;
+    let link = cfg.link.scaled(cfg.time_scale);
+
+    let mut pg = PlatformGraph::new();
+    pg.add_device(endpoint.clone());
+    pg.add_device(server.clone());
+    pg.add_link(&endpoint.name, &server.name, link.clone());
+
+    let svc_endpoint = XlaService::spawn(&manifest.root, &meta, cfg.variant)?;
+    let svc_server = XlaService::spawn(&manifest.root, &meta, cfg.variant)?;
+    let services: BTreeMap<String, XlaService> = [
+        (endpoint.name.clone(), svc_endpoint.clone()),
+        (server.name.clone(), svc_server),
+    ]
+    .into_iter()
+    .collect();
+    let devices: BTreeMap<String, DeviceModel> = [
+        (endpoint.name.clone(), endpoint.clone()),
+        (server.name.clone(), server.clone()),
+    ]
+    .into_iter()
+    .collect();
+
+    let opts = KernelOptions { frames: cfg.frames, seed: cfg.seed, keep_last: false };
+    let mut results = Vec::new();
+    for (i, &pp) in cfg.pps.iter().enumerate() {
+        if pp == 0 || pp > order.len() {
+            return Err(anyhow!("partition point {pp} out of range 1..={}", order.len()));
+        }
+        let mapping = Mapping::partition_point(&order, pp, &endpoint.name, &server.name);
+        // Distinct port window per PP (avoids TIME_WAIT rebind stalls).
+        let base = cfg.base_port + (i as u16) * 100;
+        let plan = compile(&graph, &pg, &mapping, base)?;
+        let reports = if pp == order.len() {
+            // Fully local: single engine on the endpoint.
+            let mut m = BTreeMap::new();
+            let report = crate::models::builder::run_local(
+                &meta,
+                &services[&endpoint.name],
+                endpoint.clone(),
+                &opts,
+            )?;
+            m.insert(endpoint.name.clone(), report);
+            m
+        } else {
+            run_deployment(&plan, &meta, &services, &devices, &opts)?
+        };
+        let e_ms = reports
+            .get(&endpoint.name)
+            .map(|r| r.ms_per_frame())
+            .unwrap_or(f64::NAN)
+            / cfg.time_scale;
+        let s_ms = reports
+            .get(&server.name)
+            .map(|r| r.ms_per_frame())
+            .unwrap_or(0.0)
+            / cfg.time_scale;
+        let mut base_endpoint = cfg.endpoint.clone();
+        base_endpoint.time_scale = 1.0;
+        results.push(PpResult {
+            pp,
+            cut_actor: order[pp - 1].clone(),
+            cut_bytes: cut_bytes(&meta, &order, pp),
+            endpoint_ms: e_ms,
+            server_ms: s_ms,
+            predicted_ms: predict_endpoint_ms(&meta, &base_endpoint, &cfg.link, &order, pp),
+        });
+    }
+    let mut base_endpoint = cfg.endpoint.clone();
+    base_endpoint.time_scale = 1.0;
+    Ok(SweepReport {
+        config_name: format!("{} {}<->{} over {}", cfg.model, endpoint.name, server.name, link.name),
+        results,
+        full_endpoint_ms: predict_full_local_ms(&meta, &base_endpoint),
+    })
+}
+
+/// Pretty-print a sweep as the paper's figure data (one row per PP).
+pub fn format_table(report: &SweepReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("# {}\n", report.config_name));
+    s.push_str(&format!(
+        "# full endpoint inference: {:.1} ms/frame\n",
+        report.full_endpoint_ms
+    ));
+    s.push_str("PP  cut-after         cut-KB   endpoint-ms  server-ms  predicted-ms\n");
+    for r in &report.results {
+        s.push_str(&format!(
+            "{:<3} {:<17} {:>7.1} {:>12.1} {:>10.1} {:>13.1}\n",
+            r.pp,
+            r.cut_actor,
+            r.cut_bytes as f64 / 1024.0,
+            r.endpoint_ms,
+            r.server_ms,
+            r.predicted_ms
+        ));
+    }
+    if let Some(best) = report.best() {
+        s.push_str(&format!(
+            "best: PP {} ({}) at {:.1} ms -> {:.1}x speedup vs full endpoint\n",
+            best.pp,
+            best.cut_actor,
+            best.endpoint_ms,
+            report.full_endpoint_ms / best.endpoint_ms
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vehicle_n2() -> DeviceModel {
+        let mut d = DeviceModel::native("n2");
+        d.cores = 6;
+        for (a, ms) in [("input", 0.5), ("l1", 6.2), ("l2", 8.2), ("l3", 2.5), ("l45", 1.5)] {
+            d.cost_ms.insert(a.to_string(), ms);
+        }
+        d
+    }
+
+    fn meta() -> Option<ModelMeta> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap().model("vehicle").unwrap().clone())
+    }
+
+    #[test]
+    fn precedence_order_starts_with_input() {
+        let Some(meta) = meta() else { return };
+        let order = precedence_order(&meta).unwrap();
+        assert_eq!(order[0], "input");
+        assert_eq!(order.last().unwrap(), "sink");
+        assert_eq!(order.len(), 6);
+    }
+
+    #[test]
+    fn cut_bytes_match_fig2_tokens() {
+        let Some(meta) = meta() else { return };
+        let order = precedence_order(&meta).unwrap();
+        assert_eq!(cut_bytes(&meta, &order, 1), 110592); // raw input
+        assert_eq!(cut_bytes(&meta, &order, 2), 294912); // l1 -> l2
+        assert_eq!(cut_bytes(&meta, &order, 3), 73728); // l2 -> l3
+        assert_eq!(cut_bytes(&meta, &order, 4), 400);
+        assert_eq!(cut_bytes(&meta, &order, 6), 0); // fully local
+    }
+
+    #[test]
+    fn predicted_fig4_shape() {
+        // The analytic model must reproduce the paper's Fig-4 structure:
+        // PP1 cheapest on Ethernet; PP2 worst; PP3 the privacy-preserving
+        // optimum; full endpoint 18.9 ms.
+        let Some(meta) = meta() else { return };
+        let order = precedence_order(&meta).unwrap();
+        let n2 = vehicle_n2();
+        let eth = LinkModel::new("eth", 11.2, 1.49);
+        let p: Vec<f64> =
+            (1..=6).map(|pp| predict_endpoint_ms(&meta, &n2, &eth, &order, pp)).collect();
+        let full = predict_full_local_ms(&meta, &n2);
+        assert!((full - 18.9).abs() < 1e-6);
+        assert!((p[0] - 9.87).abs() < 0.3, "PP1 {}", p[0]); // ~9.0 in paper
+        assert!(p[1] > 25.0, "PP2 {}", p[1]); // 294912 B cut dominates
+        assert!((p[2] - 14.9).abs() < 0.1, "PP3 {}", p[2]); // paper: 14.9
+        // PP3 is the best privacy-preserving point.
+        assert!(p[2] < p[1] && p[2] < p[3] && p[2] < p[4]);
+    }
+
+    #[test]
+    fn predicted_fig5_shape_single_core() {
+        // N270 single core: compute and TX serialize (sum model).
+        let Some(meta) = meta() else { return };
+        let order = precedence_order(&meta).unwrap();
+        let mut n270 = DeviceModel::native("n270");
+        n270.cores = 1;
+        for (a, ms) in [("input", 17.0), ("l1", 123.0), ("l2", 250.0), ("l3", 40.0), ("l45", 13.0)]
+        {
+            n270.cost_ms.insert(a.to_string(), ms);
+        }
+        let eth = LinkModel::new("eth", 11.2, 1.21);
+        let p: Vec<f64> =
+            (1..=6).map(|pp| predict_endpoint_ms(&meta, &n270, &eth, &order, pp)).collect();
+        assert!((predict_full_local_ms(&meta, &n270) - 443.0).abs() < 1e-6);
+        assert!((p[0] - 28.1).abs() < 1.0, "PP1 {}", p[0]); // paper: 28.6
+        assert!((p[1] - 167.5).abs() < 1.5, "PP2 {}", p[1]); // paper: 167
+        // PP2 is the privacy-preserving optimum on N270.
+        assert!(p[1] < p[2] && p[1] < p[3] && p[1] < p[4] && p[1] < p[5]);
+    }
+
+    #[test]
+    fn live_sweep_tracks_prediction() {
+        let Some(meta) = meta() else { return };
+        let dir = Manifest::default_dir();
+        let manifest = Manifest::load(&dir).unwrap();
+        let _ = meta;
+        let cfg = SweepConfig {
+            model: "vehicle".into(),
+            endpoint: vehicle_n2(),
+            server: DeviceModel::native("i7"),
+            link: LinkModel::new("eth", 11.2, 1.49),
+            frames: 6,
+            pps: vec![1, 3],
+            base_port: 19_000,
+            variant: Variant::Jnp,
+            time_scale: 4.0,
+            seed: 5,
+        };
+        let report = sweep(&manifest, &cfg).unwrap();
+        assert_eq!(report.results.len(), 2);
+        for r in &report.results {
+            assert!(
+                r.endpoint_ms < r.predicted_ms * 2.0 + 10.0
+                    && r.endpoint_ms > r.predicted_ms * 0.4,
+                "PP{} measured {} vs predicted {}",
+                r.pp,
+                r.endpoint_ms,
+                r.predicted_ms
+            );
+        }
+        let table = format_table(&report);
+        assert!(table.contains("PP") && table.contains("best:"));
+    }
+}

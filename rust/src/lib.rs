@@ -1,0 +1,27 @@
+//! # Edge-PRUNE — flexible distributed deep learning inference
+//!
+//! Reproduction of *Edge-PRUNE* (Boutellier, Tan, Nurmi; CS.DC 2022) as a
+//! three-layer Rust + JAX + Pallas stack.  This crate is the Layer-3
+//! framework: the VR-PRUNE dataflow model of computation, the graph
+//! analyzer, the compiler/synthesizer (automatic TX/RX FIFO insertion),
+//! the thread-per-actor runtime with TCP transmit/receive FIFOs, the
+//! partition-point Explorer, and the PJRT bridge that executes the
+//! AOT-compiled per-actor HLO executables produced by `python/compile`.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod analyzer;
+pub mod benchkit;
+pub mod models;
+pub mod runtime;
+pub mod compiler;
+pub mod dataflow;
+pub mod explorer;
+pub mod platform;
+pub mod util;
+pub mod vision;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

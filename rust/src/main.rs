@@ -1,0 +1,268 @@
+//! `edge-prune` — leader CLI for the Edge-PRUNE framework.
+//!
+//! Subcommands mirror the paper's tooling:
+//!   analyze   VR-PRUNE consistency analysis of a model graph (§III.C)
+//!   compile   synthesize + dump the deployment plan for a mapping (§III.C)
+//!   run       local (single-device) inference run
+//!   explore   partition-point sweep endpoint<->server (§III.C Explorer)
+//!   worker    run one side of a distributed deployment over TCP (§III.B)
+//!
+//! Examples:
+//!   edge-prune analyze --model ssd
+//!   edge-prune explore --model vehicle --endpoint n2 --server i7 \
+//!       --link n2_i7_eth --frames 48 --time-scale 4
+//!   edge-prune worker --model vehicle --role server --pp 3 &
+//!   edge-prune worker --model vehicle --role endpoint --pp 3
+
+use anyhow::{anyhow, bail, Result};
+use edge_prune::explorer::{format_table, sweep, SweepConfig};
+use edge_prune::models::builder::{build_graph, run_local, KernelOptions, DEFAULT_CAPACITY};
+use edge_prune::models::manifest::Manifest;
+use edge_prune::platform::configs::Configs;
+use edge_prune::platform::{Mapping, PlatformGraph};
+use edge_prune::runtime::device::DeviceModel;
+use edge_prune::runtime::distributed::{bind_rx_listeners, run_device};
+use edge_prune::runtime::xla_exec::{Variant, XlaService};
+use edge_prune::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("edge-prune: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+edge-prune <analyze|compile|run|explore|worker|version> [flags]
+  common: --model vehicle|ssd|vehicle_dual  --artifacts DIR  --configs FILE
+  run:     --device NAME --frames N --variant jnp|pallas --time-scale S
+  compile: --endpoint NAME --server NAME --link NAME --pp K --base-port P
+  explore: --endpoint NAME --server NAME --link NAME --pps 1,2,3 --frames N
+           --time-scale S --json
+  worker:  --role endpoint|server --pp K (+ compile flags)
+";
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "version" => {
+            println!("edge-prune {}", edge_prune::version());
+            Ok(())
+        }
+        "analyze" => cmd_analyze(&args),
+        "compile" => cmd_compile(&args),
+        "run" => cmd_run(&args),
+        "explore" => cmd_explore(&args),
+        "worker" => cmd_worker(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn manifest(args: &Args) -> Result<Manifest> {
+    let dir = args
+        .str_opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    Manifest::load(&dir)
+}
+
+fn configs(args: &Args) -> Result<Configs> {
+    match args.str_opt("configs") {
+        Some(p) => Configs::load(std::path::Path::new(p)),
+        None => Configs::load_default(),
+    }
+}
+
+fn model_meta(args: &Args, m: &Manifest) -> Result<edge_prune::models::manifest::ModelMeta> {
+    let name = args.str_or("model", "vehicle");
+    if name == "vehicle_dual" {
+        edge_prune::models::vehicle::dual_meta(m.model("vehicle")?)
+    } else {
+        Ok(m.model(name)?.clone())
+    }
+}
+
+fn variant(args: &Args) -> Result<Variant> {
+    match args.str_or("variant", "jnp") {
+        "jnp" => Ok(Variant::Jnp),
+        "pallas" => Ok(Variant::Pallas),
+        v => bail!("unknown --variant {v} (jnp|pallas)"),
+    }
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let meta = model_meta(args, &m)?;
+    let g = build_graph(&meta, DEFAULT_CAPACITY)?;
+    let report = edge_prune::analyzer::analyze(&g)?;
+    println!("model: {}", meta.name);
+    println!("actors: {}  edges: {}", g.actors.len(), g.edges.len());
+    println!(
+        "repetition vector: all-ones = {}",
+        report.repetition_vector.iter().all(|&q| q == 1)
+    );
+    println!("schedulable (deadlock-free at declared capacities): {}", report.schedulable);
+    println!("dynamic processing subgraphs: {}", report.dpg_count);
+    let bound: usize = report.max_buffer_occupancy.iter().sum();
+    println!("certified buffer bound (tokens, total): {bound}");
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let cfgs = configs(args)?;
+    let meta = model_meta(args, &m)?;
+    let g = build_graph(&meta, DEFAULT_CAPACITY)?;
+    let endpoint = cfgs.device(args.str_or("endpoint", "n2"), &meta.name)?;
+    let server = cfgs.device(args.str_or("server", "i7"), &meta.name)?;
+    let link = cfgs.link(args.str_or("link", "n2_i7_eth"))?;
+    let order: Vec<String> =
+        g.topo_order()?.iter().map(|&id| g.actor(id).name.clone()).collect();
+    let pp = args.usize_or("pp", 3)?;
+    let mapping = Mapping::partition_point(&order, pp, &endpoint.name, &server.name);
+    let mut pg = PlatformGraph::new();
+    let (en, sn) = (endpoint.name.clone(), server.name.clone());
+    pg.add_device(endpoint);
+    pg.add_device(server);
+    pg.add_link(&en, &sn, link);
+    let base_port = args.usize_or("base-port", 17000)? as u16;
+    let plan = edge_prune::compiler::compile(&g, &pg, &mapping, base_port)?;
+    let json = plan.to_json().to_string();
+    match args.str_opt("out") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            println!("wrote deployment plan to {path} ({} cut edges)", plan.cut_edges());
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let cfgs = configs(args)?;
+    let meta = model_meta(args, &m)?;
+    let scale = args.f64_or("time-scale", 1.0)?;
+    let mut device = match args.str_or("device", "host") {
+        "host" => DeviceModel::native("host"),
+        name => cfgs.device(name, &meta.name)?,
+    };
+    device.time_scale = scale;
+    let svc = XlaService::spawn(&m.root, &meta, variant(args)?)?;
+    let opts = KernelOptions {
+        frames: args.usize_or("frames", 16)? as u64,
+        seed: args.usize_or("seed", 7)? as u64,
+        keep_last: true,
+    };
+    let report = run_local(&meta, &svc, device, &opts)?;
+    println!(
+        "{}: {} frames in {:.1} ms wall -> {:.2} ms/frame ({:.1} fps)",
+        meta.name,
+        report.frames,
+        report.wall.as_secs_f64() * 1e3 / scale,
+        report.ms_per_frame() / scale,
+        1e3 / (report.ms_per_frame() / scale)
+    );
+    if args.bool_flag("verbose") {
+        println!("{}", report.to_json());
+    }
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let cfgs = configs(args)?;
+    let meta = model_meta(args, &m)?;
+    let endpoint = cfgs.device(args.str_or("endpoint", "n2"), &meta.name)?;
+    let server = cfgs.device(args.str_or("server", "i7"), &meta.name)?;
+    let link = cfgs.link(args.str_or("link", "n2_i7_eth"))?;
+    let g = build_graph(&meta, DEFAULT_CAPACITY)?;
+    let n = g.actors.len();
+    let pps: Vec<usize> = match args.str_opt("pps") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse().map_err(|e| anyhow!("--pps: {e}")))
+            .collect::<Result<_>>()?,
+        None => (1..=n).collect(),
+    };
+    let cfg = SweepConfig {
+        model: meta.name.clone(),
+        endpoint,
+        server,
+        link,
+        frames: args.usize_or("frames", 16)? as u64,
+        pps,
+        base_port: args.usize_or("base-port", 17100)? as u16,
+        variant: variant(args)?,
+        time_scale: args.f64_or("time-scale", 1.0)?,
+        seed: args.usize_or("seed", 7)? as u64,
+    };
+    let report = sweep(&m, &cfg)?;
+    if args.bool_flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", format_table(&report));
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let cfgs = configs(args)?;
+    let meta = model_meta(args, &m)?;
+    let role = args.require("role")?.to_string();
+    let endpoint = cfgs.device(args.str_or("endpoint", "n2"), &meta.name)?;
+    let server = cfgs.device(args.str_or("server", "i7"), &meta.name)?;
+    let link = cfgs.link(args.str_or("link", "n2_i7_eth"))?;
+    let time_scale = args.f64_or("time-scale", 1.0)?;
+    let g = build_graph(&meta, DEFAULT_CAPACITY)?;
+    let order: Vec<String> =
+        g.topo_order()?.iter().map(|&id| g.actor(id).name.clone()).collect();
+    let pp = args.usize_or("pp", 3)?;
+    let mapping = Mapping::partition_point(&order, pp, &endpoint.name, &server.name);
+    let mut pg = PlatformGraph::new();
+    let (en, sn) = (endpoint.name.clone(), server.name.clone());
+    pg.add_device(endpoint.clone());
+    pg.add_device(server.clone());
+    pg.add_link(&en, &sn, link.scaled(time_scale));
+    let base_port = args.usize_or("base-port", 17000)? as u16;
+    let plan = edge_prune::compiler::compile(&g, &pg, &mapping, base_port)?;
+    let mut device = match role.as_str() {
+        "endpoint" => endpoint,
+        "server" => server,
+        r => bail!("--role must be endpoint|server, got {r}"),
+    };
+    device.time_scale = time_scale;
+    let dp = plan
+        .per_device
+        .get(&device.name)
+        .ok_or_else(|| anyhow!("device {} has no actors at pp {pp}", device.name))?;
+    let listeners = bind_rx_listeners(dp)?;
+    eprintln!(
+        "[{}] {} actors, {} tx fifos, {} rx fifos; waiting for peer...",
+        device.name,
+        dp.graph.actors.len(),
+        dp.tx.len(),
+        dp.rx.len()
+    );
+    let svc = XlaService::spawn(&m.root, &meta, variant(args)?)?;
+    let opts = KernelOptions {
+        frames: args.usize_or("frames", 16)? as u64,
+        seed: args.usize_or("seed", 7)? as u64,
+        keep_last: false,
+    };
+    let report = run_device(dp, &meta, &svc, device, listeners, &opts)?;
+    println!(
+        "[{}] {} frames, {:.2} ms/frame (time-scale {}; normalized {:.2})",
+        report.device,
+        report.frames,
+        report.ms_per_frame(),
+        time_scale,
+        report.ms_per_frame() / time_scale
+    );
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Graph builder + kernel factory: turns the manifest's graph metadata
+//! into a live `AppGraph` and binds each actor to its kernel (XLA
+//! executable, vision post-processing, source/sink, or TX/RX endpoint).
+//!
+//! Actor-name conventions:
+//! * `input` -> synthetic SourceKernel, `sink` -> SinkKernel
+//! * names in `hlo_entries` -> XlaKernel (instance suffixes `#2` map to
+//!   the same entry: the dual-input use case replicates actors)
+//! * `prior<i>` / `locr<i>` / `concat_loc` / `concat_conf_softmax` /
+//!   `box_decode` / `nms` / `tracker` -> vision kernels
+//! * `__tx<i>` / `__rx<i>` -> socket FIFO endpoints (bound by the
+//!   distributed launcher, not here).
+
+use crate::dataflow::AppGraph;
+use crate::models::manifest::ModelMeta;
+use crate::runtime::kernels::*;
+use crate::runtime::xla_exec::{XlaKernel, XlaService};
+use crate::vision::kernels::*;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+pub const DEFAULT_CAPACITY: usize = 4;
+
+/// Build the application graph from manifest metadata (actors in file
+/// order; edges in file order so port indices match the kernel contracts).
+pub fn build_graph(meta: &ModelMeta, capacity: usize) -> Result<AppGraph> {
+    let mut g = AppGraph::new();
+    let mut ids = BTreeMap::new();
+    for name in &meta.actors {
+        ids.insert(name.clone(), g.add_spa(name));
+    }
+    for e in &meta.edges {
+        let s = *ids.get(&e.src).ok_or_else(|| anyhow!("edge src {} unknown", e.src))?;
+        let d = *ids.get(&e.dst).ok_or_else(|| anyhow!("edge dst {} unknown", e.dst))?;
+        g.connect(s, d, e.bytes, capacity);
+    }
+    g.validate().map_err(|e| anyhow!("{e}"))?;
+    Ok(g)
+}
+
+/// Strip an instance suffix: "l1#2" -> "l1".
+pub fn base_name(actor: &str) -> &str {
+    actor.split('#').next().unwrap()
+}
+
+/// Options for kernel construction.
+#[derive(Clone)]
+pub struct KernelOptions {
+    pub frames: u64,
+    pub seed: u64,
+    pub keep_last: bool,
+}
+
+impl Default for KernelOptions {
+    fn default() -> Self {
+        KernelOptions { frames: 16, seed: 7, keep_last: false }
+    }
+}
+
+/// Frame counter handle shared with the sink kernels of one engine run.
+pub type FramesSeen = std::sync::Arc<std::sync::atomic::AtomicU64>;
+
+/// Construct kernels for every non-TX/RX actor of a device plan's local
+/// subgraph.  Returns the kernels map (TX/RX slots left empty — the
+/// distributed launcher fills them in) plus the sink frame counter.
+pub fn make_kernels(
+    meta: &ModelMeta,
+    plan_graph: &AppGraph,
+    service: &XlaService,
+    opts: &KernelOptions,
+) -> Result<(BTreeMap<String, Box<dyn ActorKernel>>, FramesSeen)> {
+    let frames_seen: FramesSeen = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mut kernels: BTreeMap<String, Box<dyn ActorKernel>> = BTreeMap::new();
+    for (ai, actor) in plan_graph.actors.iter().enumerate() {
+        let name = actor.name.clone();
+        if name.starts_with("__tx") || name.starts_with("__rx") {
+            continue; // bound by the launcher
+        }
+        let out_ports = plan_graph
+            .out_edges(crate::dataflow::ActorId(ai))
+            .len();
+        let base = base_name(&name);
+        let kernel: Box<dyn ActorKernel> = if base == "input" {
+            Box::new(SourceKernel::new(
+                opts.frames,
+                meta.input_bytes(),
+                out_ports,
+                opts.seed ^ (ai as u64),
+            ))
+        } else if base == "sink" || base == "feedback" {
+            // `feedback` is the Sec IV.D completion-signal receiver on the
+            // endpoint (the paper's feedback socket from L4-L5).
+            let k = SinkKernel::new(frames_seen.clone());
+            Box::new(if opts.keep_last { k.keeping_last() } else { k })
+        } else if meta.hlo_entries.contains_key(base) {
+            let out_token_bytes: Vec<usize> =
+                actor.out_ports.iter().map(|p| p.token_bytes).collect();
+            Box::new(XlaKernel::new(service.clone(), base, out_token_bytes))
+        } else if let Some(idx) = base.strip_prefix("prior") {
+            let i: usize = idx.parse().map_err(|_| anyhow!("bad prior actor {name}"))?;
+            let tap = meta
+                .taps
+                .get(i)
+                .ok_or_else(|| anyhow!("prior{i} has no tap metadata"))?;
+            Box::new(PriorBoxKernel::new(i, tap.h, tap.w, tap.anchors, out_ports))
+        } else if base.starts_with("locr") {
+            Box::new(PassthroughKernel { out_ports })
+        } else if base == "concat_loc" {
+            Box::new(ConcatKernel { out_ports })
+        } else if base == "concat_conf_softmax" {
+            Box::new(ConcatSoftmaxKernel { classes: meta.num_classes, out_ports })
+        } else if base == "box_decode" {
+            Box::new(BoxDecodeKernel { out_ports })
+        } else if base == "nms" {
+            Box::new(NmsKernel::ssd(meta.num_classes, out_ports))
+        } else if base == "tracker" {
+            Box::new(TrackerKernel::new(out_ports))
+        } else {
+            return Err(anyhow!("no kernel rule for actor {name}"));
+        };
+        kernels.insert(name, kernel);
+    }
+    Ok((kernels, frames_seen))
+}
+
+/// Per-actor FLOPs for a (possibly instanced / spliced) plan graph.
+pub fn flops_for_plan(meta: &ModelMeta, plan_graph: &AppGraph) -> BTreeMap<String, u64> {
+    plan_graph
+        .actors
+        .iter()
+        .filter_map(|a| {
+            meta.hlo_entries
+                .get(base_name(&a.name))
+                .map(|e| (a.name.clone(), e.flops))
+        })
+        .collect()
+}
+
+/// Cost-table resolution for instanced actors ("l1#2" uses "l1" costs):
+/// expands a device cost table to cover the plan graph's instance names.
+pub fn expand_cost_table(
+    device: &crate::runtime::device::DeviceModel,
+    plan_graph: &AppGraph,
+) -> crate::runtime::device::DeviceModel {
+    let mut d = device.clone();
+    for a in &plan_graph.actors {
+        let base = base_name(&a.name);
+        if base != a.name {
+            if let Some(&ms) = device.cost_ms.get(base) {
+                d.cost_ms.insert(a.name.clone(), ms);
+            }
+        }
+    }
+    d
+}
+
+/// A full single-device (local) run of a model: used by the quickstart
+/// example and the local-baseline measurements of Figs 4-6.
+pub fn run_local(
+    meta: &ModelMeta,
+    service: &XlaService,
+    device: crate::runtime::device::DeviceModel,
+    opts: &KernelOptions,
+) -> Result<crate::runtime::metrics::RunReport> {
+    let graph = build_graph(meta, DEFAULT_CAPACITY)?;
+    let (kernels, _frames) = make_kernels(meta, &graph, service, opts)?;
+    let device = expand_cost_table(&device, &graph);
+    let mut engine = crate::runtime::engine::Engine::new(graph, device)?;
+    engine.set_flops(meta.flops_map());
+    engine.run(kernels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::Manifest;
+    use crate::runtime::device::DeviceModel;
+    use crate::runtime::xla_exec::Variant;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn base_name_strips_instances() {
+        assert_eq!(base_name("l1#2"), "l1");
+        assert_eq!(base_name("conv1"), "conv1");
+    }
+
+    #[test]
+    fn vehicle_graph_matches_fig2() {
+        let Some(m) = manifest() else { return };
+        let meta = m.model("vehicle").unwrap();
+        let g = build_graph(meta, 4).unwrap();
+        assert_eq!(g.actors.len(), 6);
+        assert_eq!(g.edges.len(), 5);
+        let order = g.topo_order().unwrap();
+        assert_eq!(g.actor(order[0]).name, "input");
+        assert_eq!(g.actor(*order.last().unwrap()).name, "sink");
+    }
+
+    #[test]
+    fn ssd_graph_matches_fig3_counts() {
+        let Some(m) = manifest() else { return };
+        let meta = m.model("ssd").unwrap();
+        let g = build_graph(meta, 4).unwrap();
+        assert_eq!(g.actors.len(), 53);
+        assert_eq!(g.edges.len(), 69);
+        assert!(g.topo_order().is_ok());
+        // Analyzer certifies the SSD graph consistent & deadlock-free.
+        let report = crate::analyzer::analyze(&g).unwrap();
+        assert!(report.repetition_vector.iter().all(|&q| q == 1));
+    }
+
+    #[test]
+    fn vehicle_local_run_end_to_end() {
+        let Some(m) = manifest() else { return };
+        let meta = m.model("vehicle").unwrap();
+        let svc = XlaService::spawn(&m.root, meta, Variant::Jnp).unwrap();
+        let opts = KernelOptions { frames: 4, seed: 1, keep_last: true };
+        let report = run_local(meta, &svc, DeviceModel::native("host"), &opts).unwrap();
+        assert_eq!(report.frames, 4);
+        assert_eq!(report.actors["l45"].firings, 4);
+        assert_eq!(report.actors["input"].firings, 4);
+    }
+
+    #[test]
+    fn unknown_actor_has_no_kernel_rule() {
+        let Some(m) = manifest() else { return };
+        let meta = m.model("vehicle").unwrap();
+        let svc = XlaService::spawn(&m.root, meta, Variant::Jnp).unwrap();
+        let mut g = AppGraph::new();
+        g.add_spa("mystery");
+        let err = make_kernels(meta, &g, &svc, &KernelOptions::default());
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (build
+//! time) and the Rust runtime.  Describes each model's dataflow graph
+//! (actors, edges, token sizes — cross-checked against the paper's Fig 2 /
+//! Fig 3 counts in tests) and each HLO-compiled actor's artifact paths,
+//! shapes, weights, and FLOPs estimate.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct WeightMeta {
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct HloEntry {
+    pub name: String,
+    pub hlo: String,
+    pub hlo_pallas: Option<String>,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub out_shape: Vec<usize>,
+    pub out_bytes: usize,
+    pub flops: u64,
+    pub weights: Vec<WeightMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EdgeMeta {
+    pub src: String,
+    pub dst: String,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TapMeta {
+    pub actor: String,
+    pub anchors: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub num_anchors: usize,
+    pub actors: Vec<String>,
+    pub edges: Vec<EdgeMeta>,
+    pub taps: Vec<TapMeta>,
+    pub hlo_entries: BTreeMap<String, HloEntry>,
+    /// Order of hlo entries as emitted (== precedence order).
+    pub hlo_order: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+fn usizes(j: &Json) -> Result<Vec<usize>> {
+    j.arr()?.iter().map(|x| Ok(x.usize()?)).collect()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in v.get("models")?.obj()? {
+            models.insert(name.clone(), ModelMeta::from_json(name, m)?);
+        }
+        Ok(Manifest { root: artifacts_dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| anyhow!("model {name} not in manifest"))
+    }
+
+    /// Default artifacts directory: $EDGE_PRUNE_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("EDGE_PRUNE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+impl ModelMeta {
+    fn from_json(name: &str, m: &Json) -> Result<ModelMeta> {
+        let actors = m
+            .get("actors")?
+            .arr()?
+            .iter()
+            .map(|a| Ok(a.str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let edges = m
+            .get("edges")?
+            .arr()?
+            .iter()
+            .map(|e| {
+                Ok(EdgeMeta {
+                    src: e.get("src")?.str()?.to_string(),
+                    dst: e.get("dst")?.str()?.to_string(),
+                    bytes: e.get("bytes")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let taps = match m.opt("taps") {
+            None => Vec::new(),
+            Some(t) => t
+                .arr()?
+                .iter()
+                .map(|x| {
+                    Ok(TapMeta {
+                        actor: x.get("actor")?.str()?.to_string(),
+                        anchors: x.get("anchors")?.usize()?,
+                        h: x.get("h")?.usize()?,
+                        w: x.get("w")?.usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let mut hlo_entries = BTreeMap::new();
+        let mut hlo_order = Vec::new();
+        for e in m.get("hlo_entries")?.arr()? {
+            let name = e.get("name")?.str()?.to_string();
+            let weights = e
+                .get("weights")?
+                .arr()?
+                .iter()
+                .map(|w| {
+                    Ok(WeightMeta {
+                        file: w.get("file")?.str()?.to_string(),
+                        shape: usizes(w.get("shape")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let in_shapes = e
+                .get("inputs")?
+                .arr()?
+                .iter()
+                .map(|i| usizes(i.get("shape")?))
+                .collect::<Result<Vec<_>>>()?;
+            hlo_order.push(name.clone());
+            hlo_entries.insert(
+                name.clone(),
+                HloEntry {
+                    name,
+                    hlo: e.get("hlo")?.str()?.to_string(),
+                    hlo_pallas: e.opt("hlo_pallas").map(|p| p.str().map(String::from)).transpose()?,
+                    in_shapes,
+                    out_shape: usizes(e.get("out_shape")?)?,
+                    out_bytes: e.get("out_bytes")?.usize()?,
+                    flops: e.get("flops")?.int()? as u64,
+                    weights,
+                },
+            );
+        }
+        Ok(ModelMeta {
+            name: name.to_string(),
+            input_shape: usizes(m.get("input_shape")?)?,
+            num_classes: m.get("num_classes")?.usize()?,
+            num_anchors: m.opt("num_anchors").map(|j| j.usize()).transpose()?.unwrap_or(0),
+            actors,
+            edges,
+            taps,
+            hlo_entries,
+            hlo_order,
+        })
+    }
+
+    /// Bytes of one input frame token.
+    pub fn input_bytes(&self) -> usize {
+        self.input_shape.iter().product::<usize>() * 4
+    }
+
+    /// Per-actor FLOPs map (cost-model input).
+    pub fn flops_map(&self) -> BTreeMap<String, u64> {
+        self.hlo_entries.iter().map(|(k, v)| (k.clone(), v.flops)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+          "models": {
+            "toy": {
+              "input_shape": [4, 4, 1],
+              "num_classes": 2,
+              "actors": ["input", "l1", "sink"],
+              "edges": [
+                {"src": "input", "dst": "l1", "bytes": 64},
+                {"src": "l1", "dst": "sink", "bytes": 8}
+              ],
+              "hlo_entries": [
+                {"name": "l1", "hlo": "toy/l1.hlo.txt",
+                 "inputs": [{"shape": [4,4,1], "dtype": "f32"}],
+                 "out_shape": [2], "out_bytes": 8, "flops": 100,
+                 "weights": [{"file": "weights/toy.l1.w.bin", "shape": [16,2]}]}
+              ]
+            }
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_model_meta() {
+        let j = sample();
+        let m = ModelMeta::from_json("toy", j.get("models").unwrap().get("toy").unwrap()).unwrap();
+        assert_eq!(m.actors.len(), 3);
+        assert_eq!(m.edges[0].bytes, 64);
+        assert_eq!(m.input_bytes(), 64);
+        let e = &m.hlo_entries["l1"];
+        assert_eq!(e.flops, 100);
+        assert_eq!(e.weights[0].shape, vec![16, 2]);
+        assert!(e.hlo_pallas.is_none());
+        assert_eq!(m.flops_map()["l1"], 100);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.model("vehicle").unwrap();
+        assert_eq!(v.actors, vec!["input", "l1", "l2", "l3", "l45", "sink"]);
+        assert_eq!(v.edges.iter().find(|e| e.src == "l1").unwrap().bytes, 294912);
+        if let Ok(s) = m.model("ssd") {
+            assert_eq!(s.actors.len(), 53);
+            assert_eq!(s.edges.len(), 69);
+            assert_eq!(s.num_anchors, 1917);
+        }
+    }
+}

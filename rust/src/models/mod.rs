@@ -1,0 +1,5 @@
+//! Model graph builders + artifact manifest (vehicle CNN, SSD-Mobilenet).
+
+pub mod builder;
+pub mod manifest;
+pub mod vehicle;

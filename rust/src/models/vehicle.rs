@@ -1,0 +1,112 @@
+//! Vehicle-classification model helpers: the dual-input variant of
+//! paper §IV.C — "actors Input through L3 were replicated into two
+//! instances each, joining at a two-input L4L5 actor".
+//!
+//! Instance actors use the `#2` suffix; the kernel factory maps them to
+//! the same HLO entry (`l1#2` runs the `l1` executable), and the join is
+//! the `l45_dual` executable lowered by aot.py with two (100,) inputs.
+
+use crate::models::manifest::{EdgeMeta, ModelMeta};
+use anyhow::{anyhow, Result};
+
+/// Derive the dual-input graph metadata from the single-input vehicle
+/// metadata.  Actor order: branch 1, branch 2, join, sink (precedence).
+pub fn dual_meta(vehicle: &ModelMeta) -> Result<ModelMeta> {
+    if !vehicle.hlo_entries.contains_key("l45_dual") {
+        return Err(anyhow!("manifest lacks l45_dual (re-run `make artifacts`)"));
+    }
+    let mut m = vehicle.clone();
+    m.name = "vehicle_dual".to_string();
+    m.actors = vec![
+        "input".into(),
+        "l1".into(),
+        "l2".into(),
+        "l3".into(),
+        "input#2".into(),
+        "l1#2".into(),
+        "l2#2".into(),
+        "l3#2".into(),
+        "l45_dual".into(),
+        "sink".into(),
+    ];
+    let byte = |src: &str| -> usize {
+        vehicle
+            .edges
+            .iter()
+            .find(|e| e.src == src)
+            .map(|e| e.bytes)
+            .unwrap_or(0)
+    };
+    let e = |src: &str, dst: &str, bytes: usize| EdgeMeta {
+        src: src.to_string(),
+        dst: dst.to_string(),
+        bytes,
+    };
+    m.edges = vec![
+        e("input", "l1", byte("input")),
+        e("l1", "l2", byte("l1")),
+        e("l2", "l3", byte("l2")),
+        e("l3", "l45_dual", byte("l3")),
+        e("input#2", "l1#2", byte("input")),
+        e("l1#2", "l2#2", byte("l1")),
+        e("l2#2", "l3#2", byte("l2")),
+        e("l3#2", "l45_dual", byte("l3")),
+        e("l45_dual", "sink", byte("l45")),
+    ];
+    Ok(m)
+}
+
+/// The paper's §IV.C mapping: 1st instance on the N2, the 2nd instance's
+/// Input on the N270, everything else on the i7 edge server.
+pub fn dual_mapping() -> crate::platform::Mapping {
+    let mut map = crate::platform::Mapping::new();
+    for a in ["input", "l1", "l2", "l3"] {
+        map.assign(a, "n2");
+    }
+    map.assign("input#2", "n270");
+    for a in ["l1#2", "l2#2", "l3#2", "l45_dual", "sink"] {
+        map.assign(a, "i7");
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builder::build_graph;
+    use crate::models::manifest::Manifest;
+
+    fn vehicle() -> Option<ModelMeta> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap().model("vehicle").unwrap().clone())
+    }
+
+    #[test]
+    fn dual_meta_builds_valid_graph() {
+        let Some(v) = vehicle() else { return };
+        let dual = dual_meta(&v).unwrap();
+        assert_eq!(dual.actors.len(), 10);
+        assert_eq!(dual.edges.len(), 9);
+        let g = build_graph(&dual, 4).unwrap();
+        assert!(g.topo_order().is_ok());
+        // The join actor has exactly two in-ports.
+        let join = g.actor_by_name("l45_dual").unwrap();
+        assert_eq!(g.in_edges(join).len(), 2);
+        let report = crate::analyzer::analyze(&g).unwrap();
+        assert!(report.schedulable);
+    }
+
+    #[test]
+    fn dual_mapping_covers_all_actors() {
+        let Some(v) = vehicle() else { return };
+        let dual = dual_meta(&v).unwrap();
+        let map = dual_mapping();
+        for a in &dual.actors {
+            assert!(map.assignments.contains_key(a), "{a} unmapped");
+        }
+        assert_eq!(map.device_of("input#2").unwrap(), "n270");
+        assert_eq!(map.device_of("l45_dual").unwrap(), "i7");
+    }
+}

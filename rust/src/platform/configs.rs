@@ -1,0 +1,159 @@
+//! Loader for `configs/platforms.json`: the calibrated Table-I device cost
+//! tables (nested per model, since `input`/`sink` actor names are shared
+//! between the two use-case CNNs) and the named Table-II links.
+
+use crate::runtime::device::DeviceModel;
+use crate::runtime::netsim::LinkModel;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Configs {
+    pub raw: Json,
+}
+
+/// A Table-II row (nominal values) for the table2 bench.
+#[derive(Debug, Clone)]
+pub struct NominalLink {
+    pub name: String,
+    pub bandwidth_mbit_s: f64,
+    pub throughput_mbytes_s: f64,
+    pub latency_ms: f64,
+}
+
+impl Configs {
+    pub fn load(path: &Path) -> Result<Configs> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Configs { raw: Json::parse(&text)? })
+    }
+
+    /// Default path: $EDGE_PRUNE_CONFIGS or ./configs/platforms.json.
+    pub fn default_path() -> PathBuf {
+        std::env::var("EDGE_PRUNE_CONFIGS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("configs/platforms.json"))
+    }
+
+    pub fn load_default() -> Result<Configs> {
+        Self::load(&Self::default_path())
+    }
+
+    /// Device model with the cost table for `model` flattened in.
+    pub fn device(&self, name: &str, model: &str) -> Result<DeviceModel> {
+        let d = self
+            .raw
+            .get("devices")?
+            .opt(name)
+            .ok_or_else(|| anyhow!("device {name} not in configs"))?;
+        let mut dev = DeviceModel {
+            name: name.to_string(),
+            cost_ms: BTreeMap::new(),
+            gflops: d.opt("gflops").map(|j| j.num()).transpose()?.unwrap_or(0.0),
+            cores: d.opt("cores").map(|j| j.usize()).transpose()?.unwrap_or(8),
+            accel_slots: d.opt("accel_slots").map(|j| j.usize()).transpose()?.unwrap_or(1),
+            time_scale: 1.0,
+        };
+        if let Some(tables) = d.opt("cost_ms") {
+            if let Some(table) = tables.opt(model) {
+                for (k, v) in table.obj()? {
+                    dev.cost_ms.insert(k.clone(), v.num()?);
+                }
+            }
+        }
+        Ok(dev)
+    }
+
+    pub fn link(&self, name: &str) -> Result<LinkModel> {
+        let l = self
+            .raw
+            .get("links")?
+            .opt(name)
+            .ok_or_else(|| anyhow!("link {name} not in configs"))?;
+        Ok(LinkModel {
+            name: name.to_string(),
+            throughput_bps: l.get("throughput_mbytes_s")?.num()? * 1e6,
+            latency_ms: l.get("latency_ms")?.num()?,
+        })
+    }
+
+    pub fn nominal_links(&self) -> Result<Vec<NominalLink>> {
+        self.raw
+            .get("table2_nominal")?
+            .arr()?
+            .iter()
+            .map(|l| {
+                Ok(NominalLink {
+                    name: l.get("name")?.str()?.to_string(),
+                    bandwidth_mbit_s: l.get("bandwidth_mbit_s")?.num()?,
+                    throughput_mbytes_s: l.get("throughput_mbytes_s")?.num()?,
+                    latency_ms: l.get("latency_ms")?.num()?,
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn configs() -> Option<Configs> {
+        let p = Configs::default_path();
+        p.exists().then(|| Configs::load(&p).unwrap())
+    }
+
+    #[test]
+    fn vehicle_n2_costs_sum_to_paper_total() {
+        let Some(c) = configs() else { return };
+        let d = c.device("n2", "vehicle").unwrap();
+        let total: f64 = d.cost_ms.values().sum();
+        assert!((total - 18.9).abs() < 1e-9, "N2 vehicle total {total}");
+        assert_eq!(d.cores, 6);
+    }
+
+    #[test]
+    fn vehicle_n270_costs_sum_to_paper_total() {
+        let Some(c) = configs() else { return };
+        let d = c.device("n270", "vehicle").unwrap();
+        let total: f64 = d.cost_ms.values().sum();
+        assert!((total - 443.0).abs() < 1e-9, "N270 vehicle total {total}");
+        assert_eq!(d.cores, 1);
+    }
+
+    #[test]
+    fn ssd_n2_costs_sum_to_paper_total() {
+        let Some(c) = configs() else { return };
+        let d = c.device("n2", "ssd").unwrap();
+        let total: f64 = d.cost_ms.values().sum();
+        assert!((total - 2360.0).abs() < 1e-6, "N2 ssd total {total}");
+        // Prefix through dwcl9 = the paper's 406 ms Ethernet-optimal cut.
+        let prefix: f64 = ["input", "conv1", "dwcl1", "dwcl2", "dwcl3", "dwcl4",
+                           "dwcl5", "dwcl6", "dwcl7", "dwcl8", "dwcl9"]
+            .iter()
+            .map(|a| d.cost_ms[*a])
+            .sum();
+        assert!((prefix - 406.0).abs() < 1e-6, "prefix {prefix}");
+    }
+
+    #[test]
+    fn i7_server_matches_sec4d_split() {
+        let Some(c) = configs() else { return };
+        let d = c.device("i7", "vehicle").unwrap();
+        // Sec IV.D: 20% of 31.2 ms = 6.3 ms server inference (l3 + l45).
+        assert!((d.cost_ms["l3"] + d.cost_ms["l45"] - 6.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn links_parse() {
+        let Some(c) = configs() else { return };
+        let eth = c.link("n2_i7_eth").unwrap();
+        assert!((eth.throughput_bps - 11.2e6).abs() < 1.0);
+        assert!(c.link("nope").is_err());
+        let rows = c.nominal_links().unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!((rows[1].throughput_mbytes_s - 2.3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,130 @@
+//! Mapping files (paper §III.C): "a mapping file, which assigns each actor
+//! to exactly one processing unit ... in each platform-specific mapping
+//! file, each actor is defined either for local or remote execution".
+//!
+//! One global mapping (actor -> device) is the source of truth; the
+//! compiler derives the per-device local/remote views from it — exactly
+//! the pair of files the paper's Explorer generates per partition point.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Mapping {
+    pub assignments: BTreeMap<String, String>,
+}
+
+impl Mapping {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn assign(&mut self, actor: &str, device: &str) -> &mut Self {
+        self.assignments.insert(actor.to_string(), device.to_string());
+        self
+    }
+
+    pub fn device_of(&self, actor: &str) -> Result<&str> {
+        self.assignments
+            .get(actor)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("actor {actor} not mapped"))
+    }
+
+    /// Actors mapped to `device`, in the given precedence order.
+    pub fn local_actors<'a>(&self, device: &str, order: &'a [String]) -> Vec<&'a String> {
+        order.iter().filter(|a| self.assignments.get(*a).map(String::as_str) == Some(device)).collect()
+    }
+
+    pub fn devices_used(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.assignments.values().map(String::as_str).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Partition-point mapping: the first `pp` actors of `order` go to
+    /// `endpoint`, the rest to `server` (the paper's Explorer semantics:
+    /// "shifting the client-server partitioning point actor-by-actor from
+    /// the inference input towards the inference output").
+    pub fn partition_point(order: &[String], pp: usize, endpoint: &str, server: &str) -> Mapping {
+        let mut m = Mapping::new();
+        for (i, actor) in order.iter().enumerate() {
+            m.assign(actor, if i < pp { endpoint } else { server });
+        }
+        m
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.assignments
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::from(v.as_str())))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<Mapping> {
+        let mut m = Mapping::new();
+        for (k, d) in v.obj()? {
+            m.assign(k, d.str()?);
+        }
+        Ok(m)
+    }
+
+    pub fn from_json_file(path: &Path) -> Result<Mapping> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading mapping {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn order(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn partition_point_splits_prefix() {
+        let o = order(&["input", "l1", "l2", "l3", "l45", "sink"]);
+        let m = Mapping::partition_point(&o, 3, "n2", "i7");
+        assert_eq!(m.device_of("input").unwrap(), "n2");
+        assert_eq!(m.device_of("l2").unwrap(), "n2");
+        assert_eq!(m.device_of("l3").unwrap(), "i7");
+        assert_eq!(m.device_of("sink").unwrap(), "i7");
+        assert_eq!(m.local_actors("n2", &o).len(), 3);
+    }
+
+    #[test]
+    fn pp_zero_and_full() {
+        let o = order(&["a", "b"]);
+        let all_server = Mapping::partition_point(&o, 0, "e", "s");
+        assert_eq!(all_server.devices_used(), vec!["s"]);
+        let all_endpoint = Mapping::partition_point(&o, 2, "e", "s");
+        assert_eq!(all_endpoint.devices_used(), vec!["e"]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let o = order(&["a", "b", "c"]);
+        let m = Mapping::partition_point(&o, 1, "e", "s");
+        let j = m.to_json();
+        assert_eq!(Mapping::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn local_actors_preserve_order() {
+        let o = order(&["z_first", "a_second", "m_third"]);
+        let mut m = Mapping::new();
+        m.assign("z_first", "d");
+        m.assign("a_second", "d");
+        m.assign("m_third", "other");
+        let locals = m.local_actors("d", &o);
+        assert_eq!(locals, vec!["z_first", "a_second"]);
+    }
+}

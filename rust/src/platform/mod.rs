@@ -1,0 +1,207 @@
+//! Platform abstraction (paper §III.C): "an undirected platform graph that
+//! lists the processing units ... and specifies their interconnections",
+//! plus per-platform mapping files assigning each actor to exactly one
+//! processing unit.
+//!
+//! Here a *device* is one simulated platform (Table I: i7 / N2 / N270) and
+//! a *link* is a shaped interconnect between two devices (Table II).
+
+pub mod configs;
+pub mod mapping;
+
+use crate::runtime::device::DeviceModel;
+use crate::runtime::netsim::LinkModel;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub use mapping::Mapping;
+
+#[derive(Debug, Clone)]
+pub struct PlatformGraph {
+    pub devices: BTreeMap<String, DeviceModel>,
+    /// Undirected links keyed by canonical (min, max) device-name pair.
+    pub links: BTreeMap<(String, String), LinkModel>,
+}
+
+fn key(a: &str, b: &str) -> (String, String) {
+    if a <= b {
+        (a.to_string(), b.to_string())
+    } else {
+        (b.to_string(), a.to_string())
+    }
+}
+
+impl PlatformGraph {
+    pub fn new() -> Self {
+        PlatformGraph { devices: BTreeMap::new(), links: BTreeMap::new() }
+    }
+
+    pub fn add_device(&mut self, d: DeviceModel) -> &mut Self {
+        self.devices.insert(d.name.clone(), d);
+        self
+    }
+
+    pub fn add_link(&mut self, a: &str, b: &str, link: LinkModel) -> &mut Self {
+        self.links.insert(key(a, b), link);
+        self
+    }
+
+    pub fn device(&self, name: &str) -> Result<&DeviceModel> {
+        self.devices.get(name).ok_or_else(|| anyhow!("unknown device {name}"))
+    }
+
+    pub fn link(&self, a: &str, b: &str) -> Result<&LinkModel> {
+        self.links
+            .get(&key(a, b))
+            .ok_or_else(|| anyhow!("no link between {a} and {b} in platform graph"))
+    }
+
+    /// Validate a mapping against this platform graph: every target device
+    /// exists, and every device pair that actors communicate across has a
+    /// link.
+    pub fn validate_mapping(
+        &self,
+        mapping: &Mapping,
+        graph: &crate::dataflow::AppGraph,
+    ) -> Result<()> {
+        for (actor, dev) in &mapping.assignments {
+            if !self.devices.contains_key(dev) {
+                bail!("actor {actor} mapped to unknown device {dev}");
+            }
+            if graph.actor_by_name(actor).is_none() {
+                bail!("mapping references unknown actor {actor}");
+            }
+        }
+        for a in &graph.actors {
+            if !mapping.assignments.contains_key(&a.name) {
+                bail!("actor {} has no mapping", a.name);
+            }
+        }
+        for e in &graph.edges {
+            let sd = mapping.device_of(&graph.actors[e.src.actor.0].name)?;
+            let dd = mapping.device_of(&graph.actors[e.dst.actor.0].name)?;
+            if sd != dd {
+                self.link(sd, dd).with_context(|| {
+                    format!(
+                        "edge {} -> {} crosses unmapped device pair",
+                        graph.actors[e.src.actor.0].name, graph.actors[e.dst.actor.0].name
+                    )
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from configs/platforms.json-style file:
+    /// { "devices": {name: {cores, gflops, cost_ms:{model.actor: ms}}},
+    ///   "links": [{"a":, "b":, "throughput_mbytes_s":, "latency_ms":}] }
+    pub fn from_json_file(path: &Path) -> Result<PlatformGraph> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlatformGraph> {
+        let mut pg = PlatformGraph::new();
+        for (name, d) in v.get("devices")?.obj()? {
+            pg.add_device(DeviceModel::from_json(name, d)?);
+        }
+        if let Some(links) = v.opt("links") {
+            for l in links.arr()? {
+                let a = l.get("a")?.str()?.to_string();
+                let b = l.get("b")?.str()?.to_string();
+                let name = format!("{a}-{b}");
+                let link = LinkModel {
+                    name: l.opt("name").and_then(|n| n.str().ok().map(String::from)).unwrap_or(name),
+                    throughput_bps: l.get("throughput_mbytes_s")?.num()? * 1e6,
+                    latency_ms: l.get("latency_ms")?.num()?,
+                };
+                pg.add_link(&a, &b, link);
+            }
+        }
+        Ok(pg)
+    }
+}
+
+impl Default for PlatformGraph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::AppGraph;
+
+    fn two_device_platform() -> PlatformGraph {
+        let mut pg = PlatformGraph::new();
+        pg.add_device(DeviceModel::native("n2"));
+        pg.add_device(DeviceModel::native("i7"));
+        pg.add_link("n2", "i7", LinkModel::new("eth", 11.2, 1.49));
+        pg
+    }
+
+    #[test]
+    fn link_lookup_is_undirected() {
+        let pg = two_device_platform();
+        assert!(pg.link("n2", "i7").is_ok());
+        assert!(pg.link("i7", "n2").is_ok());
+        assert!(pg.link("i7", "x").is_err());
+    }
+
+    #[test]
+    fn mapping_validation_catches_missing_link() {
+        let mut pg = PlatformGraph::new();
+        pg.add_device(DeviceModel::native("a"));
+        pg.add_device(DeviceModel::native("b"));
+        // no link a-b
+        let mut g = AppGraph::new();
+        let x = g.add_spa("x");
+        let y = g.add_spa("y");
+        g.connect(x, y, 4, 2);
+        let mut m = Mapping::new();
+        m.assign("x", "a");
+        m.assign("y", "b");
+        assert!(pg.validate_mapping(&m, &g).is_err());
+        pg.add_link("a", "b", LinkModel::ideal());
+        assert!(pg.validate_mapping(&m, &g).is_ok());
+    }
+
+    #[test]
+    fn mapping_validation_catches_unmapped_actor() {
+        let pg = two_device_platform();
+        let mut g = AppGraph::new();
+        let x = g.add_spa("x");
+        let y = g.add_spa("y");
+        g.connect(x, y, 4, 2);
+        let mut m = Mapping::new();
+        m.assign("x", "n2");
+        assert!(pg.validate_mapping(&m, &g).is_err());
+        m.assign("y", "bogus-device");
+        assert!(pg.validate_mapping(&m, &g).is_err());
+    }
+
+    #[test]
+    fn from_json_parses_platform_file() {
+        let j = Json::parse(
+            r#"{
+              "devices": {
+                "n270": {"cores": 1, "gflops": 0.4},
+                "i7": {"cores": 8, "gflops": 40.0}
+              },
+              "links": [
+                {"a": "n270", "b": "i7", "throughput_mbytes_s": 11.2,
+                 "latency_ms": 1.21}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let pg = PlatformGraph::from_json(&j).unwrap();
+        assert_eq!(pg.devices.len(), 2);
+        assert_eq!(pg.device("n270").unwrap().cores, 1);
+        assert!((pg.link("i7", "n270").unwrap().latency_ms - 1.21).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,452 @@
+//! Thread-per-actor execution engine (paper §III.D): "each actor that has
+//! been mapped for execution on a CPU core is instantiated as a separate
+//! thread, and actor data exchange over FIFOs is synchronized by mutex
+//! primitives".
+//!
+//! Firing rule: an actor fires when every input port has atr(p) tokens
+//! available (data-driven); production blocks on full output FIFOs
+//! (backpressure).  Device heterogeneity is simulated by the CoreSet
+//! semaphore + per-actor cost padding (see `device.rs`); end-of-stream
+//! propagates by closing FIFOs in both directions.
+
+use crate::dataflow::{AppGraph, EdgeId, Token};
+use crate::runtime::device::{pad_to_target, CoreSet, DeviceModel};
+use crate::runtime::fifo::Fifo;
+use crate::runtime::kernels::{ActorKernel, FireOutcome};
+use crate::runtime::metrics::{Metrics, RunReport};
+use crate::dataflow::rates::AtrCell;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct Engine {
+    graph: AppGraph,
+    device: DeviceModel,
+    fifos: Vec<Arc<Fifo>>,
+    atrs: Vec<AtrCell>,
+    flops: BTreeMap<String, u64>,
+}
+
+impl Engine {
+    pub fn new(graph: AppGraph, device: DeviceModel) -> Result<Self> {
+        graph.validate().map_err(|e| anyhow!("{e}"))?;
+        let mut fifos = Vec::with_capacity(graph.edges.len());
+        let mut atrs = Vec::with_capacity(graph.edges.len());
+        for e in &graph.edges {
+            let f = Arc::new(Fifo::new(e.capacity));
+            if e.initial_tokens > 0 {
+                let tokens = (0..e.initial_tokens)
+                    .map(|i| Token::new(vec![0u8; e.token_bytes], i as u64))
+                    .collect();
+                f.preload(tokens);
+            }
+            fifos.push(f);
+            let rate = graph.actors[e.src.actor.0].out_ports[e.src.port].rate;
+            atrs.push(AtrCell::new(rate));
+        }
+        Ok(Engine { graph, device, fifos, atrs, flops: BTreeMap::new() })
+    }
+
+    /// Shared active-token-rate cell of an edge (CA kernels hold clones).
+    pub fn atr(&self, edge: EdgeId) -> AtrCell {
+        self.atrs[edge.0].clone()
+    }
+
+    /// Attach per-actor FLOPs estimates (cost-model fallback).
+    pub fn set_flops(&mut self, flops: BTreeMap<String, u64>) {
+        self.flops = flops;
+    }
+
+    pub fn graph(&self) -> &AppGraph {
+        &self.graph
+    }
+
+    /// Run to completion: sources fire until Stop, the wave drains through
+    /// the pipeline, and the engine joins all actor threads.
+    pub fn run(self, mut kernels: BTreeMap<String, Box<dyn ActorKernel>>) -> Result<RunReport> {
+        let metrics = Arc::new(Metrics::new());
+        let cores = Arc::new(CoreSet::new(self.device.cores));
+        // Compute actors serialize through the device's accelerator queue
+        // (the paper's GPU executes DNN layers one at a time); TX/RX FIFO
+        // endpoints are CPU-side and bypass it, so communication overlaps
+        // compute on multicore devices.
+        let accel = Arc::new(CoreSet::new(self.device.accel_slots.min(1 << 20)));
+        let mut handles = Vec::new();
+        let t_start = Instant::now();
+
+        for (ai, actor) in self.graph.actors.iter().enumerate() {
+            let name = actor.name.clone();
+            let kernel = kernels
+                .remove(&name)
+                .ok_or_else(|| anyhow!("no kernel bound for actor {name}"))?;
+
+            // In-port FIFOs ordered by port index.
+            let mut ins: Vec<(Arc<Fifo>, AtrCell)> = Vec::new();
+            {
+                let mut with_port: Vec<(usize, Arc<Fifo>, AtrCell)> = self
+                    .graph
+                    .edges
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| e.dst.actor.0 == ai)
+                    .map(|(ei, e)| (e.dst.port, self.fifos[ei].clone(), self.atrs[ei].clone()))
+                    .collect();
+                with_port.sort_by_key(|(p, _, _)| *p);
+                for (_, f, a) in with_port {
+                    ins.push((f, a));
+                }
+            }
+            // Out-port FIFOs ordered by port index.
+            let mut outs: Vec<Arc<Fifo>> = Vec::new();
+            {
+                let mut with_port: Vec<(usize, Arc<Fifo>)> = self
+                    .graph
+                    .edges
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| e.src.actor.0 == ai)
+                    .map(|(ei, e)| (e.src.port, self.fifos[ei].clone()))
+                    .collect();
+                with_port.sort_by_key(|(p, _)| *p);
+                for (_, f) in with_port {
+                    outs.push(f);
+                }
+            }
+
+            let metrics = metrics.clone();
+            let cores = cores.clone();
+            let is_io = name.starts_with("__tx") || name.starts_with("__rx");
+            let accel = (!is_io).then(|| accel.clone());
+            let target_ms = self.device.target_ms(&name, self.flops.get(&name).copied().unwrap_or(0));
+            let handle = std::thread::Builder::new()
+                .name(format!("actor-{name}"))
+                .spawn(move || actor_loop(name, kernel, ins, outs, cores, accel, target_ms, metrics))
+                .map_err(|e| anyhow!("spawn: {e}"))?;
+            handles.push(handle);
+        }
+
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => first_err = first_err.or(Some(anyhow!("actor thread panicked"))),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+
+        let wall = t_start.elapsed();
+        let stats = metrics.snapshot();
+        // Frames = max firings over structural sinks (incl. TX endpoints).
+        let frames = self
+            .graph
+            .actors
+            .iter()
+            .filter(|a| a.is_sink())
+            .filter_map(|a| stats.get(&a.name).map(|s| s.firings))
+            .max()
+            .unwrap_or(0);
+        Ok(RunReport { device: self.device.name.clone(), wall, frames, actors: stats })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn actor_loop(
+    name: String,
+    kernel: Box<dyn ActorKernel>,
+    ins: Vec<(Arc<Fifo>, AtrCell)>,
+    outs: Vec<Arc<Fifo>>,
+    cores: Arc<CoreSet>,
+    accel: Option<Arc<CoreSet>>,
+    target_ms: f64,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    let result = actor_loop_inner(&name, kernel, &ins, &outs, cores, accel, target_ms, metrics);
+    // End of stream OR error: signal both directions so peers wind down
+    // instead of blocking forever on a dead actor's FIFOs.
+    for (fifo, _) in &ins {
+        fifo.close();
+    }
+    for fifo in &outs {
+        fifo.close();
+    }
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn actor_loop_inner(
+    name: &str,
+    mut kernel: Box<dyn ActorKernel>,
+    ins: &[(Arc<Fifo>, AtrCell)],
+    outs: &[Arc<Fifo>],
+    cores: Arc<CoreSet>,
+    accel: Option<Arc<CoreSet>>,
+    target_ms: f64,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    let mut seq: u64 = 0;
+    'run: loop {
+        // 1. Gather inputs (blocks; None on upstream close).
+        let t_in = Instant::now();
+        let mut inputs: Vec<Vec<Token>> = Vec::with_capacity(ins.len());
+        for (fifo, atr) in ins {
+            let n = atr.get() as usize;
+            match fifo.pop_n(n) {
+                Some(tokens) => inputs.push(tokens),
+                None => break 'run,
+            }
+        }
+        let blocked_in = t_in.elapsed();
+
+        // 2. Fire under a core permit (+ the accelerator queue for compute
+        //    actors), padded to the device cost model.  Lock order is
+        //    always core -> accel, so the two semaphores cannot deadlock.
+        let outcome = {
+            let _core = cores.acquire();
+            let _accel = accel.as_ref().map(|a| a.acquire());
+            let t_fire = Instant::now();
+            let outcome = kernel.fire(&inputs, seq)?;
+            pad_to_target(t_fire.elapsed(), target_ms);
+            outcome
+        };
+        let busy = t_in.elapsed() - blocked_in;
+
+        // 3. Emit outputs (blocks on backpressure; false on consumer gone).
+        let t_out = Instant::now();
+        match outcome {
+            FireOutcome::Stop => break 'run,
+            FireOutcome::Produced(port_payloads) => {
+                anyhow::ensure!(
+                    port_payloads.len() == outs.len(),
+                    "{}: produced {} ports, graph has {}",
+                    name,
+                    port_payloads.len(),
+                    outs.len()
+                );
+                for (port, payloads) in port_payloads.into_iter().enumerate() {
+                    for p in payloads {
+                        if !outs[port].push(Token::new(p, seq)) {
+                            metrics.record(name, busy, blocked_in, t_out.elapsed());
+                            break 'run;
+                        }
+                    }
+                }
+            }
+        }
+        metrics.record(name, busy, blocked_in, t_out.elapsed());
+        seq = seq.wrapping_add(1);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{ActorKind, ActorSpec, AppGraph, RateSpec};
+    use crate::runtime::kernels::{MapKernel, SinkKernel, SourceKernel};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn kmap(
+        entries: Vec<(&str, Box<dyn ActorKernel>)>,
+    ) -> BTreeMap<String, Box<dyn ActorKernel>> {
+        entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+    }
+
+    #[test]
+    fn chain_pipeline_runs_all_frames() {
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let mid = g.add_spa("mid");
+        let snk = g.add_spa("snk");
+        g.connect(src, mid, 8, 2);
+        g.connect(mid, snk, 8, 2);
+        let engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+        let n = Arc::new(AtomicU64::new(0));
+        let report = engine
+            .run(kmap(vec![
+                ("src", Box::new(SourceKernel::new(10, 8, 1, 1))),
+                ("mid", Box::new(MapKernel { f: |b: &[u8]| b.to_vec(), out_ports: 1 })),
+                ("snk", Box::new(SinkKernel::new(n.clone()))),
+            ]))
+            .unwrap();
+        assert_eq!(n.load(Ordering::Relaxed), 10);
+        assert_eq!(report.frames, 10);
+        assert_eq!(report.actors["mid"].firings, 10);
+    }
+
+    #[test]
+    fn branch_and_join_graph() {
+        // src -> a -> join <- b <- src (diamond): both branches carry every
+        // frame; join concatenates.
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let a = g.add_spa("a");
+        let b = g.add_spa("b");
+        let join = g.add_spa("join");
+        let snk = g.add_spa("snk");
+        g.connect(src, a, 4, 2);
+        g.connect(src, b, 4, 2);
+        g.connect(a, join, 4, 2);
+        g.connect(b, join, 4, 2);
+        g.connect(join, snk, 8, 2);
+        let engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+        let n = Arc::new(AtomicU64::new(0));
+        let report = engine
+            .run(kmap(vec![
+                ("src", Box::new(SourceKernel::new(5, 4, 2, 2))),
+                ("a", Box::new(MapKernel { f: |b: &[u8]| b.to_vec(), out_ports: 1 })),
+                ("b", Box::new(MapKernel { f: |b: &[u8]| b.to_vec(), out_ports: 1 })),
+                ("join", Box::new(crate::runtime::kernels::ConcatKernel { out_ports: 1 })),
+                ("snk", Box::new(SinkKernel::new(n.clone()))),
+            ]))
+            .unwrap();
+        assert_eq!(report.frames, 5);
+        assert_eq!(report.actors["join"].firings, 5);
+    }
+
+    #[test]
+    fn missing_kernel_is_an_error() {
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let snk = g.add_spa("snk");
+        g.connect(src, snk, 4, 2);
+        let engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+        let err = engine
+            .run(kmap(vec![("src", Box::new(SourceKernel::new(1, 4, 1, 3)))]))
+            .unwrap_err();
+        assert!(err.to_string().contains("no kernel bound"));
+    }
+
+    #[test]
+    fn device_cost_padding_slows_pipeline() {
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let snk = g.add_spa("snk");
+        g.connect(src, snk, 4, 2);
+        let device = DeviceModel::native("slow").with_cost("src", 5.0);
+        let engine = Engine::new(g, device).unwrap();
+        let n = Arc::new(AtomicU64::new(0));
+        let t0 = Instant::now();
+        let report = engine
+            .run(kmap(vec![
+                ("src", Box::new(SourceKernel::new(10, 4, 1, 4))),
+                ("snk", Box::new(SinkKernel::new(n.clone()))),
+            ]))
+            .unwrap();
+        assert!(t0.elapsed().as_millis() >= 50, "padding not applied");
+        assert!(report.ms_per_frame() >= 5.0);
+    }
+
+    #[test]
+    fn single_core_serializes_two_actors() {
+        // Two 5 ms actors on 1 core: 10 frames take >= ~100 ms; on 2+
+        // cores the pipeline overlaps them (~50 ms + fill).
+        let build = |cores: usize| {
+            let mut g = AppGraph::new();
+            let src = g.add_spa("src");
+            let mid = g.add_spa("mid");
+            let snk = g.add_spa("snk");
+            g.connect(src, mid, 4, 2);
+            g.connect(mid, snk, 4, 2);
+            let mut device = DeviceModel::native("d").with_cost("src", 5.0).with_cost("mid", 5.0);
+            device.cores = cores;
+            let engine = Engine::new(g, device).unwrap();
+            let n = Arc::new(AtomicU64::new(0));
+            let t0 = Instant::now();
+            engine
+                .run(kmap(vec![
+                    ("src", Box::new(SourceKernel::new(10, 4, 1, 5))),
+                    ("mid", Box::new(MapKernel { f: |b: &[u8]| b.to_vec(), out_ports: 1 })),
+                    ("snk", Box::new(SinkKernel::new(n))),
+                ]))
+                .unwrap();
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        let serial = build(1);
+        let parallel = build(4);
+        assert!(serial >= 95.0, "serial {serial} ms");
+        assert!(parallel <= serial * 0.8, "parallel {parallel} vs serial {serial}");
+    }
+
+    #[test]
+    fn variable_rate_downsampler() {
+        // DPG-style: source at rate 1, consumer pops atr=2 per firing
+        // (paired frames), so 10 frames -> 5 firings downstream.
+        let mut g = AppGraph::new();
+        let src = g.add_actor(ActorSpec::new("src", ActorKind::Da).in_dpg(0));
+        let pair = g.add_actor(ActorSpec::new("pair", ActorKind::Dpa).in_dpg(0));
+        let snk = g.add_spa("snk");
+        g.connect_rated(src, pair, 4, 8, RateSpec::variable(1, 2), 0);
+        g.connect(pair, snk, 8, 4);
+        let engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+        // atr defaults to url = 2.
+        let n = Arc::new(AtomicU64::new(0));
+        struct PairKernel;
+        impl ActorKernel for PairKernel {
+            fn fire(&mut self, inputs: &[Vec<Token>], _s: u64) -> Result<FireOutcome> {
+                assert_eq!(inputs[0].len(), 2, "atr=2 consumption");
+                let mut out = inputs[0][0].data.to_vec();
+                out.extend_from_slice(&inputs[0][1].data);
+                Ok(FireOutcome::one_each(vec![out]))
+            }
+        }
+        struct RatedSource(u64, u64);
+        impl ActorKernel for RatedSource {
+            fn fire(&mut self, _i: &[Vec<Token>], _s: u64) -> Result<FireOutcome> {
+                if self.0 >= self.1 {
+                    return Ok(FireOutcome::Stop);
+                }
+                self.0 += 1;
+                // Produce 2 tokens per firing to match atr=2 on the edge.
+                Ok(FireOutcome::Produced(vec![vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]]]))
+            }
+        }
+        let report = engine
+            .run(kmap(vec![
+                ("src", Box::new(RatedSource(0, 5))),
+                ("pair", Box::new(PairKernel)),
+                ("snk", Box::new(SinkKernel::new(n.clone()))),
+            ]))
+            .unwrap();
+        assert_eq!(report.actors["pair"].firings, 5);
+        assert_eq!(n.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn feedback_edge_with_initial_token() {
+        // src -> acc, acc -> acc (state, 1 initial token), acc -> snk.
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let acc = g.add_spa("acc");
+        let snk = g.add_spa("snk");
+        g.connect(src, acc, 4, 2);
+        g.connect_rated(acc, acc, 4, 2, RateSpec::fixed(1), 1);
+        g.connect(acc, snk, 4, 2);
+        struct AccKernel;
+        impl ActorKernel for AccKernel {
+            fn fire(&mut self, inputs: &[Vec<Token>], _s: u64) -> Result<FireOutcome> {
+                // port order: in0 = from src, in1 = state.
+                let x = inputs[0][0].data[0];
+                let state = inputs[1][0].data[0];
+                let new_state = state.wrapping_add(x);
+                Ok(FireOutcome::one_each(vec![
+                    vec![new_state; 4], // to self (state out is port 0: edge order)
+                    vec![new_state; 4],
+                ]))
+            }
+        }
+        let engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+        let n = Arc::new(AtomicU64::new(0));
+        let report = engine
+            .run(kmap(vec![
+                ("src", Box::new(SourceKernel::new(4, 4, 1, 6))),
+                ("acc", Box::new(AccKernel)),
+                ("snk", Box::new(SinkKernel::new(n.clone()))),
+            ]))
+            .unwrap();
+        assert_eq!(report.actors["acc"].firings, 4);
+    }
+}

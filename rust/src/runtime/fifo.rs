@@ -1,0 +1,292 @@
+//! Bounded FIFO buffers (paper §III.D): "actor data exchange over FIFOs is
+//! synchronized by mutex primitives".  Blocking push/pop with Condvar
+//! wake-ups, capacity enforcement, end-of-stream close semantics, and an
+//! occupancy high-water mark (checked against the analyzer's bounds in
+//! tests).
+
+use crate::dataflow::Token;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+#[derive(Debug)]
+struct State {
+    queue: VecDeque<Token>,
+    closed: bool,
+    max_occupancy: usize,
+    // Perf: waiter counts let push/pop skip the condvar notify syscall on
+    // the uncontended fast path (see EXPERIMENTS.md SPerf).
+    waiting_consumers: usize,
+    waiting_producers: usize,
+}
+
+#[derive(Debug)]
+pub struct Fifo {
+    capacity: usize,
+    state: Mutex<State>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl Fifo {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Fifo {
+            capacity,
+            state: Mutex::new(State {
+                queue: VecDeque::with_capacity(capacity),
+                closed: false,
+                max_occupancy: 0,
+                waiting_consumers: 0,
+                waiting_producers: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Pre-load initial tokens (dataflow "delays" on feedback edges).
+    pub fn preload(&self, tokens: Vec<Token>) {
+        let mut s = self.state.lock().unwrap();
+        assert!(s.queue.len() + tokens.len() <= self.capacity);
+        s.queue.extend(tokens);
+        s.max_occupancy = s.max_occupancy.max(s.queue.len());
+        drop(s);
+        self.not_empty.notify_all();
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocking push; returns false if the FIFO was closed by the consumer
+    /// (downstream cancelled — producer should wind down).
+    pub fn push(&self, token: Token) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.queue.len() >= self.capacity && !s.closed {
+            s.waiting_producers += 1;
+            s = self.not_full.wait(s).unwrap();
+            s.waiting_producers -= 1;
+        }
+        if s.closed {
+            return false;
+        }
+        s.queue.push_back(token);
+        let occ = s.queue.len();
+        s.max_occupancy = s.max_occupancy.max(occ);
+        let wake = s.waiting_consumers > 0;
+        drop(s);
+        if wake {
+            self.not_empty.notify_one();
+        }
+        true
+    }
+
+    /// Blocking pop of exactly `n` tokens (the consumer's atr); returns
+    /// None once the FIFO is closed and fewer than `n` remain.
+    pub fn pop_n(&self, n: usize) -> Option<Vec<Token>> {
+        let mut s = self.state.lock().unwrap();
+        while s.queue.len() < n && !s.closed {
+            s.waiting_consumers += 1;
+            s = self.not_empty.wait(s).unwrap();
+            s.waiting_consumers -= 1;
+        }
+        if s.queue.len() < n {
+            return None; // closed with insufficient tokens
+        }
+        let out: Vec<Token> = s.queue.drain(..n).collect();
+        let wake = s.waiting_producers > 0;
+        drop(s);
+        if wake {
+            self.not_full.notify_all();
+        }
+        Some(out)
+    }
+
+    /// Non-blocking pop of up to n tokens (used by drain paths / tests).
+    pub fn try_pop_n(&self, n: usize) -> Option<Vec<Token>> {
+        let mut s = self.state.lock().unwrap();
+        if s.queue.len() < n {
+            return None;
+        }
+        let out: Vec<Token> = s.queue.drain(..n).collect();
+        let wake = s.waiting_producers > 0;
+        drop(s);
+        if wake {
+            self.not_full.notify_all();
+        }
+        Some(out)
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// End-of-stream: wakes all blocked producers and consumers.  Tokens
+    /// already queued remain poppable (pop_n drains the tail).
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    pub fn max_occupancy(&self) -> usize {
+        self.state.lock().unwrap().max_occupancy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn tok(v: u8) -> Token {
+        Token::new(vec![v], v as u64)
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let f = Fifo::new(4);
+        for i in 0..4 {
+            assert!(f.push(tok(i)));
+        }
+        let got = f.pop_n(4).unwrap();
+        assert_eq!(got.iter().map(|t| t.data[0]).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_pop() {
+        let f = Arc::new(Fifo::new(2));
+        f.push(tok(1));
+        f.push(tok(2));
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.push(tok(3)));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(f.len(), 2); // producer is blocked
+        f.pop_n(1).unwrap();
+        assert!(h.join().unwrap());
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let f = Arc::new(Fifo::new(2));
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.pop_n(1));
+        std::thread::sleep(Duration::from_millis(30));
+        f.push(tok(9));
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got[0].data[0], 9);
+    }
+
+    #[test]
+    fn close_unblocks_consumer_with_none() {
+        let f = Arc::new(Fifo::new(2));
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.pop_n(1));
+        std::thread::sleep(Duration::from_millis(30));
+        f.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn close_unblocks_producer_with_false() {
+        let f = Arc::new(Fifo::new(1));
+        f.push(tok(1));
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.push(tok(2)));
+        std::thread::sleep(Duration::from_millis(30));
+        f.close();
+        assert!(!h.join().unwrap());
+    }
+
+    #[test]
+    fn tail_drain_after_close() {
+        let f = Fifo::new(4);
+        f.push(tok(1));
+        f.push(tok(2));
+        f.close();
+        assert_eq!(f.pop_n(2).unwrap().len(), 2);
+        assert!(f.pop_n(1).is_none());
+    }
+
+    #[test]
+    fn multirate_pop() {
+        let f = Fifo::new(8);
+        for i in 0..6 {
+            f.push(tok(i));
+        }
+        assert_eq!(f.pop_n(3).unwrap().len(), 3);
+        assert_eq!(f.try_pop_n(3).unwrap().len(), 3);
+        assert!(f.try_pop_n(1).is_none());
+    }
+
+    #[test]
+    fn max_occupancy_tracks_high_water() {
+        let f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(tok(i));
+        }
+        f.pop_n(4).unwrap();
+        f.push(tok(9));
+        assert_eq!(f.max_occupancy(), 5);
+    }
+
+    #[test]
+    fn preload_initial_tokens() {
+        let f = Fifo::new(2);
+        f.preload(vec![tok(7)]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.pop_n(1).unwrap()[0].data[0], 7);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_tokens() {
+        let f = Arc::new(Fifo::new(4));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let f = f.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        f.push(Token::new(vec![p as u8], i));
+                    }
+                })
+            })
+            .collect();
+        let consumed = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let f = f.clone();
+                let c = consumed.clone();
+                std::thread::spawn(move || {
+                    while f.pop_n(1).is_some() {
+                        c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        // Give consumers time to drain, then close.
+        while !f.is_empty() {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        f.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(consumed.load(std::sync::atomic::Ordering::Relaxed), 200);
+        assert!(f.max_occupancy() <= 4);
+    }
+}

@@ -1,0 +1,292 @@
+//! Actor kernels: the behaviour bound to each dataflow actor.  The paper's
+//! runtime compiles per-actor C/OpenCL behaviours; here a kernel is a Rust
+//! trait object — plain-Rust for "computationally simple" actors, an
+//! XLA/PJRT executable for DNN actors (`xla_exec::XlaKernel`), and socket
+//! TX/RX FIFO endpoints (`net::{TxKernel, RxKernel}`).
+
+use crate::dataflow::Token;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What a firing produced: `outputs[p]` holds the payloads for out-port p
+/// (normally one payload; == atr(p) for variable-rate ports).
+pub enum FireOutcome {
+    Produced(Vec<Vec<Vec<u8>>>),
+    /// Source exhausted / peer closed: the engine closes the out FIFOs.
+    Stop,
+}
+
+impl FireOutcome {
+    /// Rate-1 convenience: one payload per out port.
+    pub fn one_each(payloads: Vec<Vec<u8>>) -> Self {
+        FireOutcome::Produced(payloads.into_iter().map(|p| vec![p]).collect())
+    }
+
+    /// Rate-1 convenience: the same payload replicated to `ports` ports.
+    pub fn replicate(payload: Vec<u8>, ports: usize) -> Self {
+        FireOutcome::Produced((0..ports).map(|_| vec![payload.clone()]).collect())
+    }
+}
+
+pub trait ActorKernel: Send {
+    /// `inputs[p]` = the tokens consumed from in-port p this firing.
+    fn fire(&mut self, inputs: &[Vec<Token>], seq: u64) -> anyhow::Result<FireOutcome>;
+}
+
+// ---------------------------------------------------------------- Source
+
+/// Synthetic camera source: emits `frames` tokens of `token_bytes` f32
+/// data, seeded for reproducibility (substitutes the paper's image
+/// sequences — timing experiments are content-independent).
+pub struct SourceKernel {
+    frames: u64,
+    emitted: u64,
+    token_bytes: usize,
+    out_ports: usize,
+    rng: Rng,
+}
+
+impl SourceKernel {
+    pub fn new(frames: u64, token_bytes: usize, out_ports: usize, seed: u64) -> Self {
+        SourceKernel { frames, emitted: 0, token_bytes, out_ports, rng: Rng::new(seed) }
+    }
+}
+
+impl ActorKernel for SourceKernel {
+    fn fire(&mut self, _inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+        if self.emitted >= self.frames {
+            return Ok(FireOutcome::Stop);
+        }
+        self.emitted += 1;
+        let mut buf = vec![0u8; self.token_bytes];
+        self.rng.fill_f32(&mut buf, 0.0, 1.0);
+        Ok(FireOutcome::replicate(buf, self.out_ports))
+    }
+}
+
+// ------------------------------------------------------------------ Sink
+
+/// Terminal actor: counts frames (shared with the engine's report) and
+/// keeps the last token for inspection by examples/tests.
+pub struct SinkKernel {
+    pub frames_seen: Arc<AtomicU64>,
+    pub last: Option<Vec<u8>>,
+    keep_last: bool,
+}
+
+impl SinkKernel {
+    pub fn new(frames_seen: Arc<AtomicU64>) -> Self {
+        SinkKernel { frames_seen, last: None, keep_last: false }
+    }
+
+    pub fn keeping_last(mut self) -> Self {
+        self.keep_last = true;
+        self
+    }
+}
+
+impl ActorKernel for SinkKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+        self.frames_seen.fetch_add(1, Ordering::Relaxed);
+        if self.keep_last {
+            if let Some(t) = inputs.first().and_then(|p| p.last()) {
+                self.last = Some(t.data.to_vec());
+            }
+        }
+        Ok(FireOutcome::Produced(Vec::new()))
+    }
+}
+
+/// Sink variant that forwards the frame count AND stores per-frame arrival
+/// times (used by the latency example).
+pub struct TimestampSinkKernel {
+    pub frames_seen: Arc<AtomicU64>,
+    pub arrivals: Arc<std::sync::Mutex<Vec<std::time::Instant>>>,
+}
+
+impl ActorKernel for TimestampSinkKernel {
+    fn fire(&mut self, _inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+        self.frames_seen.fetch_add(1, Ordering::Relaxed);
+        self.arrivals.lock().unwrap().push(std::time::Instant::now());
+        Ok(FireOutcome::Produced(Vec::new()))
+    }
+}
+
+// ----------------------------------------------------------- Passthrough
+
+/// Identity actor (the SSD reshape actors: NHWC row-major reshapes are
+/// byte-layout no-ops, exactly why the paper can treat them as cheap).
+pub struct PassthroughKernel {
+    pub out_ports: usize,
+}
+
+impl ActorKernel for PassthroughKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+        let payload = inputs[0][0].data.to_vec();
+        Ok(FireOutcome::replicate(payload, self.out_ports))
+    }
+}
+
+// ---------------------------------------------------------------- Concat
+
+/// Byte-concatenation of all in-ports in port order (SSD ConcatLoc).
+pub struct ConcatKernel {
+    pub out_ports: usize,
+}
+
+impl ActorKernel for ConcatKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+        let total: usize = inputs.iter().map(|p| p[0].len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for port in inputs {
+            out.extend_from_slice(&port[0].data);
+        }
+        Ok(FireOutcome::replicate(out, self.out_ports))
+    }
+}
+
+/// Concat + row-softmax over `classes` columns (SSD ConcatConf+Softmax).
+/// NHWC (H,W,A*C) blobs flatten to (H*W*A, C) rows with no data movement.
+pub struct ConcatSoftmaxKernel {
+    pub classes: usize,
+    pub out_ports: usize,
+}
+
+impl ActorKernel for ConcatSoftmaxKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+        let mut vals: Vec<f32> = Vec::new();
+        for port in inputs {
+            vals.extend(port[0].as_f32());
+        }
+        anyhow::ensure!(vals.len() % self.classes == 0, "ragged softmax rows");
+        for row in vals.chunks_exact_mut(self.classes) {
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        Ok(FireOutcome::replicate(crate::util::tensor::f32_to_bytes(&vals), self.out_ports))
+    }
+}
+
+// ------------------------------------------------------------- Map (test)
+
+/// Apply a pure function to the token payload — used by tests and the DPG
+/// demo to build arbitrary small pipelines.
+pub struct MapKernel<F: FnMut(&[u8]) -> Vec<u8> + Send> {
+    pub f: F,
+    pub out_ports: usize,
+}
+
+impl<F: FnMut(&[u8]) -> Vec<u8> + Send> ActorKernel for MapKernel<F> {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+        let out = (self.f)(&inputs[0][0].data);
+        Ok(FireOutcome::replicate(out, self.out_ports))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(data: Vec<u8>) -> Vec<Vec<Token>> {
+        vec![vec![Token::new(data, 0)]]
+    }
+
+    #[test]
+    fn source_emits_then_stops() {
+        let mut s = SourceKernel::new(2, 8, 1, 42);
+        for _ in 0..2 {
+            match s.fire(&[], 0).unwrap() {
+                FireOutcome::Produced(out) => {
+                    assert_eq!(out.len(), 1);
+                    assert_eq!(out[0][0].len(), 8);
+                }
+                FireOutcome::Stop => panic!("stopped early"),
+            }
+        }
+        assert!(matches!(s.fire(&[], 0).unwrap(), FireOutcome::Stop));
+    }
+
+    #[test]
+    fn source_is_deterministic() {
+        let mut a = SourceKernel::new(1, 16, 1, 7);
+        let mut b = SourceKernel::new(1, 16, 1, 7);
+        let (FireOutcome::Produced(x), FireOutcome::Produced(y)) =
+            (a.fire(&[], 0).unwrap(), b.fire(&[], 0).unwrap())
+        else {
+            panic!()
+        };
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn sink_counts_frames() {
+        let n = Arc::new(AtomicU64::new(0));
+        let mut s = SinkKernel::new(n.clone()).keeping_last();
+        s.fire(&tok(vec![1, 2, 3]), 0).unwrap();
+        s.fire(&tok(vec![4]), 1).unwrap();
+        assert_eq!(n.load(Ordering::Relaxed), 2);
+        assert_eq!(s.last, Some(vec![4]));
+    }
+
+    #[test]
+    fn passthrough_replicates() {
+        let mut p = PassthroughKernel { out_ports: 3 };
+        let FireOutcome::Produced(out) = p.fire(&tok(vec![9, 9]), 0).unwrap() else {
+            panic!()
+        };
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|port| port[0] == vec![9, 9]));
+    }
+
+    #[test]
+    fn concat_in_port_order() {
+        let mut c = ConcatKernel { out_ports: 1 };
+        let inputs = vec![
+            vec![Token::new(vec![1, 2], 0)],
+            vec![Token::new(vec![3], 0)],
+            vec![Token::new(vec![4, 5], 0)],
+        ];
+        let FireOutcome::Produced(out) = c.fire(&inputs, 0).unwrap() else { panic!() };
+        assert_eq!(out[0][0], vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn concat_softmax_rows_sum_to_one() {
+        let mut k = ConcatSoftmaxKernel { classes: 3, out_ports: 1 };
+        let a = Token::from_f32(&[0.0, 1.0, 2.0], 0);
+        let b = Token::from_f32(&[5.0, 5.0, 5.0], 0);
+        let inputs = vec![vec![a], vec![b]];
+        let FireOutcome::Produced(out) = k.fire(&inputs, 0).unwrap() else { panic!() };
+        let vals = crate::util::tensor::bytes_to_f32(&out[0][0]);
+        assert_eq!(vals.len(), 6);
+        let r0: f32 = vals[..3].iter().sum();
+        let r1: f32 = vals[3..].iter().sum();
+        assert!((r0 - 1.0).abs() < 1e-5 && (r1 - 1.0).abs() < 1e-5);
+        // Uniform row stays uniform.
+        assert!((vals[3] - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn concat_softmax_rejects_ragged() {
+        let mut k = ConcatSoftmaxKernel { classes: 4, out_ports: 1 };
+        let a = Token::from_f32(&[0.0, 1.0, 2.0], 0);
+        assert!(k.fire(&[vec![a]], 0).is_err());
+    }
+
+    #[test]
+    fn map_kernel_applies() {
+        let mut m = MapKernel { f: |b: &[u8]| b.iter().map(|x| x + 1).collect(), out_ports: 1 };
+        let FireOutcome::Produced(out) = m.fire(&tok(vec![1, 2]), 0).unwrap() else {
+            panic!()
+        };
+        assert_eq!(out[0][0], vec![2, 3]);
+    }
+}

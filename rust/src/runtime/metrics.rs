@@ -1,0 +1,157 @@
+//! Execution metrics: per-actor firing counts and busy time, plus
+//! pipeline-level frame accounting.  This is what the Explorer's profiling
+//! mode and the figure benches read out.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+pub struct ActorStats {
+    pub firings: u64,
+    pub busy: Duration,
+    /// Time spent blocked pushing to output FIFOs (backpressure).
+    pub blocked_out: Duration,
+    /// Time spent waiting for input tokens.
+    pub blocked_in: Duration,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, ActorStats>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(
+        &self,
+        actor: &str,
+        busy: Duration,
+        blocked_in: Duration,
+        blocked_out: Duration,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.entry(actor.to_string()).or_default();
+        s.firings += 1;
+        s.busy += busy;
+        s.blocked_in += blocked_in;
+        s.blocked_out += blocked_out;
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, ActorStats> {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Result of one engine run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub device: String,
+    pub wall: Duration,
+    /// Frames fully consumed by sink actors (max over sinks).
+    pub frames: u64,
+    pub actors: BTreeMap<String, ActorStats>,
+}
+
+impl RunReport {
+    pub fn ms_per_frame(&self) -> f64 {
+        if self.frames == 0 {
+            return f64::NAN;
+        }
+        self.wall.as_secs_f64() * 1e3 / self.frames as f64
+    }
+
+    /// Sum of per-actor busy time divided by frames: the "device compute
+    /// time per frame" figure, independent of pipeline overlap.
+    pub fn busy_ms_per_frame(&self) -> f64 {
+        if self.frames == 0 {
+            return f64::NAN;
+        }
+        let busy: Duration = self.actors.values().map(|s| s.busy).sum();
+        busy.as_secs_f64() * 1e3 / self.frames as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let actors: Vec<Json> = self
+            .actors
+            .iter()
+            .map(|(name, s)| {
+                Json::from_pairs(vec![
+                    ("actor", Json::from(name.as_str())),
+                    ("firings", Json::from(s.firings)),
+                    ("busy_ms", Json::from(s.busy.as_secs_f64() * 1e3)),
+                    ("blocked_in_ms", Json::from(s.blocked_in.as_secs_f64() * 1e3)),
+                    ("blocked_out_ms", Json::from(s.blocked_out.as_secs_f64() * 1e3)),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("device", Json::from(self.device.as_str())),
+            ("wall_ms", Json::from(self.wall.as_secs_f64() * 1e3)),
+            ("frames", Json::from(self.frames)),
+            ("ms_per_frame", Json::from(self.ms_per_frame())),
+            ("actors", Json::Arr(actors)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates() {
+        let m = Metrics::new();
+        m.record("a", Duration::from_millis(2), Duration::ZERO, Duration::ZERO);
+        m.record("a", Duration::from_millis(3), Duration::from_millis(1), Duration::ZERO);
+        let s = m.snapshot();
+        assert_eq!(s["a"].firings, 2);
+        assert_eq!(s["a"].busy, Duration::from_millis(5));
+        assert_eq!(s["a"].blocked_in, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn report_rates() {
+        let mut actors = BTreeMap::new();
+        actors.insert(
+            "x".to_string(),
+            ActorStats { firings: 10, busy: Duration::from_millis(50), ..Default::default() },
+        );
+        let r = RunReport {
+            device: "n2".into(),
+            wall: Duration::from_millis(200),
+            frames: 10,
+            actors,
+        };
+        assert!((r.ms_per_frame() - 20.0).abs() < 1e-9);
+        assert!((r.busy_ms_per_frame() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = RunReport {
+            device: "d".into(),
+            wall: Duration::from_millis(10),
+            frames: 1,
+            actors: BTreeMap::new(),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("device").unwrap().str().unwrap(), "d");
+        assert_eq!(j.get("frames").unwrap().int().unwrap(), 1);
+    }
+
+    #[test]
+    fn zero_frames_is_nan() {
+        let r = RunReport {
+            device: "d".into(),
+            wall: Duration::from_millis(10),
+            frames: 0,
+            actors: BTreeMap::new(),
+        };
+        assert!(r.ms_per_frame().is_nan());
+    }
+}

@@ -1,0 +1,251 @@
+//! Transmit / receive FIFOs for distributed computing (paper §III.B/D).
+//!
+//! "The transmit and receive FIFOs ... have been implemented by Linux
+//! sockets such that each transmit/receive FIFO pair in an application
+//! graph receives a dedicated TCP port number.  At application
+//! initialization, a receive FIFO blocks and waits for a remote connection
+//! from a matching transmit FIFO" — reproduced verbatim: one TCP port per
+//! cut edge, RX listens, TX connects with retry, processing starts only
+//! after all connections are up.
+//!
+//! Frame format: [u64 seq][u64 send_ts_ns][u32 len][len bytes], all LE.
+//! The send timestamp drives the netsim latency model; serialization
+//! pacing happens in the shared `LinkShaper` before the write.
+
+use crate::dataflow::Token;
+use crate::runtime::kernels::{ActorKernel, FireOutcome};
+use crate::runtime::netsim::LinkShaper;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+const MAX_FRAME: u32 = 64 << 20; // 64 MiB sanity bound
+
+pub fn write_frame(stream: &mut TcpStream, seq: u64, ts_ns: u64, payload: &[u8]) -> Result<()> {
+    let mut header = [0u8; 20];
+    header[..8].copy_from_slice(&seq.to_le_bytes());
+    header[8..16].copy_from_slice(&ts_ns.to_le_bytes());
+    header[16..20].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame; Ok(None) on clean EOF at a frame boundary.
+pub fn read_frame(stream: &mut TcpStream) -> Result<Option<(u64, u64, Vec<u8>)>> {
+    let mut header = [0u8; 20];
+    match stream.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let seq = u64::from_le_bytes(header[..8].try_into().unwrap());
+    let ts = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let len = u32::from_le_bytes(header[16..20].try_into().unwrap());
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds sanity bound");
+    }
+    let mut payload = vec![0u8; len as usize];
+    stream.read_exact(&mut payload).context("frame body")?;
+    Ok(Some((seq, ts, payload)))
+}
+
+/// Connect to a RX FIFO with retry (the RX side may not be listening yet
+/// when both processes launch together).
+pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = std::time::Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true)?;
+                return Ok(s);
+            }
+            Err(e) => {
+                if std::time::Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting TX FIFO to {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Transmit FIFO endpoint: a structural sink of the local subgraph that
+/// serializes every consumed token onto its dedicated TCP connection,
+/// paced by the link shaper.
+pub struct TxKernel {
+    stream: TcpStream,
+    shaper: LinkShaper,
+}
+
+impl TxKernel {
+    pub fn connect(addr: &str, shaper: LinkShaper, timeout: Duration) -> Result<Self> {
+        Ok(TxKernel { stream: connect_with_retry(addr, timeout)?, shaper })
+    }
+}
+
+impl ActorKernel for TxKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
+        for token in &inputs[0] {
+            let ts = self.shaper.send_slot(token.len());
+            if write_frame(&mut self.stream, token.seq, ts, &token.data).is_err() {
+                // Peer gone: wind the local subgraph down cleanly.
+                return Ok(FireOutcome::Stop);
+            }
+        }
+        Ok(FireOutcome::Produced(Vec::new()))
+    }
+}
+
+impl Drop for TxKernel {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Write);
+    }
+}
+
+/// Receive FIFO endpoint: a structural source of the local subgraph.
+/// Blocks on the socket; applies the latency model before releasing each
+/// token downstream; Stop on EOF.
+pub struct RxKernel {
+    stream: TcpStream,
+    shaper: LinkShaper,
+    out_ports: usize,
+}
+
+impl RxKernel {
+    /// Bind + accept exactly one TX peer (called before engine start: "the
+    /// application dataflow processing begins" only once connected).
+    pub fn accept(listener: TcpListener, shaper: LinkShaper, out_ports: usize) -> Result<Self> {
+        let (stream, _peer) = listener.accept().context("RX FIFO accept")?;
+        stream.set_nodelay(true)?;
+        Ok(RxKernel { stream, shaper, out_ports })
+    }
+}
+
+impl ActorKernel for RxKernel {
+    fn fire(&mut self, _inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
+        match read_frame(&mut self.stream)? {
+            None => Ok(FireOutcome::Stop),
+            Some((_seq, ts, payload)) => {
+                self.shaper.delivery_wait(ts);
+                Ok(FireOutcome::replicate(payload, self.out_ports))
+            }
+        }
+    }
+}
+
+/// Bind a listener on 127.0.0.1:`port` (port 0 = ephemeral, for tests).
+pub fn bind_local(port: u16) -> Result<TcpListener> {
+    TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding RX FIFO port {port}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::netsim::LinkModel;
+
+    #[test]
+    fn frame_roundtrip_over_socket() {
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let f1 = read_frame(&mut s).unwrap().unwrap();
+            let f2 = read_frame(&mut s).unwrap().unwrap();
+            let eof = read_frame(&mut s).unwrap();
+            (f1, f2, eof)
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, 1, 111, &[1, 2, 3]).unwrap();
+        write_frame(&mut c, 2, 222, &[]).unwrap();
+        drop(c);
+        let ((s1, t1, p1), (s2, _t2, p2), eof) = h.join().unwrap();
+        assert_eq!((s1, t1, p1), (1, 111, vec![1, 2, 3]));
+        assert_eq!((s2, p2), (2, vec![]));
+        assert!(eof.is_none());
+    }
+
+    #[test]
+    fn tx_rx_kernels_pass_tokens() {
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let shaper = LinkShaper::new(LinkModel::ideal());
+        let s2 = shaper.clone();
+        let rx_h = std::thread::spawn(move || RxKernel::accept(listener, s2, 1).unwrap());
+        let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(2)).unwrap();
+        let mut rx = rx_h.join().unwrap();
+
+        let inputs = vec![vec![Token::new(vec![7, 8, 9], 5)]];
+        tx.fire(&inputs, 0).unwrap();
+        let FireOutcome::Produced(out) = rx.fire(&[], 0).unwrap() else { panic!() };
+        assert_eq!(out[0][0], vec![7, 8, 9]);
+        drop(tx);
+        assert!(matches!(rx.fire(&[], 0).unwrap(), FireOutcome::Stop));
+    }
+
+    #[test]
+    fn connect_with_retry_waits_for_listener() {
+        // Spawn the listener *after* the connect attempt starts.
+        let port = {
+            // reserve an ephemeral port then free it
+            let l = bind_local(0).unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let addr = format!("127.0.0.1:{port}");
+        let a2 = addr.clone();
+        let h = std::thread::spawn(move || connect_with_retry(&a2, Duration::from_secs(3)));
+        std::thread::sleep(Duration::from_millis(100));
+        let listener = TcpListener::bind(&addr).unwrap();
+        let conn = h.join().unwrap();
+        assert!(conn.is_ok());
+        drop(listener);
+    }
+
+    #[test]
+    fn connect_with_retry_times_out() {
+        let r = connect_with_retry("127.0.0.1:1", Duration::from_millis(100));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_frame(&mut s)
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut header = [0u8; 20];
+        header[16..20].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        c.write_all(&header).unwrap();
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn shaped_tx_paces_throughput() {
+        // 1 MB/s, 3 x 50 KB = 150 ms minimum.
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let shaper = LinkShaper::new(LinkModel::new("t", 1.0, 0.0));
+        let s2 = shaper.clone();
+        let rx_h = std::thread::spawn(move || {
+            let mut rx = RxKernel::accept(listener, s2, 1).unwrap();
+            let mut n = 0;
+            while let FireOutcome::Produced(_) = rx.fire(&[], 0).unwrap() {
+                n += 1;
+            }
+            n
+        });
+        let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(2)).unwrap();
+        let t0 = std::time::Instant::now();
+        for i in 0..3 {
+            tx.fire(&[vec![Token::new(vec![0u8; 50_000], i)]], i).unwrap();
+        }
+        let el = t0.elapsed().as_secs_f64() * 1e3;
+        drop(tx);
+        assert_eq!(rx_h.join().unwrap(), 3);
+        assert!(el >= 140.0, "elapsed {el} ms");
+    }
+}

@@ -1,0 +1,202 @@
+//! Network conditioner reproducing the paper's Table-II links on localhost
+//! TCP.  Two effects are modelled independently:
+//!
+//! * **serialization delay** — the sender's wall-clock cost of pushing
+//!   `bytes` through a link of the configured *measured throughput*
+//!   (token-bucket pacing: a shared per-link clock advances by
+//!   bytes/throughput per message, so concurrent TX FIFOs share the pipe
+//!   exactly like sockets sharing one physical link);
+//! * **propagation latency** — each message carries its send timestamp and
+//!   the receiver defers delivery until `ts + latency`, which delays
+//!   pipeline fill but not steady-state throughput (as on a real link).
+
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    pub name: String,
+    /// Measured throughput in bytes/second (Table II "measured").
+    pub throughput_bps: f64,
+    /// One-way latency in milliseconds (Table II "latency").
+    pub latency_ms: f64,
+}
+
+impl LinkModel {
+    pub fn new(name: &str, throughput_mbytes_s: f64, latency_ms: f64) -> Self {
+        LinkModel {
+            name: name.to_string(),
+            throughput_bps: throughput_mbytes_s * 1e6,
+            latency_ms,
+        }
+    }
+
+    /// Time-scaled copy: when experiments run with DeviceModel.time_scale
+    /// = k (sim targets inflated k-fold so real XLA compute fits under
+    /// them), the link must slow down by the same factor to keep the
+    /// compute/communication ratio faithful; reported numbers are divided
+    /// by k afterwards.
+    pub fn scaled(&self, time_scale: f64) -> Self {
+        if self.is_ideal() || time_scale == 1.0 {
+            return self.clone();
+        }
+        LinkModel {
+            name: self.name.clone(),
+            throughput_bps: self.throughput_bps / time_scale,
+            latency_ms: self.latency_ms * time_scale,
+        }
+    }
+
+    /// An unshaped link (localhost native speed).
+    pub fn ideal() -> Self {
+        LinkModel { name: "ideal".into(), throughput_bps: 0.0, latency_ms: 0.0 }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.throughput_bps <= 0.0 && self.latency_ms <= 0.0
+    }
+
+    /// Pure-model transmission time for a message (used by analytic
+    /// benches and tests): serialization + latency.
+    pub fn tx_time_ms(&self, bytes: usize) -> f64 {
+        let ser = if self.throughput_bps > 0.0 {
+            bytes as f64 / self.throughput_bps * 1e3
+        } else {
+            0.0
+        };
+        ser + self.latency_ms
+    }
+
+    pub fn from_json(name: &str, v: &Json) -> anyhow::Result<Self> {
+        Ok(LinkModel {
+            name: name.to_string(),
+            throughput_bps: v.get("throughput_mbytes_s")?.num()? * 1e6,
+            latency_ms: v.get("latency_ms")?.num()?,
+        })
+    }
+}
+
+/// Sender-side pacer: shared by all TX FIFOs mapped onto one link.
+#[derive(Debug, Clone)]
+pub struct LinkShaper {
+    model: LinkModel,
+    /// Virtual time (Instant) until which the link is busy.
+    busy_until: Arc<Mutex<Option<Instant>>>,
+}
+
+impl LinkShaper {
+    pub fn new(model: LinkModel) -> Self {
+        LinkShaper { model, busy_until: Arc::new(Mutex::new(None)) }
+    }
+
+    pub fn model(&self) -> &LinkModel {
+        &self.model
+    }
+
+    /// Block the sender for this message's serialization slot and return
+    /// the timestamp (ns since epoch) to stamp into the frame header.
+    pub fn send_slot(&self, bytes: usize) -> u64 {
+        if self.model.throughput_bps > 0.0 {
+            let ser = Duration::from_secs_f64(bytes as f64 / self.model.throughput_bps);
+            let wake = {
+                let mut busy = self.busy_until.lock().unwrap();
+                let now = Instant::now();
+                let start = busy.map(|b| b.max(now)).unwrap_or(now);
+                let end = start + ser;
+                *busy = Some(end);
+                end
+            };
+            let now = Instant::now();
+            if wake > now {
+                std::thread::sleep(wake - now);
+            }
+        }
+        SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_nanos() as u64
+    }
+
+    /// Receiver-side: wait until `send_ts + latency` has passed.
+    pub fn delivery_wait(&self, send_ts_ns: u64) {
+        if self.model.latency_ms <= 0.0 {
+            return;
+        }
+        let deliver_at = send_ts_ns + (self.model.latency_ms * 1e6) as u64;
+        let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_nanos() as u64;
+        if deliver_at > now {
+            std::thread::sleep(Duration::from_nanos(deliver_at - now));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_time_model_matches_table2() {
+        // N2-i7 Ethernet: 11.2 MB/s, 1.49 ms. Raw vehicle frame = 110592 B.
+        let link = LinkModel::new("n2_i7_eth", 11.2, 1.49);
+        let t = link.tx_time_ms(110592);
+        assert!((t - (110592.0 / 11.2e6 * 1e3 + 1.49)).abs() < 1e-9);
+        assert!(t > 9.8 && t < 12.0);
+    }
+
+    #[test]
+    fn ideal_link_is_free() {
+        let link = LinkModel::ideal();
+        assert!(link.is_ideal());
+        assert_eq!(link.tx_time_ms(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn shaper_paces_to_throughput() {
+        // 10 MB/s; 5 messages of 100 KB = 500 KB -> >= 50 ms.
+        let shaper = LinkShaper::new(LinkModel::new("t", 10.0, 0.0));
+        let t0 = Instant::now();
+        for _ in 0..5 {
+            shaper.send_slot(100_000);
+        }
+        let el = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(el >= 45.0, "elapsed {el} ms");
+        assert!(el < 120.0, "elapsed {el} ms");
+    }
+
+    #[test]
+    fn shaper_shares_pipe_between_threads() {
+        let shaper = LinkShaper::new(LinkModel::new("t", 10.0, 0.0));
+        let t0 = Instant::now();
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let s = shaper.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..3 {
+                        s.send_slot(100_000);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        // 6 x 100 KB at 10 MB/s = 60 ms even with 2 concurrent senders.
+        let el = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(el >= 55.0, "elapsed {el} ms");
+    }
+
+    #[test]
+    fn delivery_wait_enforces_latency() {
+        let shaper = LinkShaper::new(LinkModel::new("t", 0.0, 20.0));
+        let ts = SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_nanos() as u64;
+        let t0 = Instant::now();
+        shaper.delivery_wait(ts);
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn from_json_parses() {
+        let j = Json::parse(r#"{"throughput_mbytes_s": 2.3, "latency_ms": 2.15}"#).unwrap();
+        let l = LinkModel::from_json("n2_i7_wifi", &j).unwrap();
+        assert!((l.throughput_bps - 2.3e6).abs() < 1.0);
+        assert!((l.latency_ms - 2.15).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,306 @@
+//! XLA/PJRT execution service: loads the AOT-compiled per-actor HLO text
+//! artifacts and executes them from the Rust hot path.
+//!
+//! The `xla` crate's client types are `Rc`-based (not `Send`), so a
+//! dedicated service thread owns the `PjRtClient`, all compiled
+//! executables and the resident weight literals; actor threads submit
+//! requests over an mpsc channel and block on a reply channel.  This also
+//! models the paper's accelerator semantics: one GPU per device, actors
+//! queueing work onto it ("GPU support is deeply in-built ... FIFOs
+//! interconnecting CPU and GPU mapped actors transparently take care of
+//! GPU memory management and data transfers" — here the service thread
+//! owns literal conversion both ways).
+//!
+//! HLO *text* (not serialized proto) is the interchange format — see
+//! aot.py and /opt/xla-example/README.md for the 64-bit-id rationale.
+
+use crate::models::manifest::{HloEntry, ModelMeta};
+use crate::util::tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+/// Which artifact variant to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Pure-jnp lowering (timing-fidelity default).
+    Jnp,
+    /// Pallas-kernel lowering (interpret=True); only some actors have it.
+    Pallas,
+}
+
+struct Request {
+    actor: String,
+    inputs: Vec<Vec<u8>>,
+    reply: mpsc::Sender<Result<Vec<u8>>>,
+}
+
+/// Cloneable handle to the service thread.
+#[derive(Clone)]
+pub struct XlaService {
+    tx: mpsc::Sender<Request>,
+}
+
+impl XlaService {
+    /// Spawn the service: compiles every HLO entry of `model` (with the
+    /// requested variant where available) before returning.
+    pub fn spawn(artifacts: &Path, model: &ModelMeta, variant: Variant) -> Result<XlaService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let artifacts = artifacts.to_path_buf();
+        let entries: Vec<HloEntry> =
+            model.hlo_order.iter().map(|n| model.hlo_entries[n].clone()).collect();
+        std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || service_main(artifacts, entries, variant, rx, ready_tx))
+            .context("spawning xla service")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("xla service died during startup"))??;
+        Ok(XlaService { tx })
+    }
+
+    /// Execute one actor with raw f32-LE input buffers; returns the raw
+    /// f32-LE output buffer.  Blocking round-trip.
+    pub fn execute(&self, actor: &str, inputs: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request { actor: actor.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow!("xla service gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+    in_shapes: Vec<Vec<usize>>,
+    out_bytes: usize,
+}
+
+fn service_main(
+    artifacts: PathBuf,
+    entries: Vec<HloEntry>,
+    variant: Variant,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = || -> Result<BTreeMap<String, Compiled>> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let mut map = BTreeMap::new();
+        for e in &entries {
+            let rel = match (variant, &e.hlo_pallas) {
+                (Variant::Pallas, Some(p)) => p.clone(),
+                (Variant::Pallas, None) => e.hlo.clone(), // fall back
+                (Variant::Jnp, _) => e.hlo.clone(),
+            };
+            let path = artifacts.join(&rel);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|err| anyhow!("loading {}: {err:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|err| anyhow!("compiling {}: {err:?}", rel))?;
+            let mut weights = Vec::new();
+            for w in &e.weights {
+                let n = tensor::numel(&w.shape);
+                let vals = tensor::load_f32_bin(&artifacts.join(&w.file), n)?;
+                let dims: Vec<i64> = w.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&vals)
+                    .reshape(&dims)
+                    .map_err(|err| anyhow!("reshaping weight {}: {err:?}", w.file))?;
+                weights.push(lit);
+            }
+            map.insert(
+                e.name.clone(),
+                Compiled { exe, weights, in_shapes: e.in_shapes.clone(), out_bytes: e.out_bytes },
+            );
+        }
+        Ok(map)
+    };
+
+    let compiled = match setup() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        let result = run_one(&compiled, &req.actor, &req.inputs);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn run_one(compiled: &BTreeMap<String, Compiled>, actor: &str, inputs: &[Vec<u8>]) -> Result<Vec<u8>> {
+    let c = compiled
+        .get(actor)
+        .ok_or_else(|| anyhow!("actor {actor} has no compiled executable"))?;
+    anyhow::ensure!(
+        inputs.len() == c.in_shapes.len(),
+        "{actor}: got {} inputs, expected {}",
+        inputs.len(),
+        c.in_shapes.len()
+    );
+    let mut args: Vec<xla::Literal> = Vec::with_capacity(inputs.len() + c.weights.len());
+    for (buf, shape) in inputs.iter().zip(&c.in_shapes) {
+        let n = tensor::numel(shape);
+        anyhow::ensure!(
+            buf.len() == n * 4,
+            "{actor}: input has {} bytes, shape {:?} needs {}",
+            buf.len(),
+            shape,
+            n * 4
+        );
+        // Token payloads are already the literal's wire format (LE f32);
+        // build the literal straight from the bytes (perf pass: saves the
+        // bytes -> Vec<f32> -> reshape round-trip per firing).
+        args.push(
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                shape,
+                buf,
+            )
+            .map_err(|e| anyhow!("{actor}: input literal: {e:?}"))?,
+        );
+    }
+    for w in &c.weights {
+        args.push(w.clone());
+    }
+    let arg_refs: Vec<&xla::Literal> = args.iter().collect();
+    let result = c
+        .exe
+        .execute::<&xla::Literal>(&arg_refs)
+        .map_err(|e| anyhow!("{actor}: execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("{actor}: to_literal: {e:?}"))?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = result.to_tuple1().map_err(|e| anyhow!("{actor}: tuple: {e:?}"))?;
+    let vals = out.to_vec::<f32>().map_err(|e| anyhow!("{actor}: to_vec: {e:?}"))?;
+    let bytes = tensor::f32_to_bytes(&vals);
+    anyhow::ensure!(
+        bytes.len() == c.out_bytes,
+        "{actor}: output {} bytes, manifest says {}",
+        bytes.len(),
+        c.out_bytes
+    );
+    Ok(bytes)
+}
+
+/// ActorKernel adapter: one DNN actor backed by the service.
+pub struct XlaKernel {
+    service: XlaService,
+    actor: String,
+    /// Token size per out port: ports whose token size differs from the
+    /// result (SSD's 16-byte priorbox shape-descriptor edges) get zeros.
+    out_token_bytes: Vec<usize>,
+}
+
+impl XlaKernel {
+    pub fn new(service: XlaService, actor: &str, out_token_bytes: Vec<usize>) -> Self {
+        XlaKernel { service, actor: actor.to_string(), out_token_bytes }
+    }
+}
+
+impl crate::runtime::kernels::ActorKernel for XlaKernel {
+    fn fire(
+        &mut self,
+        inputs: &[Vec<crate::dataflow::Token>],
+        _seq: u64,
+    ) -> Result<crate::runtime::kernels::FireOutcome> {
+        let bufs: Vec<Vec<u8>> = inputs.iter().map(|p| p[0].data.to_vec()).collect();
+        let result = self.service.execute(&self.actor, bufs)?;
+        let outs: Vec<Vec<Vec<u8>>> = self
+            .out_token_bytes
+            .iter()
+            .map(|&tb| {
+                if tb == result.len() {
+                    vec![result.clone()]
+                } else {
+                    // Shape-descriptor edge (content-independent consumer).
+                    vec![vec![0u8; tb]]
+                }
+            })
+            .collect();
+        Ok(crate::runtime::kernels::FireOutcome::Produced(outs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn vehicle_l45_executes_and_is_distribution() {
+        let Some(m) = manifest() else { return };
+        let model = m.model("vehicle").unwrap();
+        let svc = XlaService::spawn(&m.root, model, Variant::Jnp).unwrap();
+        let input = tensor::f32_to_bytes(&vec![0.5f32; 100]);
+        let out = svc.execute("l45", vec![input]).unwrap();
+        let vals = tensor::bytes_to_f32(&out);
+        assert_eq!(vals.len(), 4);
+        let s: f32 = vals.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "softmax sum {s}");
+    }
+
+    #[test]
+    fn vehicle_chain_shapes_flow() {
+        let Some(m) = manifest() else { return };
+        let model = m.model("vehicle").unwrap();
+        let svc = XlaService::spawn(&m.root, model, Variant::Jnp).unwrap();
+        let mut buf = tensor::f32_to_bytes(&vec![0.1f32; 96 * 96 * 3]);
+        for (actor, out_len) in
+            [("l1", 48 * 48 * 32), ("l2", 24 * 24 * 32), ("l3", 100), ("l45", 4)]
+        {
+            buf = svc.execute(actor, vec![buf]).unwrap();
+            assert_eq!(buf.len(), out_len * 4, "{actor}");
+        }
+    }
+
+    #[test]
+    fn pallas_variant_matches_jnp_variant() {
+        let Some(m) = manifest() else { return };
+        let model = m.model("vehicle").unwrap();
+        let jnp = XlaService::spawn(&m.root, model, Variant::Jnp).unwrap();
+        let pal = XlaService::spawn(&m.root, model, Variant::Pallas).unwrap();
+        let input = {
+            let mut rng = crate::util::rng::Rng::new(3);
+            let mut b = vec![0u8; 96 * 96 * 3 * 4];
+            rng.fill_f32(&mut b, 0.0, 1.0);
+            b
+        };
+        let a = tensor::bytes_to_f32(&jnp.execute("l1", vec![input.clone()]).unwrap());
+        let b = tensor::bytes_to_f32(&pal.execute("l1", vec![input]).unwrap());
+        assert_eq!(a.len(), b.len());
+        let max_diff = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "pallas vs jnp max diff {max_diff}");
+    }
+
+    #[test]
+    fn bad_input_size_rejected() {
+        let Some(m) = manifest() else { return };
+        let model = m.model("vehicle").unwrap();
+        let svc = XlaService::spawn(&m.root, model, Variant::Jnp).unwrap();
+        assert!(svc.execute("l3", vec![vec![0u8; 12]]).is_err());
+        assert!(svc.execute("nonexistent", vec![]).is_err());
+    }
+}

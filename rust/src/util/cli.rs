@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (no clap in the vendored set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and a usage printer.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit arg list (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(body.to_string(), v);
+                } else {
+                    args.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse() -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.str_opt(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error if unknown flags are present (catches typos in scripts).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn key_value_styles() {
+        // NOTE: `--flag value`-style always binds the following non-flag
+        // token as the value, so boolean flags must come last or use
+        // `--flag=true`.
+        let a = parse(&["--x", "1", "--y=2", "pos", "--flag"]);
+        assert_eq!(a.str_opt("x"), Some("1"));
+        assert_eq!(a.str_opt("y"), Some("2"));
+        assert!(a.bool_flag("flag"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n", "42", "--r", "1.5"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert_eq!(a.f64_or("r", 0.0).unwrap(), 1.5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.f64_or("n", 0.0).is_ok());
+        let bad = parse(&["--n", "xyz"]);
+        assert!(bad.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn require_and_check_known() {
+        let a = parse(&["--model", "vehicle"]);
+        assert_eq!(a.require("model").unwrap(), "vehicle");
+        assert!(a.require("missing").is_err());
+        assert!(a.check_known(&["model"]).is_ok());
+        assert!(a.check_known(&["other"]).is_err());
+    }
+}

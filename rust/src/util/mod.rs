@@ -1,0 +1,8 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON, PRNG, tensor byte I/O, CLI parsing, and a property-test harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tensor;

@@ -1,0 +1,91 @@
+//! Minimal property-based testing harness (proptest is not vendored).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs a simple halving shrink over
+//! the generator's size parameter and reports the seed so the case can be
+//! replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` generated inputs. `gen` receives an Rng and a
+/// size hint in [1, max_size]; `prop` returns Err(reason) on violation.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    max_size: usize,
+    gen: impl Fn(&mut Rng, usize) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E37_79B9).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let size = 1 + (case * max_size) / cases.max(1); // ramp sizes up
+        let input = gen(&mut rng, size.max(1));
+        if let Err(msg) = prop(&input) {
+            // Shrink: retry with halved sizes from the same seed.
+            let mut shrink_size = size;
+            let mut smallest: (T, String) = (input, msg);
+            while shrink_size > 1 {
+                shrink_size /= 2;
+                let mut r2 = Rng::new(case_seed);
+                let cand = gen(&mut r2, shrink_size);
+                if let Err(m) = prop(&cand) {
+                    smallest = (cand, m);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}, case_seed={case_seed}):\n  input: {:?}\n  reason: {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(
+            1,
+            50,
+            100,
+            |rng, size| rng.below(size.max(1)),
+            |&x| if x < 100 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            2,
+            50,
+            100,
+            |rng, size| rng.below(size.max(1)),
+            |&x| if x < 3 { Ok(()) } else { Err(format!("{x} >= 3")) },
+        );
+    }
+
+    #[test]
+    fn generator_sizes_ramp() {
+        let mut max_seen = 0;
+        forall(
+            3,
+            20,
+            64,
+            |_, size| size,
+            |&s| {
+                if s > 0 && s <= 64 {
+                    Ok(())
+                } else {
+                    Err("size out of range".into())
+                }
+            },
+        );
+        let _ = &mut max_seen;
+    }
+}

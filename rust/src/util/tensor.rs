@@ -1,0 +1,69 @@
+//! Tensor byte-buffer helpers: the runtime moves tokens as raw little-endian
+//! f32 buffers (exactly what the AOT weight `.bin` files contain and what
+//! the PJRT literals are built from).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Load a raw little-endian f32 tensor file emitted by `aot.py`.
+pub fn load_f32_bin(path: &Path, expected_elems: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expected_elems * 4 {
+        bail!(
+            "{}: expected {} f32 elems ({} bytes), file has {} bytes",
+            path.display(),
+            expected_elems,
+            expected_elems * 4,
+            bytes.len()
+        );
+    }
+    Ok(bytes_to_f32(&bytes))
+}
+
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0);
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+pub fn f32_to_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Number of elements implied by a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_bytes() {
+        let vals = vec![0.0f32, -1.5, 3.25, f32::MAX, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&vals)), vals);
+    }
+
+    #[test]
+    fn numel_products() {
+        assert_eq!(numel(&[96, 96, 3]), 27648);
+        assert_eq!(numel(&[]), 1);
+    }
+
+    #[test]
+    fn load_f32_bin_checks_size() {
+        let dir = std::env::temp_dir().join("ep_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        std::fs::write(&p, f32_to_bytes(&[1.0, 2.0])).unwrap();
+        assert_eq!(load_f32_bin(&p, 2).unwrap(), vec![1.0, 2.0]);
+        assert!(load_f32_bin(&p, 3).is_err());
+    }
+}

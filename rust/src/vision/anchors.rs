@@ -1,0 +1,158 @@
+//! SSD anchor (prior box) generation — the PriorBox actors of Fig. 3.
+//!
+//! Standard SSD parametrization: 6 feature maps, scales linearly spaced in
+//! [0.2, 0.95], aspect ratios {1, 2, 1/2} for 3-anchor maps and
+//! {1, 2, 1/2, 3, 1/3, sqrt(s_k s_{k+1})} for 6-anchor maps.  Anchors are
+//! (cx, cy, w, h), normalized to [0, 1], clipped.
+
+pub const SCALE_MIN: f32 = 0.2;
+pub const SCALE_MAX: f32 = 0.95;
+pub const NUM_MAPS: usize = 6;
+
+/// Scale of feature map k (0-based) out of NUM_MAPS.
+pub fn scale(k: usize) -> f32 {
+    if NUM_MAPS == 1 {
+        return SCALE_MIN;
+    }
+    SCALE_MIN + (SCALE_MAX - SCALE_MIN) * k as f32 / (NUM_MAPS as f32 - 1.0)
+}
+
+/// Anchor (w, h) pairs for map k with `num_anchors` per cell.
+pub fn anchor_dims(k: usize, num_anchors: usize) -> Vec<(f32, f32)> {
+    let s = scale(k);
+    let s_next = if k + 1 < NUM_MAPS { scale(k + 1) } else { 1.0 };
+    let mut dims = vec![
+        (s, s),                                   // ratio 1
+        (s * 2.0f32.sqrt(), s / 2.0f32.sqrt()),   // ratio 2
+        (s / 2.0f32.sqrt(), s * 2.0f32.sqrt()),   // ratio 1/2
+    ];
+    if num_anchors >= 6 {
+        dims.push((s * 3.0f32.sqrt(), s / 3.0f32.sqrt())); // ratio 3
+        dims.push((s / 3.0f32.sqrt(), s * 3.0f32.sqrt())); // ratio 1/3
+        dims.push(((s * s_next).sqrt(), (s * s_next).sqrt())); // s'
+    }
+    dims.truncate(num_anchors);
+    dims
+}
+
+/// All anchors of feature map k with grid (fh, fw): (fh*fw*A) x 4 flat
+/// (cx, cy, w, h) f32s, row-major over (y, x, anchor).
+pub fn gen_anchors(k: usize, fh: usize, fw: usize, num_anchors: usize) -> Vec<f32> {
+    let dims = anchor_dims(k, num_anchors);
+    let mut out = Vec::with_capacity(fh * fw * num_anchors * 4);
+    for y in 0..fh {
+        for x in 0..fw {
+            let cx = (x as f32 + 0.5) / fw as f32;
+            let cy = (y as f32 + 0.5) / fh as f32;
+            for &(w, h) in &dims {
+                out.push(cx.clamp(0.0, 1.0));
+                out.push(cy.clamp(0.0, 1.0));
+                out.push(w.min(1.0));
+                out.push(h.min(1.0));
+            }
+        }
+    }
+    out
+}
+
+/// SSD box decoding (the BoxDecode actor): loc deltas + anchors -> corner
+/// boxes (x1, y1, x2, y2).  Variances 0.1 (center) / 0.2 (size).
+pub const VAR_CENTER: f32 = 0.1;
+pub const VAR_SIZE: f32 = 0.2;
+
+pub fn decode_boxes(locs: &[f32], anchors: &[f32]) -> Vec<f32> {
+    assert_eq!(locs.len(), anchors.len());
+    assert_eq!(locs.len() % 4, 0);
+    let n = locs.len() / 4;
+    let mut out = Vec::with_capacity(locs.len());
+    for i in 0..n {
+        let (dx, dy, dw, dh) = (locs[4 * i], locs[4 * i + 1], locs[4 * i + 2], locs[4 * i + 3]);
+        let (acx, acy, aw, ah) =
+            (anchors[4 * i], anchors[4 * i + 1], anchors[4 * i + 2], anchors[4 * i + 3]);
+        let cx = acx + dx * VAR_CENTER * aw;
+        let cy = acy + dy * VAR_CENTER * ah;
+        let w = aw * (dw * VAR_SIZE).clamp(-10.0, 10.0).exp();
+        let h = ah * (dh * VAR_SIZE).clamp(-10.0, 10.0).exp();
+        out.push((cx - w / 2.0).clamp(0.0, 1.0));
+        out.push((cy - h / 2.0).clamp(0.0, 1.0));
+        out.push((cx + w / 2.0).clamp(0.0, 1.0));
+        out.push((cy + h / 2.0).clamp(0.0, 1.0));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_span_min_max() {
+        assert!((scale(0) - SCALE_MIN).abs() < 1e-6);
+        assert!((scale(5) - SCALE_MAX).abs() < 1e-6);
+        for k in 0..5 {
+            assert!(scale(k) < scale(k + 1));
+        }
+    }
+
+    #[test]
+    fn anchor_counts_match_fig3() {
+        // 19^2*3 + 10^2*6 + 5^2*6 + 3^2*6 + 2^2*6 + 1*6 = 1917 anchors.
+        let cfg = [(19, 3), (10, 6), (5, 6), (3, 6), (2, 6), (1, 6)];
+        let total: usize = cfg
+            .iter()
+            .enumerate()
+            .map(|(k, &(f, a))| gen_anchors(k, f, f, a).len() / 4)
+            .sum();
+        assert_eq!(total, 1917);
+    }
+
+    #[test]
+    fn ratio1_anchor_is_square() {
+        let dims = anchor_dims(0, 3);
+        assert!((dims[0].0 - dims[0].1).abs() < 1e-6);
+        // ratio-2 anchor is wider than tall:
+        assert!(dims[1].0 > dims[1].1);
+        assert!(dims[2].0 < dims[2].1);
+    }
+
+    #[test]
+    fn anchors_centered_in_cells() {
+        let a = gen_anchors(0, 2, 2, 3);
+        // First cell center = (0.25, 0.25).
+        assert!((a[0] - 0.25).abs() < 1e-6 && (a[1] - 0.25).abs() < 1e-6);
+        // Last cell center = (0.75, 0.75).
+        let last = &a[a.len() - 4..];
+        assert!((last[0] - 0.75).abs() < 1e-6 && (last[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_deltas_decode_to_anchor() {
+        let anchors = gen_anchors(1, 3, 3, 6);
+        let locs = vec![0.0f32; anchors.len()];
+        let boxes = decode_boxes(&locs, &anchors);
+        for i in 0..anchors.len() / 4 {
+            let (cx, cy, w, h) =
+                (anchors[4 * i], anchors[4 * i + 1], anchors[4 * i + 2], anchors[4 * i + 3]);
+            let (x1, y1, x2, y2) =
+                (boxes[4 * i], boxes[4 * i + 1], boxes[4 * i + 2], boxes[4 * i + 3]);
+            assert!((x1 - (cx - w / 2.0).clamp(0.0, 1.0)).abs() < 1e-6);
+            assert!((y2 - (cy + h / 2.0).clamp(0.0, 1.0)).abs() < 1e-6);
+            assert!((x2 - x1) <= 1.0 && (y2 - y1) <= 1.0);
+        }
+    }
+
+    #[test]
+    fn decode_is_monotone_in_size_delta() {
+        let anchors = vec![0.5, 0.5, 0.2, 0.2];
+        let small = decode_boxes(&[0.0, 0.0, -1.0, -1.0], &anchors);
+        let big = decode_boxes(&[0.0, 0.0, 1.0, 1.0], &anchors);
+        assert!((small[2] - small[0]) < (big[2] - big[0]));
+    }
+
+    #[test]
+    fn boxes_clipped_to_unit() {
+        let anchors = vec![0.01, 0.01, 0.9, 0.9];
+        let boxes = decode_boxes(&[0.0, 0.0, 5.0, 5.0], &anchors);
+        assert!(boxes.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,193 @@
+//! Dataflow kernels for the SSD post-processing actors (the paper's
+//! "plain C" aux actors): PriorBox, BoxDecode, NMS, Tracker.
+
+use super::anchors::{decode_boxes, gen_anchors};
+use super::nms::{detections_to_token, nms, token_to_detections, MAX_DETS};
+use super::tracker::IouTracker;
+use crate::dataflow::Token;
+use crate::runtime::kernels::{ActorKernel, FireOutcome};
+use crate::util::tensor;
+use anyhow::Result;
+
+/// PriorBox actor: consumes the 16-byte shape-descriptor token from its
+/// tap and emits the (content-independent, precomputed) anchor tensor.
+pub struct PriorBoxKernel {
+    anchors_bytes: Vec<u8>,
+    out_ports: usize,
+}
+
+impl PriorBoxKernel {
+    pub fn new(map_index: usize, fh: usize, fw: usize, num_anchors: usize, out_ports: usize) -> Self {
+        let anchors = gen_anchors(map_index, fh, fw, num_anchors);
+        PriorBoxKernel { anchors_bytes: tensor::f32_to_bytes(&anchors), out_ports }
+    }
+}
+
+impl ActorKernel for PriorBoxKernel {
+    fn fire(&mut self, _inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
+        Ok(FireOutcome::replicate(self.anchors_bytes.clone(), self.out_ports))
+    }
+}
+
+/// BoxDecode actor: in-ports [prior0..prior5, concat_loc] (edge insertion
+/// order in the manifest); concatenates the per-map anchors and decodes.
+pub struct BoxDecodeKernel {
+    pub out_ports: usize,
+}
+
+impl ActorKernel for BoxDecodeKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
+        anyhow::ensure!(inputs.len() >= 2, "box_decode needs priors + locs");
+        let locs = inputs[inputs.len() - 1][0].as_f32();
+        let mut anchors = Vec::with_capacity(locs.len());
+        for port in &inputs[..inputs.len() - 1] {
+            anchors.extend(port[0].as_f32());
+        }
+        anyhow::ensure!(
+            anchors.len() == locs.len(),
+            "anchors {} vs locs {}",
+            anchors.len(),
+            locs.len()
+        );
+        let boxes = decode_boxes(&locs, &anchors);
+        Ok(FireOutcome::replicate(tensor::f32_to_bytes(&boxes), self.out_ports))
+    }
+}
+
+/// NMS actor: in-ports [scores (softmaxed), boxes].
+pub struct NmsKernel {
+    pub num_classes: usize,
+    pub score_thresh: f32,
+    pub iou_thresh: f32,
+    pub out_ports: usize,
+}
+
+impl NmsKernel {
+    pub fn ssd(num_classes: usize, out_ports: usize) -> Self {
+        // With random weights the post-softmax scores are near-uniform
+        // (~1/21); the threshold is set just above that so a plausible
+        // handful of detections flows per frame, exercising NMS + tracker.
+        NmsKernel {
+            num_classes,
+            score_thresh: 1.05 / num_classes as f32,
+            iou_thresh: 0.5,
+            out_ports,
+        }
+    }
+}
+
+impl ActorKernel for NmsKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
+        let scores = inputs[0][0].as_f32();
+        let boxes = inputs[1][0].as_f32();
+        let dets = nms(
+            &scores,
+            &boxes,
+            self.num_classes,
+            self.score_thresh,
+            self.iou_thresh,
+            MAX_DETS,
+        );
+        Ok(FireOutcome::replicate(detections_to_token(&dets, MAX_DETS), self.out_ports))
+    }
+}
+
+/// Tracker actor: detections in, track token out.
+pub struct TrackerKernel {
+    tracker: IouTracker,
+    pub out_ports: usize,
+}
+
+impl TrackerKernel {
+    pub fn new(out_ports: usize) -> Self {
+        TrackerKernel { tracker: IouTracker::new(0.3, 3), out_ports }
+    }
+}
+
+impl ActorKernel for TrackerKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
+        let dets = token_to_detections(&inputs[0][0].data);
+        self.tracker.update(&dets);
+        Ok(FireOutcome::replicate(self.tracker.to_token(), self.out_ports))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fire1(k: &mut dyn ActorKernel, inputs: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        let toks: Vec<Vec<Token>> =
+            inputs.into_iter().map(|b| vec![Token::new(b, 0)]).collect();
+        match k.fire(&toks, 0).unwrap() {
+            FireOutcome::Produced(p) => p.into_iter().map(|mut v| v.remove(0)).collect(),
+            FireOutcome::Stop => panic!("unexpected stop"),
+        }
+    }
+
+    #[test]
+    fn priorbox_emits_expected_size() {
+        let mut k = PriorBoxKernel::new(0, 19, 19, 3, 1);
+        let out = fire1(&mut k, vec![vec![0u8; 16]]);
+        assert_eq!(out[0].len(), 19 * 19 * 3 * 4 * 4);
+    }
+
+    #[test]
+    fn box_decode_pipes_priors_and_locs() {
+        // 2 maps of 1 anchor each + matching loc deltas.
+        let a0 = tensor::f32_to_bytes(&[0.5, 0.5, 0.2, 0.2]);
+        let a1 = tensor::f32_to_bytes(&[0.3, 0.3, 0.1, 0.1]);
+        let locs = tensor::f32_to_bytes(&[0.0; 8]);
+        let mut k = BoxDecodeKernel { out_ports: 1 };
+        let out = fire1(&mut k, vec![a0, a1, locs]);
+        let boxes = tensor::bytes_to_f32(&out[0]);
+        assert_eq!(boxes.len(), 8);
+        assert!((boxes[0] - 0.4).abs() < 1e-6); // 0.5 - 0.2/2
+    }
+
+    #[test]
+    fn box_decode_rejects_mismatch() {
+        let a0 = tensor::f32_to_bytes(&[0.5, 0.5, 0.2, 0.2]);
+        let locs = tensor::f32_to_bytes(&[0.0; 12]);
+        let mut k = BoxDecodeKernel { out_ports: 1 };
+        let toks = vec![vec![Token::new(a0, 0)], vec![Token::new(locs, 0)]];
+        assert!(k.fire(&toks, 0).is_err());
+    }
+
+    #[test]
+    fn nms_kernel_end_to_end() {
+        let scores = tensor::f32_to_bytes(&[0.1, 0.9, 0.8, 0.2]); // 2 boxes, 2 classes
+        let boxes = tensor::f32_to_bytes(&[0.1, 0.1, 0.4, 0.4, 0.6, 0.6, 0.9, 0.9]);
+        let mut k = NmsKernel { num_classes: 2, score_thresh: 0.5, iou_thresh: 0.5, out_ports: 1 };
+        let out = fire1(&mut k, vec![scores, boxes]);
+        let dets = token_to_detections(&out[0]);
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].class, 1);
+    }
+
+    #[test]
+    fn tracker_kernel_assigns_stable_ids() {
+        let mut k = TrackerKernel::new(1);
+        let d1 = detections_to_token(
+            &[super::super::nms::Detection { class: 1, score: 0.9, bbox: [0.1, 0.1, 0.3, 0.3] }],
+            MAX_DETS,
+        );
+        let o1 = fire1(&mut k, vec![d1]);
+        let d2 = detections_to_token(
+            &[super::super::nms::Detection { class: 1, score: 0.9, bbox: [0.12, 0.12, 0.32, 0.32] }],
+            MAX_DETS,
+        );
+        let o2 = fire1(&mut k, vec![d2]);
+        let t1 = tensor::bytes_to_f32(&o1[0]);
+        let t2 = tensor::bytes_to_f32(&o2[0]);
+        assert_eq!(t1[0], 1.0);
+        assert_eq!(t2[0], 1.0); // same id across frames
+    }
+
+    #[test]
+    fn ssd_nms_threshold_above_uniform() {
+        let k = NmsKernel::ssd(21, 1);
+        assert!(k.score_thresh > 1.0 / 21.0);
+        assert!(k.score_thresh < 2.0 / 21.0);
+    }
+}

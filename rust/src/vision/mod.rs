@@ -1,0 +1,8 @@
+//! Vision post-processing substrate for the SSD object-tracking use case:
+//! anchors + box decoding, non-maximum suppression, IoU tracking, and
+//! their dataflow kernels.
+
+pub mod anchors;
+pub mod kernels;
+pub mod nms;
+pub mod tracker;

@@ -1,0 +1,198 @@
+//! Non-maximum suppression (one of the paper's 6 aux actors).
+//!
+//! Per-class greedy NMS over decoded boxes + softmax scores, emitting a
+//! fixed-size detection token: MAX_DETS x (class, score, x1, y1, x2, y2)
+//! f32s, zero-padded — fixed token size is what lets the dataflow edge
+//! carry it (tokens are "data packets of pre-defined size").
+
+pub const MAX_DETS: usize = 100;
+pub const DET_FLOATS: usize = 6;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Detection {
+    pub class: usize,
+    pub score: f32,
+    pub bbox: [f32; 4], // x1, y1, x2, y2
+}
+
+pub fn iou(a: &[f32; 4], b: &[f32; 4]) -> f32 {
+    let x1 = a[0].max(b[0]);
+    let y1 = a[1].max(b[1]);
+    let x2 = a[2].min(b[2]);
+    let y2 = a[3].min(b[3]);
+    let inter = (x2 - x1).max(0.0) * (y2 - y1).max(0.0);
+    let area_a = (a[2] - a[0]).max(0.0) * (a[3] - a[1]).max(0.0);
+    let area_b = (b[2] - b[0]).max(0.0) * (b[3] - b[1]).max(0.0);
+    let union = area_a + area_b - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// scores: (N, num_classes) row-major with class 0 = background;
+/// boxes: (N, 4).  Returns detections sorted by descending score.
+pub fn nms(
+    scores: &[f32],
+    boxes: &[f32],
+    num_classes: usize,
+    score_thresh: f32,
+    iou_thresh: f32,
+    max_dets: usize,
+) -> Vec<Detection> {
+    assert_eq!(boxes.len() % 4, 0);
+    let n = boxes.len() / 4;
+    assert_eq!(scores.len(), n * num_classes);
+    let mut out: Vec<Detection> = Vec::new();
+    for cls in 1..num_classes {
+        // Candidates for this class above threshold, best first.
+        let mut cand: Vec<(f32, usize)> = (0..n)
+            .filter_map(|i| {
+                let s = scores[i * num_classes + cls];
+                if s >= score_thresh {
+                    Some((s, i))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        cand.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        // Perf: kept boxes cached (no re-gather per IoU) and capped at
+        // max_dets per class — detections past the cap can never enter the
+        // global top-max_dets since kept are in descending score order.
+        let mut kept: Vec<[f32; 4]> = Vec::new();
+        for (s, i) in cand {
+            if kept.len() >= max_dets {
+                break;
+            }
+            let bi = [boxes[4 * i], boxes[4 * i + 1], boxes[4 * i + 2], boxes[4 * i + 3]];
+            let suppressed = kept.iter().any(|bj| iou(&bi, bj) > iou_thresh);
+            if !suppressed {
+                kept.push(bi);
+                out.push(Detection { class: cls, score: s, bbox: bi });
+            }
+        }
+    }
+    out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    out.truncate(max_dets);
+    out
+}
+
+/// Serialize detections into the fixed-size token payload.
+pub fn detections_to_token(dets: &[Detection], max_dets: usize) -> Vec<u8> {
+    let mut vals = vec![0.0f32; max_dets * DET_FLOATS];
+    for (i, d) in dets.iter().take(max_dets).enumerate() {
+        let o = i * DET_FLOATS;
+        vals[o] = d.class as f32;
+        vals[o + 1] = d.score;
+        vals[o + 2..o + 6].copy_from_slice(&d.bbox);
+    }
+    crate::util::tensor::f32_to_bytes(&vals)
+}
+
+pub fn token_to_detections(bytes: &[u8]) -> Vec<Detection> {
+    let vals = crate::util::tensor::bytes_to_f32(bytes);
+    vals.chunks_exact(DET_FLOATS)
+        .filter(|c| c[1] > 0.0)
+        .map(|c| Detection {
+            class: c[0] as usize,
+            score: c[1],
+            bbox: [c[2], c[3], c[4], c[5]],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identical_is_one() {
+        let b = [0.1, 0.1, 0.5, 0.5];
+        assert!((iou(&b, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        assert_eq!(iou(&[0.0, 0.0, 0.2, 0.2], &[0.5, 0.5, 0.9, 0.9]), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // Two unit-height boxes sharing half their width: inter=0.5,
+        // union=1.5 -> IoU = 1/3.
+        let got = iou(&[0.0, 0.0, 1.0, 1.0], &[0.5, 0.0, 1.5, 1.0]);
+        assert!((got - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nms_suppresses_overlapping_same_class() {
+        // Two heavily overlapping boxes, one clear winner.
+        let boxes = [0.1, 0.1, 0.5, 0.5, 0.12, 0.12, 0.5, 0.5];
+        let scores = [
+            0.1, 0.9, // box 0: class 1 @ 0.9
+            0.2, 0.8, // box 1: class 1 @ 0.8 (suppressed)
+        ];
+        let dets = nms(&scores, &boxes, 2, 0.3, 0.5, 10);
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].class, 1);
+        assert!((dets[0].score - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nms_keeps_different_classes() {
+        let boxes = [0.1, 0.1, 0.5, 0.5, 0.1, 0.1, 0.5, 0.5];
+        let scores = [
+            0.0, 0.9, 0.0, // box 0: class 1
+            0.0, 0.0, 0.8, // box 1: class 2 (same box, different class)
+        ];
+        let dets = nms(&scores, &boxes, 3, 0.3, 0.5, 10);
+        assert_eq!(dets.len(), 2);
+    }
+
+    #[test]
+    fn nms_keeps_disjoint_same_class() {
+        let boxes = [0.0, 0.0, 0.2, 0.2, 0.6, 0.6, 0.9, 0.9];
+        let scores = [0.0, 0.9, 0.0, 0.8];
+        let dets = nms(&scores, &boxes, 2, 0.3, 0.5, 10);
+        assert_eq!(dets.len(), 2);
+    }
+
+    #[test]
+    fn nms_respects_threshold_and_cap() {
+        let boxes: Vec<f32> = (0..10)
+            .flat_map(|i| {
+                let o = i as f32 * 0.09;
+                vec![o, o, o + 0.05, o + 0.05]
+            })
+            .collect();
+        let scores: Vec<f32> = (0..10).flat_map(|i| vec![0.0, 0.1 * i as f32]).collect();
+        let dets = nms(&scores, &boxes, 2, 0.35, 0.5, 3);
+        assert_eq!(dets.len(), 3); // capped
+        assert!(dets.iter().all(|d| d.score >= 0.35));
+        // Sorted descending.
+        assert!(dets.windows(2).all(|w| w[0].score >= w[1].score));
+    }
+
+    #[test]
+    fn token_roundtrip() {
+        let dets = vec![
+            Detection { class: 3, score: 0.7, bbox: [0.1, 0.2, 0.3, 0.4] },
+            Detection { class: 1, score: 0.5, bbox: [0.5, 0.5, 0.8, 0.9] },
+        ];
+        let token = detections_to_token(&dets, MAX_DETS);
+        assert_eq!(token.len(), MAX_DETS * DET_FLOATS * 4);
+        let back = token_to_detections(&token);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].class, 3);
+        assert!((back[1].bbox[3] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn background_class_never_detected() {
+        let boxes = [0.1, 0.1, 0.5, 0.5];
+        let scores = [0.99, 0.01];
+        assert!(nms(&scores, &boxes, 2, 0.3, 0.5, 10).is_empty());
+    }
+}

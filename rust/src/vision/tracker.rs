@@ -1,0 +1,178 @@
+//! IoU-based multi-object tracker (the paper's object-tracking actor).
+//!
+//! Greedy IoU association of detections to existing tracks; unmatched
+//! detections open new tracks, tracks missing for `max_age` frames are
+//! retired.  Emits a fixed-size track token: MAX_TRACKS x
+//! (id, class, score, x1, y1, x2, y2) f32s, zero-padded.
+
+use super::nms::{iou, Detection};
+
+pub const MAX_TRACKS: usize = 100;
+pub const TRACK_FLOATS: usize = 7;
+
+#[derive(Debug, Clone)]
+pub struct Track {
+    pub id: u32,
+    pub class: usize,
+    pub score: f32,
+    pub bbox: [f32; 4],
+    pub age: u32,
+    pub missed: u32,
+}
+
+#[derive(Debug)]
+pub struct IouTracker {
+    pub tracks: Vec<Track>,
+    next_id: u32,
+    iou_thresh: f32,
+    max_age: u32,
+}
+
+impl IouTracker {
+    pub fn new(iou_thresh: f32, max_age: u32) -> Self {
+        IouTracker { tracks: Vec::new(), next_id: 1, iou_thresh, max_age }
+    }
+
+    /// Advance one frame; returns the live tracks after update.
+    pub fn update(&mut self, detections: &[Detection]) -> &[Track] {
+        let mut claimed = vec![false; detections.len()];
+        // Greedy: each track grabs its best unclaimed same-class match.
+        for t in &mut self.tracks {
+            let mut best: Option<(usize, f32)> = None;
+            for (di, d) in detections.iter().enumerate() {
+                if claimed[di] || d.class != t.class {
+                    continue;
+                }
+                let v = iou(&t.bbox, &d.bbox);
+                if v >= self.iou_thresh && best.map(|(_, bv)| v > bv).unwrap_or(true) {
+                    best = Some((di, v));
+                }
+            }
+            match best {
+                Some((di, _)) => {
+                    claimed[di] = true;
+                    t.bbox = detections[di].bbox;
+                    t.score = detections[di].score;
+                    t.age += 1;
+                    t.missed = 0;
+                }
+                None => t.missed += 1,
+            }
+        }
+        // Open tracks for unclaimed detections.
+        for (di, d) in detections.iter().enumerate() {
+            if !claimed[di] && self.tracks.len() < MAX_TRACKS {
+                self.tracks.push(Track {
+                    id: self.next_id,
+                    class: d.class,
+                    score: d.score,
+                    bbox: d.bbox,
+                    age: 1,
+                    missed: 0,
+                });
+                self.next_id += 1;
+            }
+        }
+        // Retire stale tracks.
+        let max_age = self.max_age;
+        self.tracks.retain(|t| t.missed <= max_age);
+        &self.tracks
+    }
+
+    pub fn to_token(&self) -> Vec<u8> {
+        let mut vals = vec![0.0f32; MAX_TRACKS * TRACK_FLOATS];
+        for (i, t) in self.tracks.iter().take(MAX_TRACKS).enumerate() {
+            let o = i * TRACK_FLOATS;
+            vals[o] = t.id as f32;
+            vals[o + 1] = t.class as f32;
+            vals[o + 2] = t.score;
+            vals[o + 3..o + 7].copy_from_slice(&t.bbox);
+        }
+        crate::util::tensor::f32_to_bytes(&vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(class: usize, bbox: [f32; 4]) -> Detection {
+        Detection { class, score: 0.9, bbox }
+    }
+
+    #[test]
+    fn new_detection_opens_track() {
+        let mut t = IouTracker::new(0.3, 2);
+        let tracks = t.update(&[det(1, [0.1, 0.1, 0.3, 0.3])]);
+        assert_eq!(tracks.len(), 1);
+        assert_eq!(tracks[0].id, 1);
+        assert_eq!(tracks[0].age, 1);
+    }
+
+    #[test]
+    fn moving_object_keeps_id() {
+        let mut t = IouTracker::new(0.3, 2);
+        t.update(&[det(1, [0.10, 0.10, 0.30, 0.30])]);
+        let tracks = t.update(&[det(1, [0.12, 0.12, 0.32, 0.32])]);
+        assert_eq!(tracks.len(), 1);
+        assert_eq!(tracks[0].id, 1);
+        assert_eq!(tracks[0].age, 2);
+        assert!((tracks[0].bbox[0] - 0.12).abs() < 1e-6);
+    }
+
+    #[test]
+    fn different_class_never_associates() {
+        let mut t = IouTracker::new(0.3, 2);
+        t.update(&[det(1, [0.1, 0.1, 0.3, 0.3])]);
+        let tracks = t.update(&[det(2, [0.1, 0.1, 0.3, 0.3])]);
+        assert_eq!(tracks.len(), 2); // old (missed) + new class-2 track
+        assert_eq!(tracks.iter().filter(|x| x.class == 2).count(), 1);
+    }
+
+    #[test]
+    fn track_retired_after_max_age() {
+        let mut t = IouTracker::new(0.3, 1);
+        t.update(&[det(1, [0.1, 0.1, 0.3, 0.3])]);
+        t.update(&[]); // missed = 1 (<= max_age, kept)
+        assert_eq!(t.tracks.len(), 1);
+        t.update(&[]); // missed = 2 (> max_age, retired)
+        assert_eq!(t.tracks.len(), 0);
+    }
+
+    #[test]
+    fn two_objects_two_ids() {
+        let mut t = IouTracker::new(0.3, 2);
+        let tracks = t.update(&[
+            det(1, [0.0, 0.0, 0.2, 0.2]),
+            det(1, [0.6, 0.6, 0.9, 0.9]),
+        ]);
+        assert_eq!(tracks.len(), 2);
+        assert_ne!(tracks[0].id, tracks[1].id);
+    }
+
+    #[test]
+    fn greedy_match_prefers_highest_iou() {
+        let mut t = IouTracker::new(0.1, 2);
+        t.update(&[det(1, [0.10, 0.10, 0.30, 0.30])]);
+        // Two candidates: one nearly identical, one barely overlapping.
+        let tracks = t.update(&[
+            det(1, [0.25, 0.25, 0.45, 0.45]),
+            det(1, [0.11, 0.11, 0.31, 0.31]),
+        ]);
+        let old = tracks.iter().find(|x| x.id == 1).unwrap();
+        assert!((old.bbox[0] - 0.11).abs() < 1e-6, "should take best IoU");
+        assert_eq!(tracks.len(), 2);
+    }
+
+    #[test]
+    fn token_layout() {
+        let mut t = IouTracker::new(0.3, 2);
+        t.update(&[det(4, [0.1, 0.2, 0.3, 0.4])]);
+        let token = t.to_token();
+        assert_eq!(token.len(), MAX_TRACKS * TRACK_FLOATS * 4);
+        let vals = crate::util::tensor::bytes_to_f32(&token);
+        assert_eq!(vals[0], 1.0); // id
+        assert_eq!(vals[1], 4.0); // class
+        assert!((vals[3] - 0.1).abs() < 1e-6);
+    }
+}

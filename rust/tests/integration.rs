@@ -1,0 +1,210 @@
+//! Integration tests: compiler -> distributed runtime -> XLA execution,
+//! end-to-end over real localhost TCP, plus the VR-PRUNE dynamic-rate
+//! path (CA-driven atr changes) through the live engine.
+
+use edge_prune::compiler::compile;
+use edge_prune::dataflow::rates::AtrCell;
+use edge_prune::dataflow::{ActorKind, ActorSpec, AppGraph, RateSpec, Token};
+use edge_prune::models::builder::{build_graph, make_kernels, KernelOptions, DEFAULT_CAPACITY};
+use edge_prune::models::manifest::Manifest;
+use edge_prune::platform::{Mapping, PlatformGraph};
+use edge_prune::runtime::device::DeviceModel;
+use edge_prune::runtime::distributed::run_deployment;
+use edge_prune::runtime::engine::Engine;
+use edge_prune::runtime::kernels::{ActorKernel, FireOutcome, SinkKernel, SourceKernel};
+use edge_prune::runtime::netsim::LinkModel;
+use edge_prune::runtime::xla_exec::{Variant, XlaService};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+}
+
+/// Full stack: manifest -> graph -> compiler (PP cut) -> two engines over
+/// shaped TCP -> XLA actors -> frames complete on both sides.
+#[test]
+fn vehicle_distributed_over_shaped_link_completes() {
+    let Some(m) = manifest() else { return };
+    let meta = m.model("vehicle").unwrap().clone();
+    let graph = build_graph(&meta, DEFAULT_CAPACITY).unwrap();
+    let order: Vec<String> = graph
+        .topo_order()
+        .unwrap()
+        .iter()
+        .map(|&id| graph.actor(id).name.clone())
+        .collect();
+    let mut pg = PlatformGraph::new();
+    pg.add_device(DeviceModel::native("e"));
+    pg.add_device(DeviceModel::native("s"));
+    pg.add_link("e", "s", LinkModel::new("eth", 11.2, 1.49));
+    let mapping = Mapping::partition_point(&order, 3, "e", "s");
+    let plan = compile(&graph, &pg, &mapping, 30_100).unwrap();
+
+    let svc = XlaService::spawn(&m.root, &meta, Variant::Jnp).unwrap();
+    let services: BTreeMap<String, XlaService> =
+        ["e", "s"].iter().map(|d| (d.to_string(), svc.clone())).collect();
+    let devices: BTreeMap<String, DeviceModel> =
+        ["e", "s"].iter().map(|d| (d.to_string(), DeviceModel::native(d))).collect();
+    let opts = KernelOptions { frames: 5, seed: 3, keep_last: false };
+    let reports = run_deployment(&plan, &meta, &services, &devices, &opts).unwrap();
+    assert_eq!(reports["e"].frames, 5);
+    assert_eq!(reports["s"].actors["l45"].firings, 5);
+    // The shaped 73728-B cut costs >= 6.5 ms/frame serialization.
+    assert!(reports["e"].ms_per_frame() >= 6.0);
+}
+
+/// The dual-input three-device deployment (Sec IV.C) completes and the
+/// join actor sees both branches.
+#[test]
+fn dual_input_three_devices() {
+    let Some(m) = manifest() else { return };
+    let vehicle = m.model("vehicle").unwrap();
+    let meta = edge_prune::models::vehicle::dual_meta(vehicle).unwrap();
+    let graph = build_graph(&meta, DEFAULT_CAPACITY).unwrap();
+    let mut pg = PlatformGraph::new();
+    for d in ["n2", "n270", "i7"] {
+        pg.add_device(DeviceModel::native(d));
+    }
+    pg.add_link("n2", "i7", LinkModel::ideal());
+    pg.add_link("n270", "i7", LinkModel::ideal());
+    let plan = compile(&graph, &pg, &edge_prune::models::vehicle::dual_mapping(), 30_300).unwrap();
+    assert_eq!(plan.cut_edges(), 2);
+
+    let services: BTreeMap<String, XlaService> = ["n2", "n270", "i7"]
+        .iter()
+        .map(|d| (d.to_string(), XlaService::spawn(&m.root, &meta, Variant::Jnp).unwrap()))
+        .collect();
+    let devices: BTreeMap<String, DeviceModel> = ["n2", "n270", "i7"]
+        .iter()
+        .map(|d| (d.to_string(), DeviceModel::native(d)))
+        .collect();
+    let opts = KernelOptions { frames: 3, seed: 9, keep_last: false };
+    let reports = run_deployment(&plan, &meta, &services, &devices, &opts).unwrap();
+    assert_eq!(reports["i7"].actors["l45_dual"].firings, 3);
+    assert_eq!(reports["n270"].actors["input#2"].firings, 3);
+}
+
+/// SSD graph runs locally end-to-end: all 53 actors fire, the tracker
+/// emits track tokens, and frames complete.
+#[test]
+fn ssd_local_pipeline_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let Ok(meta) = m.model("ssd") else { return };
+    let meta = meta.clone();
+    let graph = build_graph(&meta, DEFAULT_CAPACITY).unwrap();
+    let svc = XlaService::spawn(&m.root, &meta, Variant::Jnp).unwrap();
+    let opts = KernelOptions { frames: 2, seed: 21, keep_last: true };
+    let (kernels, _) = make_kernels(&meta, &graph, &svc, &opts).unwrap();
+    let engine = Engine::new(graph, DeviceModel::native("host")).unwrap();
+    let report = engine.run(kernels).unwrap();
+    assert_eq!(report.frames, 2);
+    for a in ["conv1", "dwcl13", "conf5", "concat_loc", "box_decode", "nms", "tracker"] {
+        assert_eq!(report.actors[a].firings, 2, "{a}");
+    }
+}
+
+/// VR-PRUNE dynamic rates live: a CA lowers the atr of a DPG edge from 2
+/// to 1 mid-stream; the symmetric-rate cell makes consumer and producer
+/// flip together.
+#[test]
+fn ca_changes_active_token_rate_mid_stream() {
+    let mut g = AppGraph::new();
+    let src = g.add_actor(ActorSpec::new("src", ActorKind::Da).in_dpg(0));
+    let dpa = g.add_actor(ActorSpec::new("dpa", ActorKind::Dpa).in_dpg(0));
+    let snk = g.add_spa("snk");
+    let e0 = g.connect_rated(src, dpa, 4, 16, RateSpec::variable(1, 2), 0);
+    g.connect(dpa, snk, 4, 16);
+    let engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+    let atr: AtrCell = engine.atr(e0);
+    assert_eq!(atr.get(), 2); // defaults to url
+
+    struct RatedSource {
+        emitted: u64,
+        atr: AtrCell,
+    }
+    impl ActorKernel for RatedSource {
+        fn fire(&mut self, _i: &[Vec<Token>], _s: u64) -> anyhow::Result<FireOutcome> {
+            // After 3 firings the (in-line) CA drops the rate to 1.
+            if self.emitted == 3 {
+                self.atr.set(1).unwrap();
+            }
+            if self.emitted >= 6 {
+                return Ok(FireOutcome::Stop);
+            }
+            self.emitted += 1;
+            let n = self.atr.get();
+            Ok(FireOutcome::Produced(vec![(0..n)
+                .map(|_| vec![self.emitted as u8; 4])
+                .collect()]))
+        }
+    }
+    struct CountingDpa {
+        consumed: Arc<AtomicU64>,
+    }
+    impl ActorKernel for CountingDpa {
+        fn fire(&mut self, inputs: &[Vec<Token>], _s: u64) -> anyhow::Result<FireOutcome> {
+            self.consumed.fetch_add(inputs[0].len() as u64, Ordering::Relaxed);
+            Ok(FireOutcome::one_each(vec![inputs[0][0].data.to_vec()]))
+        }
+    }
+    let consumed = Arc::new(AtomicU64::new(0));
+    let frames = Arc::new(AtomicU64::new(0));
+    let mut kernels: BTreeMap<String, Box<dyn ActorKernel>> = BTreeMap::new();
+    kernels.insert("src".into(), Box::new(RatedSource { emitted: 0, atr: atr.clone() }));
+    kernels.insert("dpa".into(), Box::new(CountingDpa { consumed: consumed.clone() }));
+    kernels.insert("snk".into(), Box::new(SinkKernel::new(frames.clone())));
+    let report = engine.run(kernels).unwrap();
+    // 3 firings at rate 2 + 3 at rate 1 = 9 tokens produced & consumed.
+    assert_eq!(consumed.load(Ordering::Relaxed), 9);
+    assert!(report.actors["dpa"].firings >= 5, "rate flip must not stall");
+}
+
+/// Deployment-plan JSON is parseable and contains the TX/RX FIFO specs.
+#[test]
+fn deployment_plan_json_roundtrip() {
+    let Some(m) = manifest() else { return };
+    let meta = m.model("vehicle").unwrap().clone();
+    let graph = build_graph(&meta, DEFAULT_CAPACITY).unwrap();
+    let order: Vec<String> = graph
+        .topo_order()
+        .unwrap()
+        .iter()
+        .map(|&id| graph.actor(id).name.clone())
+        .collect();
+    let mut pg = PlatformGraph::new();
+    pg.add_device(DeviceModel::native("e"));
+    pg.add_device(DeviceModel::native("s"));
+    pg.add_link("e", "s", LinkModel::ideal());
+    let plan =
+        compile(&graph, &pg, &Mapping::partition_point(&order, 2, "e", "s"), 30_500).unwrap();
+    let text = plan.to_json().to_string();
+    let parsed = edge_prune::util::json::Json::parse(&text).unwrap();
+    let devices = parsed.get("devices").unwrap().arr().unwrap();
+    assert_eq!(devices.len(), 2);
+    let has_tx = text.contains("__tx1") && text.contains("__rx1");
+    assert!(has_tx, "plan must name the spliced FIFO actors: {text}");
+}
+
+/// Backpressure: a slow consumer bounds the producer through the bounded
+/// FIFO — max occupancy never exceeds capacity (analyzer's certificate
+/// holds at runtime).
+#[test]
+fn backpressure_respects_capacity() {
+    let mut g = AppGraph::new();
+    let src = g.add_spa("src");
+    let snk = g.add_spa("snk");
+    g.connect(src, snk, 4, 2);
+    let device = DeviceModel::native("d").with_cost("snk", 2.0);
+    let engine = Engine::new(g, device).unwrap();
+    let frames = Arc::new(AtomicU64::new(0));
+    let mut kernels: BTreeMap<String, Box<dyn ActorKernel>> = BTreeMap::new();
+    kernels.insert("src".into(), Box::new(SourceKernel::new(50, 4, 1, 1)));
+    kernels.insert("snk".into(), Box::new(SinkKernel::new(frames.clone())));
+    let report = engine.run(kernels).unwrap();
+    assert_eq!(report.frames, 50);
+    // Producer must have spent time blocked on the full FIFO.
+    assert!(report.actors["src"].blocked_out.as_millis() > 10);
+}

@@ -1,0 +1,290 @@
+//! Property-based tests over framework invariants (using the in-tree
+//! `util::prop` harness): random graphs/mappings/workloads must uphold
+//! the analyzer's and compiler's contracts.
+
+use edge_prune::compiler::compile;
+use edge_prune::dataflow::{AppGraph, RateSpec};
+use edge_prune::platform::{Mapping, PlatformGraph};
+use edge_prune::runtime::device::DeviceModel;
+use edge_prune::runtime::netsim::LinkModel;
+use edge_prune::util::prop::forall;
+use edge_prune::util::rng::Rng;
+
+/// Random connected DAG with random (consistent-by-construction) rates:
+/// a chain with extra forward edges, rates fixed at 1 (homogeneous SDF).
+fn random_dag(rng: &mut Rng, size: usize) -> AppGraph {
+    let n = size.clamp(2, 12);
+    let mut g = AppGraph::new();
+    let ids: Vec<_> = (0..n).map(|i| g.add_spa(&format!("a{i}"))).collect();
+    for w in ids.windows(2) {
+        g.connect(w[0], w[1], 4 + rng.below(64), 1 + rng.below(6));
+    }
+    // Extra forward (skip) edges.
+    for _ in 0..rng.below(n) {
+        let i = rng.below(n - 1);
+        let j = i + 1 + rng.below(n - 1 - i);
+        g.connect(ids[i], ids[j], 4 + rng.below(64), 1 + rng.below(6));
+    }
+    g
+}
+
+#[test]
+fn prop_homogeneous_dags_have_unit_repetition_vector() {
+    forall(
+        101,
+        60,
+        12,
+        |rng, size| random_dag(rng, size),
+        |g| {
+            let reps = edge_prune::analyzer::sdf::repetition_vector(g)
+                .map_err(|e| format!("{e}"))?;
+            if reps.iter().all(|&q| q == 1) {
+                Ok(())
+            } else {
+                Err(format!("non-unit repetition vector {reps:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_balance_equations_hold_for_multirate_chains() {
+    // Random multirate chain: q[src]*prod == q[dst]*cons per edge.
+    forall(
+        202,
+        60,
+        8,
+        |rng, size| {
+            let n = size.clamp(2, 8);
+            let mut g = AppGraph::new();
+            let ids: Vec<_> = (0..n).map(|i| g.add_spa(&format!("a{i}"))).collect();
+            for w in ids.windows(2) {
+                let prod = 1 + rng.below(4) as u32;
+                let cons = 1 + rng.below(4) as u32;
+                // connect with asymmetric but consistent rates
+                let cap = (prod.max(cons) as usize) * 4;
+                g.connect_rated(w[0], w[1], 4, cap, RateSpec::fixed(prod), 0);
+                let e = g.edges.len() - 1;
+                let dst = g.edges[e].dst;
+                g.actors[dst.actor.0].in_ports[dst.port].rate = RateSpec::fixed(cons);
+            }
+            g
+        },
+        |g| {
+            let reps = edge_prune::analyzer::sdf::repetition_vector(g)
+                .map_err(|e| format!("{e}"))?;
+            for e in &g.edges {
+                let prod = g.actors[e.src.actor.0].out_ports[e.src.port].rate.url as u64;
+                let cons = g.actors[e.dst.actor.0].in_ports[e.dst.port].rate.url as u64;
+                let lhs = reps[e.src.actor.0] * prod;
+                let rhs = reps[e.dst.actor.0] * cons;
+                if lhs != rhs {
+                    return Err(format!("balance violated: {lhs} != {rhs}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_minimal_buffer_bounds_are_schedulable() {
+    // The analyzer's minimal bounds, applied as capacities, must yield a
+    // live schedule (no capacity-induced deadlock).
+    forall(
+        303,
+        40,
+        10,
+        |rng, size| random_dag(rng, size),
+        |g| {
+            let reps = edge_prune::analyzer::sdf::repetition_vector(g)
+                .map_err(|e| format!("{e}"))?;
+            let bounds = edge_prune::analyzer::deadlock::minimal_buffer_bounds(g, &reps)
+                .map_err(|e| format!("{e}"))?;
+            let mut g2 = g.clone();
+            for (e, b) in g2.edges.iter_mut().zip(&bounds) {
+                e.capacity = (*b).max(1);
+            }
+            edge_prune::analyzer::deadlock::simulate_iteration(&g2, &reps)
+                .map(|_| ())
+                .map_err(|e| format!("bounds not schedulable: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_compiler_partitions_actors_and_pairs_fifos() {
+    // For a random DAG and a random 2-device mapping: every original
+    // actor appears on exactly one device; #tx == #rx == #crossing edges;
+    // ports pair up; local subgraphs validate.
+    forall(
+        404,
+        50,
+        10,
+        |rng, size| {
+            let g = random_dag(rng, size);
+            let mut mapping = Mapping::new();
+            for a in &g.actors {
+                mapping.assign(&a.name, if rng.bool(0.5) { "e" } else { "s" });
+            }
+            (g, mapping)
+        },
+        |(g, mapping)| {
+            let mut pg = PlatformGraph::new();
+            pg.add_device(DeviceModel::native("e"));
+            pg.add_device(DeviceModel::native("s"));
+            pg.add_link("e", "s", LinkModel::ideal());
+            let plan = compile(g, &pg, mapping, 31_000).map_err(|e| format!("{e}"))?;
+            // Actor partition.
+            let mut seen = std::collections::BTreeSet::new();
+            for dp in plan.per_device.values() {
+                for a in &dp.original_actors {
+                    if !seen.insert(a.clone()) {
+                        return Err(format!("actor {a} on two devices"));
+                    }
+                }
+            }
+            if seen.len() != g.actors.len() {
+                return Err("actor lost in partition".into());
+            }
+            // FIFO pairing.
+            let crossing = g
+                .edges
+                .iter()
+                .filter(|e| {
+                    mapping.device_of(&g.actors[e.src.actor.0].name).unwrap()
+                        != mapping.device_of(&g.actors[e.dst.actor.0].name).unwrap()
+                })
+                .count();
+            let tx: usize = plan.per_device.values().map(|p| p.tx.len()).sum();
+            let rx: usize = plan.per_device.values().map(|p| p.rx.len()).sum();
+            if tx != crossing || rx != crossing {
+                return Err(format!("tx {tx} rx {rx} crossing {crossing}"));
+            }
+            let mut tx_ports: Vec<u16> =
+                plan.per_device.values().flat_map(|p| p.tx.iter().map(|t| t.port)).collect();
+            let mut rx_ports: Vec<u16> =
+                plan.per_device.values().flat_map(|p| p.rx.iter().map(|r| r.port)).collect();
+            tx_ports.sort();
+            rx_ports.sort();
+            if tx_ports != rx_ports {
+                return Err("unpaired FIFO ports".into());
+            }
+            // Local subgraphs validate.
+            for dp in plan.per_device.values() {
+                dp.graph.validate().map_err(|e| format!("{e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_explorer_cut_bytes_decrease_to_zero_at_full_local() {
+    // For the vehicle model: cut_bytes at pp == n is always 0, and every
+    // pp's cut matches the sum of edges crossing the prefix.
+    let dir = edge_prune::models::manifest::Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let manifest = edge_prune::models::manifest::Manifest::load(&dir).unwrap();
+    for model in ["vehicle", "ssd"] {
+        let Ok(meta) = manifest.model(model) else { continue };
+        let order = edge_prune::explorer::precedence_order(meta).unwrap();
+        assert_eq!(edge_prune::explorer::cut_bytes(meta, &order, order.len()), 0);
+        for pp in 1..=order.len() {
+            let endpoint: std::collections::BTreeSet<&String> =
+                order[..pp].iter().collect();
+            let expect: usize = meta
+                .edges
+                .iter()
+                .filter(|e| endpoint.contains(&e.src) != endpoint.contains(&e.dst))
+                .map(|e| e.bytes)
+                .sum();
+            assert_eq!(edge_prune::explorer::cut_bytes(meta, &order, pp), expect);
+        }
+    }
+}
+
+#[test]
+fn prop_fifo_random_ops_conserve_tokens() {
+    use edge_prune::dataflow::Token;
+    use edge_prune::runtime::fifo::Fifo;
+    forall(
+        505,
+        40,
+        200,
+        |rng, size| {
+            // A random schedule of pushes (true) and pops (false).
+            (0..size).map(|_| rng.bool(0.6)).collect::<Vec<bool>>()
+        },
+        |ops| {
+            let f = Fifo::new(8);
+            let mut pushed = 0u64;
+            let mut popped = 0u64;
+            for &is_push in ops {
+                if is_push {
+                    if f.len() < 8 {
+                        f.push(Token::new(vec![1], pushed));
+                        pushed += 1;
+                    }
+                } else if f.try_pop_n(1).is_some() {
+                    popped += 1;
+                }
+            }
+            let remaining = f.len() as u64;
+            if pushed == popped + remaining && f.max_occupancy() <= 8 {
+                Ok(())
+            } else {
+                Err(format!("pushed {pushed} != popped {popped} + rem {remaining}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn engine_propagates_kernel_errors() {
+    use edge_prune::runtime::engine::Engine;
+    use edge_prune::runtime::kernels::{ActorKernel, FireOutcome, SourceKernel};
+    use std::collections::BTreeMap;
+    struct FailingKernel;
+    impl ActorKernel for FailingKernel {
+        fn fire(
+            &mut self,
+            _i: &[Vec<edge_prune::dataflow::Token>],
+            seq: u64,
+        ) -> anyhow::Result<FireOutcome> {
+            if seq >= 2 {
+                anyhow::bail!("injected failure at frame {seq}");
+            }
+            Ok(FireOutcome::Produced(Vec::new()))
+        }
+    }
+    let mut g = AppGraph::new();
+    let src = g.add_spa("src");
+    let bad = g.add_spa("bad");
+    g.connect(src, bad, 4, 2);
+    let engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+    let mut kernels: BTreeMap<String, Box<dyn ActorKernel>> = BTreeMap::new();
+    kernels.insert("src".into(), Box::new(SourceKernel::new(10, 4, 1, 1)));
+    kernels.insert("bad".into(), Box::new(FailingKernel));
+    let err = engine.run(kernels).unwrap_err();
+    assert!(err.to_string().contains("injected failure"), "{err}");
+}
+
+#[test]
+fn prop_rng_below_is_uniform_enough() {
+    // Sanity on the PRNG substrate the workloads depend on: chi-square-ish
+    // bound over 8 buckets.
+    let mut rng = Rng::new(999);
+    let n = 80_000;
+    let mut buckets = [0u32; 8];
+    for _ in 0..n {
+        buckets[rng.below(8)] += 1;
+    }
+    let expect = n as f64 / 8.0;
+    for (i, &b) in buckets.iter().enumerate() {
+        let dev = (b as f64 - expect).abs() / expect;
+        assert!(dev < 0.05, "bucket {i}: {b} vs {expect}");
+    }
+}

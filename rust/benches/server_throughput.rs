@@ -1,0 +1,53 @@
+//! Serving throughput: requests/sec vs concurrent client count against
+//! one in-process edge inference server (synthetic split model).
+//!
+//! Knobs: EP_REQUESTS (per client), EP_PP (partition point), EP_WORKERS
+//! (0 = one per core), EP_PIN (1 = pin workers to cores).
+
+use edge_prune::benchkit::{env_or, header};
+use edge_prune::server::loadgen::{run_loadgen, LoadgenConfig};
+use edge_prune::server::{Server, ServerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let requests: u64 = env_or("EP_REQUESTS", 200u64);
+    let pp: usize = env_or("EP_PP", 3usize);
+    let workers: usize = env_or("EP_WORKERS", 0usize);
+    let pin: usize = env_or("EP_PIN", 1usize);
+
+    header(&format!(
+        "server throughput: requests/sec vs clients (pp {pp}, {requests} req/client, \
+         workers {})",
+        if workers == 0 { "auto".to_string() } else { workers.to_string() }
+    ));
+    println!("clients   req/s   p50-ms   p95-ms   p99-ms   batch-occ   rejected");
+
+    for clients in [1usize, 4, 8] {
+        let server = Server::start(ServerConfig {
+            workers,
+            pin_workers: pin != 0,
+            ..ServerConfig::default()
+        })?;
+        let report = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients,
+            requests,
+            pp,
+            seed: 42,
+            ..LoadgenConfig::default()
+        })?;
+        anyhow::ensure!(report.lost() == 0, "lost requests at {clients} clients");
+        anyhow::ensure!(report.errors == 0, "response mismatches at {clients} clients");
+        let metrics = server.shutdown();
+        let occupancy = metrics.get("batch_occupancy")?.num()?;
+        println!(
+            "{clients:>7} {:>7.0} {:>8.2} {:>8.2} {:>8.2} {:>11.2} {:>10}",
+            report.requests_per_sec(),
+            report.latency.quantile_ms(0.50),
+            report.latency.quantile_ms(0.95),
+            report.latency.quantile_ms(0.99),
+            occupancy,
+            report.rejected,
+        );
+    }
+    Ok(())
+}

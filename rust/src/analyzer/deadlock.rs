@@ -17,14 +17,24 @@ pub struct SimResult {
     pub firings: Vec<u64>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DeadlockError {
-    #[error(
-        "deadlock: iteration stalls with remaining firings {remaining:?}; \
-         blocked actors: {blocked}"
-    )]
     Deadlock { remaining: Vec<u64>, blocked: String },
 }
+
+impl std::fmt::Display for DeadlockError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeadlockError::Deadlock { remaining, blocked } => write!(
+                f,
+                "deadlock: iteration stalls with remaining firings {remaining:?}; \
+                 blocked actors: {blocked}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DeadlockError {}
 
 /// Simulate one iteration; Err on deadlock (incl. capacity-induced).
 pub fn simulate_iteration(g: &AppGraph, reps: &[u64]) -> Result<SimResult, DeadlockError> {

@@ -16,19 +16,38 @@
 use crate::dataflow::{ActorKind, AppGraph};
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DpgError {
-    #[error("DPG {0}: must contain exactly one CA, found {1}")]
     CaCount(usize, usize),
-    #[error("DPG {0}: must contain exactly two DAs, found {1}")]
     DaCount(usize, usize),
-    #[error("actor {0}: variable-rate port on non-dynamic actor")]
     VariableRateOnStatic(String),
-    #[error("edge {0}->{1} crosses between DPG {2} and DPG {3}")]
     CrossDpgEdge(String, String, usize, usize),
-    #[error("DPG {0}: CA {1} does not reach dynamic actor {2}")]
     CaUnreachable(usize, String, String),
 }
+
+impl std::fmt::Display for DpgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DpgError::CaCount(dpg, n) => {
+                write!(f, "DPG {dpg}: must contain exactly one CA, found {n}")
+            }
+            DpgError::DaCount(dpg, n) => {
+                write!(f, "DPG {dpg}: must contain exactly two DAs, found {n}")
+            }
+            DpgError::VariableRateOnStatic(actor) => {
+                write!(f, "actor {actor}: variable-rate port on non-dynamic actor")
+            }
+            DpgError::CrossDpgEdge(src, dst, a, b) => {
+                write!(f, "edge {src}->{dst} crosses between DPG {a} and DPG {b}")
+            }
+            DpgError::CaUnreachable(dpg, ca, target) => {
+                write!(f, "DPG {dpg}: CA {ca} does not reach dynamic actor {target}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DpgError {}
 
 /// Validate all DPG rules; returns the number of DPGs.
 pub fn check_dpgs(g: &AppGraph) -> Result<usize, DpgError> {

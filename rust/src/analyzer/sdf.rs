@@ -39,9 +39,8 @@ impl Rat {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum SdfError {
-    #[error("rate-inconsistent graph at edge {src}->{dst}: {q_src:?} * {prod} != {q_dst:?} * {cons}")]
     Inconsistent {
         src: String,
         dst: String,
@@ -50,11 +49,26 @@ pub enum SdfError {
         q_src: (u64, u64),
         q_dst: (u64, u64),
     },
-    #[error("graph is not connected; actor {0} unreachable from actor 0")]
     Disconnected(String),
-    #[error("empty graph")]
     Empty,
 }
+
+impl std::fmt::Display for SdfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SdfError::Inconsistent { src, dst, prod, cons, q_src, q_dst } => write!(
+                f,
+                "rate-inconsistent graph at edge {src}->{dst}: {q_src:?} * {prod} != {q_dst:?} * {cons}"
+            ),
+            SdfError::Disconnected(actor) => {
+                write!(f, "graph is not connected; actor {actor} unreachable from actor 0")
+            }
+            SdfError::Empty => write!(f, "empty graph"),
+        }
+    }
+}
+
+impl std::error::Error for SdfError {}
 
 /// Smallest positive integer repetition vector; Err if rate-inconsistent.
 pub fn repetition_vector(g: &AppGraph) -> Result<Vec<u64>, SdfError> {

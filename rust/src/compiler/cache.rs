@@ -1,0 +1,159 @@
+//! Plan cache: compiled deployment artifacts keyed by `(model, partition
+//! point)`.  The serving layer compiles a deployment the first time any
+//! session asks for a `(model, pp)` pair and every later session reuses
+//! the `Arc`'d result — compilation happens once per key, not once per
+//! connection.  Generic over the cached value so callers can store the
+//! raw `DeploymentPlan` or a richer executor-ready wrapper.
+
+use super::plan::DeploymentPlan;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache key: one compiled plan per (model, partition point).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PlanKey {
+    pub model: String,
+    pub pp: usize,
+}
+
+impl PlanKey {
+    pub fn new(model: &str, pp: usize) -> Self {
+        PlanKey { model: model.to_string(), pp }
+    }
+}
+
+impl fmt::Display for PlanKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@pp{}", self.model, self.pp)
+    }
+}
+
+/// Thread-safe build cache.  Builders run OUTSIDE the map lock so a slow
+/// compile for one key never blocks lookups of other keys; two sessions
+/// racing on the same cold key may both build, and the first insert wins
+/// (compiles are deterministic, so the discarded duplicate is only
+/// wasted work, never divergent state).
+pub struct PlanCache<V> {
+    inner: Mutex<BTreeMap<PlanKey, Arc<V>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Convenience alias for caches of plain deployment plans.
+pub type DeploymentPlanCache = PlanCache<DeploymentPlan>;
+
+impl<V> Default for PlanCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> PlanCache<V> {
+    pub fn new() -> Self {
+        PlanCache {
+            inner: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get(&self, key: &PlanKey) -> Option<Arc<V>> {
+        let got = self.inner.lock().unwrap().get(key).cloned();
+        match &got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// Return the cached value for `key`, building (and caching) it with
+    /// `build` on first use.  Build errors are returned and NOT cached, so
+    /// a transient failure can be retried by the next caller.
+    pub fn get_or_try_insert(
+        &self,
+        key: &PlanKey,
+        build: impl FnOnce() -> Result<V>,
+    ) -> Result<Arc<V>> {
+        if let Some(v) = self.inner.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(v.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Build with the lock released; on a same-key race the first
+        // insert wins and the loser adopts it.
+        let built = Arc::new(build()?);
+        let mut map = self.inner.lock().unwrap();
+        Ok(map.entry(key.clone()).or_insert(built).clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn builds_once_per_key_and_shares_arc() {
+        let cache: PlanCache<String> = PlanCache::new();
+        let builds = AtomicUsize::new(0);
+        let key = PlanKey::new("vehicle", 3);
+        let a = cache
+            .get_or_try_insert(&key, || {
+                builds.fetch_add(1, Ordering::SeqCst);
+                Ok("plan".to_string())
+            })
+            .unwrap();
+        let b = cache.get_or_try_insert(&key, || unreachable!()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn distinct_partition_points_are_distinct_entries() {
+        let cache: PlanCache<usize> = PlanCache::new();
+        for pp in 1..=4 {
+            cache.get_or_try_insert(&PlanKey::new("m", pp), || Ok(pp)).unwrap();
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(*cache.get(&PlanKey::new("m", 2)).unwrap(), 2);
+    }
+
+    #[test]
+    fn build_errors_are_not_cached() {
+        let cache: PlanCache<u32> = PlanCache::new();
+        let key = PlanKey::new("m", 1);
+        assert!(cache.get_or_try_insert(&key, || Err(anyhow!("boom"))).is_err());
+        assert_eq!(cache.len(), 0);
+        // A later successful build fills the entry.
+        assert_eq!(*cache.get_or_try_insert(&key, || Ok(9)).unwrap(), 9);
+    }
+
+    #[test]
+    fn key_display_and_order() {
+        let k = PlanKey::new("ssd", 7);
+        assert_eq!(k.to_string(), "ssd@pp7");
+        assert!(PlanKey::new("a", 1) < PlanKey::new("a", 2));
+    }
+}

@@ -7,8 +7,10 @@
 //! distributed code generation".  Each TX/RX FIFO pair receives a
 //! dedicated TCP port (base_port + edge index).
 
+pub mod cache;
 pub mod plan;
 
+pub use cache::{PlanCache, PlanKey};
 pub use plan::{DeploymentPlan, DevicePlan, RxSpec, TxSpec};
 
 use crate::dataflow::{ActorSpec, AppGraph};
@@ -86,6 +88,7 @@ pub fn compile(
                     edge_index: ei,
                     port,
                     peer_device: dst_dev.clone(),
+                    peer_host: platform.host_of(&dst_dev).to_string(),
                     token_bytes: e.token_bytes,
                     link: link.clone(),
                 });
@@ -100,11 +103,19 @@ pub fn compile(
                 ));
                 let d = plan.actor_ids[dst_name];
                 plan.graph.connect_rated(rx_id, d, e.token_bytes, e.capacity, rate, e.initial_tokens);
+                // A device that declares a host expects remote peers, so
+                // its listeners must not be loopback-only.
+                let bind_host = if platform.hosts.contains_key(&dst_dev) {
+                    "0.0.0.0".to_string()
+                } else {
+                    crate::platform::DEFAULT_HOST.to_string()
+                };
                 plan.rx.push(RxSpec {
                     actor: rx_name,
                     edge_index: ei,
                     port,
                     peer_device: src_dev.clone(),
+                    bind_host,
                     token_bytes: e.token_bytes,
                     link,
                 });
@@ -223,6 +234,25 @@ mod tests {
         let spec = e.graph.actor(src_id);
         assert_eq!(spec.out_ports[0].token_bytes, 4);
         assert_eq!(spec.out_ports[1].token_bytes, 8);
+    }
+
+    #[test]
+    fn tx_spec_carries_platform_host_with_localhost_fallback() {
+        let g = chain_graph();
+        let mut pg = platform();
+        let order: Vec<String> = ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        let m = Mapping::partition_point(&order, 2, "edge", "server");
+        // No host map: localhost fallback, loopback-only listener.
+        let plan = compile(&g, &pg, &m, 7200).unwrap();
+        assert_eq!(plan.per_device["edge"].tx[0].peer_host, crate::platform::DEFAULT_HOST);
+        assert_eq!(plan.per_device["server"].rx[0].bind_host, crate::platform::DEFAULT_HOST);
+        // Host map entry for the RX-side device propagates into the TX
+        // spec, and flips that device's listeners off loopback.
+        pg.set_host("server", "10.0.0.7");
+        let plan = compile(&g, &pg, &m, 7300).unwrap();
+        assert_eq!(plan.per_device["edge"].tx[0].peer_host, "10.0.0.7");
+        assert_eq!(plan.per_device["server"].rx[0].bind_host, "0.0.0.0");
+        assert!(plan.to_json().to_string().contains("10.0.0.7"));
     }
 
     #[test]

@@ -16,6 +16,9 @@ pub struct TxSpec {
     /// Dedicated TCP port of this TX/RX FIFO pair.
     pub port: u16,
     pub peer_device: String,
+    /// Address the TX FIFO connects to: the peer device's host from the
+    /// platform graph's host map (localhost in the simulated testbed).
+    pub peer_host: String,
     pub token_bytes: usize,
     pub link: LinkModel,
 }
@@ -26,11 +29,14 @@ pub struct RxSpec {
     pub edge_index: usize,
     pub port: u16,
     pub peer_device: String,
+    /// Address the RX listener binds: `0.0.0.0` when this device has a
+    /// host-map entry (peers connect from elsewhere), loopback otherwise.
+    pub bind_host: String,
     pub token_bytes: usize,
     pub link: LinkModel,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct DevicePlan {
     pub device: String,
     /// Local subgraph including the spliced `__tx*` / `__rx*` actors.
@@ -42,7 +48,7 @@ pub struct DevicePlan {
     pub rx: Vec<RxSpec>,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct DeploymentPlan {
     pub per_device: BTreeMap<String, DevicePlan>,
     pub base_port: u16,
@@ -87,6 +93,7 @@ impl DeploymentPlan {
                             ("edge", Json::from(t.edge_index)),
                             ("port", Json::from(t.port as usize)),
                             ("peer", Json::from(t.peer_device.as_str())),
+                            ("peer_host", Json::from(t.peer_host.as_str())),
                             ("bytes", Json::from(t.token_bytes)),
                         ])
                     })
@@ -100,6 +107,7 @@ impl DeploymentPlan {
                             ("edge", Json::from(r.edge_index)),
                             ("port", Json::from(r.port as usize)),
                             ("peer", Json::from(r.peer_device.as_str())),
+                            ("bind_host", Json::from(r.bind_host.as_str())),
                         ])
                     })
                     .collect();

@@ -31,19 +31,30 @@ pub struct EdgeSpec {
     pub initial_tokens: usize,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum GraphError {
-    #[error("unknown actor id {0}")]
     UnknownActor(usize),
-    #[error("actor {actor}: {msg}")]
     Actor { actor: String, msg: String },
-    #[error("edge {src}->{dst}: {msg}")]
     Edge { src: String, dst: String, msg: String },
-    #[error("graph has a cycle with no initial tokens through actor {0}")]
     Cycle(String),
-    #[error("duplicate actor name {0}")]
     DuplicateName(String),
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::UnknownActor(id) => write!(f, "unknown actor id {id}"),
+            GraphError::Actor { actor, msg } => write!(f, "actor {actor}: {msg}"),
+            GraphError::Edge { src, dst, msg } => write!(f, "edge {src}->{dst}: {msg}"),
+            GraphError::Cycle(actor) => {
+                write!(f, "graph has a cycle with no initial tokens through actor {actor}")
+            }
+            GraphError::DuplicateName(name) => write!(f, "duplicate actor name {name}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 #[derive(Debug, Clone, Default)]
 pub struct AppGraph {

@@ -5,8 +5,10 @@
 //! framework: the VR-PRUNE dataflow model of computation, the graph
 //! analyzer, the compiler/synthesizer (automatic TX/RX FIFO insertion),
 //! the thread-per-actor runtime with TCP transmit/receive FIFOs, the
-//! partition-point Explorer, and the PJRT bridge that executes the
-//! AOT-compiled per-actor HLO executables produced by `python/compile`.
+//! partition-point Explorer, the PJRT bridge that executes the
+//! AOT-compiled per-actor HLO executables produced by `python/compile`,
+//! and the multi-tenant edge inference server (`server`): session
+//! manager, cross-session micro-batching, and a core-pinned worker pool.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results.
@@ -19,6 +21,7 @@ pub mod compiler;
 pub mod dataflow;
 pub mod explorer;
 pub mod platform;
+pub mod server;
 pub mod util;
 pub mod vision;
 

@@ -13,6 +13,8 @@
 //!       --link n2_i7_eth --frames 48 --time-scale 4
 //!   edge-prune worker --model vehicle --role server --pp 3 &
 //!   edge-prune worker --model vehicle --role endpoint --pp 3
+//!   edge-prune serve --port 7411 --max-sessions 32 &
+//!   edge-prune loadgen --addr 127.0.0.1:7411 --clients 8 --requests 100
 
 use anyhow::{anyhow, bail, Result};
 use edge_prune::explorer::{format_table, sweep, SweepConfig};
@@ -33,13 +35,18 @@ fn main() {
 }
 
 const USAGE: &str = "\
-edge-prune <analyze|compile|run|explore|worker|version> [flags]
+edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
   common: --model vehicle|ssd|vehicle_dual  --artifacts DIR  --configs FILE
   run:     --device NAME --frames N --variant jnp|pallas --time-scale S
   compile: --endpoint NAME --server NAME --link NAME --pp K --base-port P
   explore: --endpoint NAME --server NAME --link NAME --pps 1,2,3 --frames N
            --time-scale S --json
   worker:  --role endpoint|server --pp K (+ compile flags)
+  serve:   --port P --bind HOST --max-sessions N --max-queue N --max-batch N
+           --batch-linger-us US --workers N --no-pin --idle-timeout SECS
+           --duration SECS (0 = until killed)
+  loadgen: --addr HOST:PORT --clients N --requests N --pp K --link NAME
+           --seed S --json
 ";
 
 fn run() -> Result<()> {
@@ -55,6 +62,8 @@ fn run() -> Result<()> {
         "run" => cmd_run(&args),
         "explore" => cmd_explore(&args),
         "worker" => cmd_worker(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -206,6 +215,77 @@ fn cmd_explore(args: &Args) -> Result<()> {
         println!("{}", report.to_json());
     } else {
         print!("{}", format_table(&report));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use edge_prune::server::{Server, ServerConfig};
+    let port = args.usize_or("port", 7411)?;
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range (max {})", u16::MAX);
+    }
+    let linger_us = args.usize_or("batch-linger-us", 500)? as u64;
+    let max_sessions = args.usize_or("max-sessions", 64)?;
+    let cfg = ServerConfig {
+        addr: format!("{}:{port}", args.str_or("bind", "127.0.0.1")),
+        max_sessions,
+        max_queue: args.usize_or("max-queue", 1024)?,
+        max_batch: args.usize_or("max-batch", 8)?,
+        batch_linger: std::time::Duration::from_micros(linger_us),
+        workers: args.usize_or("workers", 0)?,
+        pin_workers: !args.bool_flag("no-pin"),
+        session_idle_timeout: std::time::Duration::from_secs(
+            args.usize_or("idle-timeout", 300)? as u64,
+        ),
+    };
+    let duration = args.usize_or("duration", 0)?;
+    let server = Server::start(cfg)?;
+    eprintln!(
+        "edge-prune serve: listening on {} ({max_sessions} sessions max); \
+         model: synthetic pp 1..=5",
+        server.addr()
+    );
+    if duration == 0 {
+        // Serve until killed; print a status line every 10 s.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(10));
+            eprintln!(
+                "edge-prune serve: {} active sessions, queue depth {}",
+                server.active_sessions(),
+                server.queue_depth()
+            );
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration as u64));
+    let metrics = server.shutdown();
+    println!("{metrics}");
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use edge_prune::server::loadgen::{run_loadgen, LoadgenConfig};
+    let link = match args.str_opt("link") {
+        None | Some("ideal") => None,
+        Some(name) => Some(configs(args)?.link(name)?),
+    };
+    let cfg = LoadgenConfig {
+        addr: args.str_or("addr", "127.0.0.1:7411").to_string(),
+        clients: args.usize_or("clients", 8)?,
+        requests: args.usize_or("requests", 100)? as u64,
+        pp: args.usize_or("pp", 3)?,
+        model: args.str_or("model", "synthetic").to_string(),
+        link,
+        seed: args.usize_or("seed", 7)? as u64,
+    };
+    let report = run_loadgen(&cfg)?;
+    if args.bool_flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        println!("{}", report.summary());
+    }
+    if report.lost() > 0 {
+        bail!("{} requests lost", report.lost());
     }
     Ok(())
 }

@@ -1,0 +1,124 @@
+//! CPU affinity control for the thread-per-core serving worker pool.
+//!
+//! Pins the *calling* thread to one core with `sched_setaffinity(2)`
+//! (pid 0 = current thread), declared directly against glibc so no
+//! bindings crate is needed.  Non-Linux builds compile to a no-op that
+//! reports "not pinned" — the server runs unpinned there.
+
+use anyhow::{bail, Result};
+
+/// Width of the kernel cpu_set_t we pass (1024 CPUs, glibc's default).
+const CPU_SET_WORDS: usize = 16;
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+}
+
+/// Pin the calling thread to `core`.  Returns `Ok(true)` when the kernel
+/// accepted the mask, `Ok(false)` on platforms without affinity support.
+pub fn pin_to_core(core: usize) -> Result<bool> {
+    if core >= CPU_SET_WORDS * 64 {
+        bail!("core index {core} out of range (max {})", CPU_SET_WORDS * 64 - 1);
+    }
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; CPU_SET_WORDS];
+        mask[core / 64] |= 1u64 << (core % 64);
+        let rc = unsafe { sched_setaffinity(0, CPU_SET_WORDS * 8, mask.as_ptr()) };
+        if rc != 0 {
+            bail!("sched_setaffinity(core {core}) failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(true)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        Ok(false)
+    }
+}
+
+/// Affinity mask of the calling thread as a core-index list (empty on
+/// platforms without affinity support).
+pub fn current_affinity() -> Result<Vec<usize>> {
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; CPU_SET_WORDS];
+        let rc = unsafe { sched_getaffinity(0, CPU_SET_WORDS * 8, mask.as_mut_ptr()) };
+        if rc != 0 {
+            bail!("sched_getaffinity failed: {}", std::io::Error::last_os_error());
+        }
+        let mut cores = Vec::new();
+        for (w, bits) in mask.iter().enumerate() {
+            for b in 0..64 {
+                if bits & (1u64 << b) != 0 {
+                    cores.push(w * 64 + b);
+                }
+            }
+        }
+        Ok(cores)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        Ok(Vec::new())
+    }
+}
+
+/// Restore a full affinity mask over `cores` (used to undo pinning).
+pub fn set_affinity(cores: &[usize]) -> Result<bool> {
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; CPU_SET_WORDS];
+        for &c in cores {
+            if c >= CPU_SET_WORDS * 64 {
+                bail!("core index {c} out of range");
+            }
+            mask[c / 64] |= 1u64 << (c % 64);
+        }
+        let rc = unsafe { sched_setaffinity(0, CPU_SET_WORDS * 8, mask.as_ptr()) };
+        if rc != 0 {
+            bail!("sched_setaffinity failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(true)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cores;
+        Ok(false)
+    }
+}
+
+/// Number of cores available to this process (worker-pool sizing default).
+pub fn core_count() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_and_restore_round_trip() {
+        let before = current_affinity().unwrap();
+        match pin_to_core(0) {
+            Ok(true) => {
+                assert_eq!(current_affinity().unwrap(), vec![0]);
+                // Undo so later tests on this thread are unaffected.
+                set_affinity(&before).unwrap();
+                assert_eq!(current_affinity().unwrap(), before);
+            }
+            Ok(false) => {} // non-Linux: nothing to assert
+            Err(e) => panic!("pin_to_core(0): {e:#}"),
+        }
+    }
+
+    #[test]
+    fn out_of_range_core_rejected() {
+        assert!(pin_to_core(1 << 20).is_err());
+    }
+
+    #[test]
+    fn core_count_positive() {
+        assert!(core_count() >= 1);
+    }
+}

@@ -6,6 +6,7 @@
 //! Here a *device* is one simulated platform (Table I: i7 / N2 / N270) and
 //! a *link* is a shaped interconnect between two devices (Table II).
 
+pub mod affinity;
 pub mod configs;
 pub mod mapping;
 
@@ -18,11 +19,19 @@ use std::path::Path;
 
 pub use mapping::Mapping;
 
+/// Host every device resolves to when the platform graph has no explicit
+/// entry (the simulated single-machine testbed).
+pub const DEFAULT_HOST: &str = "127.0.0.1";
+
 #[derive(Debug, Clone)]
 pub struct PlatformGraph {
     pub devices: BTreeMap<String, DeviceModel>,
     /// Undirected links keyed by canonical (min, max) device-name pair.
     pub links: BTreeMap<(String, String), LinkModel>,
+    /// Device name -> reachable host/IP.  Devices without an entry fall
+    /// back to `DEFAULT_HOST` — a real deployment lists each device's
+    /// address here (configs/platforms.json `"host"` key).
+    pub hosts: BTreeMap<String, String>,
 }
 
 fn key(a: &str, b: &str) -> (String, String) {
@@ -35,7 +44,11 @@ fn key(a: &str, b: &str) -> (String, String) {
 
 impl PlatformGraph {
     pub fn new() -> Self {
-        PlatformGraph { devices: BTreeMap::new(), links: BTreeMap::new() }
+        PlatformGraph {
+            devices: BTreeMap::new(),
+            links: BTreeMap::new(),
+            hosts: BTreeMap::new(),
+        }
     }
 
     pub fn add_device(&mut self, d: DeviceModel) -> &mut Self {
@@ -50,6 +63,17 @@ impl PlatformGraph {
 
     pub fn device(&self, name: &str) -> Result<&DeviceModel> {
         self.devices.get(name).ok_or_else(|| anyhow!("unknown device {name}"))
+    }
+
+    /// Record the reachable address of a device.
+    pub fn set_host(&mut self, device: &str, host: &str) -> &mut Self {
+        self.hosts.insert(device.to_string(), host.to_string());
+        self
+    }
+
+    /// Host a device is reachable at; `DEFAULT_HOST` when unmapped.
+    pub fn host_of(&self, device: &str) -> &str {
+        self.hosts.get(device).map(String::as_str).unwrap_or(DEFAULT_HOST)
     }
 
     pub fn link(&self, a: &str, b: &str) -> Result<&LinkModel> {
@@ -107,6 +131,10 @@ impl PlatformGraph {
         let mut pg = PlatformGraph::new();
         for (name, d) in v.get("devices")?.obj()? {
             pg.add_device(DeviceModel::from_json(name, d)?);
+            if let Some(h) = d.opt("host") {
+                let host = h.str()?.to_string();
+                pg.set_host(name, &host);
+            }
         }
         if let Some(links) = v.opt("links") {
             for l in links.arr()? {
@@ -182,6 +210,32 @@ mod tests {
         assert!(pg.validate_mapping(&m, &g).is_err());
         m.assign("y", "bogus-device");
         assert!(pg.validate_mapping(&m, &g).is_err());
+    }
+
+    #[test]
+    fn host_map_falls_back_to_localhost() {
+        let mut pg = two_device_platform();
+        assert_eq!(pg.host_of("n2"), DEFAULT_HOST);
+        pg.set_host("n2", "10.1.2.3");
+        assert_eq!(pg.host_of("n2"), "10.1.2.3");
+        assert_eq!(pg.host_of("i7"), DEFAULT_HOST);
+        assert_eq!(pg.host_of("not-a-device"), DEFAULT_HOST);
+    }
+
+    #[test]
+    fn from_json_parses_device_hosts() {
+        let j = Json::parse(
+            r#"{
+              "devices": {
+                "n2": {"cores": 6, "host": "192.168.0.12"},
+                "i7": {"cores": 8}
+              }
+            }"#,
+        )
+        .unwrap();
+        let pg = PlatformGraph::from_json(&j).unwrap();
+        assert_eq!(pg.host_of("n2"), "192.168.0.12");
+        assert_eq!(pg.host_of("i7"), DEFAULT_HOST);
     }
 
     #[test]

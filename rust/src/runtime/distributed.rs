@@ -15,7 +15,7 @@ use crate::runtime::device::DeviceModel;
 use crate::runtime::engine::Engine;
 use crate::runtime::kernels::ActorKernel;
 use crate::runtime::metrics::RunReport;
-use crate::runtime::net::{bind_local, RxKernel, TxKernel};
+use crate::runtime::net::{bind_on, RxKernel, TxKernel};
 use crate::runtime::netsim::LinkShaper;
 use crate::runtime::xla_exec::XlaService;
 use anyhow::{anyhow, Result};
@@ -25,18 +25,14 @@ use std::time::Duration;
 
 pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(20);
 
-/// Host lookup for peer devices (everything is localhost in the simulated
-/// testbed; a real deployment would read this from the platform graph).
-pub fn peer_host(_device: &str) -> &'static str {
-    "127.0.0.1"
-}
-
 /// Phase 1: bind all RX listeners of a device plan (do this on every
-/// device *before* any TX connect, to avoid startup races).
+/// device *before* any TX connect, to avoid startup races).  The bind
+/// address comes from the plan: loopback in the simulated testbed,
+/// 0.0.0.0 for devices the platform host map marks as remote-reachable.
 pub fn bind_rx_listeners(plan: &DevicePlan) -> Result<BTreeMap<String, TcpListener>> {
     let mut listeners = BTreeMap::new();
     for rx in &plan.rx {
-        listeners.insert(rx.actor.clone(), bind_local(rx.port)?);
+        listeners.insert(rx.actor.clone(), bind_on(&rx.bind_host, rx.port)?);
     }
     Ok(listeners)
 }
@@ -55,7 +51,9 @@ pub fn bind_net_kernels(
             .entry(tx.link.name.clone())
             .or_insert_with(|| LinkShaper::new(tx.link.clone()))
             .clone();
-        let addr = format!("{}:{}", peer_host(&tx.peer_device), tx.port);
+        // Compiled plans embed the peer's host from the platform graph's
+        // host map (localhost fallback) — no hard-coded address here.
+        let addr = format!("{}:{}", tx.peer_host, tx.port);
         let kernel = TxKernel::connect(&addr, shaper, CONNECT_TIMEOUT)?;
         kernels.insert(tx.actor.clone(), Box::new(kernel));
     }
@@ -123,22 +121,10 @@ pub fn run_deployment(
             .clone();
         let opts = opts.clone();
         let meta = meta.clone();
-        // SAFETY-free trick: DevicePlan isn't Clone (holds AppGraph which
-        // is), so rebuild the pieces we need in the thread via clones.
-        let graph = dp.graph.clone();
-        let tx = dp.tx.clone();
-        let rx = dp.rx.clone();
+        let plan = dp.clone();
         let dev_name = dev.clone();
         handles.push(std::thread::Builder::new().name(format!("device-{dev}")).spawn(
             move || -> Result<(String, RunReport)> {
-                let plan = DevicePlan {
-                    device: dev_name.clone(),
-                    graph,
-                    actor_ids: BTreeMap::new(),
-                    original_actors: Vec::new(),
-                    tx,
-                    rx,
-                };
                 let report = run_device(&plan, &meta, &service, device, listeners, &opts)?;
                 Ok((dev_name, report))
             },

@@ -251,6 +251,41 @@ mod tests {
     }
 
     #[test]
+    fn slow_consumer_backpressures_producer() {
+        // Capacity-2 FIFO, consumer pops one token every 4 ms: the
+        // producer cannot run ahead, so pushing 20 tokens takes at least
+        // (20 - 2) * 4 ms and occupancy never exceeds capacity.
+        let f = Arc::new(Fifo::new(2));
+        let f2 = f.clone();
+        let producer = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            for i in 0..20 {
+                assert!(f2.push(tok(i)));
+            }
+            t0.elapsed()
+        });
+        let consumer = std::thread::spawn({
+            let f = f.clone();
+            move || {
+                let mut n = 0;
+                while n < 20 {
+                    std::thread::sleep(Duration::from_millis(4));
+                    if f.pop_n(1).is_some() {
+                        n += 1;
+                    }
+                }
+            }
+        });
+        let produce_time = producer.join().unwrap();
+        consumer.join().unwrap();
+        assert!(
+            produce_time >= Duration::from_millis(60),
+            "producer outran the slow consumer: {produce_time:?}"
+        );
+        assert!(f.max_occupancy() <= 2, "occupancy {} > capacity", f.max_occupancy());
+    }
+
+    #[test]
     fn concurrent_producers_consumers_conserve_tokens() {
         let f = Arc::new(Fifo::new(4));
         let producers: Vec<_> = (0..4)

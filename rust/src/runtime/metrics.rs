@@ -1,9 +1,13 @@
 //! Execution metrics: per-actor firing counts and busy time, plus
 //! pipeline-level frame accounting.  This is what the Explorer's profiling
 //! mode and the figure benches read out.
+//!
+//! Also home to the lock-free `LatencyHistogram` the serving layer
+//! (`crate::server`) uses for per-plan p50/p95/p99 request latency.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -99,6 +103,108 @@ impl RunReport {
     }
 }
 
+/// Lock-free log-linear latency histogram (HDR-style): exact buckets
+/// below 8 µs, then 8 linear sub-buckets per power of two — quantile
+/// error is bounded at ~6% of the value, with constant memory and
+/// wait-free `record` from any number of threads.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 512;
+
+fn hist_index(us: u64) -> usize {
+    if us < 8 {
+        return us as usize;
+    }
+    let msb = 63 - u64::from(us.leading_zeros());
+    (((msb << 3) | ((us >> (msb - 3)) & 7)) as usize).min(HIST_BUCKETS - 1)
+}
+
+fn hist_value_us(idx: usize) -> f64 {
+    if idx < 8 {
+        return idx as f64;
+    }
+    let msb = (idx >> 3) as u64;
+    let sub = (idx & 7) as u64;
+    let lo = (1u64 << msb) | (sub << (msb - 3));
+    let width = 1u64 << (msb - 3);
+    lo as f64 + width as f64 / 2.0
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[hist_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    /// Latency at quantile `q` in [0, 1], in milliseconds (0.0 if empty).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        // Snapshot the buckets once and derive the target from that same
+        // snapshot: concurrent `record_us` calls (bucket and count are
+        // independent Relaxed atomics) can otherwise make the scan fall
+        // off the end and report the top bucket.
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let n: u64 = counts.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return hist_value_us(i) / 1e3;
+            }
+        }
+        hist_value_us(HIST_BUCKETS - 1) / 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("count", Json::from(self.count())),
+            ("mean_ms", Json::from(self.mean_ms())),
+            ("p50_ms", Json::from(self.quantile_ms(0.50))),
+            ("p95_ms", Json::from(self.quantile_ms(0.95))),
+            ("p99_ms", Json::from(self.quantile_ms(0.99))),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +248,45 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("device").unwrap().str().unwrap(), "d");
         assert_eq!(j.get("frames").unwrap().int().unwrap(), 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_order_of_magnitude_right() {
+        let h = LatencyHistogram::new();
+        for _ in 0..900 {
+            h.record(Duration::from_micros(1_000)); // 1 ms
+        }
+        for _ in 0..100 {
+            h.record(Duration::from_micros(100_000)); // 100 ms tail
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_ms(0.50);
+        let p99 = h.quantile_ms(0.99);
+        assert!((0.9..=1.2).contains(&p50), "p50 {p50}");
+        assert!((85.0..=115.0).contains(&p99), "p99 {p99}");
+        assert!(h.mean_ms() > p50 && h.mean_ms() < p99);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().int().unwrap(), 1000);
+    }
+
+    #[test]
+    fn histogram_empty_and_small_values() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        h.record_us(0);
+        h.record_us(3);
+        assert!(h.quantile_ms(1.0) <= 0.004);
+    }
+
+    #[test]
+    fn histogram_bucket_index_monotone() {
+        let mut last = 0usize;
+        for us in [0u64, 1, 7, 8, 9, 100, 1000, 65_535, 1 << 30, u64::MAX] {
+            let idx = hist_index(us);
+            assert!(idx >= last, "index not monotone at {us}");
+            last = idx;
+        }
+        assert!(hist_index(u64::MAX) < HIST_BUCKETS);
     }
 
     #[test]

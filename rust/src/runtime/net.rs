@@ -137,7 +137,14 @@ impl ActorKernel for RxKernel {
 
 /// Bind a listener on 127.0.0.1:`port` (port 0 = ephemeral, for tests).
 pub fn bind_local(port: u16) -> Result<TcpListener> {
-    TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding RX FIFO port {port}"))
+    bind_on("127.0.0.1", port)
+}
+
+/// Bind a listener on `host`:`port` (RX FIFOs of devices with a host-map
+/// entry bind 0.0.0.0 so remote TX peers can reach them).
+pub fn bind_on(host: &str, port: u16) -> Result<TcpListener> {
+    TcpListener::bind((host, port))
+        .with_context(|| format!("binding RX FIFO on {host}:{port}"))
 }
 
 #[cfg(test)]
@@ -221,6 +228,31 @@ mod tests {
         header[16..20].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         c.write_all(&header).unwrap();
         assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn shaped_link_delays_delivery_end_to_end() {
+        // Latency-only link: the RX kernel must not release a token until
+        // send_ts + latency, measured across a real socket.
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let shaper = LinkShaper::new(LinkModel::new("lat", 0.0, 40.0));
+        let s2 = shaper.clone();
+        let rx_h = std::thread::spawn(move || {
+            let mut rx = RxKernel::accept(listener, s2, 1).unwrap();
+            let t0 = std::time::Instant::now();
+            let out = rx.fire(&[], 0).unwrap();
+            (t0.elapsed(), matches!(out, FireOutcome::Produced(_)))
+        });
+        let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(2)).unwrap();
+        tx.fire(&[vec![Token::new(vec![1u8; 256], 0)]], 0).unwrap();
+        let (elapsed, produced) = rx_h.join().unwrap();
+        assert!(produced);
+        assert!(
+            elapsed >= Duration::from_millis(35),
+            "token delivered after {elapsed:?}, link latency is 40 ms"
+        );
+        drop(tx);
     }
 
     #[test]

@@ -184,6 +184,45 @@ mod tests {
     }
 
     #[test]
+    fn observed_throughput_never_exceeds_model() {
+        // 5 MB/s model; 10 x 50 KB = 500 KB must take >= 100 ms, i.e. the
+        // observed rate stays at or below the configured rate (+ jitter).
+        let shaper = LinkShaper::new(LinkModel::new("t", 5.0, 0.0));
+        let bytes_total = 10 * 50_000;
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            shaper.send_slot(50_000);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let observed_mb_s = bytes_total as f64 / 1e6 / secs;
+        assert!(observed_mb_s <= 5.5, "observed {observed_mb_s} MB/s over a 5 MB/s link");
+        assert!(secs >= 0.095, "500 KB at 5 MB/s finished in {secs} s");
+    }
+
+    #[test]
+    fn latency_injection_bounds_observed_delay() {
+        // One-way latency of 25 ms: a message stamped at send time is not
+        // deliverable earlier than ts + 25 ms, and is released promptly
+        // after (within scheduler slack).
+        let shaper = LinkShaper::new(LinkModel::new("t", 0.0, 25.0));
+        let ts = shaper.send_slot(1024);
+        let t0 = Instant::now();
+        shaper.delivery_wait(ts);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(23), "waited only {waited:?}");
+        // A stale timestamp (already past its delivery time) must not
+        // wait another latency period — latency injects delay, it never
+        // accumulates.  Five stale waits with latency wrongly re-applied
+        // would take >= 125 ms; the bound is generous for CI scheduler
+        // stalls while still catching that.
+        let t1 = Instant::now();
+        for _ in 0..5 {
+            shaper.delivery_wait(ts);
+        }
+        assert!(t1.elapsed() < Duration::from_millis(100), "stale waits took {:?}", t1.elapsed());
+    }
+
+    #[test]
     fn delivery_wait_enforces_latency() {
         let shaper = LinkShaper::new(LinkModel::new("t", 0.0, 20.0));
         let ts = SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_nanos() as u64;

@@ -1,0 +1,235 @@
+//! Admission-controlled cross-session micro-batching queue.
+//!
+//! Every session reader pushes its decoded requests here; the single
+//! dispatcher pops *batches*: it takes the oldest request, then coalesces
+//! further requests of the **same plan key** (other sessions included —
+//! that is the cross-session win) up to `max_batch`, lingering briefly if
+//! the queue runs dry mid-batch.  Requests for other plans keep their
+//! arrival order for the next batch.
+//!
+//! Admission control is the bounded depth: `push` refuses instead of
+//! blocking, and the session layer turns the refusal into an explicit
+//! `rejected` response — under overload the server sheds load visibly
+//! rather than letting queues grow without bound.
+
+use super::metrics::PlanMetrics;
+use super::model::ServerModelPlan;
+use super::protocol::Response;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted inference request, queued for dispatch.
+pub struct PendingRequest {
+    pub session: u64,
+    pub req_id: u64,
+    pub plan: Arc<ServerModelPlan>,
+    pub plan_metrics: Arc<PlanMetrics>,
+    pub payload: Vec<u8>,
+    pub enqueued: Instant,
+    /// Hand-off to the owning session's writer thread.
+    pub reply: mpsc::Sender<Response>,
+}
+
+struct QueueState {
+    queue: VecDeque<PendingRequest>,
+    closed: bool,
+}
+
+pub struct BatchQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    max_depth: usize,
+}
+
+impl BatchQueue {
+    pub fn new(max_depth: usize) -> Self {
+        assert!(max_depth > 0, "queue depth must be positive");
+        BatchQueue {
+            state: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            max_depth,
+        }
+    }
+
+    /// Admit one request.  Returns the new depth, or the request plus a
+    /// client-facing reason when refused (caller sends the reject — a
+    /// shutdown refusal must not read as transient overload).
+    pub fn push(&self, req: PendingRequest) -> Result<usize, (PendingRequest, &'static str)> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err((req, "server shutting down"));
+        }
+        if s.queue.len() >= self.max_depth {
+            return Err((req, "admission: request queue full"));
+        }
+        s.queue.push_back(req);
+        let depth = s.queue.len();
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Block for the next batch: oldest request first, coalescing
+    /// same-plan requests up to `max_batch`, waiting at most `linger`
+    /// for stragglers once a batch has started forming.  `None` when the
+    /// queue is closed and fully drained.
+    pub fn pop_batch(&self, max_batch: usize, linger: Duration) -> Option<Vec<PendingRequest>> {
+        let max_batch = max_batch.max(1);
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(first) = s.queue.pop_front() {
+                let key = first.plan.key.clone();
+                let mut batch = vec![first];
+                Self::drain_matching(&mut s.queue, &key, &mut batch, max_batch);
+                let deadline = Instant::now() + linger;
+                // Linger only while the queue is actually dry: anything
+                // still queued here is another plan's work, and stalling
+                // it for stragglers of THIS plan would trade its latency
+                // for our occupancy.
+                while batch.len() < max_batch && s.queue.is_empty() && !s.closed {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (next, timeout) =
+                        self.not_empty.wait_timeout(s, deadline - now).unwrap();
+                    s = next;
+                    Self::drain_matching(&mut s.queue, &key, &mut batch, max_batch);
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+                return Some(batch);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    fn drain_matching(
+        queue: &mut VecDeque<PendingRequest>,
+        key: &crate::compiler::PlanKey,
+        batch: &mut Vec<PendingRequest>,
+        max_batch: usize,
+    ) {
+        let mut i = 0;
+        while i < queue.len() && batch.len() < max_batch {
+            if queue[i].plan.key == *key {
+                batch.push(queue.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Stop admitting; wake the dispatcher so it can drain and exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::PlanKey;
+    use crate::server::model::{compile_server_plan, MODEL_NAME};
+
+    fn plan(pp: usize) -> Arc<ServerModelPlan> {
+        Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, pp)).unwrap())
+    }
+
+    fn req(session: u64, req_id: u64, plan: &Arc<ServerModelPlan>) -> PendingRequest {
+        // Queue tests never send replies; a dangling sender is fine.
+        let (tx, _rx) = mpsc::channel();
+        PendingRequest {
+            session,
+            req_id,
+            plan: plan.clone(),
+            plan_metrics: Arc::new(PlanMetrics::default()),
+            payload: Vec::new(),
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn coalesces_same_plan_across_sessions() {
+        let q = BatchQueue::new(16);
+        let p2 = plan(2);
+        let p3 = plan(3);
+        q.push(req(1, 0, &p2)).map_err(|_| ()).unwrap();
+        q.push(req(2, 0, &p3)).map_err(|_| ()).unwrap();
+        q.push(req(3, 0, &p2)).map_err(|_| ()).unwrap();
+        q.push(req(4, 0, &p2)).map_err(|_| ()).unwrap();
+        let batch = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 3, "all pp2 requests coalesce past the pp3 one");
+        assert!(batch.iter().all(|r| r.plan.key.pp == 2));
+        let batch = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].plan.key.pp, 3);
+    }
+
+    #[test]
+    fn batch_size_is_bounded() {
+        let q = BatchQueue::new(16);
+        let p = plan(1);
+        for i in 0..6 {
+            q.push(req(1, i, &p)).map_err(|_| ()).unwrap();
+        }
+        let batch = q.pop_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn full_queue_refuses_admission() {
+        let q = BatchQueue::new(2);
+        let p = plan(1);
+        assert!(q.push(req(1, 0, &p)).is_ok());
+        assert!(q.push(req(1, 1, &p)).is_ok());
+        let (back, why) = q.push(req(1, 2, &p)).err().unwrap();
+        assert_eq!(back.req_id, 2);
+        assert!(why.contains("queue full"), "{why}");
+    }
+
+    #[test]
+    fn linger_waits_for_stragglers() {
+        let q = Arc::new(BatchQueue::new(16));
+        let p = plan(2);
+        q.push(req(1, 0, &p)).map_err(|_| ()).unwrap();
+        let q2 = q.clone();
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.push(req(2, 1, &p2)).map_err(|_| ()).unwrap();
+        });
+        let batch = q.pop_batch(2, Duration::from_millis(300));
+        h.join().unwrap();
+        assert_eq!(batch.unwrap().len(), 2, "straggler joined within linger");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = BatchQueue::new(4);
+        let p = plan(1);
+        q.push(req(1, 0, &p)).map_err(|_| ()).unwrap();
+        q.close();
+        let (_, why) = q.push(req(1, 1, &p)).err().unwrap();
+        assert!(why.contains("shutting down"), "closed queue must say so, got {why}");
+        assert_eq!(q.pop_batch(4, Duration::ZERO).unwrap().len(), 1);
+        assert!(q.pop_batch(4, Duration::ZERO).is_none());
+    }
+}

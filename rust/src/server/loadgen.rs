@@ -1,0 +1,262 @@
+//! Synthetic client fleet: N concurrent sessions against one server,
+//! each shaped by an optional `netsim::LinkShaper` uplink profile, each
+//! verifying every response against the locally computed ground truth
+//! (the split model's digest is partition-point independent, so a client
+//! at any pp can check the server byte-for-byte).
+//!
+//! Accounting is strict: a request is `ok`, `rejected` (admission),
+//! `errored`, or `lost` (sent but never answered) — `lost() == 0` is the
+//! zero-drop acceptance criterion.
+
+use super::model::{client_prepare, expected_digest, make_input, MODEL_NAME};
+use super::protocol::{
+    read_handshake_reply, read_response, write_handshake, write_request, Handshake, RespStatus,
+};
+use crate::runtime::metrics::LatencyHistogram;
+use crate::runtime::netsim::{LinkModel, LinkShaper};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: u64,
+    /// Partition point each session handshakes with.
+    pub pp: usize,
+    pub model: String,
+    /// Uplink profile per client (None = unshaped localhost).
+    pub link: Option<LinkModel>,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            clients: 1,
+            requests: 16,
+            pp: 3,
+            model: MODEL_NAME.to_string(),
+            link: None,
+            seed: 7,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Tally {
+    session_rejected: bool,
+    sent: u64,
+    ok: u64,
+    rejected: u64,
+    errors: u64,
+}
+
+#[derive(Debug)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub sessions_rejected: u64,
+    pub sent: u64,
+    pub ok: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub wall: Duration,
+    pub latency: Arc<LatencyHistogram>,
+}
+
+impl LoadReport {
+    /// Requests that were sent but never got an explicit outcome.
+    pub fn lost(&self) -> u64 {
+        self.sent - self.ok - self.rejected - self.errors
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.ok as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("clients", Json::from(self.clients)),
+            ("sessions_rejected", Json::from(self.sessions_rejected)),
+            ("sent", Json::from(self.sent)),
+            ("ok", Json::from(self.ok)),
+            ("rejected", Json::from(self.rejected)),
+            ("errors", Json::from(self.errors)),
+            ("lost", Json::from(self.lost())),
+            ("wall_ms", Json::from(self.wall.as_secs_f64() * 1e3)),
+            ("requests_per_sec", Json::from(self.requests_per_sec())),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+
+    /// One-line human summary for the CLI and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} clients: {} ok, {} rejected, {} errors, {} lost in {:.1} ms -> {:.0} req/s \
+             (p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms)",
+            self.clients,
+            self.ok,
+            self.rejected,
+            self.errors,
+            self.lost(),
+            self.wall.as_secs_f64() * 1e3,
+            self.requests_per_sec(),
+            self.latency.quantile_ms(0.50),
+            self.latency.quantile_ms(0.95),
+            self.latency.quantile_ms(0.99),
+        )
+    }
+}
+
+fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) -> Result<Tally> {
+    let mut tally = Tally::default();
+    let mut stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("client {index} connecting to {}", cfg.addr))?;
+    stream.set_nodelay(true)?;
+    write_handshake(
+        &mut stream,
+        &Handshake {
+            model: cfg.model.clone(),
+            pp: cfg.pp,
+            client_id: format!("loadgen-{index}"),
+        },
+    )?;
+    let reply = read_handshake_reply(&mut stream)?;
+    if !reply.accepted {
+        tally.session_rejected = true;
+        return Ok(tally);
+    }
+    let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
+    for r in 0..cfg.requests {
+        let frame_seed = cfg
+            .seed
+            .wrapping_add((index as u64).wrapping_mul(1_000_003))
+            .wrapping_add(r.wrapping_mul(0x9e37_79b9));
+        let input = make_input(frame_seed);
+        let payload = client_prepare(&input, cfg.pp);
+        let expected = expected_digest(&input);
+        if let Some(s) = &shaper {
+            // Serialization pacing + one-way propagation delay, exactly
+            // like a TX FIFO riding this link.
+            let ts = s.send_slot(payload.len());
+            s.delivery_wait(ts);
+        }
+        let t0 = Instant::now();
+        if write_request(&mut stream, r, &payload).is_err() {
+            break; // connection gone before the request left
+        }
+        tally.sent += 1;
+        match read_response(&mut stream) {
+            Ok(Some(resp)) => {
+                match resp.status {
+                    // Only completed inferences feed the latency
+                    // histogram — fast rejects under overload would
+                    // deflate the very percentiles overload inflates.
+                    RespStatus::Ok if resp.body == expected => {
+                        latency.record(t0.elapsed());
+                        tally.ok += 1;
+                    }
+                    RespStatus::Ok => tally.errors += 1, // wrong bytes
+                    RespStatus::Rejected => tally.rejected += 1,
+                    RespStatus::Error => tally.errors += 1,
+                }
+            }
+            Ok(None) | Err(_) => break, // this request is lost
+        }
+    }
+    Ok(tally)
+}
+
+/// Drive `cfg.clients` concurrent sessions to completion.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    let latency = Arc::new(LatencyHistogram::new());
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.clients);
+    for index in 0..cfg.clients {
+        let cfg = cfg.clone();
+        let latency = latency.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-{index}"))
+                .spawn(move || client_main(&cfg, index, &latency))
+                .context("spawning loadgen client")?,
+        );
+    }
+    let mut report = LoadReport {
+        clients: cfg.clients,
+        sessions_rejected: 0,
+        sent: 0,
+        ok: 0,
+        rejected: 0,
+        errors: 0,
+        wall: Duration::ZERO,
+        latency,
+    };
+    // Join EVERY client before reporting or erroring — returning early
+    // would leave live clients hammering the server behind the caller's
+    // back and discard their tallies.
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(tally)) => {
+                report.sessions_rejected += tally.session_rejected as u64;
+                report.sent += tally.sent;
+                report.ok += tally.ok;
+                report.rejected += tally.rejected;
+                report.errors += tally.errors;
+            }
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err = first_err.or_else(|| Some(anyhow::anyhow!("loadgen client panicked")))
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    report.wall = t0.elapsed();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_accounting() {
+        let r = LoadReport {
+            clients: 2,
+            sessions_rejected: 0,
+            sent: 10,
+            ok: 7,
+            rejected: 2,
+            errors: 0,
+            wall: Duration::from_millis(100),
+            latency: Arc::new(LatencyHistogram::new()),
+        };
+        assert_eq!(r.lost(), 1);
+        assert!((r.requests_per_sec() - 70.0).abs() < 1e-6);
+        let j = r.to_json();
+        assert_eq!(j.get("lost").unwrap().int().unwrap(), 1);
+        assert!(r.summary().contains("1 lost"));
+    }
+
+    #[test]
+    fn connect_to_nothing_is_an_error() {
+        let cfg = LoadgenConfig {
+            addr: "127.0.0.1:1".to_string(),
+            clients: 1,
+            requests: 1,
+            ..LoadgenConfig::default()
+        };
+        assert!(run_loadgen(&cfg).is_err());
+    }
+}

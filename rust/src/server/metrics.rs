@@ -1,0 +1,142 @@
+//! Serving metrics: admission counters, queue/batch gauges, and per-plan
+//! request latency — the observability contract of the acceptance
+//! criteria ("queue depth, batch occupancy, p50/p95/p99 latency,
+//! rejects").  Latency quantiles ride on `runtime::metrics`'
+//! `LatencyHistogram`; everything else is plain atomics so the hot path
+//! never takes a lock (the per-plan map is the one exception, taken once
+//! per plan key, not per request).
+
+use crate::compiler::PlanKey;
+use crate::runtime::metrics::LatencyHistogram;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct PlanMetrics {
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    // Admission.
+    pub sessions_admitted: AtomicU64,
+    pub sessions_rejected: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    // Dispatch.
+    pub batches_dispatched: AtomicU64,
+    pub requests_batched: AtomicU64,
+    pub queue_high_water: AtomicU64,
+    // Completion (sum over plans, kept separately for cheap reads).
+    pub requests_completed: AtomicU64,
+    pub request_errors: AtomicU64,
+    per_plan: Mutex<BTreeMap<PlanKey, Arc<PlanMetrics>>>,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn plan(&self, key: &PlanKey) -> Arc<PlanMetrics> {
+        self.per_plan.lock().unwrap().entry(key.clone()).or_default().clone()
+    }
+
+    pub fn note_queue_depth(&self, depth: u64) {
+        self.queue_high_water.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn note_batch(&self, occupancy: usize) {
+        self.batches_dispatched.fetch_add(1, Ordering::Relaxed);
+        self.requests_batched.fetch_add(occupancy as u64, Ordering::Relaxed);
+    }
+
+    pub fn note_completed(&self, plan: &PlanMetrics, latency: Duration) {
+        plan.completed.fetch_add(1, Ordering::Relaxed);
+        plan.latency.record(latency);
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_error(&self, plan: &PlanMetrics) {
+        plan.errors.fetch_add(1, Ordering::Relaxed);
+        self.request_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean requests per dispatched batch (the coalescing win).
+    pub fn batch_occupancy(&self) -> f64 {
+        let batches = self.batches_dispatched.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        self.requests_batched.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let plans: Vec<Json> = self
+            .per_plan
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(key, m)| {
+                Json::from_pairs(vec![
+                    ("plan", Json::from(key.to_string().as_str())),
+                    ("completed", Json::from(m.completed.load(Ordering::Relaxed))),
+                    ("errors", Json::from(m.errors.load(Ordering::Relaxed))),
+                    ("latency", m.latency.to_json()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("sessions_admitted", Json::from(self.sessions_admitted.load(Ordering::Relaxed))),
+            ("sessions_rejected", Json::from(self.sessions_rejected.load(Ordering::Relaxed))),
+            ("requests_completed", Json::from(self.requests_completed.load(Ordering::Relaxed))),
+            ("requests_rejected", Json::from(self.requests_rejected.load(Ordering::Relaxed))),
+            ("request_errors", Json::from(self.request_errors.load(Ordering::Relaxed))),
+            ("queue_high_water", Json::from(self.queue_high_water.load(Ordering::Relaxed))),
+            ("batch_occupancy", Json::from(self.batch_occupancy())),
+            ("plans", Json::Arr(plans)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_plan_entries_are_shared() {
+        let m = ServingMetrics::new();
+        let key = PlanKey::new("synthetic", 2);
+        let a = m.plan(&key);
+        let b = m.plan(&key);
+        assert!(Arc::ptr_eq(&a, &b));
+        m.note_completed(&a, Duration::from_millis(2));
+        assert_eq!(b.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.requests_completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn batch_occupancy_averages() {
+        let m = ServingMetrics::new();
+        m.note_batch(4);
+        m.note_batch(2);
+        assert!((m.batch_occupancy() - 3.0).abs() < 1e-9);
+        m.note_queue_depth(7);
+        m.note_queue_depth(3);
+        assert_eq!(m.queue_high_water.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn json_snapshot_has_plan_rows() {
+        let m = ServingMetrics::new();
+        let p = m.plan(&PlanKey::new("synthetic", 1));
+        m.note_completed(&p, Duration::from_millis(5));
+        let j = m.to_json();
+        assert_eq!(j.get("requests_completed").unwrap().int().unwrap(), 1);
+        assert_eq!(j.get("plans").unwrap().arr().unwrap().len(), 1);
+    }
+}

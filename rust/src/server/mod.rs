@@ -1,0 +1,499 @@
+//! Multi-tenant edge inference server (the ROADMAP's "edge server under
+//! heavy traffic" layer).
+//!
+//! Where `runtime::distributed` executes ONE deployment plan per process,
+//! this subsystem runs a long-lived TCP service that concurrently serves
+//! many endpoint clients:
+//!
+//! * **session manager** (`session`) — handshake carries (model,
+//!   partition point, client id); plans are compiled once per
+//!   `(model, pp)` via the `compiler::cache::PlanCache` and shared;
+//! * **admission control + micro-batching** (`batch`) — bounded session
+//!   count and queue depth, explicit reject responses, and cross-session
+//!   coalescing of same-plan requests;
+//! * **core-pinned worker pool** (`workers`, `spsc`) — thread-per-core
+//!   via `platform::affinity`, one engine shard per worker per plan,
+//!   SPSC hand-off instead of locks;
+//! * **serving metrics** (`metrics`) — queue depth, batch occupancy,
+//!   per-plan p50/p95/p99 latency, reject counters;
+//! * **loadgen** (`loadgen`) — N synthetic clients driven through
+//!   `netsim::LinkShaper` link profiles, verifying every response.
+//!
+//! Protocol details live in `protocol`; DESIGN.md documents the
+//! handshake and framing.
+
+pub mod batch;
+pub mod loadgen;
+pub mod metrics;
+pub mod model;
+pub mod protocol;
+pub mod session;
+pub mod spsc;
+pub mod workers;
+
+use crate::compiler::{PlanCache, PlanKey};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use batch::{BatchQueue, PendingRequest};
+use metrics::ServingMetrics;
+use model::ServerModelPlan;
+use protocol::{HandshakeReply, Response};
+use session::SessionManager;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+use workers::WorkerPool;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address ("127.0.0.1:0" = ephemeral port, for tests/benches).
+    pub addr: String,
+    /// Admission: maximum concurrent sessions.
+    pub max_sessions: usize,
+    /// Admission: maximum queued requests across all sessions.
+    pub max_queue: usize,
+    /// Dispatch: maximum requests coalesced into one batch.
+    pub max_batch: usize,
+    /// Dispatch: how long a forming batch waits for stragglers.
+    pub batch_linger: Duration,
+    /// Worker threads (engine shards). 0 = one per core.
+    pub workers: usize,
+    /// Pin worker i to core i % cores (Linux; best effort elsewhere).
+    pub pin_workers: bool,
+    /// Reclaim a session whose client sends nothing for this long —
+    /// silently-dead clients must not hold session slots forever.
+    pub session_idle_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_sessions: 64,
+            max_queue: 1024,
+            max_batch: 8,
+            batch_linger: Duration::from_micros(500),
+            workers: 0,
+            pin_workers: true,
+            session_idle_timeout: Duration::from_secs(300),
+        }
+    }
+}
+
+struct ServerState {
+    sessions: SessionManager,
+    queue: BatchQueue,
+    plans: PlanCache<ServerModelPlan>,
+    metrics: Arc<ServingMetrics>,
+    shutting_down: AtomicBool,
+    idle_timeout: Duration,
+}
+
+/// A running server.  `shutdown()` tears everything down in order:
+/// accept loop, live sessions, batch queue (drained), workers.  Dropping
+/// a `Server` without calling `shutdown` still *signals* everything to
+/// stop (threads wind down on their own) — it just doesn't join them.
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept_handle: Option<JoinHandle<()>>,
+    dispatch_handle: Option<JoinHandle<()>>,
+    pool: Option<WorkerPool>,
+}
+
+impl Server {
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(cfg.addr.as_str())
+            .with_context(|| format!("binding server on {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        // Poll-accept so shutdown needs no wake-up connection (a
+        // self-connect is not reliably possible for every bind address,
+        // e.g. 0.0.0.0 on some platforms).
+        listener.set_nonblocking(true).context("setting acceptor non-blocking")?;
+        let workers =
+            if cfg.workers == 0 { crate::platform::affinity::core_count() } else { cfg.workers };
+        let metrics = Arc::new(ServingMetrics::new());
+        let state = Arc::new(ServerState {
+            sessions: SessionManager::new(cfg.max_sessions),
+            queue: BatchQueue::new(cfg.max_queue),
+            plans: PlanCache::new(),
+            metrics: metrics.clone(),
+            shutting_down: AtomicBool::new(false),
+            idle_timeout: cfg.session_idle_timeout,
+        });
+
+        let (pool, mut dispatch) = WorkerPool::spawn(workers, cfg.pin_workers, metrics.clone())?;
+
+        // Dispatcher: drain the batch queue into the worker rings until
+        // the queue is closed AND empty, then stop the workers.  (If this
+        // spawn fails, `dispatch` — the only handle that can stop the
+        // workers — is lost inside the dropped closure; thread-spawn
+        // failure at startup means the process is resource-exhausted and
+        // the caller is expected to abort.)
+        let dispatch_handle = {
+            let state = state.clone();
+            let max_batch = cfg.max_batch;
+            let linger = cfg.batch_linger;
+            std::thread::Builder::new()
+                .name("serve-dispatch".into())
+                .spawn(move || {
+                    while let Some(batch) = state.queue.pop_batch(max_batch, linger) {
+                        state.metrics.note_batch(batch.len());
+                        dispatch.dispatch(batch);
+                    }
+                    dispatch.shutdown_workers();
+                })
+                .context("spawning dispatcher")?
+        };
+
+        // Acceptor: one reader thread per session.  Connections that have
+        // not completed a handshake are bounded separately from
+        // max_sessions (pre-admission threads are the one resource a
+        // client can hold without passing admission).
+        let accept_result = {
+            let state = state.clone();
+            let max_pending = cfg.max_sessions.saturating_mul(2).saturating_add(16);
+            let pending = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || loop {
+                    if state.shutting_down.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match listener.accept() {
+                        Ok((stream, _peer)) => stream,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                            continue;
+                        }
+                        Err(_) => {
+                            // e.g. EMFILE under fd exhaustion: failing
+                            // instantly in a loop would peg this core.
+                            std::thread::sleep(Duration::from_millis(5));
+                            continue;
+                        }
+                    };
+                    // Accepted sockets inherit non-blocking on some
+                    // platforms; session I/O is blocking.
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    if pending.load(Ordering::SeqCst) >= max_pending {
+                        drop(stream); // over the pre-admission bound
+                        continue;
+                    }
+                    pending.fetch_add(1, Ordering::SeqCst);
+                    let state = state.clone();
+                    let pending_child = pending.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("serve-session".into())
+                        .spawn(move || {
+                            let _ = handle_session(stream, &state, &pending_child);
+                        });
+                    if spawned.is_err() {
+                        pending.fetch_sub(1, Ordering::SeqCst);
+                    }
+                })
+        };
+        let accept_handle = match accept_result {
+            Ok(h) => h,
+            Err(e) => {
+                // Unwind what already runs: drain/stop dispatcher +
+                // workers so a failed start leaks nothing.
+                state.queue.close();
+                let _ = dispatch_handle.join();
+                pool.join();
+                return Err(anyhow::Error::from(e).context("spawning acceptor"));
+            }
+        };
+
+        Ok(Server {
+            addr,
+            state,
+            accept_handle: Some(accept_handle),
+            dispatch_handle: Some(dispatch_handle),
+            pool: Some(pool),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.state.sessions.active_count()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.state.queue.depth()
+    }
+
+    /// Metrics snapshot (also embeds the plan-cache hit/miss counters).
+    pub fn metrics_json(&self) -> Json {
+        let mut j = snapshot_json(&self.state);
+        if let Json::Obj(map) = &mut j {
+            map.insert("active_sessions".into(), Json::from(self.active_sessions()));
+        }
+        j
+    }
+
+    /// Orderly shutdown; returns the final metrics snapshot.
+    pub fn shutdown(mut self) -> Json {
+        // The acceptor polls with a short sleep, so the flag alone stops
+        // it — no wake-up connection needed (which would not be possible
+        // for every bind address).
+        self.state.shutting_down.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // Kick live sessions off so their readers stop enqueueing...
+        self.state.sessions.shutdown_all();
+        // ...then let the queue drain and the workers stop.
+        self.state.queue.close();
+        if let Some(h) = self.dispatch_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+        snapshot_json(&self.state)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Signal-only teardown for servers dropped without `shutdown()`
+        // (and a harmless no-op re-signal after an explicit shutdown):
+        // the polling acceptor sees the flag and exits, sessions unblock
+        // and close, the dispatcher drains then stops the workers.
+        self.state.shutting_down.store(true, Ordering::SeqCst);
+        self.state.sessions.shutdown_all();
+        self.state.queue.close();
+    }
+}
+
+/// Serving metrics + plan-cache counters as one JSON object.
+fn snapshot_json(state: &ServerState) -> Json {
+    let mut j = state.metrics.to_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert("plan_cache_hits".into(), Json::from(state.plans.hits()));
+        map.insert("plan_cache_misses".into(), Json::from(state.plans.misses()));
+        map.insert("plans_compiled".into(), Json::from(state.plans.len()));
+    }
+    j
+}
+
+/// Socket read timeout during the handshake phase.  Note SO_RCVTIMEO is
+/// per-read, not an overall deadline — a trickling client can stretch
+/// its handshake well past this, which is why the acceptor ALSO caps the
+/// number of concurrent pre-admission connections.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One session: handshake, admission, then a read loop feeding the batch
+/// queue while a writer thread streams responses back.  `pending` is the
+/// acceptor's pre-admission connection count; it is released as soon as
+/// the handshake phase resolves either way.
+fn handle_session(
+    mut stream: TcpStream,
+    state: &Arc<ServerState>,
+    pending: &std::sync::atomic::AtomicUsize,
+) -> Result<()> {
+    let hs = stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .map_err(anyhow::Error::from)
+        .and_then(|()| protocol::read_handshake(&mut stream));
+    pending.fetch_sub(1, Ordering::SeqCst);
+    let hs = hs?;
+    // Admitted sessions may idle between requests, but not forever: a
+    // client that died without FIN must not hold its slot indefinitely.
+    let idle = state.idle_timeout;
+    stream.set_read_timeout(if idle.is_zero() { None } else { Some(idle) })?;
+    let key = PlanKey::new(&hs.model, hs.pp);
+
+    // Plan lookup/compile first: a bad model or pp is a reject, not a
+    // session slot.
+    let plan = match state.plans.get_or_try_insert(&key, || model::compile_server_plan(&key)) {
+        Ok(p) => p,
+        Err(e) => {
+            state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+            let reply =
+                HandshakeReply { accepted: false, session_id: 0, message: format!("{e:#}") };
+            return protocol::write_handshake_reply(&mut stream, &reply);
+        }
+    };
+
+    let session_id =
+        match state.sessions.try_open(&hs.client_id, key.clone(), stream.try_clone()?) {
+            Ok(id) => id,
+            Err(why) => {
+                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+                let reply = HandshakeReply { accepted: false, session_id: 0, message: why };
+                return protocol::write_handshake_reply(&mut stream, &reply);
+            }
+        };
+    state.metrics.sessions_admitted.fetch_add(1, Ordering::Relaxed);
+    let reply = HandshakeReply { accepted: true, session_id, message: String::new() };
+    if let Err(e) = protocol::write_handshake_reply(&mut stream, &reply) {
+        state.sessions.close(session_id);
+        return Err(e);
+    }
+
+    // Writer thread: the only writer on this socket after the handshake.
+    // Any failure from here on must release the admitted session slot.
+    let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+    let mut write_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            state.sessions.close(session_id);
+            return Err(e.into());
+        }
+    };
+    let writer = match std::thread::Builder::new()
+        .name(format!("serve-writer-{session_id}"))
+        .spawn(move || {
+            while let Ok(resp) = reply_rx.recv() {
+                if protocol::write_response(&mut write_stream, &resp).is_err() {
+                    break;
+                }
+            }
+        }) {
+        Ok(w) => w,
+        Err(e) => {
+            state.sessions.close(session_id);
+            return Err(e.into());
+        }
+    };
+
+    let plan_metrics = state.metrics.plan(&key);
+    loop {
+        match protocol::read_request(&mut stream) {
+            Ok(Some((req_id, payload))) => {
+                let req = PendingRequest {
+                    session: session_id,
+                    req_id,
+                    plan: plan.clone(),
+                    plan_metrics: plan_metrics.clone(),
+                    payload,
+                    enqueued: Instant::now(),
+                    reply: reply_tx.clone(),
+                };
+                match state.queue.push(req) {
+                    Ok(depth) => state.metrics.note_queue_depth(depth as u64),
+                    Err((back, why)) => {
+                        // Admission reject: explicit response, never a drop.
+                        state.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply_tx.send(Response::rejected(back.req_id, why));
+                    }
+                }
+            }
+            Ok(None) | Err(_) => break,
+        }
+    }
+
+    // Teardown: free the session slot; the writer drains outstanding
+    // responses (workers hold sender clones) and then exits.
+    state.sessions.close(session_id);
+    drop(reply_tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use loadgen::{run_loadgen, LoadgenConfig};
+
+    fn quiet_cfg() -> ServerConfig {
+        ServerConfig {
+            workers: 2,
+            pin_workers: false,
+            ..ServerConfig::default()
+        }
+    }
+
+    #[test]
+    fn serve_loadgen_round_trip_single_client() {
+        let server = Server::start(quiet_cfg()).unwrap();
+        let report = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 1,
+            requests: 20,
+            pp: 3,
+            ..LoadgenConfig::default()
+        })
+        .unwrap();
+        assert_eq!(report.ok, 20);
+        assert_eq!(report.lost(), 0);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 20);
+        assert_eq!(metrics.get("sessions_admitted").unwrap().int().unwrap(), 1);
+    }
+
+    #[test]
+    fn session_limit_rejects_with_explicit_reason() {
+        let cfg = ServerConfig { max_sessions: 1, ..quiet_cfg() };
+        let server = Server::start(cfg).unwrap();
+        // First session occupies the only slot.
+        let mut first = TcpStream::connect(server.addr()).unwrap();
+        protocol::write_handshake(
+            &mut first,
+            &protocol::Handshake { model: "synthetic".into(), pp: 1, client_id: "a".into() },
+        )
+        .unwrap();
+        let reply = protocol::read_handshake_reply(&mut first).unwrap();
+        assert!(reply.accepted);
+        // Second is rejected with the capacity message.
+        let mut second = TcpStream::connect(server.addr()).unwrap();
+        protocol::write_handshake(
+            &mut second,
+            &protocol::Handshake { model: "synthetic".into(), pp: 1, client_id: "b".into() },
+        )
+        .unwrap();
+        let reply = protocol::read_handshake_reply(&mut second).unwrap();
+        assert!(!reply.accepted);
+        assert!(reply.message.contains("session capacity"), "{}", reply.message);
+        drop(first);
+        drop(second);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.get("sessions_rejected").unwrap().int().unwrap(), 1);
+    }
+
+    #[test]
+    fn unknown_model_rejected_at_handshake() {
+        let server = Server::start(quiet_cfg()).unwrap();
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        protocol::write_handshake(
+            &mut c,
+            &protocol::Handshake { model: "vehicle".into(), pp: 3, client_id: "x".into() },
+        )
+        .unwrap();
+        let reply = protocol::read_handshake_reply(&mut c).unwrap();
+        assert!(!reply.accepted);
+        assert!(reply.message.contains("unknown model"), "{}", reply.message);
+        drop(c);
+        server.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_reused_across_sessions() {
+        let server = Server::start(quiet_cfg()).unwrap();
+        for _ in 0..3 {
+            let report = run_loadgen(&LoadgenConfig {
+                addr: server.addr().to_string(),
+                clients: 2,
+                requests: 4,
+                pp: 2,
+                ..LoadgenConfig::default()
+            })
+            .unwrap();
+            assert_eq!(report.ok, 8);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.get("plans_compiled").unwrap().int().unwrap(), 1);
+        // Waves 2 and 3 run against a warm cache, so at least their 4
+        // sessions must be hits (wave 1's two may race to a double miss).
+        assert!(metrics.get("plan_cache_hits").unwrap().int().unwrap() >= 4);
+    }
+}

@@ -1,0 +1,239 @@
+//! The serving workload: a deterministic synthetic split model.
+//!
+//! Mirrors the paper's partition-point semantics without needing the
+//! XLA/PJRT artifacts: a 6-actor chain (`input -> s1..s4 -> sink`) over
+//! `TOKEN_FLOATS`-wide f32 tokens.  A session handshakes with a partition
+//! point `pp`; the client executes stages `1..pp` locally and ships the
+//! intermediate token, the server executes the remaining stages and
+//! returns the sink digest.  Because client + server always apply the
+//! full stage chain, the correct response for a given input is
+//! *independent of pp* — which is what lets the loadgen verify every
+//! response byte-for-byte at any partition point.
+//!
+//! The server side is compiled through the real `compiler::compile` path
+//! (client/server mapping cut at pp), so the plan cache stores genuine
+//! `DeploymentPlan`s and the per-worker `EngineShard` derives its stage
+//! range from the compiled `DevicePlan` rather than from the handshake.
+
+use crate::compiler::{DeploymentPlan, PlanKey};
+use crate::dataflow::AppGraph;
+use crate::platform::{Mapping, PlatformGraph};
+use crate::runtime::device::DeviceModel;
+use crate::runtime::netsim::LinkModel;
+use crate::util::rng::Rng;
+use crate::util::tensor;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::Arc;
+
+pub const MODEL_NAME: &str = "synthetic";
+pub const TOKEN_FLOATS: usize = 1024;
+pub const TOKEN_BYTES: usize = TOKEN_FLOATS * 4;
+pub const OUT_FLOATS: usize = 32;
+pub const OUT_BYTES: usize = OUT_FLOATS * 4;
+/// Compute stages s1..s4 between the input and the digesting sink.
+pub const NUM_STAGES: usize = 4;
+/// Valid partition points: 1 (raw-input offload) ..= 5 (digest-only
+/// offload; everything but the sink runs on the client).
+pub const MAX_PP: usize = NUM_STAGES + 1;
+
+/// Actor precedence order of the synthetic chain.
+pub fn actor_order() -> Vec<String> {
+    let mut names = vec!["input".to_string()];
+    for k in 1..=NUM_STAGES {
+        names.push(format!("s{k}"));
+    }
+    names.push("sink".to_string());
+    names
+}
+
+/// One compute stage: a seeded neighbour-mixing pass.  Pure f32 ops in a
+/// fixed iteration order, so client and server agree bit-for-bit.
+pub fn apply_stage(stage: usize, x: &mut [f32]) {
+    let a = 0.731 + stage as f32 * 0.17;
+    let b = 0.113 * stage as f32;
+    let n = x.len();
+    for _round in 0..4 {
+        let mut prev = x[n - 1];
+        for item in x.iter_mut() {
+            let cur = *item;
+            *item = (cur * a + prev * 0.25 + b).rem_euclid(3.0) - 1.5;
+            prev = cur;
+        }
+    }
+}
+
+/// Sink digest: fold the token down to `OUT_FLOATS` strided sums.
+pub fn digest(x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; OUT_FLOATS];
+    for (i, v) in x.iter().enumerate() {
+        out[i % OUT_FLOATS] += v;
+    }
+    out
+}
+
+/// Deterministic input frame for (seed) — the loadgen's synthetic camera.
+pub fn make_input(seed: u64) -> Vec<f32> {
+    let mut bytes = vec![0u8; TOKEN_BYTES];
+    Rng::new(seed).fill_f32(&mut bytes, 0.0, 1.0);
+    tensor::bytes_to_f32(&bytes)
+}
+
+/// Client half of a session at partition point `pp`: run stages `1..pp`
+/// and serialize the intermediate token.
+pub fn client_prepare(input: &[f32], pp: usize) -> Vec<u8> {
+    let mut x = input.to_vec();
+    for k in 1..pp {
+        apply_stage(k, &mut x);
+    }
+    tensor::f32_to_bytes(&x)
+}
+
+/// Ground-truth response for an input frame (pp-independent).
+pub fn expected_digest(input: &[f32]) -> Vec<u8> {
+    let mut x = input.to_vec();
+    for k in 1..=NUM_STAGES {
+        apply_stage(k, &mut x);
+    }
+    tensor::f32_to_bytes(&digest(&x))
+}
+
+/// A compiled serving plan: the deployment cut at `key.pp` plus the
+/// server-side stage range derived from the compiled device plan.
+#[derive(Debug, Clone)]
+pub struct ServerModelPlan {
+    pub key: PlanKey,
+    pub deployment: DeploymentPlan,
+    /// Stage indices the server executes (ascending; may be empty for
+    /// digest-only offload at pp = MAX_PP).
+    pub server_stages: Vec<usize>,
+}
+
+/// Compile the synthetic model's deployment for one plan-cache key.
+pub fn compile_server_plan(key: &PlanKey) -> Result<ServerModelPlan> {
+    if key.model != MODEL_NAME {
+        bail!("unknown model {:?} (this server deploys: {MODEL_NAME})", key.model);
+    }
+    if key.pp == 0 || key.pp > MAX_PP {
+        bail!("partition point {} out of range 1..={MAX_PP}", key.pp);
+    }
+    let order = actor_order();
+    let mut g = AppGraph::new();
+    let ids: Vec<_> = order.iter().map(|n| g.add_spa(n)).collect();
+    for w in ids.windows(2) {
+        g.connect(w[0], w[1], TOKEN_BYTES, 4);
+    }
+    let mut pg = PlatformGraph::new();
+    pg.add_device(DeviceModel::native("client"));
+    pg.add_device(DeviceModel::native("server"));
+    pg.add_link("client", "server", LinkModel::ideal());
+    let mapping = Mapping::partition_point(&order, key.pp, "client", "server");
+    // Port numbers in the plan are unused here: session traffic rides the
+    // server protocol socket, not per-edge TX/RX FIFO ports.
+    let deployment = crate::compiler::compile(&g, &pg, &mapping, 0)?;
+    let dp = deployment
+        .per_device
+        .get("server")
+        .ok_or_else(|| anyhow!("pp {} leaves no server-side actors", key.pp))?;
+    let mut server_stages: Vec<usize> = dp
+        .original_actors
+        .iter()
+        .filter_map(|n| n.strip_prefix('s').and_then(|k| k.parse::<usize>().ok()))
+        .collect();
+    server_stages.sort_unstable();
+    Ok(ServerModelPlan { key: key.clone(), deployment, server_stages })
+}
+
+/// One worker's private executor for a plan — the "engine shard".  Owns a
+/// scratch buffer so steady-state inference does not allocate.
+pub struct EngineShard {
+    plan: Arc<ServerModelPlan>,
+    scratch: Vec<f32>,
+}
+
+impl EngineShard {
+    pub fn new(plan: Arc<ServerModelPlan>) -> Self {
+        EngineShard { plan, scratch: vec![0.0; TOKEN_FLOATS] }
+    }
+
+    /// Run the server-side stages + sink digest over one request token.
+    pub fn infer(&mut self, payload: &[u8]) -> Result<Vec<u8>> {
+        ensure!(
+            payload.len() == TOKEN_BYTES,
+            "payload {} bytes, plan {} expects {TOKEN_BYTES}",
+            payload.len(),
+            self.plan.key
+        );
+        for (dst, chunk) in self.scratch.iter_mut().zip(payload.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        for &k in &self.plan.server_stages {
+            apply_stage(k, &mut self.scratch);
+        }
+        Ok(tensor::f32_to_bytes(&digest(&self.scratch)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_result_is_partition_invariant() {
+        let input = make_input(11);
+        let expected = expected_digest(&input);
+        assert_eq!(expected.len(), OUT_BYTES);
+        for pp in 1..=MAX_PP {
+            let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, pp)).unwrap());
+            let mut shard = EngineShard::new(plan);
+            let got = shard.infer(&client_prepare(&input, pp)).unwrap();
+            assert_eq!(got, expected, "pp {pp} digest mismatch");
+        }
+    }
+
+    #[test]
+    fn compiled_plan_matches_partition_point() {
+        let plan = compile_server_plan(&PlanKey::new(MODEL_NAME, 3)).unwrap();
+        assert_eq!(plan.deployment.cut_edges(), 1);
+        assert_eq!(plan.server_stages, vec![3, 4]);
+        let server = &plan.deployment.per_device["server"];
+        // s3, s4, sink + the spliced __rx actor.
+        assert_eq!(server.graph.actors.len(), 4);
+        let client = &plan.deployment.per_device["client"];
+        assert!(client.graph.actor_by_name("__tx2").is_some());
+    }
+
+    #[test]
+    fn digest_only_offload_has_no_server_stages() {
+        let plan = compile_server_plan(&PlanKey::new(MODEL_NAME, MAX_PP)).unwrap();
+        assert!(plan.server_stages.is_empty());
+        assert!(plan.deployment.per_device["server"].graph.actor_by_name("sink").is_some());
+    }
+
+    #[test]
+    fn invalid_keys_rejected() {
+        assert!(compile_server_plan(&PlanKey::new("vehicle", 3)).is_err());
+        assert!(compile_server_plan(&PlanKey::new(MODEL_NAME, 0)).is_err());
+        assert!(compile_server_plan(&PlanKey::new(MODEL_NAME, MAX_PP + 1)).is_err());
+    }
+
+    #[test]
+    fn wrong_payload_size_is_an_error() {
+        let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 1)).unwrap());
+        let mut shard = EngineShard::new(plan);
+        assert!(shard.infer(&[0u8; 12]).is_err());
+    }
+
+    #[test]
+    fn stage_outputs_stay_bounded() {
+        let mut x = make_input(3);
+        for k in 1..=NUM_STAGES {
+            apply_stage(k, &mut x);
+        }
+        assert!(x.iter().all(|v| v.is_finite() && v.abs() <= 1.5));
+    }
+
+    #[test]
+    fn distinct_inputs_give_distinct_digests() {
+        assert_ne!(expected_digest(&make_input(1)), expected_digest(&make_input(2)));
+    }
+}

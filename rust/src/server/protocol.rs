@@ -1,0 +1,336 @@
+//! Wire protocol of the multi-tenant edge inference server.
+//!
+//! One TCP connection per client session.  All integers little-endian,
+//! mirroring the TX/RX FIFO frame format of `runtime::net`.
+//!
+//! ```text
+//! handshake  (client -> server):
+//!   [u32 magic "EPRN"][u16 version][u16 pp]
+//!   [u16 model_len][model bytes][u16 client_id_len][client_id bytes]
+//! handshake reply (server -> client):
+//!   [u8 status (0 = accepted, 1 = rejected)][u64 session_id]
+//!   [u16 msg_len][msg bytes]
+//! request    (client -> server):
+//!   [u64 req_id][u32 len][payload]
+//! response   (server -> client):
+//!   [u64 req_id][u8 status (0 = ok, 1 = rejected, 2 = error)]
+//!   [u32 len][body]
+//! ```
+//!
+//! A `rejected` response is the admission controller speaking (queue
+//! full); an `error` response carries an execution failure message.  Both
+//! surface client-side as explicit outcomes, never as silent drops.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+pub const MAGIC: u32 = 0x4550_524e; // "EPRN"
+pub const VERSION: u16 = 1;
+/// Sanity bound on any variable-length field (requests are model tokens,
+/// not bulk uploads).
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+const MAX_NAME: u16 = 1024;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Handshake {
+    pub model: String,
+    pub pp: usize,
+    pub client_id: String,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HandshakeReply {
+    pub accepted: bool,
+    pub session_id: u64,
+    pub message: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RespStatus {
+    Ok,
+    Rejected,
+    Error,
+}
+
+impl RespStatus {
+    fn to_u8(self) -> u8 {
+        match self {
+            RespStatus::Ok => 0,
+            RespStatus::Rejected => 1,
+            RespStatus::Error => 2,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        match b {
+            0 => Ok(RespStatus::Ok),
+            1 => Ok(RespStatus::Rejected),
+            2 => Ok(RespStatus::Error),
+            v => bail!("bad response status byte {v}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub req_id: u64,
+    pub status: RespStatus,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn ok(req_id: u64, body: Vec<u8>) -> Self {
+        Response { req_id, status: RespStatus::Ok, body }
+    }
+
+    pub fn rejected(req_id: u64, why: &str) -> Self {
+        Response { req_id, status: RespStatus::Rejected, body: why.as_bytes().to_vec() }
+    }
+
+    pub fn error(req_id: u64, why: &str) -> Self {
+        Response { req_id, status: RespStatus::Error, body: why.as_bytes().to_vec() }
+    }
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) -> Result<()> {
+    let bytes = s.as_bytes();
+    if bytes.len() > MAX_NAME as usize {
+        bail!("string field of {} bytes exceeds protocol bound", bytes.len());
+    }
+    buf.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+    buf.extend_from_slice(bytes);
+    Ok(())
+}
+
+fn read_str(stream: &mut TcpStream) -> Result<String> {
+    let mut len = [0u8; 2];
+    stream.read_exact(&mut len).context("string length")?;
+    let len = u16::from_le_bytes(len);
+    if len > MAX_NAME {
+        bail!("string field of {len} bytes exceeds protocol bound");
+    }
+    let mut bytes = vec![0u8; len as usize];
+    stream.read_exact(&mut bytes).context("string body")?;
+    String::from_utf8(bytes).map_err(|_| anyhow::anyhow!("non-utf8 string field"))
+}
+
+pub fn write_handshake(stream: &mut TcpStream, h: &Handshake) -> Result<()> {
+    let mut buf = Vec::with_capacity(16 + h.model.len() + h.client_id.len());
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(h.pp as u16).to_le_bytes());
+    write_str(&mut buf, &h.model)?;
+    write_str(&mut buf, &h.client_id)?;
+    stream.write_all(&buf).context("writing handshake")
+}
+
+pub fn read_handshake(stream: &mut TcpStream) -> Result<Handshake> {
+    let mut fixed = [0u8; 8];
+    stream.read_exact(&mut fixed).context("handshake header")?;
+    let magic = u32::from_le_bytes(fixed[..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("bad handshake magic {magic:#010x} (not an edge-prune client?)");
+    }
+    let version = u16::from_le_bytes(fixed[4..6].try_into().unwrap());
+    if version != VERSION {
+        bail!("protocol version {version} unsupported (server speaks {VERSION})");
+    }
+    let pp = u16::from_le_bytes(fixed[6..8].try_into().unwrap()) as usize;
+    let model = read_str(stream)?;
+    let client_id = read_str(stream)?;
+    Ok(Handshake { model, pp, client_id })
+}
+
+/// Clip a message to the protocol's string bound on a char boundary, so
+/// an oversized reject reason degrades to a truncated reject instead of
+/// a serialization failure (which would close the socket replyless).
+fn clip(s: &str) -> &str {
+    if s.len() <= MAX_NAME as usize {
+        return s;
+    }
+    let mut end = MAX_NAME as usize;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+pub fn write_handshake_reply(stream: &mut TcpStream, r: &HandshakeReply) -> Result<()> {
+    let message = clip(&r.message);
+    let mut buf = Vec::with_capacity(11 + message.len());
+    buf.push(if r.accepted { 0 } else { 1 });
+    buf.extend_from_slice(&r.session_id.to_le_bytes());
+    write_str(&mut buf, message)?;
+    stream.write_all(&buf).context("writing handshake reply")
+}
+
+pub fn read_handshake_reply(stream: &mut TcpStream) -> Result<HandshakeReply> {
+    let mut fixed = [0u8; 9];
+    stream.read_exact(&mut fixed).context("handshake reply")?;
+    let accepted = match fixed[0] {
+        0 => true,
+        1 => false,
+        v => bail!("bad handshake status byte {v}"),
+    };
+    let session_id = u64::from_le_bytes(fixed[1..9].try_into().unwrap());
+    let message = read_str(stream)?;
+    Ok(HandshakeReply { accepted, session_id, message })
+}
+
+pub fn write_request(stream: &mut TcpStream, req_id: u64, payload: &[u8]) -> Result<()> {
+    if payload.len() as u64 > MAX_PAYLOAD as u64 {
+        bail!("request payload {} exceeds {MAX_PAYLOAD}", payload.len());
+    }
+    let mut header = [0u8; 12];
+    header[..8].copy_from_slice(&req_id.to_le_bytes());
+    header[8..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one request; `Ok(None)` on clean EOF at a frame boundary (client
+/// closed its session).
+pub fn read_request(stream: &mut TcpStream) -> Result<Option<(u64, Vec<u8>)>> {
+    let mut header = [0u8; 12];
+    match stream.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let req_id = u64::from_le_bytes(header[..8].try_into().unwrap());
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        bail!("request payload {len} exceeds {MAX_PAYLOAD}");
+    }
+    let mut payload = vec![0u8; len as usize];
+    stream.read_exact(&mut payload).context("request body")?;
+    Ok(Some((req_id, payload)))
+}
+
+pub fn write_response(stream: &mut TcpStream, r: &Response) -> Result<()> {
+    if r.body.len() as u64 > MAX_PAYLOAD as u64 {
+        bail!("response body {} exceeds {MAX_PAYLOAD}", r.body.len());
+    }
+    let mut header = [0u8; 13];
+    header[..8].copy_from_slice(&r.req_id.to_le_bytes());
+    header[8] = r.status.to_u8();
+    header[9..].copy_from_slice(&(r.body.len() as u32).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(&r.body)?;
+    Ok(())
+}
+
+/// Read one response; `Ok(None)` on clean EOF (server closed).
+pub fn read_response(stream: &mut TcpStream) -> Result<Option<Response>> {
+    let mut header = [0u8; 13];
+    match stream.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let req_id = u64::from_le_bytes(header[..8].try_into().unwrap());
+    let status = RespStatus::from_u8(header[8])?;
+    let len = u32::from_le_bytes(header[9..13].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        bail!("response body {len} exceeds {MAX_PAYLOAD}");
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body).context("response body")?;
+    Ok(Some(Response { req_id, status, body }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::net::bind_local;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || listener.accept().unwrap().0);
+        let client = TcpStream::connect(addr).unwrap();
+        (client, h.join().unwrap())
+    }
+
+    #[test]
+    fn handshake_round_trip() {
+        let (mut c, mut s) = pair();
+        let h = Handshake { model: "synthetic".into(), pp: 3, client_id: "cam-7".into() };
+        write_handshake(&mut c, &h).unwrap();
+        assert_eq!(read_handshake(&mut s).unwrap(), h);
+        let reply = HandshakeReply { accepted: true, session_id: 42, message: "ok".into() };
+        write_handshake_reply(&mut s, &reply).unwrap();
+        assert_eq!(read_handshake_reply(&mut c).unwrap(), reply);
+    }
+
+    #[test]
+    fn rejected_handshake_reply_round_trips() {
+        let (mut c, mut s) = pair();
+        let reply = HandshakeReply {
+            accepted: false,
+            session_id: 0,
+            message: "server at session capacity (8 active)".into(),
+        };
+        write_handshake_reply(&mut s, &reply).unwrap();
+        let got = read_handshake_reply(&mut c).unwrap();
+        assert!(!got.accepted);
+        assert!(got.message.contains("capacity"));
+    }
+
+    #[test]
+    fn oversized_reject_message_is_clipped_not_dropped() {
+        let (mut c, mut s) = pair();
+        let reply = HandshakeReply {
+            accepted: false,
+            session_id: 0,
+            message: "x".repeat(5000),
+        };
+        write_handshake_reply(&mut s, &reply).unwrap();
+        let got = read_handshake_reply(&mut c).unwrap();
+        assert!(!got.accepted);
+        assert_eq!(got.message.len(), 1024);
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let (mut c, mut s) = pair();
+        c.write_all(&[0u8; 8]).unwrap();
+        assert!(read_handshake(&mut s).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn request_response_round_trip_and_eof() {
+        let (mut c, mut s) = pair();
+        write_request(&mut c, 7, &[1, 2, 3]).unwrap();
+        let (id, payload) = read_request(&mut s).unwrap().unwrap();
+        assert_eq!((id, payload), (7, vec![1, 2, 3]));
+        write_response(&mut s, &Response::ok(7, vec![9])).unwrap();
+        let r = read_response(&mut c).unwrap().unwrap();
+        assert_eq!((r.req_id, r.status, r.body), (7, RespStatus::Ok, vec![9]));
+        drop(c);
+        assert!(read_request(&mut s).unwrap().is_none());
+    }
+
+    #[test]
+    fn reject_and_error_statuses_round_trip() {
+        let (mut c, mut s) = pair();
+        write_response(&mut s, &Response::rejected(1, "queue full")).unwrap();
+        write_response(&mut s, &Response::error(2, "boom")).unwrap();
+        let r1 = read_response(&mut c).unwrap().unwrap();
+        let r2 = read_response(&mut c).unwrap().unwrap();
+        assert_eq!(r1.status, RespStatus::Rejected);
+        assert_eq!(String::from_utf8(r1.body).unwrap(), "queue full");
+        assert_eq!(r2.status, RespStatus::Error);
+    }
+
+    #[test]
+    fn oversized_request_rejected_by_reader() {
+        let (mut c, mut s) = pair();
+        let mut header = [0u8; 12];
+        header[8..].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        c.write_all(&header).unwrap();
+        assert!(read_request(&mut s).is_err());
+    }
+}

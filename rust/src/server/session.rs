@@ -1,0 +1,177 @@
+//! Session manager: the registry of live client sessions.
+//!
+//! A session is born from a successful handshake (model + partition point
+//! + client id), holds a reference to its cached plan, and dies when the
+//! client disconnects or the server shuts down.  The bounded session
+//! count is the first stage of admission control — a full server refuses
+//! the handshake with an explicit reason instead of queueing connects.
+
+use crate::compiler::PlanKey;
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug)]
+pub struct SessionInfo {
+    pub id: u64,
+    pub client_id: String,
+    pub plan: PlanKey,
+    /// Clone of the session socket, kept so `shutdown_all` can unblock
+    /// the reader thread from outside.
+    stream: TcpStream,
+}
+
+pub struct SessionManager {
+    max_sessions: usize,
+    next_id: AtomicU64,
+    active: Mutex<BTreeMap<u64, SessionInfo>>,
+    /// Set (under the `active` lock) once `shutdown_all` runs: any
+    /// handshake racing the shutdown is refused instead of registering a
+    /// session nobody will ever tear down.
+    closed: std::sync::atomic::AtomicBool,
+}
+
+impl SessionManager {
+    pub fn new(max_sessions: usize) -> Self {
+        SessionManager {
+            max_sessions: max_sessions.max(1),
+            next_id: AtomicU64::new(1),
+            active: Mutex::new(BTreeMap::new()),
+            closed: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Admit a session, or explain why not (the message goes verbatim
+    /// into the handshake reject reply).
+    pub fn try_open(
+        &self,
+        client_id: &str,
+        plan: PlanKey,
+        stream: TcpStream,
+    ) -> Result<u64, String> {
+        let mut active = self.active.lock().unwrap();
+        if self.closed.load(Ordering::SeqCst) {
+            return Err("server shutting down".to_string());
+        }
+        if active.len() >= self.max_sessions {
+            return Err(format!(
+                "server at session capacity ({} active, limit {})",
+                active.len(),
+                self.max_sessions
+            ));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        active.insert(id, SessionInfo { id, client_id: client_id.to_string(), plan, stream });
+        Ok(id)
+    }
+
+    /// Tear a session down (idempotent; unknown ids are ignored).
+    pub fn close(&self, id: u64) {
+        self.active.lock().unwrap().remove(&id);
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.lock().unwrap().len()
+    }
+
+    /// (id, client_id, plan) rows for status output.
+    pub fn snapshot(&self) -> Vec<(u64, String, PlanKey)> {
+        self.active
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| (s.id, s.client_id.clone(), s.plan.clone()))
+            .collect()
+    }
+
+    /// Shut down every session socket so blocked readers unblock — the
+    /// server-shutdown path.  Sessions remove themselves via `close`.
+    /// Holding the lock while flipping `closed` means every session is
+    /// either registered here (and gets its socket shut down) or sees
+    /// `closed` in `try_open` and is refused — no leak window between.
+    pub fn shutdown_all(&self) {
+        let active = self.active.lock().unwrap();
+        self.closed.store(true, Ordering::SeqCst);
+        for s in active.values() {
+            let _ = s.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::net::bind_local;
+
+    /// A connected socket pair (we only need real TcpStream handles).
+    fn stream() -> TcpStream {
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || listener.accept().unwrap().0);
+        let c = TcpStream::connect(addr).unwrap();
+        let _server_side = h.join().unwrap();
+        c
+    }
+
+    fn key() -> PlanKey {
+        PlanKey::new("synthetic", 2)
+    }
+
+    #[test]
+    fn admits_up_to_limit_then_rejects_with_reason() {
+        let m = SessionManager::new(2);
+        let a = m.try_open("c1", key(), stream()).unwrap();
+        let b = m.try_open("c2", key(), stream()).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(m.active_count(), 2);
+        let err = m.try_open("c3", key(), stream()).unwrap_err();
+        assert!(err.contains("session capacity"), "{err}");
+        // Freeing one slot re-admits.
+        m.close(a);
+        assert!(m.try_open("c3", key(), stream()).is_ok());
+    }
+
+    #[test]
+    fn close_is_idempotent_and_snapshot_reflects_state() {
+        let m = SessionManager::new(4);
+        let id = m.try_open("cam", key(), stream()).unwrap();
+        assert_eq!(m.snapshot().len(), 1);
+        assert_eq!(m.snapshot()[0].1, "cam");
+        m.close(id);
+        m.close(id);
+        assert_eq!(m.active_count(), 0);
+    }
+
+    #[test]
+    fn shutdown_refuses_new_sessions() {
+        let m = SessionManager::new(4);
+        m.try_open("before", key(), stream()).unwrap();
+        m.shutdown_all();
+        let err = m.try_open("after", key(), stream()).unwrap_err();
+        assert!(err.contains("shutting down"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_all_unblocks_readers() {
+        use std::io::Read;
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept = std::thread::spawn(move || listener.accept().unwrap().0);
+        let client = TcpStream::connect(addr).unwrap();
+        let server_side = accept.join().unwrap();
+
+        let m = SessionManager::new(4);
+        m.try_open("c", key(), server_side.try_clone().unwrap()).unwrap();
+        let reader = std::thread::spawn(move || {
+            let mut s = server_side;
+            let mut buf = [0u8; 1];
+            s.read(&mut buf).unwrap_or(0)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        m.shutdown_all();
+        // Reader returns promptly (0 bytes or error mapped to 0).
+        assert_eq!(reader.join().unwrap(), 0);
+        drop(client);
+    }
+}

@@ -1,0 +1,265 @@
+//! Core-pinned worker pool: one thread per core, one engine shard per
+//! worker per plan, work handed off over SPSC rings (shared-nothing; no
+//! locks on the request path past the batch queue).
+//!
+//! The dispatcher owns the producing end of every ring and round-robins
+//! batches across workers, skipping ahead when a ring is full and backing
+//! off only when every worker is saturated — that back-pressure is what
+//! ultimately bounds the batch queue drain rate.
+
+use super::batch::PendingRequest;
+use super::metrics::ServingMetrics;
+use super::model::EngineShard;
+use super::protocol::Response;
+use super::spsc;
+use crate::compiler::PlanKey;
+use crate::platform::affinity;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+pub enum WorkItem {
+    Batch(Vec<PendingRequest>),
+    Shutdown,
+}
+
+/// Joinable worker threads (held by the server).
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// The dispatching end: producers for every worker ring (single-threaded
+/// by construction — it lives on the dispatcher thread).
+pub struct Dispatch {
+    producers: Vec<spsc::Producer<WorkItem>>,
+    next: usize,
+}
+
+/// Ring capacity per worker (batches, not requests).
+const RING_CAPACITY: usize = 64;
+
+impl WorkerPool {
+    /// Spawn `workers` threads.  With `pin`, worker `i` is pinned to core
+    /// `i % core_count()` (best effort — pin failure degrades to an
+    /// unpinned worker, it never kills the server).  A thread-spawn
+    /// failure unwinds the already-spawned workers before returning, so
+    /// a failed spawn leaks nothing.
+    pub fn spawn(
+        workers: usize,
+        pin: bool,
+        metrics: Arc<ServingMetrics>,
+    ) -> anyhow::Result<(WorkerPool, Dispatch)> {
+        let workers = workers.max(1);
+        let cores = affinity::core_count();
+        let mut handles = Vec::with_capacity(workers);
+        let mut producers: Vec<spsc::Producer<WorkItem>> = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = spsc::channel::<WorkItem>(RING_CAPACITY);
+            let metrics = metrics.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("serve-worker-{w}"))
+                .spawn(move || worker_main(w, w % cores, pin, rx, metrics));
+            match spawned {
+                Ok(handle) => {
+                    producers.push(tx);
+                    handles.push(handle);
+                }
+                Err(e) => {
+                    // Stop the 0..w workers already running (their rings
+                    // are empty, so the Shutdown push cannot fail).
+                    for p in &mut producers {
+                        let _ = p.push(WorkItem::Shutdown);
+                    }
+                    WorkerPool { handles }.join();
+                    return Err(anyhow::Error::from(e)
+                        .context(format!("spawning serve worker {w} of {workers}")));
+                }
+            }
+        }
+        Ok((WorkerPool { handles }, Dispatch { producers, next: 0 }))
+    }
+
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Dispatch {
+    pub fn worker_count(&self) -> usize {
+        self.producers.len()
+    }
+
+    /// Hand a batch to the next worker, skipping full rings; blocks with
+    /// a short backoff when every ring is full (backpressure).
+    pub fn dispatch(&mut self, batch: Vec<PendingRequest>) {
+        let mut item = WorkItem::Batch(batch);
+        loop {
+            for _ in 0..self.producers.len() {
+                let idx = self.next;
+                self.next = (self.next + 1) % self.producers.len();
+                match self.producers[idx].push(item) {
+                    Ok(()) => return,
+                    Err(back) => item = back,
+                }
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+
+    /// Deliver a shutdown token to every worker (after the queue drained).
+    pub fn shutdown_workers(&mut self) {
+        for p in &mut self.producers {
+            let mut item = WorkItem::Shutdown;
+            loop {
+                match p.push(item) {
+                    Ok(()) => break,
+                    Err(back) => {
+                        item = back;
+                        std::thread::sleep(Duration::from_micros(100));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn worker_main(
+    index: usize,
+    core: usize,
+    pin: bool,
+    mut rx: spsc::Consumer<WorkItem>,
+    metrics: Arc<ServingMetrics>,
+) {
+    if pin {
+        if let Err(e) = affinity::pin_to_core(core) {
+            eprintln!("serve-worker-{index}: running unpinned: {e:#}");
+        }
+    }
+    // Shared-nothing: every worker owns its engine shards outright.
+    let mut shards: BTreeMap<PlanKey, EngineShard> = BTreeMap::new();
+    let mut idle_spins = 0u32;
+    loop {
+        match rx.pop() {
+            Some(WorkItem::Shutdown) => break,
+            Some(WorkItem::Batch(batch)) => {
+                idle_spins = 0;
+                for req in batch {
+                    run_one(&mut shards, req, &metrics);
+                }
+            }
+            None => {
+                // Spin briefly, then yield, then sleep: latency-friendly
+                // under load, CPU-friendly when idle.
+                idle_spins = idle_spins.saturating_add(1);
+                if idle_spins < 64 {
+                    std::hint::spin_loop();
+                } else if idle_spins < 256 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+    }
+}
+
+fn run_one(
+    shards: &mut BTreeMap<PlanKey, EngineShard>,
+    req: PendingRequest,
+    metrics: &ServingMetrics,
+) {
+    let shard = shards
+        .entry(req.plan.key.clone())
+        .or_insert_with(|| EngineShard::new(req.plan.clone()));
+    match shard.infer(&req.payload) {
+        Ok(body) => {
+            metrics.note_completed(&req.plan_metrics, req.enqueued.elapsed());
+            let _ = req.reply.send(Response::ok(req.req_id, body));
+        }
+        Err(e) => {
+            metrics.note_error(&req.plan_metrics);
+            let _ = req.reply.send(Response::error(req.req_id, &format!("{e:#}")));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::model::{client_prepare, compile_server_plan, expected_digest, make_input, MODEL_NAME};
+    use super::super::protocol::RespStatus;
+    use std::sync::atomic::Ordering;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    #[test]
+    fn pool_processes_batches_and_shuts_down() {
+        let metrics = Arc::new(ServingMetrics::new());
+        let (pool, mut dispatch) = WorkerPool::spawn(2, false, metrics.clone()).unwrap();
+        assert_eq!(dispatch.worker_count(), 2);
+
+        let key = PlanKey::new(MODEL_NAME, 2);
+        let plan = Arc::new(compile_server_plan(&key).unwrap());
+        let plan_metrics = metrics.plan(&key);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let n = 40u64;
+        for chunk in (0..n).collect::<Vec<_>>().chunks(4) {
+            let batch: Vec<PendingRequest> = chunk
+                .iter()
+                .map(|&i| {
+                    let input = make_input(i);
+                    PendingRequest {
+                        session: 1,
+                        req_id: i,
+                        plan: plan.clone(),
+                        plan_metrics: plan_metrics.clone(),
+                        payload: client_prepare(&input, 2),
+                        enqueued: Instant::now(),
+                        reply: reply_tx.clone(),
+                    }
+                })
+                .collect();
+            dispatch.dispatch(batch);
+        }
+        drop(reply_tx);
+
+        let mut seen = 0;
+        while seen < n {
+            let resp = reply_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.status, RespStatus::Ok);
+            assert_eq!(resp.body, expected_digest(&make_input(resp.req_id)));
+            seen += 1;
+        }
+        dispatch.shutdown_workers();
+        pool.join();
+        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), n);
+        assert_eq!(plan_metrics.latency.count(), n);
+    }
+
+    #[test]
+    fn malformed_payload_yields_error_response() {
+        let metrics = Arc::new(ServingMetrics::new());
+        let (pool, mut dispatch) = WorkerPool::spawn(1, false, metrics.clone()).unwrap();
+        let key = PlanKey::new(MODEL_NAME, 1);
+        let plan = Arc::new(compile_server_plan(&key).unwrap());
+        let (reply_tx, reply_rx) = mpsc::channel();
+        dispatch.dispatch(vec![PendingRequest {
+            session: 9,
+            req_id: 123,
+            plan: plan.clone(),
+            plan_metrics: metrics.plan(&key),
+            payload: vec![1, 2, 3],
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        }]);
+        let resp = reply_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, RespStatus::Error);
+        assert_eq!(resp.req_id, 123);
+        assert_eq!(metrics.request_errors.load(Ordering::Relaxed), 1);
+        dispatch.shutdown_workers();
+        pool.join();
+    }
+}

@@ -20,15 +20,26 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json type error: expected {expected} at {path}")]
     Type { expected: &'static str, path: String },
-    #[error("json missing key {0:?}")]
     Missing(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse(at, msg) => write!(f, "json parse error at byte {at}: {msg}"),
+            JsonError::Type { expected, path } => {
+                write!(f, "json type error: expected {expected} at {path}")
+            }
+            JsonError::Missing(key) => write!(f, "json missing key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {

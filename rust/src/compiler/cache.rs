@@ -40,6 +40,7 @@ pub struct PlanCache<V> {
     inner: Mutex<BTreeMap<PlanKey, Arc<V>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    warmed: AtomicU64,
 }
 
 /// Convenience alias for caches of plain deployment plans.
@@ -57,6 +58,7 @@ impl<V> PlanCache<V> {
             inner: Mutex::new(BTreeMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            warmed: AtomicU64::new(0),
         }
     }
 
@@ -89,6 +91,30 @@ impl<V> PlanCache<V> {
         Ok(map.entry(key.clone()).or_insert(built).clone())
     }
 
+    /// Precompile `key` off the demand path — the serving layer's
+    /// fallback-plan warming (every deployment precompiles its local-only
+    /// fallback so a failure never waits on a compile).  Does NOT touch
+    /// the hit/miss counters: warming must not distort the demand-path
+    /// cache statistics.  Counted separately in `warmed()` when it
+    /// actually built something.
+    pub fn warm(&self, key: &PlanKey, build: impl FnOnce() -> Result<V>) -> Result<Arc<V>> {
+        if let Some(v) = self.inner.lock().unwrap().get(key) {
+            return Ok(v.clone());
+        }
+        let built = Arc::new(build()?);
+        // Re-check under the lock and count only a winning insert:
+        // concurrent warmers of one cold key must not inflate `warmed`
+        // past the number of entries actually warmed (tests assert it
+        // exactly; the discarded duplicate build is only wasted work).
+        let mut map = self.inner.lock().unwrap();
+        if let Some(v) = map.get(key) {
+            return Ok(v.clone());
+        }
+        map.insert(key.clone(), built.clone());
+        self.warmed.fetch_add(1, Ordering::Relaxed);
+        Ok(built)
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().len()
     }
@@ -103,6 +129,10 @@ impl<V> PlanCache<V> {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn warmed(&self) -> u64 {
+        self.warmed.load(Ordering::Relaxed)
     }
 }
 
@@ -148,6 +178,21 @@ mod tests {
         assert_eq!(cache.len(), 0);
         // A later successful build fills the entry.
         assert_eq!(*cache.get_or_try_insert(&key, || Ok(9)).unwrap(), 9);
+    }
+
+    #[test]
+    fn warming_fills_the_cache_without_touching_demand_counters() {
+        let cache: PlanCache<u32> = PlanCache::new();
+        let key = PlanKey::new("m", 5);
+        let w = cache.warm(&key, || Ok(50)).unwrap();
+        assert_eq!(*w, 50);
+        assert_eq!((cache.hits(), cache.misses(), cache.warmed()), (0, 0, 1));
+        // A warmed entry is a demand-path hit...
+        assert!(Arc::ptr_eq(&cache.get_or_try_insert(&key, || unreachable!()).unwrap(), &w));
+        assert_eq!((cache.hits(), cache.misses()), (1, 0));
+        // ...and re-warming an existing entry builds nothing.
+        cache.warm(&key, || unreachable!()).unwrap();
+        assert_eq!(cache.warmed(), 1);
     }
 
     #[test]

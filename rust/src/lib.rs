@@ -8,10 +8,13 @@
 //! partition-point Explorer, the PJRT bridge that executes the
 //! AOT-compiled per-actor HLO executables produced by `python/compile`,
 //! and the multi-tenant edge inference server (`server`): session
-//! manager, cross-session micro-batching, and a core-pinned worker pool.
+//! manager, cross-session micro-batching, a core-pinned worker pool, and
+//! fault-tolerant serving — link health monitoring (`runtime::health`),
+//! session resume with response replay, plan hot-swap, and local-only
+//! fallback (`server::failover`).
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See README.md for the quickstart, DESIGN.md for the system inventory
+//! and EXPERIMENTS.md for the paper-vs-measured results.
 
 pub mod analyzer;
 pub mod benchkit;

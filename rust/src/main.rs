@@ -44,9 +44,10 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
   worker:  --role endpoint|server --pp K (+ compile flags)
   serve:   --port P --bind HOST --max-sessions N --max-queue N --max-batch N
            --batch-linger-us US --workers N --no-pin --idle-timeout SECS
-           --duration SECS (0 = until killed)
+           --detach-linger SECS --replay-ring N --duration SECS (0 = until killed)
   loadgen: --addr HOST:PORT --clients N --requests N --pp K --link NAME
-           --seed S --json
+           --seed S --json --resilient --chaos K (kill each client's link
+           every K requests; implies --resilient)
 ";
 
 fn run() -> Result<()> {
@@ -238,6 +239,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         session_idle_timeout: std::time::Duration::from_secs(
             args.usize_or("idle-timeout", 300)? as u64,
         ),
+        detach_linger: std::time::Duration::from_secs(
+            args.usize_or("detach-linger", 30)? as u64,
+        ),
+        replay_ring: args.usize_or("replay-ring", 64)?,
     };
     let duration = args.usize_or("duration", 0)?;
     let server = Server::start(cfg)?;
@@ -251,8 +256,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         loop {
             std::thread::sleep(std::time::Duration::from_secs(10));
             eprintln!(
-                "edge-prune serve: {} active sessions, queue depth {}",
+                "edge-prune serve: {} active sessions ({} detached), queue depth {}",
                 server.active_sessions(),
+                server.detached_sessions(),
                 server.queue_depth()
             );
         }
@@ -269,6 +275,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         None | Some("ideal") => None,
         Some(name) => Some(configs(args)?.link(name)?),
     };
+    let chaos = args.usize_or("chaos", 0)? as u64;
     let cfg = LoadgenConfig {
         addr: args.str_or("addr", "127.0.0.1:7411").to_string(),
         clients: args.usize_or("clients", 8)?,
@@ -277,6 +284,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         model: args.str_or("model", "synthetic").to_string(),
         link,
         seed: args.usize_or("seed", 7)? as u64,
+        resilient: args.bool_flag("resilient"),
+        chaos_kill_every: chaos, // implies resilient via LoadgenConfig::is_resilient
     };
     let report = run_loadgen(&cfg)?;
     if args.bool_flag("json") {

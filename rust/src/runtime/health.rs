@@ -1,0 +1,323 @@
+//! Link/health monitor for fault-tolerant serving (the Edge-PRUNE
+//! follow-up's "Fault-Tolerant Collaborative Inference" direction).
+//!
+//! Tracks per-session link quality — round-trip-time and throughput
+//! EWMAs, a last-heard heartbeat timestamp, and a consecutive-failure
+//! count — and classifies them into a three-state `LinkState` signal that
+//! drives the `crate::server::failover` migration policy:
+//!
+//! * `Healthy` — collaborate at the preferred partition point;
+//! * `Degraded` — RTT/throughput past threshold or a recent failure:
+//!   migrate to a higher partition point (more client compute, less
+//!   dependence on the link);
+//! * `Down` — repeated failures or heartbeat silence: fall back to the
+//!   local-only plan.
+//!
+//! The monitor is passive and transport-agnostic: whatever carries the
+//! traffic (the serving protocol over raw TCP, `netsim`-shaped links,
+//! the `net` TX/RX FIFOs) reports observations via `note_rtt` /
+//! `note_heard` / `note_failure`, and any thread may read the classified
+//! state.  Mutable state sits behind one small mutex (taken once per
+//! observation, never on a per-byte path) plus plain counters.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Thresholds and smoothing for `HealthMonitor`.  A zero/None-like value
+/// disables the corresponding check (e.g. `heartbeat_timeout` of zero
+/// means silence alone never marks the link down).
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// EWMA smoothing factor in (0, 1]; higher = more reactive.
+    pub ewma_alpha: f64,
+    /// RTT EWMA above this marks the link `Degraded` (0 disables).
+    pub degraded_rtt_ms: f64,
+    /// Throughput EWMA below this marks the link `Degraded` (0 disables).
+    pub degraded_throughput_bps: f64,
+    /// This many consecutive failures mark the link `Down` (0 disables;
+    /// any single recent failure already marks it `Degraded`).
+    pub down_after_failures: u32,
+    /// Heard nothing for this long => `Down` (zero disables).
+    pub heartbeat_timeout: Duration,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            ewma_alpha: 0.2,
+            degraded_rtt_ms: 50.0,
+            degraded_throughput_bps: 0.0,
+            down_after_failures: 3,
+            heartbeat_timeout: Duration::ZERO,
+        }
+    }
+}
+
+/// Classified link condition, ordered best to worst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LinkState {
+    Healthy,
+    Degraded,
+    Down,
+}
+
+impl LinkState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LinkState::Healthy => "healthy",
+            LinkState::Degraded => "degraded",
+            LinkState::Down => "down",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    rtt_ewma_ms: Option<f64>,
+    throughput_ewma_bps: Option<f64>,
+    last_heard: Option<Instant>,
+    consecutive_failures: u32,
+}
+
+/// Shared, thread-safe monitor of one link/session.
+#[derive(Debug)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    inner: Mutex<Inner>,
+    /// Completed round trips observed.
+    pub samples: AtomicU64,
+    /// Total failures observed (not reset by recovery).
+    pub failures: AtomicU64,
+    /// Healthy-again transitions after at least one failure.
+    pub recoveries: AtomicU64,
+}
+
+impl HealthMonitor {
+    pub fn new(cfg: HealthConfig) -> Self {
+        HealthMonitor {
+            cfg,
+            inner: Mutex::new(Inner::default()),
+            samples: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// One completed round trip of `bytes` payload in `rtt`: updates both
+    /// EWMAs, refreshes the heartbeat, and clears the failure streak.
+    pub fn note_rtt(&self, rtt: Duration, bytes: usize) {
+        let rtt_ms = rtt.as_secs_f64() * 1e3;
+        let bps = if rtt.is_zero() { None } else { Some(bytes as f64 / rtt.as_secs_f64()) };
+        let a = self.cfg.ewma_alpha.clamp(0.01, 1.0);
+        let mut s = self.inner.lock().unwrap();
+        s.rtt_ewma_ms = Some(match s.rtt_ewma_ms {
+            Some(prev) => prev + a * (rtt_ms - prev),
+            None => rtt_ms,
+        });
+        if let Some(bps) = bps {
+            s.throughput_ewma_bps = Some(match s.throughput_ewma_bps {
+                Some(prev) => prev + a * (bps - prev),
+                None => bps,
+            });
+        }
+        s.last_heard = Some(Instant::now());
+        s.consecutive_failures = 0;
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Traffic arrived (any direction): refresh the heartbeat without an
+    /// RTT sample — the receive-side feed of the heartbeat timeout.
+    pub fn note_heard(&self, _bytes: usize) {
+        self.inner.lock().unwrap().last_heard = Some(Instant::now());
+    }
+
+    /// A send/receive/connect attempt failed.
+    pub fn note_failure(&self) {
+        let mut s = self.inner.lock().unwrap();
+        s.consecutive_failures = s.consecutive_failures.saturating_add(1);
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The link works again (e.g. a reconnect completed): clears the
+    /// failure streak and refreshes the heartbeat.
+    pub fn note_recovered(&self) {
+        let mut s = self.inner.lock().unwrap();
+        if s.consecutive_failures > 0 {
+            self.recoveries.fetch_add(1, Ordering::Relaxed);
+        }
+        s.consecutive_failures = 0;
+        s.last_heard = Some(Instant::now());
+    }
+
+    pub fn rtt_ms(&self) -> Option<f64> {
+        self.inner.lock().unwrap().rtt_ewma_ms
+    }
+
+    pub fn throughput_bps(&self) -> Option<f64> {
+        self.inner.lock().unwrap().throughput_ewma_bps
+    }
+
+    /// Milliseconds since the link was last heard from (None = never).
+    pub fn silence_ms(&self) -> Option<f64> {
+        self.inner.lock().unwrap().last_heard.map(|t| t.elapsed().as_secs_f64() * 1e3)
+    }
+
+    /// Classify the current signals.  With no observations at all the
+    /// link is optimistically `Healthy` (a brand-new session must be
+    /// allowed to try the collaborative plan).
+    pub fn state(&self) -> LinkState {
+        let s = self.inner.lock().unwrap();
+        if self.cfg.down_after_failures > 0
+            && s.consecutive_failures >= self.cfg.down_after_failures
+        {
+            return LinkState::Down;
+        }
+        if !self.cfg.heartbeat_timeout.is_zero() {
+            if let Some(heard) = s.last_heard {
+                if heard.elapsed() > self.cfg.heartbeat_timeout {
+                    return LinkState::Down;
+                }
+            }
+        }
+        if s.consecutive_failures > 0 {
+            return LinkState::Degraded;
+        }
+        if self.cfg.degraded_rtt_ms > 0.0 {
+            if let Some(rtt) = s.rtt_ewma_ms {
+                if rtt > self.cfg.degraded_rtt_ms {
+                    return LinkState::Degraded;
+                }
+            }
+        }
+        if self.cfg.degraded_throughput_bps > 0.0 {
+            if let Some(bps) = s.throughput_ewma_bps {
+                if bps < self.cfg.degraded_throughput_bps {
+                    return LinkState::Degraded;
+                }
+            }
+        }
+        LinkState::Healthy
+    }
+
+    pub fn to_json(&self) -> Json {
+        let (rtt, bps, silence, fails) = {
+            let s = self.inner.lock().unwrap();
+            (
+                s.rtt_ewma_ms,
+                s.throughput_ewma_bps,
+                s.last_heard.map(|t| t.elapsed().as_secs_f64() * 1e3),
+                s.consecutive_failures,
+            )
+        };
+        Json::from_pairs(vec![
+            ("state", Json::from(self.state().as_str())),
+            ("rtt_ewma_ms", rtt.map(Json::from).unwrap_or(Json::Null)),
+            ("throughput_ewma_bps", bps.map(Json::from).unwrap_or(Json::Null)),
+            ("silence_ms", silence.map(Json::from).unwrap_or(Json::Null)),
+            ("consecutive_failures", Json::from(fails as u64)),
+            ("samples", Json::from(self.samples.load(Ordering::Relaxed))),
+            ("failures", Json::from(self.failures.load(Ordering::Relaxed))),
+            ("recoveries", Json::from(self.recoveries.load(Ordering::Relaxed))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig { ewma_alpha: 0.5, degraded_rtt_ms: 10.0, ..HealthConfig::default() }
+    }
+
+    #[test]
+    fn fresh_monitor_is_optimistically_healthy() {
+        let m = HealthMonitor::new(cfg());
+        assert_eq!(m.state(), LinkState::Healthy);
+        assert!(m.rtt_ms().is_none());
+    }
+
+    #[test]
+    fn rtt_ewma_converges_and_degrades() {
+        let m = HealthMonitor::new(cfg());
+        m.note_rtt(Duration::from_millis(4), 1000);
+        assert_eq!(m.state(), LinkState::Healthy);
+        assert!((m.rtt_ms().unwrap() - 4.0).abs() < 1e-9);
+        // alpha 0.5: 4 -> 12 gives EWMA 8 (still healthy), then 10 ->
+        // over the 10 ms threshold.
+        m.note_rtt(Duration::from_millis(12), 1000);
+        assert!((m.rtt_ms().unwrap() - 8.0).abs() < 1e-9);
+        assert_eq!(m.state(), LinkState::Healthy);
+        m.note_rtt(Duration::from_millis(12), 1000);
+        assert_eq!(m.state(), LinkState::Degraded);
+    }
+
+    #[test]
+    fn failures_escalate_degraded_then_down_and_recover() {
+        let m = HealthMonitor::new(cfg());
+        m.note_failure();
+        assert_eq!(m.state(), LinkState::Degraded);
+        m.note_failure();
+        m.note_failure();
+        assert_eq!(m.state(), LinkState::Down);
+        m.note_recovered();
+        assert_eq!(m.state(), LinkState::Healthy);
+        assert_eq!(m.recoveries.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failures.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn successful_rtt_clears_failure_streak() {
+        let m = HealthMonitor::new(cfg());
+        m.note_failure();
+        m.note_failure();
+        m.note_rtt(Duration::from_millis(1), 64);
+        assert_eq!(m.state(), LinkState::Healthy);
+    }
+
+    #[test]
+    fn heartbeat_silence_marks_down() {
+        let m = HealthMonitor::new(HealthConfig {
+            heartbeat_timeout: Duration::from_millis(15),
+            ..cfg()
+        });
+        m.note_heard(128);
+        assert_eq!(m.state(), LinkState::Healthy);
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(m.state(), LinkState::Down);
+        m.note_heard(128);
+        assert_eq!(m.state(), LinkState::Healthy);
+    }
+
+    #[test]
+    fn throughput_threshold_degrades() {
+        let m = HealthMonitor::new(HealthConfig {
+            degraded_rtt_ms: 0.0,
+            degraded_throughput_bps: 1e6,
+            ..cfg()
+        });
+        // 1000 bytes in 10 ms = 100 KB/s, far under the 1 MB/s floor.
+        m.note_rtt(Duration::from_millis(10), 1000);
+        assert_eq!(m.state(), LinkState::Degraded);
+        // 100 KB in 10 ms = 10 MB/s pulls the EWMA back over the floor.
+        m.note_rtt(Duration::from_millis(10), 100_000);
+        m.note_rtt(Duration::from_millis(10), 100_000);
+        assert_eq!(m.state(), LinkState::Healthy);
+    }
+
+    #[test]
+    fn json_snapshot_has_state_and_counters() {
+        let m = HealthMonitor::new(cfg());
+        m.note_rtt(Duration::from_millis(2), 512);
+        let j = m.to_json();
+        assert_eq!(j.get("state").unwrap().str().unwrap(), "healthy");
+        assert_eq!(j.get("samples").unwrap().int().unwrap(), 1);
+        assert!(j.get("rtt_ewma_ms").unwrap().num().unwrap() > 0.0);
+    }
+}

@@ -1,11 +1,13 @@
 //! Edge-PRUNE runtime (paper §III.D): thread-per-actor engine, bounded
 //! mutex/condvar FIFOs, TCP transmit/receive FIFOs, network conditioning,
-//! device simulation, metrics, and the XLA/PJRT execution service.
+//! device simulation, link health monitoring, metrics, and the XLA/PJRT
+//! execution service.
 
 pub mod device;
 pub mod distributed;
 pub mod engine;
 pub mod fifo;
+pub mod health;
 pub mod kernels;
 pub mod metrics;
 pub mod net;

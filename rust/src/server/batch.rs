@@ -14,9 +14,8 @@
 
 use super::metrics::PlanMetrics;
 use super::model::ServerModelPlan;
-use super::protocol::Response;
+use super::session::SessionOutbox;
 use std::collections::VecDeque;
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -28,8 +27,11 @@ pub struct PendingRequest {
     pub plan_metrics: Arc<PlanMetrics>,
     pub payload: Vec<u8>,
     pub enqueued: Instant,
-    /// Hand-off to the owning session's writer thread.
-    pub reply: mpsc::Sender<Response>,
+    /// Terminal-response sink: the owning session's outbox retains the
+    /// response for replay and forwards it to whatever writer is
+    /// currently attached (the session may have reconnected since this
+    /// request was admitted).
+    pub reply: Arc<SessionOutbox>,
 }
 
 struct QueueState {
@@ -152,8 +154,7 @@ mod tests {
     }
 
     fn req(session: u64, req_id: u64, plan: &Arc<ServerModelPlan>) -> PendingRequest {
-        // Queue tests never send replies; a dangling sender is fine.
-        let (tx, _rx) = mpsc::channel();
+        // Queue tests never send replies; a detached outbox is fine.
         PendingRequest {
             session,
             req_id,
@@ -161,7 +162,7 @@ mod tests {
             plan_metrics: Arc::new(PlanMetrics::default()),
             payload: Vec::new(),
             enqueued: Instant::now(),
-            reply: tx,
+            reply: SessionOutbox::new(session, 8),
         }
     }
 

@@ -1,0 +1,658 @@
+//! Failover: the migration policy and resilient client that keep
+//! inference flowing when the edge link degrades or the server dies
+//! (the Edge-PRUNE follow-up's fault-tolerant collaborative inference).
+//!
+//! Three serving modes, chosen per request from `runtime::health` link
+//! signals:
+//!
+//! * **Collaborative** — healthy link: the session's preferred partition
+//!   point;
+//! * **Degraded** — slow/lossy link: migrate to the highest enumerated
+//!   partition point (maximum client-side compute, minimum dependence on
+//!   the link), hot-swapping the live session at a token boundary via a
+//!   `Switch` frame — the server side precompiled this fallback plan at
+//!   admission, so the swap never compiles on the failure path;
+//! * **Local** — link down: execute the local-only fallback plan
+//!   (`model::local_infer`) with no server at all, probing the edge
+//!   periodically to re-join collaborative inference.
+//!
+//! [`FailoverPolicy`] enumerates its candidate partition points exactly
+//! like the Explorer sweeps them (every legal cut, input side to output
+//! side, ascending) and maps a [`LinkState`](crate::runtime::health::LinkState)
+//! to a `(mode, pp)` choice.  [`FailoverClient`] wraps the whole loop:
+//! sequence-numbered requests, RECONNECT-with-resume on link loss,
+//! client-side re-send of unacknowledged work, dedupe of replayed
+//! responses, and local fallback — so every requested inference
+//! completes exactly once from the caller's point of view, server or no
+//! server.  A session-level availability accounting
+//! ([`FailoverStats`]) is exported as JSON.
+
+use super::model::{client_prepare, local_infer, MODEL_NAME};
+use super::protocol::{
+    read_handshake_reply, read_response, switch_payload, write_frame, write_handshake, Handshake,
+    ReqKind, RespStatus, Response, Resume,
+};
+use crate::runtime::health::{HealthConfig, HealthMonitor, LinkState};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Where an inference ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingMode {
+    Collaborative,
+    Degraded,
+    Local,
+}
+
+impl ServingMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServingMode::Collaborative => "collaborative",
+            ServingMode::Degraded => "degraded",
+            ServingMode::Local => "local",
+        }
+    }
+}
+
+/// A policy decision: which mode to serve in, and at which partition
+/// point (meaningful for the two remote modes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanChoice {
+    pub mode: ServingMode,
+    pub pp: usize,
+}
+
+/// Maps link health to a serving plan over the enumerated partition
+/// points (the Explorer's enumeration: every legal cut, ascending).
+#[derive(Debug, Clone)]
+pub struct FailoverPolicy {
+    preferred_pp: usize,
+    candidates: Vec<usize>,
+}
+
+impl FailoverPolicy {
+    /// Policy over the synthetic model's full partition-point range.
+    pub fn new(preferred_pp: usize) -> Self {
+        Self::with_candidates(preferred_pp, (1..=super::model::MAX_PP).collect())
+    }
+
+    /// Policy over an explicit candidate list (ascending after
+    /// normalization), e.g. a subset the Explorer found viable.
+    pub fn with_candidates(preferred_pp: usize, mut candidates: Vec<usize>) -> Self {
+        candidates.sort_unstable();
+        candidates.dedup();
+        if candidates.is_empty() {
+            candidates.push(preferred_pp);
+        }
+        FailoverPolicy { preferred_pp, candidates }
+    }
+
+    pub fn preferred_pp(&self) -> usize {
+        self.preferred_pp
+    }
+
+    /// The degraded-mode cut: the highest candidate — maximum client
+    /// compute, smallest reliance on the link.
+    pub fn degraded_pp(&self) -> usize {
+        *self.candidates.last().expect("candidates are never empty")
+    }
+
+    pub fn decide(&self, link: LinkState) -> PlanChoice {
+        match link {
+            LinkState::Healthy => {
+                PlanChoice { mode: ServingMode::Collaborative, pp: self.preferred_pp }
+            }
+            LinkState::Degraded => {
+                PlanChoice { mode: ServingMode::Degraded, pp: self.degraded_pp() }
+            }
+            LinkState::Down => PlanChoice { mode: ServingMode::Local, pp: self.degraded_pp() },
+        }
+    }
+}
+
+/// Shared availability math: `part / whole` with the empty case pinned
+/// to 1.0 (no demand = nothing was unavailable).  Both the client-side
+/// [`FailoverStats`] and the loadgen's aggregate report derive their
+/// exported availability metrics from this one convention.
+pub fn availability_ratio(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        return 1.0;
+    }
+    part as f64 / whole as f64
+}
+
+/// Session-level availability accounting.  `service_availability` is the
+/// acceptance metric: completed / requested, which stays 1.0 as long as
+/// local fallback catches everything the link drops.
+#[derive(Debug, Default, Clone)]
+pub struct FailoverStats {
+    pub requested: u64,
+    pub completed: u64,
+    pub served_remote: u64,
+    pub served_local: u64,
+    /// Remote inferences executed at a non-preferred (degraded) pp.
+    pub degraded: u64,
+    /// Successful connects after the first.
+    pub reconnects: u64,
+    /// Reconnects the server accepted as RECONNECT (state preserved).
+    pub sessions_resumed: u64,
+    /// Replayed/duplicate responses observed (deduped by sequence).
+    pub replays_received: u64,
+    pub rejected_retries: u64,
+    /// Fresh handshakes the server refused (admission/capacity) — those
+    /// frames complete locally, but the rejection must stay visible.
+    pub handshake_rejects: u64,
+    pub link_failures: u64,
+    pub plan_switches: u64,
+}
+
+impl FailoverStats {
+    /// Fraction of requested inferences that completed (remote or
+    /// local).  The zero-loss criterion is `== 1.0`.
+    pub fn service_availability(&self) -> f64 {
+        availability_ratio(self.completed, self.requested)
+    }
+
+    /// Fraction of completed inferences the edge actually served — the
+    /// link's availability as the client experienced it.
+    pub fn link_availability(&self) -> f64 {
+        availability_ratio(self.served_remote, self.completed)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("requested", Json::from(self.requested)),
+            ("completed", Json::from(self.completed)),
+            ("served_remote", Json::from(self.served_remote)),
+            ("served_local", Json::from(self.served_local)),
+            ("degraded", Json::from(self.degraded)),
+            ("reconnects", Json::from(self.reconnects)),
+            ("sessions_resumed", Json::from(self.sessions_resumed)),
+            ("replays_received", Json::from(self.replays_received)),
+            ("rejected_retries", Json::from(self.rejected_retries)),
+            ("handshake_rejects", Json::from(self.handshake_rejects)),
+            ("link_failures", Json::from(self.link_failures)),
+            ("plan_switches", Json::from(self.plan_switches)),
+            ("service_availability", Json::from(self.service_availability())),
+            ("link_availability", Json::from(self.link_availability())),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FailoverConfig {
+    pub addr: String,
+    pub model: String,
+    /// Preferred (collaborative) partition point.
+    pub pp: usize,
+    pub client_id: String,
+    pub health: HealthConfig,
+    /// Remote attempts per request before falling back locally.
+    pub max_attempts: u32,
+    pub reconnect_backoff: Duration,
+    /// Socket read deadline; a server silent past this is a failure.
+    pub read_timeout: Duration,
+    /// While the link is considered down, probe the edge every Nth
+    /// request (1 = every request); the rest go straight to local.
+    pub probe_every: u64,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        FailoverConfig {
+            addr: String::new(),
+            model: MODEL_NAME.to_string(),
+            pp: 3,
+            client_id: "failover".to_string(),
+            health: HealthConfig::default(),
+            max_attempts: 2,
+            reconnect_backoff: Duration::from_millis(20),
+            read_timeout: Duration::from_secs(2),
+            probe_every: 8,
+        }
+    }
+}
+
+/// How one inference was served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Served {
+    Remote { pp: usize },
+    Local,
+}
+
+impl Served {
+    pub fn is_local(self) -> bool {
+        self == Served::Local
+    }
+}
+
+struct Conn {
+    stream: TcpStream,
+}
+
+/// Resilient synchronous client: one in-flight inference at a time,
+/// sequence numbers starting at 1 so `last_ack = 0` can mean "nothing
+/// delivered yet".
+pub struct FailoverClient {
+    cfg: FailoverConfig,
+    policy: FailoverPolicy,
+    monitor: HealthMonitor,
+    conn: Option<Conn>,
+    /// Live session credentials: (id, resume token) from the accept
+    /// reply — both required for a RECONNECT.
+    session: Option<(u64, u64)>,
+    /// Partition point the live session currently executes at.
+    session_pp: usize,
+    next_seq: u64,
+    /// Highest sequence whose response this client has received — the
+    /// `last_ack` a RECONNECT carries.
+    last_delivered: u64,
+    /// Consecutive local servings (drives the down-state probe cadence).
+    local_streak: u64,
+    ever_connected: bool,
+    stats: FailoverStats,
+}
+
+/// Read until the terminal response for `seq` arrives, counting replayed
+/// duplicates of earlier sequences (dedupe-by-sequence: anything not
+/// `seq` has either been delivered before or will be re-requested).
+fn await_response(
+    stream: &mut TcpStream,
+    stats: &mut FailoverStats,
+    seq: u64,
+) -> Result<Response> {
+    loop {
+        match read_response(stream)? {
+            None => bail!("connection closed awaiting seq {seq}"),
+            Some(resp) if resp.req_id == seq => return Ok(resp),
+            Some(resp) => {
+                if resp.req_id < seq {
+                    stats.replays_received += 1;
+                }
+            }
+        }
+    }
+}
+
+impl FailoverClient {
+    pub fn new(cfg: FailoverConfig) -> Self {
+        let policy = FailoverPolicy::new(cfg.pp);
+        let monitor = HealthMonitor::new(cfg.health.clone());
+        let session_pp = cfg.pp;
+        FailoverClient {
+            cfg,
+            policy,
+            monitor,
+            conn: None,
+            session: None,
+            session_pp,
+            next_seq: 1,
+            last_delivered: 0,
+            local_streak: 0,
+            ever_connected: false,
+            stats: FailoverStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &FailoverStats {
+        &self.stats
+    }
+
+    pub fn monitor(&self) -> &HealthMonitor {
+        &self.monitor
+    }
+
+    pub fn session_pp(&self) -> usize {
+        self.session_pp
+    }
+
+    /// Stats plus the live link-health snapshot, one JSON object.
+    pub fn metrics_json(&self) -> Json {
+        let mut j = self.stats.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("health".into(), self.monitor.to_json());
+        }
+        j
+    }
+
+    /// Redirect future (re)connects — e.g. the edge endpoint moved.  The
+    /// current link, if any, keeps being used until it fails.
+    pub fn set_addr(&mut self, addr: &str) {
+        self.cfg.addr = addr.to_string();
+    }
+
+    /// Chaos hook: abruptly kill the live link (no BYE), as a failing
+    /// network would.  The next inference reconnects and resumes.
+    pub fn kill_link(&mut self) {
+        if let Some(conn) = &self.conn {
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        }
+        self.conn = None;
+    }
+
+    /// One inference, never lost: remote over the current session when
+    /// the link allows, reconnect/RESUME (bounded attempts) on failure,
+    /// local-only fallback otherwise.  Returns the digest and where it
+    /// was computed.
+    pub fn infer(&mut self, input: &[f32]) -> Result<(Vec<u8>, Served)> {
+        self.stats.requested += 1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let allow_remote = match self.policy.decide(self.monitor.state()).mode {
+            ServingMode::Local => self.local_streak % self.cfg.probe_every.max(1) == 0,
+            _ => true,
+        };
+        if allow_remote {
+            let attempts = self.cfg.max_attempts.max(1);
+            for attempt in 0..attempts {
+                match self.try_remote(seq, input) {
+                    Ok(body) => {
+                        self.local_streak = 0;
+                        self.last_delivered = self.last_delivered.max(seq);
+                        self.stats.completed += 1;
+                        self.stats.served_remote += 1;
+                        let pp = self.session_pp;
+                        if pp != self.cfg.pp {
+                            self.stats.degraded += 1;
+                        }
+                        return Ok((body, Served::Remote { pp }));
+                    }
+                    Err(_) => {
+                        self.fail_link();
+                        if self.policy.decide(self.monitor.state()).mode == ServingMode::Local {
+                            break;
+                        }
+                        if attempt + 1 < attempts && !self.cfg.reconnect_backoff.is_zero() {
+                            std::thread::sleep(self.cfg.reconnect_backoff);
+                        }
+                    }
+                }
+            }
+        }
+        // Local-only fallback plan: the frame completes regardless.
+        self.local_streak += 1;
+        let body = local_infer(input);
+        self.stats.completed += 1;
+        self.stats.served_local += 1;
+        Ok((body, Served::Local))
+    }
+
+    /// Heartbeat: measures RTT into the health monitor.
+    pub fn ping(&mut self) -> Result<Duration> {
+        let r = self.try_ping();
+        if r.is_err() {
+            self.fail_link();
+        }
+        r
+    }
+
+    /// Clean shutdown: BYE frees the server-side slot immediately.  Safe
+    /// with no live connection.
+    pub fn finish(&mut self) {
+        if let Some(conn) = &mut self.conn {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            let _ = write_frame(&mut conn.stream, seq, ReqKind::Bye, &[]);
+        }
+        self.conn = None;
+        self.session = None;
+    }
+
+    fn connect_raw(&self) -> Result<TcpStream> {
+        let stream = TcpStream::connect(&self.cfg.addr)
+            .with_context(|| format!("connecting to {}", self.cfg.addr))?;
+        stream.set_nodelay(true)?;
+        if !self.cfg.read_timeout.is_zero() {
+            stream.set_read_timeout(Some(self.cfg.read_timeout))?;
+        }
+        Ok(stream)
+    }
+
+    fn note_connected(&mut self, resumed: bool) {
+        if self.ever_connected {
+            self.stats.reconnects += 1;
+        }
+        self.ever_connected = true;
+        if resumed {
+            self.stats.sessions_resumed += 1;
+        }
+        self.monitor.note_recovered();
+    }
+
+    fn ensure_connected(&mut self) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        // RECONNECT first: a resume preserves the session's plan and
+        // replays every response we have not acknowledged.
+        if let Some((sid, token)) = self.session {
+            let mut stream = self.connect_raw()?;
+            write_handshake(
+                &mut stream,
+                &Handshake {
+                    model: self.cfg.model.clone(),
+                    pp: self.session_pp,
+                    client_id: self.cfg.client_id.clone(),
+                    resume: Some(Resume {
+                        session_id: sid,
+                        token,
+                        last_ack: self.last_delivered,
+                    }),
+                },
+            )?;
+            let reply = read_handshake_reply(&mut stream)?;
+            if reply.accepted {
+                self.conn = Some(Conn { stream });
+                self.note_connected(true);
+                return Ok(());
+            }
+            // The server lost the session (restart, reap): fresh
+            // handshake on a fresh connection below.
+            self.session = None;
+        }
+        let choice = self.policy.decide(self.monitor.state());
+        let mut stream = self.connect_raw()?;
+        write_handshake(
+            &mut stream,
+            &Handshake {
+                model: self.cfg.model.clone(),
+                pp: choice.pp,
+                client_id: self.cfg.client_id.clone(),
+                resume: None,
+            },
+        )?;
+        let reply = read_handshake_reply(&mut stream)?;
+        if !reply.accepted {
+            self.stats.handshake_rejects += 1;
+            bail!("handshake rejected: {}", reply.message);
+        }
+        self.session = Some((reply.session_id, reply.token));
+        self.session_pp = choice.pp;
+        self.conn = Some(Conn { stream });
+        self.note_connected(false);
+        Ok(())
+    }
+
+    /// Hot-swap the live session to `pp` at a token boundary.
+    fn ensure_pp(&mut self, pp: usize) -> Result<()> {
+        if self.session_pp == pp {
+            return Ok(());
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let stream = &mut self.conn.as_mut().expect("connected").stream;
+        write_frame(stream, seq, ReqKind::Switch, &switch_payload(pp))?;
+        let resp = await_response(stream, &mut self.stats, seq)?;
+        if resp.status != RespStatus::Ok {
+            bail!("plan switch to pp {pp} refused: {}", String::from_utf8_lossy(&resp.body));
+        }
+        self.session_pp = pp;
+        self.stats.plan_switches += 1;
+        Ok(())
+    }
+
+    fn try_remote(&mut self, seq: u64, input: &[f32]) -> Result<Vec<u8>> {
+        self.ensure_connected()?;
+        let choice = self.policy.decide(self.monitor.state());
+        if choice.mode != ServingMode::Local && choice.pp != self.session_pp {
+            self.ensure_pp(choice.pp)?;
+        }
+        let payload = client_prepare(input, self.session_pp);
+        let t0 = Instant::now();
+        let stream = &mut self.conn.as_mut().expect("connected").stream;
+        write_frame(stream, seq, ReqKind::Infer, &payload)?;
+        let mut reject_retries = 0u32;
+        loop {
+            let resp = await_response(stream, &mut self.stats, seq)?;
+            match resp.status {
+                RespStatus::Ok => {
+                    self.monitor.note_rtt(t0.elapsed(), payload.len() + resp.body.len());
+                    return Ok(resp.body);
+                }
+                RespStatus::Rejected => {
+                    // Admission pushback: brief pause, re-send the same
+                    // sequence (a rejected seq is re-admitted as fresh).
+                    self.stats.rejected_retries += 1;
+                    reject_retries += 1;
+                    if reject_retries > 100 {
+                        bail!("admission rejected seq {seq} {reject_retries} times");
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    write_frame(stream, seq, ReqKind::Infer, &payload)?;
+                }
+                RespStatus::Error => {
+                    bail!("server error for seq {seq}: {}", String::from_utf8_lossy(&resp.body))
+                }
+            }
+        }
+    }
+
+    fn try_ping(&mut self) -> Result<Duration> {
+        self.ensure_connected()?;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let t0 = Instant::now();
+        let stream = &mut self.conn.as_mut().expect("connected").stream;
+        write_frame(stream, seq, ReqKind::Ping, &[])?;
+        let resp = await_response(stream, &mut self.stats, seq)?;
+        let rtt = t0.elapsed();
+        self.monitor.note_rtt(rtt, resp.body.len() + 26);
+        Ok(rtt)
+    }
+
+    fn fail_link(&mut self) {
+        if let Some(conn) = &self.conn {
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        }
+        self.conn = None;
+        self.monitor.note_failure();
+        self.stats.link_failures += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model::{expected_digest, make_input, MAX_PP};
+    use super::super::{Server, ServerConfig};
+    use super::*;
+
+    #[test]
+    fn policy_maps_link_states_to_modes() {
+        let p = FailoverPolicy::new(3);
+        assert_eq!(
+            p.decide(LinkState::Healthy),
+            PlanChoice { mode: ServingMode::Collaborative, pp: 3 }
+        );
+        assert_eq!(
+            p.decide(LinkState::Degraded),
+            PlanChoice { mode: ServingMode::Degraded, pp: MAX_PP }
+        );
+        assert_eq!(p.decide(LinkState::Down).mode, ServingMode::Local);
+    }
+
+    #[test]
+    fn candidate_normalization_and_degraded_pick() {
+        let p = FailoverPolicy::with_candidates(2, vec![4, 1, 4, 2]);
+        assert_eq!(p.degraded_pp(), 4);
+        let empty = FailoverPolicy::with_candidates(2, vec![]);
+        assert_eq!(empty.degraded_pp(), 2, "empty candidates fall back to preferred");
+    }
+
+    #[test]
+    fn stats_availability_math() {
+        let s = FailoverStats {
+            requested: 10,
+            completed: 10,
+            served_remote: 7,
+            served_local: 3,
+            ..FailoverStats::default()
+        };
+        assert!((s.service_availability() - 1.0).abs() < 1e-12);
+        assert!((s.link_availability() - 0.7).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("served_local").unwrap().int().unwrap(), 3);
+        assert!((j.get("link_availability").unwrap().num().unwrap() - 0.7).abs() < 1e-12);
+        assert!(FailoverStats::default().service_availability() >= 1.0);
+    }
+
+    #[test]
+    fn ping_feeds_the_monitor_and_infer_serves_remote() {
+        let server = Server::start(ServerConfig {
+            workers: 2,
+            pin_workers: false,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let mut fc = FailoverClient::new(FailoverConfig {
+            addr: server.addr().to_string(),
+            pp: 2,
+            client_id: "ping-test".into(),
+            ..FailoverConfig::default()
+        });
+        let rtt = fc.ping().unwrap();
+        assert!(rtt > Duration::ZERO);
+        assert_eq!(fc.monitor().samples.load(std::sync::atomic::Ordering::Relaxed), 1);
+        let input = make_input(5);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert_eq!(body, expected_digest(&input));
+        assert_eq!(served, Served::Remote { pp: 2 });
+        fc.finish();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.get("pings").unwrap().int().unwrap(), 1);
+        assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 1);
+    }
+
+    #[test]
+    fn degraded_link_hot_swaps_mid_stream() {
+        let server = Server::start(ServerConfig {
+            workers: 2,
+            pin_workers: false,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        // Any measurable RTT trips the degraded threshold, so request 2
+        // must migrate to the degraded pp over the live session.
+        let mut fc = FailoverClient::new(FailoverConfig {
+            addr: server.addr().to_string(),
+            pp: 2,
+            client_id: "degrade-test".into(),
+            health: HealthConfig { degraded_rtt_ms: 1e-9, ..HealthConfig::default() },
+            ..FailoverConfig::default()
+        });
+        let a = make_input(1);
+        let (body, served) = fc.infer(&a).unwrap();
+        assert_eq!(body, expected_digest(&a));
+        assert_eq!(served, Served::Remote { pp: 2 });
+        let b = make_input(2);
+        let (body, served) = fc.infer(&b).unwrap();
+        assert_eq!(body, expected_digest(&b), "digest invariant across the hot-swap");
+        assert_eq!(served, Served::Remote { pp: MAX_PP });
+        assert_eq!(fc.stats().plan_switches, 1);
+        assert_eq!(fc.stats().degraded, 1);
+        fc.finish();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.get("plan_switches").unwrap().int().unwrap(), 1);
+    }
+}

@@ -4,13 +4,30 @@
 //! (the split model's digest is partition-point independent, so a client
 //! at any pp can check the server byte-for-byte).
 //!
-//! Accounting is strict: a request is `ok`, `rejected` (admission),
-//! `errored`, or `lost` (sent but never answered) — `lost() == 0` is the
-//! zero-drop acceptance criterion.
+//! Two client implementations:
+//!
+//! * the **strict** client (default) speaks the raw protocol and treats
+//!   any link loss as fatal for the remaining requests — this is what
+//!   measures pure serving throughput;
+//! * the **resilient** client (`resilient` / `chaos_kill_every`) wraps
+//!   `failover::FailoverClient`: it reconnects and resumes on link
+//!   loss, replays unacknowledged work, and falls back to the local-only
+//!   plan when the edge is unreachable.  Chaos mode kills its own link
+//!   every K requests mid-run to exercise exactly that machinery.
+//!
+//! Accounting is strict either way: a request is `ok`, `rejected`
+//! (admission), `errored`, or `lost` (sent but never answered) —
+//! `lost() == 0` is the zero-drop acceptance criterion, and the report
+//! carries session-level availability (fraction of completed inferences
+//! the edge served vs the local fallback).  In resilient mode a
+//! handshake-level admission reject still counts as a rejected session
+//! even though the affected frames complete via the local fallback.
 
+use super::failover::{availability_ratio, FailoverClient, FailoverConfig};
 use super::model::{client_prepare, expected_digest, make_input, MODEL_NAME};
 use super::protocol::{
-    read_handshake_reply, read_response, write_handshake, write_request, Handshake, RespStatus,
+    read_handshake_reply, read_response, write_frame, write_handshake, write_request, Handshake,
+    ReqKind, RespStatus,
 };
 use crate::runtime::metrics::LatencyHistogram;
 use crate::runtime::netsim::{LinkModel, LinkShaper};
@@ -32,6 +49,21 @@ pub struct LoadgenConfig {
     /// Uplink profile per client (None = unshaped localhost).
     pub link: Option<LinkModel>,
     pub seed: u64,
+    /// Use the fault-tolerant `FailoverClient` instead of the strict
+    /// protocol client.
+    pub resilient: bool,
+    /// Chaos mode (implies resilient): every K requests each client
+    /// abruptly kills its own link mid-run (no BYE) and must recover via
+    /// RECONNECT/replay or local fallback.  0 = never.
+    pub chaos_kill_every: u64,
+}
+
+impl LoadgenConfig {
+    /// Chaos implies the resilient client — the single source of that
+    /// rule (the `resilient` field alone may read false under chaos).
+    pub fn is_resilient(&self) -> bool {
+        self.resilient || self.chaos_kill_every > 0
+    }
 }
 
 impl Default for LoadgenConfig {
@@ -44,6 +76,8 @@ impl Default for LoadgenConfig {
             model: MODEL_NAME.to_string(),
             link: None,
             seed: 7,
+            resilient: false,
+            chaos_kill_every: 0,
         }
     }
 }
@@ -55,6 +89,10 @@ struct Tally {
     ok: u64,
     rejected: u64,
     errors: u64,
+    served_local: u64,
+    reconnects: u64,
+    resumed: u64,
+    replays: u64,
 }
 
 #[derive(Debug)]
@@ -65,6 +103,11 @@ pub struct LoadReport {
     pub ok: u64,
     pub rejected: u64,
     pub errors: u64,
+    /// Completed via the local-only fallback plan (resilient mode).
+    pub served_local: u64,
+    pub reconnects: u64,
+    pub sessions_resumed: u64,
+    pub replays_received: u64,
     pub wall: Duration,
     pub latency: Arc<LatencyHistogram>,
 }
@@ -82,6 +125,18 @@ impl LoadReport {
         self.ok as f64 / self.wall.as_secs_f64()
     }
 
+    /// Fraction of completed inferences the edge actually served (1.0
+    /// when nothing fell back to the local plan).
+    pub fn link_availability(&self) -> f64 {
+        availability_ratio(self.ok - self.served_local, self.ok)
+    }
+
+    /// Fraction of sent requests that completed somewhere (the service
+    /// never dropping a frame means 1.0 even mid-failure).
+    pub fn service_availability(&self) -> f64 {
+        availability_ratio(self.ok, self.sent)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("clients", Json::from(self.clients)),
@@ -91,6 +146,12 @@ impl LoadReport {
             ("rejected", Json::from(self.rejected)),
             ("errors", Json::from(self.errors)),
             ("lost", Json::from(self.lost())),
+            ("served_local", Json::from(self.served_local)),
+            ("reconnects", Json::from(self.reconnects)),
+            ("sessions_resumed", Json::from(self.sessions_resumed)),
+            ("replays_received", Json::from(self.replays_received)),
+            ("service_availability", Json::from(self.service_availability())),
+            ("link_availability", Json::from(self.link_availability())),
             ("wall_ms", Json::from(self.wall.as_secs_f64() * 1e3)),
             ("requests_per_sec", Json::from(self.requests_per_sec())),
             ("latency", self.latency.to_json()),
@@ -99,7 +160,7 @@ impl LoadReport {
 
     /// One-line human summary for the CLI and benches.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} clients: {} ok, {} rejected, {} errors, {} lost in {:.1} ms -> {:.0} req/s \
              (p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms)",
             self.clients,
@@ -112,10 +173,21 @@ impl LoadReport {
             self.latency.quantile_ms(0.50),
             self.latency.quantile_ms(0.95),
             self.latency.quantile_ms(0.99),
-        )
+        );
+        if self.served_local > 0 || self.reconnects > 0 {
+            line.push_str(&format!(
+                "; {} served-local, {} reconnects ({} resumed), link availability {:.1}%",
+                self.served_local,
+                self.reconnects,
+                self.sessions_resumed,
+                self.link_availability() * 100.0
+            ));
+        }
+        line
     }
 }
 
+/// Strict client: raw protocol, any link loss ends the session.
 fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) -> Result<Tally> {
     let mut tally = Tally::default();
     let mut stream = TcpStream::connect(&cfg.addr)
@@ -127,6 +199,7 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
             model: cfg.model.clone(),
             pp: cfg.pp,
             client_id: format!("loadgen-{index}"),
+            resume: None,
         },
     )?;
     let reply = read_handshake_reply(&mut stream)?;
@@ -136,11 +209,7 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
     }
     let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
     for r in 0..cfg.requests {
-        let frame_seed = cfg
-            .seed
-            .wrapping_add((index as u64).wrapping_mul(1_000_003))
-            .wrapping_add(r.wrapping_mul(0x9e37_79b9));
-        let input = make_input(frame_seed);
+        let input = make_input(frame_seed(cfg.seed, index, r));
         let payload = client_prepare(&input, cfg.pp);
         let expected = expected_digest(&input);
         if let Some(s) = &shaper {
@@ -150,7 +219,9 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
             s.delivery_wait(ts);
         }
         let t0 = Instant::now();
-        if write_request(&mut stream, r, &payload).is_err() {
+        // Sequence numbers start at 1 (the protocol reserves 0 for
+        // "nothing acked" in RECONNECT last_ack fields).
+        if write_request(&mut stream, r + 1, &payload).is_err() {
             break; // connection gone before the request left
         }
         tally.sent += 1;
@@ -172,12 +243,78 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
             Ok(None) | Err(_) => break, // this request is lost
         }
     }
+    // Clean close: BYE frees the server-side slot immediately (an abrupt
+    // drop would detach-and-linger awaiting a RECONNECT it never sends).
+    let _ = write_frame(&mut stream, cfg.requests + 1, ReqKind::Bye, &[]);
     Ok(tally)
+}
+
+/// Resilient client: `FailoverClient` with optional induced link kills.
+/// Every request completes (remote or local), so `lost()` stays zero
+/// even while the chaos mode is tearing connections down mid-run.
+fn resilient_client_main(
+    cfg: &LoadgenConfig,
+    index: usize,
+    latency: &LatencyHistogram,
+) -> Result<Tally> {
+    let mut tally = Tally::default();
+    let mut fc = FailoverClient::new(FailoverConfig {
+        addr: cfg.addr.clone(),
+        model: cfg.model.clone(),
+        pp: cfg.pp,
+        client_id: format!("loadgen-{index}"),
+        ..FailoverConfig::default()
+    });
+    let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
+    for r in 0..cfg.requests {
+        if cfg.chaos_kill_every > 0 && r > 0 && r % cfg.chaos_kill_every == 0 {
+            fc.kill_link(); // induced mid-run link failure
+        }
+        let input = make_input(frame_seed(cfg.seed, index, r));
+        let expected = expected_digest(&input);
+        if let Some(s) = &shaper {
+            let ts = s.send_slot(super::model::TOKEN_BYTES);
+            s.delivery_wait(ts);
+        }
+        let t0 = Instant::now();
+        tally.sent += 1;
+        match fc.infer(&input) {
+            Ok((body, served)) if body == expected => {
+                // Local fallbacks complete the frame but say nothing
+                // about serving latency; keep the histogram remote-only.
+                if !served.is_local() {
+                    latency.record(t0.elapsed());
+                } else {
+                    tally.served_local += 1;
+                }
+                tally.ok += 1;
+            }
+            Ok(_) => tally.errors += 1, // wrong bytes
+            Err(_) => tally.errors += 1,
+        }
+    }
+    fc.finish();
+    let stats = fc.stats();
+    // Admission rejects stay visible in resilient mode even though the
+    // frames themselves completed locally: a client that was ever
+    // refused at handshake counts as a rejected session, keeping the
+    // two modes' reports comparable under capacity pressure.
+    tally.session_rejected = stats.handshake_rejects > 0;
+    tally.reconnects = stats.reconnects;
+    tally.resumed = stats.sessions_resumed;
+    tally.replays = stats.replays_received;
+    Ok(tally)
+}
+
+fn frame_seed(seed: u64, index: usize, r: u64) -> u64 {
+    seed.wrapping_add((index as u64).wrapping_mul(1_000_003))
+        .wrapping_add(r.wrapping_mul(0x9e37_79b9))
 }
 
 /// Drive `cfg.clients` concurrent sessions to completion.
 pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
     let latency = Arc::new(LatencyHistogram::new());
+    let resilient = cfg.is_resilient();
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(cfg.clients);
     for index in 0..cfg.clients {
@@ -186,7 +323,13 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         handles.push(
             std::thread::Builder::new()
                 .name(format!("loadgen-{index}"))
-                .spawn(move || client_main(&cfg, index, &latency))
+                .spawn(move || {
+                    if resilient {
+                        resilient_client_main(&cfg, index, &latency)
+                    } else {
+                        client_main(&cfg, index, &latency)
+                    }
+                })
                 .context("spawning loadgen client")?,
         );
     }
@@ -197,6 +340,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         ok: 0,
         rejected: 0,
         errors: 0,
+        served_local: 0,
+        reconnects: 0,
+        sessions_resumed: 0,
+        replays_received: 0,
         wall: Duration::ZERO,
         latency,
     };
@@ -212,6 +359,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 report.ok += tally.ok;
                 report.rejected += tally.rejected;
                 report.errors += tally.errors;
+                report.served_local += tally.served_local;
+                report.reconnects += tally.reconnects;
+                report.sessions_resumed += tally.resumed;
+                report.replays_received += tally.replays;
             }
             Ok(Err(e)) => first_err = first_err.or(Some(e)),
             Err(_) => {
@@ -239,14 +390,21 @@ mod tests {
             ok: 7,
             rejected: 2,
             errors: 0,
+            served_local: 2,
+            reconnects: 1,
+            sessions_resumed: 1,
+            replays_received: 0,
             wall: Duration::from_millis(100),
             latency: Arc::new(LatencyHistogram::new()),
         };
         assert_eq!(r.lost(), 1);
         assert!((r.requests_per_sec() - 70.0).abs() < 1e-6);
+        assert!((r.link_availability() - 5.0 / 7.0).abs() < 1e-12);
         let j = r.to_json();
         assert_eq!(j.get("lost").unwrap().int().unwrap(), 1);
+        assert_eq!(j.get("served_local").unwrap().int().unwrap(), 2);
         assert!(r.summary().contains("1 lost"));
+        assert!(r.summary().contains("served-local"));
     }
 
     #[test]
@@ -258,5 +416,24 @@ mod tests {
             ..LoadgenConfig::default()
         };
         assert!(run_loadgen(&cfg).is_err());
+    }
+
+    #[test]
+    fn resilient_client_without_server_serves_locally_zero_lost() {
+        // Nothing is listening: every frame must still complete via the
+        // local-only fallback plan.
+        let cfg = LoadgenConfig {
+            addr: "127.0.0.1:1".to_string(),
+            clients: 2,
+            requests: 6,
+            resilient: true,
+            ..LoadgenConfig::default()
+        };
+        let report = run_loadgen(&cfg).unwrap();
+        assert_eq!(report.ok, 12);
+        assert_eq!(report.lost(), 0);
+        assert_eq!(report.served_local, 12);
+        assert!((report.service_availability() - 1.0).abs() < 1e-12);
+        assert!((report.link_availability() - 0.0).abs() < 1e-12);
     }
 }

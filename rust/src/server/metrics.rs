@@ -34,6 +34,14 @@ pub struct ServingMetrics {
     // Completion (sum over plans, kept separately for cheap reads).
     pub requests_completed: AtomicU64,
     pub request_errors: AtomicU64,
+    // Resilience (protocol v2: detach/resume, replay, hot-swap).
+    pub sessions_detached: AtomicU64,
+    pub sessions_resumed: AtomicU64,
+    pub sessions_reaped: AtomicU64,
+    pub responses_replayed: AtomicU64,
+    pub duplicate_requests: AtomicU64,
+    pub plan_switches: AtomicU64,
+    pub pings: AtomicU64,
     per_plan: Mutex<BTreeMap<PlanKey, Arc<PlanMetrics>>>,
 }
 
@@ -96,6 +104,13 @@ impl ServingMetrics {
             ("requests_completed", Json::from(self.requests_completed.load(Ordering::Relaxed))),
             ("requests_rejected", Json::from(self.requests_rejected.load(Ordering::Relaxed))),
             ("request_errors", Json::from(self.request_errors.load(Ordering::Relaxed))),
+            ("sessions_detached", Json::from(self.sessions_detached.load(Ordering::Relaxed))),
+            ("sessions_resumed", Json::from(self.sessions_resumed.load(Ordering::Relaxed))),
+            ("sessions_reaped", Json::from(self.sessions_reaped.load(Ordering::Relaxed))),
+            ("responses_replayed", Json::from(self.responses_replayed.load(Ordering::Relaxed))),
+            ("duplicate_requests", Json::from(self.duplicate_requests.load(Ordering::Relaxed))),
+            ("plan_switches", Json::from(self.plan_switches.load(Ordering::Relaxed))),
+            ("pings", Json::from(self.pings.load(Ordering::Relaxed))),
             ("queue_high_water", Json::from(self.queue_high_water.load(Ordering::Relaxed))),
             ("batch_occupancy", Json::from(self.batch_occupancy())),
             ("plans", Json::Arr(plans)),

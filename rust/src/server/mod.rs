@@ -1,5 +1,5 @@
-//! Multi-tenant edge inference server (the ROADMAP's "edge server under
-//! heavy traffic" layer).
+//! Multi-tenant, fault-tolerant edge inference server (the ROADMAP's
+//! "edge server under heavy traffic" layer).
 //!
 //! Where `runtime::distributed` executes ONE deployment plan per process,
 //! this subsystem runs a long-lived TCP service that concurrently serves
@@ -7,22 +7,35 @@
 //!
 //! * **session manager** (`session`) — handshake carries (model,
 //!   partition point, client id); plans are compiled once per
-//!   `(model, pp)` via the `compiler::cache::PlanCache` and shared;
+//!   `(model, pp)` via the `compiler::cache::PlanCache` and shared.
+//!   Protocol v2 sessions survive link loss: abrupt disconnects detach
+//!   (state retained for `detach_linger`), a RECONNECT handshake
+//!   re-attaches and replays unacknowledged responses from the
+//!   per-session retransmit ring (`session::SessionOutbox`);
 //! * **admission control + micro-batching** (`batch`) — bounded session
 //!   count and queue depth, explicit reject responses, and cross-session
 //!   coalescing of same-plan requests;
 //! * **core-pinned worker pool** (`workers`, `spsc`) — thread-per-core
 //!   via `platform::affinity`, one engine shard per worker per plan,
 //!   SPSC hand-off instead of locks;
+//! * **plan hot-swap** (`model`, `failover`) — every deployment
+//!   precompiles its local-only fallback plan, and a live session can
+//!   switch partition points mid-stream at a token boundary via a
+//!   `Switch` frame;
+//! * **failover** (`failover`) — the client-side migration policy and
+//!   resilient client that choose between collaborative, degraded, and
+//!   local-only plans from `runtime::health` link signals;
 //! * **serving metrics** (`metrics`) — queue depth, batch occupancy,
-//!   per-plan p50/p95/p99 latency, reject counters;
+//!   per-plan p50/p95/p99 latency, reject/replay/resume counters;
 //! * **loadgen** (`loadgen`) — N synthetic clients driven through
-//!   `netsim::LinkShaper` link profiles, verifying every response.
+//!   `netsim::LinkShaper` link profiles, verifying every response, with
+//!   a chaos mode that kills links mid-run.
 //!
-//! Protocol details live in `protocol`; DESIGN.md documents the
-//! handshake and framing.
+//! Protocol details live in `protocol`; DESIGN.md documents the v2
+//! handshake, framing, and the failover state machine.
 
 pub mod batch;
+pub mod failover;
 pub mod loadgen;
 pub mod metrics;
 pub mod model;
@@ -37,8 +50,8 @@ use anyhow::{Context, Result};
 use batch::{BatchQueue, PendingRequest};
 use metrics::ServingMetrics;
 use model::ServerModelPlan;
-use protocol::{HandshakeReply, Response};
-use session::SessionManager;
+use protocol::{HandshakeReply, ReqKind, Response};
+use session::{Admit, SessionManager};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -50,7 +63,8 @@ use workers::WorkerPool;
 pub struct ServerConfig {
     /// Bind address ("127.0.0.1:0" = ephemeral port, for tests/benches).
     pub addr: String,
-    /// Admission: maximum concurrent sessions.
+    /// Admission: maximum concurrent sessions (detached ones included —
+    /// resumability holds the slot).
     pub max_sessions: usize,
     /// Admission: maximum queued requests across all sessions.
     pub max_queue: usize,
@@ -65,6 +79,11 @@ pub struct ServerConfig {
     /// Reclaim a session whose client sends nothing for this long —
     /// silently-dead clients must not hold session slots forever.
     pub session_idle_timeout: Duration,
+    /// How long a detached session lingers awaiting a RECONNECT before
+    /// the reaper frees its slot and replay state.
+    pub detach_linger: Duration,
+    /// Per-session retransmit ring: responses retained for replay.
+    pub replay_ring: usize,
 }
 
 impl Default for ServerConfig {
@@ -78,6 +97,8 @@ impl Default for ServerConfig {
             workers: 0,
             pin_workers: true,
             session_idle_timeout: Duration::from_secs(300),
+            detach_linger: Duration::from_secs(30),
+            replay_ring: 64,
         }
     }
 }
@@ -89,6 +110,8 @@ struct ServerState {
     metrics: Arc<ServingMetrics>,
     shutting_down: AtomicBool,
     idle_timeout: Duration,
+    detach_linger: Duration,
+    replay_ring: usize,
 }
 
 /// A running server.  `shutdown()` tears everything down in order:
@@ -122,6 +145,8 @@ impl Server {
             metrics: metrics.clone(),
             shutting_down: AtomicBool::new(false),
             idle_timeout: cfg.session_idle_timeout,
+            detach_linger: cfg.detach_linger,
+            replay_ring: cfg.replay_ring,
         });
 
         let (pool, mut dispatch) = WorkerPool::spawn(workers, cfg.pin_workers, metrics.clone())?;
@@ -151,49 +176,66 @@ impl Server {
         // Acceptor: one reader thread per session.  Connections that have
         // not completed a handshake are bounded separately from
         // max_sessions (pre-admission threads are the one resource a
-        // client can hold without passing admission).
+        // client can hold without passing admission).  The accept loop
+        // doubles as the detach reaper's clock.
         let accept_result = {
             let state = state.clone();
             let max_pending = cfg.max_sessions.saturating_mul(2).saturating_add(16);
             let pending = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let reap_period = (state.detach_linger / 2)
+                .min(Duration::from_secs(1))
+                .max(Duration::from_millis(10));
             std::thread::Builder::new()
                 .name("serve-accept".into())
-                .spawn(move || loop {
-                    if state.shutting_down.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let stream = match listener.accept() {
-                        Ok((stream, _peer)) => stream,
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
+                .spawn(move || {
+                    let mut last_reap = Instant::now();
+                    loop {
+                        if state.shutting_down.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if last_reap.elapsed() >= reap_period {
+                            let reaped = state.sessions.reap_detached(state.detach_linger);
+                            if reaped > 0 {
+                                state
+                                    .metrics
+                                    .sessions_reaped
+                                    .fetch_add(reaped as u64, Ordering::Relaxed);
+                            }
+                            last_reap = Instant::now();
+                        }
+                        let stream = match listener.accept() {
+                            Ok((stream, _peer)) => stream,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(5));
+                                continue;
+                            }
+                            Err(_) => {
+                                // e.g. EMFILE under fd exhaustion: failing
+                                // instantly in a loop would peg this core.
+                                std::thread::sleep(Duration::from_millis(5));
+                                continue;
+                            }
+                        };
+                        // Accepted sockets inherit non-blocking on some
+                        // platforms; session I/O is blocking.
+                        if stream.set_nonblocking(false).is_err() {
                             continue;
                         }
-                        Err(_) => {
-                            // e.g. EMFILE under fd exhaustion: failing
-                            // instantly in a loop would peg this core.
-                            std::thread::sleep(Duration::from_millis(5));
+                        if pending.load(Ordering::SeqCst) >= max_pending {
+                            drop(stream); // over the pre-admission bound
                             continue;
                         }
-                    };
-                    // Accepted sockets inherit non-blocking on some
-                    // platforms; session I/O is blocking.
-                    if stream.set_nonblocking(false).is_err() {
-                        continue;
-                    }
-                    if pending.load(Ordering::SeqCst) >= max_pending {
-                        drop(stream); // over the pre-admission bound
-                        continue;
-                    }
-                    pending.fetch_add(1, Ordering::SeqCst);
-                    let state = state.clone();
-                    let pending_child = pending.clone();
-                    let spawned = std::thread::Builder::new()
-                        .name("serve-session".into())
-                        .spawn(move || {
-                            let _ = handle_session(stream, &state, &pending_child);
-                        });
-                    if spawned.is_err() {
-                        pending.fetch_sub(1, Ordering::SeqCst);
+                        pending.fetch_add(1, Ordering::SeqCst);
+                        let state = state.clone();
+                        let pending_child = pending.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("serve-session".into())
+                            .spawn(move || {
+                                let _ = handle_session(stream, &state, &pending_child);
+                            });
+                        if spawned.is_err() {
+                            pending.fetch_sub(1, Ordering::SeqCst);
+                        }
                     }
                 })
         };
@@ -226,15 +268,22 @@ impl Server {
         self.state.sessions.active_count()
     }
 
+    pub fn detached_sessions(&self) -> usize {
+        self.state.sessions.detached_count()
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.state.queue.depth()
     }
 
-    /// Metrics snapshot (also embeds the plan-cache hit/miss counters).
+    /// Metrics snapshot (also embeds the plan-cache counters and the
+    /// per-session attachment/health rows).
     pub fn metrics_json(&self) -> Json {
         let mut j = snapshot_json(&self.state);
         if let Json::Obj(map) = &mut j {
             map.insert("active_sessions".into(), Json::from(self.active_sessions()));
+            map.insert("detached_sessions".into(), Json::from(self.detached_sessions()));
+            map.insert("sessions".into(), self.state.sessions.to_json());
         }
         j
     }
@@ -280,7 +329,9 @@ fn snapshot_json(state: &ServerState) -> Json {
     if let Json::Obj(map) = &mut j {
         map.insert("plan_cache_hits".into(), Json::from(state.plans.hits()));
         map.insert("plan_cache_misses".into(), Json::from(state.plans.misses()));
+        map.insert("plans_warmed".into(), Json::from(state.plans.warmed()));
         map.insert("plans_compiled".into(), Json::from(state.plans.len()));
+        map.insert("sessions_evicted".into(), Json::from(state.sessions.evicted_for_capacity()));
     }
     j
 }
@@ -291,10 +342,11 @@ fn snapshot_json(state: &ServerState) -> Json {
 /// number of concurrent pre-admission connections.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// One session: handshake, admission, then a read loop feeding the batch
-/// queue while a writer thread streams responses back.  `pending` is the
-/// acceptor's pre-admission connection count; it is released as soon as
-/// the handshake phase resolves either way.
+/// One session attachment: handshake (fresh or RECONNECT), admission,
+/// then a read loop feeding the batch queue while a writer thread
+/// streams responses back.  `pending` is the acceptor's pre-admission
+/// connection count; it is released as soon as the handshake phase
+/// resolves either way.
 fn handle_session(
     mut stream: TcpStream,
     state: &Arc<ServerState>,
@@ -310,43 +362,118 @@ fn handle_session(
     // client that died without FIN must not hold its slot indefinitely.
     let idle = state.idle_timeout;
     stream.set_read_timeout(if idle.is_zero() { None } else { Some(idle) })?;
-    let key = PlanKey::new(&hs.model, hs.pp);
 
-    // Plan lookup/compile first: a bad model or pp is a reject, not a
-    // session slot.
-    let plan = match state.plans.get_or_try_insert(&key, || model::compile_server_plan(&key)) {
-        Ok(p) => p,
-        Err(e) => {
-            state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
-            let reply =
-                HandshakeReply { accepted: false, session_id: 0, message: format!("{e:#}") };
-            return protocol::write_handshake_reply(&mut stream, &reply);
+    let reject = |stream: &mut TcpStream, message: String| {
+        let reply = HandshakeReply {
+            accepted: false,
+            resumed: false,
+            session_id: 0,
+            token: 0,
+            message,
+        };
+        protocol::write_handshake_reply(stream, &reply)
+    };
+
+    // Both arms end with a registered-but-not-yet-attached session.
+    let resumed = hs.resume.is_some();
+    let (handle, mut plan, last_ack) = if let Some(r) = hs.resume {
+        let handle = match state.sessions.try_resume(
+            r.session_id,
+            &hs.client_id,
+            r.token,
+            stream.try_clone()?,
+        ) {
+            Ok(h) => h,
+            Err(why) => {
+                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+                return reject(&mut stream, why);
+            }
+        };
+        // The session's current plan is warm by invariant (compiled when
+        // first selected); a cache miss here would just recompile it.
+        let key = handle.plan.clone();
+        let plan = match state.plans.get_or_try_insert(&key, || model::compile_server_plan(&key)) {
+            Ok(p) => p,
+            Err(e) => {
+                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+                state.sessions.detach_now(handle.id, handle.attach_epoch);
+                return reject(&mut stream, format!("{e:#}"));
+            }
+        };
+        (handle, plan, r.last_ack)
+    } else {
+        let key = PlanKey::new(&hs.model, hs.pp);
+        // Plan lookup/compile first: a bad model or pp is a reject, not a
+        // session slot.
+        let plan = match state.plans.get_or_try_insert(&key, || model::compile_server_plan(&key)) {
+            Ok(p) => p,
+            Err(e) => {
+                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+                return reject(&mut stream, format!("{e:#}"));
+            }
+        };
+        // Plan hot-swap invariant: the local-only fallback is compiled
+        // alongside the collaborative plan, never on the failure path.
+        if let Some(fb) = model::fallback_key(&key) {
+            let _ = state.plans.warm(&fb, || model::compile_server_plan(&fb));
+        }
+        let handle = match state.sessions.try_open(
+            &hs.client_id,
+            key,
+            stream.try_clone()?,
+            state.replay_ring,
+            state.idle_timeout,
+        ) {
+            Ok(h) => h,
+            Err(why) => {
+                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+                return reject(&mut stream, why);
+            }
+        };
+        (handle, plan, 0u64)
+    };
+    let session_id = handle.id;
+    let attach_epoch = handle.attach_epoch;
+    let outbox = handle.outbox;
+    let health = handle.health;
+
+    // From here on, any failure must release what the handshake claimed:
+    // a fresh session closes (its resume token was never delivered, so
+    // no takeover can race it), a resumed one goes back to detached —
+    // epoch-guarded, so a displaced handler cannot mark its successor's
+    // live session eviction-eligible.
+    let release = |state: &Arc<ServerState>| {
+        if resumed {
+            state.sessions.detach_now(session_id, attach_epoch);
+        } else {
+            state.sessions.close(session_id);
         }
     };
 
-    let session_id =
-        match state.sessions.try_open(&hs.client_id, key.clone(), stream.try_clone()?) {
-            Ok(id) => id,
-            Err(why) => {
-                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
-                let reply = HandshakeReply { accepted: false, session_id: 0, message: why };
-                return protocol::write_handshake_reply(&mut stream, &reply);
-            }
-        };
-    state.metrics.sessions_admitted.fetch_add(1, Ordering::Relaxed);
-    let reply = HandshakeReply { accepted: true, session_id, message: String::new() };
+    if resumed {
+        state.metrics.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+    } else {
+        state.metrics.sessions_admitted.fetch_add(1, Ordering::Relaxed);
+    }
+    let reply = HandshakeReply {
+        accepted: true,
+        resumed,
+        session_id,
+        token: handle.token,
+        message: String::new(),
+    };
     if let Err(e) = protocol::write_handshake_reply(&mut stream, &reply) {
-        state.sessions.close(session_id);
+        release(state);
         return Err(e);
     }
 
-    // Writer thread: the only writer on this socket after the handshake.
-    // Any failure from here on must release the admitted session slot.
+    // Writer thread: the only writer on this socket after the handshake
+    // reply above.
     let (reply_tx, reply_rx) = mpsc::channel::<Response>();
     let mut write_stream = match stream.try_clone() {
         Ok(s) => s,
         Err(e) => {
-            state.sessions.close(session_id);
+            release(state);
             return Err(e.into());
         }
     };
@@ -361,40 +488,137 @@ fn handle_session(
         }) {
         Ok(w) => w,
         Err(e) => {
-            state.sessions.close(session_id);
+            release(state);
             return Err(e.into());
         }
     };
 
-    let plan_metrics = state.metrics.plan(&key);
+    // Replay-then-attach: unacknowledged responses go out first, in
+    // order, before any new completion can interleave.  The attach is
+    // epoch-ticketed: if another RECONNECT took the session over since
+    // our handshake, we lost the race and must bow out without touching
+    // the successor's attachment (our socket is already shut down).
+    let (epoch, replayed) = match outbox.attach(reply_tx.clone(), last_ack, attach_epoch) {
+        Some(x) => x,
+        None => {
+            drop(reply_tx);
+            let _ = writer.join();
+            return Ok(());
+        }
+    };
+    if replayed > 0 {
+        state.metrics.responses_replayed.fetch_add(replayed as u64, Ordering::Relaxed);
+    }
+    state.sessions.note_attached(session_id);
+
+    let mut plan_metrics = state.metrics.plan(&plan.key);
+    // Whether teardown frees the slot now (BYE, idle silence, protocol
+    // violation) or detaches for a possible RECONNECT (link loss).
+    let mut close_session = false;
     loop {
-        match protocol::read_request(&mut stream) {
-            Ok(Some((req_id, payload))) => {
-                let req = PendingRequest {
-                    session: session_id,
-                    req_id,
-                    plan: plan.clone(),
-                    plan_metrics: plan_metrics.clone(),
-                    payload,
-                    enqueued: Instant::now(),
-                    reply: reply_tx.clone(),
-                };
-                match state.queue.push(req) {
-                    Ok(depth) => state.metrics.note_queue_depth(depth as u64),
-                    Err((back, why)) => {
-                        // Admission reject: explicit response, never a drop.
-                        state.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
-                        let _ = reply_tx.send(Response::rejected(back.req_id, why));
+        match protocol::read_frame(&mut stream) {
+            Ok(Some(frame)) => {
+                health.note_heard(frame.payload.len() + 13);
+                match frame.kind {
+                    ReqKind::Bye => {
+                        close_session = true;
+                        break;
                     }
+                    ReqKind::Ping => {
+                        state.metrics.pings.fetch_add(1, Ordering::Relaxed);
+                        outbox.send_ephemeral(Response::ok(frame.seq, b"pong".to_vec()));
+                    }
+                    ReqKind::Switch => {
+                        // Plan hot-swap at a token boundary: this reader
+                        // processes frames serially, so swapping between
+                        // frames is atomic by construction.
+                        let swapped = protocol::parse_switch_payload(&frame.payload)
+                            .and_then(|pp| {
+                                let key = PlanKey::new(&plan.key.model, pp);
+                                state
+                                    .plans
+                                    .get_or_try_insert(&key, || model::compile_server_plan(&key))
+                            });
+                        match swapped {
+                            Ok(new_plan) => {
+                                plan = new_plan;
+                                plan_metrics = state.metrics.plan(&plan.key);
+                                state.sessions.update_plan(session_id, plan.key.clone());
+                                state.metrics.plan_switches.fetch_add(1, Ordering::Relaxed);
+                                outbox.send_ephemeral(Response::ok(
+                                    frame.seq,
+                                    plan.key.to_string().into_bytes(),
+                                ));
+                            }
+                            Err(e) => outbox
+                                .send_ephemeral(Response::error(frame.seq, &format!("{e:#}"))),
+                        }
+                    }
+                    ReqKind::Infer => match outbox.admit(frame.seq) {
+                        Admit::Replayed => {
+                            state.metrics.responses_replayed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Admit::InFlight => {
+                            state.metrics.duplicate_requests.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Admit::Fresh => {
+                            let req = PendingRequest {
+                                session: session_id,
+                                req_id: frame.seq,
+                                plan: plan.clone(),
+                                plan_metrics: plan_metrics.clone(),
+                                payload: frame.payload,
+                                enqueued: Instant::now(),
+                                reply: outbox.clone(),
+                            };
+                            match state.queue.push(req) {
+                                Ok(depth) => state.metrics.note_queue_depth(depth as u64),
+                                Err((back, why)) => {
+                                    // Admission reject: explicit response,
+                                    // never a drop (and the seq is freed
+                                    // for a later re-send).
+                                    state
+                                        .metrics
+                                        .requests_rejected
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    back.reply.deliver(Response::rejected(back.req_id, why));
+                                }
+                            }
+                        }
+                    },
                 }
             }
-            Ok(None) | Err(_) => break,
+            // Abrupt link loss: stop reading, keep the session
+            // resumable via RECONNECT.
+            Ok(None) | Err(protocol::FrameError::Link(_)) => break,
+            // A silently-dead (idle-timeout) or protocol-violating
+            // client must not hold a lingering slot: close outright,
+            // matching the pre-v2 idle-reclaim semantics.
+            Err(protocol::FrameError::Idle(_) | protocol::FrameError::Malformed(_)) => {
+                close_session = true;
+                break;
+            }
         }
     }
 
-    // Teardown: free the session slot; the writer drains outstanding
-    // responses (workers hold sender clones) and then exits.
-    state.sessions.close(session_id);
+    // Teardown: BYE / idle / malformed (or server shutdown) frees the
+    // slot; an abrupt loss detaches, keeping replay state for a
+    // RECONNECT within the linger window.  Both close and detach are
+    // epoch-guarded so a reader that lost a resume takeover cannot
+    // close or detach its successor's live session.
+    if state.shutting_down.load(Ordering::SeqCst) {
+        state.sessions.close(session_id);
+    } else if close_session {
+        state.sessions.close_if_current(session_id, epoch);
+    } else if state.sessions.detach(session_id, epoch) {
+        // Abrupt loss is a link-failure signal: the exported per-session
+        // health row reads degraded (escalating to down on a flapping
+        // link) until a RECONNECT recovers it.
+        health.note_failure();
+        state.metrics.sessions_detached.fetch_add(1, Ordering::Relaxed);
+    }
+    // The writer drains outstanding responses and exits once the outbox
+    // attachment above is gone and this last sender drops.
     drop(reply_tx);
     let _ = writer.join();
     Ok(())
@@ -404,6 +628,7 @@ fn handle_session(
 mod tests {
     use super::*;
     use loadgen::{run_loadgen, LoadgenConfig};
+    use protocol::Handshake;
 
     fn quiet_cfg() -> ServerConfig {
         ServerConfig {
@@ -439,7 +664,7 @@ mod tests {
         let mut first = TcpStream::connect(server.addr()).unwrap();
         protocol::write_handshake(
             &mut first,
-            &protocol::Handshake { model: "synthetic".into(), pp: 1, client_id: "a".into() },
+            &Handshake { model: "synthetic".into(), pp: 1, client_id: "a".into(), resume: None },
         )
         .unwrap();
         let reply = protocol::read_handshake_reply(&mut first).unwrap();
@@ -448,7 +673,7 @@ mod tests {
         let mut second = TcpStream::connect(server.addr()).unwrap();
         protocol::write_handshake(
             &mut second,
-            &protocol::Handshake { model: "synthetic".into(), pp: 1, client_id: "b".into() },
+            &Handshake { model: "synthetic".into(), pp: 1, client_id: "b".into(), resume: None },
         )
         .unwrap();
         let reply = protocol::read_handshake_reply(&mut second).unwrap();
@@ -466,12 +691,33 @@ mod tests {
         let mut c = TcpStream::connect(server.addr()).unwrap();
         protocol::write_handshake(
             &mut c,
-            &protocol::Handshake { model: "vehicle".into(), pp: 3, client_id: "x".into() },
+            &Handshake { model: "vehicle".into(), pp: 3, client_id: "x".into(), resume: None },
         )
         .unwrap();
         let reply = protocol::read_handshake_reply(&mut c).unwrap();
         assert!(!reply.accepted);
         assert!(reply.message.contains("unknown model"), "{}", reply.message);
+        drop(c);
+        server.shutdown();
+    }
+
+    #[test]
+    fn resume_of_unknown_session_is_rejected_with_cause() {
+        let server = Server::start(quiet_cfg()).unwrap();
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        protocol::write_handshake(
+            &mut c,
+            &Handshake {
+                model: "synthetic".into(),
+                pp: 2,
+                client_id: "ghost".into(),
+                resume: Some(protocol::Resume { session_id: 424242, token: 0, last_ack: 0 }),
+            },
+        )
+        .unwrap();
+        let reply = protocol::read_handshake_reply(&mut c).unwrap();
+        assert!(!reply.accepted);
+        assert!(reply.message.contains("unknown session"), "{}", reply.message);
         drop(c);
         server.shutdown();
     }
@@ -491,7 +737,9 @@ mod tests {
             assert_eq!(report.ok, 8);
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.get("plans_compiled").unwrap().int().unwrap(), 1);
+        // pp2 compiled on demand + the pp5 fallback warmed alongside it.
+        assert_eq!(metrics.get("plans_compiled").unwrap().int().unwrap(), 2);
+        assert_eq!(metrics.get("plans_warmed").unwrap().int().unwrap(), 1);
         // Waves 2 and 3 run against a warm cache, so at least their 4
         // sessions must be hits (wave 1's two may race to a double miss).
         assert!(metrics.get("plan_cache_hits").unwrap().int().unwrap() >= 4);

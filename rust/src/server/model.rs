@@ -97,6 +97,26 @@ pub fn expected_digest(input: &[f32]) -> Vec<u8> {
     tensor::f32_to_bytes(&digest(&x))
 }
 
+/// Execute the **local-only fallback plan** client-side: all compute
+/// stages plus the sink digest with no server involvement.  This is what
+/// a `failover::FailoverClient` runs when the link is down.  By
+/// construction it produces the same bytes as `expected_digest` — the
+/// fallback changes *where* compute runs, never the result, which is the
+/// plan hot-swap invariant the chaos tests verify.
+pub fn local_infer(input: &[f32]) -> Vec<u8> {
+    expected_digest(input)
+}
+
+/// Plan-cache key of the fallback for `key`: the full-client partition
+/// (pp = `MAX_PP`, everything but the sink on the client).  Every
+/// deployment precompiles this alongside its collaborative plan so a
+/// degraded session can hot-swap — and a recovering local-only client
+/// can re-join — without a compile on the failure path.  `None` when
+/// `key` already is the fallback.
+pub fn fallback_key(key: &PlanKey) -> Option<PlanKey> {
+    (key.model == MODEL_NAME && key.pp < MAX_PP).then(|| PlanKey::new(&key.model, MAX_PP))
+}
+
 /// A compiled serving plan: the deployment cut at `key.pp` plus the
 /// server-side stage range derived from the compiled device plan.
 #[derive(Debug, Clone)]
@@ -207,6 +227,20 @@ mod tests {
         let plan = compile_server_plan(&PlanKey::new(MODEL_NAME, MAX_PP)).unwrap();
         assert!(plan.server_stages.is_empty());
         assert!(plan.deployment.per_device["server"].graph.actor_by_name("sink").is_some());
+    }
+
+    #[test]
+    fn fallback_key_is_full_client_and_terminal() {
+        let fb = fallback_key(&PlanKey::new(MODEL_NAME, 2)).unwrap();
+        assert_eq!(fb, PlanKey::new(MODEL_NAME, MAX_PP));
+        assert!(fallback_key(&fb).is_none(), "the fallback has no further fallback");
+        assert!(fallback_key(&PlanKey::new("vehicle", 2)).is_none());
+    }
+
+    #[test]
+    fn local_infer_matches_any_partition() {
+        let input = make_input(21);
+        assert_eq!(local_infer(&input), expected_digest(&input));
     }
 
     #[test]

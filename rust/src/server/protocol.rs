@@ -1,49 +1,133 @@
-//! Wire protocol of the multi-tenant edge inference server.
+//! Wire protocol (v2) of the multi-tenant edge inference server.
 //!
-//! One TCP connection per client session.  All integers little-endian,
-//! mirroring the TX/RX FIFO frame format of `runtime::net`.
+//! One TCP connection per client *attachment*; a logical **session**
+//! survives attachments: protocol v2 adds sequence-numbered frames, a
+//! RECONNECT handshake, and server-side response replay so a dropped
+//! link or an edge restart loses zero inferences (the fault-tolerance
+//! direction of the Edge-PRUNE follow-up paper).  All integers
+//! little-endian, mirroring the TX/RX FIFO frame format of
+//! `runtime::net`.
 //!
 //! ```text
 //! handshake  (client -> server):
-//!   [u32 magic "EPRN"][u16 version][u16 pp]
+//!   [u32 magic "EPRN"][u16 version = 2][u16 pp][u8 flags]
+//!   [u64 resume_session][u64 resume_token][u64 last_ack]
 //!   [u16 model_len][model bytes][u16 client_id_len][client_id bytes]
+//!   flags bit 0: RECONNECT — resume_session names a detached session
+//!   and resume_token must equal the token the accept reply issued
+//!   (session ids are sequential; the token is what makes a session
+//!   non-guessable by other tenants); last_ack is the highest sequence
+//!   whose response the client has already received (0 = none; sequence
+//!   numbers start at 1).
 //! handshake reply (server -> client):
-//!   [u8 status (0 = accepted, 1 = rejected)][u64 session_id]
-//!   [u16 msg_len][msg bytes]
-//! request    (client -> server):
-//!   [u64 req_id][u32 len][payload]
+//!   [u8 status (0 = accepted, 1 = rejected, 2 = resumed)][u64 session_id]
+//!   [u64 resume_token][u16 msg_len][msg bytes]
+//! frame      (client -> server):
+//!   [u64 seq][u8 kind][u32 len][payload]
+//!   kind: 0 = infer, 1 = switch (payload [u16 new_pp]), 2 = ping,
+//!         3 = bye (clean close; frees the session slot immediately)
 //! response   (server -> client):
-//!   [u64 req_id][u8 status (0 = ok, 1 = rejected, 2 = error)]
+//!   [u64 seq][u8 status (0 = ok, 1 = rejected, 2 = error)]
 //!   [u32 len][body]
 //! ```
 //!
 //! A `rejected` response is the admission controller speaking (queue
 //! full); an `error` response carries an execution failure message.  Both
 //! surface client-side as explicit outcomes, never as silent drops.
+//! After a RECONNECT the server first replays every retained response
+//! with sequence > `last_ack`, in order; the client must therefore treat
+//! responses as at-least-once and dedupe by sequence number (execution
+//! itself stays exactly-once server-side — see `session::SessionOutbox`).
 
 use anyhow::{bail, Context, Result};
+use std::fmt;
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
 pub const MAGIC: u32 = 0x4550_524e; // "EPRN"
-pub const VERSION: u16 = 1;
+pub const VERSION: u16 = 2;
 /// Sanity bound on any variable-length field (requests are model tokens,
 /// not bulk uploads).
 pub const MAX_PAYLOAD: u32 = 64 << 20;
 const MAX_NAME: u16 = 1024;
+/// Handshake flag bit 0: this is a RECONNECT to a detached session.
+const FLAG_RESUME: u8 = 1;
+
+/// RECONNECT parameters: which session to re-attach (authenticated by
+/// the token its accept reply issued), and the highest sequence number
+/// whose response the client already holds (the server replays
+/// everything retained above it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resume {
+    pub session_id: u64,
+    pub token: u64,
+    pub last_ack: u64,
+}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Handshake {
     pub model: String,
     pub pp: usize,
     pub client_id: String,
+    /// `Some` = RECONNECT to an existing session; `model`/`pp` are then
+    /// informational only (the session keeps its current plan).
+    pub resume: Option<Resume>,
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HandshakeReply {
     pub accepted: bool,
+    /// Accepted as a RECONNECT: the session's plan and replay state
+    /// survived; retained responses follow immediately.
+    pub resumed: bool,
     pub session_id: u64,
+    /// Per-session resume credential: a RECONNECT must present it
+    /// (0 on rejects).  Session ids alone are sequential and guessable.
+    pub token: u64,
     pub message: String,
+}
+
+/// Client frame kinds (the `kind` byte of a v2 frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqKind {
+    /// One inference request; payload is the intermediate token.
+    Infer,
+    /// Plan hot-swap at a token boundary; payload is `[u16 new_pp]`.
+    Switch,
+    /// Heartbeat; the server answers `ok` with body `pong`.
+    Ping,
+    /// Clean close: the session slot is freed immediately (no
+    /// detach/linger — an abrupt disconnect is what lingers).
+    Bye,
+}
+
+impl ReqKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            ReqKind::Infer => 0,
+            ReqKind::Switch => 1,
+            ReqKind::Ping => 2,
+            ReqKind::Bye => 3,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        match b {
+            0 => Ok(ReqKind::Infer),
+            1 => Ok(ReqKind::Switch),
+            2 => Ok(ReqKind::Ping),
+            3 => Ok(ReqKind::Bye),
+            v => bail!("bad frame kind byte {v}"),
+        }
+    }
+}
+
+/// One decoded client frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub seq: u64,
+    pub kind: ReqKind,
+    pub payload: Vec<u8>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -116,30 +200,52 @@ fn read_str(stream: &mut TcpStream) -> Result<String> {
 }
 
 pub fn write_handshake(stream: &mut TcpStream, h: &Handshake) -> Result<()> {
-    let mut buf = Vec::with_capacity(16 + h.model.len() + h.client_id.len());
+    let mut buf = Vec::with_capacity(40 + h.model.len() + h.client_id.len());
     buf.extend_from_slice(&MAGIC.to_le_bytes());
     buf.extend_from_slice(&VERSION.to_le_bytes());
     buf.extend_from_slice(&(h.pp as u16).to_le_bytes());
+    let (flags, session, token, ack) = match &h.resume {
+        Some(r) => (FLAG_RESUME, r.session_id, r.token, r.last_ack),
+        None => (0u8, 0u64, 0u64, 0u64),
+    };
+    buf.push(flags);
+    buf.extend_from_slice(&session.to_le_bytes());
+    buf.extend_from_slice(&token.to_le_bytes());
+    buf.extend_from_slice(&ack.to_le_bytes());
     write_str(&mut buf, &h.model)?;
     write_str(&mut buf, &h.client_id)?;
     stream.write_all(&buf).context("writing handshake")
 }
 
 pub fn read_handshake(stream: &mut TcpStream) -> Result<Handshake> {
-    let mut fixed = [0u8; 8];
-    stream.read_exact(&mut fixed).context("handshake header")?;
-    let magic = u32::from_le_bytes(fixed[..4].try_into().unwrap());
+    // Validate magic + version from the (version-independent) first 8
+    // bytes BEFORE reading the v2-only resume fields: a v1 client sends
+    // a shorter handshake, and blocking for bytes it will never send
+    // would time out instead of delivering the version-mismatch reject.
+    let mut head = [0u8; 8];
+    stream.read_exact(&mut head).context("handshake header")?;
+    let magic = u32::from_le_bytes(head[..4].try_into().unwrap());
     if magic != MAGIC {
         bail!("bad handshake magic {magic:#010x} (not an edge-prune client?)");
     }
-    let version = u16::from_le_bytes(fixed[4..6].try_into().unwrap());
+    let version = u16::from_le_bytes(head[4..6].try_into().unwrap());
     if version != VERSION {
         bail!("protocol version {version} unsupported (server speaks {VERSION})");
     }
-    let pp = u16::from_le_bytes(fixed[6..8].try_into().unwrap()) as usize;
+    let pp = u16::from_le_bytes(head[6..8].try_into().unwrap()) as usize;
+    let mut rest = [0u8; 25];
+    stream.read_exact(&mut rest).context("handshake resume fields")?;
+    let flags = rest[0];
+    if flags & !FLAG_RESUME != 0 {
+        bail!("unknown handshake flags {flags:#04x}");
+    }
+    let session_id = u64::from_le_bytes(rest[1..9].try_into().unwrap());
+    let token = u64::from_le_bytes(rest[9..17].try_into().unwrap());
+    let last_ack = u64::from_le_bytes(rest[17..25].try_into().unwrap());
+    let resume = (flags & FLAG_RESUME != 0).then_some(Resume { session_id, token, last_ack });
     let model = read_str(stream)?;
     let client_id = read_str(stream)?;
-    Ok(Handshake { model, pp, client_id })
+    Ok(Handshake { model, pp, client_id, resume })
 }
 
 /// Clip a message to the protocol's string bound on a char boundary, so
@@ -158,55 +264,121 @@ fn clip(s: &str) -> &str {
 
 pub fn write_handshake_reply(stream: &mut TcpStream, r: &HandshakeReply) -> Result<()> {
     let message = clip(&r.message);
-    let mut buf = Vec::with_capacity(11 + message.len());
-    buf.push(if r.accepted { 0 } else { 1 });
+    let mut buf = Vec::with_capacity(19 + message.len());
+    buf.push(if !r.accepted {
+        1
+    } else if r.resumed {
+        2
+    } else {
+        0
+    });
     buf.extend_from_slice(&r.session_id.to_le_bytes());
+    buf.extend_from_slice(&r.token.to_le_bytes());
     write_str(&mut buf, message)?;
     stream.write_all(&buf).context("writing handshake reply")
 }
 
 pub fn read_handshake_reply(stream: &mut TcpStream) -> Result<HandshakeReply> {
-    let mut fixed = [0u8; 9];
+    let mut fixed = [0u8; 17];
     stream.read_exact(&mut fixed).context("handshake reply")?;
-    let accepted = match fixed[0] {
-        0 => true,
-        1 => false,
+    let (accepted, resumed) = match fixed[0] {
+        0 => (true, false),
+        1 => (false, false),
+        2 => (true, true),
         v => bail!("bad handshake status byte {v}"),
     };
     let session_id = u64::from_le_bytes(fixed[1..9].try_into().unwrap());
+    let token = u64::from_le_bytes(fixed[9..17].try_into().unwrap());
     let message = read_str(stream)?;
-    Ok(HandshakeReply { accepted, session_id, message })
+    Ok(HandshakeReply { accepted, resumed, session_id, token, message })
 }
 
-pub fn write_request(stream: &mut TcpStream, req_id: u64, payload: &[u8]) -> Result<()> {
+/// Write one v2 frame.
+pub fn write_frame(stream: &mut TcpStream, seq: u64, kind: ReqKind, payload: &[u8]) -> Result<()> {
     if payload.len() as u64 > MAX_PAYLOAD as u64 {
-        bail!("request payload {} exceeds {MAX_PAYLOAD}", payload.len());
+        bail!("frame payload {} exceeds {MAX_PAYLOAD}", payload.len());
     }
-    let mut header = [0u8; 12];
-    header[..8].copy_from_slice(&req_id.to_le_bytes());
-    header[8..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let mut header = [0u8; 13];
+    header[..8].copy_from_slice(&seq.to_le_bytes());
+    header[8] = kind.to_u8();
+    header[9..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
     stream.write_all(&header)?;
     stream.write_all(payload)?;
     Ok(())
 }
 
-/// Read one request; `Ok(None)` on clean EOF at a frame boundary (client
-/// closed its session).
-pub fn read_request(stream: &mut TcpStream) -> Result<Option<(u64, Vec<u8>)>> {
-    let mut header = [0u8; 12];
+/// Why a frame read failed.  The session layer treats these
+/// differently: a lost link **detaches** the session (resumable via
+/// RECONNECT), while silence past the idle bound or a protocol
+/// violation **closes** it outright — neither a silently-dead nor a
+/// misbehaving client earns a lingering slot.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Socket-level failure (reset, broken pipe, mid-frame EOF).
+    Link(std::io::Error),
+    /// Read timeout: the peer has been silent past the idle bound.
+    Idle(std::io::Error),
+    /// The peer sent bytes that violate the protocol.
+    Malformed(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Link(e) => write!(f, "link error: {e}"),
+            FrameError::Idle(e) => write!(f, "idle timeout: {e}"),
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// SO_RCVTIMEO surfaces as WouldBlock (most Unixes) or TimedOut.
+fn classify_io(e: std::io::Error) -> FrameError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => FrameError::Idle(e),
+        _ => FrameError::Link(e),
+    }
+}
+
+/// Read one frame; `Ok(None)` on EOF at a frame boundary (the client
+/// closed or the link died — the session layer decides which).
+pub fn read_frame(stream: &mut TcpStream) -> Result<Option<Frame>, FrameError> {
+    let mut header = [0u8; 13];
     match stream.read_exact(&mut header) {
         Ok(()) => {}
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e.into()),
+        Err(e) => return Err(classify_io(e)),
     }
-    let req_id = u64::from_le_bytes(header[..8].try_into().unwrap());
-    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    let seq = u64::from_le_bytes(header[..8].try_into().unwrap());
+    let kind =
+        ReqKind::from_u8(header[8]).map_err(|e| FrameError::Malformed(format!("{e:#}")))?;
+    let len = u32::from_le_bytes(header[9..13].try_into().unwrap());
     if len > MAX_PAYLOAD {
-        bail!("request payload {len} exceeds {MAX_PAYLOAD}");
+        return Err(FrameError::Malformed(format!("frame payload {len} exceeds {MAX_PAYLOAD}")));
     }
     let mut payload = vec![0u8; len as usize];
-    stream.read_exact(&mut payload).context("request body")?;
-    Ok(Some((req_id, payload)))
+    stream.read_exact(&mut payload).map_err(classify_io)?;
+    Ok(Some(Frame { seq, kind, payload }))
+}
+
+/// Convenience wrapper: one inference request frame.
+pub fn write_request(stream: &mut TcpStream, req_id: u64, payload: &[u8]) -> Result<()> {
+    write_frame(stream, req_id, ReqKind::Infer, payload)
+}
+
+/// Payload of a `Switch` frame selecting partition point `pp`.
+pub fn switch_payload(pp: usize) -> Vec<u8> {
+    (pp as u16).to_le_bytes().to_vec()
+}
+
+/// Decode a `Switch` frame's payload.
+pub fn parse_switch_payload(payload: &[u8]) -> Result<usize> {
+    if payload.len() != 2 {
+        bail!("switch payload must be 2 bytes, got {}", payload.len());
+    }
+    Ok(u16::from_le_bytes(payload.try_into().unwrap()) as usize)
 }
 
 pub fn write_response(stream: &mut TcpStream, r: &Response) -> Result<()> {
@@ -257,12 +429,47 @@ mod tests {
     #[test]
     fn handshake_round_trip() {
         let (mut c, mut s) = pair();
-        let h = Handshake { model: "synthetic".into(), pp: 3, client_id: "cam-7".into() };
+        let h = Handshake {
+            model: "synthetic".into(),
+            pp: 3,
+            client_id: "cam-7".into(),
+            resume: None,
+        };
         write_handshake(&mut c, &h).unwrap();
         assert_eq!(read_handshake(&mut s).unwrap(), h);
-        let reply = HandshakeReply { accepted: true, session_id: 42, message: "ok".into() };
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed: false,
+            session_id: 42,
+            token: 0xfeed_beef,
+            message: "ok".into(),
+        };
         write_handshake_reply(&mut s, &reply).unwrap();
         assert_eq!(read_handshake_reply(&mut c).unwrap(), reply);
+    }
+
+    #[test]
+    fn reconnect_handshake_round_trips() {
+        let (mut c, mut s) = pair();
+        let h = Handshake {
+            model: "synthetic".into(),
+            pp: 2,
+            client_id: "cam-7".into(),
+            resume: Some(Resume { session_id: 99, token: 7777, last_ack: 17 }),
+        };
+        write_handshake(&mut c, &h).unwrap();
+        assert_eq!(read_handshake(&mut s).unwrap(), h);
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed: true,
+            session_id: 99,
+            token: 7777,
+            message: String::new(),
+        };
+        write_handshake_reply(&mut s, &reply).unwrap();
+        let got = read_handshake_reply(&mut c).unwrap();
+        assert!(got.accepted && got.resumed);
+        assert_eq!(got.session_id, 99);
     }
 
     #[test]
@@ -270,12 +477,14 @@ mod tests {
         let (mut c, mut s) = pair();
         let reply = HandshakeReply {
             accepted: false,
+            resumed: false,
             session_id: 0,
+            token: 0,
             message: "server at session capacity (8 active)".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
         let got = read_handshake_reply(&mut c).unwrap();
-        assert!(!got.accepted);
+        assert!(!got.accepted && !got.resumed);
         assert!(got.message.contains("capacity"));
     }
 
@@ -284,7 +493,9 @@ mod tests {
         let (mut c, mut s) = pair();
         let reply = HandshakeReply {
             accepted: false,
+            resumed: false,
             session_id: 0,
+            token: 0,
             message: "x".repeat(5000),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -296,21 +507,38 @@ mod tests {
     #[test]
     fn bad_magic_is_rejected() {
         let (mut c, mut s) = pair();
-        c.write_all(&[0u8; 8]).unwrap();
+        c.write_all(&[0u8; 33]).unwrap();
         assert!(read_handshake(&mut s).unwrap_err().to_string().contains("magic"));
     }
 
     #[test]
-    fn request_response_round_trip_and_eof() {
+    fn frame_kinds_round_trip_and_eof() {
         let (mut c, mut s) = pair();
-        write_request(&mut c, 7, &[1, 2, 3]).unwrap();
-        let (id, payload) = read_request(&mut s).unwrap().unwrap();
-        assert_eq!((id, payload), (7, vec![1, 2, 3]));
+        write_frame(&mut c, 7, ReqKind::Infer, &[1, 2, 3]).unwrap();
+        write_frame(&mut c, 8, ReqKind::Switch, &switch_payload(4)).unwrap();
+        write_frame(&mut c, 9, ReqKind::Ping, &[]).unwrap();
+        write_frame(&mut c, 10, ReqKind::Bye, &[]).unwrap();
+        let f = read_frame(&mut s).unwrap().unwrap();
+        assert_eq!((f.seq, f.kind, f.payload), (7, ReqKind::Infer, vec![1, 2, 3]));
+        let f = read_frame(&mut s).unwrap().unwrap();
+        assert_eq!(f.kind, ReqKind::Switch);
+        assert_eq!(parse_switch_payload(&f.payload).unwrap(), 4);
+        assert_eq!(read_frame(&mut s).unwrap().unwrap().kind, ReqKind::Ping);
+        assert_eq!(read_frame(&mut s).unwrap().unwrap().kind, ReqKind::Bye);
         write_response(&mut s, &Response::ok(7, vec![9])).unwrap();
         let r = read_response(&mut c).unwrap().unwrap();
         assert_eq!((r.req_id, r.status, r.body), (7, RespStatus::Ok, vec![9]));
         drop(c);
-        assert!(read_request(&mut s).unwrap().is_none());
+        assert!(read_frame(&mut s).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_frame_kind_is_rejected() {
+        let (mut c, mut s) = pair();
+        let mut header = [0u8; 13];
+        header[8] = 250;
+        c.write_all(&header).unwrap();
+        assert!(read_frame(&mut s).unwrap_err().to_string().contains("kind"));
     }
 
     #[test]
@@ -328,9 +556,16 @@ mod tests {
     #[test]
     fn oversized_request_rejected_by_reader() {
         let (mut c, mut s) = pair();
-        let mut header = [0u8; 12];
-        header[8..].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let mut header = [0u8; 13];
+        header[9..].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
         c.write_all(&header).unwrap();
-        assert!(read_request(&mut s).is_err());
+        assert!(read_frame(&mut s).is_err());
+    }
+
+    #[test]
+    fn switch_payload_validation() {
+        assert_eq!(parse_switch_payload(&switch_payload(5)).unwrap(), 5);
+        assert!(parse_switch_payload(&[1, 2, 3]).is_err());
+        assert!(parse_switch_payload(&[]).is_err());
     }
 }

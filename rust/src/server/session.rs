@@ -1,35 +1,293 @@
-//! Session manager: the registry of live client sessions.
+//! Session manager + per-session outbox: the registry of live client
+//! sessions and the fault-tolerance state that lets a session outlive
+//! its TCP connection.
 //!
-//! A session is born from a successful handshake (model + partition point
-//! + client id), holds a reference to its cached plan, and dies when the
-//! client disconnects or the server shuts down.  The bounded session
-//! count is the first stage of admission control — a full server refuses
-//! the handshake with an explicit reason instead of queueing connects.
+//! A **session** is born from a successful handshake (model + partition
+//! point + client id) and holds a reference to its cached plan.  In
+//! protocol v2 a session has *attachments*: when the link dies abruptly
+//! the session **detaches** (state retained, slot still held), a
+//! RECONNECT handshake **re-attaches** it, and only a clean `Bye`, a
+//! server shutdown, or the detach-linger reaper actually frees the slot.
+//! The bounded session count is the first stage of admission control — a
+//! full server refuses the handshake with an explicit reason instead of
+//! queueing connects.
+//!
+//! The [`SessionOutbox`] is the replay heart of the fault-tolerance
+//! story: every terminal response (ok/error) is retained in a bounded
+//! ring keyed by sequence number until the client acknowledges it
+//! (acks ride the RECONNECT handshake's `last_ack`).  `admit` dedupes
+//! re-sent sequences so execution stays **exactly-once** even though
+//! delivery is at-least-once: a re-sent in-flight sequence is ignored,
+//! a re-sent completed sequence is answered from the ring without
+//! re-execution.
 
+use super::protocol::{Response, RespStatus};
 use crate::compiler::PlanKey;
-use std::collections::BTreeMap;
+use crate::runtime::health::{HealthConfig, HealthMonitor};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
-#[derive(Debug)]
+/// Outcome of admitting one `Infer` sequence number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// New sequence: the caller must enqueue it and guarantee a terminal
+    /// `deliver` for it (ok, error, or rejected).
+    Fresh,
+    /// Already executing; its terminal response will arrive on its own.
+    InFlight,
+    /// Already executed; the retained response was re-sent from the ring.
+    Replayed,
+}
+
+struct OutboxState {
+    /// Terminal ok/error responses retained for replay, keyed by seq
+    /// (ascending = oldest first; bounded by `ring_capacity`).
+    ring: BTreeMap<u64, Response>,
+    /// Admitted seqs whose terminal response has not yet been produced.
+    in_flight: BTreeSet<u64>,
+    /// Writer channel of the current attachment (None while detached).
+    tx: Option<mpsc::Sender<Response>>,
+    /// Bumped on every attach; guards stale detaches after a takeover.
+    epoch: u64,
+}
+
+/// Per-session response path: workers deliver here, the ring retains
+/// unacknowledged responses for replay, and whatever writer thread is
+/// currently attached forwards them to the socket.
+pub struct SessionOutbox {
+    session_id: u64,
+    ring_capacity: usize,
+    inner: Mutex<OutboxState>,
+}
+
+impl SessionOutbox {
+    pub fn new(session_id: u64, ring_capacity: usize) -> Arc<Self> {
+        Arc::new(SessionOutbox {
+            session_id,
+            ring_capacity: ring_capacity.max(1),
+            inner: Mutex::new(OutboxState {
+                ring: BTreeMap::new(),
+                in_flight: BTreeSet::new(),
+                tx: None,
+                epoch: 0,
+            }),
+        })
+    }
+
+    pub fn session_id(&self) -> u64 {
+        self.session_id
+    }
+
+    /// Dedupe one incoming `Infer` sequence (see [`Admit`]).  A replayed
+    /// sequence is answered immediately from the ring.
+    pub fn admit(&self, seq: u64) -> Admit {
+        let mut s = self.inner.lock().unwrap();
+        if let Some(resp) = s.ring.get(&seq) {
+            let resp = resp.clone();
+            Self::forward(&mut s, resp);
+            return Admit::Replayed;
+        }
+        if s.in_flight.contains(&seq) {
+            return Admit::InFlight;
+        }
+        s.in_flight.insert(seq);
+        Admit::Fresh
+    }
+
+    /// Terminal outcome of an admitted sequence.  Ok/error responses are
+    /// retained for replay; a `rejected` response is forwarded only — a
+    /// re-sent rejected sequence must be re-admitted (and possibly
+    /// succeed this time), not replayed as a reject.
+    pub fn deliver(&self, resp: Response) {
+        let mut s = self.inner.lock().unwrap();
+        s.in_flight.remove(&resp.req_id);
+        if resp.status != RespStatus::Rejected {
+            s.ring.insert(resp.req_id, resp.clone());
+            while s.ring.len() > self.ring_capacity {
+                let oldest = *s.ring.keys().next().unwrap();
+                s.ring.remove(&oldest);
+            }
+        }
+        Self::forward(&mut s, resp);
+    }
+
+    /// Forward without retention or in-flight bookkeeping: pongs, switch
+    /// acks — responses whose loss the client handles by re-sending the
+    /// (idempotent) frame.
+    pub fn send_ephemeral(&self, resp: Response) {
+        let mut s = self.inner.lock().unwrap();
+        Self::forward(&mut s, resp);
+    }
+
+    fn forward(s: &mut OutboxState, resp: Response) {
+        if let Some(tx) = &s.tx {
+            if tx.send(resp).is_err() {
+                s.tx = None; // writer gone; keep ringing for replay
+            }
+        }
+    }
+
+    /// Install a (re)connected writer: drop responses the client has
+    /// acknowledged, replay the retained remainder **in order** before
+    /// any new completion can interleave (the lock serializes against
+    /// `deliver`), then switch forwarding to the new channel.
+    ///
+    /// `expected_epoch` is the attachment ticket the manager issued
+    /// (`SessionHandle::attach_epoch`): if another takeover has bumped
+    /// the epoch since, this attach lost the race and must NOT clobber
+    /// the winner's writer — `None` is returned and the caller bows
+    /// out.  On success returns the new attachment epoch (for the
+    /// matching `detach`) and how many responses were replayed.
+    pub fn attach(
+        &self,
+        tx: mpsc::Sender<Response>,
+        last_ack: u64,
+        expected_epoch: u64,
+    ) -> Option<(u64, usize)> {
+        let mut s = self.inner.lock().unwrap();
+        if s.epoch != expected_epoch {
+            return None;
+        }
+        s.ring.retain(|&seq, _| seq > last_ack);
+        let mut replayed = 0usize;
+        for resp in s.ring.values() {
+            if tx.send(resp.clone()).is_err() {
+                break;
+            }
+            replayed += 1;
+        }
+        s.tx = Some(tx);
+        s.epoch += 1;
+        Some((s.epoch, replayed))
+    }
+
+    /// Does `epoch` name the current attachment?
+    fn epoch_is(&self, epoch: u64) -> bool {
+        self.inner.lock().unwrap().epoch == epoch
+    }
+
+    /// Drop the writer if `epoch` is still the current attachment — a
+    /// reader that lost a takeover race must not detach its successor.
+    /// Returns whether the detach applied.
+    pub fn detach(&self, epoch: u64) -> bool {
+        let mut s = self.inner.lock().unwrap();
+        if s.epoch != epoch {
+            return false;
+        }
+        s.tx = None;
+        true
+    }
+
+    /// Unconditional writer drop (session teardown: nothing will ever
+    /// re-attach, so pending deliveries must not keep a writer alive).
+    fn force_detach(&self) {
+        self.inner.lock().unwrap().tx = None;
+    }
+
+    /// Invalidate the current attachment without installing a writer,
+    /// returning the new epoch (the takeover's attachment ticket).  A
+    /// resume calls this under the session-map lock so the displaced
+    /// reader's epoch-guarded detach/close can no longer apply in the
+    /// window before the new attachment completes — otherwise that
+    /// stale teardown would detach or close the just-resumed session
+    /// (false health failure, capacity-eviction target, or worse).
+    fn invalidate_attachment(&self) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        s.tx = None;
+        s.epoch += 1;
+        s.epoch
+    }
+
+    /// Responses currently retained for replay.
+    pub fn replay_depth(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Attachment {
+    Attached,
+    Detached,
+}
+
 pub struct SessionInfo {
     pub id: u64,
     pub client_id: String,
+    /// Current plan key (updated on a mid-stream hot-swap).
     pub plan: PlanKey,
-    /// Clone of the session socket, kept so `shutdown_all` can unblock
-    /// the reader thread from outside.
+    /// Resume credential issued at admission; a RECONNECT must present
+    /// it (session ids are sequential and guessable, the token is not).
+    token: u64,
+    /// Clone of the live session socket, kept so `shutdown_all` (and a
+    /// resume takeover) can unblock the reader thread from outside.
     stream: TcpStream,
+    outbox: Arc<SessionOutbox>,
+    health: Arc<HealthMonitor>,
+    /// `Some(when)` while detached — the reaper frees the slot once the
+    /// linger expires.
+    detached_since: Option<Instant>,
+}
+
+/// What a successful admission or resume hands the session reader.
+pub struct SessionHandle {
+    pub id: u64,
+    /// Resume credential for the handshake reply.
+    pub token: u64,
+    /// The session's current plan key (the requested one on a fresh
+    /// open; the possibly hot-swapped one on a resume).
+    pub plan: PlanKey,
+    /// Attachment ticket: the outbox epoch this handle is entitled to
+    /// attach at.  A newer takeover invalidates it — `attach`,
+    /// `detach_now`, and `close_if_current` all check it so a handler
+    /// that lost the race cannot disturb its successor.
+    pub attach_epoch: u64,
+    pub outbox: Arc<SessionOutbox>,
+    pub health: Arc<HealthMonitor>,
+}
+
+/// Resume token: splitmix64 over the wall clock and session id.  Not
+/// cryptographic — the goal is that a remote tenant cannot enumerate
+/// `(session_id, token)` pairs the way it could the sequential ids
+/// alone; a production deployment would mint these from a CSPRNG.
+fn fresh_token(id: u64) -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut x = nanos ^ id.rotate_left(32) ^ 0x9e37_79b9_7f4a_7c15;
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+impl SessionInfo {
+    fn attachment(&self) -> Attachment {
+        if self.detached_since.is_some() {
+            Attachment::Detached
+        } else {
+            Attachment::Attached
+        }
+    }
 }
 
 pub struct SessionManager {
     max_sessions: usize,
     next_id: AtomicU64,
     active: Mutex<BTreeMap<u64, SessionInfo>>,
+    /// Detached sessions evicted early because a live client needed the
+    /// slot (see `try_open`).
+    evicted: AtomicU64,
     /// Set (under the `active` lock) once `shutdown_all` runs: any
     /// handshake racing the shutdown is refused instead of registering a
     /// session nobody will ever tear down.
-    closed: std::sync::atomic::AtomicBool,
+    closed: AtomicBool,
 }
 
 impl SessionManager {
@@ -38,41 +296,225 @@ impl SessionManager {
             max_sessions: max_sessions.max(1),
             next_id: AtomicU64::new(1),
             active: Mutex::new(BTreeMap::new()),
-            closed: std::sync::atomic::AtomicBool::new(false),
+            evicted: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
         }
     }
 
-    /// Admit a session, or explain why not (the message goes verbatim
-    /// into the handshake reject reply).
+    /// Admit a new session, or explain why not (the message goes verbatim
+    /// into the handshake reject reply).  Detached sessions keep holding
+    /// their slot — resumability is part of the admission contract — but
+    /// they are second-class at capacity: a live client evicts the
+    /// longest-detached one rather than being refused, so cheap
+    /// connect-and-drop cycles cannot starve admission for a whole
+    /// detach-linger window.  `heartbeat_timeout` parameterizes the
+    /// session's health monitor: silence past it reads as `Down` in the
+    /// exported per-session rows (zero disables; the server passes its
+    /// idle timeout).
     pub fn try_open(
         &self,
         client_id: &str,
         plan: PlanKey,
         stream: TcpStream,
-    ) -> Result<u64, String> {
+        ring_capacity: usize,
+        heartbeat_timeout: Duration,
+    ) -> Result<SessionHandle, String> {
         let mut active = self.active.lock().unwrap();
         if self.closed.load(Ordering::SeqCst) {
             return Err("server shutting down".to_string());
         }
         if active.len() >= self.max_sessions {
-            return Err(format!(
-                "server at session capacity ({} active, limit {})",
-                active.len(),
-                self.max_sessions
-            ));
+            let victim = active
+                .iter()
+                .filter_map(|(&id, info)| info.detached_since.map(|t| (t, id)))
+                .min()
+                .map(|(_, id)| id);
+            match victim {
+                Some(victim_id) => {
+                    if let Some(info) = active.remove(&victim_id) {
+                        info.outbox.force_detach();
+                    }
+                    self.evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                None => {
+                    return Err(format!(
+                        "server at session capacity ({} active, limit {})",
+                        active.len(),
+                        self.max_sessions
+                    ));
+                }
+            }
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        active.insert(id, SessionInfo { id, client_id: client_id.to_string(), plan, stream });
-        Ok(id)
+        let token = fresh_token(id);
+        let outbox = SessionOutbox::new(id, ring_capacity);
+        let health = Arc::new(HealthMonitor::new(HealthConfig {
+            heartbeat_timeout,
+            ..HealthConfig::default()
+        }));
+        active.insert(
+            id,
+            SessionInfo {
+                id,
+                client_id: client_id.to_string(),
+                plan: plan.clone(),
+                token,
+                stream,
+                outbox: outbox.clone(),
+                health: health.clone(),
+                detached_since: None,
+            },
+        );
+        Ok(SessionHandle { id, token, plan, attach_epoch: 0, outbox, health })
     }
 
-    /// Tear a session down (idempotent; unknown ids are ignored).
+    /// RECONNECT: take over a session's transport, authenticated by the
+    /// resume token its accept reply issued.  The stale socket (if any)
+    /// is shut down so its reader unblocks and loses the epoch race; the
+    /// caller must complete the attachment via `SessionOutbox::attach`.
+    pub fn try_resume(
+        &self,
+        session_id: u64,
+        client_id: &str,
+        token: u64,
+        stream: TcpStream,
+    ) -> Result<SessionHandle, String> {
+        let mut active = self.active.lock().unwrap();
+        if self.closed.load(Ordering::SeqCst) {
+            return Err("server shutting down".to_string());
+        }
+        match active.get_mut(&session_id) {
+            None => Err(format!(
+                "unknown session {session_id} (expired, closed, or server restarted)"
+            )),
+            Some(info) => {
+                if info.token != token {
+                    return Err(format!("resume token mismatch for session {session_id}"));
+                }
+                if info.client_id != client_id {
+                    return Err(format!("session {session_id} belongs to another client"));
+                }
+                let _ = info.stream.shutdown(std::net::Shutdown::Both);
+                let attach_epoch = info.outbox.invalidate_attachment();
+                info.stream = stream;
+                info.detached_since = None;
+                info.health.note_recovered();
+                Ok(SessionHandle {
+                    id: info.id,
+                    token: info.token,
+                    plan: info.plan.clone(),
+                    attach_epoch,
+                    outbox: info.outbox.clone(),
+                    health: info.health.clone(),
+                })
+            }
+        }
+    }
+
+    /// Detached sessions evicted at capacity in favor of live clients.
+    pub fn evicted_for_capacity(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Abrupt link loss: keep the session, mark it detached for the
+    /// reaper.  Epoch-guarded — a reader whose attachment was taken over
+    /// by a resume must not detach its successor.  Returns whether the
+    /// detach applied.
+    pub fn detach(&self, id: u64, epoch: u64) -> bool {
+        let mut active = self.active.lock().unwrap();
+        match active.get_mut(&id) {
+            Some(info) if info.outbox.detach(epoch) => {
+                info.detached_since = Some(Instant::now());
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Mark a session detached without touching the outbox — the bail-out
+    /// for resume handshakes that failed between takeover and attach.
+    /// Epoch-guarded like `detach`: if a newer takeover owns the
+    /// session, this is a no-op (a displaced handler must not mark the
+    /// winner's live session eviction-eligible).
+    pub fn detach_now(&self, id: u64, attach_epoch: u64) {
+        if let Some(info) = self.active.lock().unwrap().get_mut(&id) {
+            if info.outbox.epoch_is(attach_epoch) {
+                info.detached_since = Some(Instant::now());
+            }
+        }
+    }
+
+    /// A (re)attachment completed: clear the detach mark.
+    pub fn note_attached(&self, id: u64) {
+        if let Some(info) = self.active.lock().unwrap().get_mut(&id) {
+            info.detached_since = None;
+        }
+    }
+
+    /// Record a mid-stream plan hot-swap.
+    pub fn update_plan(&self, id: u64, plan: PlanKey) {
+        if let Some(info) = self.active.lock().unwrap().get_mut(&id) {
+            info.plan = plan;
+        }
+    }
+
+    /// Tear a session down for good (idempotent; unknown ids are
+    /// ignored).  Force-detaches the outbox so a writer blocked on its
+    /// channel exits even with deliveries still in flight.  Reserved
+    /// for paths that cannot race a takeover (server shutdown); readers
+    /// ending a session use `close_if_current`.
     pub fn close(&self, id: u64) {
-        self.active.lock().unwrap().remove(&id);
+        if let Some(info) = self.active.lock().unwrap().remove(&id) {
+            info.outbox.force_detach();
+        }
+    }
+
+    /// Tear a session down only if `epoch` still names the current
+    /// attachment — the close-side analogue of `detach`'s guard: a
+    /// reader ending its session (BYE, idle silence, protocol
+    /// violation) concurrently with a RECONNECT takeover must not close
+    /// the successor's live session.  `try_resume` bumps the epoch
+    /// under this same lock, so the check and the removal are atomic
+    /// with respect to takeovers.
+    pub fn close_if_current(&self, id: u64, epoch: u64) -> bool {
+        let mut active = self.active.lock().unwrap();
+        match active.get(&id) {
+            Some(info) if info.outbox.epoch_is(epoch) => {
+                if let Some(info) = active.remove(&id) {
+                    info.outbox.force_detach();
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Free sessions that have been detached longer than `linger`.
+    /// Returns how many were reaped.
+    pub fn reap_detached(&self, linger: Duration) -> usize {
+        let mut active = self.active.lock().unwrap();
+        let before = active.len();
+        active.retain(|_, info| match info.detached_since {
+            Some(when) if when.elapsed() > linger => {
+                info.outbox.force_detach();
+                false
+            }
+            _ => true,
+        });
+        before - active.len()
     }
 
     pub fn active_count(&self) -> usize {
         self.active.lock().unwrap().len()
+    }
+
+    pub fn detached_count(&self) -> usize {
+        self.active
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.attachment() == Attachment::Detached)
+            .count()
     }
 
     /// (id, client_id, plan) rows for status output.
@@ -83,6 +525,34 @@ impl SessionManager {
             .values()
             .map(|s| (s.id, s.client_id.clone(), s.plan.clone()))
             .collect()
+    }
+
+    /// Per-session status rows (attachment, replay depth, link health)
+    /// for the server's metrics snapshot.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .active
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| {
+                Json::from_pairs(vec![
+                    ("id", Json::from(s.id)),
+                    ("client_id", Json::from(s.client_id.as_str())),
+                    ("plan", Json::from(s.plan.to_string().as_str())),
+                    (
+                        "attachment",
+                        Json::from(match s.attachment() {
+                            Attachment::Attached => "attached",
+                            Attachment::Detached => "detached",
+                        }),
+                    ),
+                    ("replay_depth", Json::from(s.outbox.replay_depth())),
+                    ("health", s.health.to_json()),
+                ])
+            })
+            .collect();
+        Json::Arr(rows)
     }
 
     /// Shut down every session socket so blocked readers unblock — the
@@ -121,34 +591,61 @@ mod tests {
     #[test]
     fn admits_up_to_limit_then_rejects_with_reason() {
         let m = SessionManager::new(2);
-        let a = m.try_open("c1", key(), stream()).unwrap();
-        let b = m.try_open("c2", key(), stream()).unwrap();
-        assert_ne!(a, b);
+        let a = m.try_open("c1", key(), stream(), 8, Duration::ZERO).unwrap();
+        let b = m.try_open("c2", key(), stream(), 8, Duration::ZERO).unwrap();
+        assert_ne!(a.id, b.id);
+        assert_ne!(a.token, b.token, "every session gets its own resume token");
         assert_eq!(m.active_count(), 2);
-        let err = m.try_open("c3", key(), stream()).unwrap_err();
+        let err = m.try_open("c3", key(), stream(), 8, Duration::ZERO).unwrap_err();
         assert!(err.contains("session capacity"), "{err}");
         // Freeing one slot re-admits.
-        m.close(a);
-        assert!(m.try_open("c3", key(), stream()).is_ok());
+        m.close(a.id);
+        assert!(m.try_open("c3", key(), stream(), 8, Duration::ZERO).is_ok());
+    }
+
+    #[test]
+    fn capacity_evicts_longest_detached_before_refusing() {
+        let m = SessionManager::new(2);
+        let a = m.try_open("a", key(), stream(), 8, Duration::ZERO).unwrap();
+        let b = m.try_open("b", key(), stream(), 8, Duration::ZERO).unwrap();
+        // Detach both; `a` first, so it is the longest-detached victim.
+        let (tx_a, _rx_a) = mpsc::channel();
+        let (epoch_a, _) = a.outbox.attach(tx_a, 0, a.attach_epoch).unwrap();
+        assert!(m.detach(a.id, epoch_a));
+        std::thread::sleep(Duration::from_millis(5));
+        let (tx_b, _rx_b) = mpsc::channel();
+        let (epoch_b, _) = b.outbox.attach(tx_b, 0, b.attach_epoch).unwrap();
+        assert!(m.detach(b.id, epoch_b));
+        // A live client takes the slot instead of bouncing off capacity.
+        let c = m.try_open("c", key(), stream(), 8, Duration::ZERO).unwrap();
+        assert_eq!(m.active_count(), 2);
+        assert_eq!(m.evicted_for_capacity(), 1);
+        // The evicted session (`a`) is gone; the younger one survives.
+        let err = m.try_resume(a.id, "a", a.token, stream()).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+        assert!(m.try_resume(b.id, "b", b.token, stream()).is_ok());
+        drop(c);
     }
 
     #[test]
     fn close_is_idempotent_and_snapshot_reflects_state() {
         let m = SessionManager::new(4);
-        let id = m.try_open("cam", key(), stream()).unwrap();
+        let h = m.try_open("cam", key(), stream(), 8, Duration::ZERO).unwrap();
         assert_eq!(m.snapshot().len(), 1);
         assert_eq!(m.snapshot()[0].1, "cam");
-        m.close(id);
-        m.close(id);
+        m.close(h.id);
+        m.close(h.id);
         assert_eq!(m.active_count(), 0);
     }
 
     #[test]
-    fn shutdown_refuses_new_sessions() {
+    fn shutdown_refuses_new_sessions_and_resumes() {
         let m = SessionManager::new(4);
-        m.try_open("before", key(), stream()).unwrap();
+        let h = m.try_open("before", key(), stream(), 8, Duration::ZERO).unwrap();
         m.shutdown_all();
-        let err = m.try_open("after", key(), stream()).unwrap_err();
+        let err = m.try_open("after", key(), stream(), 8, Duration::ZERO).unwrap_err();
+        assert!(err.contains("shutting down"), "{err}");
+        let err = m.try_resume(h.id, "before", h.token, stream()).unwrap_err();
         assert!(err.contains("shutting down"), "{err}");
     }
 
@@ -162,7 +659,7 @@ mod tests {
         let server_side = accept.join().unwrap();
 
         let m = SessionManager::new(4);
-        m.try_open("c", key(), server_side.try_clone().unwrap()).unwrap();
+        m.try_open("c", key(), server_side.try_clone().unwrap(), 8, Duration::ZERO).unwrap();
         let reader = std::thread::spawn(move || {
             let mut s = server_side;
             let mut buf = [0u8; 1];
@@ -173,5 +670,128 @@ mod tests {
         // Reader returns promptly (0 bytes or error mapped to 0).
         assert_eq!(reader.join().unwrap(), 0);
         drop(client);
+    }
+
+    #[test]
+    fn detach_resume_lifecycle_holds_the_slot() {
+        let m = SessionManager::new(4);
+        let h = m.try_open("cam", key(), stream(), 8, Duration::ZERO).unwrap();
+        let (tx, _rx) = mpsc::channel();
+        let (epoch, _) = h.outbox.attach(tx, 0, h.attach_epoch).unwrap();
+        assert!(m.detach(h.id, epoch));
+        assert_eq!(m.active_count(), 1, "detached sessions still hold their slot");
+        assert_eq!(m.detached_count(), 1);
+        let resumed = m.try_resume(h.id, "cam", h.token, stream()).unwrap();
+        assert!(Arc::ptr_eq(&resumed.outbox, &h.outbox));
+        assert_eq!(resumed.plan, key());
+        assert_eq!(resumed.token, h.token);
+        assert_eq!(m.detached_count(), 0);
+        // A wrong token is refused before the client id is even looked
+        // at (session hijack defense), wrong client id is refused, and
+        // an unknown id names the likely cause.
+        let err = m.try_resume(h.id, "cam", h.token ^ 1, stream()).unwrap_err();
+        assert!(err.contains("token mismatch"), "{err}");
+        let err = m.try_resume(h.id, "other", h.token, stream()).unwrap_err();
+        assert!(err.contains("another client"), "{err}");
+        let err = m.try_resume(9999, "cam", h.token, stream()).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+    }
+
+    #[test]
+    fn stale_epoch_detach_is_ignored_after_takeover() {
+        let m = SessionManager::new(4);
+        let h = m.try_open("cam", key(), stream(), 8, Duration::ZERO).unwrap();
+        let outbox = h.outbox.clone();
+        let (tx1, _rx1) = mpsc::channel();
+        let (old_epoch, _) = outbox.attach(tx1, 0, h.attach_epoch).unwrap();
+        // Takeover: try_resume alone already invalidates the displaced
+        // attachment, so the old reader's detach is a no-op even in the
+        // window BEFORE the new attach completes (it must not mark the
+        // just-resumed session detached / eviction-eligible).
+        let resumed = m.try_resume(h.id, "cam", h.token, stream()).unwrap();
+        assert!(!m.detach(h.id, old_epoch), "stale detach in the takeover window");
+        assert_eq!(m.detached_count(), 0);
+        let (tx2, rx2) = mpsc::channel();
+        resumed.outbox.attach(tx2, 0, resumed.attach_epoch).unwrap();
+        m.note_attached(h.id);
+        // A displaced handler's attach (stale ticket) must refuse rather
+        // than clobber the winner's writer.
+        let (tx_stale, _rx_stale) = mpsc::channel();
+        assert!(outbox.attach(tx_stale, 0, old_epoch).is_none());
+        // ...and it stays a no-op after the new attachment as well.
+        assert!(!m.detach(h.id, old_epoch));
+        assert_eq!(m.detached_count(), 0);
+        outbox.deliver(Response::ok(1, vec![7]));
+        assert_eq!(rx2.try_recv().unwrap().req_id, 1, "new writer still fed");
+    }
+
+    #[test]
+    fn reaper_frees_lingering_detached_sessions_only() {
+        let m = SessionManager::new(4);
+        let a = m.try_open("a", key(), stream(), 8, Duration::ZERO).unwrap();
+        let _b = m.try_open("b", key(), stream(), 8, Duration::ZERO).unwrap();
+        let (tx, _rx) = mpsc::channel();
+        let (epoch, _) = a.outbox.attach(tx, 0, a.attach_epoch).unwrap();
+        assert!(m.detach(a.id, epoch));
+        assert_eq!(m.reap_detached(Duration::from_secs(60)), 0, "within linger");
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(m.reap_detached(Duration::from_millis(10)), 1);
+        assert_eq!(m.active_count(), 1, "attached session survives the reaper");
+        let err = m.try_resume(a.id, "a", a.token, stream()).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+    }
+
+    #[test]
+    fn outbox_admit_dedupes_for_exactly_once_execution() {
+        let outbox = SessionOutbox::new(1, 8);
+        let (tx, rx) = mpsc::channel();
+        outbox.attach(tx, 0, 0).unwrap();
+        assert_eq!(outbox.admit(1), Admit::Fresh);
+        assert_eq!(outbox.admit(1), Admit::InFlight, "in-flight re-send is ignored");
+        outbox.deliver(Response::ok(1, vec![42]));
+        assert_eq!(outbox.admit(1), Admit::Replayed, "completed re-send answers from ring");
+        // Delivery + replay both reached the writer.
+        assert_eq!(rx.try_recv().unwrap().body, vec![42]);
+        assert_eq!(rx.try_recv().unwrap().body, vec![42]);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn rejected_responses_are_not_retained_for_replay() {
+        let outbox = SessionOutbox::new(1, 8);
+        assert_eq!(outbox.admit(5), Admit::Fresh);
+        outbox.deliver(Response::rejected(5, "queue full"));
+        assert_eq!(outbox.replay_depth(), 0);
+        assert_eq!(outbox.admit(5), Admit::Fresh, "rejected seq is re-admitted");
+    }
+
+    #[test]
+    fn attach_trims_acked_and_replays_the_rest_in_order() {
+        let outbox = SessionOutbox::new(1, 8);
+        for seq in 1..=4u64 {
+            assert_eq!(outbox.admit(seq), Admit::Fresh);
+            outbox.deliver(Response::ok(seq, vec![seq as u8]));
+        }
+        assert_eq!(outbox.replay_depth(), 4);
+        let (tx, rx) = mpsc::channel();
+        let (epoch, replayed) = outbox.attach(tx, 2, 0).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(replayed, 2, "seqs 3 and 4 replay; 1 and 2 were acked");
+        assert_eq!(rx.try_recv().unwrap().req_id, 3);
+        assert_eq!(rx.try_recv().unwrap().req_id, 4);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn ring_is_bounded_evicting_oldest() {
+        let outbox = SessionOutbox::new(1, 3);
+        for seq in 1..=5u64 {
+            outbox.admit(seq);
+            outbox.deliver(Response::ok(seq, vec![]));
+        }
+        assert_eq!(outbox.replay_depth(), 3);
+        // Evicted seq 1 re-executes (Fresh), retained seq 5 replays.
+        assert_eq!(outbox.admit(1), Admit::Fresh);
+        assert_eq!(outbox.admit(5), Admit::Replayed);
     }
 }

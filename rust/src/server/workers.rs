@@ -177,11 +177,11 @@ fn run_one(
     match shard.infer(&req.payload) {
         Ok(body) => {
             metrics.note_completed(&req.plan_metrics, req.enqueued.elapsed());
-            let _ = req.reply.send(Response::ok(req.req_id, body));
+            req.reply.deliver(Response::ok(req.req_id, body));
         }
         Err(e) => {
             metrics.note_error(&req.plan_metrics);
-            let _ = req.reply.send(Response::error(req.req_id, &format!("{e:#}")));
+            req.reply.deliver(Response::error(req.req_id, &format!("{e:#}")));
         }
     }
 }
@@ -189,8 +189,11 @@ fn run_one(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use super::super::model::{client_prepare, compile_server_plan, expected_digest, make_input, MODEL_NAME};
+    use super::super::model::{
+        client_prepare, compile_server_plan, expected_digest, make_input, MODEL_NAME,
+    };
     use super::super::protocol::RespStatus;
+    use super::super::session::SessionOutbox;
     use std::sync::atomic::Ordering;
     use std::sync::mpsc;
     use std::time::Instant;
@@ -204,7 +207,9 @@ mod tests {
         let key = PlanKey::new(MODEL_NAME, 2);
         let plan = Arc::new(compile_server_plan(&key).unwrap());
         let plan_metrics = metrics.plan(&key);
+        let outbox = SessionOutbox::new(1, 64);
         let (reply_tx, reply_rx) = mpsc::channel();
+        outbox.attach(reply_tx, 0, 0).unwrap();
         let n = 40u64;
         for chunk in (0..n).collect::<Vec<_>>().chunks(4) {
             let batch: Vec<PendingRequest> = chunk
@@ -218,13 +223,12 @@ mod tests {
                         plan_metrics: plan_metrics.clone(),
                         payload: client_prepare(&input, 2),
                         enqueued: Instant::now(),
-                        reply: reply_tx.clone(),
+                        reply: outbox.clone(),
                     }
                 })
                 .collect();
             dispatch.dispatch(batch);
         }
-        drop(reply_tx);
 
         let mut seen = 0;
         while seen < n {
@@ -245,7 +249,9 @@ mod tests {
         let (pool, mut dispatch) = WorkerPool::spawn(1, false, metrics.clone()).unwrap();
         let key = PlanKey::new(MODEL_NAME, 1);
         let plan = Arc::new(compile_server_plan(&key).unwrap());
+        let outbox = SessionOutbox::new(9, 8);
         let (reply_tx, reply_rx) = mpsc::channel();
+        outbox.attach(reply_tx, 0, 0).unwrap();
         dispatch.dispatch(vec![PendingRequest {
             session: 9,
             req_id: 123,
@@ -253,7 +259,7 @@ mod tests {
             plan_metrics: metrics.plan(&key),
             payload: vec![1, 2, 3],
             enqueued: Instant::now(),
-            reply: reply_tx,
+            reply: outbox,
         }]);
         let resp = reply_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.status, RespStatus::Error);

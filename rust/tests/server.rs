@@ -5,12 +5,21 @@
 //!   against one server with zero lost requests;
 //! * admission rejects surface as explicit errors (session capacity at
 //!   handshake, queue-full as rejected responses);
-//! * responses are verified byte-for-byte against local ground truth.
+//! * responses are verified byte-for-byte against local ground truth;
+//! * fault tolerance (protocol v2): an abrupt link cut detaches the
+//!   session, a RECONNECT replays unacknowledged responses exactly-once,
+//!   chaos-mode loadgen loses nothing while killing links mid-run, and a
+//!   full server kill + restart is absorbed by local fallback with a
+//!   session-level availability metric exported.
 
+use edge_prune::runtime::health::HealthConfig;
 use edge_prune::runtime::netsim::LinkModel;
+use edge_prune::server::failover::{FailoverClient, FailoverConfig};
 use edge_prune::server::loadgen::{run_loadgen, LoadgenConfig};
+use edge_prune::server::model::{client_prepare, expected_digest, make_input};
 use edge_prune::server::protocol::{
-    read_handshake_reply, read_response, write_handshake, write_request, Handshake, RespStatus,
+    read_handshake_reply, read_response, write_frame, write_handshake, write_request, Handshake,
+    ReqKind, RespStatus, Resume,
 };
 use edge_prune::server::{Server, ServerConfig};
 use std::net::TcpStream;
@@ -70,10 +79,13 @@ fn eight_clients_hundred_inferences_zero_lost() {
     assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 800);
     assert_eq!(metrics.get("sessions_admitted").unwrap().int().unwrap(), 8);
     assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
-    // Two plans compiled (pp2 + pp3), cached across 8 sessions.  The
-    // hit/miss split is racy on cold keys (concurrent sessions may all
-    // miss before the first insert), but one lookup per session is not.
-    assert_eq!(metrics.get("plans_compiled").unwrap().int().unwrap(), 2);
+    // Three plans live in the cache: pp2 + pp3 compiled on demand, the
+    // pp5 local-only fallback warmed alongside them.  The hit/miss split
+    // is racy on cold keys (concurrent sessions may all miss before the
+    // first insert), but one demand lookup per session is not, and
+    // warming stays off the demand counters.
+    assert_eq!(metrics.get("plans_compiled").unwrap().int().unwrap(), 3);
+    assert_eq!(metrics.get("plans_warmed").unwrap().int().unwrap(), 1);
     let hits = metrics.get("plan_cache_hits").unwrap().int().unwrap();
     let misses = metrics.get("plan_cache_misses").unwrap().int().unwrap();
     assert_eq!(hits + misses, 8, "one cache lookup per session");
@@ -94,7 +106,12 @@ fn session_capacity_rejects_are_explicit() {
         let mut s = TcpStream::connect(addr).unwrap();
         write_handshake(
             &mut s,
-            &Handshake { model: "synthetic".into(), pp: 1, client_id: format!("hold-{i}") },
+            &Handshake {
+                model: "synthetic".into(),
+                pp: 1,
+                client_id: format!("hold-{i}"),
+                resume: None,
+            },
         )
         .unwrap();
         assert!(read_handshake_reply(&mut s).unwrap().accepted);
@@ -111,8 +128,11 @@ fn session_capacity_rejects_are_explicit() {
     .unwrap();
     assert_eq!(report.sessions_rejected, 3);
     assert_eq!(report.sent, 0);
-    // ...and succeeds once the held sessions close.
-    drop(held);
+    // ...and succeeds once the held sessions close cleanly (a plain drop
+    // would detach-and-linger, still holding the slots).
+    for mut s in held {
+        write_frame(&mut s, 1, ReqKind::Bye, &[]).unwrap();
+    }
     std::thread::sleep(Duration::from_millis(100)); // teardown races the retry
     let report = run_loadgen(&LoadgenConfig {
         addr: addr.to_string(),
@@ -191,7 +211,7 @@ fn bad_payload_gets_error_response_and_server_survives() {
     let mut s = TcpStream::connect(server.addr()).unwrap();
     write_handshake(
         &mut s,
-        &Handshake { model: "synthetic".into(), pp: 2, client_id: "mal".into() },
+        &Handshake { model: "synthetic".into(), pp: 2, client_id: "mal".into(), resume: None },
     )
     .unwrap();
     assert!(read_handshake_reply(&mut s).unwrap().accepted);
@@ -211,4 +231,247 @@ fn bad_payload_gets_error_response_and_server_survives() {
     .unwrap();
     assert_eq!(report.ok, 5);
     server.shutdown();
+}
+
+/// The deterministic replay contract: kill the socket mid-stream with an
+/// unacknowledged response outstanding, RECONNECT with `last_ack`, and
+/// the server must (a) replay the unacked response from its retransmit
+/// ring and (b) answer a client-side re-send from the ring — all without
+/// re-executing, so N requested inferences execute exactly N times.
+#[test]
+fn mid_stream_replay_delivers_exactly_once() {
+    let server = Server::start(test_cfg()).unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut s,
+        &Handshake { model: "synthetic".into(), pp: 2, client_id: "replay".into(), resume: None },
+    )
+    .unwrap();
+    let hs = read_handshake_reply(&mut s).unwrap();
+    assert!(hs.accepted && !hs.resumed);
+    let session_id = hs.session_id;
+    let token = hs.token;
+
+    // Two completed inferences, both responses received client-side.
+    for seq in [1u64, 2] {
+        let input = make_input(seq);
+        write_request(&mut s, seq, &client_prepare(&input, 2)).unwrap();
+        let resp = read_response(&mut s).unwrap().unwrap();
+        assert_eq!(resp.req_id, seq);
+        assert_eq!(resp.body, expected_digest(&input));
+    }
+
+    // Abrupt link cut — no BYE.  The session detaches, state retained.
+    // (The short sleep lets the reader observe the EOF and detach before
+    // the RECONNECT below, so the detach counter is deterministic; the
+    // resume itself would also work as a takeover of a still-attached
+    // session.)
+    s.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(s);
+    std::thread::sleep(Duration::from_millis(50));
+
+    // A RECONNECT without the session's resume token is refused — the
+    // sequential session id alone must not be enough to hijack a
+    // session and drain its replay ring.
+    let mut hijacker = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut hijacker,
+        &Handshake {
+            model: "synthetic".into(),
+            pp: 2,
+            client_id: "replay".into(),
+            resume: Some(Resume { session_id, token: token ^ 1, last_ack: 0 }),
+        },
+    )
+    .unwrap();
+    let refused = read_handshake_reply(&mut hijacker).unwrap();
+    assert!(!refused.accepted);
+    assert!(refused.message.contains("token mismatch"), "{}", refused.message);
+    drop(hijacker);
+
+    // RECONNECT acknowledging only seq 1: the server replays seq 2 from
+    // the retransmit ring before anything else.
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut s,
+        &Handshake {
+            model: "synthetic".into(),
+            pp: 2,
+            client_id: "replay".into(),
+            resume: Some(Resume { session_id, token, last_ack: 1 }),
+        },
+    )
+    .unwrap();
+    let hs2 = read_handshake_reply(&mut s).unwrap();
+    assert!(hs2.accepted && hs2.resumed, "resume refused: {}", hs2.message);
+    assert_eq!(hs2.session_id, session_id);
+    assert_eq!(hs2.token, token, "resume keeps the session credential");
+    let replayed = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(replayed.req_id, 2);
+    assert_eq!(replayed.body, expected_digest(&make_input(2)));
+
+    // A client-side re-send of seq 2 is answered from the ring too.
+    write_request(&mut s, 2, &client_prepare(&make_input(2), 2)).unwrap();
+    let dup = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(dup.req_id, 2);
+    assert_eq!(dup.body, expected_digest(&make_input(2)));
+
+    // New work flows on the resumed session.
+    let input = make_input(3);
+    write_request(&mut s, 3, &client_prepare(&input, 2)).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.req_id, 3);
+    assert_eq!(resp.body, expected_digest(&input));
+    write_frame(&mut s, 4, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+
+    let metrics = server.shutdown();
+    // Exactly-once execution: 3 distinct inferences ran, despite seq 2
+    // being delivered three times (original + attach replay + re-send).
+    assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 3);
+    assert_eq!(metrics.get("sessions_resumed").unwrap().int().unwrap(), 1);
+    assert!(metrics.get("responses_replayed").unwrap().int().unwrap() >= 2);
+    assert_eq!(metrics.get("sessions_detached").unwrap().int().unwrap(), 1);
+}
+
+/// Chaos loadgen: every client kills its own link every 5 requests; the
+/// resilient client reconnects/resumes and nothing is ever lost.
+#[test]
+fn chaos_loadgen_zero_lost_with_link_kills() {
+    let server = Server::start(test_cfg()).unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients: 3,
+        requests: 20,
+        pp: 2,
+        chaos_kill_every: 5,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.ok, 60, "{}", report.summary());
+    assert_eq!(report.lost(), 0);
+    assert_eq!(report.errors, 0);
+    assert!((report.service_availability() - 1.0).abs() < 1e-12);
+    assert!(report.reconnects >= 9, "3 kills per client, got {}", report.reconnects);
+    assert!(report.sessions_resumed >= 1);
+    let metrics = server.shutdown();
+    assert!(metrics.get("sessions_resumed").unwrap().int().unwrap() >= 1);
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// The headline chaos scenario: the edge endpoint is killed and later
+/// restarted mid-run.  The client must complete every requested
+/// inference with zero losses — remote before the kill, local-fallback
+/// during the outage, remote again after re-joining — and export a
+/// session-level availability metric.
+#[test]
+fn server_kill_and_restart_loses_zero_inferences() {
+    let server_a = Server::start(test_cfg()).unwrap();
+    let mut fc = FailoverClient::new(FailoverConfig {
+        addr: server_a.addr().to_string(),
+        pp: 2,
+        client_id: "chaos".into(),
+        max_attempts: 1,
+        reconnect_backoff: Duration::from_millis(1),
+        read_timeout: Duration::from_secs(1),
+        probe_every: 1,
+        health: HealthConfig { down_after_failures: 2, ..HealthConfig::default() },
+        ..FailoverConfig::default()
+    });
+
+    let mut outcomes = Vec::new();
+    for i in 0..10u64 {
+        let input = make_input(i);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert_eq!(body, expected_digest(&input), "frame {i}");
+        outcomes.push(served);
+    }
+    assert!(outcomes.iter().all(|s| !s.is_local()), "healthy phase is all-remote");
+
+    // Kill the edge endpoint mid-run.
+    let _ = server_a.shutdown();
+    for i in 10..20u64 {
+        let input = make_input(i);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert_eq!(body, expected_digest(&input), "frame {i} during outage");
+        outcomes.push(served);
+    }
+    assert!(
+        outcomes[10..].iter().all(|s| s.is_local()),
+        "outage phase is served by the local-only fallback plan"
+    );
+
+    // Restart the edge (new process = new state, old session is gone);
+    // the client re-joins collaborative inference via a fresh handshake.
+    let server_b = Server::start(test_cfg()).unwrap();
+    fc.set_addr(&server_b.addr().to_string());
+    for i in 20..30u64 {
+        let input = make_input(i);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert_eq!(body, expected_digest(&input), "frame {i} after restart");
+        outcomes.push(served);
+    }
+    assert!(
+        outcomes[20..].iter().any(|s| !s.is_local()),
+        "client re-joins collaborative inference after the restart"
+    );
+    fc.finish();
+
+    // Zero losses, availability exported.
+    let stats = fc.stats();
+    assert_eq!(stats.requested, 30);
+    assert_eq!(stats.completed, 30);
+    assert_eq!(stats.served_local + stats.served_remote, 30);
+    assert!(stats.served_local >= 10, "outage frames were local");
+    assert!(stats.served_remote >= 11, "both remote phases served");
+    assert!((stats.service_availability() - 1.0).abs() < 1e-12);
+    assert!(stats.link_availability() < 1.0);
+    let j = fc.metrics_json();
+    assert!((j.get("service_availability").unwrap().num().unwrap() - 1.0).abs() < 1e-12);
+    assert!(j.get("health").is_ok());
+
+    let metrics = server_b.shutdown();
+    assert!(metrics.get("requests_completed").unwrap().int().unwrap() >= 10);
+}
+
+/// Detached sessions hold their slot only for the linger window; the
+/// reaper then frees it and a RECONNECT is told the session is gone.
+#[test]
+fn detached_sessions_are_reaped_after_linger() {
+    let server = Server::start(ServerConfig {
+        detach_linger: Duration::from_millis(50),
+        ..test_cfg()
+    })
+    .unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut s,
+        &Handshake { model: "synthetic".into(), pp: 1, client_id: "linger".into(), resume: None },
+    )
+    .unwrap();
+    let hs = read_handshake_reply(&mut s).unwrap();
+    assert!(hs.accepted);
+    s.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(s);
+    // Give the reader time to detach and the reaper (period = linger/2)
+    // time to sweep.
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(server.active_sessions(), 0, "reaper freed the detached slot");
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut s,
+        &Handshake {
+            model: "synthetic".into(),
+            pp: 1,
+            client_id: "linger".into(),
+            resume: Some(Resume { session_id: hs.session_id, token: hs.token, last_ack: 0 }),
+        },
+    )
+    .unwrap();
+    let reply = read_handshake_reply(&mut s).unwrap();
+    assert!(!reply.accepted);
+    assert!(reply.message.contains("unknown session"), "{}", reply.message);
+    drop(s);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.get("sessions_reaped").unwrap().int().unwrap(), 1);
 }

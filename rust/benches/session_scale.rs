@@ -1,0 +1,104 @@
+//! Session-scale bench: p99 latency vs concurrent session count
+//! (64 / 256 / 512) against the event-driven server, asserting the
+//! fixed-thread-inventory property along the way (OS thread count stays
+//! a small constant while sessions grow 8x).
+//!
+//! Emits `BENCH_session_scale.json` for CI/EXPERIMENTS tracking.
+//!
+//! Knobs: EP_ROUNDS (requests per session), EP_PP (partition point),
+//! EP_WORKERS (worker threads; default 4 so the thread budget is
+//! deterministic), EP_SESSIONS (comma-free max tier override).
+
+use edge_prune::benchkit::{env_or, header};
+use edge_prune::platform::procinfo::{ensure_fd_headroom, os_thread_count};
+use edge_prune::server::loadgen::{run_session_wave, WaveConfig};
+use edge_prune::server::{Server, ServerConfig};
+use edge_prune::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let rounds: u64 = env_or("EP_ROUNDS", 4u64);
+    let pp: usize = env_or("EP_PP", 2usize);
+    let workers: usize = env_or("EP_WORKERS", 4usize);
+    let max_tier: usize = env_or("EP_SESSIONS", 512usize);
+
+    // 512 sessions need ~1100 fds in this process (server + client
+    // ends); raise the soft limit and scale tiers to what we got.
+    let headroom = ensure_fd_headroom(2 * max_tier as u64 + 256)?;
+    let tiers: Vec<usize> = [64usize, 256, 512]
+        .into_iter()
+        .filter(|&s| s <= max_tier && 2 * s as u64 + 64 <= headroom)
+        .collect();
+    anyhow::ensure!(!tiers.is_empty(), "fd headroom {headroom} too small for any tier");
+
+    header(&format!(
+        "session scale: p99 vs concurrent sessions (pp {pp}, {rounds} req/session, \
+         {workers} workers)"
+    ));
+    println!("sessions   req/s   p50-ms   p95-ms   p99-ms   os-threads");
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &sessions in &tiers {
+        let server = Server::start(ServerConfig {
+            workers,
+            pin_workers: false,
+            max_sessions: sessions + 8,
+            max_queue: 4 * sessions.max(256),
+            ..ServerConfig::default()
+        })?;
+        let report = run_session_wave(&WaveConfig {
+            addr: server.addr().to_string(),
+            sessions,
+            rounds,
+            pp,
+            seed: 42,
+        })?;
+        anyhow::ensure!(report.errors == 0, "response errors at {sessions} sessions");
+        anyhow::ensure!(report.ok == sessions as u64 * rounds, "lost work at {sessions}");
+        // This process runs only the bench main thread + the server's
+        // threads, so the OS count measures the real inventory: it must
+        // match the declared budget (+1 for main, +1 slack), not just
+        // stay under 16 — a regression that spawns per-session threads
+        // fails here even if thread_count()'s arithmetic was updated.
+        let os_threads = os_thread_count().unwrap_or(0);
+        anyhow::ensure!(
+            os_threads == 0 || os_threads < 16,
+            "thread budget blown: {os_threads} OS threads at {sessions} sessions"
+        );
+        anyhow::ensure!(
+            os_threads == 0 || os_threads <= server.thread_count() + 2,
+            "{os_threads} OS threads exceed the declared inventory of {} (+main)",
+            server.thread_count()
+        );
+        let rps = report.ok as f64 / report.wall.as_secs_f64().max(1e-9);
+        let (p50, p95, p99) = (
+            report.latency.quantile_ms(0.50),
+            report.latency.quantile_ms(0.95),
+            report.latency.quantile_ms(0.99),
+        );
+        println!(
+            "{sessions:>8} {rps:>7.0} {p50:>8.2} {p95:>8.2} {p99:>8.2} {os_threads:>12}"
+        );
+        rows.push(Json::from_pairs(vec![
+            ("sessions", Json::from(sessions)),
+            ("ok", Json::from(report.ok)),
+            ("requests_per_sec", Json::from(rps)),
+            ("p50_ms", Json::from(p50)),
+            ("p95_ms", Json::from(p95)),
+            ("p99_ms", Json::from(p99)),
+            ("os_threads", Json::from(os_threads)),
+            ("server_threads", Json::from(server.thread_count())),
+        ]));
+        server.shutdown();
+    }
+
+    let out = Json::from_pairs(vec![
+        ("bench", Json::from("session_scale")),
+        ("workers", Json::from(workers)),
+        ("rounds", Json::from(rounds)),
+        ("pp", Json::from(pp)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_session_scale.json", format!("{out}\n"))?;
+    println!("wrote BENCH_session_scale.json");
+    Ok(())
+}

@@ -26,9 +26,30 @@ impl Token {
         self.data.is_empty()
     }
 
-    /// Interpret the payload as f32s (tokens are 4-byte aligned tensors).
+    /// Interpret the payload as f32s, always materializing a fresh
+    /// `Vec`.  Steady-state readers should prefer [`Token::to_f32`],
+    /// which borrows instead when the layout allows.
     pub fn as_f32(&self) -> Vec<f32> {
         crate::util::tensor::bytes_to_f32(&self.data)
+    }
+
+    /// Zero-copy f32 view of the payload when it is 4-byte aligned (and
+    /// the target is little-endian, matching the wire layout); `None`
+    /// otherwise.  Heap buffers are *usually* aligned well past 4, so
+    /// the borrow is the overwhelmingly common case — but it is checked,
+    /// never assumed.
+    pub fn as_f32_slice(&self) -> Option<&[f32]> {
+        crate::util::tensor::cast_f32_slice(&self.data)
+    }
+
+    /// The payload as f32s: borrowed when aligned, copied when not.
+    /// This is what the hot kernels use so steady-state inference stops
+    /// re-materializing every tensor it only reads.
+    pub fn to_f32(&self) -> std::borrow::Cow<'_, [f32]> {
+        match self.as_f32_slice() {
+            Some(s) => std::borrow::Cow::Borrowed(s),
+            None => std::borrow::Cow::Owned(self.as_f32()),
+        }
     }
 
     pub fn from_f32(vals: &[f32], seq: u64) -> Self {
@@ -53,5 +74,20 @@ mod tests {
         let t = Token::new(vec![1, 2, 3], 0);
         let u = t.clone();
         assert!(Arc::ptr_eq(&t.data, &u.data));
+    }
+
+    #[test]
+    fn to_f32_agrees_with_as_f32_and_borrows_when_aligned() {
+        let t = Token::from_f32(&[0.5, -1.0, 7.25, 0.0], 1);
+        let copied = t.as_f32();
+        let view = t.to_f32();
+        assert_eq!(&*view, &copied[..]);
+        if let Some(s) = t.as_f32_slice() {
+            assert_eq!(s.as_ptr() as usize, t.data.as_ptr() as usize, "borrow, not copy");
+            assert!(matches!(view, std::borrow::Cow::Borrowed(_)));
+        }
+        // Ragged payloads never produce a borrowed view.
+        let ragged = Token::new(vec![1, 2, 3], 0);
+        assert!(ragged.as_f32_slice().is_none());
     }
 }

@@ -7,11 +7,13 @@
 //! the thread-per-actor runtime with TCP transmit/receive FIFOs, the
 //! partition-point Explorer, the PJRT bridge that executes the
 //! AOT-compiled per-actor HLO executables produced by `python/compile`,
-//! and the multi-tenant edge inference server (`server`): session
-//! manager, cross-session micro-batching, a core-pinned worker pool, and
-//! fault-tolerant serving — link health monitoring (`runtime::health`),
-//! session resume with response replay, plan hot-swap, and local-only
-//! fallback (`server::failover`).
+//! and the multi-tenant edge inference server (`server`): an
+//! event-driven core (one epoll reactor + timer wheel,
+//! `runtime::reactor` / `server::conn`, no per-session threads),
+//! session manager, cross-session micro-batching, a core-pinned worker
+//! pool, and fault-tolerant serving — link health monitoring
+//! (`runtime::health`), session resume with response replay, plan
+//! hot-swap, and local-only fallback (`server::failover`).
 //!
 //! See README.md for the quickstart, DESIGN.md for the system inventory
 //! and EXPERIMENTS.md for the paper-vs-measured results.

@@ -44,7 +44,8 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
   worker:  --role endpoint|server --pp K (+ compile flags)
   serve:   --port P --bind HOST --max-sessions N --max-queue N --max-batch N
            --batch-linger-us US --workers N --no-pin --idle-timeout SECS
-           --detach-linger SECS --replay-ring N --duration SECS (0 = until killed)
+           --detach-linger SECS --replay-ring N --write-high-water BYTES
+           --duration SECS (0 = until killed)
   loadgen: --addr HOST:PORT --clients N --requests N --pp K --link NAME
            --seed S --json --resilient --chaos K (kill each client's link
            every K requests; implies --resilient)
@@ -243,6 +244,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.usize_or("detach-linger", 30)? as u64,
         ),
         replay_ring: args.usize_or("replay-ring", 64)?,
+        write_high_water: args.usize_or("write-high-water", 1 << 20)?,
     };
     let duration = args.usize_or("duration", 0)?;
     let server = Server::start(cfg)?;

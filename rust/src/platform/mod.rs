@@ -9,6 +9,7 @@
 pub mod affinity;
 pub mod configs;
 pub mod mapping;
+pub mod procinfo;
 
 use crate::runtime::device::DeviceModel;
 use crate::runtime::netsim::LinkModel;

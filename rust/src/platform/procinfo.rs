@@ -1,0 +1,128 @@
+//! Process-level introspection for scale tests and benches: OS thread
+//! counts (to assert the event-driven server's fixed thread inventory)
+//! and file-descriptor headroom (a 512-session smoke test needs >1024
+//! fds, more than many containers' default soft limit).
+//!
+//! Linux-first, like `affinity`: thread counts read `/proc/self/status`
+//! and the rlimit calls are declared directly against libc; other
+//! platforms degrade to `None`/no-op.
+
+use anyhow::Result;
+
+/// OS threads currently in this process (`/proc/self/status` `Threads:`
+/// row).  `None` where procfs is unavailable.
+pub fn os_thread_count() -> Option<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("Threads:") {
+                return rest.trim().parse().ok();
+            }
+        }
+        None
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+#[cfg(all(unix, any(target_os = "linux", target_os = "macos")))]
+mod rlimit_sys {
+    /// Default `rlim_t` is `unsigned long` on glibc (32 bits on 32-bit
+    /// Linux — an edge-device target — 64 elsewhere) and `u64` on
+    /// macOS, where `c_ulong` is also 64-bit; `c_ulong` matches both.
+    pub type RlimT = std::os::raw::c_ulong;
+
+    #[repr(C)]
+    pub struct Rlimit {
+        pub cur: RlimT,
+        pub max: RlimT,
+    }
+
+    /// RLIMIT_NOFILE is 7 on Linux, 8 on macOS.
+    #[cfg(target_os = "linux")]
+    pub const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(target_os = "macos")]
+    pub const RLIMIT_NOFILE: i32 = 8;
+
+    extern "C" {
+        pub fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        pub fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+}
+
+/// Best-effort: raise the soft open-file limit toward `want` (capped by
+/// the hard limit) and return the resulting soft limit.  Never fails a
+/// caller that can live with the current limit — errors degrade to
+/// returning whatever is in effect.
+// RlimT is u64 on 64-bit targets (cast is a no-op there) but u32 on
+// 32-bit Linux, where the widening/narrowing casts do real work.
+#[allow(clippy::unnecessary_cast)]
+pub fn ensure_fd_headroom(want: u64) -> Result<u64> {
+    #[cfg(all(unix, any(target_os = "linux", target_os = "macos")))]
+    {
+        use rlimit_sys::{getrlimit, setrlimit, Rlimit, RlimT, RLIMIT_NOFILE};
+        let mut lim = Rlimit { cur: 0, max: 0 };
+        let rc = unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) };
+        if rc != 0 {
+            return Ok(1024); // POSIX default guess; caller scales down
+        }
+        if lim.cur as u64 >= want {
+            return Ok(lim.cur as u64);
+        }
+        // want.min(max) fits RlimT by construction (it is <= max).
+        let target = want.min(lim.max as u64) as RlimT;
+        let raised = Rlimit { cur: target, max: lim.max };
+        let rc = unsafe { setrlimit(RLIMIT_NOFILE, &raised) };
+        if rc != 0 {
+            return Ok(lim.cur as u64);
+        }
+        Ok(raised.cur as u64)
+    }
+    #[cfg(not(all(unix, any(target_os = "linux", target_os = "macos"))))]
+    {
+        let _ = want;
+        Ok(1024)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_count_sees_spawned_threads() {
+        let Some(before) = os_thread_count() else {
+            return; // no procfs on this platform
+        };
+        assert!(before >= 1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    tx.send(()).unwrap();
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                })
+            })
+            .collect();
+        for _ in 0..3 {
+            rx.recv().unwrap();
+        }
+        let during = os_thread_count().unwrap();
+        assert!(during >= before + 3, "{before} -> {during}");
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn fd_headroom_is_monotone() {
+        let a = ensure_fd_headroom(64).unwrap();
+        assert!(a > 0);
+        let b = ensure_fd_headroom(a).unwrap();
+        assert!(b >= a);
+    }
+}

@@ -155,9 +155,13 @@ pub struct ConcatSoftmaxKernel {
 
 impl ActorKernel for ConcatSoftmaxKernel {
     fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
-        let mut vals: Vec<f32> = Vec::new();
+        let total: usize = inputs.iter().map(|p| p[0].len() / 4).sum();
+        let mut vals: Vec<f32> = Vec::with_capacity(total);
         for port in inputs {
-            vals.extend(port[0].as_f32());
+            // Aligned tokens concatenate with a memcpy instead of a
+            // per-element decode (+ the intermediate Vec it used to
+            // materialize).
+            vals.extend_from_slice(&port[0].to_f32());
         }
         anyhow::ensure!(vals.len() % self.classes == 0, "ragged softmax rows");
         for row in vals.chunks_exact_mut(self.classes) {

@@ -1,7 +1,8 @@
 //! Edge-PRUNE runtime (paper §III.D): thread-per-actor engine, bounded
 //! mutex/condvar FIFOs, TCP transmit/receive FIFOs, network conditioning,
-//! device simulation, link health monitoring, metrics, and the XLA/PJRT
-//! execution service.
+//! device simulation, link health monitoring, metrics, the XLA/PJRT
+//! execution service, and the epoll reactor + timer wheel the serving
+//! layer's event loop runs on.
 
 pub mod device;
 pub mod distributed;
@@ -12,4 +13,5 @@ pub mod kernels;
 pub mod metrics;
 pub mod net;
 pub mod netsim;
+pub mod reactor;
 pub mod xla_exec;

@@ -135,6 +135,164 @@ impl ActorKernel for RxKernel {
     }
 }
 
+// ---------------------------------------------------------------------
+// Nonblocking mode: partial-frame-resumable codecs over the same wire
+// format, for FIFO endpoints driven by a `runtime::reactor` event loop
+// instead of a blocking actor thread.  The blocking kernels above stay
+// the engine default; these are the building blocks a reactor-driven
+// distributed runtime registers with its poller.
+// ---------------------------------------------------------------------
+
+/// Incremental decoder for the TX/RX frame format
+/// (`[u64 seq][u64 send_ts_ns][u32 len][payload]`): feed whatever bytes
+/// the socket had ready, pull complete frames out.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: crate::runtime::reactor::ByteBuf,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend(bytes);
+    }
+
+    /// Undecoded bytes currently buffered (a partial frame's prefix).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Decode one frame if complete; `Ok(None)` = need more bytes.
+    pub fn decode(&mut self) -> Result<Option<(u64, u64, Vec<u8>)>> {
+        let b = self.buf.peek();
+        if b.len() < 20 {
+            return Ok(None);
+        }
+        let seq = u64::from_le_bytes(b[..8].try_into().unwrap());
+        let ts = u64::from_le_bytes(b[8..16].try_into().unwrap());
+        let len = u32::from_le_bytes(b[16..20].try_into().unwrap());
+        if len > MAX_FRAME {
+            bail!("frame length {len} exceeds sanity bound");
+        }
+        let total = 20 + len as usize;
+        if b.len() < total {
+            return Ok(None);
+        }
+        let payload = b[20..total].to_vec();
+        self.buf.consume(total);
+        Ok(Some((seq, ts, payload)))
+    }
+}
+
+/// One nonblocking poll step's outcome.
+#[derive(Debug, PartialEq, Eq)]
+pub enum NbPoll {
+    /// A complete frame: (seq, send_ts_ns, payload).
+    Frame(u64, u64, Vec<u8>),
+    /// No complete frame buffered and the socket would block.
+    WouldBlock,
+    /// Peer closed at a frame boundary.
+    Eof,
+}
+
+/// Nonblocking receive half of a FIFO link: owns the socket (switched
+/// to nonblocking) and an incremental decoder.  Register `stream()`
+/// with a reactor and call `poll_frame` on readable events.
+pub struct NbReceiver {
+    stream: TcpStream,
+    dec: FrameDecoder,
+}
+
+impl NbReceiver {
+    pub fn new(stream: TcpStream) -> Result<NbReceiver> {
+        stream.set_nonblocking(true).context("RX nonblocking mode")?;
+        Ok(NbReceiver { stream, dec: FrameDecoder::new() })
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Pull ready bytes, then try to decode one frame.  An EOF with a
+    /// partial frame buffered is a mid-frame disconnect and errors
+    /// (never silently truncates a tensor).
+    pub fn poll_frame(&mut self) -> Result<NbPoll> {
+        loop {
+            if let Some((seq, ts, payload)) = self.dec.decode()? {
+                return Ok(NbPoll::Frame(seq, ts, payload));
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    if self.dec.pending() > 0 {
+                        bail!("peer closed mid-frame ({} bytes buffered)", self.dec.pending());
+                    }
+                    return Ok(NbPoll::Eof);
+                }
+                Ok(n) => self.dec.extend(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(NbPoll::WouldBlock)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+/// Nonblocking transmit half: frames queue into an outbound buffer and
+/// flush as the socket accepts them.  Register `stream()` for
+/// writability whenever `pending() > 0`.
+pub struct NbSender {
+    stream: TcpStream,
+    out: crate::runtime::reactor::ByteBuf,
+}
+
+impl NbSender {
+    pub fn new(stream: TcpStream) -> Result<NbSender> {
+        stream.set_nonblocking(true).context("TX nonblocking mode")?;
+        stream.set_nodelay(true)?;
+        Ok(NbSender { stream, out: crate::runtime::reactor::ByteBuf::new() })
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Bytes queued but not yet accepted by the socket.
+    pub fn pending(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Queue one frame (header + payload) for transmission.
+    pub fn queue_frame(&mut self, seq: u64, ts_ns: u64, payload: &[u8]) {
+        let mut header = [0u8; 20];
+        header[..8].copy_from_slice(&seq.to_le_bytes());
+        header[8..16].copy_from_slice(&ts_ns.to_le_bytes());
+        header[16..20].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.out.extend(&header);
+        self.out.extend(payload);
+    }
+
+    /// Write queued bytes until the socket would block; `Ok(true)` when
+    /// everything drained.
+    pub fn flush(&mut self) -> Result<bool> {
+        while !self.out.is_empty() {
+            match self.stream.write(self.out.peek()) {
+                Ok(0) => bail!("peer closed while flushing TX frames"),
+                Ok(n) => self.out.consume(n),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(true)
+    }
+}
+
 /// Bind a listener on 127.0.0.1:`port` (port 0 = ephemeral, for tests).
 pub fn bind_local(port: u16) -> Result<TcpListener> {
     bind_on("127.0.0.1", port)
@@ -213,6 +371,102 @@ mod tests {
     fn connect_with_retry_times_out() {
         let r = connect_with_retry("127.0.0.1:1", Duration::from_millis(100));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn nonblocking_pair_survives_partial_delivery() {
+        // TX queues two frames and flushes; RX polls without blocking
+        // until both decode, whatever burst boundaries TCP picked.
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept = std::thread::spawn(move || listener.accept().unwrap().0);
+        let client = TcpStream::connect(addr).unwrap();
+        let server_side = accept.join().unwrap();
+
+        let mut tx = NbSender::new(client).unwrap();
+        let mut rx = NbReceiver::new(server_side).unwrap();
+        assert_eq!(rx.poll_frame().unwrap(), NbPoll::WouldBlock, "nothing sent yet");
+
+        tx.queue_frame(1, 111, &[1, 2, 3]);
+        tx.queue_frame(2, 222, &[]);
+        assert!(tx.pending() > 0);
+        while !tx.flush().unwrap() {
+            std::thread::yield_now();
+        }
+        assert_eq!(tx.pending(), 0);
+
+        // Frames may land in one readable burst; poll until both decode.
+        let mut got = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while got.len() < 2 && std::time::Instant::now() < deadline {
+            match rx.poll_frame().unwrap() {
+                NbPoll::Frame(seq, ts, payload) => got.push((seq, ts, payload)),
+                NbPoll::WouldBlock => std::thread::yield_now(),
+                NbPoll::Eof => panic!("unexpected EOF"),
+            }
+        }
+        assert_eq!(got[0], (1, 111, vec![1, 2, 3]));
+        assert_eq!(got[1], (2, 222, vec![]));
+        drop(tx);
+        // Clean EOF at a frame boundary.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match rx.poll_frame().unwrap() {
+                NbPoll::Eof => break,
+                NbPoll::WouldBlock if std::time::Instant::now() < deadline => {
+                    std::thread::yield_now()
+                }
+                other => panic!("expected EOF, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn frame_decoder_handles_byte_at_a_time() {
+        let mut bytes = Vec::new();
+        let mut header = [0u8; 20];
+        header[..8].copy_from_slice(&9u64.to_le_bytes());
+        header[8..16].copy_from_slice(&77u64.to_le_bytes());
+        header[16..20].copy_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&header);
+        bytes.extend_from_slice(&[5, 6, 7]);
+        let mut dec = FrameDecoder::new();
+        for (i, b) in bytes.iter().enumerate() {
+            dec.extend(&[*b]);
+            let frame = dec.decode().unwrap();
+            if i + 1 < bytes.len() {
+                assert!(frame.is_none(), "complete frame before byte {i}");
+            } else {
+                assert_eq!(frame.unwrap(), (9, 77, vec![5, 6, 7]));
+            }
+        }
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn mid_frame_eof_is_an_error_not_truncation() {
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept = std::thread::spawn(move || listener.accept().unwrap().0);
+        let mut client = TcpStream::connect(addr).unwrap();
+        let server_side = accept.join().unwrap();
+        let mut rx = NbReceiver::new(server_side).unwrap();
+        // Half a header, then a hard close.
+        client.write_all(&[0u8; 10]).unwrap();
+        drop(client);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match rx.poll_frame() {
+                Ok(NbPoll::WouldBlock) if std::time::Instant::now() < deadline => {
+                    std::thread::yield_now()
+                }
+                Ok(other) => panic!("expected mid-frame error, got {other:?}"),
+                Err(e) => {
+                    assert!(format!("{e:#}").contains("mid-frame"), "{e:#}");
+                    break;
+                }
+            }
+        }
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! blocking, and the session layer turns the refusal into an explicit
 //! `rejected` response — under overload the server sheds load visibly
 //! rather than letting queues grow without bound.
+//!
+//! The dispatcher *parks* on the `not_empty` condvar whenever the queue
+//! is dry — together with the parked worker pool and the reactor
+//! sleeping in `epoll_wait`, an idle server has no polling loop
+//! anywhere and burns ~0% CPU.
 
 use super::metrics::PlanMetrics;
 use super::model::ServerModelPlan;

@@ -1,0 +1,880 @@
+//! The event-driven serving core: every client connection as a
+//! nonblocking state machine on ONE reactor thread.
+//!
+//! The pre-reactor server spent ~3 OS threads per session (reader,
+//! writer, and a share of the polling acceptor).  This module replaces
+//! all of that with state machines over `runtime::reactor`:
+//!
+//! * the **accept loop** is the listener's readiness events;
+//! * **handshakes** buffer bytes into a [`ByteBuf`] and run the
+//!   partial-frame resumable `protocol::decode_handshake`;
+//! * **frame reads** run `protocol::decode_frame` over whatever bytes
+//!   the socket had ready — a frame delivered one byte at a time costs
+//!   a few buffer appends, never a blocked thread;
+//! * **writes** queue encoded bytes per connection and flush on
+//!   writability, with a high-water mark that pauses *reads* from a
+//!   slow reader (backpressure) until its backlog drains;
+//! * **deadlines** (handshake timeout, idle timeout, reject-drain
+//!   timeout) and the **detach-linger reaper** are timer-wheel entries;
+//! * **worker completions** cross back over the completion queue — an
+//!   eventfd-style wake channel plus a mutexed FIFO — so the pinned
+//!   worker pool never touches a socket.
+//!
+//! Session semantics (epoch-guarded detach/close, replay-then-attach
+//! ordering, exactly-once admission) are untouched: this layer only
+//! changes *who* runs the protocol, not the protocol.  The thread
+//! inventory is fixed — reactor + dispatcher + workers — regardless of
+//! session count.
+
+use super::batch::PendingRequest;
+use super::model::{self, ServerModelPlan};
+use super::protocol::{self, Frame, HandshakeReply, ReqKind, Response};
+use super::session::{Admit, ResponseSink, SessionHandle};
+use super::ServerState;
+use crate::compiler::PlanKey;
+use crate::runtime::reactor::{ByteBuf, Event, Interest, Reactor, TimerWheel, WakeHandle};
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Poller token of the accept socket (connection ids start above it).
+const LISTENER_TOKEN: u64 = 0;
+/// Bytes a connection may buffer before completing its handshake.
+const MAX_HANDSHAKE_BYTES: usize = 4096;
+/// Reads attempted per readable event before yielding (fairness across
+/// connections; level-triggered polling re-reports leftovers).
+const READS_PER_EVENT: usize = 8;
+/// How long a draining connection (reject reply, post-BYE flush) may
+/// take before the loop closes it anyway.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+/// Back-off before re-arming accept after an accept error (EMFILE et
+/// al.) — level-triggered readiness would otherwise peg the loop.
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(50);
+
+// ------------------------------------------------------- completion path
+
+/// Worker-to-reactor response channel: workers (and the admission
+/// reject path) deliver responses through each session's outbox, whose
+/// attached `ConnSink` pushes them here; the reactor drains the queue
+/// at the top of every loop and appends the encoded bytes to the owning
+/// connection's write buffer.  `armed` elides the wake syscall when the
+/// reactor is not sleeping.
+pub(crate) struct CompletionQueue {
+    inner: Mutex<VecDeque<(u64, Response)>>,
+    armed: AtomicBool,
+    wake: WakeHandle,
+}
+
+impl CompletionQueue {
+    fn new(wake: WakeHandle) -> Arc<CompletionQueue> {
+        Arc::new(CompletionQueue {
+            inner: Mutex::new(VecDeque::new()),
+            armed: AtomicBool::new(false),
+            wake,
+        })
+    }
+
+    fn push(&self, conn: u64, resp: Response) {
+        self.inner.lock().unwrap().push_back((conn, resp));
+        if self.armed.swap(false, Ordering::AcqRel) {
+            self.wake.wake();
+        }
+    }
+
+    /// Declare the reactor about to sleep: the next `push` must wake it.
+    fn arm(&self) {
+        self.armed.store(true, Ordering::Release);
+    }
+
+    fn drain_into(&self, out: &mut Vec<(u64, Response)>) {
+        let mut q = self.inner.lock().unwrap();
+        out.extend(q.drain(..));
+    }
+}
+
+/// The response sink one attachment installs into its session outbox.
+/// Always accepts (the queue is unbounded; the replay ring is what
+/// bounds retained responses) — sink death is signalled by the detach
+/// path, not by send failure.
+struct ConnSink {
+    conn: u64,
+    completions: Arc<CompletionQueue>,
+}
+
+impl ResponseSink for ConnSink {
+    fn send(&self, resp: Response) -> bool {
+        self.completions.push(self.conn, resp);
+        true
+    }
+}
+
+// ------------------------------------------------------ connection state
+
+struct Attachment {
+    session_id: u64,
+    /// Epoch ticket from `SessionOutbox::attach`, presented on every
+    /// detach/close so a displaced attachment cannot disturb its
+    /// takeover successor.
+    epoch: u64,
+    /// RECONNECT takeover (the client already holds resume
+    /// credentials from its original accept reply).
+    resumed: bool,
+    outbox: Arc<super::session::SessionOutbox>,
+    health: Arc<crate::runtime::health::HealthMonitor>,
+    plan: Arc<ServerModelPlan>,
+    plan_metrics: Arc<super::metrics::PlanMetrics>,
+}
+
+enum ConnState {
+    /// Buffering + parsing the handshake (counts against the
+    /// pre-admission connection bound).
+    Handshake,
+    /// Admitted (fresh or resumed) session attachment.
+    Attached(Attachment),
+    /// No session (reject, post-BYE, lost takeover): flush the write
+    /// buffer, then close.
+    Draining,
+}
+
+/// How finalizing a connection disposes of its session (if any).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Teardown {
+    /// Abrupt link loss: detach, keep the session resumable.
+    Detach,
+    /// BYE / idle silence / protocol violation: free the slot
+    /// (epoch-guarded against takeovers).
+    Close,
+    /// Server shutdown: free unconditionally.
+    Shutdown,
+}
+
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    state: ConnState,
+    inbuf: ByteBuf,
+    outbuf: ByteBuf,
+    /// What the poller currently watches this socket for.
+    interest: Interest,
+    /// Pending deadline (handshake / idle / drain) in the timer wheel.
+    timer: Option<u64>,
+    /// Reads paused by the write-buffer high-water mark.
+    paused: bool,
+    /// Handshake-reply bytes still sitting in `outbuf`.  While nonzero,
+    /// a FRESH session's client has never seen its resume credentials,
+    /// so link loss must close (not detach) the session — a slot nobody
+    /// can ever RECONNECT to must not linger (the blocking server's
+    /// reply-write-failure release, ported).
+    unflushed_reply: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum TimerToken {
+    /// Recurring detach-linger sweep.
+    Reap,
+    /// Per-connection deadline.
+    Conn(u64),
+    /// Re-arm accept after an accept-error back-off.
+    AcceptResume,
+}
+
+// ------------------------------------------------------------ event loop
+
+pub(crate) struct EventLoopCfg {
+    /// Bound on connections that have not completed a handshake.
+    pub(crate) max_pending: usize,
+    /// Detach-linger sweep period.
+    pub(crate) reap_period: Duration,
+    /// Write-buffer bytes above which a connection's reads pause.
+    pub(crate) write_high_water: usize,
+}
+
+pub(crate) struct EventLoop {
+    state: Arc<ServerState>,
+    cfg: EventLoopCfg,
+    reactor: Reactor,
+    wheel: TimerWheel<TimerToken>,
+    listener: TcpListener,
+    accept_paused: bool,
+    conns: HashMap<u64, Conn>,
+    completions: Arc<CompletionQueue>,
+    next_conn: u64,
+    handshaking: usize,
+    /// Reused per-drain scratch for `route_completions` (first-touch
+    /// order + O(1) dedup) — the reactor's hot loop allocates nothing
+    /// in steady state.
+    touched: Vec<u64>,
+    seen: std::collections::HashSet<u64>,
+}
+
+impl EventLoop {
+    pub(crate) fn new(
+        listener: TcpListener,
+        state: Arc<ServerState>,
+        cfg: EventLoopCfg,
+    ) -> Result<(EventLoop, WakeHandle)> {
+        let reactor = Reactor::new()?;
+        let wake = reactor.waker();
+        reactor.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
+        let completions = CompletionQueue::new(wake.clone());
+        let wheel = TimerWheel::new(Instant::now());
+        Ok((
+            EventLoop {
+                state,
+                cfg,
+                reactor,
+                wheel,
+                listener,
+                accept_paused: false,
+                conns: HashMap::new(),
+                completions,
+                next_conn: LISTENER_TOKEN + 1,
+                handshaking: 0,
+                touched: Vec::new(),
+                seen: std::collections::HashSet::new(),
+            },
+            wake,
+        ))
+    }
+
+    /// The reactor thread body.  Exits when the server flags shutdown
+    /// (each surviving session is then closed) or the poller fails.
+    pub(crate) fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut expired: Vec<TimerToken> = Vec::new();
+        let mut done: Vec<(u64, Response)> = Vec::new();
+        self.wheel.insert(Instant::now(), self.cfg.reap_period, TimerToken::Reap);
+        loop {
+            // Arm-then-drain: a completion pushed after the drain sees
+            // `armed` and wakes the poll below, so nothing sleeps past a
+            // ready response.
+            self.completions.arm();
+            self.route_completions(&mut done);
+            if self.state.shutting_down.load(Ordering::SeqCst) {
+                break;
+            }
+            let timeout = self.wheel.next_deadline(Instant::now());
+            if self.reactor.poll(&mut events, timeout).is_err() {
+                break;
+            }
+            expired.clear();
+            self.wheel.advance(Instant::now(), &mut expired);
+            for token in expired.drain(..) {
+                self.on_timer(token);
+            }
+            for ev in &events {
+                match ev.token {
+                    LISTENER_TOKEN => self.accept_ready(),
+                    _ => self.conn_event(*ev),
+                }
+            }
+        }
+        // Shutdown: free every surviving session unconditionally (the
+        // threaded server's readers did the same on their way out).
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            if let Some(conn) = self.conns.remove(&id) {
+                self.finalize(conn, Teardown::Shutdown);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ timers
+
+    fn on_timer(&mut self, token: TimerToken) {
+        match token {
+            TimerToken::Reap => {
+                let reaped = self.state.sessions.reap_detached(self.state.detach_linger);
+                if reaped > 0 {
+                    self.state
+                        .metrics
+                        .sessions_reaped
+                        .fetch_add(reaped as u64, Ordering::Relaxed);
+                }
+                self.wheel.insert(Instant::now(), self.cfg.reap_period, TimerToken::Reap);
+            }
+            TimerToken::AcceptResume => {
+                self.accept_paused = false;
+                if self
+                    .reactor
+                    .register(self.listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)
+                    .is_ok()
+                {
+                    self.accept_ready();
+                } else {
+                    // Still resource-starved; keep backing off.
+                    self.accept_paused = true;
+                    self.wheel.insert(Instant::now(), ACCEPT_BACKOFF, TimerToken::AcceptResume);
+                }
+            }
+            TimerToken::Conn(id) => {
+                if let Some(mut conn) = self.conns.remove(&id) {
+                    conn.timer = None;
+                    if conn.paused && matches!(conn.state, ConnState::Attached(_)) {
+                        // Reads are paused by OUR backpressure, so the
+                        // "silence" is manufactured, not the client's:
+                        // push the idle deadline out instead of closing
+                        // a live session mid-drain.
+                        let idle = self.state.idle_timeout;
+                        if !idle.is_zero() {
+                            self.set_conn_deadline(&mut conn, idle);
+                        }
+                        self.conns.insert(id, conn);
+                    } else {
+                        // Handshake deadline, idle silence, or a stuck
+                        // drain: all close outright — a client that
+                        // earns a lingering detach is one that *was*
+                        // attached and lost its link, not one that went
+                        // silent.
+                        self.finalize(conn, Teardown::Close);
+                    }
+                }
+            }
+        }
+    }
+
+    fn set_conn_deadline(&mut self, conn: &mut Conn, delay: Duration) {
+        if let Some(t) = conn.timer.take() {
+            self.wheel.cancel(t);
+        }
+        conn.timer = Some(self.wheel.insert(Instant::now(), delay, TimerToken::Conn(conn.id)));
+    }
+
+    // ------------------------------------------------------------ accept
+
+    fn accept_ready(&mut self) {
+        if self.accept_paused {
+            return;
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => self.open_conn(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    // e.g. EMFILE under fd exhaustion: pause accepting
+                    // briefly instead of spinning on instant failure.
+                    self.accept_paused = true;
+                    let _ = self.reactor.deregister(self.listener.as_raw_fd());
+                    self.wheel.insert(Instant::now(), ACCEPT_BACKOFF, TimerToken::AcceptResume);
+                    break;
+                }
+            }
+        }
+    }
+
+    fn open_conn(&mut self, stream: TcpStream) {
+        if self.handshaking >= self.cfg.max_pending {
+            return; // over the pre-admission bound: drop the connect
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let id = self.next_conn;
+        self.next_conn += 1;
+        if self.reactor.register(stream.as_raw_fd(), id, Interest::READ).is_err() {
+            return;
+        }
+        let timer =
+            self.wheel.insert(Instant::now(), super::HANDSHAKE_TIMEOUT, TimerToken::Conn(id));
+        self.handshaking += 1;
+        self.conns.insert(
+            id,
+            Conn {
+                id,
+                stream,
+                state: ConnState::Handshake,
+                inbuf: ByteBuf::new(),
+                outbuf: ByteBuf::new(),
+                interest: Interest::READ,
+                timer: Some(timer),
+                paused: false,
+                unflushed_reply: 0,
+            },
+        );
+    }
+
+    // ------------------------------------------------------- connection IO
+
+    fn conn_event(&mut self, ev: Event) {
+        let Some(mut conn) = self.conns.remove(&ev.token) else {
+            return; // raced a teardown this iteration
+        };
+        if ev.readable && !conn.paused && !matches!(conn.state, ConnState::Draining) {
+            if let Err(mode) = self.read_ready(&mut conn) {
+                self.finalize(conn, mode);
+                return;
+            }
+        }
+        if let Err(mode) = self.flush(&mut conn) {
+            self.finalize(conn, mode);
+            return;
+        }
+        self.park(conn);
+    }
+
+    /// Pull ready bytes and run the codecs.  `Err` = the connection must
+    /// die, with the given disposition.
+    fn read_ready(&mut self, conn: &mut Conn) -> Result<(), Teardown> {
+        let mut chunk = [0u8; 16 * 1024];
+        for _ in 0..READS_PER_EVENT {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // EOF — mid-frame or between frames, the socket died
+                    // without a BYE: link loss for an attached session.
+                    return Err(self.loss_mode(conn));
+                }
+                Ok(n) => {
+                    conn.inbuf.extend(&chunk[..n]);
+                    self.process_inbuf(conn)?;
+                    if conn.paused || matches!(conn.state, ConnState::Draining) {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Err(self.loss_mode(conn)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Teardown mode for a socket-level failure on this connection.
+    fn loss_mode(&self, conn: &Conn) -> Teardown {
+        if matches!(conn.state, ConnState::Attached(_)) {
+            Teardown::Detach
+        } else {
+            Teardown::Close
+        }
+    }
+
+    /// Decode as much of the input buffer as possible, crossing the
+    /// handshake -> attached boundary in place (pipelined frames that
+    /// arrived with the handshake decode in the same pass).
+    fn process_inbuf(&mut self, conn: &mut Conn) -> Result<(), Teardown> {
+        loop {
+            if matches!(conn.state, ConnState::Draining) {
+                // No session behind this connection anymore; whatever
+                // else it sends is noise.
+                conn.inbuf.clear();
+                return Ok(());
+            }
+            if matches!(conn.state, ConnState::Handshake) {
+                match protocol::decode_handshake(&mut conn.inbuf) {
+                    Ok(Some(hs)) => {
+                        // Pre-admission bound released; admission decides
+                        // the next state (Attached or reject-Draining).
+                        self.handshaking -= 1;
+                        if let Some(t) = conn.timer.take() {
+                            self.wheel.cancel(t);
+                        }
+                        conn.state = ConnState::Draining;
+                        self.complete_handshake(conn, hs)?;
+                        continue; // pipelined frames decode in this pass
+                    }
+                    Ok(None) => {
+                        if conn.inbuf.len() > MAX_HANDSHAKE_BYTES {
+                            return Err(Teardown::Close);
+                        }
+                        return Ok(());
+                    }
+                    // A malformed handshake (bad magic/version/flags)
+                    // closes replyless, like the blocking server.
+                    Err(_why) => return Err(Teardown::Close),
+                }
+            }
+            // Attached: pull complete frames.
+            match protocol::decode_frame(&mut conn.inbuf) {
+                Ok(Some(frame)) => self.handle_frame(conn, frame)?,
+                Ok(None) => return Ok(()),
+                // Protocol violation: close outright — a misbehaving
+                // client must not earn a lingering detached slot.
+                Err(_why) => return Err(Teardown::Close),
+            }
+        }
+    }
+
+    /// One decoded frame on an attached connection — the state-machine
+    /// twin of the old blocking read loop's match.
+    fn handle_frame(&mut self, conn: &mut Conn, frame: Frame) -> Result<(), Teardown> {
+        // Any complete frame is client liveness: push the idle deadline.
+        let idle = self.state.idle_timeout;
+        if !idle.is_zero() {
+            self.set_conn_deadline(conn, idle);
+        }
+        if matches!(frame.kind, ReqKind::Bye) {
+            // Clean close: free the slot now (epoch-guarded), flush any
+            // queued responses, then close the socket.
+            if let ConnState::Attached(a) = &conn.state {
+                a.health.note_heard(frame.payload.len() + 13);
+                self.state.sessions.close_if_current(a.session_id, a.epoch);
+            }
+            conn.state = ConnState::Draining;
+            conn.inbuf.clear();
+            self.set_conn_deadline(conn, DRAIN_TIMEOUT);
+            return Ok(());
+        }
+        let ConnState::Attached(a) = &mut conn.state else {
+            return Ok(());
+        };
+        a.health.note_heard(frame.payload.len() + 13);
+        match frame.kind {
+            ReqKind::Bye => unreachable!("handled above"),
+            ReqKind::Ping => {
+                self.state.metrics.pings.fetch_add(1, Ordering::Relaxed);
+                a.outbox.send_ephemeral(Response::ok(frame.seq, b"pong".to_vec()));
+            }
+            ReqKind::Switch => {
+                // Plan hot-swap at a token boundary: frames decode
+                // serially on this one thread, so swapping between
+                // frames is atomic by construction — same argument as
+                // the per-session reader thread it replaces.
+                let swapped = protocol::parse_switch_payload(&frame.payload).and_then(|pp| {
+                    let key = PlanKey::new(&a.plan.key.model, pp);
+                    self.state
+                        .plans
+                        .get_or_try_insert(&key, || model::compile_server_plan(&key))
+                });
+                match swapped {
+                    Ok(new_plan) => {
+                        a.plan = new_plan;
+                        a.plan_metrics = self.state.metrics.plan(&a.plan.key);
+                        self.state.sessions.update_plan(a.session_id, a.plan.key.clone());
+                        self.state.metrics.plan_switches.fetch_add(1, Ordering::Relaxed);
+                        a.outbox.send_ephemeral(Response::ok(
+                            frame.seq,
+                            a.plan.key.to_string().into_bytes(),
+                        ));
+                    }
+                    Err(e) => {
+                        a.outbox.send_ephemeral(Response::error(frame.seq, &format!("{e:#}")))
+                    }
+                }
+            }
+            ReqKind::Infer => match a.outbox.admit(frame.seq) {
+                Admit::Replayed => {
+                    self.state.metrics.responses_replayed.fetch_add(1, Ordering::Relaxed);
+                }
+                Admit::InFlight => {
+                    self.state.metrics.duplicate_requests.fetch_add(1, Ordering::Relaxed);
+                }
+                Admit::Fresh => {
+                    let req = PendingRequest {
+                        session: a.session_id,
+                        req_id: frame.seq,
+                        plan: a.plan.clone(),
+                        plan_metrics: a.plan_metrics.clone(),
+                        payload: frame.payload,
+                        enqueued: Instant::now(),
+                        reply: a.outbox.clone(),
+                    };
+                    match self.state.queue.push(req) {
+                        Ok(depth) => self.state.metrics.note_queue_depth(depth as u64),
+                        Err((back, why)) => {
+                            // Admission reject: explicit response, never
+                            // a drop (the seq frees for a later re-send).
+                            self.state
+                                .metrics
+                                .requests_rejected
+                                .fetch_add(1, Ordering::Relaxed);
+                            back.reply.deliver(Response::rejected(back.req_id, why));
+                        }
+                    }
+                }
+            },
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------- handshake
+
+    /// Queue a handshake reject and leave the connection draining.
+    fn reject(&mut self, conn: &mut Conn, message: String) {
+        self.state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+        let reply = HandshakeReply {
+            accepted: false,
+            resumed: false,
+            session_id: 0,
+            token: 0,
+            message,
+        };
+        conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
+        self.note_queued(conn);
+        conn.state = ConnState::Draining;
+        conn.inbuf.clear();
+        self.set_conn_deadline(conn, DRAIN_TIMEOUT);
+    }
+
+    /// Admission: the nonblocking port of the threaded server's
+    /// handshake phase.  Leaves the connection `Attached` on success or
+    /// `Draining` (reject reply queued / lost takeover) otherwise;
+    /// `Err` closes it replyless.
+    fn complete_handshake(&mut self, conn: &mut Conn, hs: protocol::Handshake) -> Result<(), Teardown> {
+        let resumed = hs.resume.is_some();
+        let (handle, plan, last_ack): (SessionHandle, Arc<ServerModelPlan>, u64) =
+            if let Some(r) = hs.resume {
+                let stream = conn.stream.try_clone().map_err(|_| Teardown::Close)?;
+                let handle = match self.state.sessions.try_resume(
+                    r.session_id,
+                    &hs.client_id,
+                    r.token,
+                    stream,
+                ) {
+                    Ok(h) => h,
+                    Err(why) => {
+                        self.reject(conn, why);
+                        return Ok(());
+                    }
+                };
+                // The session's current plan is warm by invariant; a
+                // cache miss here just recompiles it.
+                let key = handle.plan.clone();
+                match self
+                    .state
+                    .plans
+                    .get_or_try_insert(&key, || model::compile_server_plan(&key))
+                {
+                    Ok(p) => (handle, p, r.last_ack),
+                    Err(e) => {
+                        self.state.sessions.detach_now(handle.id, handle.attach_epoch);
+                        self.reject(conn, format!("{e:#}"));
+                        return Ok(());
+                    }
+                }
+            } else {
+                // Plan lookup/compile first: a bad model or pp is a
+                // reject, not a session slot.
+                let key = PlanKey::new(&hs.model, hs.pp);
+                let plan = match self
+                    .state
+                    .plans
+                    .get_or_try_insert(&key, || model::compile_server_plan(&key))
+                {
+                    Ok(p) => p,
+                    Err(e) => {
+                        self.reject(conn, format!("{e:#}"));
+                        return Ok(());
+                    }
+                };
+                // Hot-swap invariant: the local-only fallback compiles
+                // alongside the collaborative plan, never on the
+                // failure path.
+                if let Some(fb) = model::fallback_key(&key) {
+                    let _ = self.state.plans.warm(&fb, || model::compile_server_plan(&fb));
+                }
+                let stream = conn.stream.try_clone().map_err(|_| Teardown::Close)?;
+                let handle = match self.state.sessions.try_open(
+                    &hs.client_id,
+                    key,
+                    stream,
+                    self.state.replay_ring,
+                    self.state.idle_timeout,
+                ) {
+                    Ok(h) => h,
+                    Err(why) => {
+                        self.reject(conn, why);
+                        return Ok(());
+                    }
+                };
+                (handle, plan, 0u64)
+            };
+
+        if resumed {
+            self.state.metrics.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.state.metrics.sessions_admitted.fetch_add(1, Ordering::Relaxed);
+        }
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed,
+            session_id: handle.id,
+            token: handle.token,
+            message: String::new(),
+        };
+        conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
+        // The outbuf held nothing before this reply (the handshake phase
+        // writes nothing), so its length IS the unflushed reply.
+        conn.unflushed_reply = conn.outbuf.len();
+
+        // Replay-then-attach, epoch-ticketed: the reply bytes precede
+        // the sink install, and the outbox lock serializes the replay
+        // ahead of any new completion — the same ordering contract the
+        // writer-thread implementation kept.
+        let sink = ConnSink { conn: conn.id, completions: self.completions.clone() };
+        let (epoch, replayed) = match handle.outbox.attach(sink, last_ack, handle.attach_epoch) {
+            Some(x) => x,
+            None => {
+                // Lost a takeover race between try_resume and attach;
+                // the winner owns the session — close without touching
+                // it (our socket is already shut down by the takeover).
+                return Err(Teardown::Close);
+            }
+        };
+        if replayed > 0 {
+            self.state
+                .metrics
+                .responses_replayed
+                .fetch_add(replayed as u64, Ordering::Relaxed);
+        }
+        self.note_queued(conn);
+        self.state.sessions.note_attached(handle.id);
+        let plan_metrics = self.state.metrics.plan(&plan.key);
+        conn.state = ConnState::Attached(Attachment {
+            session_id: handle.id,
+            epoch,
+            resumed,
+            outbox: handle.outbox,
+            health: handle.health,
+            plan,
+            plan_metrics,
+        });
+        if !self.state.idle_timeout.is_zero() {
+            self.set_conn_deadline(conn, self.state.idle_timeout);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ writes
+
+    /// Completed responses cross from the workers here: append each to
+    /// its connection's write buffer (encoded), then flush the touched
+    /// connections once.
+    fn route_completions(&mut self, scratch: &mut Vec<(u64, Response)>) {
+        scratch.clear();
+        self.completions.drain_into(scratch);
+        if scratch.is_empty() {
+            return;
+        }
+        // `touched` keeps first-completion order; the set makes the
+        // dedup O(1) even when a 512-session wave completes in one
+        // drain.  Both are taken out of `self` for the duration (the
+        // flush path below needs `&mut self`) and put back cleared.
+        let mut touched = std::mem::take(&mut self.touched);
+        let mut seen = std::mem::take(&mut self.seen);
+        for (conn_id, resp) in scratch.drain(..) {
+            if let Some(conn) = self.conns.get_mut(&conn_id) {
+                conn.outbuf.extend(&protocol::encode_response(&resp));
+                if seen.insert(conn_id) {
+                    touched.push(conn_id);
+                }
+            }
+            // else: the connection died since delivery; the outbox ring
+            // retains the response for replay after a RECONNECT.
+        }
+        for id in touched.drain(..) {
+            let Some(mut conn) = self.conns.remove(&id) else { continue };
+            self.note_queued(&mut conn);
+            if let Err(mode) = self.flush(&mut conn) {
+                self.finalize(conn, mode);
+                continue;
+            }
+            self.park(conn);
+        }
+        seen.clear();
+        self.touched = touched;
+        self.seen = seen;
+    }
+
+    /// Backpressure check at queue time (before the flush): a reader
+    /// slower than its response stream pauses its own request intake
+    /// rather than growing the write buffer without bound.
+    fn note_queued(&mut self, conn: &mut Conn) {
+        if !conn.paused && conn.outbuf.len() > self.cfg.write_high_water {
+            conn.paused = true;
+            self.state.metrics.read_pauses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Write buffered output until the socket would block.
+    fn flush(&mut self, conn: &mut Conn) -> Result<(), Teardown> {
+        while !conn.outbuf.is_empty() {
+            match conn.stream.write(conn.outbuf.peek()) {
+                Ok(0) => return Err(self.loss_mode(conn)),
+                Ok(n) => {
+                    conn.outbuf.consume(n);
+                    conn.unflushed_reply = conn.unflushed_reply.saturating_sub(n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Err(self.loss_mode(conn)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Post-I/O disposition: close drained `Draining` connections,
+    /// resume paused reads whose backlog cleared, re-arm poller
+    /// interest, and put the connection back in the table.
+    fn park(&mut self, mut conn: Conn) {
+        if matches!(conn.state, ConnState::Draining) && conn.outbuf.is_empty() {
+            self.finalize(conn, Teardown::Close);
+            return;
+        }
+        if conn.paused && conn.outbuf.len() <= self.cfg.write_high_water / 4 {
+            conn.paused = false;
+        }
+        let want = Interest {
+            readable: !conn.paused && !matches!(conn.state, ConnState::Draining),
+            writable: !conn.outbuf.is_empty(),
+        };
+        if want != conn.interest {
+            if self.reactor.modify(conn.stream.as_raw_fd(), conn.id, want).is_err() {
+                let mode = self.loss_mode(&conn);
+                self.finalize(conn, mode);
+                return;
+            }
+            conn.interest = want;
+        }
+        self.conns.insert(conn.id, conn);
+    }
+
+    // ---------------------------------------------------------- teardown
+
+    /// Remove a connection for good, disposing of its session per
+    /// `mode`.  Dropping the stream closes the fd.
+    fn finalize(&mut self, mut conn: Conn, mode: Teardown) {
+        if let Some(t) = conn.timer.take() {
+            self.wheel.cancel(t);
+        }
+        let _ = self.reactor.deregister(conn.stream.as_raw_fd());
+        let reply_undelivered = conn.unflushed_reply > 0;
+        match conn.state {
+            ConnState::Handshake => {
+                self.handshaking -= 1;
+            }
+            ConnState::Draining => {}
+            ConnState::Attached(a) => match mode {
+                Teardown::Detach if reply_undelivered && !a.resumed => {
+                    // The accept reply (and with it the resume token)
+                    // never reached this FRESH session's client, so a
+                    // detached slot could never be reclaimed — free it,
+                    // as the blocking server did when its reply write
+                    // failed.  (A resumed client still holds the
+                    // credentials from its original accept and may
+                    // RECONNECT again, so it detaches normally below.)
+                    self.state.sessions.close_if_current(a.session_id, a.epoch);
+                }
+                Teardown::Detach => {
+                    if self.state.sessions.detach(a.session_id, a.epoch) {
+                        // Abrupt loss is a link-failure signal: the
+                        // exported per-session health row reads degraded
+                        // until a RECONNECT recovers it.
+                        a.health.note_failure();
+                        self.state.metrics.sessions_detached.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Teardown::Close => {
+                    self.state.sessions.close_if_current(a.session_id, a.epoch);
+                }
+                Teardown::Shutdown => {
+                    self.state.sessions.close(a.session_id);
+                }
+            },
+        }
+    }
+}

@@ -377,6 +377,128 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
     Ok(report)
 }
 
+// ---------------------------------------------------------------------
+// Session-wave driver: hold N concurrent sessions from ONE thread.
+//
+// The thread-per-client loadgen above cannot reach the reactor's
+// session ceiling without spawning hundreds of client threads of its
+// own; this driver opens `sessions` sockets serially (each handshake
+// round-trips, so connects self-pace below the listen backlog), then
+// plays `rounds` lock-step request rounds across all of them — write
+// to every session, then read and verify every response.  The client
+// side stays cheap and deterministic while the server side holds
+// `sessions` live attachments, which is exactly what the 512-session
+// scale tests and `benches/session_scale.rs` measure.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct WaveConfig {
+    pub addr: String,
+    /// Concurrent sessions held open for the whole wave.
+    pub sessions: usize,
+    /// Requests per session (one per lock-step round).
+    pub rounds: u64,
+    pub pp: usize,
+    pub seed: u64,
+}
+
+impl Default for WaveConfig {
+    fn default() -> Self {
+        WaveConfig { addr: String::new(), sessions: 64, rounds: 2, pp: 2, seed: 11 }
+    }
+}
+
+#[derive(Debug)]
+pub struct WaveReport {
+    pub sessions: usize,
+    /// Verified responses (byte-for-byte against local ground truth).
+    pub ok: u64,
+    /// Wrong bytes, error/reject responses, or read failures.
+    pub errors: u64,
+    pub wall: Duration,
+    pub latency: Arc<LatencyHistogram>,
+}
+
+impl WaveReport {
+    pub fn to_json(&self) -> Json {
+        let rps = if self.wall.is_zero() {
+            0.0
+        } else {
+            self.ok as f64 / self.wall.as_secs_f64()
+        };
+        Json::from_pairs(vec![
+            ("sessions", Json::from(self.sessions)),
+            ("ok", Json::from(self.ok)),
+            ("errors", Json::from(self.errors)),
+            ("wall_ms", Json::from(self.wall.as_secs_f64() * 1e3)),
+            ("requests_per_sec", Json::from(rps)),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+}
+
+/// Drive one session wave to completion (see the module section above).
+/// A handshake reject or connect failure is an error — the wave's
+/// purpose is proving the server *holds* this many sessions.
+pub fn run_session_wave(cfg: &WaveConfig) -> Result<WaveReport> {
+    let latency = Arc::new(LatencyHistogram::new());
+    let t0 = Instant::now();
+    let mut streams = Vec::with_capacity(cfg.sessions);
+    for i in 0..cfg.sessions {
+        let mut s = TcpStream::connect(&cfg.addr)
+            .with_context(|| format!("wave session {i} connecting to {}", cfg.addr))?;
+        s.set_nodelay(true)?;
+        s.set_read_timeout(Some(Duration::from_secs(30)))?;
+        write_handshake(
+            &mut s,
+            &Handshake {
+                model: MODEL_NAME.to_string(),
+                pp: cfg.pp,
+                client_id: format!("wave-{i}"),
+                resume: None,
+            },
+        )?;
+        let reply = read_handshake_reply(&mut s)?;
+        anyhow::ensure!(reply.accepted, "wave session {i} rejected: {}", reply.message);
+        streams.push(s);
+    }
+    let mut ok = 0u64;
+    let mut errors = 0u64;
+    let mut sent_at = vec![Instant::now(); streams.len()];
+    for r in 0..cfg.rounds {
+        // Write to every session first (sequence numbers start at 1)...
+        for (i, s) in streams.iter_mut().enumerate() {
+            let input = make_input(frame_seed(cfg.seed, i, r));
+            let payload = client_prepare(&input, cfg.pp);
+            sent_at[i] = Instant::now();
+            write_request(s, r + 1, &payload)?;
+        }
+        // ...then read every response; the server works them all
+        // concurrently while we verify in session order.
+        for (i, s) in streams.iter_mut().enumerate() {
+            let expected = expected_digest(&make_input(frame_seed(cfg.seed, i, r)));
+            match read_response(s) {
+                Ok(Some(resp)) if resp.status == RespStatus::Ok && resp.body == expected => {
+                    latency.record(sent_at[i].elapsed());
+                    ok += 1;
+                }
+                _ => errors += 1,
+            }
+        }
+    }
+    // Clean close: free every server-side slot immediately.
+    for s in streams.iter_mut() {
+        let _ = write_frame(s, cfg.rounds + 1, ReqKind::Bye, &[]);
+    }
+    Ok(WaveReport {
+        sessions: cfg.sessions,
+        ok,
+        errors,
+        wall: t0.elapsed(),
+        latency,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

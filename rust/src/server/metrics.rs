@@ -42,6 +42,9 @@ pub struct ServingMetrics {
     pub duplicate_requests: AtomicU64,
     pub plan_switches: AtomicU64,
     pub pings: AtomicU64,
+    /// Backpressure: times the reactor paused a connection's reads
+    /// because its write buffer crossed the high-water mark.
+    pub read_pauses: AtomicU64,
     per_plan: Mutex<BTreeMap<PlanKey, Arc<PlanMetrics>>>,
 }
 
@@ -111,6 +114,7 @@ impl ServingMetrics {
             ("duplicate_requests", Json::from(self.duplicate_requests.load(Ordering::Relaxed))),
             ("plan_switches", Json::from(self.plan_switches.load(Ordering::Relaxed))),
             ("pings", Json::from(self.pings.load(Ordering::Relaxed))),
+            ("read_pauses", Json::from(self.read_pauses.load(Ordering::Relaxed))),
             ("queue_high_water", Json::from(self.queue_high_water.load(Ordering::Relaxed))),
             ("batch_occupancy", Json::from(self.batch_occupancy())),
             ("plans", Json::Arr(plans)),

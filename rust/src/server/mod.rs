@@ -5,6 +5,13 @@
 //! this subsystem runs a long-lived TCP service that concurrently serves
 //! many endpoint clients:
 //!
+//! * **event-driven core** (`conn`, `runtime::reactor`) — ONE reactor
+//!   thread runs the accept loop, every connection's frame codecs, all
+//!   deadline/reap timers, and the completion fan-in over an epoll
+//!   poller and a hierarchical timer wheel.  Sessions are state
+//!   machines, not threads: the server's thread inventory is fixed
+//!   (reactor + dispatcher + workers) whether it holds 1 session or
+//!   512+;
 //! * **session manager** (`session`) — handshake carries (model,
 //!   partition point, client id); plans are compiled once per
 //!   `(model, pp)` via the `compiler::cache::PlanCache` and shared.
@@ -17,7 +24,7 @@
 //!   coalescing of same-plan requests;
 //! * **core-pinned worker pool** (`workers`, `spsc`) — thread-per-core
 //!   via `platform::affinity`, one engine shard per worker per plan,
-//!   SPSC hand-off instead of locks;
+//!   SPSC hand-off instead of locks, parked (0% CPU) when idle;
 //! * **plan hot-swap** (`model`, `failover`) — every deployment
 //!   precompiles its local-only fallback plan, and a live session can
 //!   switch partition points mid-stream at a token boundary via a
@@ -26,15 +33,19 @@
 //!   resilient client that choose between collaborative, degraded, and
 //!   local-only plans from `runtime::health` link signals;
 //! * **serving metrics** (`metrics`) — queue depth, batch occupancy,
-//!   per-plan p50/p95/p99 latency, reject/replay/resume counters;
+//!   per-plan p50/p95/p99 latency, reject/replay/resume/backpressure
+//!   counters;
 //! * **loadgen** (`loadgen`) — N synthetic clients driven through
 //!   `netsim::LinkShaper` link profiles, verifying every response, with
-//!   a chaos mode that kills links mid-run.
+//!   a chaos mode that kills links mid-run, plus a single-threaded
+//!   session-wave driver for 512-session scale tests.
 //!
 //! Protocol details live in `protocol`; DESIGN.md documents the v2
-//! handshake, framing, and the failover state machine.
+//! handshake, framing, the failover state machine, and the reactor's
+//! connection state machine.
 
 pub mod batch;
+pub mod conn;
 pub mod failover;
 pub mod loadgen;
 pub mod metrics;
@@ -44,19 +55,20 @@ pub mod session;
 pub mod spsc;
 pub mod workers;
 
-use crate::compiler::{PlanCache, PlanKey};
+use crate::compiler::PlanCache;
+use crate::runtime::reactor::WakeHandle;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use batch::{BatchQueue, PendingRequest};
+use batch::BatchQueue;
+use conn::{EventLoop, EventLoopCfg};
 use metrics::ServingMetrics;
 use model::ServerModelPlan;
-use protocol::{HandshakeReply, ReqKind, Response};
-use session::{Admit, SessionManager};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use session::SessionManager;
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 use workers::WorkerPool;
 
 #[derive(Debug, Clone)]
@@ -84,6 +96,11 @@ pub struct ServerConfig {
     pub detach_linger: Duration,
     /// Per-session retransmit ring: responses retained for replay.
     pub replay_ring: usize,
+    /// Backpressure: per-connection write-buffer bytes above which the
+    /// reactor pauses reading that connection's requests until the
+    /// backlog drains (slow readers throttle themselves, not the
+    /// server).
+    pub write_high_water: usize,
 }
 
 impl Default for ServerConfig {
@@ -99,10 +116,13 @@ impl Default for ServerConfig {
             session_idle_timeout: Duration::from_secs(300),
             detach_linger: Duration::from_secs(30),
             replay_ring: 64,
+            write_high_water: 1 << 20,
         }
     }
 }
 
+/// Shared server state: everything here is interior-mutable, reached
+/// from the reactor thread, the dispatcher, and the workers.
 struct ServerState {
     sessions: SessionManager,
     queue: BatchQueue,
@@ -115,25 +135,31 @@ struct ServerState {
 }
 
 /// A running server.  `shutdown()` tears everything down in order:
-/// accept loop, live sessions, batch queue (drained), workers.  Dropping
-/// a `Server` without calling `shutdown` still *signals* everything to
-/// stop (threads wind down on their own) — it just doesn't join them.
+/// reactor (accept + sessions), batch queue (drained), workers.
+/// Dropping a `Server` without calling `shutdown` still *signals*
+/// everything to stop (threads wind down on their own) — it just
+/// doesn't join them.
 pub struct Server {
     addr: SocketAddr,
     state: Arc<ServerState>,
-    accept_handle: Option<JoinHandle<()>>,
+    /// Interrupts the reactor's sleep so it observes `shutting_down`.
+    wake: WakeHandle,
+    reactor_handle: Option<JoinHandle<()>>,
     dispatch_handle: Option<JoinHandle<()>>,
     pool: Option<WorkerPool>,
+    worker_count: usize,
 }
+
+/// Socket read deadline for completing a handshake (reactor timer; an
+/// overall deadline, strictly tighter than the old per-read
+/// SO_RCVTIMEO).  Also bounds how long a reject reply may drain.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
 impl Server {
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(cfg.addr.as_str())
             .with_context(|| format!("binding server on {}", cfg.addr))?;
         let addr = listener.local_addr()?;
-        // Poll-accept so shutdown needs no wake-up connection (a
-        // self-connect is not reliably possible for every bind address,
-        // e.g. 0.0.0.0 on some platforms).
         listener.set_nonblocking(true).context("setting acceptor non-blocking")?;
         let workers =
             if cfg.workers == 0 { crate::platform::affinity::core_count() } else { cfg.workers };
@@ -173,90 +199,48 @@ impl Server {
                 .context("spawning dispatcher")?
         };
 
-        // Acceptor: one reader thread per session.  Connections that have
-        // not completed a handshake are bounded separately from
-        // max_sessions (pre-admission threads are the one resource a
-        // client can hold without passing admission).  The accept loop
-        // doubles as the detach reaper's clock.
-        let accept_result = {
-            let state = state.clone();
-            let max_pending = cfg.max_sessions.saturating_mul(2).saturating_add(16);
-            let pending = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-            let reap_period = (state.detach_linger / 2)
+        // Reactor: the entire serving surface — accept, handshakes,
+        // frame codecs, timers, completion fan-out — on one thread.
+        // Pre-handshake connections are bounded separately from
+        // max_sessions (they are the one resource a client can hold
+        // without passing admission); the detach reaper rides the
+        // timer wheel.
+        let loop_cfg = EventLoopCfg {
+            max_pending: cfg.max_sessions.saturating_mul(2).saturating_add(16),
+            reap_period: (cfg.detach_linger / 2)
                 .min(Duration::from_secs(1))
-                .max(Duration::from_millis(10));
-            std::thread::Builder::new()
-                .name("serve-accept".into())
-                .spawn(move || {
-                    let mut last_reap = Instant::now();
-                    loop {
-                        if state.shutting_down.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        if last_reap.elapsed() >= reap_period {
-                            let reaped = state.sessions.reap_detached(state.detach_linger);
-                            if reaped > 0 {
-                                state
-                                    .metrics
-                                    .sessions_reaped
-                                    .fetch_add(reaped as u64, Ordering::Relaxed);
-                            }
-                            last_reap = Instant::now();
-                        }
-                        let stream = match listener.accept() {
-                            Ok((stream, _peer)) => stream,
-                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(Duration::from_millis(5));
-                                continue;
-                            }
-                            Err(_) => {
-                                // e.g. EMFILE under fd exhaustion: failing
-                                // instantly in a loop would peg this core.
-                                std::thread::sleep(Duration::from_millis(5));
-                                continue;
-                            }
-                        };
-                        // Accepted sockets inherit non-blocking on some
-                        // platforms; session I/O is blocking.
-                        if stream.set_nonblocking(false).is_err() {
-                            continue;
-                        }
-                        if pending.load(Ordering::SeqCst) >= max_pending {
-                            drop(stream); // over the pre-admission bound
-                            continue;
-                        }
-                        pending.fetch_add(1, Ordering::SeqCst);
-                        let state = state.clone();
-                        let pending_child = pending.clone();
-                        let spawned = std::thread::Builder::new()
-                            .name("serve-session".into())
-                            .spawn(move || {
-                                let _ = handle_session(stream, &state, &pending_child);
-                            });
-                        if spawned.is_err() {
-                            pending.fetch_sub(1, Ordering::SeqCst);
-                        }
-                    }
-                })
+                .max(Duration::from_millis(10)),
+            write_high_water: cfg.write_high_water.max(1),
         };
-        let accept_handle = match accept_result {
-            Ok(h) => h,
+        let reactor_result = EventLoop::new(listener, state.clone(), loop_cfg).and_then(
+            |(event_loop, wake)| {
+                std::thread::Builder::new()
+                    .name("serve-reactor".into())
+                    .spawn(move || event_loop.run())
+                    .context("spawning reactor")
+                    .map(|handle| (handle, wake))
+            },
+        );
+        let (reactor_handle, wake) = match reactor_result {
+            Ok(x) => x,
             Err(e) => {
                 // Unwind what already runs: drain/stop dispatcher +
                 // workers so a failed start leaks nothing.
                 state.queue.close();
                 let _ = dispatch_handle.join();
                 pool.join();
-                return Err(anyhow::Error::from(e).context("spawning acceptor"));
+                return Err(e);
             }
         };
 
         Ok(Server {
             addr,
             state,
-            accept_handle: Some(accept_handle),
+            wake,
+            reactor_handle: Some(reactor_handle),
             dispatch_handle: Some(dispatch_handle),
             pool: Some(pool),
+            worker_count: workers,
         })
     }
 
@@ -276,6 +260,13 @@ impl Server {
         self.state.queue.depth()
     }
 
+    /// The server's fixed thread inventory: 1 reactor + 1 dispatcher +
+    /// the worker pool.  Invariant under session count — the property
+    /// the session-scale bench and CI assert.
+    pub fn thread_count(&self) -> usize {
+        2 + self.worker_count
+    }
+
     /// Metrics snapshot (also embeds the plan-cache counters and the
     /// per-session attachment/health rows).
     pub fn metrics_json(&self) -> Json {
@@ -290,14 +281,14 @@ impl Server {
 
     /// Orderly shutdown; returns the final metrics snapshot.
     pub fn shutdown(mut self) -> Json {
-        // The acceptor polls with a short sleep, so the flag alone stops
-        // it — no wake-up connection needed (which would not be possible
-        // for every bind address).
+        // Flag + wake: the reactor observes the flag at the top of its
+        // loop, closes every connection (sessions freed), and exits.
         self.state.shutting_down.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_handle.take() {
+        self.wake.wake();
+        if let Some(h) = self.reactor_handle.take() {
             let _ = h.join();
         }
-        // Kick live sessions off so their readers stop enqueueing...
+        // Refuse any handshake that raced past the reactor's exit...
         self.state.sessions.shutdown_all();
         // ...then let the queue drain and the workers stop.
         self.state.queue.close();
@@ -315,9 +306,10 @@ impl Drop for Server {
     fn drop(&mut self) {
         // Signal-only teardown for servers dropped without `shutdown()`
         // (and a harmless no-op re-signal after an explicit shutdown):
-        // the polling acceptor sees the flag and exits, sessions unblock
-        // and close, the dispatcher drains then stops the workers.
+        // the reactor wakes, sees the flag, closes its connections and
+        // exits; the dispatcher drains then stops the workers.
         self.state.shutting_down.store(true, Ordering::SeqCst);
+        self.wake.wake();
         self.state.sessions.shutdown_all();
         self.state.queue.close();
     }
@@ -336,299 +328,12 @@ fn snapshot_json(state: &ServerState) -> Json {
     j
 }
 
-/// Socket read timeout during the handshake phase.  Note SO_RCVTIMEO is
-/// per-read, not an overall deadline — a trickling client can stretch
-/// its handshake well past this, which is why the acceptor ALSO caps the
-/// number of concurrent pre-admission connections.
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
-
-/// One session attachment: handshake (fresh or RECONNECT), admission,
-/// then a read loop feeding the batch queue while a writer thread
-/// streams responses back.  `pending` is the acceptor's pre-admission
-/// connection count; it is released as soon as the handshake phase
-/// resolves either way.
-fn handle_session(
-    mut stream: TcpStream,
-    state: &Arc<ServerState>,
-    pending: &std::sync::atomic::AtomicUsize,
-) -> Result<()> {
-    let hs = stream
-        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
-        .map_err(anyhow::Error::from)
-        .and_then(|()| protocol::read_handshake(&mut stream));
-    pending.fetch_sub(1, Ordering::SeqCst);
-    let hs = hs?;
-    // Admitted sessions may idle between requests, but not forever: a
-    // client that died without FIN must not hold its slot indefinitely.
-    let idle = state.idle_timeout;
-    stream.set_read_timeout(if idle.is_zero() { None } else { Some(idle) })?;
-
-    let reject = |stream: &mut TcpStream, message: String| {
-        let reply = HandshakeReply {
-            accepted: false,
-            resumed: false,
-            session_id: 0,
-            token: 0,
-            message,
-        };
-        protocol::write_handshake_reply(stream, &reply)
-    };
-
-    // Both arms end with a registered-but-not-yet-attached session.
-    let resumed = hs.resume.is_some();
-    let (handle, mut plan, last_ack) = if let Some(r) = hs.resume {
-        let handle = match state.sessions.try_resume(
-            r.session_id,
-            &hs.client_id,
-            r.token,
-            stream.try_clone()?,
-        ) {
-            Ok(h) => h,
-            Err(why) => {
-                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
-                return reject(&mut stream, why);
-            }
-        };
-        // The session's current plan is warm by invariant (compiled when
-        // first selected); a cache miss here would just recompile it.
-        let key = handle.plan.clone();
-        let plan = match state.plans.get_or_try_insert(&key, || model::compile_server_plan(&key)) {
-            Ok(p) => p,
-            Err(e) => {
-                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
-                state.sessions.detach_now(handle.id, handle.attach_epoch);
-                return reject(&mut stream, format!("{e:#}"));
-            }
-        };
-        (handle, plan, r.last_ack)
-    } else {
-        let key = PlanKey::new(&hs.model, hs.pp);
-        // Plan lookup/compile first: a bad model or pp is a reject, not a
-        // session slot.
-        let plan = match state.plans.get_or_try_insert(&key, || model::compile_server_plan(&key)) {
-            Ok(p) => p,
-            Err(e) => {
-                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
-                return reject(&mut stream, format!("{e:#}"));
-            }
-        };
-        // Plan hot-swap invariant: the local-only fallback is compiled
-        // alongside the collaborative plan, never on the failure path.
-        if let Some(fb) = model::fallback_key(&key) {
-            let _ = state.plans.warm(&fb, || model::compile_server_plan(&fb));
-        }
-        let handle = match state.sessions.try_open(
-            &hs.client_id,
-            key,
-            stream.try_clone()?,
-            state.replay_ring,
-            state.idle_timeout,
-        ) {
-            Ok(h) => h,
-            Err(why) => {
-                state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
-                return reject(&mut stream, why);
-            }
-        };
-        (handle, plan, 0u64)
-    };
-    let session_id = handle.id;
-    let attach_epoch = handle.attach_epoch;
-    let outbox = handle.outbox;
-    let health = handle.health;
-
-    // From here on, any failure must release what the handshake claimed:
-    // a fresh session closes (its resume token was never delivered, so
-    // no takeover can race it), a resumed one goes back to detached —
-    // epoch-guarded, so a displaced handler cannot mark its successor's
-    // live session eviction-eligible.
-    let release = |state: &Arc<ServerState>| {
-        if resumed {
-            state.sessions.detach_now(session_id, attach_epoch);
-        } else {
-            state.sessions.close(session_id);
-        }
-    };
-
-    if resumed {
-        state.metrics.sessions_resumed.fetch_add(1, Ordering::Relaxed);
-    } else {
-        state.metrics.sessions_admitted.fetch_add(1, Ordering::Relaxed);
-    }
-    let reply = HandshakeReply {
-        accepted: true,
-        resumed,
-        session_id,
-        token: handle.token,
-        message: String::new(),
-    };
-    if let Err(e) = protocol::write_handshake_reply(&mut stream, &reply) {
-        release(state);
-        return Err(e);
-    }
-
-    // Writer thread: the only writer on this socket after the handshake
-    // reply above.
-    let (reply_tx, reply_rx) = mpsc::channel::<Response>();
-    let mut write_stream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(e) => {
-            release(state);
-            return Err(e.into());
-        }
-    };
-    let writer = match std::thread::Builder::new()
-        .name(format!("serve-writer-{session_id}"))
-        .spawn(move || {
-            while let Ok(resp) = reply_rx.recv() {
-                if protocol::write_response(&mut write_stream, &resp).is_err() {
-                    break;
-                }
-            }
-        }) {
-        Ok(w) => w,
-        Err(e) => {
-            release(state);
-            return Err(e.into());
-        }
-    };
-
-    // Replay-then-attach: unacknowledged responses go out first, in
-    // order, before any new completion can interleave.  The attach is
-    // epoch-ticketed: if another RECONNECT took the session over since
-    // our handshake, we lost the race and must bow out without touching
-    // the successor's attachment (our socket is already shut down).
-    let (epoch, replayed) = match outbox.attach(reply_tx.clone(), last_ack, attach_epoch) {
-        Some(x) => x,
-        None => {
-            drop(reply_tx);
-            let _ = writer.join();
-            return Ok(());
-        }
-    };
-    if replayed > 0 {
-        state.metrics.responses_replayed.fetch_add(replayed as u64, Ordering::Relaxed);
-    }
-    state.sessions.note_attached(session_id);
-
-    let mut plan_metrics = state.metrics.plan(&plan.key);
-    // Whether teardown frees the slot now (BYE, idle silence, protocol
-    // violation) or detaches for a possible RECONNECT (link loss).
-    let mut close_session = false;
-    loop {
-        match protocol::read_frame(&mut stream) {
-            Ok(Some(frame)) => {
-                health.note_heard(frame.payload.len() + 13);
-                match frame.kind {
-                    ReqKind::Bye => {
-                        close_session = true;
-                        break;
-                    }
-                    ReqKind::Ping => {
-                        state.metrics.pings.fetch_add(1, Ordering::Relaxed);
-                        outbox.send_ephemeral(Response::ok(frame.seq, b"pong".to_vec()));
-                    }
-                    ReqKind::Switch => {
-                        // Plan hot-swap at a token boundary: this reader
-                        // processes frames serially, so swapping between
-                        // frames is atomic by construction.
-                        let swapped = protocol::parse_switch_payload(&frame.payload)
-                            .and_then(|pp| {
-                                let key = PlanKey::new(&plan.key.model, pp);
-                                state
-                                    .plans
-                                    .get_or_try_insert(&key, || model::compile_server_plan(&key))
-                            });
-                        match swapped {
-                            Ok(new_plan) => {
-                                plan = new_plan;
-                                plan_metrics = state.metrics.plan(&plan.key);
-                                state.sessions.update_plan(session_id, plan.key.clone());
-                                state.metrics.plan_switches.fetch_add(1, Ordering::Relaxed);
-                                outbox.send_ephemeral(Response::ok(
-                                    frame.seq,
-                                    plan.key.to_string().into_bytes(),
-                                ));
-                            }
-                            Err(e) => outbox
-                                .send_ephemeral(Response::error(frame.seq, &format!("{e:#}"))),
-                        }
-                    }
-                    ReqKind::Infer => match outbox.admit(frame.seq) {
-                        Admit::Replayed => {
-                            state.metrics.responses_replayed.fetch_add(1, Ordering::Relaxed);
-                        }
-                        Admit::InFlight => {
-                            state.metrics.duplicate_requests.fetch_add(1, Ordering::Relaxed);
-                        }
-                        Admit::Fresh => {
-                            let req = PendingRequest {
-                                session: session_id,
-                                req_id: frame.seq,
-                                plan: plan.clone(),
-                                plan_metrics: plan_metrics.clone(),
-                                payload: frame.payload,
-                                enqueued: Instant::now(),
-                                reply: outbox.clone(),
-                            };
-                            match state.queue.push(req) {
-                                Ok(depth) => state.metrics.note_queue_depth(depth as u64),
-                                Err((back, why)) => {
-                                    // Admission reject: explicit response,
-                                    // never a drop (and the seq is freed
-                                    // for a later re-send).
-                                    state
-                                        .metrics
-                                        .requests_rejected
-                                        .fetch_add(1, Ordering::Relaxed);
-                                    back.reply.deliver(Response::rejected(back.req_id, why));
-                                }
-                            }
-                        }
-                    },
-                }
-            }
-            // Abrupt link loss: stop reading, keep the session
-            // resumable via RECONNECT.
-            Ok(None) | Err(protocol::FrameError::Link(_)) => break,
-            // A silently-dead (idle-timeout) or protocol-violating
-            // client must not hold a lingering slot: close outright,
-            // matching the pre-v2 idle-reclaim semantics.
-            Err(protocol::FrameError::Idle(_) | protocol::FrameError::Malformed(_)) => {
-                close_session = true;
-                break;
-            }
-        }
-    }
-
-    // Teardown: BYE / idle / malformed (or server shutdown) frees the
-    // slot; an abrupt loss detaches, keeping replay state for a
-    // RECONNECT within the linger window.  Both close and detach are
-    // epoch-guarded so a reader that lost a resume takeover cannot
-    // close or detach its successor's live session.
-    if state.shutting_down.load(Ordering::SeqCst) {
-        state.sessions.close(session_id);
-    } else if close_session {
-        state.sessions.close_if_current(session_id, epoch);
-    } else if state.sessions.detach(session_id, epoch) {
-        // Abrupt loss is a link-failure signal: the exported per-session
-        // health row reads degraded (escalating to down on a flapping
-        // link) until a RECONNECT recovers it.
-        health.note_failure();
-        state.metrics.sessions_detached.fetch_add(1, Ordering::Relaxed);
-    }
-    // The writer drains outstanding responses and exits once the outbox
-    // attachment above is gone and this last sender drops.
-    drop(reply_tx);
-    let _ = writer.join();
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use loadgen::{run_loadgen, LoadgenConfig};
     use protocol::Handshake;
+    use std::net::TcpStream;
 
     fn quiet_cfg() -> ServerConfig {
         ServerConfig {
@@ -743,5 +448,32 @@ mod tests {
         // Waves 2 and 3 run against a warm cache, so at least their 4
         // sessions must be hits (wave 1's two may race to a double miss).
         assert!(metrics.get("plan_cache_hits").unwrap().int().unwrap() >= 4);
+    }
+
+    #[test]
+    fn thread_inventory_is_fixed() {
+        let server = Server::start(quiet_cfg()).unwrap();
+        assert_eq!(server.thread_count(), 4, "reactor + dispatcher + 2 workers");
+        // Holding sessions open must not change the inventory.
+        let mut held = Vec::new();
+        for i in 0..8 {
+            let mut s = TcpStream::connect(server.addr()).unwrap();
+            protocol::write_handshake(
+                &mut s,
+                &Handshake {
+                    model: "synthetic".into(),
+                    pp: 1,
+                    client_id: format!("inv-{i}"),
+                    resume: None,
+                },
+            )
+            .unwrap();
+            assert!(protocol::read_handshake_reply(&mut s).unwrap().accepted);
+            held.push(s);
+        }
+        assert_eq!(server.active_sessions(), 8);
+        assert_eq!(server.thread_count(), 4);
+        drop(held);
+        server.shutdown();
     }
 }

@@ -183,8 +183,17 @@ impl EngineShard {
             payload.len(),
             self.plan.key
         );
-        for (dst, chunk) in self.scratch.iter_mut().zip(payload.chunks_exact(4)) {
-            *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+        // Batch-assembly hot path: an aligned request payload loads into
+        // the scratch tensor with one memcpy (the stages mutate in
+        // place, so a borrow alone cannot replace the scratch);
+        // unaligned payloads take the per-element decode.
+        match tensor::cast_f32_slice(payload) {
+            Some(vals) => self.scratch.copy_from_slice(vals),
+            None => {
+                for (dst, chunk) in self.scratch.iter_mut().zip(payload.chunks_exact(4)) {
+                    *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+                }
+            }
         }
         for &k in &self.plan.server_stages {
             apply_stage(k, &mut self.scratch);

@@ -39,6 +39,7 @@
 //! responses as at-least-once and dedupe by sequence number (execution
 //! itself stays exactly-once server-side — see `session::SessionOutbox`).
 
+use crate::runtime::reactor::ByteBuf;
 use anyhow::{bail, Context, Result};
 use std::fmt;
 use std::io::{Read, Write};
@@ -199,7 +200,8 @@ fn read_str(stream: &mut TcpStream) -> Result<String> {
     String::from_utf8(bytes).map_err(|_| anyhow::anyhow!("non-utf8 string field"))
 }
 
-pub fn write_handshake(stream: &mut TcpStream, h: &Handshake) -> Result<()> {
+/// Serialize a handshake (the byte layout in the module docs).
+pub fn encode_handshake(h: &Handshake) -> Result<Vec<u8>> {
     let mut buf = Vec::with_capacity(40 + h.model.len() + h.client_id.len());
     buf.extend_from_slice(&MAGIC.to_le_bytes());
     buf.extend_from_slice(&VERSION.to_le_bytes());
@@ -214,7 +216,11 @@ pub fn write_handshake(stream: &mut TcpStream, h: &Handshake) -> Result<()> {
     buf.extend_from_slice(&ack.to_le_bytes());
     write_str(&mut buf, &h.model)?;
     write_str(&mut buf, &h.client_id)?;
-    stream.write_all(&buf).context("writing handshake")
+    Ok(buf)
+}
+
+pub fn write_handshake(stream: &mut TcpStream, h: &Handshake) -> Result<()> {
+    stream.write_all(&encode_handshake(h)?).context("writing handshake")
 }
 
 pub fn read_handshake(stream: &mut TcpStream) -> Result<Handshake> {
@@ -262,7 +268,9 @@ fn clip(s: &str) -> &str {
     &s[..end]
 }
 
-pub fn write_handshake_reply(stream: &mut TcpStream, r: &HandshakeReply) -> Result<()> {
+/// Serialize a handshake reply.  Infallible: the message is clipped to
+/// the protocol bound (the only encode failure mode).
+pub fn encode_handshake_reply(r: &HandshakeReply) -> Vec<u8> {
     let message = clip(&r.message);
     let mut buf = Vec::with_capacity(19 + message.len());
     buf.push(if !r.accepted {
@@ -274,8 +282,13 @@ pub fn write_handshake_reply(stream: &mut TcpStream, r: &HandshakeReply) -> Resu
     });
     buf.extend_from_slice(&r.session_id.to_le_bytes());
     buf.extend_from_slice(&r.token.to_le_bytes());
-    write_str(&mut buf, message)?;
-    stream.write_all(&buf).context("writing handshake reply")
+    buf.extend_from_slice(&(message.len() as u16).to_le_bytes());
+    buf.extend_from_slice(message.as_bytes());
+    buf
+}
+
+pub fn write_handshake_reply(stream: &mut TcpStream, r: &HandshakeReply) -> Result<()> {
+    stream.write_all(&encode_handshake_reply(r)).context("writing handshake reply")
 }
 
 pub fn read_handshake_reply(stream: &mut TcpStream) -> Result<HandshakeReply> {
@@ -293,17 +306,22 @@ pub fn read_handshake_reply(stream: &mut TcpStream) -> Result<HandshakeReply> {
     Ok(HandshakeReply { accepted, resumed, session_id, token, message })
 }
 
-/// Write one v2 frame.
-pub fn write_frame(stream: &mut TcpStream, seq: u64, kind: ReqKind, payload: &[u8]) -> Result<()> {
+/// Serialize one v2 frame.
+pub fn encode_frame(seq: u64, kind: ReqKind, payload: &[u8]) -> Result<Vec<u8>> {
     if payload.len() as u64 > MAX_PAYLOAD as u64 {
         bail!("frame payload {} exceeds {MAX_PAYLOAD}", payload.len());
     }
-    let mut header = [0u8; 13];
-    header[..8].copy_from_slice(&seq.to_le_bytes());
-    header[8] = kind.to_u8();
-    header[9..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
-    stream.write_all(&header)?;
-    stream.write_all(payload)?;
+    let mut buf = Vec::with_capacity(13 + payload.len());
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.push(kind.to_u8());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    Ok(buf)
+}
+
+/// Write one v2 frame.
+pub fn write_frame(stream: &mut TcpStream, seq: u64, kind: ReqKind, payload: &[u8]) -> Result<()> {
+    stream.write_all(&encode_frame(seq, kind, payload)?)?;
     Ok(())
 }
 
@@ -381,17 +399,121 @@ pub fn parse_switch_payload(payload: &[u8]) -> Result<usize> {
     Ok(u16::from_le_bytes(payload.try_into().unwrap()) as usize)
 }
 
+/// Serialize one response frame.  Infallible: an over-bound body (not
+/// constructible from server execution; defensive) degrades to an
+/// `error` response so the stream framing stays intact instead of
+/// closing the socket replyless.
+pub fn encode_response(r: &Response) -> Vec<u8> {
+    if r.body.len() as u64 > MAX_PAYLOAD as u64 {
+        return encode_response(&Response::error(
+            r.req_id,
+            &format!("response body {} exceeds {MAX_PAYLOAD}", r.body.len()),
+        ));
+    }
+    let mut buf = Vec::with_capacity(13 + r.body.len());
+    buf.extend_from_slice(&r.req_id.to_le_bytes());
+    buf.push(r.status.to_u8());
+    buf.extend_from_slice(&(r.body.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&r.body);
+    buf
+}
+
 pub fn write_response(stream: &mut TcpStream, r: &Response) -> Result<()> {
     if r.body.len() as u64 > MAX_PAYLOAD as u64 {
         bail!("response body {} exceeds {MAX_PAYLOAD}", r.body.len());
     }
-    let mut header = [0u8; 13];
-    header[..8].copy_from_slice(&r.req_id.to_le_bytes());
-    header[8] = r.status.to_u8();
-    header[9..].copy_from_slice(&(r.body.len() as u32).to_le_bytes());
-    stream.write_all(&header)?;
-    stream.write_all(&r.body)?;
+    stream.write_all(&encode_response(r))?;
     Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Incremental (partial-frame resumable) decoders for the reactor path.
+// The blocking `read_*` functions above stay for clients and tests; the
+// server's nonblocking connections buffer whatever bytes arrive and
+// decode from the front.  Both speak byte-identical protocol v2.
+// ---------------------------------------------------------------------
+
+/// Decode one client frame from the front of `buf`.
+///
+/// * `Ok(Some(frame))` — a complete frame was consumed from the buffer;
+/// * `Ok(None)` — the buffer holds a frame prefix; feed more bytes;
+/// * `Err(reason)` — protocol violation (the connection must close; the
+///   buffer is left untouched).
+///
+/// Header fields are validated as soon as their bytes arrive, so a bad
+/// kind byte or an oversized length is refused before its (possibly
+/// never-arriving) payload.
+pub fn decode_frame(buf: &mut ByteBuf) -> Result<Option<Frame>, String> {
+    let b = buf.peek();
+    if b.len() < 13 {
+        return Ok(None);
+    }
+    let seq = u64::from_le_bytes(b[..8].try_into().unwrap());
+    let kind = ReqKind::from_u8(b[8]).map_err(|e| format!("{e:#}"))?;
+    let len = u32::from_le_bytes(b[9..13].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(format!("frame payload {len} exceeds {MAX_PAYLOAD}"));
+    }
+    let total = 13 + len as usize;
+    if b.len() < total {
+        return Ok(None);
+    }
+    let payload = b[13..total].to_vec();
+    buf.consume(total);
+    Ok(Some(Frame { seq, kind, payload }))
+}
+
+/// Decode a client handshake from the front of `buf`, with the same
+/// `Ok(None)` = "need more bytes" contract as [`decode_frame`].  Magic,
+/// version, flags, and string bounds are validated incrementally, so a
+/// non-edge-prune client is refused at its first 8 bytes.
+pub fn decode_handshake(buf: &mut ByteBuf) -> Result<Option<Handshake>, String> {
+    let b = buf.peek();
+    if b.len() < 8 {
+        return Ok(None);
+    }
+    let magic = u32::from_le_bytes(b[..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(format!("bad handshake magic {magic:#010x} (not an edge-prune client?)"));
+    }
+    let version = u16::from_le_bytes(b[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(format!("protocol version {version} unsupported (server speaks {VERSION})"));
+    }
+    let pp = u16::from_le_bytes(b[6..8].try_into().unwrap()) as usize;
+    if b.len() < 33 {
+        return Ok(None);
+    }
+    let flags = b[8];
+    if flags & !FLAG_RESUME != 0 {
+        return Err(format!("unknown handshake flags {flags:#04x}"));
+    }
+    let session_id = u64::from_le_bytes(b[9..17].try_into().unwrap());
+    let token = u64::from_le_bytes(b[17..25].try_into().unwrap());
+    let last_ack = u64::from_le_bytes(b[25..33].try_into().unwrap());
+    // Two length-prefixed strings: model, then client id.
+    let mut off = 33usize;
+    let mut strings = [String::new(), String::new()];
+    for slot in &mut strings {
+        if b.len() < off + 2 {
+            return Ok(None);
+        }
+        let len = u16::from_le_bytes(b[off..off + 2].try_into().unwrap());
+        if len > MAX_NAME {
+            return Err(format!("string field of {len} bytes exceeds protocol bound"));
+        }
+        off += 2;
+        if b.len() < off + len as usize {
+            return Ok(None);
+        }
+        *slot = String::from_utf8(b[off..off + len as usize].to_vec())
+            .map_err(|_| "non-utf8 string field".to_string())?;
+        off += len as usize;
+    }
+    buf.consume(off);
+    let [model, client_id] = strings;
+    let resume = (flags & FLAG_RESUME != 0).then_some(Resume { session_id, token, last_ack });
+    Ok(Some(Handshake { model, pp, client_id, resume }))
 }
 
 /// Read one response; `Ok(None)` on clean EOF (server closed).
@@ -567,5 +689,94 @@ mod tests {
         assert_eq!(parse_switch_payload(&switch_payload(5)).unwrap(), 5);
         assert!(parse_switch_payload(&[1, 2, 3]).is_err());
         assert!(parse_switch_payload(&[]).is_err());
+    }
+
+    #[test]
+    fn incremental_frame_decode_survives_one_byte_delivery() {
+        let bytes = encode_frame(42, ReqKind::Infer, &[9, 8, 7, 6]).unwrap();
+        let mut buf = ByteBuf::new();
+        for (i, b) in bytes.iter().enumerate() {
+            if i + 1 < bytes.len() {
+                buf.extend(&[*b]);
+                assert!(decode_frame(&mut buf).unwrap().is_none(), "partial at byte {i}");
+            } else {
+                buf.extend(&[*b]);
+            }
+        }
+        let frame = decode_frame(&mut buf).unwrap().unwrap();
+        assert_eq!((frame.seq, frame.kind, frame.payload), (42, ReqKind::Infer, vec![9, 8, 7, 6]));
+        assert!(buf.is_empty(), "decoded frame fully consumed");
+    }
+
+    #[test]
+    fn incremental_decode_matches_blocking_writer_back_to_back() {
+        // Two frames delivered in one burst decode in order; a trailing
+        // prefix stays buffered.
+        let mut bytes = encode_frame(1, ReqKind::Ping, &[]).unwrap();
+        bytes.extend(encode_frame(2, ReqKind::Switch, &switch_payload(3)).unwrap());
+        bytes.extend(&encode_frame(3, ReqKind::Infer, &[1, 2, 3]).unwrap()[..7]);
+        let mut buf = ByteBuf::new();
+        buf.extend(&bytes);
+        assert_eq!(decode_frame(&mut buf).unwrap().unwrap().kind, ReqKind::Ping);
+        let f = decode_frame(&mut buf).unwrap().unwrap();
+        assert_eq!(parse_switch_payload(&f.payload).unwrap(), 3);
+        assert!(decode_frame(&mut buf).unwrap().is_none());
+        assert_eq!(buf.len(), 7, "prefix of frame 3 stays buffered");
+    }
+
+    #[test]
+    fn incremental_decode_rejects_header_violations_early() {
+        // Bad kind byte: refused once the header is in, before payload.
+        let mut buf = ByteBuf::new();
+        let mut header = [0u8; 13];
+        header[8] = 250;
+        header[9..].copy_from_slice(&16u32.to_le_bytes());
+        buf.extend(&header);
+        assert!(decode_frame(&mut buf).unwrap_err().contains("kind"));
+        // Oversized declared length: refused without waiting 64 MiB.
+        let mut buf = ByteBuf::new();
+        let mut header = [0u8; 13];
+        header[9..].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        buf.extend(&header);
+        assert!(decode_frame(&mut buf).unwrap_err().contains("exceeds"));
+    }
+
+    #[test]
+    fn incremental_handshake_decode_byte_by_byte() {
+        let h = Handshake {
+            model: "synthetic".into(),
+            pp: 4,
+            client_id: "cam-22".into(),
+            resume: Some(Resume { session_id: 7, token: 99, last_ack: 3 }),
+        };
+        let bytes = encode_handshake(&h).unwrap();
+        let mut buf = ByteBuf::new();
+        let mut decoded = None;
+        for b in &bytes {
+            buf.extend(&[*b]);
+            if let Some(got) = decode_handshake(&mut buf).unwrap() {
+                decoded = Some(got);
+            }
+        }
+        assert_eq!(decoded.unwrap(), h);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn incremental_handshake_rejects_bad_magic_at_first_bytes() {
+        let mut buf = ByteBuf::new();
+        buf.extend(&[0xde, 0xad, 0xbe, 0xef, 2, 0, 1, 0]);
+        assert!(decode_handshake(&mut buf).unwrap_err().contains("magic"));
+    }
+
+    #[test]
+    fn encode_response_degrades_oversized_body_to_error() {
+        // Not constructible from real execution; the encoder must still
+        // never emit a frame whose declared length violates the bound.
+        let huge = Response::ok(5, vec![0u8; MAX_PAYLOAD as usize + 1]);
+        let bytes = encode_response(&huge);
+        let len = u32::from_le_bytes(bytes[9..13].try_into().unwrap());
+        assert!(len <= MAX_PAYLOAD);
+        assert_eq!(bytes[8], RespStatus::Error.to_u8());
     }
 }

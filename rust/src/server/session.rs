@@ -31,6 +31,25 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Where an attached session's responses go.  The reactor's connections
+/// install a sink that queues encoded bytes on the event loop's
+/// completion channel; tests (and any thread-per-session embedding)
+/// can attach a plain `mpsc::Sender<Response>` — the outbox does not
+/// care what carries the bytes, only that `send` says when the carrier
+/// is gone.
+pub trait ResponseSink: Send {
+    /// Forward one response toward the attached transport.  `false`
+    /// means the sink is permanently gone (the outbox drops it and
+    /// keeps ringing responses for replay).
+    fn send(&self, resp: Response) -> bool;
+}
+
+impl ResponseSink for mpsc::Sender<Response> {
+    fn send(&self, resp: Response) -> bool {
+        mpsc::Sender::send(self, resp).is_ok()
+    }
+}
+
 /// Outcome of admitting one `Infer` sequence number.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admit {
@@ -49,15 +68,16 @@ struct OutboxState {
     ring: BTreeMap<u64, Response>,
     /// Admitted seqs whose terminal response has not yet been produced.
     in_flight: BTreeSet<u64>,
-    /// Writer channel of the current attachment (None while detached).
-    tx: Option<mpsc::Sender<Response>>,
+    /// Response sink of the current attachment (None while detached).
+    tx: Option<Box<dyn ResponseSink>>,
     /// Bumped on every attach; guards stale detaches after a takeover.
     epoch: u64,
 }
 
 /// Per-session response path: workers deliver here, the ring retains
-/// unacknowledged responses for replay, and whatever writer thread is
-/// currently attached forwards them to the socket.
+/// unacknowledged responses for replay, and whatever attachment is
+/// currently installed (a reactor connection's sink) forwards them to
+/// the socket.
 pub struct SessionOutbox {
     session_id: u64,
     ring_capacity: usize,
@@ -125,26 +145,26 @@ impl SessionOutbox {
 
     fn forward(s: &mut OutboxState, resp: Response) {
         if let Some(tx) = &s.tx {
-            if tx.send(resp).is_err() {
+            if !tx.send(resp) {
                 s.tx = None; // writer gone; keep ringing for replay
             }
         }
     }
 
-    /// Install a (re)connected writer: drop responses the client has
-    /// acknowledged, replay the retained remainder **in order** before
-    /// any new completion can interleave (the lock serializes against
-    /// `deliver`), then switch forwarding to the new channel.
+    /// Install a (re)connected response sink: drop responses the client
+    /// has acknowledged, replay the retained remainder **in order**
+    /// before any new completion can interleave (the lock serializes
+    /// against `deliver`), then switch forwarding to the new sink.
     ///
     /// `expected_epoch` is the attachment ticket the manager issued
     /// (`SessionHandle::attach_epoch`): if another takeover has bumped
     /// the epoch since, this attach lost the race and must NOT clobber
-    /// the winner's writer — `None` is returned and the caller bows
+    /// the winner's sink — `None` is returned and the caller bows
     /// out.  On success returns the new attachment epoch (for the
     /// matching `detach`) and how many responses were replayed.
-    pub fn attach(
+    pub fn attach<S: ResponseSink + 'static>(
         &self,
-        tx: mpsc::Sender<Response>,
+        tx: S,
         last_ack: u64,
         expected_epoch: u64,
     ) -> Option<(u64, usize)> {
@@ -155,12 +175,12 @@ impl SessionOutbox {
         s.ring.retain(|&seq, _| seq > last_ack);
         let mut replayed = 0usize;
         for resp in s.ring.values() {
-            if tx.send(resp.clone()).is_err() {
+            if !tx.send(resp.clone()) {
                 break;
             }
             replayed += 1;
         }
-        s.tx = Some(tx);
+        s.tx = Some(Box::new(tx));
         s.epoch += 1;
         Some((s.epoch, replayed))
     }
@@ -223,7 +243,9 @@ pub struct SessionInfo {
     /// it (session ids are sequential and guessable, the token is not).
     token: u64,
     /// Clone of the live session socket, kept so `shutdown_all` (and a
-    /// resume takeover) can unblock the reader thread from outside.
+    /// resume takeover) can kick the attached connection from outside —
+    /// the shutdown surfaces as an EOF/error event on the reactor, which
+    /// tears the displaced connection state machine down.
     stream: TcpStream,
     outbox: Arc<SessionOutbox>,
     health: Arc<HealthMonitor>,

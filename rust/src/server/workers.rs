@@ -6,6 +6,13 @@
 //! batches across workers, skipping ahead when a ring is full and backing
 //! off only when every worker is saturated — that back-pressure is what
 //! ultimately bounds the batch queue drain rate.
+//!
+//! Idle workers **park** (`std::thread::park`) instead of spin-polling
+//! their ring; the dispatcher unparks a worker after every push.  The
+//! park token makes the obvious race benign — an unpark delivered
+//! between the worker's empty `pop` and its `park()` turns the park
+//! into a no-op — so an idle pool burns ~0% CPU without a wake-up
+//! latency cliff.
 
 use super::batch::PendingRequest;
 use super::metrics::ServingMetrics;
@@ -30,9 +37,11 @@ pub struct WorkerPool {
 }
 
 /// The dispatching end: producers for every worker ring (single-threaded
-/// by construction — it lives on the dispatcher thread).
+/// by construction — it lives on the dispatcher thread), plus each
+/// worker's thread handle for post-push unparking.
 pub struct Dispatch {
     producers: Vec<spsc::Producer<WorkItem>>,
+    workers: Vec<std::thread::Thread>,
     next: usize,
 }
 
@@ -54,6 +63,7 @@ impl WorkerPool {
         let cores = affinity::core_count();
         let mut handles = Vec::with_capacity(workers);
         let mut producers: Vec<spsc::Producer<WorkItem>> = Vec::with_capacity(workers);
+        let mut threads: Vec<std::thread::Thread> = Vec::with_capacity(workers);
         for w in 0..workers {
             let (tx, rx) = spsc::channel::<WorkItem>(RING_CAPACITY);
             let metrics = metrics.clone();
@@ -63,13 +73,15 @@ impl WorkerPool {
             match spawned {
                 Ok(handle) => {
                     producers.push(tx);
+                    threads.push(handle.thread().clone());
                     handles.push(handle);
                 }
                 Err(e) => {
                     // Stop the 0..w workers already running (their rings
                     // are empty, so the Shutdown push cannot fail).
-                    for p in &mut producers {
+                    for (p, t) in producers.iter_mut().zip(threads.iter()) {
                         let _ = p.push(WorkItem::Shutdown);
+                        t.unpark();
                     }
                     WorkerPool { handles }.join();
                     return Err(anyhow::Error::from(e)
@@ -77,7 +89,7 @@ impl WorkerPool {
                 }
             }
         }
-        Ok((WorkerPool { handles }, Dispatch { producers, next: 0 }))
+        Ok((WorkerPool { handles }, Dispatch { producers, workers: threads, next: 0 }))
     }
 
     pub fn join(self) {
@@ -92,8 +104,9 @@ impl Dispatch {
         self.producers.len()
     }
 
-    /// Hand a batch to the next worker, skipping full rings; blocks with
-    /// a short backoff when every ring is full (backpressure).
+    /// Hand a batch to the next worker (unparking it), skipping full
+    /// rings; blocks with a short backoff when every ring is full
+    /// (backpressure).
     pub fn dispatch(&mut self, batch: Vec<PendingRequest>) {
         let mut item = WorkItem::Batch(batch);
         loop {
@@ -101,9 +114,17 @@ impl Dispatch {
                 let idx = self.next;
                 self.next = (self.next + 1) % self.producers.len();
                 match self.producers[idx].push(item) {
-                    Ok(()) => return,
+                    Ok(()) => {
+                        self.workers[idx].unpark();
+                        return;
+                    }
                     Err(back) => item = back,
                 }
+            }
+            // Every ring full: kick all workers (belt and braces — each
+            // already got an unpark per queued item) and back off.
+            for t in &self.workers {
+                t.unpark();
             }
             std::thread::sleep(Duration::from_micros(100));
         }
@@ -111,13 +132,17 @@ impl Dispatch {
 
     /// Deliver a shutdown token to every worker (after the queue drained).
     pub fn shutdown_workers(&mut self) {
-        for p in &mut self.producers {
+        for (p, t) in self.producers.iter_mut().zip(self.workers.iter()) {
             let mut item = WorkItem::Shutdown;
             loop {
                 match p.push(item) {
-                    Ok(()) => break,
+                    Ok(()) => {
+                        t.unpark();
+                        break;
+                    }
                     Err(back) => {
                         item = back;
+                        t.unpark();
                         std::thread::sleep(Duration::from_micros(100));
                     }
                 }
@@ -140,27 +165,20 @@ fn worker_main(
     }
     // Shared-nothing: every worker owns its engine shards outright.
     let mut shards: BTreeMap<PlanKey, EngineShard> = BTreeMap::new();
-    let mut idle_spins = 0u32;
     loop {
         match rx.pop() {
             Some(WorkItem::Shutdown) => break,
             Some(WorkItem::Batch(batch)) => {
-                idle_spins = 0;
                 for req in batch {
                     run_one(&mut shards, req, &metrics);
                 }
             }
             None => {
-                // Spin briefly, then yield, then sleep: latency-friendly
-                // under load, CPU-friendly when idle.
-                idle_spins = idle_spins.saturating_add(1);
-                if idle_spins < 64 {
-                    std::hint::spin_loop();
-                } else if idle_spins < 256 {
-                    std::thread::yield_now();
-                } else {
-                    std::thread::sleep(Duration::from_micros(200));
-                }
+                // Idle: park until the dispatcher's next post-push
+                // unpark.  The park token absorbs the pop/park race
+                // (an unpark landing first makes this return at once),
+                // and a spurious return just re-polls the ring.
+                std::thread::park();
             }
         }
     }

@@ -28,6 +28,30 @@ pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
         .collect()
 }
 
+/// Borrow a little-endian f32 byte buffer as `&[f32]` without copying.
+/// `None` when the borrow would be unsound or wrong: length not a
+/// multiple of 4, pointer not 4-byte aligned (heap `Vec<u8>` alignment
+/// is not guaranteed), or a big-endian target (the bytes are LE on the
+/// wire, so a cast would mis-read them).  Callers fall back to
+/// [`bytes_to_f32`] — same values, one copy.
+pub fn cast_f32_slice(bytes: &[u8]) -> Option<&[f32]> {
+    if cfg!(target_endian = "big") {
+        return None;
+    }
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    let ptr = bytes.as_ptr();
+    if (ptr as usize) % std::mem::align_of::<f32>() != 0 {
+        return None;
+    }
+    // SAFETY: length and alignment checked above; f32 has no invalid
+    // bit patterns; the borrow inherits `bytes`' lifetime, and u8 -> f32
+    // reinterpretation on a little-endian target matches the buffer's
+    // declared LE layout.
+    Some(unsafe { std::slice::from_raw_parts(ptr as *const f32, bytes.len() / 4) })
+}
+
 pub fn f32_to_bytes(vals: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(vals.len() * 4);
     for v in vals {
@@ -49,6 +73,25 @@ mod tests {
     fn roundtrip_f32_bytes() {
         let vals = vec![0.0f32, -1.5, 3.25, f32::MAX, f32::MIN_POSITIVE];
         assert_eq!(bytes_to_f32(&f32_to_bytes(&vals)), vals);
+    }
+
+    #[test]
+    fn cast_f32_slice_borrows_aligned_buffers() {
+        let vals = vec![1.0f32, -2.5, 0.25];
+        let bytes = f32_to_bytes(&vals);
+        if let Some(s) = cast_f32_slice(&bytes) {
+            assert_eq!(s, &vals[..], "borrowed view reads the same values");
+            assert_eq!(s.as_ptr() as usize, bytes.as_ptr() as usize, "no copy");
+        }
+        // Ragged length never borrows.
+        assert!(cast_f32_slice(&bytes[..5]).is_none());
+        // A deliberately misaligned view falls back (offset by 1 byte
+        // from a 4-aligned base is never 4-aligned).
+        if bytes.as_ptr() as usize % 4 == 0 {
+            assert!(cast_f32_slice(&bytes[1..9]).is_none());
+        }
+        // Fallback agrees with the decoding path bit-for-bit.
+        assert_eq!(bytes_to_f32(&bytes), vals);
     }
 
     #[test]

@@ -38,10 +38,11 @@ pub struct BoxDecodeKernel {
 impl ActorKernel for BoxDecodeKernel {
     fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
         anyhow::ensure!(inputs.len() >= 2, "box_decode needs priors + locs");
-        let locs = inputs[inputs.len() - 1][0].as_f32();
+        // Read-only tensors borrow (zero-copy) when aligned.
+        let locs = inputs[inputs.len() - 1][0].to_f32();
         let mut anchors = Vec::with_capacity(locs.len());
         for port in &inputs[..inputs.len() - 1] {
-            anchors.extend(port[0].as_f32());
+            anchors.extend_from_slice(&port[0].to_f32());
         }
         anyhow::ensure!(
             anchors.len() == locs.len(),
@@ -78,8 +79,8 @@ impl NmsKernel {
 
 impl ActorKernel for NmsKernel {
     fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
-        let scores = inputs[0][0].as_f32();
-        let boxes = inputs[1][0].as_f32();
+        let scores = inputs[0][0].to_f32();
+        let boxes = inputs[1][0].to_f32();
         let dets = nms(
             &scores,
             &boxes,

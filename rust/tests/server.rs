@@ -12,16 +12,18 @@
 //!   full server kill + restart is absorbed by local fallback with a
 //!   session-level availability metric exported.
 
+use edge_prune::platform::procinfo::ensure_fd_headroom;
 use edge_prune::runtime::health::HealthConfig;
 use edge_prune::runtime::netsim::LinkModel;
 use edge_prune::server::failover::{FailoverClient, FailoverConfig};
-use edge_prune::server::loadgen::{run_loadgen, LoadgenConfig};
+use edge_prune::server::loadgen::{run_loadgen, run_session_wave, LoadgenConfig, WaveConfig};
 use edge_prune::server::model::{client_prepare, expected_digest, make_input};
 use edge_prune::server::protocol::{
-    read_handshake_reply, read_response, write_frame, write_handshake, write_request, Handshake,
-    ReqKind, RespStatus, Resume,
+    encode_frame, encode_handshake, read_handshake_reply, read_response, write_frame,
+    write_handshake, write_request, Handshake, ReqKind, RespStatus, Resume,
 };
 use edge_prune::server::{Server, ServerConfig};
+use std::io::Write;
 use std::net::TcpStream;
 use std::time::Duration;
 
@@ -432,6 +434,209 @@ fn server_kill_and_restart_loses_zero_inferences() {
 
     let metrics = server_b.shutdown();
     assert!(metrics.get("requests_completed").unwrap().int().unwrap() >= 10);
+}
+
+/// Reactor partial-delivery: a handshake dribbled in one byte at a
+/// time, then an inference frame split at awkward boundaries (header
+/// byte-by-byte, payload in ragged chunks) — the resumable codecs must
+/// reassemble both and the response must verify.
+#[test]
+fn one_byte_writes_reassemble_into_frames() {
+    let server = Server::start(test_cfg()).unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.set_nodelay(true).unwrap();
+    let hs_bytes = encode_handshake(&Handshake {
+        model: "synthetic".into(),
+        pp: 2,
+        client_id: "dribble".into(),
+        resume: None,
+    })
+    .unwrap();
+    for b in &hs_bytes {
+        s.write_all(&[*b]).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let reply = read_handshake_reply(&mut s).unwrap();
+    assert!(reply.accepted, "{}", reply.message);
+
+    let input = make_input(77);
+    let frame = encode_frame(1, ReqKind::Infer, &client_prepare(&input, 2)).unwrap();
+    // Header one byte at a time...
+    for b in &frame[..13] {
+        s.write_all(&[*b]).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // ...then the payload in three ragged chunks.
+    let body = &frame[13..];
+    let cuts = [body.len() / 3, 2 * body.len() / 3, body.len()];
+    let mut start = 0;
+    for cut in cuts {
+        s.write_all(&body[start..cut]).unwrap();
+        start = cut;
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.req_id, 1);
+    assert_eq!(resp.status, RespStatus::Ok);
+    assert_eq!(resp.body, expected_digest(&input));
+    write_frame(&mut s, 2, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 1);
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// Slow-reader backpressure: a RECONNECT whose attach replays a full
+/// retransmit ring queues more bytes than the (deliberately tiny)
+/// write high-water mark in one burst, so the reactor must pause that
+/// connection's reads and resume once the backlog drains — observable
+/// as the `read_pauses` counter, with every replayed byte intact.
+#[test]
+fn replay_burst_crosses_high_water_and_pauses_reads() {
+    let server = Server::start(ServerConfig {
+        write_high_water: 4096, // ~64 retained responses far exceed this
+        ..test_cfg()
+    })
+    .unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut s,
+        &Handshake { model: "synthetic".into(), pp: 2, client_id: "slow".into(), resume: None },
+    )
+    .unwrap();
+    let hs = read_handshake_reply(&mut s).unwrap();
+    assert!(hs.accepted);
+    // Fill the replay ring past capacity (64): the newest 64 retained.
+    for seq in 1..=70u64 {
+        let input = make_input(seq);
+        write_request(&mut s, seq, &client_prepare(&input, 2)).unwrap();
+        let resp = read_response(&mut s).unwrap().unwrap();
+        assert_eq!(resp.body, expected_digest(&make_input(seq)));
+    }
+    // Abrupt cut, then a RECONNECT acknowledging nothing: the server
+    // replays all 64 retained responses in one attach burst.
+    s.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(s);
+    std::thread::sleep(Duration::from_millis(50));
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut s,
+        &Handshake {
+            model: "synthetic".into(),
+            pp: 2,
+            client_id: "slow".into(),
+            resume: Some(Resume { session_id: hs.session_id, token: hs.token, last_ack: 0 }),
+        },
+    )
+    .unwrap();
+    let reply = read_handshake_reply(&mut s).unwrap();
+    assert!(reply.accepted && reply.resumed, "{}", reply.message);
+    // Ring capacity 64 kept seqs 7..=70, replayed in order.
+    for seq in 7..=70u64 {
+        let resp = read_response(&mut s).unwrap().unwrap();
+        assert_eq!(resp.req_id, seq, "replay order");
+        assert_eq!(resp.body, expected_digest(&make_input(seq)), "replay bytes intact");
+    }
+    write_frame(&mut s, 71, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+    let metrics = server.shutdown();
+    assert!(
+        metrics.get("read_pauses").unwrap().int().unwrap() >= 1,
+        "the 9 KiB replay burst must cross the 4 KiB high-water mark"
+    );
+    assert!(metrics.get("responses_replayed").unwrap().int().unwrap() >= 64);
+    // Exactly-once: 70 executions despite 64 redeliveries.
+    assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 70);
+}
+
+/// A disconnect in the middle of a frame (header half-sent) is link
+/// loss, not corruption: the session detaches with its replay state
+/// intact and a RECONNECT carries on with fresh work.
+#[test]
+fn mid_frame_disconnect_detaches_not_corrupts() {
+    let server = Server::start(test_cfg()).unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut s,
+        &Handshake { model: "synthetic".into(), pp: 2, client_id: "torn".into(), resume: None },
+    )
+    .unwrap();
+    let hs = read_handshake_reply(&mut s).unwrap();
+    assert!(hs.accepted);
+    // One complete inference first, so the session has state worth
+    // corrupting.
+    let input = make_input(5);
+    write_request(&mut s, 1, &client_prepare(&input, 2)).unwrap();
+    assert_eq!(read_response(&mut s).unwrap().unwrap().body, expected_digest(&input));
+    // Half a frame header, then a hard cut.
+    let frame = encode_frame(2, ReqKind::Infer, &client_prepare(&make_input(6), 2)).unwrap();
+    s.write_all(&frame[..7]).unwrap();
+    s.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(s);
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(server.detached_sessions(), 1, "torn frame detached, did not close");
+    // RECONNECT: the half-frame is gone with its connection; new work
+    // (reusing the seq the torn frame never delivered) runs cleanly.
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut s,
+        &Handshake {
+            model: "synthetic".into(),
+            pp: 2,
+            client_id: "torn".into(),
+            resume: Some(Resume { session_id: hs.session_id, token: hs.token, last_ack: 1 }),
+        },
+    )
+    .unwrap();
+    let reply = read_handshake_reply(&mut s).unwrap();
+    assert!(reply.accepted && reply.resumed, "{}", reply.message);
+    let input = make_input(6);
+    write_request(&mut s, 2, &client_prepare(&input, 2)).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.req_id, 2);
+    assert_eq!(resp.body, expected_digest(&input));
+    write_frame(&mut s, 3, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.get("sessions_detached").unwrap().int().unwrap(), 1);
+    assert_eq!(metrics.get("sessions_resumed").unwrap().int().unwrap(), 1);
+    assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 2);
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// The per-session thread ceiling is gone: one reactor holds 512
+/// concurrent sessions (fd limit permitting — scaled down only if the
+/// environment refuses the headroom) on a fixed thread inventory, with
+/// every response verified and zero losses.
+#[test]
+fn accept_smoke_512_concurrent_sessions_fixed_threads() {
+    // 512 server + 512 client fds in one process, plus slack.
+    let headroom = ensure_fd_headroom(2048).unwrap();
+    let sessions = if headroom >= 1300 { 512 } else { 128 };
+    let server = Server::start(ServerConfig {
+        max_sessions: sessions + 8,
+        max_queue: 4096,
+        ..test_cfg()
+    })
+    .unwrap();
+    assert_eq!(server.thread_count(), 6, "reactor + dispatcher + 4 workers, session-invariant");
+    let report = run_session_wave(&WaveConfig {
+        addr: server.addr().to_string(),
+        sessions,
+        rounds: 2,
+        pp: 2,
+        seed: 31,
+    })
+    .unwrap();
+    assert_eq!(report.ok, sessions as u64 * 2, "every inference verified");
+    assert_eq!(report.errors, 0);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.get("sessions_admitted").unwrap().int().unwrap(), sessions as i64);
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+    assert_eq!(
+        metrics.get("requests_completed").unwrap().int().unwrap(),
+        sessions as i64 * 2
+    );
 }
 
 /// Detached sessions hold their slot only for the linger window; the

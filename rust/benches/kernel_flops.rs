@@ -1,0 +1,159 @@
+//! Kernel GFLOP/s bench for the CPU tensor compute backend: blocked
+//! parallel GEMM vs the cache-naive reference at 256^3, an
+//! SSD-Mobilenet-shaped conv (im2col + GEMM) and depthwise conv, each
+//! at 1 / 2 / 4 workers.  Emits `BENCH_kernel_flops.json`.
+//!
+//! CI smoke assertions (see EXPERIMENTS.md "Kernel GFLOP/s" for the
+//! methodology):
+//! * blocked single-thread GEMM >= `EP_MIN_SPEEDUP`x naive (default 3)
+//! * with >= 4 cores, 4-worker GEMM >= `EP_MIN_SCALING`x single-worker
+//!   (default 1.3; 0 disables — CI runners advertise hyperthreads as
+//!   cores, so the floor is tunable without editing the bench)
+//!
+//! Knobs: EP_GEMM_N (default 256), EP_ITERS (timed reps, default 5),
+//! EP_MIN_SPEEDUP, EP_MIN_SCALING, EP_PIN (pin workers, default 0).
+
+use edge_prune::benchkit::{env_or, header, stats, time_iters};
+use edge_prune::platform::affinity::core_count;
+use edge_prune::runtime::linalg::{
+    conv2d, dwconv2d, gemm, gemm_flops, gemm_naive, Conv2dSpec, ConvScratch, GemmScratch,
+};
+use edge_prune::util::json::Json;
+use edge_prune::util::rng::Rng;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect()
+}
+
+fn gflops_of(flops: u64, ms_per_iter: f64) -> f64 {
+    flops as f64 / (ms_per_iter * 1e6)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = env_or("EP_GEMM_N", 256usize);
+    let iters: usize = env_or("EP_ITERS", 5usize);
+    let min_speedup: f64 = env_or("EP_MIN_SPEEDUP", 3.0f64);
+    let min_scaling: f64 = env_or("EP_MIN_SCALING", 1.3f64);
+    let pin: bool = env_or("EP_PIN", 0usize) != 0;
+    let workers_tiers = [1usize, 2, 4];
+    let cores = core_count();
+
+    header(&format!("kernel GFLOP/s (GEMM {n}^3, conv, depthwise; {cores} cores)"));
+    println!("{:<26} {:>8} {:>10} {:>10}", "kernel", "workers", "ms/iter", "GFLOP/s");
+
+    let mut rng = Rng::new(7);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut push_row = |kernel: &str, workers: usize, ms: f64, flops: u64| -> f64 {
+        let gf = gflops_of(flops, ms);
+        println!("{kernel:<26} {workers:>8} {ms:>10.2} {gf:>10.2}");
+        rows.push(Json::from_pairs(vec![
+            ("kernel", Json::from(kernel)),
+            ("workers", Json::from(workers)),
+            ("ms_per_iter", Json::from(ms)),
+            ("gflops", Json::from(gf)),
+        ]));
+        gf
+    };
+
+    // ---- GEMM n^3: naive baseline, then blocked at each worker tier.
+    let a = randv(&mut rng, n * n);
+    let b = randv(&mut rng, n * n);
+    let mut c = vec![0.0f32; n * n];
+    let flops = gemm_flops(n, n, n);
+
+    let naive_ms = stats(&time_iters(1, iters, || gemm_naive(n, n, n, &a, &b, &mut c))).p50;
+    let naive_gf = push_row("gemm_naive", 1, naive_ms, flops);
+
+    let mut gemm_gf = Vec::new();
+    for &w in &workers_tiers {
+        let mut scratch = GemmScratch::new();
+        let ms =
+            stats(&time_iters(1, iters, || gemm(n, n, n, &a, &b, &mut c, w, pin, &mut scratch)))
+                .p50;
+        gemm_gf.push(push_row("gemm_blocked", w, ms, flops));
+    }
+
+    // ---- Conv: an SSD-Mobilenet middle shape (28x28x128, 3x3 same).
+    let conv = Conv2dSpec {
+        h: 28,
+        w: 28,
+        c_in: 128,
+        c_out: 128,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+        relu: true,
+    };
+    let x = randv(&mut rng, conv.in_len());
+    let wt = randv(&mut rng, conv.patch() * conv.c_out);
+    let bias = randv(&mut rng, conv.c_out);
+    let mut y = vec![0.0f32; conv.out_len()];
+    for &w in &workers_tiers {
+        let mut scratch = ConvScratch::new();
+        let ms = stats(&time_iters(1, iters, || {
+            conv2d(&conv, &x, &wt, Some(&bias), &mut y, &mut scratch, w)
+        }))
+        .p50;
+        push_row("conv2d_im2col", w, ms, conv.flops());
+    }
+
+    // ---- Depthwise: the SSD-Mobilenet dw shape (56x56x128, 3x3 same).
+    let dw = Conv2dSpec {
+        h: 56,
+        w: 56,
+        c_in: 128,
+        c_out: 128,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+        relu: true,
+    };
+    let dx = randv(&mut rng, dw.in_len());
+    let dwt = randv(&mut rng, dw.kh * dw.kw * dw.c_in);
+    let mut dy = vec![0.0f32; dw.out_len()];
+    // Depthwise FLOPs: 2 * OH * OW * KH * KW * C (one MAC per tap/channel).
+    let dw_flops = 2 * (dw.out_h() * dw.out_w() * dw.kh * dw.kw * dw.c_in) as u64;
+    for &w in &workers_tiers {
+        let ms = stats(&time_iters(1, iters, || {
+            dwconv2d(&dw, &dx, &dwt, Some(&bias), &mut dy, w)
+        }))
+        .p50;
+        push_row("dwconv2d_direct", w, ms, dw_flops);
+    }
+
+    let speedup = gemm_gf[0] / naive_gf.max(1e-9);
+    let scaling = gemm_gf[gemm_gf.len() - 1] / gemm_gf[0].max(1e-9);
+    println!(
+        "blocked/naive speedup: {speedup:.2}x (floor {min_speedup}x); \
+         4-worker scaling: {scaling:.2}x"
+    );
+
+    let out = Json::from_pairs(vec![
+        ("bench", Json::from("kernel_flops")),
+        ("gemm_n", Json::from(n)),
+        ("iters", Json::from(iters)),
+        ("cores", Json::from(cores)),
+        ("blocked_over_naive", Json::from(speedup)),
+        ("four_worker_scaling", Json::from(scaling)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_kernel_flops.json", format!("{out}\n"))?;
+    println!("wrote BENCH_kernel_flops.json");
+
+    anyhow::ensure!(
+        speedup >= min_speedup,
+        "blocked GEMM only {speedup:.2}x naive (floor {min_speedup}x)"
+    );
+    // Worker scaling needs real cores; skip the assert on small hosts
+    // (the JSON still records the measured curve).
+    if cores >= 4 && min_scaling > 0.0 {
+        anyhow::ensure!(
+            scaling >= min_scaling,
+            "4-worker GEMM only {scaling:.2}x single-worker on {cores} cores \
+             (floor {min_scaling}x)"
+        );
+    }
+    Ok(())
+}

@@ -142,7 +142,7 @@ fn ablation_capacity(manifest: &Manifest) {
     let svc = XlaService::spawn(&manifest.root, meta, Variant::Jnp).unwrap();
     for cap in [1usize, 2, 4, 8] {
         let graph = build_graph(meta, cap).unwrap();
-        let opts = KernelOptions { frames: 12, seed: 1, keep_last: false };
+        let opts = KernelOptions { frames: 12, seed: 1, keep_last: false, ..Default::default() };
         let (kernels, _) = make_kernels(meta, &graph, &svc, &opts).unwrap();
         let engine = Engine::new(graph, DeviceModel::native("host")).unwrap();
         let report = engine.run(kernels).unwrap();

@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
             Ok((d.to_string(), XlaService::spawn(&manifest.root, &meta, Variant::Jnp)?))
         })
         .collect::<anyhow::Result<_>>()?;
-    let opts = KernelOptions { frames, seed: 13, keep_last: false };
+    let opts = KernelOptions { frames, seed: 13, keep_last: false, ..Default::default() };
     let reports = run_deployment(&plan, &meta, &services, &devices, &opts)?;
 
     header("Sec IV.C paper-vs-measured");

@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     let mut srv = Vec::new();
     for rep in 0..repeats {
         let plan = compile(&graph, &pg, &mapping, 28_000 + rep as u16 * 50)?;
-        let opts = KernelOptions { frames: 1, seed: 70 + rep as u64, keep_last: false };
+        let opts = KernelOptions { frames: 1, seed: 70 + rep as u64, keep_last: false, ..Default::default() };
         let reports = run_deployment(&plan, &meta, &services, &devices, &opts)?;
         e2e.push(reports["n2"].wall.as_secs_f64() * 1e3 / time_scale);
         let busy = |r: &edge_prune::runtime::metrics::RunReport, names: &[&str]| {

@@ -24,4 +24,4 @@ pub mod token;
 pub use actor::{ActorId, ActorKind, ActorSpec};
 pub use graph::{AppGraph, EdgeId, EdgeSpec, GraphError, PortRef};
 pub use rates::RateSpec;
-pub use token::Token;
+pub use token::{PoolStats, Token, TokenPool};

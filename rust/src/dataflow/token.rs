@@ -2,8 +2,15 @@
 //! machine-learning context a token is a tensor of intermediate features.
 //! The payload is reference-counted so branch edges (SSD's six head taps)
 //! broadcast without copying.
+//!
+//! [`TokenPool`] closes the allocation loop: consumed tokens whose
+//! payload is no longer shared are reclaimed through `Arc::try_unwrap`
+//! and their buffers handed back to producing kernels, so a pipeline in
+//! steady state circulates a fixed set of buffers instead of allocating
+//! one per firing.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 #[derive(Debug, Clone)]
 pub struct Token {
@@ -57,6 +64,134 @@ impl Token {
     }
 }
 
+// ------------------------------------------------------------------ pool
+
+/// Running tallies of a pool's effectiveness (all monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take` satisfied from a recycled buffer.
+    pub hits: u64,
+    /// `take` had to hand out a fresh (empty) buffer.
+    pub misses: u64,
+    /// Buffers returned to the pool.
+    pub recycled: u64,
+    /// Tokens offered back whose payload was still shared (broadcast
+    /// edges) — dropped, not pooled.
+    pub shared_drops: u64,
+}
+
+struct PoolInner {
+    free: Mutex<Vec<Vec<u8>>>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+    shared_drops: AtomicU64,
+}
+
+/// Shared, bounded free-list of token payload buffers.  Clones share
+/// the same pool; a capacity of 0 disables pooling (`take` always
+/// allocates, `recycle` always drops).
+#[derive(Clone)]
+pub struct TokenPool {
+    inner: Arc<PoolInner>,
+}
+
+impl std::fmt::Debug for TokenPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("TokenPool").field("cap", &self.inner.cap).field("stats", &s).finish()
+    }
+}
+
+impl TokenPool {
+    pub fn new(cap: usize) -> Self {
+        TokenPool {
+            inner: Arc::new(PoolInner {
+                // Pre-sized so steady-state recycle never grows the list.
+                free: Mutex::new(Vec::with_capacity(cap)),
+                cap,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+                shared_drops: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A pool that never retains anything (plain allocation semantics).
+    pub fn disabled() -> Self {
+        TokenPool::new(0)
+    }
+
+    /// An empty buffer with at least `len` bytes of capacity: recycled
+    /// when one *fits*, freshly allocated otherwise.  The capacity
+    /// match matters for graphs with heterogeneous token sizes (SSD
+    /// mixes 16-byte shape descriptors with multi-hundred-KB
+    /// activations): handing a tiny recycled buffer to a large
+    /// producer would just reallocate it, while burning the tiny
+    /// buffer's slot — so undersized buffers stay pooled for takers
+    /// they fit.
+    pub fn take(&self, len: usize) -> Vec<u8> {
+        let recycled = {
+            let mut free = self.inner.free.lock().unwrap();
+            // Newest-first scan; swap_remove keeps the pop O(1).
+            free.iter()
+                .rposition(|b| b.capacity() >= len)
+                .map(|i| free.swap_remove(i))
+        };
+        let mut buf = match recycled {
+            Some(b) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(len)
+            }
+        };
+        buf.clear();
+        buf
+    }
+
+    /// Reclaim a consumed token's payload.  Succeeds only when this was
+    /// the last reference (clones on branch edges keep it alive) and
+    /// the pool has room.
+    pub fn recycle(&self, token: Token) -> bool {
+        match Arc::try_unwrap(token.data) {
+            Ok(buf) => self.recycle_buf(buf),
+            Err(_) => {
+                self.inner.shared_drops.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Return a raw buffer to the pool (dropped when full or disabled).
+    pub fn recycle_buf(&self, buf: Vec<u8>) -> bool {
+        if self.inner.cap == 0 {
+            return false;
+        }
+        let mut free = self.inner.free.lock().unwrap();
+        if free.len() >= self.inner.cap {
+            return false;
+        }
+        free.push(buf);
+        drop(free);
+        self.inner.recycled.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            recycled: self.inner.recycled.load(Ordering::Relaxed),
+            shared_drops: self.inner.shared_drops.load(Ordering::Relaxed),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +224,58 @@ mod tests {
         // Ragged payloads never produce a borrowed view.
         let ragged = Token::new(vec![1, 2, 3], 0);
         assert!(ragged.as_f32_slice().is_none());
+    }
+
+    #[test]
+    fn pool_recycles_unshared_tokens() {
+        let pool = TokenPool::new(4);
+        let t = Token::new(Vec::with_capacity(64), 0);
+        assert!(pool.recycle(t));
+        let buf = pool.take(16);
+        assert!(buf.capacity() >= 64, "recycled buffer keeps its capacity");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.recycled), (1, 0, 1));
+    }
+
+    #[test]
+    fn pool_drops_shared_tokens() {
+        let pool = TokenPool::new(4);
+        let t = Token::new(vec![1, 2, 3], 0);
+        let _broadcast_clone = t.clone();
+        assert!(!pool.recycle(t), "shared payloads cannot be reclaimed");
+        assert_eq!(pool.stats().shared_drops, 1);
+    }
+
+    #[test]
+    fn take_matches_by_capacity_not_lifo() {
+        let pool = TokenPool::new(4);
+        assert!(pool.recycle_buf(Vec::with_capacity(8)));
+        // A big take must not burn the small buffer on a realloc...
+        let big = pool.take(1024);
+        assert!(big.capacity() >= 1024);
+        assert_eq!(pool.stats().misses, 1, "small buffer left pooled");
+        // ...so a later small take still hits it.
+        let small = pool.take(4);
+        assert!(small.capacity() >= 8);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn pool_respects_capacity_and_disabled() {
+        let pool = TokenPool::new(1);
+        assert!(pool.recycle_buf(vec![1]));
+        assert!(!pool.recycle_buf(vec![2]), "full pool drops");
+        let off = TokenPool::disabled();
+        assert!(!off.recycle_buf(vec![3]));
+        assert!(off.take(8).is_empty());
+        assert_eq!(off.stats().misses, 1);
+    }
+
+    #[test]
+    fn pool_clones_share_buffers() {
+        let a = TokenPool::new(4);
+        let b = a.clone();
+        assert!(a.recycle_buf(Vec::with_capacity(32)));
+        assert!(b.take(8).capacity() >= 32);
     }
 }

@@ -198,7 +198,7 @@ pub fn sweep(manifest: &Manifest, cfg: &SweepConfig) -> Result<SweepReport> {
     .into_iter()
     .collect();
 
-    let opts = KernelOptions { frames: cfg.frames, seed: cfg.seed, keep_last: false };
+    let opts = KernelOptions { frames: cfg.frames, seed: cfg.seed, keep_last: false, ..Default::default() };
     let mut results = Vec::new();
     for (i, &pp) in cfg.pps.iter().enumerate() {
         if pp == 0 || pp > order.len() {

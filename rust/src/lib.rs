@@ -4,9 +4,13 @@
 //! three-layer Rust + JAX + Pallas stack.  This crate is the Layer-3
 //! framework: the VR-PRUNE dataflow model of computation, the graph
 //! analyzer, the compiler/synthesizer (automatic TX/RX FIFO insertion),
-//! the thread-per-actor runtime with TCP transmit/receive FIFOs, the
-//! partition-point Explorer, the PJRT bridge that executes the
-//! AOT-compiled per-actor HLO executables produced by `python/compile`,
+//! the thread-per-actor runtime with TCP transmit/receive FIFOs, a
+//! dependency-free CPU tensor compute backend (`runtime::linalg`:
+//! cache-blocked parallel GEMM, im2col conv2d, direct depthwise conv —
+//! DNN actors execute real arithmetic, with the device cost model
+//! padding only the calibration residual), the partition-point
+//! Explorer, the PJRT bridge that executes the AOT-compiled per-actor
+//! HLO executables produced by `python/compile`,
 //! and the multi-tenant edge inference server (`server`): an
 //! event-driven core (one epoll reactor + timer wheel,
 //! `runtime::reactor` / `server::conn`, no per-session threads),

@@ -38,10 +38,12 @@ const USAGE: &str = "\
 edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
   common: --model vehicle|ssd|vehicle_dual  --artifacts DIR  --configs FILE
   run:     --device NAME --frames N --variant jnp|pallas --time-scale S
+           --no-pad (raw kernel speed: skip cost-model residual padding)
+           --kernel-threads N (row-split workers inside each DNN kernel)
   compile: --endpoint NAME --server NAME --link NAME --pp K --base-port P
   explore: --endpoint NAME --server NAME --link NAME --pps 1,2,3 --frames N
-           --time-scale S --json
-  worker:  --role endpoint|server --pp K (+ compile flags)
+           --time-scale S --json --no-pad
+  worker:  --role endpoint|server --pp K --no-pad (+ compile flags)
   serve:   --port P --bind HOST --max-sessions N --max-queue N --max-batch N
            --batch-linger-us US --workers N --no-pin --idle-timeout SECS
            --detach-linger SECS --replay-ring N --write-high-water BYTES
@@ -163,11 +165,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         name => cfgs.device(name, &meta.name)?,
     };
     device.time_scale = scale;
+    // Real compute first; the cost table only pads the residual — and
+    // --no-pad drops even that, measuring raw kernel speed.
+    device.padding = !args.bool_flag("no-pad");
     let svc = XlaService::spawn(&m.root, &meta, variant(args)?)?;
     let opts = KernelOptions {
         frames: args.usize_or("frames", 16)? as u64,
         seed: args.usize_or("seed", 7)? as u64,
         keep_last: true,
+        threads: args.usize_or("kernel-threads", 1)?,
+        ..Default::default()
     };
     let report = run_local(&meta, &svc, device, &opts)?;
     println!(
@@ -188,8 +195,9 @@ fn cmd_explore(args: &Args) -> Result<()> {
     let m = manifest(args)?;
     let cfgs = configs(args)?;
     let meta = model_meta(args, &m)?;
-    let endpoint = cfgs.device(args.str_or("endpoint", "n2"), &meta.name)?;
-    let server = cfgs.device(args.str_or("server", "i7"), &meta.name)?;
+    let pad = !args.bool_flag("no-pad");
+    let endpoint = cfgs.device(args.str_or("endpoint", "n2"), &meta.name)?.with_padding(pad);
+    let server = cfgs.device(args.str_or("server", "i7"), &meta.name)?.with_padding(pad);
     let link = cfgs.link(args.str_or("link", "n2_i7_eth"))?;
     let g = build_graph(&meta, DEFAULT_CAPACITY)?;
     let n = g.actors.len();
@@ -328,6 +336,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         r => bail!("--role must be endpoint|server, got {r}"),
     };
     device.time_scale = time_scale;
+    device.padding = !args.bool_flag("no-pad");
     let dp = plan
         .per_device
         .get(&device.name)
@@ -345,6 +354,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         frames: args.usize_or("frames", 16)? as u64,
         seed: args.usize_or("seed", 7)? as u64,
         keep_last: false,
+        threads: args.usize_or("kernel-threads", 1)?,
+        ..Default::default()
     };
     let report = run_device(dp, &meta, &svc, device, listeners, &opts)?;
     println!(

@@ -6,7 +6,6 @@ use crate::runtime::device::DeviceModel;
 use crate::runtime::netsim::LinkModel;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]
@@ -48,14 +47,9 @@ impl Configs {
             .get("devices")?
             .opt(name)
             .ok_or_else(|| anyhow!("device {name} not in configs"))?;
-        let mut dev = DeviceModel {
-            name: name.to_string(),
-            cost_ms: BTreeMap::new(),
-            gflops: d.opt("gflops").map(|j| j.num()).transpose()?.unwrap_or(0.0),
-            cores: d.opt("cores").map(|j| j.usize()).transpose()?.unwrap_or(8),
-            accel_slots: d.opt("accel_slots").map(|j| j.usize()).transpose()?.unwrap_or(1),
-            time_scale: 1.0,
-        };
+        // Shared field parsing; only the nested per-model cost table
+        // is schema-specific here.
+        let mut dev = DeviceModel::base_from_json(name, d)?;
         if let Some(tables) = d.opt("cost_ms") {
             if let Some(table) = tables.opt(model) {
                 for (k, v) in table.obj()? {

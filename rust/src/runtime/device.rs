@@ -33,6 +33,11 @@ pub struct DeviceModel {
     pub accel_slots: usize,
     /// Global time scale applied to all targets (bench fast-runs).
     pub time_scale: f64,
+    /// Pad firings up to the cost-model target (sleep the residual
+    /// after the real kernel ran).  Since actors execute real compute,
+    /// the cost table is calibration-only; `false` (CLI `--no-pad`)
+    /// disables padding entirely and measures raw kernel speed.
+    pub padding: bool,
 }
 
 impl DeviceModel {
@@ -45,11 +50,18 @@ impl DeviceModel {
             cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8),
             accel_slots: usize::MAX / 2, // native host: no accelerator model
             time_scale: 1.0,
+            padding: true,
         }
     }
 
     pub fn with_cost(mut self, actor: &str, ms: f64) -> Self {
         self.cost_ms.insert(actor.to_string(), ms);
+        self
+    }
+
+    /// Toggle residual cost padding (CLI `--no-pad`).
+    pub fn with_padding(mut self, on: bool) -> Self {
+        self.padding = on;
         self
     }
 
@@ -65,22 +77,31 @@ impl DeviceModel {
         base * self.time_scale
     }
 
-    /// Parse from the configs/platforms.json schema.
-    pub fn from_json(name: &str, v: &Json) -> anyhow::Result<Self> {
-        let mut cost_ms = BTreeMap::new();
-        if let Some(tbl) = v.opt("cost_ms") {
-            for (k, val) in tbl.obj()? {
-                cost_ms.insert(k.clone(), val.num()?);
-            }
-        }
+    /// Parse every field except the cost table — shared by
+    /// [`DeviceModel::from_json`] (flat `cost_ms` map) and the platform
+    /// configs loader (per-model nested `cost_ms` tables), so a new
+    /// field added here reaches both schemas.
+    pub fn base_from_json(name: &str, v: &Json) -> anyhow::Result<Self> {
         Ok(DeviceModel {
             name: name.to_string(),
-            cost_ms,
+            cost_ms: BTreeMap::new(),
             gflops: v.opt("gflops").map(|j| j.num()).transpose()?.unwrap_or(0.0),
             cores: v.opt("cores").map(|j| j.usize()).transpose()?.unwrap_or(8),
             accel_slots: v.opt("accel_slots").map(|j| j.usize()).transpose()?.unwrap_or(1),
             time_scale: 1.0,
+            padding: v.opt("padding").map(|j| j.bool()).transpose()?.unwrap_or(true),
         })
+    }
+
+    /// Parse from a flat `cost_ms` schema (`{"actor": ms, ...}`).
+    pub fn from_json(name: &str, v: &Json) -> anyhow::Result<Self> {
+        let mut d = Self::base_from_json(name, v)?;
+        if let Some(tbl) = v.opt("cost_ms") {
+            for (k, val) in tbl.obj()? {
+                d.cost_ms.insert(k.clone(), val.num()?);
+            }
+        }
+        Ok(d)
     }
 }
 
@@ -143,6 +164,7 @@ mod tests {
             cores: 6,
             accel_slots: 1,
             time_scale: 1.0,
+            padding: true,
         };
         assert_eq!(d.target_ms("l1", 1_000_000_000), 6.2);
         // Fallback: 1 GFLOP at 10 GFLOP/s = 100 ms.
@@ -173,6 +195,15 @@ mod tests {
         assert_eq!(d.cores, 1);
         assert_eq!(d.target_ms("l1", 0), 123.0);
         assert!(d.gflops > 0.0);
+    }
+
+    #[test]
+    fn padding_flag_parses_and_toggles() {
+        let j = Json::parse(r#"{"cores": 2, "padding": false}"#).unwrap();
+        assert!(!DeviceModel::from_json("x", &j).unwrap().padding);
+        let d = DeviceModel::native("y");
+        assert!(d.padding, "padding defaults on");
+        assert!(!d.with_padding(false).padding);
     }
 
     #[test]

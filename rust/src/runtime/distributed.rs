@@ -91,6 +91,7 @@ pub fn run_device(
     let device = expand_cost_table(&device, &plan.graph);
     let mut engine = Engine::new(plan.graph.clone(), device)?;
     engine.set_flops(flops_for_plan(meta, &plan.graph));
+    engine.set_token_pool(opts.pool.clone());
     engine.run(kernels)
 }
 
@@ -189,7 +190,7 @@ mod tests {
             .iter()
             .map(|d| (d.to_string(), DeviceModel::native(d)))
             .collect();
-        let opts = KernelOptions { frames: 3, seed: 2, keep_last: false };
+        let opts = KernelOptions { frames: 3, seed: 2, keep_last: false, ..Default::default() };
         let reports = run_deployment(&plan, &meta, &services, &devices, &opts).unwrap();
         assert_eq!(reports.len(), 2);
         // Endpoint processed 3 frames through l2 + its TX FIFO.
@@ -210,7 +211,7 @@ mod tests {
 
         // Local run, keep the final token.
         let graph = build_graph(&meta, 4).unwrap();
-        let opts = KernelOptions { frames: 1, seed: 99, keep_last: true };
+        let opts = KernelOptions { frames: 1, seed: 99, keep_last: true, ..Default::default() };
         let (kernels, _) = make_kernels(&meta, &graph, &svc, &opts).unwrap();
         let engine = Engine::new(graph.clone(), DeviceModel::native("host")).unwrap();
         let _local = engine.run(kernels).unwrap();
@@ -272,7 +273,7 @@ mod tests {
                 .iter()
                 .map(|d| (d.to_string(), DeviceModel::native(d)))
                 .collect();
-            let opts = KernelOptions { frames: 4, seed: 3, keep_last: false };
+            let opts = KernelOptions { frames: 4, seed: 3, keep_last: false, ..Default::default() };
             let reports = run_deployment(&plan, &meta, &services, &devices, &opts).unwrap();
             reports["e"].ms_per_frame()
         };

@@ -9,7 +9,7 @@
 //! semaphore + per-actor cost padding (see `device.rs`); end-of-stream
 //! propagates by closing FIFOs in both directions.
 
-use crate::dataflow::{AppGraph, EdgeId, Token};
+use crate::dataflow::{AppGraph, EdgeId, Token, TokenPool};
 use crate::runtime::device::{pad_to_target, CoreSet, DeviceModel};
 use crate::runtime::fifo::Fifo;
 use crate::runtime::kernels::{ActorKernel, FireOutcome};
@@ -26,6 +26,7 @@ pub struct Engine {
     fifos: Vec<Arc<Fifo>>,
     atrs: Vec<AtrCell>,
     flops: BTreeMap<String, u64>,
+    pool: Option<TokenPool>,
 }
 
 impl Engine {
@@ -45,7 +46,7 @@ impl Engine {
             let rate = graph.actors[e.src.actor.0].out_ports[e.src.port].rate;
             atrs.push(AtrCell::new(rate));
         }
-        Ok(Engine { graph, device, fifos, atrs, flops: BTreeMap::new() })
+        Ok(Engine { graph, device, fifos, atrs, flops: BTreeMap::new(), pool: None })
     }
 
     /// Shared active-token-rate cell of an edge (CA kernels hold clones).
@@ -56,6 +57,14 @@ impl Engine {
     /// Attach per-actor FLOPs estimates (cost-model fallback).
     pub fn set_flops(&mut self, flops: BTreeMap<String, u64>) {
         self.flops = flops;
+    }
+
+    /// Attach a token buffer pool: every actor thread hands the
+    /// payloads of consumed (unshared) tokens back to `pool`, and
+    /// pool-aware kernels draw their output buffers from the same pool,
+    /// so a steady-state pipeline circulates a fixed set of buffers.
+    pub fn set_token_pool(&mut self, pool: TokenPool) {
+        self.pool = Some(pool);
     }
 
     pub fn graph(&self) -> &AppGraph {
@@ -116,12 +125,21 @@ impl Engine {
 
             let metrics = metrics.clone();
             let cores = cores.clone();
+            let pool = self.pool.clone();
             let is_io = name.starts_with("__tx") || name.starts_with("__rx");
             let accel = (!is_io).then(|| accel.clone());
-            let target_ms = self.device.target_ms(&name, self.flops.get(&name).copied().unwrap_or(0));
+            // With padding off the cost model is calibration-only: the
+            // firing is the real kernel, nothing else.
+            let target_ms = if self.device.padding {
+                self.device.target_ms(&name, self.flops.get(&name).copied().unwrap_or(0))
+            } else {
+                0.0
+            };
             let handle = std::thread::Builder::new()
                 .name(format!("actor-{name}"))
-                .spawn(move || actor_loop(name, kernel, ins, outs, cores, accel, target_ms, metrics))
+                .spawn(move || {
+                    actor_loop(name, kernel, ins, outs, cores, accel, target_ms, pool, metrics)
+                })
                 .map_err(|e| anyhow!("spawn: {e}"))?;
             handles.push(handle);
         }
@@ -162,9 +180,11 @@ fn actor_loop(
     cores: Arc<CoreSet>,
     accel: Option<Arc<CoreSet>>,
     target_ms: f64,
+    pool: Option<TokenPool>,
     metrics: Arc<Metrics>,
 ) -> Result<()> {
-    let result = actor_loop_inner(&name, kernel, &ins, &outs, cores, accel, target_ms, metrics);
+    let result =
+        actor_loop_inner(&name, kernel, &ins, &outs, cores, accel, target_ms, pool, metrics);
     // End of stream OR error: signal both directions so peers wind down
     // instead of blocking forever on a dead actor's FIFOs.
     for (fifo, _) in &ins {
@@ -185,6 +205,7 @@ fn actor_loop_inner(
     cores: Arc<CoreSet>,
     accel: Option<Arc<CoreSet>>,
     target_ms: f64,
+    pool: Option<TokenPool>,
     metrics: Arc<Metrics>,
 ) -> Result<()> {
     let mut seq: u64 = 0;
@@ -233,6 +254,15 @@ fn actor_loop_inner(
                             break 'run;
                         }
                     }
+                }
+            }
+        }
+        // Consumed tokens go back to the buffer pool (unless a branch
+        // edge still shares the payload) for producing kernels to reuse.
+        if let Some(pool) = &pool {
+            for port in inputs {
+                for t in port {
+                    pool.recycle(t);
                 }
             }
         }
@@ -338,6 +368,54 @@ mod tests {
             .unwrap();
         assert!(t0.elapsed().as_millis() >= 50, "padding not applied");
         assert!(report.ms_per_frame() >= 5.0);
+    }
+
+    #[test]
+    fn no_pad_device_ignores_cost_table() {
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let snk = g.add_spa("snk");
+        g.connect(src, snk, 4, 2);
+        let device = DeviceModel::native("fast").with_cost("src", 50.0).with_padding(false);
+        let engine = Engine::new(g, device).unwrap();
+        let n = Arc::new(AtomicU64::new(0));
+        let t0 = Instant::now();
+        engine
+            .run(kmap(vec![
+                ("src", Box::new(SourceKernel::new(4, 4, 1, 4))),
+                ("snk", Box::new(SinkKernel::new(n))),
+            ]))
+            .unwrap();
+        assert!(
+            t0.elapsed().as_millis() < 100,
+            "padding applied despite --no-pad: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn token_pool_recycles_consumed_payloads() {
+        use crate::dataflow::TokenPool;
+        let mut g = AppGraph::new();
+        let src = g.add_spa("src");
+        let mid = g.add_spa("mid");
+        let snk = g.add_spa("snk");
+        g.connect(src, mid, 8, 2);
+        g.connect(mid, snk, 8, 2);
+        let mut engine = Engine::new(g, DeviceModel::native("host")).unwrap();
+        let pool = TokenPool::new(64);
+        engine.set_token_pool(pool.clone());
+        let n = Arc::new(AtomicU64::new(0));
+        engine
+            .run(kmap(vec![
+                ("src", Box::new(SourceKernel::new(10, 8, 1, 1))),
+                ("mid", Box::new(MapKernel { f: |b: &[u8]| b.to_vec(), out_ports: 1 })),
+                ("snk", Box::new(SinkKernel::new(n)))
+            ]))
+            .unwrap();
+        // Every consumed token was unshared: 10 at mid + 10 at snk.
+        assert_eq!(pool.stats().recycled, 20);
+        assert_eq!(pool.stats().shared_drops, 0);
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Actor kernels: the behaviour bound to each dataflow actor.  The paper's
 //! runtime compiles per-actor C/OpenCL behaviours; here a kernel is a Rust
-//! trait object — plain-Rust for "computationally simple" actors, an
-//! XLA/PJRT executable for DNN actors (`xla_exec::XlaKernel`), and socket
-//! TX/RX FIFO endpoints (`net::{TxKernel, RxKernel}`).
+//! trait object — plain-Rust for "computationally simple" actors, real
+//! CPU compute for DNN layers ([`DnnLayerKernel`] over `runtime::linalg`,
+//! the default), an XLA/PJRT executable as the artifact-backed alternative
+//! (`xla_exec::XlaKernel`), and socket TX/RX FIFO endpoints
+//! (`net::{TxKernel, RxKernel}`).
 
-use crate::dataflow::Token;
+use crate::dataflow::{Token, TokenPool};
+use crate::runtime::linalg::{self, Conv2dSpec, ConvScratch};
+use crate::util::arena::{Arena, ArenaBuf};
 use crate::util::rng::Rng;
+use crate::util::tensor;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -179,6 +184,270 @@ impl ActorKernel for ConcatSoftmaxKernel {
     }
 }
 
+// ------------------------------------------------------- Real DNN layers
+
+/// The compute op behind one DNN actor, derived from its manifest
+/// shapes (activation in/out + weight tensor).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DnnOp {
+    /// Standard conv, weight `[KH, KW, Cin, Cout]`.
+    Conv(Conv2dSpec),
+    /// Depthwise conv (the SSD-Mobilenet shape), weight `[KH, KW, C]`
+    /// or `[KH, KW, C, 1]`.
+    DwConv(Conv2dSpec),
+    /// Fully connected over the flattened activation.  The weight is
+    /// accepted in the manifest's `[in, out]` layout and transposed
+    /// once at bind time into `matvec`'s row-major `(out x in)`.
+    Dense { in_dim: usize, out_dim: usize },
+}
+
+impl DnnOp {
+    /// Classify a layer from its manifest shapes; `None` when no
+    /// Conv/DwConv/Dense geometry fits (caller falls back to the XLA
+    /// executable).
+    pub fn derive(in_shape: &[usize], out_shape: &[usize], w_shape: &[usize]) -> Option<DnnOp> {
+        match (in_shape, out_shape, w_shape) {
+            (&[_, _, ci], &[_, _, co], &[kh, kw, c, 1]) | (&[_, _, ci], &[_, _, co], &[kh, kw, c])
+                if ci == c && co == c =>
+            {
+                Conv2dSpec::from_shapes(in_shape, out_shape, kh, kw).map(DnnOp::DwConv)
+            }
+            (&[_, _, ci], &[_, _, co], &[kh, kw, cin, cout]) if ci == cin && co == cout => {
+                Conv2dSpec::from_shapes(in_shape, out_shape, kh, kw).map(DnnOp::Conv)
+            }
+            (_, _, &[i, o]) if tensor::numel(in_shape) == i && tensor::numel(out_shape) == o => {
+                Some(DnnOp::Dense { in_dim: i, out_dim: o })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn in_len(&self) -> usize {
+        match self {
+            DnnOp::Conv(s) | DnnOp::DwConv(s) => s.in_len(),
+            DnnOp::Dense { in_dim, .. } => *in_dim,
+        }
+    }
+
+    pub fn out_len(&self) -> usize {
+        match self {
+            DnnOp::Conv(s) | DnnOp::DwConv(s) => s.out_len(),
+            DnnOp::Dense { out_dim, .. } => *out_dim,
+        }
+    }
+
+    /// Length of the flattened weight tensor this op expects.
+    pub fn weight_len(&self) -> usize {
+        match self {
+            DnnOp::Conv(s) => s.patch() * s.c_out,
+            DnnOp::DwConv(s) => s.kh * s.kw * s.c_in,
+            DnnOp::Dense { in_dim, out_dim } => in_dim * out_dim,
+        }
+    }
+
+    /// Output channel count (bias length).
+    pub fn channels(&self) -> usize {
+        match self {
+            DnnOp::Conv(s) | DnnOp::DwConv(s) => s.c_out,
+            DnnOp::Dense { out_dim, .. } => *out_dim,
+        }
+    }
+}
+
+/// Deterministic synthetic weights for offline runs (when the manifest's
+/// `.bin` artifacts are absent): seeded by the actor name so every
+/// process generates the same parameters.
+pub fn synth_weights(name: &str, len: usize, scale: f32) -> Vec<f32> {
+    let seed = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    });
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.f32_range(-scale, scale)).collect()
+}
+
+/// A DNN actor running real CPU compute through `runtime::linalg`:
+/// blocked GEMM conv (im2col), direct depthwise conv, or dense matvec,
+/// each with a fused bias(+ReLU) epilogue.  All scratch lives in a
+/// per-kernel arena sized at bind time, and output payloads come from
+/// the shared [`TokenPool`], so steady-state firings allocate nothing
+/// beyond broadcast clones.
+pub struct DnnLayerKernel {
+    name: String,
+    op: DnnOp,
+    weights: Vec<f32>,
+    bias: Option<Vec<f32>>,
+    arena: Arena,
+    out_buf: ArenaBuf,
+    conv_scratch: ConvScratch,
+    pool: TokenPool,
+    threads: usize,
+    /// Token size per out port; ports whose token size differs from the
+    /// activation (SSD's 16-byte priorbox shape-descriptor edges) get
+    /// zero-fill, mirroring `XlaKernel`.
+    out_token_bytes: Vec<usize>,
+}
+
+impl DnnLayerKernel {
+    pub fn new(
+        name: &str,
+        op: DnnOp,
+        weights: Vec<f32>,
+        bias: Option<Vec<f32>>,
+        threads: usize,
+        pool: TokenPool,
+        out_token_bytes: Vec<usize>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            weights.len() == op.weight_len(),
+            "{name}: weight len {} != expected {}",
+            weights.len(),
+            op.weight_len()
+        );
+        if let Some(b) = &bias {
+            anyhow::ensure!(
+                b.len() == op.channels(),
+                "{name}: bias len {} != channels {}",
+                b.len(),
+                op.channels()
+            );
+        }
+        // Dense weights arrive in the manifest's [in, out] layout (the
+        // shape DnnOp::derive classified); matvec reads (out x in)
+        // row-major, so transpose once here rather than per firing.
+        let weights = match &op {
+            DnnOp::Dense { in_dim, out_dim } => {
+                let (ni, no) = (*in_dim, *out_dim);
+                let mut t = vec![0.0f32; weights.len()];
+                for i in 0..ni {
+                    for o in 0..no {
+                        t[o * ni + i] = weights[i * no + o];
+                    }
+                }
+                t
+            }
+            _ => weights,
+        };
+        let mut arena = Arena::with_capacity(op.out_len());
+        let out_buf = arena.alloc(op.out_len());
+        Ok(DnnLayerKernel {
+            name: name.to_string(),
+            op,
+            weights,
+            bias,
+            arena,
+            out_buf,
+            conv_scratch: ConvScratch::new(),
+            pool,
+            threads: threads.max(1),
+            out_token_bytes,
+        })
+    }
+
+    /// Synthetic-parameter constructor: weights/bias generated from the
+    /// actor name (offline default when no `.bin` artifacts exist).
+    pub fn with_synth_weights(
+        name: &str,
+        op: DnnOp,
+        threads: usize,
+        pool: TokenPool,
+        out_token_bytes: Vec<usize>,
+    ) -> anyhow::Result<Self> {
+        // Scale shrinks with fan-in so activations stay bounded down a
+        // deep chain.
+        let fan_in = match &op {
+            DnnOp::Conv(s) => s.patch(),
+            DnnOp::DwConv(s) => s.kh * s.kw,
+            DnnOp::Dense { in_dim, .. } => *in_dim,
+        };
+        let scale = (1.0 / fan_in as f32).sqrt();
+        let weights = synth_weights(name, op.weight_len(), scale);
+        let bias = synth_weights(&format!("{name}.bias"), op.channels(), 0.1);
+        DnnLayerKernel::new(name, op, weights, Some(bias), threads, pool, out_token_bytes)
+    }
+
+    pub fn op(&self) -> &DnnOp {
+        &self.op
+    }
+}
+
+impl ActorKernel for DnnLayerKernel {
+    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+        anyhow::ensure!(!inputs.is_empty(), "{}: no input port", self.name);
+        let x = inputs[0][0].to_f32();
+        anyhow::ensure!(
+            x.len() == self.op.in_len(),
+            "{}: input {} floats, layer expects {}",
+            self.name,
+            x.len(),
+            self.op.in_len()
+        );
+        {
+            let y = self.arena.get_mut(self.out_buf);
+            match &self.op {
+                DnnOp::Conv(spec) => linalg::conv2d(
+                    spec,
+                    &x,
+                    &self.weights,
+                    self.bias.as_deref(),
+                    y,
+                    &mut self.conv_scratch,
+                    self.threads,
+                ),
+                DnnOp::DwConv(spec) => linalg::dwconv2d(
+                    spec,
+                    &x,
+                    &self.weights,
+                    self.bias.as_deref(),
+                    y,
+                    self.threads,
+                ),
+                DnnOp::Dense { in_dim, out_dim } => linalg::matvec(
+                    *out_dim,
+                    *in_dim,
+                    &self.weights,
+                    &x,
+                    self.bias.as_deref(),
+                    false,
+                    y,
+                ),
+            }
+        }
+        let y = self.arena.get(self.out_buf);
+        let bytes_len = y.len() * 4;
+        let mut filled = self.pool.take(bytes_len);
+        tensor::f32_extend_bytes(y, &mut filled);
+        let mut remaining = self.out_token_bytes.iter().filter(|&&tb| tb == bytes_len).count();
+        let mut payload = Some(filled);
+        let mut outs: Vec<Vec<Vec<u8>>> = Vec::with_capacity(self.out_token_bytes.len());
+        for &tb in &self.out_token_bytes {
+            if tb == bytes_len {
+                remaining -= 1;
+                let p = if remaining == 0 {
+                    payload.take().unwrap()
+                } else {
+                    // Broadcast copy from the pool, so multi-port
+                    // actors stay allocation-free in steady state too.
+                    let mut copy = self.pool.take(bytes_len);
+                    copy.extend_from_slice(payload.as_ref().unwrap());
+                    copy
+                };
+                outs.push(vec![p]);
+            } else {
+                // Shape-descriptor edge (content-independent consumer);
+                // zeros, but from the pool so this allocates nothing in
+                // steady state either.
+                let mut z = self.pool.take(tb);
+                z.resize(tb, 0);
+                outs.push(vec![z]);
+            }
+        }
+        if let Some(p) = payload {
+            self.pool.recycle_buf(p); // no port carries the activation
+        }
+        Ok(FireOutcome::Produced(outs))
+    }
+}
+
 // ------------------------------------------------------------- Map (test)
 
 /// Apply a pure function to the token payload — used by tests and the DPG
@@ -283,6 +552,131 @@ mod tests {
         let mut k = ConcatSoftmaxKernel { classes: 4, out_ports: 1 };
         let a = Token::from_f32(&[0.0, 1.0, 2.0], 0);
         assert!(k.fire(&[vec![a]], 0).is_err());
+    }
+
+    #[test]
+    fn dnn_op_derivation_covers_conv_dw_dense() {
+        // Stride-2 conv (vehicle l1 geometry).
+        let conv = DnnOp::derive(&[96, 96, 3], &[48, 48, 32], &[3, 3, 3, 32]).unwrap();
+        let DnnOp::Conv(s) = conv else { panic!("expected conv") };
+        assert_eq!((s.stride, s.pad, s.c_out), (2, 1, 32));
+        // Depthwise in both weight spellings.
+        for w in [&[3usize, 3, 64][..], &[3, 3, 64, 1][..]] {
+            let dw = DnnOp::derive(&[19, 19, 64], &[19, 19, 64], w).unwrap();
+            assert!(matches!(dw, DnnOp::DwConv(_)), "{w:?}");
+        }
+        // Dense over a flattened activation.
+        let d = DnnOp::derive(&[24, 24, 32], &[100], &[18432, 100]).unwrap();
+        assert_eq!(d, DnnOp::Dense { in_dim: 18432, out_dim: 100 });
+        // Channel mismatch: no rule.
+        assert!(DnnOp::derive(&[8, 8, 3], &[8, 8, 4], &[3, 3, 5, 4]).is_none());
+        assert!(DnnOp::derive(&[10], &[4], &[9, 4]).is_none());
+    }
+
+    fn fire_layer(k: &mut DnnLayerKernel, x: &[f32]) -> Vec<Vec<u8>> {
+        let t = vec![vec![Token::from_f32(x, 0)]];
+        match k.fire(&t, 0).unwrap() {
+            FireOutcome::Produced(p) => p.into_iter().map(|mut v| v.remove(0)).collect(),
+            FireOutcome::Stop => panic!("unexpected stop"),
+        }
+    }
+
+    #[test]
+    fn dnn_layer_kernel_matches_linalg_direct() {
+        let spec = Conv2dSpec {
+            h: 6,
+            w: 6,
+            c_in: 4,
+            c_out: 5,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            relu: true,
+        };
+        let op = DnnOp::Conv(spec);
+        let out_bytes = op.out_len() * 4;
+        let mut k = DnnLayerKernel::with_synth_weights(
+            "t_conv",
+            op.clone(),
+            1,
+            TokenPool::new(8),
+            vec![out_bytes],
+        )
+        .unwrap();
+        let x = synth_weights("t_in", spec.in_len(), 1.0);
+        let first = fire_layer(&mut k, &x);
+        let got = tensor::bytes_to_f32(&first[0]);
+        let mut want = vec![0.0f32; spec.out_len()];
+        let w = synth_weights("t_conv", op.weight_len(), (1.0 / spec.patch() as f32).sqrt());
+        let b = synth_weights("t_conv.bias", spec.c_out, 0.1);
+        linalg::conv2d(&spec, &x, &w, Some(&b), &mut want, &mut ConvScratch::new(), 1);
+        assert_eq!(got, want);
+        // Hand the consumed payload back (the engine's recycle step) and
+        // confirm the next firing reuses it.
+        k.pool.recycle_buf(first.into_iter().next().unwrap());
+        let again = fire_layer(&mut k, &x);
+        assert_eq!(tensor::bytes_to_f32(&again[0]), want);
+        assert!(k.pool.stats().hits >= 1, "pooled buffer not reused");
+    }
+
+    #[test]
+    fn dnn_layer_kernel_dense_and_shape_descriptor_ports() {
+        let op = DnnOp::Dense { in_dim: 12, out_dim: 3 };
+        // Port 0 is a 16-byte shape-descriptor tap, port 1 the real out.
+        let mut k = DnnLayerKernel::with_synth_weights(
+            "t_dense",
+            op,
+            1,
+            TokenPool::disabled(),
+            vec![16, 12],
+        )
+        .unwrap();
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        let out = fire_layer(&mut k, &x);
+        assert_eq!(out[0], vec![0u8; 16], "descriptor port zero-filled");
+        let y = tensor::bytes_to_f32(&out[1]);
+        assert_eq!(y.len(), 3);
+        // Expectation built by hand from the [in, out] manifest layout:
+        // y[o] = sum_i x[i] * w[i][o] + b[o] — the kernel's bind-time
+        // transpose must reproduce exactly this.
+        let w_io = synth_weights("t_dense", 36, (1.0f32 / 12.0).sqrt());
+        let b = synth_weights("t_dense.bias", 3, 0.1);
+        let mut w_oi = vec![0.0f32; 36];
+        for i in 0..12 {
+            for o in 0..3 {
+                w_oi[o * 12 + i] = w_io[i * 3 + o];
+            }
+        }
+        let mut want = vec![0.0f32; 3];
+        linalg::matvec(3, 12, &w_oi, &x, Some(&b), false, &mut want);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn dnn_layer_kernel_rejects_bad_shapes() {
+        let op = DnnOp::Dense { in_dim: 4, out_dim: 2 };
+        assert!(DnnLayerKernel::new(
+            "bad",
+            op.clone(),
+            vec![0.0; 7], // wrong weight len
+            None,
+            1,
+            TokenPool::disabled(),
+            vec![8],
+        )
+        .is_err());
+        let mut k = DnnLayerKernel::with_synth_weights("ok", op, 1, TokenPool::disabled(), vec![8])
+            .unwrap();
+        let wrong = vec![vec![Token::from_f32(&[1.0; 9], 0)]];
+        assert!(k.fire(&wrong, 0).is_err());
+    }
+
+    #[test]
+    fn synth_weights_deterministic_and_name_keyed() {
+        assert_eq!(synth_weights("a", 8, 1.0), synth_weights("a", 8, 1.0));
+        assert_ne!(synth_weights("a", 8, 1.0), synth_weights("b", 8, 1.0));
+        assert!(synth_weights("a", 64, 0.5).iter().all(|v| v.abs() <= 0.5));
     }
 
     #[test]

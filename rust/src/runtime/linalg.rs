@@ -1,0 +1,832 @@
+//! Dependency-free CPU tensor compute backend: cache-blocked f32 GEMM
+//! with panel packing and an 8x8 register-tiled microkernel, `conv2d`
+//! via im2col, a direct depthwise convolution (the SSD-Mobilenet shape),
+//! and fused bias+ReLU epilogues.
+//!
+//! Design notes:
+//!
+//! * **Blocking** follows the Goto/BLIS scheme: `NC`-wide column panels
+//!   of B, `KC`-deep depth panels (packed once per (jc, pc) block),
+//!   `MC`-tall row panels of A, and an `MR x NR` (8x8) microkernel over
+//!   the packed panels.  Packing lays panels out so the microkernel's
+//!   inner loop reads both operands contiguously — written as plain
+//!   indexed loops over fixed-size accumulator arrays so LLVM
+//!   autovectorizes them (no intrinsics, no unsafe).
+//! * **Determinism**: for every output element the k-dimension is
+//!   accumulated in ascending order regardless of blocking or worker
+//!   count, so the blocked, parallel and naive paths agree bit-for-bit
+//!   whenever `k <= KC` (one depth panel), and to float-rounding
+//!   epsilon beyond that.  This is what lets the serving model run the
+//!   same math on client and server and compare digests byte-for-byte.
+//! * **Parallelism** is row-range splitting: [`gemm`] and [`dwconv2d`]
+//!   carve the M dimension (output rows) into per-worker ranges run on
+//!   scoped threads; [`gemm`]'s workers can additionally pin themselves
+//!   to cores through `platform::affinity` — the same pinning
+//!   discipline as the serving worker pool, which parallelizes across
+//!   *requests* while each worker runs these kernels single-threaded
+//!   on its own core.
+//! * **Allocation**: all scratch (packed panels, im2col columns) lives
+//!   in caller-owned [`GemmScratch`]/[`ConvScratch`] buffers that grow
+//!   during warmup and are reused across calls, so the steady state
+//!   performs no heap allocation at `threads == 1`.
+
+use crate::platform::affinity;
+
+/// Microkernel rows (register tile height).
+pub const MR: usize = 8;
+/// Microkernel columns (register tile width).
+pub const NR: usize = 8;
+/// Row-panel height of A kept hot in L2.
+const MC: usize = 64;
+/// Depth-panel size; one packed panel of A and B per (jc, pc) block.
+const KC: usize = 256;
+/// Column-panel width of B kept hot in L3/L2.
+const NC: usize = 512;
+
+/// FLOPs of one `m x n x k` GEMM (multiply + add).
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> u64 {
+    2 * m as u64 * n as u64 * k as u64
+}
+
+/// Reference GEMM, deliberately cache-naive: `C = A * B` with A
+/// `(m x k)`, B `(k x n)`, C `(m x n)`, all row-major.  The inner loop
+/// strides B by `n`, which is what the blocked kernel's packing fixes —
+/// this is the baseline the `kernel_flops` bench compares against.
+pub fn gemm_naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Reusable packing buffers for the blocked GEMM.  Grows to the block
+/// sizes on first use and never shrinks; steady-state calls allocate
+/// nothing.  The parallel path keeps one nested scratch per worker, so
+/// multi-worker calls reuse their packing buffers across calls too.
+#[derive(Default)]
+pub struct GemmScratch {
+    a_pack: Vec<f32>,
+    b_pack: Vec<f32>,
+    per_worker: Vec<GemmScratch>,
+}
+
+impl GemmScratch {
+    pub fn new() -> Self {
+        GemmScratch::default()
+    }
+}
+
+fn ensure_len(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// Pack an `mc x kc` block of A into MR-row panels, k-major within each
+/// panel (`a_pack[panel*MR*kc + kk*MR + r]`), zero-padding partial
+/// panels so the microkernel never branches on edges.
+fn pack_a(a: &[f32], k: usize, ic: usize, pc: usize, mc: usize, kc: usize, out: &mut [f32]) {
+    let panels = mc.div_ceil(MR);
+    for p in 0..panels {
+        let base = p * MR * kc;
+        for kk in 0..kc {
+            for r in 0..MR {
+                let row = p * MR + r;
+                out[base + kk * MR + r] = if row < mc {
+                    a[(ic + row) * k + pc + kk]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack a `kc x nc` block of B into NR-column panels, k-major within
+/// each panel (`b_pack[panel*NR*kc + kk*NR + q]`), zero-padded.
+fn pack_b(b: &[f32], n: usize, pc: usize, jc: usize, kc: usize, nc: usize, out: &mut [f32]) {
+    let panels = nc.div_ceil(NR);
+    for p in 0..panels {
+        let base = p * NR * kc;
+        for kk in 0..kc {
+            for q in 0..NR {
+                let col = p * NR + q;
+                out[base + kk * NR + q] = if col < nc {
+                    b[(pc + kk) * n + jc + col]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// 8x8 microkernel over packed panels: 64 accumulators that LLVM keeps
+/// in vector registers; both operand streams are contiguous.
+#[inline]
+fn microkernel_8x8(kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kc {
+        let av = &ap[kk * MR..kk * MR + MR];
+        let bv = &bp[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = av[r];
+            for q in 0..NR {
+                acc[r][q] += ar * bv[q];
+            }
+        }
+    }
+    acc
+}
+
+/// Cache-blocked, panel-packed GEMM: `C = A * B` (row-major, same
+/// shapes as [`gemm_naive`]).  Single-threaded; scratch is reused
+/// across calls.
+pub fn gemm_blocked(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    // No upfront zeroing: the pc == 0 depth panel *stores* into every
+    // element of C, so a full zero sweep would just be an extra pass of
+    // cache traffic over the hottest output.  Only the k == 0 case
+    // (nothing stored) needs explicit zeros.
+    if m == 0 || n == 0 || k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let ncp = nc.div_ceil(NR) * NR;
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            ensure_len(&mut scratch.b_pack, ncp * kc);
+            pack_b(b, n, pc, jc, kc, nc, &mut scratch.b_pack);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let mcp = mc.div_ceil(MR) * MR;
+                ensure_len(&mut scratch.a_pack, mcp * kc);
+                pack_a(a, k, ic, pc, mc, kc, &mut scratch.a_pack);
+                let mut ir = 0;
+                while ir < mc {
+                    let mr = MR.min(mc - ir);
+                    let ap = &scratch.a_pack[(ir / MR) * MR * kc..(ir / MR) * MR * kc + MR * kc];
+                    let mut jr = 0;
+                    while jr < nc {
+                        let nr = NR.min(nc - jr);
+                        let bp =
+                            &scratch.b_pack[(jr / NR) * NR * kc..(jr / NR) * NR * kc + NR * kc];
+                        let acc = microkernel_8x8(kc, ap, bp);
+                        // First depth panel stores, later panels
+                        // accumulate — per element the k-order stays
+                        // ascending, matching the naive reference.
+                        for r in 0..mr {
+                            let base = (ic + ir + r) * n + jc + jr;
+                            if pc == 0 {
+                                c[base..base + nr].copy_from_slice(&acc[r][..nr]);
+                            } else {
+                                for (cv, av) in c[base..base + nr].iter_mut().zip(&acc[r][..nr]) {
+                                    *cv += av;
+                                }
+                            }
+                        }
+                        jr += NR;
+                    }
+                    ir += MR;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// Parallel blocked GEMM: row-range split of M across `workers` scoped
+/// threads (each with its own packing scratch, each optionally pinned
+/// through `platform::affinity`), bit-identical to the single-threaded
+/// result for any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    workers: usize,
+    pin: bool,
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(c.len(), m * n, "C shape");
+    let workers = workers.max(1).min(m.max(1));
+    // n == 0 would make the per-worker chunk size zero (chunks_mut
+    // panics on 0); the blocked path handles every degenerate shape.
+    if workers == 1 || n == 0 {
+        gemm_blocked(m, n, k, a, b, c, scratch);
+        return;
+    }
+    let per = m.div_ceil(workers);
+    if scratch.per_worker.len() < workers {
+        scratch.per_worker.resize_with(workers, GemmScratch::default);
+    }
+    std::thread::scope(|s| {
+        for ((t, c_chunk), ws) in
+            c.chunks_mut(per * n).enumerate().zip(scratch.per_worker.iter_mut())
+        {
+            let rows = c_chunk.len() / n;
+            let a_sub = &a[t * per * k..t * per * k + rows * k];
+            s.spawn(move || {
+                if pin {
+                    let _ = affinity::pin_to_core(t % affinity::core_count());
+                }
+                gemm_blocked(rows, n, k, a_sub, b, c_chunk, ws);
+            });
+        }
+    });
+}
+
+/// Fused epilogue over a `(rows x ch)` row-major activation: per-column
+/// bias add and/or ReLU, applied in place.
+pub fn bias_relu(y: &mut [f32], ch: usize, bias: Option<&[f32]>, relu: bool) {
+    if (bias.is_none() && !relu) || ch == 0 {
+        return; // nothing to do; ch == 0 would panic chunks_exact_mut
+    }
+    assert_eq!(y.len() % ch, 0, "ragged activation");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), ch, "bias shape"); // zip would truncate silently
+    }
+    for row in y.chunks_exact_mut(ch) {
+        if let Some(b) = bias {
+            for (v, &bv) in row.iter_mut().zip(b) {
+                *v += bv;
+            }
+        }
+        if relu {
+            for v in row.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+}
+
+/// Dense layer as a matrix-vector product: `y = act(W x + b)` with W
+/// `(out_dim x in_dim)` row-major.  Eight parallel accumulators give
+/// LLVM a vectorizable reduction with a *fixed* combination order, so
+/// the result is deterministic across platforms and call sites — the
+/// serving model relies on client and server computing identical bits.
+pub fn matvec(
+    out_dim: usize,
+    in_dim: usize,
+    w: &[f32],
+    x: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    y: &mut [f32],
+) {
+    assert_eq!(w.len(), out_dim * in_dim, "W shape");
+    assert_eq!(x.len(), in_dim, "x shape");
+    assert_eq!(y.len(), out_dim, "y shape");
+    const LANES: usize = 8;
+    for o in 0..out_dim {
+        let row = &w[o * in_dim..(o + 1) * in_dim];
+        let mut acc = [0.0f32; LANES];
+        let chunks = in_dim / LANES;
+        for ci in 0..chunks {
+            let r = &row[ci * LANES..ci * LANES + LANES];
+            let xv = &x[ci * LANES..ci * LANES + LANES];
+            for l in 0..LANES {
+                acc[l] += r[l] * xv[l];
+            }
+        }
+        let mut s =
+            ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in chunks * LANES..in_dim {
+            s += row[i] * x[i];
+        }
+        if let Some(b) = bias {
+            s += b[o];
+        }
+        y[o] = if relu { s.max(0.0) } else { s };
+    }
+}
+
+// ------------------------------------------------------------- conv2d
+
+/// Shape of one 2-D convolution over an NHWC activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+}
+
+impl Conv2dSpec {
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// im2col patch length (the GEMM k dimension).
+    pub fn patch(&self) -> usize {
+        self.kh * self.kw * self.c_in
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.h * self.w * self.c_in
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_h() * self.out_w() * self.c_out
+    }
+
+    pub fn flops(&self) -> u64 {
+        gemm_flops(self.out_h() * self.out_w(), self.c_out, self.patch())
+    }
+
+    /// Derive stride/padding from manifest shapes: input `[H, W, Cin]`,
+    /// output `[OH, OW, Cout]`, weight `[KH, KW, Cin, Cout]` (standard)
+    /// or `[KH, KW, C]` / `[KH, KW, C, 1]` (depthwise).  Tries strides
+    /// 1..=4 with the symmetric padding the output size implies.
+    pub fn from_shapes(
+        in_shape: &[usize],
+        out_shape: &[usize],
+        kh: usize,
+        kw: usize,
+    ) -> Option<Self> {
+        let (&[h, w, c_in], &[oh, ow, c_out]) = (in_shape, out_shape) else {
+            return None;
+        };
+        if oh == 0 || ow == 0 {
+            return None;
+        }
+        for stride in 1..=4usize {
+            // Smallest symmetric padding that can reach `oh` rows under
+            // floor division, verified against the forward formula.
+            // `need` may fall short of `h` by up to stride-1 (floor
+            // division discards the remainder — valid-padding convs),
+            // and "same" stride-2 convs have odd total padding — so the
+            // candidate is the saturating ceil half.  Smallest stride
+            // that verifies wins.
+            let need_h = (oh - 1) * stride + kh;
+            let need_w = (ow - 1) * stride + kw;
+            let ph = need_h.saturating_sub(h).div_ceil(2);
+            let pw = need_w.saturating_sub(w).div_ceil(2);
+            if ph != pw || ph >= kh || ph >= kw {
+                continue;
+            }
+            let spec =
+                Conv2dSpec { h, w, c_in, c_out, kh, kw, stride, pad: ph, relu: true };
+            if spec.out_h() == oh && spec.out_w() == ow {
+                return Some(spec);
+            }
+        }
+        None
+    }
+}
+
+/// Reusable conv scratch: the im2col column matrix plus GEMM packing.
+#[derive(Default)]
+pub struct ConvScratch {
+    cols: Vec<f32>,
+    gemm: GemmScratch,
+}
+
+impl ConvScratch {
+    pub fn new() -> Self {
+        ConvScratch::default()
+    }
+}
+
+/// Lower an NHWC activation into the im2col column matrix: row p =
+/// output pixel p, columns in (ky, kx, ci) order — exactly the
+/// flattened layout of a `[KH, KW, Cin, Cout]` weight tensor, so the
+/// conv GEMM is `cols (P x patch) * w (patch x Cout)`.
+pub fn im2col(spec: &Conv2dSpec, x: &[f32], cols: &mut [f32]) {
+    assert_eq!(x.len(), spec.in_len(), "input shape");
+    let (oh, ow, patch) = (spec.out_h(), spec.out_w(), spec.patch());
+    assert_eq!(cols.len(), oh * ow * patch, "cols shape");
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * patch;
+            for ky in 0..spec.kh {
+                let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                for kx in 0..spec.kw {
+                    let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                    let dst = base + (ky * spec.kw + kx) * spec.c_in;
+                    if iy < 0 || iy >= spec.h as isize || ix < 0 || ix >= spec.w as isize {
+                        cols[dst..dst + spec.c_in].fill(0.0);
+                    } else {
+                        let src = (iy as usize * spec.w + ix as usize) * spec.c_in;
+                        cols[dst..dst + spec.c_in].copy_from_slice(&x[src..src + spec.c_in]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2-D convolution via im2col + blocked GEMM with a fused bias+ReLU
+/// epilogue.  `w` is the flattened `[KH, KW, Cin, Cout]` weight
+/// (`patch x c_out` row-major); `y` is the NHWC output.
+pub fn conv2d(
+    spec: &Conv2dSpec,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    scratch: &mut ConvScratch,
+    workers: usize,
+) {
+    let (rows, patch) = (spec.out_h() * spec.out_w(), spec.patch());
+    assert_eq!(w.len(), patch * spec.c_out, "weight shape");
+    assert_eq!(y.len(), spec.out_len(), "output shape");
+    ensure_len(&mut scratch.cols, rows * patch);
+    im2col(spec, x, &mut scratch.cols[..rows * patch]);
+    gemm(
+        rows,
+        spec.c_out,
+        patch,
+        &scratch.cols[..rows * patch],
+        w,
+        y,
+        workers,
+        false,
+        &mut scratch.gemm,
+    );
+    bias_relu(y, spec.c_out, bias, spec.relu);
+}
+
+/// Direct depthwise convolution (no im2col): `spec.c_out == spec.c_in`,
+/// weight `[KH, KW, C]` flattened.  The channel loop is innermost and
+/// contiguous in NHWC, so it autovectorizes; work splits across output
+/// rows.
+pub fn dwconv2d(
+    spec: &Conv2dSpec,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    workers: usize,
+) {
+    assert_eq!(spec.c_out, spec.c_in, "depthwise keeps channel count");
+    let c = spec.c_in;
+    assert_eq!(x.len(), spec.in_len(), "input shape");
+    assert_eq!(w.len(), spec.kh * spec.kw * c, "weight shape");
+    assert_eq!(y.len(), spec.out_len(), "output shape");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    if oh * ow * c == 0 {
+        return; // empty output; also keeps chunks_mut's size nonzero
+    }
+    let workers = workers.max(1).min(oh.max(1));
+    let per = oh.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (t, y_chunk) in y.chunks_mut(per * ow * c).enumerate() {
+            let oy0 = t * per;
+            // `move` so the spawned thread owns copies of the loop
+            // locals (the slice refs themselves outlive the scope).
+            let run = move |y_chunk: &mut [f32]| {
+                for (dy, yrow) in y_chunk.chunks_exact_mut(ow * c).enumerate() {
+                    let oy = oy0 + dy;
+                    for ox in 0..ow {
+                        let ypix = &mut yrow[ox * c..(ox + 1) * c];
+                        match bias {
+                            Some(b) => ypix.copy_from_slice(b),
+                            None => ypix.fill(0.0),
+                        }
+                        for ky in 0..spec.kh {
+                            let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                            if iy < 0 || iy >= spec.h as isize {
+                                continue;
+                            }
+                            for kx in 0..spec.kw {
+                                let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                                if ix < 0 || ix >= spec.w as isize {
+                                    continue;
+                                }
+                                let xb = &x[(iy as usize * spec.w + ix as usize) * c..][..c];
+                                let wb = &w[(ky * spec.kw + kx) * c..][..c];
+                                for ci in 0..c {
+                                    ypix[ci] += xb[ci] * wb[ci];
+                                }
+                            }
+                        }
+                        if spec.relu {
+                            for v in ypix.iter_mut() {
+                                *v = v.max(0.0);
+                            }
+                        }
+                    }
+                }
+            };
+            if workers == 1 {
+                run(y_chunk);
+            } else {
+                s.spawn(move || run(y_chunk));
+            }
+        }
+    });
+}
+
+/// Reference conv for tests: direct 6-loop accumulation in (ky, kx, ci)
+/// order — the same per-element order as im2col+GEMM, so results match
+/// exactly when the patch fits one depth panel (`patch <= KC`).
+pub fn conv2d_naive(spec: &Conv2dSpec, x: &[f32], w: &[f32], bias: Option<&[f32]>, y: &mut [f32]) {
+    assert_eq!(y.len(), spec.out_len(), "output shape");
+    let (oh, ow, patch) = (spec.out_h(), spec.out_w(), spec.patch());
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for co in 0..spec.c_out {
+                let mut acc = 0.0f32;
+                for p in 0..patch {
+                    let ky = p / (spec.kw * spec.c_in);
+                    let kx = p / spec.c_in % spec.kw;
+                    let ci = p % spec.c_in;
+                    let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                    let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                    if iy < 0 || iy >= spec.h as isize || ix < 0 || ix >= spec.w as isize {
+                        continue;
+                    }
+                    let xv = x[(iy as usize * spec.w + ix as usize) * spec.c_in + ci];
+                    acc += xv * w[p * spec.c_out + co];
+                }
+                if let Some(b) = bias {
+                    acc += b[co];
+                }
+                y[(oy * ow + ox) * spec.c_out + co] = if spec.relu { acc.max(0.0) } else { acc };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, a: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.f32_range(-a, a)).collect()
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn gemm_naive_hand_checked() {
+        // [1 2; 3 4] * [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        gemm_naive(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn blocked_matches_naive_exactly_within_one_depth_panel() {
+        let mut rng = Rng::new(41);
+        // Shapes straddling every edge case: partial MR/NR tiles,
+        // multiple MC/NC blocks, k <= KC so equality is bitwise.
+        let shapes = [(1, 1, 1), (5, 7, 9), (8, 8, 8), (13, 70, 33), (65, 513, 256), (129, 9, 100)];
+        for &(m, n, k) in &shapes {
+            let a = randv(&mut rng, m * k, 1.0);
+            let b = randv(&mut rng, k * n, 1.0);
+            let mut c_ref = vec![0.0f32; m * n];
+            let mut c = vec![0.0f32; m * n];
+            gemm_naive(m, n, k, &a, &b, &mut c_ref);
+            gemm_blocked(m, n, k, &a, &b, &mut c, &mut GemmScratch::new());
+            assert_eq!(c, c_ref, "{m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_to_epsilon_across_depth_panels() {
+        let mut rng = Rng::new(42);
+        let (m, n, k) = (17, 23, 700); // k > KC: partial sums re-associate
+        let a = randv(&mut rng, m * k, 1.0);
+        let b = randv(&mut rng, k * n, 1.0);
+        let mut c_ref = vec![0.0f32; m * n];
+        let mut c = vec![0.0f32; m * n];
+        gemm_naive(m, n, k, &a, &b, &mut c_ref);
+        gemm_blocked(m, n, k, &a, &b, &mut c, &mut GemmScratch::new());
+        assert!(max_abs_diff(&c, &c_ref) < 1e-3, "diff {}", max_abs_diff(&c, &c_ref));
+    }
+
+    #[test]
+    fn parallel_gemm_is_bitwise_equal_for_any_worker_count() {
+        let mut rng = Rng::new(43);
+        let (m, n, k) = (70, 40, 96);
+        let a = randv(&mut rng, m * k, 1.0);
+        let b = randv(&mut rng, k * n, 1.0);
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_blocked(m, n, k, &a, &b, &mut c1, &mut GemmScratch::new());
+        for workers in [2, 3, 4, 7] {
+            let mut cw = vec![0.0f32; m * n];
+            gemm(m, n, k, &a, &b, &mut cw, workers, false, &mut GemmScratch::new());
+            assert_eq!(cw, c1, "workers {workers}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_changes_nothing() {
+        let mut rng = Rng::new(44);
+        let mut scratch = GemmScratch::new();
+        // Big call first so the small call runs with oversized scratch.
+        let (a, b) = (randv(&mut rng, 64 * 64, 1.0), randv(&mut rng, 64 * 64, 1.0));
+        let mut c = vec![0.0f32; 64 * 64];
+        gemm_blocked(64, 64, 64, &a, &b, &mut c, &mut scratch);
+        let (a2, b2) = (randv(&mut rng, 3 * 5, 1.0), randv(&mut rng, 5 * 2, 1.0));
+        let mut c2 = vec![0.0f32; 6];
+        let mut c2_ref = vec![0.0f32; 6];
+        gemm_blocked(3, 2, 5, &a2, &b2, &mut c2, &mut scratch);
+        gemm_naive(3, 2, 5, &a2, &b2, &mut c2_ref);
+        assert_eq!(c2, c2_ref);
+    }
+
+    #[test]
+    fn matvec_matches_naive_dot() {
+        let mut rng = Rng::new(45);
+        let (out_dim, in_dim) = (9, 35); // remainder lanes exercised
+        let w = randv(&mut rng, out_dim * in_dim, 1.0);
+        let x = randv(&mut rng, in_dim, 1.0);
+        let bias = randv(&mut rng, out_dim, 0.5);
+        let mut y = vec![0.0f32; out_dim];
+        matvec(out_dim, in_dim, &w, &x, Some(&bias), true, &mut y);
+        for o in 0..out_dim {
+            let mut acc = [0.0f32; 8];
+            let chunks = in_dim / 8;
+            for ci in 0..chunks {
+                for l in 0..8 {
+                    acc[l] += w[o * in_dim + ci * 8 + l] * x[ci * 8 + l];
+                }
+            }
+            let mut s =
+                ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+            for i in chunks * 8..in_dim {
+                s += w[o * in_dim + i] * x[i];
+            }
+            s += bias[o];
+            assert_eq!(y[o], s.max(0.0), "row {o}");
+        }
+    }
+
+    #[test]
+    fn bias_relu_epilogue() {
+        let mut y = vec![-1.0f32, 2.0, -3.0, 4.0];
+        bias_relu(&mut y, 2, Some(&[0.5, -0.5]), true);
+        assert_eq!(y, vec![0.0, 1.5, 0.0, 3.5]);
+        let mut y2 = vec![-1.0f32, 2.0];
+        bias_relu(&mut y2, 2, None, false);
+        assert_eq!(y2, vec![-1.0, 2.0]); // no-op epilogue
+    }
+
+    #[test]
+    fn conv_spec_derivation() {
+        // Stride-2 "same" conv: 96x96x3 -> 48x48x32 with a 3x3 kernel.
+        let s = Conv2dSpec::from_shapes(&[96, 96, 3], &[48, 48, 32], 3, 3).unwrap();
+        assert_eq!((s.stride, s.pad), (2, 1));
+        assert_eq!((s.out_h(), s.out_w()), (48, 48));
+        // Stride-1 same conv.
+        let s1 = Conv2dSpec::from_shapes(&[19, 19, 64], &[19, 19, 128], 3, 3).unwrap();
+        assert_eq!((s1.stride, s1.pad), (1, 1));
+        // Valid-padding conv whose stride does not divide h - kh:
+        // 10 -> floor((10-3)/2)+1 = 4 must derive (2, 0), not a larger
+        // padded stride that merely reproduces the output size.
+        let sv = Conv2dSpec::from_shapes(&[10, 10, 8], &[4, 4, 16], 3, 3).unwrap();
+        assert_eq!((sv.stride, sv.pad), (2, 0));
+        // Impossible geometry.
+        assert!(Conv2dSpec::from_shapes(&[8, 8, 3], &[50, 50, 4], 3, 3).is_none());
+    }
+
+    fn small_conv_spec() -> Conv2dSpec {
+        Conv2dSpec { h: 9, w: 7, c_in: 5, c_out: 6, kh: 3, kw: 3, stride: 2, pad: 1, relu: true }
+    }
+
+    #[test]
+    fn conv2d_matches_naive_reference_exactly() {
+        let spec = small_conv_spec(); // patch = 45 <= KC: bitwise
+        let mut rng = Rng::new(46);
+        let x = randv(&mut rng, spec.in_len(), 1.0);
+        let w = randv(&mut rng, spec.patch() * spec.c_out, 1.0);
+        let bias = randv(&mut rng, spec.c_out, 0.5);
+        let mut y = vec![0.0f32; spec.out_len()];
+        let mut y_ref = vec![0.0f32; spec.out_len()];
+        conv2d(&spec, &x, &w, Some(&bias), &mut y, &mut ConvScratch::new(), 1);
+        conv2d_naive(&spec, &x, &w, Some(&bias), &mut y_ref);
+        assert_eq!(y, y_ref);
+        // Multi-worker conv agrees bitwise too (row-split GEMM).
+        let mut y2 = vec![0.0f32; spec.out_len()];
+        conv2d(&spec, &x, &w, Some(&bias), &mut y2, &mut ConvScratch::new(), 3);
+        assert_eq!(y2, y);
+    }
+
+    #[test]
+    fn conv2d_big_patch_matches_to_epsilon() {
+        // patch = 3*3*64 = 576 > KC: depth panels re-associate.
+        let spec = Conv2dSpec {
+            h: 6,
+            w: 6,
+            c_in: 64,
+            c_out: 8,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            relu: false,
+        };
+        let mut rng = Rng::new(47);
+        let x = randv(&mut rng, spec.in_len(), 1.0);
+        let w = randv(&mut rng, spec.patch() * spec.c_out, 0.2);
+        let mut y = vec![0.0f32; spec.out_len()];
+        let mut y_ref = vec![0.0f32; spec.out_len()];
+        conv2d(&spec, &x, &w, None, &mut y, &mut ConvScratch::new(), 1);
+        conv2d_naive(&spec, &x, &w, None, &mut y_ref);
+        assert!(max_abs_diff(&y, &y_ref) < 1e-3);
+    }
+
+    #[test]
+    fn depthwise_matches_per_channel_conv() {
+        let spec = Conv2dSpec {
+            h: 8,
+            w: 8,
+            c_in: 12,
+            c_out: 12,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            relu: true,
+        };
+        let mut rng = Rng::new(48);
+        let x = randv(&mut rng, spec.in_len(), 1.0);
+        let w = randv(&mut rng, spec.kh * spec.kw * spec.c_in, 1.0);
+        let bias = randv(&mut rng, spec.c_in, 0.5);
+        let mut y = vec![0.0f32; spec.out_len()];
+        dwconv2d(&spec, &x, &w, Some(&bias), &mut y, 1);
+        // Reference: run each channel as its own 1-channel full conv.
+        let one = Conv2dSpec { c_in: 1, c_out: 1, ..spec };
+        for ch in 0..spec.c_in {
+            let xc: Vec<f32> = (0..spec.h * spec.w).map(|p| x[p * spec.c_in + ch]).collect();
+            let wc: Vec<f32> =
+                (0..spec.kh * spec.kw).map(|p| w[p * spec.c_in + ch]).collect();
+            let mut yc = vec![0.0f32; one.out_len()];
+            conv2d_naive(&one, &xc, &wc, Some(&bias[ch..ch + 1]), &mut yc);
+            for p in 0..yc.len() {
+                assert!(
+                    (yc[p] - y[p * spec.c_in + ch]).abs() < 1e-5,
+                    "ch {ch} pix {p}: {} vs {}",
+                    yc[p],
+                    y[p * spec.c_in + ch]
+                );
+            }
+        }
+        // Parallel split agrees exactly.
+        let mut y4 = vec![0.0f32; spec.out_len()];
+        dwconv2d(&spec, &x, &w, Some(&bias), &mut y4, 4);
+        assert_eq!(y4, y);
+    }
+
+    #[test]
+    fn degenerate_shapes_do_not_panic() {
+        // n == 0 with multiple workers used to hit chunks_mut(0).
+        let mut empty: Vec<f32> = Vec::new();
+        gemm(3, 0, 4, &[0.0; 12], &[], &mut empty, 4, false, &mut GemmScratch::new());
+        let mut c = vec![1.0f32; 6];
+        gemm(2, 3, 0, &[], &[], &mut c, 2, false, &mut GemmScratch::new());
+        assert_eq!(c, vec![0.0; 6], "k == 0 zeroes C");
+    }
+
+    #[test]
+    fn gemm_flops_counts_macs_twice() {
+        assert_eq!(gemm_flops(2, 3, 4), 48);
+        let s = small_conv_spec();
+        assert_eq!(s.flops(), gemm_flops(s.out_h() * s.out_w(), s.c_out, s.patch()));
+    }
+}

@@ -1,8 +1,9 @@
 //! Edge-PRUNE runtime (paper §III.D): thread-per-actor engine, bounded
 //! mutex/condvar FIFOs, TCP transmit/receive FIFOs, network conditioning,
-//! device simulation, link health monitoring, metrics, the XLA/PJRT
-//! execution service, and the epoll reactor + timer wheel the serving
-//! layer's event loop runs on.
+//! device simulation, link health monitoring, metrics, the CPU tensor
+//! compute backend (blocked GEMM / conv2d / depthwise, `linalg`), the
+//! XLA/PJRT execution service, and the epoll reactor + timer wheel the
+//! serving layer's event loop runs on.
 
 pub mod device;
 pub mod distributed;
@@ -10,6 +11,7 @@ pub mod engine;
 pub mod fifo;
 pub mod health;
 pub mod kernels;
+pub mod linalg;
 pub mod metrics;
 pub mod net;
 pub mod netsim;

@@ -40,15 +40,22 @@ struct Request {
 #[derive(Clone)]
 pub struct XlaService {
     tx: mpsc::Sender<Request>,
+    root: PathBuf,
 }
 
 impl XlaService {
-    /// Spawn the service: compiles every HLO entry of `model` (with the
-    /// requested variant where available) before returning.
+    /// Spawn the service.  PJRT initialization and HLO compilation are
+    /// **lazy** — they happen on the first `execute` call, not here —
+    /// so a graph whose DNN actors all bind real-compute
+    /// `DnnLayerKernel`s (the offline default) never touches PJRT at
+    /// all, and `spawn` succeeds even with the vendored API stub.
+    /// Actors that do reach the XLA path surface the initialization
+    /// error on their first firing instead.
     pub fn spawn(artifacts: &Path, model: &ModelMeta, variant: Variant) -> Result<XlaService> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let artifacts = artifacts.to_path_buf();
+        let root = artifacts.clone();
         let entries: Vec<HloEntry> =
             model.hlo_order.iter().map(|n| model.hlo_entries[n].clone()).collect();
         std::thread::Builder::new()
@@ -58,7 +65,14 @@ impl XlaService {
         ready_rx
             .recv()
             .map_err(|_| anyhow!("xla service died during startup"))??;
-        Ok(XlaService { tx })
+        Ok(XlaService { tx, root })
+    }
+
+    /// The artifacts directory this service was spawned from (weight
+    /// `.bin` files live here; the real-compute kernel path loads them
+    /// through this).
+    pub fn root(&self) -> &Path {
+        &self.root
     }
 
     /// Execute one actor with raw f32-LE input buffers; returns the raw
@@ -120,19 +134,24 @@ fn service_main(
         Ok(map)
     };
 
-    let compiled = match setup() {
-        Ok(c) => {
-            let _ = ready.send(Ok(()));
-            c
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-
+    // Ready immediately: PJRT + compilation are deferred to the first
+    // request so offline runs that never execute an XLA actor never
+    // pay (or fail) the PJRT setup.
+    let _ = ready.send(Ok(()));
+    let mut compiled: Option<BTreeMap<String, Compiled>> = None;
+    let mut init_err: Option<String> = None;
     while let Ok(req) = rx.recv() {
-        let result = run_one(&compiled, &req.actor, &req.inputs);
+        if compiled.is_none() && init_err.is_none() {
+            match setup() {
+                Ok(c) => compiled = Some(c),
+                Err(e) => init_err = Some(format!("{e:#}")),
+            }
+        }
+        let result = match (&compiled, &init_err) {
+            (Some(c), _) => run_one(c, &req.actor, &req.inputs),
+            (_, Some(e)) => Err(anyhow!("xla service unavailable: {e}")),
+            _ => unreachable!("setup resolved to neither state"),
+        };
         let _ = req.reply.send(result);
     }
 }

@@ -94,23 +94,23 @@ impl BatchQueue {
                 let key = first.plan.key.clone();
                 let mut batch = vec![first];
                 Self::drain_matching(&mut s.queue, &key, &mut batch, max_batch);
+                // One fixed deadline for the whole batch: every wakeup —
+                // straggler push, close, or spurious — re-waits only the
+                // residual, so a stream of wakeups can never re-arm the
+                // linger and stretch the wait past `linger` total.
                 let deadline = Instant::now() + linger;
                 // Linger only while the queue is actually dry: anything
                 // still queued here is another plan's work, and stalling
                 // it for stragglers of THIS plan would trade its latency
                 // for our occupancy.
                 while batch.len() < max_batch && s.queue.is_empty() && !s.closed {
-                    let now = Instant::now();
-                    if now >= deadline {
+                    let Some(residual) = deadline.checked_duration_since(Instant::now())
+                    else {
                         break;
-                    }
-                    let (next, timeout) =
-                        self.not_empty.wait_timeout(s, deadline - now).unwrap();
+                    };
+                    let (next, _) = self.not_empty.wait_timeout(s, residual).unwrap();
                     s = next;
                     Self::drain_matching(&mut s.queue, &key, &mut batch, max_batch);
-                    if timeout.timed_out() {
-                        break;
-                    }
                 }
                 return Some(batch);
             }
@@ -225,6 +225,40 @@ mod tests {
         let batch = q.pop_batch(2, Duration::from_millis(300));
         h.join().unwrap();
         assert_eq!(batch.unwrap().len(), 2, "straggler joined within linger");
+    }
+
+    #[test]
+    fn linger_deadline_is_not_rearmed_by_wakeups() {
+        // A drip of same-plan stragglers (each one a condvar wakeup)
+        // must not extend the linger: the batch returns at the fixed
+        // deadline with whatever arrived, not after the drip ends.
+        let q = Arc::new(BatchQueue::new(64));
+        let p = plan(2);
+        q.push(req(1, 0, &p)).map_err(|_| ()).unwrap();
+        let q2 = q.clone();
+        let p2 = p.clone();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let h = std::thread::spawn(move || {
+            for i in 1..40u64 {
+                if stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+                let _ = q2.push(req(1, i, &p2));
+            }
+        });
+        let t0 = Instant::now();
+        let batch = q.pop_batch(64, Duration::from_millis(150)).unwrap();
+        let waited = t0.elapsed();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            waited < Duration::from_millis(600),
+            "linger re-armed: waited {waited:?} for a 150 ms linger"
+        );
+        assert!(batch.len() < 64, "deadline returned a partial batch");
+        assert!(!batch.is_empty());
+        h.join().unwrap();
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! server.  A session-level availability accounting
 //! ([`FailoverStats`]) is exported as JSON.
 
-use super::model::{client_prepare, local_infer, MODEL_NAME};
+use super::model::{FrameScratch, MODEL_NAME};
 use super::protocol::{
     read_handshake_reply, read_response, switch_payload, write_frame, write_handshake, Handshake,
     ReqKind, RespStatus, Response, Resume,
@@ -253,6 +253,11 @@ pub struct FailoverClient {
     local_streak: u64,
     ever_connected: bool,
     stats: FailoverStats,
+    /// Reusable per-frame stage/digest buffers: the client runs real
+    /// layer compute every request, so the scratch is hoisted out of
+    /// the frame loop (zero-copy sweep).
+    scratch: FrameScratch,
+    payload: Vec<u8>,
 }
 
 /// Read until the terminal response for `seq` arrives, counting replayed
@@ -293,6 +298,8 @@ impl FailoverClient {
             local_streak: 0,
             ever_connected: false,
             stats: FailoverStats::default(),
+            scratch: FrameScratch::new(),
+            payload: Vec::new(),
         }
     }
 
@@ -371,9 +378,11 @@ impl FailoverClient {
                 }
             }
         }
-        // Local-only fallback plan: the frame completes regardless.
+        // Local-only fallback plan (`model::local_infer` semantics, run
+        // through the reusable scratch): the frame completes regardless.
         self.local_streak += 1;
-        let body = local_infer(input);
+        let mut body = Vec::new();
+        self.scratch.expected_into(input, &mut body);
         self.stats.completed += 1;
         self.stats.served_local += 1;
         Ok((body, Served::Local))
@@ -499,16 +508,16 @@ impl FailoverClient {
         if choice.mode != ServingMode::Local && choice.pp != self.session_pp {
             self.ensure_pp(choice.pp)?;
         }
-        let payload = client_prepare(input, self.session_pp);
+        self.scratch.prepare_into(input, self.session_pp, &mut self.payload);
         let t0 = Instant::now();
         let stream = &mut self.conn.as_mut().expect("connected").stream;
-        write_frame(stream, seq, ReqKind::Infer, &payload)?;
+        write_frame(stream, seq, ReqKind::Infer, &self.payload)?;
         let mut reject_retries = 0u32;
         loop {
             let resp = await_response(stream, &mut self.stats, seq)?;
             match resp.status {
                 RespStatus::Ok => {
-                    self.monitor.note_rtt(t0.elapsed(), payload.len() + resp.body.len());
+                    self.monitor.note_rtt(t0.elapsed(), self.payload.len() + resp.body.len());
                     return Ok(resp.body);
                 }
                 RespStatus::Rejected => {
@@ -520,7 +529,7 @@ impl FailoverClient {
                         bail!("admission rejected seq {seq} {reject_retries} times");
                     }
                     std::thread::sleep(Duration::from_millis(2));
-                    write_frame(stream, seq, ReqKind::Infer, &payload)?;
+                    write_frame(stream, seq, ReqKind::Infer, &self.payload)?;
                 }
                 RespStatus::Error => {
                     bail!("server error for seq {seq}: {}", String::from_utf8_lossy(&resp.body))

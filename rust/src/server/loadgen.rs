@@ -24,7 +24,7 @@
 //! even though the affected frames complete via the local fallback.
 
 use super::failover::{availability_ratio, FailoverClient, FailoverConfig};
-use super::model::{client_prepare, expected_digest, make_input, MODEL_NAME};
+use super::model::{make_input_into, FrameScratch, MODEL_NAME, TOKEN_FLOATS};
 use super::protocol::{
     read_handshake_reply, read_response, write_frame, write_handshake, write_request, Handshake,
     ReqKind, RespStatus,
@@ -208,10 +208,15 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
         return Ok(tally);
     }
     let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
+    // Per-session reusable frame buffers: the request loop re-derives
+    // every frame without allocating (zero-copy sweep).
+    let mut scratch = FrameScratch::new();
+    let mut input = vec![0.0f32; TOKEN_FLOATS];
+    let mut payload = Vec::new();
+    let mut expected = Vec::new();
     for r in 0..cfg.requests {
-        let input = make_input(frame_seed(cfg.seed, index, r));
-        let payload = client_prepare(&input, cfg.pp);
-        let expected = expected_digest(&input);
+        make_input_into(frame_seed(cfg.seed, index, r), &mut input);
+        scratch.frame_into(&input, cfg.pp, &mut payload, &mut expected);
         if let Some(s) = &shaper {
             // Serialization pacing + one-way propagation delay, exactly
             // like a TX FIFO riding this link.
@@ -266,12 +271,15 @@ fn resilient_client_main(
         ..FailoverConfig::default()
     });
     let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
+    let mut scratch = FrameScratch::new();
+    let mut input = vec![0.0f32; TOKEN_FLOATS];
+    let mut expected = Vec::new();
     for r in 0..cfg.requests {
         if cfg.chaos_kill_every > 0 && r > 0 && r % cfg.chaos_kill_every == 0 {
             fc.kill_link(); // induced mid-run link failure
         }
-        let input = make_input(frame_seed(cfg.seed, index, r));
-        let expected = expected_digest(&input);
+        make_input_into(frame_seed(cfg.seed, index, r), &mut input);
+        scratch.expected_into(&input, &mut expected);
         if let Some(s) = &shaper {
             let ts = s.send_slot(super::model::TOKEN_BYTES);
             s.delivery_wait(ts);
@@ -465,20 +473,26 @@ pub fn run_session_wave(cfg: &WaveConfig) -> Result<WaveReport> {
     let mut ok = 0u64;
     let mut errors = 0u64;
     let mut sent_at = vec![Instant::now(); streams.len()];
+    // One set of frame buffers serves the whole wave (the driver is
+    // single-threaded by design); per-session expected digests persist
+    // from the write loop so stages run exactly once per frame.
+    let mut scratch = FrameScratch::new();
+    let mut input = vec![0.0f32; TOKEN_FLOATS];
+    let mut payload = Vec::new();
+    let mut expecteds: Vec<Vec<u8>> = vec![Vec::new(); streams.len()];
     for r in 0..cfg.rounds {
         // Write to every session first (sequence numbers start at 1)...
         for (i, s) in streams.iter_mut().enumerate() {
-            let input = make_input(frame_seed(cfg.seed, i, r));
-            let payload = client_prepare(&input, cfg.pp);
+            make_input_into(frame_seed(cfg.seed, i, r), &mut input);
+            scratch.frame_into(&input, cfg.pp, &mut payload, &mut expecteds[i]);
             sent_at[i] = Instant::now();
             write_request(s, r + 1, &payload)?;
         }
         // ...then read every response; the server works them all
         // concurrently while we verify in session order.
         for (i, s) in streams.iter_mut().enumerate() {
-            let expected = expected_digest(&make_input(frame_seed(cfg.seed, i, r)));
             match read_response(s) {
-                Ok(Some(resp)) if resp.status == RespStatus::Ok && resp.body == expected => {
+                Ok(Some(resp)) if resp.status == RespStatus::Ok && resp.body == expecteds[i] => {
                     latency.record(sent_at[i].elapsed());
                     ok += 1;
                 }

@@ -1,29 +1,43 @@
-//! The serving workload: a deterministic synthetic split model.
+//! The serving workload: a deterministic synthetic split model running
+//! **real layer compute**.
 //!
 //! Mirrors the paper's partition-point semantics without needing the
 //! XLA/PJRT artifacts: a 6-actor chain (`input -> s1..s4 -> sink`) over
-//! `TOKEN_FLOATS`-wide f32 tokens.  A session handshakes with a partition
-//! point `pp`; the client executes stages `1..pp` locally and ships the
-//! intermediate token, the server executes the remaining stages and
-//! returns the sink digest.  Because client + server always apply the
-//! full stage chain, the correct response for a given input is
-//! *independent of pp* — which is what lets the loadgen verify every
-//! response byte-for-byte at any partition point.
+//! `TOKEN_FLOATS`-wide f32 tokens.  Each stage is a genuine two-layer
+//! dense block executed through `runtime::linalg::matvec` (seeded
+//! deterministic weights, ReLU hidden layer, bounded output remap), so
+//! serving latency measures hardware, not timers.  A session handshakes
+//! with a partition point `pp`; the client executes stages `1..pp`
+//! locally and ships the intermediate token, the server executes the
+//! remaining stages and returns the sink digest.  Because client +
+//! server always apply the full stage chain — through the *same* kernel
+//! code with a fixed accumulation order — the correct response for a
+//! given input is independent of pp and bit-exact across processes,
+//! which is what lets the loadgen verify every response byte-for-byte
+//! at any partition point.
 //!
 //! The server side is compiled through the real `compiler::compile` path
 //! (client/server mapping cut at pp), so the plan cache stores genuine
 //! `DeploymentPlan`s and the per-worker `EngineShard` derives its stage
 //! range from the compiled `DevicePlan` rather than from the handshake.
+//! Each shard owns a bump-allocated scratch arena (`util::arena`) plus a
+//! response-buffer pool: the compute path performs **zero heap
+//! allocations** per steady-state frame when response buffers are
+//! recycled (proved by `rust/tests/alloc.rs`); the serving path retains
+//! bodies in the replay ring, so it keeps exactly one response-body
+//! allocation per frame and nothing else.
 
 use crate::compiler::{DeploymentPlan, PlanKey};
-use crate::dataflow::AppGraph;
+use crate::dataflow::{AppGraph, TokenPool};
 use crate::platform::{Mapping, PlatformGraph};
 use crate::runtime::device::DeviceModel;
+use crate::runtime::linalg;
 use crate::runtime::netsim::LinkModel;
+use crate::util::arena::{Arena, ArenaBuf};
 use crate::util::rng::Rng;
 use crate::util::tensor;
 use anyhow::{anyhow, bail, ensure, Result};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 pub const MODEL_NAME: &str = "synthetic";
 pub const TOKEN_FLOATS: usize = 1024;
@@ -46,55 +60,176 @@ pub fn actor_order() -> Vec<String> {
     names
 }
 
-/// One compute stage: a seeded neighbour-mixing pass.  Pure f32 ops in a
-/// fixed iteration order, so client and server agree bit-for-bit.
-pub fn apply_stage(stage: usize, x: &mut [f32]) {
-    let a = 0.731 + stage as f32 * 0.17;
-    let b = 0.113 * stage as f32;
-    let n = x.len();
-    for _round in 0..4 {
-        let mut prev = x[n - 1];
-        for item in x.iter_mut() {
-            let cur = *item;
-            *item = (cur * a + prev * 0.25 + b).rem_euclid(3.0) - 1.5;
-            prev = cur;
+/// Hidden width of each stage's two-layer dense block.
+pub const STAGE_HIDDEN: usize = 64;
+
+/// Per-stage parameters of the real compute chain.
+struct StageNet {
+    /// `STAGE_HIDDEN x TOKEN_FLOATS`, row-major.
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    /// `TOKEN_FLOATS x STAGE_HIDDEN`, row-major.
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+/// Deterministic seeded stage weights, generated once per process.
+/// Every process derives identical parameters, so client and server
+/// agree without shipping weights.
+fn stage_nets() -> &'static [StageNet] {
+    static NETS: OnceLock<Vec<StageNet>> = OnceLock::new();
+    NETS.get_or_init(|| {
+        fn gen(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+            (0..n).map(|_| rng.f32_range(-scale, scale)).collect()
         }
+        (1..=NUM_STAGES)
+            .map(|stage| {
+                let mut rng = Rng::new(0xED9E_5EED ^ ((stage as u64) << 8));
+                StageNet {
+                    w1: gen(&mut rng, STAGE_HIDDEN * TOKEN_FLOATS, 0.05),
+                    b1: gen(&mut rng, STAGE_HIDDEN, 0.5),
+                    w2: gen(&mut rng, TOKEN_FLOATS * STAGE_HIDDEN, 0.2),
+                    b2: gen(&mut rng, TOKEN_FLOATS, 0.5),
+                }
+            })
+            .collect()
+    })
+}
+
+/// One compute stage, allocation-free: `h = relu(W1 x + b1)` then
+/// `x = wrap(W2 h + b2)` where `wrap` folds values into [-1.5, 1.5).
+/// Both matvecs run through `linalg::matvec`, whose accumulation order
+/// is fixed, so client and server agree bit-for-bit at any partition
+/// point.  `h` must be `STAGE_HIDDEN` long and `y` as long as `x`.
+pub fn apply_stage_scratch(stage: usize, x: &mut [f32], h: &mut [f32], y: &mut [f32]) {
+    let net = &stage_nets()[stage - 1];
+    linalg::matvec(STAGE_HIDDEN, TOKEN_FLOATS, &net.w1, x, Some(&net.b1), true, h);
+    linalg::matvec(TOKEN_FLOATS, STAGE_HIDDEN, &net.w2, h, Some(&net.b2), false, y);
+    for (xi, yi) in x.iter_mut().zip(y.iter()) {
+        *xi = yi.rem_euclid(3.0) - 1.5;
     }
 }
 
+/// Allocating convenience wrapper around [`apply_stage_scratch`].
+pub fn apply_stage(stage: usize, x: &mut [f32]) {
+    let mut h = vec![0.0f32; STAGE_HIDDEN];
+    let mut y = vec![0.0f32; x.len()];
+    apply_stage_scratch(stage, x, &mut h, &mut y);
+}
+
 /// Sink digest: fold the token down to `OUT_FLOATS` strided sums.
-pub fn digest(x: &[f32]) -> Vec<f32> {
-    let mut out = vec![0.0f32; OUT_FLOATS];
+pub fn digest_into(x: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
     for (i, v) in x.iter().enumerate() {
         out[i % OUT_FLOATS] += v;
     }
+}
+
+/// Allocating convenience wrapper around [`digest_into`].
+pub fn digest(x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; OUT_FLOATS];
+    digest_into(x, &mut out);
     out
 }
 
 /// Deterministic input frame for (seed) — the loadgen's synthetic camera.
 pub fn make_input(seed: u64) -> Vec<f32> {
-    let mut bytes = vec![0u8; TOKEN_BYTES];
-    Rng::new(seed).fill_f32(&mut bytes, 0.0, 1.0);
-    tensor::bytes_to_f32(&bytes)
+    let mut input = vec![0.0f32; TOKEN_FLOATS];
+    make_input_into(seed, &mut input);
+    input
+}
+
+/// Allocation-free input frame generation (loadgen hot loop).
+pub fn make_input_into(seed: u64, out: &mut [f32]) {
+    let mut rng = Rng::new(seed);
+    for v in out.iter_mut() {
+        *v = rng.f32_range(0.0, 1.0);
+    }
 }
 
 /// Client half of a session at partition point `pp`: run stages `1..pp`
 /// and serialize the intermediate token.
 pub fn client_prepare(input: &[f32], pp: usize) -> Vec<u8> {
-    let mut x = input.to_vec();
-    for k in 1..pp {
-        apply_stage(k, &mut x);
-    }
-    tensor::f32_to_bytes(&x)
+    let mut scratch = FrameScratch::new();
+    let mut out = Vec::new();
+    scratch.prepare_into(input, pp, &mut out);
+    out
 }
 
 /// Ground-truth response for an input frame (pp-independent).
 pub fn expected_digest(input: &[f32]) -> Vec<u8> {
-    let mut x = input.to_vec();
-    for k in 1..=NUM_STAGES {
-        apply_stage(k, &mut x);
+    let mut scratch = FrameScratch::new();
+    let mut out = Vec::new();
+    scratch.expected_into(input, &mut out);
+    out
+}
+
+/// Reusable client-side buffers: the loadgen runs thousands of frames
+/// per session, so the per-frame stage/digest work reuses one set of
+/// scratch vectors instead of allocating per request.
+pub struct FrameScratch {
+    x: Vec<f32>,
+    h: Vec<f32>,
+    y: Vec<f32>,
+    d: Vec<f32>,
+}
+
+impl Default for FrameScratch {
+    fn default() -> Self {
+        FrameScratch::new()
     }
-    tensor::f32_to_bytes(&digest(&x))
+}
+
+impl FrameScratch {
+    pub fn new() -> Self {
+        FrameScratch {
+            x: vec![0.0; TOKEN_FLOATS],
+            h: vec![0.0; STAGE_HIDDEN],
+            y: vec![0.0; TOKEN_FLOATS],
+            d: vec![0.0; OUT_FLOATS],
+        }
+    }
+
+    fn run_stages(&mut self, input: &[f32], upto: usize) {
+        self.x.copy_from_slice(input);
+        for k in 1..=upto {
+            apply_stage_scratch(k, &mut self.x, &mut self.h, &mut self.y);
+        }
+    }
+
+    /// Stages `1..pp` + serialization into `out` (cleared, reused).
+    pub fn prepare_into(&mut self, input: &[f32], pp: usize, out: &mut Vec<u8>) {
+        self.run_stages(input, pp.saturating_sub(1));
+        tensor::f32_extend_bytes(&self.x, out);
+    }
+
+    /// Full chain + digest into `out` (cleared, reused).
+    pub fn expected_into(&mut self, input: &[f32], out: &mut Vec<u8>) {
+        self.run_stages(input, NUM_STAGES);
+        digest_into(&self.x, &mut self.d);
+        tensor::f32_extend_bytes(&self.d, out);
+    }
+
+    /// One frame's client payload AND ground-truth digest in a single
+    /// pass: stages `1..pp` produce the payload, then the chain
+    /// *continues in place* through `pp..=NUM_STAGES` for the digest —
+    /// each stage executes exactly once, where the separate
+    /// `prepare_into` + `expected_into` pair would rerun the prefix.
+    pub fn frame_into(
+        &mut self,
+        input: &[f32],
+        pp: usize,
+        payload: &mut Vec<u8>,
+        expected: &mut Vec<u8>,
+    ) {
+        self.run_stages(input, pp.saturating_sub(1));
+        tensor::f32_extend_bytes(&self.x, payload);
+        for k in pp.max(1)..=NUM_STAGES {
+            apply_stage_scratch(k, &mut self.x, &mut self.h, &mut self.y);
+        }
+        digest_into(&self.x, &mut self.d);
+        tensor::f32_extend_bytes(&self.d, expected);
+    }
 }
 
 /// Execute the **local-only fallback plan** client-side: all compute
@@ -163,20 +298,41 @@ pub fn compile_server_plan(key: &PlanKey) -> Result<ServerModelPlan> {
     Ok(ServerModelPlan { key: key.clone(), deployment, server_stages })
 }
 
-/// One worker's private executor for a plan — the "engine shard".  Owns a
-/// scratch buffer so steady-state inference does not allocate.
+/// One worker's private executor for a plan — the "engine shard".  All
+/// stage/digest scratch lives in a bump-allocated arena sized at bind
+/// time, and response buffers circulate through a [`TokenPool`]
+/// (returned via [`EngineShard::recycle`]).  A warmed-up shard whose
+/// caller recycles bodies performs **zero heap allocations** per
+/// `infer` — proved by the counting-allocator test in
+/// `rust/tests/alloc.rs`; the serving path cannot recycle (the replay
+/// ring retains bodies), so it pays exactly the response-body
+/// allocation and nothing else.
 pub struct EngineShard {
     plan: Arc<ServerModelPlan>,
-    scratch: Vec<f32>,
+    arena: Arena,
+    /// Arena regions in allocation order: token x, hidden h, stage
+    /// output y, digest d.
+    bx: ArenaBuf,
+    bh: ArenaBuf,
+    by: ArenaBuf,
+    bd: ArenaBuf,
+    pool: TokenPool,
 }
 
 impl EngineShard {
     pub fn new(plan: Arc<ServerModelPlan>) -> Self {
-        EngineShard { plan, scratch: vec![0.0; TOKEN_FLOATS] }
+        let mut arena = Arena::with_capacity(2 * TOKEN_FLOATS + STAGE_HIDDEN + OUT_FLOATS);
+        let bx = arena.alloc(TOKEN_FLOATS);
+        let bh = arena.alloc(STAGE_HIDDEN);
+        let by = arena.alloc(TOKEN_FLOATS);
+        let bd = arena.alloc(OUT_FLOATS);
+        EngineShard { plan, arena, bx, bh, by, bd, pool: TokenPool::new(8) }
     }
 
-    /// Run the server-side stages + sink digest over one request token.
-    pub fn infer(&mut self, payload: &[u8]) -> Result<Vec<u8>> {
+    /// Run the server-side stages + sink digest over one request token,
+    /// writing the response into `out` (cleared; no allocation once its
+    /// capacity is warm).
+    pub fn infer_into(&mut self, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
         ensure!(
             payload.len() == TOKEN_BYTES,
             "payload {} bytes, plan {} expects {TOKEN_BYTES}",
@@ -187,18 +343,42 @@ impl EngineShard {
         // the scratch tensor with one memcpy (the stages mutate in
         // place, so a borrow alone cannot replace the scratch);
         // unaligned payloads take the per-element decode.
-        match tensor::cast_f32_slice(payload) {
-            Some(vals) => self.scratch.copy_from_slice(vals),
-            None => {
-                for (dst, chunk) in self.scratch.iter_mut().zip(payload.chunks_exact(4)) {
-                    *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+        {
+            let x = self.arena.get_mut(self.bx);
+            match tensor::cast_f32_slice(payload) {
+                Some(vals) => x.copy_from_slice(vals),
+                None => {
+                    for (dst, chunk) in x.iter_mut().zip(payload.chunks_exact(4)) {
+                        *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+                    }
                 }
             }
         }
         for &k in &self.plan.server_stages {
-            apply_stage(k, &mut self.scratch);
+            let (x, h, y) = self.arena.tri_mut(self.bx, self.bh, self.by);
+            apply_stage_scratch(k, x, h, y);
         }
-        Ok(tensor::f32_to_bytes(&digest(&self.scratch)))
+        let (x, d) = self.arena.pair_mut(self.bx, self.bd);
+        digest_into(x, d);
+        tensor::f32_extend_bytes(d, out);
+        Ok(())
+    }
+
+    /// Run one request and return the response body, drawing the buffer
+    /// from the shard's pool (allocation-free when the caller recycles
+    /// bodies back via [`EngineShard::recycle`]).
+    pub fn infer(&mut self, payload: &[u8]) -> Result<Vec<u8>> {
+        let mut out = self.pool.take(OUT_BYTES);
+        self.infer_into(payload, &mut out)?;
+        Ok(out)
+    }
+
+    /// Hand a response buffer back for reuse.  The serving path retains
+    /// bodies in the session replay ring, so it cannot recycle; callers
+    /// that consume responses immediately (tests, benches) close the
+    /// loop here.
+    pub fn recycle(&mut self, body: Vec<u8>) {
+        self.pool.recycle_buf(body);
     }
 }
 
@@ -273,6 +453,67 @@ mod tests {
             apply_stage(k, &mut x);
         }
         assert!(x.iter().all(|v| v.is_finite() && v.abs() <= 1.5));
+    }
+
+    #[test]
+    fn scratch_paths_match_allocating_paths() {
+        let input = make_input(9);
+        let mut s = FrameScratch::new();
+        let mut out = Vec::new();
+        s.prepare_into(&input, 3, &mut out);
+        assert_eq!(out, client_prepare(&input, 3));
+        s.expected_into(&input, &mut out);
+        assert_eq!(out, expected_digest(&input));
+        // The fused single-pass variant agrees with the pair, at every
+        // partition point.
+        for pp in 1..=MAX_PP {
+            let (mut p1, mut e1) = (Vec::new(), Vec::new());
+            s.frame_into(&input, pp, &mut p1, &mut e1);
+            assert_eq!(p1, client_prepare(&input, pp), "pp {pp} payload");
+            assert_eq!(e1, expected_digest(&input), "pp {pp} digest");
+        }
+        // The stage itself: wrapper vs scratch, bit-for-bit.
+        let mut x = input.clone();
+        let mut x2 = input.clone();
+        apply_stage(2, &mut x);
+        let (mut h, mut y) = (vec![0.0; STAGE_HIDDEN], vec![0.0; TOKEN_FLOATS]);
+        apply_stage_scratch(2, &mut x2, &mut h, &mut y);
+        assert_eq!(x, x2);
+        // And the input generator.
+        let mut buf = vec![0.0f32; TOKEN_FLOATS];
+        make_input_into(9, &mut buf);
+        assert_eq!(buf, input);
+    }
+
+    #[test]
+    fn infer_into_matches_infer_and_recycles() {
+        let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 2)).unwrap());
+        let mut shard = EngineShard::new(plan);
+        let input = make_input(33);
+        let payload = client_prepare(&input, 2);
+        let a = shard.infer(&payload).unwrap();
+        let mut b = Vec::new();
+        shard.infer_into(&payload, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, expected_digest(&input));
+        // Recycled response buffers feed subsequent infer calls.
+        shard.recycle(a);
+        let c = shard.infer(&payload).unwrap();
+        assert_eq!(c, b);
+        assert!(shard.pool.stats().hits >= 1);
+    }
+
+    #[test]
+    fn stages_are_real_compute_not_identity() {
+        // A stage must actually transform the token (distinct stages
+        // differently), or the pp-invariance checks prove nothing.
+        let input = make_input(5);
+        let mut a = input.clone();
+        apply_stage(1, &mut a);
+        assert_ne!(a, input);
+        let mut b = input.clone();
+        apply_stage(2, &mut b);
+        assert_ne!(a, b, "stages share weights");
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //! between the worker's empty `pop` and its `park()` turns the park
 //! into a no-op — so an idle pool burns ~0% CPU without a wake-up
 //! latency cliff.
+//!
+//! This pool is the serving path's compute-parallelism axis: each
+//! worker runs its `EngineShard`'s real `runtime::linalg` kernels
+//! *single-threaded* on its own pinned core, and throughput comes from
+//! running many requests across workers.  (The in-kernel row-split of
+//! `linalg::gemm` exists for the dataflow engine and benches, where one
+//! firing owns the machine.)  Shards keep all stage scratch in a
+//! per-plan arena, so a worker's steady-state request loop performs no
+//! heap allocation beyond the response body the replay ring retains.
 
 use super::batch::PendingRequest;
 use super::metrics::ServingMetrics;

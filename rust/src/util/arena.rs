@@ -1,0 +1,170 @@
+//! Bump-allocated f32 scratch arena for per-plan kernel workspaces.
+//!
+//! A kernel (an `EngineShard`, a conv actor) allocates its scratch
+//! regions once at bind time and reuses them every firing: `alloc`
+//! bumps a cursor inside one backing `Vec<f32>` and returns a small
+//! copyable handle; the backing storage grows only while handles are
+//! being allocated (warmup), after which the steady state touches the
+//! heap zero times.  Handles index the arena instead of borrowing it so
+//! a kernel can hold several scratch regions and borrow them mutably
+//! together ([`Arena::pair_mut`] / [`Arena::tri_mut`]) without fighting
+//! the borrow checker.
+
+/// Handle to one region of an [`Arena`] (offset + length, `Copy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaBuf {
+    off: usize,
+    len: usize,
+}
+
+impl ArenaBuf {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Bump allocator over one `Vec<f32>`.
+#[derive(Debug, Default)]
+pub struct Arena {
+    buf: Vec<f32>,
+    used: usize,
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Arena::default()
+    }
+
+    /// Preallocate the backing store so subsequent `alloc` calls never
+    /// touch the heap.
+    pub fn with_capacity(floats: usize) -> Self {
+        Arena { buf: vec![0.0; floats], used: 0 }
+    }
+
+    /// Reserve `len` zero-initialized floats, growing the backing store
+    /// if (and only if) the preallocated capacity is exhausted.
+    pub fn alloc(&mut self, len: usize) -> ArenaBuf {
+        let off = self.used;
+        self.used += len;
+        if self.used > self.buf.len() {
+            self.buf.resize(self.used, 0.0);
+        }
+        ArenaBuf { off, len }
+    }
+
+    /// Floats handed out so far.
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Forget every handle (callers must re-`alloc`; old handles would
+    /// alias new ones).
+    pub fn reset(&mut self) {
+        self.used = 0;
+    }
+
+    pub fn get(&self, b: ArenaBuf) -> &[f32] {
+        &self.buf[b.off..b.off + b.len]
+    }
+
+    pub fn get_mut(&mut self, b: ArenaBuf) -> &mut [f32] {
+        &mut self.buf[b.off..b.off + b.len]
+    }
+
+    /// Two disjoint regions borrowed mutably at once.  `a` must lie
+    /// entirely before `b` (allocation order).
+    pub fn pair_mut(&mut self, a: ArenaBuf, b: ArenaBuf) -> (&mut [f32], &mut [f32]) {
+        assert!(a.off + a.len <= b.off, "regions must be disjoint and ordered");
+        let (left, right) = self.buf.split_at_mut(b.off);
+        (&mut left[a.off..a.off + a.len], &mut right[..b.len])
+    }
+
+    /// Three disjoint regions borrowed mutably at once, in allocation
+    /// order.
+    pub fn tri_mut(
+        &mut self,
+        a: ArenaBuf,
+        b: ArenaBuf,
+        c: ArenaBuf,
+    ) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        assert!(a.off + a.len <= b.off, "a/b must be disjoint and ordered");
+        assert!(b.off + b.len <= c.off, "b/c must be disjoint and ordered");
+        let (left, rest) = self.buf.split_at_mut(b.off);
+        let (mid, right) = rest.split_at_mut(c.off - b.off);
+        (
+            &mut left[a.off..a.off + a.len],
+            &mut mid[..b.len],
+            &mut right[..c.len],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_within_capacity_never_grows() {
+        let mut a = Arena::with_capacity(16);
+        let probe = a.alloc(0);
+        let base = a.get(probe).as_ptr() as usize;
+        let x = a.alloc(8);
+        let y = a.alloc(8);
+        assert_eq!(a.used(), 16);
+        a.get_mut(x).fill(1.0);
+        a.get_mut(y).fill(2.0);
+        assert_eq!(a.get(x)[0], 1.0);
+        assert_eq!(a.get(y)[7], 2.0);
+        // Backing store never moved: same base pointer.
+        assert_eq!(a.get(x).as_ptr() as usize, base);
+    }
+
+    #[test]
+    fn alloc_beyond_capacity_grows_zeroed() {
+        let mut a = Arena::with_capacity(4);
+        let big = a.alloc(10);
+        assert_eq!(a.get(big), &[0.0; 10][..]);
+    }
+
+    #[test]
+    fn pair_and_tri_borrows_are_disjoint() {
+        let mut a = Arena::with_capacity(12);
+        let (x, y, z) = (a.alloc(4), a.alloc(3), a.alloc(5));
+        {
+            let (xs, ys, zs) = a.tri_mut(x, y, z);
+            xs.fill(1.0);
+            ys.fill(2.0);
+            zs.fill(3.0);
+            assert_eq!((xs.len(), ys.len(), zs.len()), (4, 3, 5));
+        }
+        let (xs, zs) = a.pair_mut(x, z);
+        assert_eq!(xs[3], 1.0);
+        assert_eq!(zs[0], 3.0);
+        assert_eq!(a.get(y), &[2.0; 3][..]);
+    }
+
+    #[test]
+    fn reset_reuses_storage() {
+        let mut a = Arena::with_capacity(8);
+        let x = a.alloc(8);
+        a.get_mut(x).fill(9.0);
+        a.reset();
+        assert_eq!(a.used(), 0);
+        let y = a.alloc(8);
+        assert_eq!(y.len(), 8);
+        // Same storage, stale values visible until overwritten.
+        assert_eq!(a.get(y)[0], 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "disjoint")]
+    fn unordered_pair_panics() {
+        let mut a = Arena::with_capacity(8);
+        let (x, y) = (a.alloc(4), a.alloc(4));
+        let _ = a.pair_mut(y, x);
+    }
+}

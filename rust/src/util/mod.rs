@@ -1,6 +1,8 @@
 //! Substrate utilities built from scratch for the offline environment:
-//! JSON, PRNG, tensor byte I/O, CLI parsing, and a property-test harness.
+//! JSON, PRNG, tensor byte I/O, CLI parsing, a bump-allocated scratch
+//! arena, and a property-test harness.
 
+pub mod arena;
 pub mod cli;
 pub mod json;
 pub mod prop;

@@ -54,10 +54,19 @@ pub fn cast_f32_slice(bytes: &[u8]) -> Option<&[f32]> {
 
 pub fn f32_to_bytes(vals: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(vals.len() * 4);
+    f32_extend_bytes(vals, &mut out);
+    out
+}
+
+/// Serialize into a caller-owned buffer (cleared first): the
+/// allocation-free counterpart of [`f32_to_bytes`] for hot loops that
+/// reuse one output `Vec` across frames.
+pub fn f32_extend_bytes(vals: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(vals.len() * 4);
     for v in vals {
         out.extend_from_slice(&v.to_le_bytes());
     }
-    out
 }
 
 /// Number of elements implied by a shape.
@@ -73,6 +82,15 @@ mod tests {
     fn roundtrip_f32_bytes() {
         let vals = vec![0.0f32, -1.5, 3.25, f32::MAX, f32::MIN_POSITIVE];
         assert_eq!(bytes_to_f32(&f32_to_bytes(&vals)), vals);
+    }
+
+    #[test]
+    fn f32_extend_bytes_clears_and_reuses() {
+        let mut out = f32_to_bytes(&[9.0; 10]); // stale content + capacity
+        let base_cap = out.capacity();
+        f32_extend_bytes(&[1.0, -2.0], &mut out);
+        assert_eq!(out, f32_to_bytes(&[1.0, -2.0]));
+        assert_eq!(out.capacity(), base_cap, "reused, not reallocated");
     }
 
     #[test]

@@ -92,7 +92,11 @@ pub fn detections_to_token(dets: &[Detection], max_dets: usize) -> Vec<u8> {
 }
 
 pub fn token_to_detections(bytes: &[u8]) -> Vec<Detection> {
-    let vals = crate::util::tensor::bytes_to_f32(bytes);
+    // Zero-copy in the common (aligned) case; decode-copy fallback.
+    let vals = match crate::util::tensor::cast_f32_slice(bytes) {
+        Some(s) => std::borrow::Cow::Borrowed(s),
+        None => std::borrow::Cow::Owned(crate::util::tensor::bytes_to_f32(bytes)),
+    };
     vals.chunks_exact(DET_FLOATS)
         .filter(|c| c[1] > 0.0)
         .map(|c| Detection {

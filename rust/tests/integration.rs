@@ -48,7 +48,7 @@ fn vehicle_distributed_over_shaped_link_completes() {
         ["e", "s"].iter().map(|d| (d.to_string(), svc.clone())).collect();
     let devices: BTreeMap<String, DeviceModel> =
         ["e", "s"].iter().map(|d| (d.to_string(), DeviceModel::native(d))).collect();
-    let opts = KernelOptions { frames: 5, seed: 3, keep_last: false };
+    let opts = KernelOptions { frames: 5, seed: 3, keep_last: false, ..Default::default() };
     let reports = run_deployment(&plan, &meta, &services, &devices, &opts).unwrap();
     assert_eq!(reports["e"].frames, 5);
     assert_eq!(reports["s"].actors["l45"].firings, 5);
@@ -81,7 +81,7 @@ fn dual_input_three_devices() {
         .iter()
         .map(|d| (d.to_string(), DeviceModel::native(d)))
         .collect();
-    let opts = KernelOptions { frames: 3, seed: 9, keep_last: false };
+    let opts = KernelOptions { frames: 3, seed: 9, keep_last: false, ..Default::default() };
     let reports = run_deployment(&plan, &meta, &services, &devices, &opts).unwrap();
     assert_eq!(reports["i7"].actors["l45_dual"].firings, 3);
     assert_eq!(reports["n270"].actors["input#2"].firings, 3);
@@ -96,7 +96,7 @@ fn ssd_local_pipeline_end_to_end() {
     let meta = meta.clone();
     let graph = build_graph(&meta, DEFAULT_CAPACITY).unwrap();
     let svc = XlaService::spawn(&m.root, &meta, Variant::Jnp).unwrap();
-    let opts = KernelOptions { frames: 2, seed: 21, keep_last: true };
+    let opts = KernelOptions { frames: 2, seed: 21, keep_last: true, ..Default::default() };
     let (kernels, _) = make_kernels(&meta, &graph, &svc, &opts).unwrap();
     let engine = Engine::new(graph, DeviceModel::native("host")).unwrap();
     let report = engine.run(kernels).unwrap();

@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         .into_iter()
         .collect();
 
-    let opts = KernelOptions { frames, seed: 7, keep_last: false };
+    let opts = KernelOptions { frames, seed: 7, keep_last: false, ..Default::default() };
     let reports = run_deployment(&plan, &meta, &services, &devices, &opts)?;
     for (dev, r) in &reports {
         println!(
@@ -76,7 +76,14 @@ fn main() -> anyhow::Result<()> {
     n2_unscaled.time_scale = 1.0;
     println!(
         "analytic prediction for endpoint: {:.2} ms/frame (paper Fig. 4 @ PP3: 14.9 ms)",
-        predict_endpoint_ms(&meta, &n2_unscaled, &configs.link("n2_i7_eth")?, &order, pp)
+        predict_endpoint_ms(
+            &meta,
+            &n2_unscaled,
+            &configs.link("n2_i7_eth")?,
+            &order,
+            pp,
+            edge_prune::runtime::wire::WireDtype::F32,
+        )
     );
     Ok(())
 }

@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     .into_iter()
     .collect();
 
-    let opts = KernelOptions { frames, seed: 13, keep_last: true };
+    let opts = KernelOptions { frames, seed: 13, keep_last: true, ..Default::default() };
     let reports = run_deployment(&plan, &meta, &services, &devices, &opts)?;
     println!("paper Sec IV.C reference: N270 49 ms, N2 154 ms, server 157 ms");
     for dev in ["n270", "n2", "i7"] {

@@ -69,7 +69,12 @@ fn main() -> anyhow::Result<()> {
     let mut server_ms = Vec::new();
     for rep in 0..repeats {
         let plan = compile(&graph, &pg, &mapping, 17_500 + rep as u16 * 100)?;
-        let opts = KernelOptions { frames: 1, seed: 7 + rep as u64, keep_last: false };
+        let opts = KernelOptions {
+            frames: 1,
+            seed: 7 + rep as u64,
+            keep_last: false,
+            ..Default::default()
+        };
         let reports = run_deployment(&plan, &meta, &services, &devices, &opts)?;
         let e = &reports["n2"];
         let s = &reports["i7"];

@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         [("n2".to_string(), svc_e), ("i7".to_string(), svc_s)].into_iter().collect();
     let devices = [("n2".to_string(), n2), ("i7".to_string(), i7)].into_iter().collect();
 
-    let opts = KernelOptions { frames, seed: 11, keep_last: true };
+    let opts = KernelOptions { frames, seed: 11, keep_last: true, ..Default::default() };
     let reports = run_deployment(&plan, &meta, &services, &devices, &opts)?;
     for (dev, r) in &reports {
         println!(

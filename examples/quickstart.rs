@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     for (label, variant) in [("jnp", Variant::Jnp), ("pallas", Variant::Pallas)] {
         let svc = XlaService::spawn(&manifest.root, meta, variant)?;
-        let opts = KernelOptions { frames: 16, seed: 7, keep_last: true };
+        let opts = KernelOptions { frames: 16, seed: 7, keep_last: true, ..Default::default() };
         let report = run_local(meta, &svc, DeviceModel::native("host"), &opts)?;
         println!(
             "[{label:>6}] {} frames in {:6.1} ms -> {:5.2} ms/frame ({:5.1} fps)",

@@ -11,6 +11,7 @@ use edge_prune::benchkit::{env_or, header, row};
 use edge_prune::explorer::{format_table, sweep, SweepConfig};
 use edge_prune::models::manifest::Manifest;
 use edge_prune::platform::configs::Configs;
+use edge_prune::runtime::wire::WireDtype;
 use edge_prune::runtime::xla_exec::Variant;
 
 fn main() -> anyhow::Result<()> {
@@ -33,6 +34,7 @@ fn main() -> anyhow::Result<()> {
             variant: Variant::Jnp,
             time_scale,
             seed: 5,
+            wire: WireDtype::F32,
         };
         let report = sweep(&manifest, &cfg)?;
         print!("{}", format_table(&report));

@@ -13,6 +13,7 @@ use edge_prune::runtime::device::DeviceModel;
 use edge_prune::runtime::engine::Engine;
 use edge_prune::runtime::fifo::Fifo;
 use edge_prune::runtime::kernels::{ActorKernel, MapKernel, SinkKernel, SourceKernel};
+use edge_prune::runtime::wire::WireDtype;
 use edge_prune::runtime::xla_exec::{Variant, XlaService};
 use edge_prune::util::json::Json;
 use edge_prune::util::tensor;
@@ -173,6 +174,7 @@ fn ablation_netsim(manifest: &Manifest) {
             variant: Variant::Jnp,
             time_scale: 4.0,
             seed: 2,
+            wire: WireDtype::F32,
         };
         let report = sweep(manifest, &cfg).unwrap();
         println!("  {label}: {:.2} ms/frame", report.results[0].endpoint_ms);

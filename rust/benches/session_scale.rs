@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             rounds,
             pp,
             seed: 42,
+            ..WaveConfig::default()
         })?;
         anyhow::ensure!(report.errors == 0, "response errors at {sessions} sessions");
         anyhow::ensure!(report.ok == sessions as u64 * rounds, "lost work at {sessions}");

@@ -11,6 +11,7 @@ use edge_prune::platform::configs::Configs;
 use edge_prune::runtime::kernels::{ActorKernel, FireOutcome};
 use edge_prune::runtime::net::{bind_local, RxKernel, TxKernel};
 use edge_prune::runtime::netsim::{LinkModel, LinkShaper};
+use edge_prune::runtime::wire::WireDtype;
 use std::time::{Duration, Instant};
 
 fn measure(link: LinkModel, msg_bytes: usize, msgs: usize) -> anyhow::Result<(f64, f64)> {
@@ -19,7 +20,7 @@ fn measure(link: LinkModel, msg_bytes: usize, msgs: usize) -> anyhow::Result<(f6
     let shaper = LinkShaper::new(link.clone());
     let rx_shaper = LinkShaper::new(link);
     let rx_h = std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
-        let mut rx = RxKernel::accept(listener, rx_shaper, 1)?;
+        let mut rx = RxKernel::accept(listener, rx_shaper, 1, WireDtype::F32)?;
         let mut latencies = Vec::new();
         loop {
             let t0 = Instant::now();
@@ -32,7 +33,7 @@ fn measure(link: LinkModel, msg_bytes: usize, msgs: usize) -> anyhow::Result<(f6
         }
         Ok(latencies)
     });
-    let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(5))?;
+    let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(5), WireDtype::F32)?;
     let t0 = Instant::now();
     for i in 0..msgs {
         let tok = Token::new(vec![0u8; msg_bytes], i as u64);
@@ -52,11 +53,11 @@ fn measure_latency(link: LinkModel) -> anyhow::Result<f64> {
     let shaper = LinkShaper::new(link.clone());
     let rx_shaper = LinkShaper::new(link);
     let rx_h = std::thread::spawn(move || -> anyhow::Result<Instant> {
-        let mut rx = RxKernel::accept(listener, rx_shaper, 1)?;
+        let mut rx = RxKernel::accept(listener, rx_shaper, 1, WireDtype::F32)?;
         let _ = rx.fire(&[], 0)?;
         Ok(Instant::now()) // delivery instant (after latency wait)
     });
-    let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(5))?;
+    let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(5), WireDtype::F32)?;
     std::thread::sleep(Duration::from_millis(20)); // let RX block first
     let t_send = Instant::now();
     tx.fire(&[vec![Token::new(vec![0u8; 64], 0)]], 0)?;

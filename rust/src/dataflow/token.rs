@@ -62,6 +62,19 @@ impl Token {
     pub fn from_f32(vals: &[f32], seq: u64) -> Self {
         Token::new(crate::util::tensor::f32_to_bytes(vals), seq)
     }
+
+    /// Wire-encode this token's payload (raw little-endian f32 tensor
+    /// bytes) at `dtype` into `out` — what a TX FIFO ships across a cut
+    /// edge.  Errors when the payload is not a whole f32 tensor.  The
+    /// receive side decodes with `wire::decode_to_f32_bytes`, restoring
+    /// the legacy token layout before anything downstream sees it.
+    pub fn encode_wire(
+        &self,
+        dtype: crate::runtime::wire::WireDtype,
+        out: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        crate::runtime::wire::encode_f32_bytes(dtype, &self.data, out)
+    }
 }
 
 // ------------------------------------------------------------------ pool
@@ -224,6 +237,27 @@ mod tests {
         // Ragged payloads never produce a borrowed view.
         let ragged = Token::new(vec![1, 2, 3], 0);
         assert!(ragged.as_f32_slice().is_none());
+    }
+
+    #[test]
+    fn token_wire_round_trip() {
+        use crate::runtime::wire::{decode_to_f32_bytes, WireDtype};
+        let t = Token::from_f32(&[0.5, -1.25, 1.0, 0.0], 9);
+        for dtype in [WireDtype::F32, WireDtype::F16, WireDtype::I8] {
+            let mut enc = Vec::new();
+            t.encode_wire(dtype, &mut enc).unwrap();
+            let mut back = Vec::new();
+            decode_to_f32_bytes(dtype, &enc, &mut back).unwrap();
+            assert_eq!(back.len(), t.len(), "{dtype:?} length preserved");
+            // Values survive within the dtype's precision (exactly for
+            // f32; these specific values are f16-exact too).
+            if dtype != WireDtype::I8 {
+                assert_eq!(Token::new(back, 9).as_f32(), t.as_f32(), "{dtype:?}");
+            }
+        }
+        // Ragged (non-f32) payloads refuse to encode.
+        let ragged = Token::new(vec![1, 2, 3], 0);
+        assert!(ragged.encode_wire(WireDtype::I8, &mut Vec::new()).is_err());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::platform::{Mapping, PlatformGraph};
 use crate::runtime::device::DeviceModel;
 use crate::runtime::distributed::run_deployment;
 use crate::runtime::netsim::LinkModel;
+use crate::runtime::wire::{self, WireDtype};
 use crate::runtime::xla_exec::{Variant, XlaService};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
@@ -40,6 +41,11 @@ pub struct SweepConfig {
     /// reported divided by it (keeps real XLA compute under sim targets).
     pub time_scale: f64,
     pub seed: u64,
+    /// Activation wire dtype of the cut edges (`--wire`): the cost
+    /// model and the live TX/RX FIFOs both use it, so quantizing the
+    /// wire genuinely *moves the optimal partition point* — cuts with
+    /// big activations get ~4x cheaper at int8.
+    pub wire: WireDtype,
 }
 
 #[derive(Debug, Clone)]
@@ -47,8 +53,11 @@ pub struct PpResult {
     pub pp: usize,
     /// Last endpoint-side actor (the cut is just after it).
     pub cut_actor: String,
-    /// Bytes crossing the cut per frame (sum over cut edges).
+    /// Raw f32 bytes crossing the cut per frame (sum over cut edges).
     pub cut_bytes: usize,
+    /// Bytes actually transmitted per frame at the configured wire
+    /// dtype (== `cut_bytes` for f32; ~4x smaller for int8).
+    pub wire_bytes: usize,
     /// Measured endpoint time per frame, ms (time-scale normalized).
     pub endpoint_ms: f64,
     /// Measured server time per frame, ms.
@@ -99,6 +108,7 @@ impl SweepReport {
                                 ("pp", Json::from(r.pp)),
                                 ("cut_actor", Json::from(r.cut_actor.as_str())),
                                 ("cut_bytes", Json::from(r.cut_bytes)),
+                                ("wire_bytes", Json::from(r.wire_bytes)),
                                 ("endpoint_ms", Json::from(r.endpoint_ms)),
                                 ("server_ms", Json::from(r.server_ms)),
                                 ("predicted_ms", Json::from(r.predicted_ms)),
@@ -120,7 +130,7 @@ pub fn precedence_order(meta: &ModelMeta) -> Result<Vec<String>> {
         .collect())
 }
 
-/// Bytes crossing the cut for partition point `pp` under `order`.
+/// Raw f32 bytes crossing the cut for partition point `pp` under `order`.
 pub fn cut_bytes(meta: &ModelMeta, order: &[String], pp: usize) -> usize {
     let endpoint: std::collections::BTreeSet<&String> = order[..pp.min(order.len())].iter().collect();
     meta.edges
@@ -130,22 +140,44 @@ pub fn cut_bytes(meta: &ModelMeta, order: &[String], pp: usize) -> usize {
         .sum()
 }
 
+/// Bytes actually crossing the cut at `dtype`: each cut edge's f32
+/// tensor re-encoded per element (plus the i8 scale header per edge).
+/// Edges whose byte count is not a whole f32 tensor ship raw.
+pub fn wire_cut_bytes(meta: &ModelMeta, order: &[String], pp: usize, dtype: WireDtype) -> usize {
+    let endpoint: std::collections::BTreeSet<&String> = order[..pp.min(order.len())].iter().collect();
+    meta.edges
+        .iter()
+        .filter(|e| endpoint.contains(&e.src) != endpoint.contains(&e.dst))
+        .map(|e| {
+            if e.bytes % 4 == 0 {
+                wire::encoded_len(dtype, e.bytes / 4)
+            } else {
+                e.bytes
+            }
+        })
+        .sum()
+}
+
 /// Analytic endpoint cost model (per frame, unscaled ms).
 /// Multicore endpoints pipeline compute against TX serialization
 /// (steady-state = max); single-core endpoints serialize them (sum).
+/// Transmission is costed at the negotiated wire dtype's
+/// bytes-per-element, not hard-coded f32 — quantizing the wire shifts
+/// which partition point wins.
 pub fn predict_endpoint_ms(
     meta: &ModelMeta,
     endpoint: &DeviceModel,
     link: &LinkModel,
     order: &[String],
     pp: usize,
+    dtype: WireDtype,
 ) -> f64 {
     let flops = meta.flops_map();
     let compute: f64 = order[..pp.min(order.len())]
         .iter()
         .map(|a| endpoint.target_ms(a, flops.get(a).copied().unwrap_or(0)))
         .sum();
-    let bytes = cut_bytes(meta, order, pp);
+    let bytes = wire_cut_bytes(meta, order, pp, dtype);
     let tx = if bytes > 0 { link.tx_time_ms(bytes) } else { 0.0 };
     if endpoint.cores == 1 {
         compute + tx
@@ -198,7 +230,13 @@ pub fn sweep(manifest: &Manifest, cfg: &SweepConfig) -> Result<SweepReport> {
     .into_iter()
     .collect();
 
-    let opts = KernelOptions { frames: cfg.frames, seed: cfg.seed, keep_last: false, ..Default::default() };
+    let opts = KernelOptions {
+        frames: cfg.frames,
+        seed: cfg.seed,
+        keep_last: false,
+        wire: cfg.wire,
+        ..Default::default()
+    };
     let mut results = Vec::new();
     for (i, &pp) in cfg.pps.iter().enumerate() {
         if pp == 0 || pp > order.len() {
@@ -238,9 +276,17 @@ pub fn sweep(manifest: &Manifest, cfg: &SweepConfig) -> Result<SweepReport> {
             pp,
             cut_actor: order[pp - 1].clone(),
             cut_bytes: cut_bytes(&meta, &order, pp),
+            wire_bytes: wire_cut_bytes(&meta, &order, pp, cfg.wire),
             endpoint_ms: e_ms,
             server_ms: s_ms,
-            predicted_ms: predict_endpoint_ms(&meta, &base_endpoint, &cfg.link, &order, pp),
+            predicted_ms: predict_endpoint_ms(
+                &meta,
+                &base_endpoint,
+                &cfg.link,
+                &order,
+                pp,
+                cfg.wire,
+            ),
         });
     }
     let mut base_endpoint = cfg.endpoint.clone();
@@ -260,13 +306,14 @@ pub fn format_table(report: &SweepReport) -> String {
         "# full endpoint inference: {:.1} ms/frame\n",
         report.full_endpoint_ms
     ));
-    s.push_str("PP  cut-after         cut-KB   endpoint-ms  server-ms  predicted-ms\n");
+    s.push_str("PP  cut-after         cut-KB  wire-KB   endpoint-ms  server-ms  predicted-ms\n");
     for r in &report.results {
         s.push_str(&format!(
-            "{:<3} {:<17} {:>7.1} {:>12.1} {:>10.1} {:>13.1}\n",
+            "{:<3} {:<17} {:>7.1} {:>8.1} {:>12.1} {:>10.1} {:>13.1}\n",
             r.pp,
             r.cut_actor,
             r.cut_bytes as f64 / 1024.0,
+            r.wire_bytes as f64 / 1024.0,
             r.endpoint_ms,
             r.server_ms,
             r.predicted_ms
@@ -333,8 +380,9 @@ mod tests {
         let order = precedence_order(&meta).unwrap();
         let n2 = vehicle_n2();
         let eth = LinkModel::new("eth", 11.2, 1.49);
-        let p: Vec<f64> =
-            (1..=6).map(|pp| predict_endpoint_ms(&meta, &n2, &eth, &order, pp)).collect();
+        let p: Vec<f64> = (1..=6)
+            .map(|pp| predict_endpoint_ms(&meta, &n2, &eth, &order, pp, WireDtype::F32))
+            .collect();
         let full = predict_full_local_ms(&meta, &n2);
         assert!((full - 18.9).abs() < 1e-6);
         assert!((p[0] - 9.87).abs() < 0.3, "PP1 {}", p[0]); // ~9.0 in paper
@@ -356,13 +404,52 @@ mod tests {
             n270.cost_ms.insert(a.to_string(), ms);
         }
         let eth = LinkModel::new("eth", 11.2, 1.21);
-        let p: Vec<f64> =
-            (1..=6).map(|pp| predict_endpoint_ms(&meta, &n270, &eth, &order, pp)).collect();
+        let p: Vec<f64> = (1..=6)
+            .map(|pp| predict_endpoint_ms(&meta, &n270, &eth, &order, pp, WireDtype::F32))
+            .collect();
         assert!((predict_full_local_ms(&meta, &n270) - 443.0).abs() < 1e-6);
         assert!((p[0] - 28.1).abs() < 1.0, "PP1 {}", p[0]); // paper: 28.6
         assert!((p[1] - 167.5).abs() < 1.5, "PP2 {}", p[1]); // paper: 167
         // PP2 is the privacy-preserving optimum on N270.
         assert!(p[1] < p[2] && p[1] < p[3] && p[1] < p[4] && p[1] < p[5]);
+    }
+
+    #[test]
+    fn int8_wire_shrinks_cut_bytes_and_shifts_the_optimum() {
+        let Some(meta) = meta() else { return };
+        let order = precedence_order(&meta).unwrap();
+        // Wire bytes: ~4x fewer at int8 on every f32 cut (+4-byte scale
+        // header per cut edge), exactly 2x at f16.
+        for pp in 1..=4 {
+            let f32b = wire_cut_bytes(&meta, &order, pp, WireDtype::F32);
+            assert_eq!(f32b, cut_bytes(&meta, &order, pp), "f32 wire == raw");
+            assert_eq!(wire_cut_bytes(&meta, &order, pp, WireDtype::F16), f32b / 2);
+            let i8b = wire_cut_bytes(&meta, &order, pp, WireDtype::I8);
+            assert!(i8b <= f32b / 4 + 8, "pp {pp}: {i8b} vs {f32b}");
+        }
+        assert_eq!(wire_cut_bytes(&meta, &order, 6, WireDtype::I8), 0, "fully local");
+        // The N2/Ethernet sweep: at f32 the huge l1->l2 cut makes PP2
+        // the worst point; at int8 its transmission cost drops ~4x, so
+        // the predicted optimum must move (and every pp with a cut gets
+        // strictly cheaper or equal).
+        let n2 = vehicle_n2();
+        let eth = LinkModel::new("eth", 11.2, 1.49);
+        let at = |dtype| -> Vec<f64> {
+            (1..=6).map(|pp| predict_endpoint_ms(&meta, &n2, &eth, &order, pp, dtype)).collect()
+        };
+        let pf = at(WireDtype::F32);
+        let pq = at(WireDtype::I8);
+        for (pp, (f, q)) in pf.iter().zip(&pq).enumerate() {
+            assert!(q <= f, "pp {}: int8 {} > f32 {}", pp + 1, q, f);
+        }
+        // PP2's 294912-byte cut was transmission-dominated: int8 must
+        // cut its predicted time by more than 2x...
+        assert!(pq[1] < pf[1] / 2.0, "PP2 {} vs {}", pq[1], pf[1]);
+        // ...which drags the early cuts below the f32 privacy optimum
+        // (PP3): quantization genuinely changes the best split's cost.
+        let best_f32 = pf.iter().cloned().fold(f64::INFINITY, f64::min);
+        let best_i8 = pq.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(best_i8 < best_f32, "int8 best {best_i8} vs f32 best {best_f32}");
     }
 
     #[test]
@@ -382,6 +469,7 @@ mod tests {
             variant: Variant::Jnp,
             time_scale: 4.0,
             seed: 5,
+            wire: WireDtype::F32,
         };
         let report = sweep(&manifest, &cfg).unwrap();
         assert_eq!(report.results.len(), 2);

@@ -6,10 +6,13 @@
 //! analyzer, the compiler/synthesizer (automatic TX/RX FIFO insertion),
 //! the thread-per-actor runtime with TCP transmit/receive FIFOs, a
 //! dependency-free CPU tensor compute backend (`runtime::linalg`:
-//! cache-blocked parallel GEMM, im2col conv2d, direct depthwise conv —
-//! DNN actors execute real arithmetic, with the device cost model
-//! padding only the calibration residual), the partition-point
-//! Explorer, the PJRT bridge that executes the AOT-compiled per-actor
+//! cache-blocked parallel GEMM in f32 and int8, im2col conv2d, direct
+//! depthwise conv — DNN actors execute real arithmetic, with the
+//! device cost model padding only the calibration residual), the
+//! compact activation wire codec (`runtime::wire`: int8/fp16 payloads
+//! across the partition point, negotiated as a protocol-v3 capability),
+//! the partition-point Explorer (transmission costed at the wire
+//! dtype), the PJRT bridge that executes the AOT-compiled per-actor
 //! HLO executables produced by `python/compile`,
 //! and the multi-tenant edge inference server (`server`): an
 //! event-driven core (one epoll reactor + timer wheel,

@@ -24,6 +24,7 @@ use edge_prune::platform::configs::Configs;
 use edge_prune::platform::{Mapping, PlatformGraph};
 use edge_prune::runtime::device::DeviceModel;
 use edge_prune::runtime::distributed::{bind_rx_listeners, run_device};
+use edge_prune::runtime::wire::{Precision, WireDtype};
 use edge_prune::runtime::xla_exec::{Variant, XlaService};
 use edge_prune::util::cli::Args;
 
@@ -40,17 +41,23 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
   run:     --device NAME --frames N --variant jnp|pallas --time-scale S
            --no-pad (raw kernel speed: skip cost-model residual padding)
            --kernel-threads N (row-split workers inside each DNN kernel)
+           --precision f32|int8 (int8 GEMM/matvec compute path)
   compile: --endpoint NAME --server NAME --link NAME --pp K --base-port P
   explore: --endpoint NAME --server NAME --link NAME --pps 1,2,3 --frames N
            --time-scale S --json --no-pad
-  worker:  --role endpoint|server --pp K --no-pad (+ compile flags)
+           --wire f32|f16|int8 (activation wire dtype of the cut edges;
+           the cost model + live TX/RX FIFOs both honor it)
+  worker:  --role endpoint|server --pp K --no-pad --precision f32|int8
+           --wire f32|f16|int8 (both workers must agree) (+ compile flags)
   serve:   --port P --bind HOST --max-sessions N --max-queue N --max-batch N
            --batch-linger-us US --workers N --no-pin --idle-timeout SECS
            --detach-linger SECS --replay-ring N --write-high-water BYTES
-           --duration SECS (0 = until killed)
+           --duration SECS (0 = until killed) --precision f32|int8
+           --no-wire-codec (force raw-f32 frames for every session)
   loadgen: --addr HOST:PORT --clients N --requests N --pp K --link NAME
            --seed S --json --resilient --chaos K (kill each client's link
            every K requests; implies --resilient)
+           --wire f32|f16|int8 (requested; the server may downgrade)
 ";
 
 fn run() -> Result<()> {
@@ -105,6 +112,14 @@ fn variant(args: &Args) -> Result<Variant> {
         "pallas" => Ok(Variant::Pallas),
         v => bail!("unknown --variant {v} (jnp|pallas)"),
     }
+}
+
+fn precision(args: &Args) -> Result<Precision> {
+    Precision::parse(args.str_or("precision", "f32"))
+}
+
+fn wire(args: &Args) -> Result<WireDtype> {
+    WireDtype::parse(args.str_or("wire", "f32"))
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {
@@ -174,6 +189,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         seed: args.usize_or("seed", 7)? as u64,
         keep_last: true,
         threads: args.usize_or("kernel-threads", 1)?,
+        precision: precision(args)?,
         ..Default::default()
     };
     let report = run_local(&meta, &svc, device, &opts)?;
@@ -219,6 +235,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         variant: variant(args)?,
         time_scale: args.f64_or("time-scale", 1.0)?,
         seed: args.usize_or("seed", 7)? as u64,
+        wire: wire(args)?,
     };
     let report = sweep(&m, &cfg)?;
     if args.bool_flag("json") {
@@ -253,6 +270,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         replay_ring: args.usize_or("replay-ring", 64)?,
         write_high_water: args.usize_or("write-high-water", 1 << 20)?,
+        wire_caps: if args.bool_flag("no-wire-codec") {
+            0
+        } else {
+            ServerConfig::default().wire_caps
+        },
+        precision: precision(args)?,
     };
     let duration = args.usize_or("duration", 0)?;
     let server = Server::start(cfg)?;
@@ -296,6 +319,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         seed: args.usize_or("seed", 7)? as u64,
         resilient: args.bool_flag("resilient"),
         chaos_kill_every: chaos, // implies resilient via LoadgenConfig::is_resilient
+        wire: wire(args)?,
     };
     let report = run_loadgen(&cfg)?;
     if args.bool_flag("json") {
@@ -355,6 +379,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         seed: args.usize_or("seed", 7)? as u64,
         keep_last: false,
         threads: args.usize_or("kernel-threads", 1)?,
+        precision: precision(args)?,
+        wire: wire(args)?,
         ..Default::default()
     };
     let report = run_device(dp, &meta, &svc, device, listeners, &opts)?;

@@ -20,6 +20,7 @@
 use crate::dataflow::{AppGraph, TokenPool};
 use crate::models::manifest::{HloEntry, ModelMeta};
 use crate::runtime::kernels::*;
+use crate::runtime::wire::{Precision, WireDtype};
 use crate::runtime::xla_exec::{XlaKernel, XlaService};
 use crate::util::tensor;
 use crate::vision::kernels::*;
@@ -67,6 +68,14 @@ pub struct KernelOptions {
     /// Shared token buffer pool: real kernels draw output payloads from
     /// it and the engine recycles consumed tokens into it.
     pub pool: TokenPool,
+    /// Compute precision of the real DNN kernels (`--precision`): f32
+    /// reference kernels or the int8 GEMM/matvec path.
+    pub precision: Precision,
+    /// Activation wire dtype of the TX/RX FIFOs (`--wire`): tokens
+    /// crossing a cut edge transmit as int8/fp16 instead of raw f32.
+    /// Both workers of a deployment must agree (it is a launch-time
+    /// contract here; the serving protocol negotiates it per session).
+    pub wire: WireDtype,
 }
 
 impl Default for KernelOptions {
@@ -78,6 +87,8 @@ impl Default for KernelOptions {
             real_compute: true,
             threads: 1,
             pool: TokenPool::new(64),
+            precision: Precision::F32,
+            wire: WireDtype::F32,
         }
     }
 }
@@ -195,6 +206,7 @@ fn real_layer_kernel(
         opts.threads,
         opts.pool.clone(),
         out_token_bytes.to_vec(),
+        opts.precision,
     )?))
 }
 

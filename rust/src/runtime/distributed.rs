@@ -40,11 +40,26 @@ pub fn bind_rx_listeners(plan: &DevicePlan) -> Result<BTreeMap<String, TcpListen
 /// Phase 2: connect TX kernels, accept RX kernels, and complete the kernel
 /// map.  One `LinkShaper` instance is shared by all TX FIFOs of this
 /// device that ride the same link (they share the physical pipe).
+/// `wire` is the activation wire dtype every FIFO of this device codes
+/// at — a launch-time contract: both workers of a deployment must pass
+/// the same `--wire`.
 pub fn bind_net_kernels(
     plan: &DevicePlan,
     listeners: BTreeMap<String, TcpListener>,
     kernels: &mut BTreeMap<String, Box<dyn ActorKernel>>,
+    wire: crate::runtime::wire::WireDtype,
 ) -> Result<()> {
+    // An edge whose token is not a whole f32 tensor cannot be
+    // wire-coded; both endpoints derive the downgrade from the same
+    // plan metadata, so the contract stays symmetric (and matches the
+    // explorer's `wire_cut_bytes` pricing rule).
+    let edge_wire = |token_bytes: usize| {
+        if token_bytes % 4 == 0 {
+            wire
+        } else {
+            crate::runtime::wire::WireDtype::F32
+        }
+    };
     let mut tx_shapers: BTreeMap<String, LinkShaper> = BTreeMap::new();
     for tx in &plan.tx {
         let shaper = tx_shapers
@@ -54,7 +69,7 @@ pub fn bind_net_kernels(
         // Compiled plans embed the peer's host from the platform graph's
         // host map (localhost fallback) — no hard-coded address here.
         let addr = format!("{}:{}", tx.peer_host, tx.port);
-        let kernel = TxKernel::connect(&addr, shaper, CONNECT_TIMEOUT)?;
+        let kernel = TxKernel::connect(&addr, shaper, CONNECT_TIMEOUT, edge_wire(tx.token_bytes))?;
         kernels.insert(tx.actor.clone(), Box::new(kernel));
     }
     for rx in &plan.rx {
@@ -70,7 +85,7 @@ pub fn bind_net_kernels(
             plan.graph.out_edges(id).len()
         };
         let shaper = LinkShaper::new(rx.link.clone());
-        let kernel = RxKernel::accept(listener, shaper, out_ports)?;
+        let kernel = RxKernel::accept(listener, shaper, out_ports, edge_wire(rx.token_bytes))?;
         kernels.insert(rx.actor.clone(), Box::new(kernel));
     }
     Ok(())
@@ -87,7 +102,7 @@ pub fn run_device(
     opts: &KernelOptions,
 ) -> Result<RunReport> {
     let (mut kernels, _frames) = make_kernels(meta, &plan.graph, service, opts)?;
-    bind_net_kernels(plan, listeners, &mut kernels)?;
+    bind_net_kernels(plan, listeners, &mut kernels, opts.wire)?;
     let device = expand_cost_table(&device, &plan.graph);
     let mut engine = Engine::new(plan.graph.clone(), device)?;
     engine.set_flops(flops_for_plan(meta, &plan.graph));

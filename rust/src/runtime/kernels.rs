@@ -7,7 +7,8 @@
 //! (`net::{TxKernel, RxKernel}`).
 
 use crate::dataflow::{Token, TokenPool};
-use crate::runtime::linalg::{self, Conv2dSpec, ConvScratch};
+use crate::runtime::linalg::{self, Conv2dSpec, ConvScratch, ConvScratchI8};
+use crate::runtime::wire::Precision;
 use crate::util::arena::{Arena, ArenaBuf};
 use crate::util::rng::Rng;
 use crate::util::tensor;
@@ -265,17 +266,37 @@ pub fn synth_weights(name: &str, len: usize, scale: f32) -> Vec<f32> {
     (0..len).map(|_| rng.f32_range(-scale, scale)).collect()
 }
 
+/// Bind-time int8 calibration of one layer: per-output-channel weight
+/// scales (columns for conv, rows for dense) derived once from the f32
+/// parameters, plus the reusable quantized-activation scratch.
+/// Activations quantize per firing with a symmetric per-tensor scale
+/// (zero-point 0) — the dynamic half of the calibration.
+struct QuantParams {
+    wq: Vec<i8>,
+    w_scales: Vec<f32>,
+    /// Quantized activation (dense path; conv quantizes into its own
+    /// scratch ahead of im2col).
+    xq: Vec<i8>,
+    conv: ConvScratchI8,
+}
+
 /// A DNN actor running real CPU compute through `runtime::linalg`:
 /// blocked GEMM conv (im2col), direct depthwise conv, or dense matvec,
 /// each with a fused bias(+ReLU) epilogue.  All scratch lives in a
 /// per-kernel arena sized at bind time, and output payloads come from
 /// the shared [`TokenPool`], so steady-state firings allocate nothing
 /// beyond broadcast clones.
+///
+/// With [`Precision::Int8`] the conv and dense ops run the int8 GEMM /
+/// matvec path (weights quantized per-channel at bind time, fused
+/// dequantize+bias+ReLU epilogue); depthwise stays f32 — it is
+/// memory-bound, so int8 compute buys nothing there.
 pub struct DnnLayerKernel {
     name: String,
     op: DnnOp,
     weights: Vec<f32>,
     bias: Option<Vec<f32>>,
+    quant: Option<QuantParams>,
     arena: Arena,
     out_buf: ArenaBuf,
     conv_scratch: ConvScratch,
@@ -288,6 +309,7 @@ pub struct DnnLayerKernel {
 }
 
 impl DnnLayerKernel {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         name: &str,
         op: DnnOp,
@@ -296,6 +318,7 @@ impl DnnLayerKernel {
         threads: usize,
         pool: TokenPool,
         out_token_bytes: Vec<usize>,
+        precision: Precision,
     ) -> anyhow::Result<Self> {
         anyhow::ensure!(
             weights.len() == op.weight_len(),
@@ -327,6 +350,28 @@ impl DnnLayerKernel {
             }
             _ => weights,
         };
+        // Int8 calibration happens here, at bind time: the per-channel
+        // weight scales are a pure function of the (name-seeded or
+        // artifact) parameters, so every process derives identical
+        // quantized weights.
+        let quant = match (precision, &op) {
+            (Precision::F32, _) | (_, DnnOp::DwConv(_)) => None,
+            (Precision::Int8, DnnOp::Conv(s)) => {
+                let w_scales = linalg::column_scales(&weights, s.patch(), s.c_out);
+                let wq = linalg::quantize_columns(&weights, s.patch(), s.c_out, &w_scales);
+                Some(QuantParams { wq, w_scales, xq: Vec::new(), conv: ConvScratchI8::new() })
+            }
+            (Precision::Int8, DnnOp::Dense { in_dim, out_dim }) => {
+                let w_scales = linalg::row_scales(&weights, *out_dim, *in_dim);
+                let wq = linalg::quantize_rows(&weights, *out_dim, *in_dim, &w_scales);
+                Some(QuantParams {
+                    wq,
+                    w_scales,
+                    xq: vec![0i8; *in_dim],
+                    conv: ConvScratchI8::new(),
+                })
+            }
+        };
         let mut arena = Arena::with_capacity(op.out_len());
         let out_buf = arena.alloc(op.out_len());
         Ok(DnnLayerKernel {
@@ -334,6 +379,7 @@ impl DnnLayerKernel {
             op,
             weights,
             bias,
+            quant,
             arena,
             out_buf,
             conv_scratch: ConvScratch::new(),
@@ -351,6 +397,7 @@ impl DnnLayerKernel {
         threads: usize,
         pool: TokenPool,
         out_token_bytes: Vec<usize>,
+        precision: Precision,
     ) -> anyhow::Result<Self> {
         // Scale shrinks with fan-in so activations stay bounded down a
         // deep chain.
@@ -362,7 +409,16 @@ impl DnnLayerKernel {
         let scale = (1.0 / fan_in as f32).sqrt();
         let weights = synth_weights(name, op.weight_len(), scale);
         let bias = synth_weights(&format!("{name}.bias"), op.channels(), 0.1);
-        DnnLayerKernel::new(name, op, weights, Some(bias), threads, pool, out_token_bytes)
+        DnnLayerKernel::new(
+            name,
+            op,
+            weights,
+            Some(bias),
+            threads,
+            pool,
+            out_token_bytes,
+            precision,
+        )
     }
 
     pub fn op(&self) -> &DnnOp {
@@ -383,8 +439,33 @@ impl ActorKernel for DnnLayerKernel {
         );
         {
             let y = self.arena.get_mut(self.out_buf);
-            match &self.op {
-                DnnOp::Conv(spec) => linalg::conv2d(
+            match (&self.op, &mut self.quant) {
+                (DnnOp::Conv(spec), Some(q)) => linalg::conv2d_i8(
+                    spec,
+                    &x,
+                    &q.wq,
+                    &q.w_scales,
+                    self.bias.as_deref(),
+                    y,
+                    &mut q.conv,
+                    self.threads,
+                ),
+                (DnnOp::Dense { in_dim, out_dim }, Some(q)) => {
+                    let xs = linalg::quant_scale(&x);
+                    linalg::quantize_into(&x, xs, &mut q.xq);
+                    linalg::matvec_i8(
+                        *out_dim,
+                        *in_dim,
+                        &q.wq,
+                        &q.w_scales,
+                        &q.xq,
+                        xs,
+                        self.bias.as_deref(),
+                        false,
+                        y,
+                    );
+                }
+                (DnnOp::Conv(spec), None) => linalg::conv2d(
                     spec,
                     &x,
                     &self.weights,
@@ -393,7 +474,8 @@ impl ActorKernel for DnnLayerKernel {
                     &mut self.conv_scratch,
                     self.threads,
                 ),
-                DnnOp::DwConv(spec) => linalg::dwconv2d(
+                // Depthwise never binds quant (memory-bound; stays f32).
+                (DnnOp::DwConv(spec), _) => linalg::dwconv2d(
                     spec,
                     &x,
                     &self.weights,
@@ -401,7 +483,7 @@ impl ActorKernel for DnnLayerKernel {
                     y,
                     self.threads,
                 ),
-                DnnOp::Dense { in_dim, out_dim } => linalg::matvec(
+                (DnnOp::Dense { in_dim, out_dim }, None) => linalg::matvec(
                     *out_dim,
                     *in_dim,
                     &self.weights,
@@ -602,6 +684,7 @@ mod tests {
             1,
             TokenPool::new(8),
             vec![out_bytes],
+            Precision::F32,
         )
         .unwrap();
         let x = synth_weights("t_in", spec.in_len(), 1.0);
@@ -630,6 +713,7 @@ mod tests {
             1,
             TokenPool::disabled(),
             vec![16, 12],
+            Precision::F32,
         )
         .unwrap();
         let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
@@ -664,12 +748,80 @@ mod tests {
             1,
             TokenPool::disabled(),
             vec![8],
+            Precision::F32,
         )
         .is_err());
-        let mut k = DnnLayerKernel::with_synth_weights("ok", op, 1, TokenPool::disabled(), vec![8])
-            .unwrap();
+        let mut k = DnnLayerKernel::with_synth_weights(
+            "ok",
+            op,
+            1,
+            TokenPool::disabled(),
+            vec![8],
+            Precision::F32,
+        )
+        .unwrap();
         let wrong = vec![vec![Token::from_f32(&[1.0; 9], 0)]];
         assert!(k.fire(&wrong, 0).is_err());
+    }
+
+    #[test]
+    fn int8_kernel_tracks_f32_and_is_deterministic() {
+        let spec = Conv2dSpec {
+            h: 6,
+            w: 6,
+            c_in: 4,
+            c_out: 5,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            relu: true,
+        };
+        for op in [DnnOp::Conv(spec), DnnOp::Dense { in_dim: 144, out_dim: 20 }] {
+            let make = |precision| {
+                DnnLayerKernel::with_synth_weights(
+                    "t_q",
+                    op.clone(),
+                    1,
+                    TokenPool::disabled(),
+                    vec![op.out_len() * 4],
+                    precision,
+                )
+                .unwrap()
+            };
+            let x = synth_weights("t_q_in", op.in_len(), 1.0);
+            let y8 = tensor::bytes_to_f32(&fire_layer(&mut make(Precision::Int8), &x)[0]);
+            let yf = tensor::bytes_to_f32(&fire_layer(&mut make(Precision::F32), &x)[0]);
+            // Same geometry, quantization noise only.
+            assert_eq!(y8.len(), yf.len());
+            let diff =
+                y8.iter().zip(&yf).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(diff < 0.25, "{op:?} diff {diff}");
+            assert!(diff > 0.0, "int8 path suspiciously bit-identical to f32");
+            // Bind-time calibration is deterministic: two int8 kernels
+            // over the same name produce identical bytes.
+            let again = tensor::bytes_to_f32(&fire_layer(&mut make(Precision::Int8), &x)[0]);
+            assert_eq!(y8, again);
+        }
+        // Depthwise at int8 precision falls back to the f32 path.
+        let dw = DnnOp::DwConv(Conv2dSpec { c_in: 4, c_out: 4, ..spec });
+        let out_bytes = dw.out_len() * 4;
+        let mk = |p| {
+            DnnLayerKernel::with_synth_weights(
+                "t_dw",
+                dw.clone(),
+                1,
+                TokenPool::disabled(),
+                vec![out_bytes],
+                p,
+            )
+            .unwrap()
+        };
+        let x = synth_weights("t_dw_in", dw.in_len(), 1.0);
+        assert_eq!(
+            fire_layer(&mut mk(Precision::Int8), &x),
+            fire_layer(&mut mk(Precision::F32), &x)
+        );
     }
 
     #[test]

@@ -29,6 +29,16 @@
 //!   in caller-owned [`GemmScratch`]/[`ConvScratch`] buffers that grow
 //!   during warmup and are reused across calls, so the steady state
 //!   performs no heap allocation at `threads == 1`.
+//! * **Int8 path**: [`gemm_i8`] / [`matvec_i8`] / [`conv2d_i8`] run
+//!   i8 x i8 -> i32 with the same Goto blocking and row-split
+//!   parallelism.  Panels pack as k-*pairs* of i16 so the microkernel
+//!   maps onto `vpmaddwd` (two MACs per lane per instruction) — an
+//!   AVX2 microkernel is selected at runtime on x86-64 with a scalar
+//!   fallback computing the identical integer result (integer sums are
+//!   exact, so every int8 path agrees *bitwise* with every other).
+//!   Dequantization is fused into the bias+ReLU epilogue with
+//!   per-output-channel weight scales; activations use symmetric
+//!   per-tensor scales (zero-point 0) from [`quant_scale`].
 
 use crate::platform::affinity;
 
@@ -81,12 +91,6 @@ pub struct GemmScratch {
 impl GemmScratch {
     pub fn new() -> Self {
         GemmScratch::default()
-    }
-}
-
-fn ensure_len(v: &mut Vec<f32>, len: usize) {
-    if v.len() < len {
-        v.resize(len, 0.0);
     }
 }
 
@@ -177,13 +181,13 @@ pub fn gemm_blocked(
         let mut pc = 0;
         while pc < k {
             let kc = KC.min(k - pc);
-            ensure_len(&mut scratch.b_pack, ncp * kc);
+            ensure_len_t(&mut scratch.b_pack, ncp * kc);
             pack_b(b, n, pc, jc, kc, nc, &mut scratch.b_pack);
             let mut ic = 0;
             while ic < m {
                 let mc = MC.min(m - ic);
                 let mcp = mc.div_ceil(MR) * MR;
-                ensure_len(&mut scratch.a_pack, mcp * kc);
+                ensure_len_t(&mut scratch.a_pack, mcp * kc);
                 pack_a(a, k, ic, pc, mc, kc, &mut scratch.a_pack);
                 let mut ir = 0;
                 while ir < mc {
@@ -468,7 +472,7 @@ pub fn conv2d(
     let (rows, patch) = (spec.out_h() * spec.out_w(), spec.patch());
     assert_eq!(w.len(), patch * spec.c_out, "weight shape");
     assert_eq!(y.len(), spec.out_len(), "output shape");
-    ensure_len(&mut scratch.cols, rows * patch);
+    ensure_len_t(&mut scratch.cols, rows * patch);
     im2col(spec, x, &mut scratch.cols[..rows * patch]);
     gemm(
         rows,
@@ -553,6 +557,543 @@ pub fn dwconv2d(
             }
         }
     });
+}
+
+// ---------------------------------------------------------- int8 path
+
+/// Microkernel rows of the int8 GEMM.
+pub const MR_I8: usize = 8;
+/// Microkernel columns of the int8 GEMM (16 i32 accumulators per row:
+/// two 8-lane vectors, fed by `vpmaddwd` pairs).
+pub const NR_I8: usize = 16;
+
+fn ensure_len_t<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
+    if v.len() < len {
+        v.resize(len, T::default());
+    }
+}
+
+/// Largest absolute value of a tensor (0.0 for an empty one).
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Symmetric per-tensor quantization scale: `max|x| / 127` (0.0 for an
+/// all-zero tensor — [`quantize_into`] then emits all zeros and
+/// dequantization multiplies by 0, so the round trip stays exact).
+pub fn quant_scale(x: &[f32]) -> f32 {
+    max_abs(x) / 127.0
+}
+
+/// One symmetric-quantizer step: `clamp(round(v * inv_scale), -127,
+/// 127)` — the -128 code is never produced.  The single definition the
+/// compute path ([`quantize_into`]) and the wire codec both use, so the
+/// bit-exact client/server contract lives in exactly one place.
+#[inline]
+pub fn quantize_one(v: f32, inv_scale: f32) -> i8 {
+    (v * inv_scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize into a caller-owned i8 buffer: `q = clamp(round(x/scale),
+/// -127, 127)` (the -128 code is never produced; zero-point is 0).
+pub fn quantize_into(x: &[f32], scale: f32, out: &mut [i8]) {
+    assert_eq!(x.len(), out.len(), "quantize shape");
+    if scale == 0.0 {
+        out.fill(0);
+        return;
+    }
+    let inv = 1.0 / scale;
+    for (q, v) in out.iter_mut().zip(x) {
+        *q = quantize_one(*v, inv);
+    }
+}
+
+/// Per-row scales of an `(out_dim x in_dim)` row-major weight matrix —
+/// the per-output-channel calibration of [`matvec_i8`].
+pub fn row_scales(w: &[f32], out_dim: usize, in_dim: usize) -> Vec<f32> {
+    assert_eq!(w.len(), out_dim * in_dim, "W shape");
+    (0..out_dim).map(|o| quant_scale(&w[o * in_dim..(o + 1) * in_dim])).collect()
+}
+
+/// Quantize an `(out_dim x in_dim)` matrix row-by-row with [`row_scales`].
+pub fn quantize_rows(w: &[f32], out_dim: usize, in_dim: usize, scales: &[f32]) -> Vec<i8> {
+    assert_eq!(scales.len(), out_dim, "scale shape");
+    let mut out = vec![0i8; w.len()];
+    for o in 0..out_dim {
+        let row = o * in_dim..(o + 1) * in_dim;
+        quantize_into(&w[row.clone()], scales[o], &mut out[row]);
+    }
+    out
+}
+
+/// Per-column scales of a `(k x n)` row-major matrix — the
+/// per-output-channel calibration of a conv weight (`patch x c_out`).
+pub fn column_scales(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * n, "W shape");
+    let mut mx = vec![0.0f32; n];
+    for row in w.chunks_exact(n) {
+        for (m, v) in mx.iter_mut().zip(row) {
+            *m = m.max(v.abs());
+        }
+    }
+    mx.iter().map(|m| m / 127.0).collect()
+}
+
+/// Quantize a `(k x n)` matrix column-by-column with [`column_scales`].
+pub fn quantize_columns(w: &[f32], k: usize, n: usize, scales: &[f32]) -> Vec<i8> {
+    assert_eq!(w.len(), k * n, "W shape");
+    assert_eq!(scales.len(), n, "scale shape");
+    let invs: Vec<f32> = scales.iter().map(|&s| if s == 0.0 { 0.0 } else { 1.0 / s }).collect();
+    let mut out = vec![0i8; w.len()];
+    for (orow, row) in out.chunks_exact_mut(n).zip(w.chunks_exact(n)) {
+        for c in 0..n {
+            // inv == 0 marks a dead (all-zero) channel: quantizes to 0.
+            orow[c] = quantize_one(row[c], invs[c]);
+        }
+    }
+    out
+}
+
+/// Fused dequantize + per-column bias + ReLU epilogue over a
+/// `(rows x ch)` row-major i32 accumulator:
+/// `y = relu(acc * (x_scale * w_scales[c]) + bias[c])`.
+pub fn dequant_bias_relu(
+    acc: &[i32],
+    ch: usize,
+    x_scale: f32,
+    w_scales: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    y: &mut [f32],
+) {
+    assert_eq!(acc.len(), y.len(), "accumulator shape");
+    if ch == 0 {
+        return;
+    }
+    assert_eq!(acc.len() % ch, 0, "ragged accumulator");
+    assert_eq!(w_scales.len(), ch, "scale shape");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), ch, "bias shape");
+    }
+    for (arow, yrow) in acc.chunks_exact(ch).zip(y.chunks_exact_mut(ch)) {
+        for c in 0..ch {
+            let mut v = arow[c] as f32 * (x_scale * w_scales[c]);
+            if let Some(b) = bias {
+                v += b[c];
+            }
+            yrow[c] = if relu { v.max(0.0) } else { v };
+        }
+    }
+}
+
+/// Reference int8 GEMM: `C = A * B` with i32 accumulation, A `(m x k)`,
+/// B `(k x n)`, C `(m x n)`, all row-major.  Integer sums are exact, so
+/// the blocked and parallel paths agree with this *bitwise* for every
+/// shape (no "within one depth panel" caveat).
+pub fn gemm_i8_naive(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += a[i * k + kk] as i32 * b[kk * n + j] as i32;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Reusable packing buffers for the blocked int8 GEMM.  Panels are
+/// stored widened to i16 in k-*pairs* so the microkernel's inner step
+/// feeds `vpmaddwd` directly (two MACs per i32 lane per instruction).
+#[derive(Default)]
+pub struct GemmScratchI8 {
+    a_pack: Vec<i16>,
+    b_pack: Vec<i16>,
+    per_worker: Vec<GemmScratchI8>,
+}
+
+impl GemmScratchI8 {
+    pub fn new() -> Self {
+        GemmScratchI8::default()
+    }
+}
+
+/// Pack an `mc x kc` block of A into MR_I8-row panels of k-pairs:
+/// `a_pack[panel][kk2][r*2 + half]` (i16, zero-padded rows and odd-k
+/// tail).
+fn pack_a_i8(a: &[i8], k: usize, ic: usize, pc: usize, mc: usize, kc: usize, out: &mut [i16]) {
+    let panels = mc.div_ceil(MR_I8);
+    let kc2 = kc.div_ceil(2);
+    for p in 0..panels {
+        let base = p * kc2 * 2 * MR_I8;
+        for kk in 0..kc2 {
+            let kbase = base + kk * 2 * MR_I8;
+            for r in 0..MR_I8 {
+                let row = p * MR_I8 + r;
+                for half in 0..2 {
+                    let kkk = kk * 2 + half;
+                    out[kbase + r * 2 + half] = if row < mc && kkk < kc {
+                        a[(ic + row) * k + pc + kkk] as i16
+                    } else {
+                        0
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// Pack a `kc x nc` block of B into NR_I8-column panels of k-pairs:
+/// `b_pack[panel][kk2][q*2 + half]` (i16, zero-padded).
+fn pack_b_i8(b: &[i8], n: usize, pc: usize, jc: usize, kc: usize, nc: usize, out: &mut [i16]) {
+    let panels = nc.div_ceil(NR_I8);
+    let kc2 = kc.div_ceil(2);
+    for p in 0..panels {
+        let base = p * kc2 * 2 * NR_I8;
+        for kk in 0..kc2 {
+            let kbase = base + kk * 2 * NR_I8;
+            for q in 0..NR_I8 {
+                let col = p * NR_I8 + q;
+                for half in 0..2 {
+                    let kkk = kk * 2 + half;
+                    out[kbase + q * 2 + half] = if col < nc && kkk < kc {
+                        b[(pc + kkk) * n + jc + col] as i16
+                    } else {
+                        0
+                    };
+                }
+            }
+        }
+    }
+}
+
+type AccI8 = [[i32; NR_I8]; MR_I8];
+
+/// Scalar 8x16 int8 microkernel over k-paired panels — the exact
+/// integer semantics the AVX2 variant reproduces.
+fn microkernel_i8_scalar(kc2: usize, ap: &[i16], bp: &[i16], acc: &mut AccI8) {
+    for kk in 0..kc2 {
+        let av = &ap[kk * 2 * MR_I8..kk * 2 * MR_I8 + 2 * MR_I8];
+        let bv = &bp[kk * 2 * NR_I8..kk * 2 * NR_I8 + 2 * NR_I8];
+        for r in 0..MR_I8 {
+            let a0 = av[r * 2] as i32;
+            let a1 = av[r * 2 + 1] as i32;
+            for q in 0..NR_I8 {
+                acc[r][q] += a0 * bv[q * 2] as i32 + a1 * bv[q * 2 + 1] as i32;
+            }
+        }
+    }
+}
+
+/// AVX2 8x16 microkernel: one `vpmaddwd` + `vpaddd` per accumulator
+/// vector per k-pair — 16 MACs per multiply instruction, which is
+/// where the int8 path's ~2x over f32 FMA comes from.  Accumulates
+/// *into* `acc` like the scalar kernel (integer math is exact, so the
+/// two are bitwise equal for any starting accumulator).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_i8_avx2(kc2: usize, ap: &[i16], bp: &[i16], acc: &mut AccI8) {
+    // SAFETY: caller verified AVX2 at runtime; the packers size `ap` to
+    // kc2*2*MR_I8 and `bp` to kc2*2*NR_I8 i16s, so every unaligned
+    // 256-bit load below stays in bounds; loads/stores touch only the
+    // caller's acc rows.
+    unsafe {
+        use std::arch::x86_64::*;
+        let mut vs = [[_mm256_setzero_si256(); 2]; MR_I8];
+        for (row, vr) in acc.iter().zip(vs.iter_mut()) {
+            vr[0] = _mm256_loadu_si256(row.as_ptr() as *const __m256i);
+            vr[1] = _mm256_loadu_si256(row.as_ptr().add(8) as *const __m256i);
+        }
+        for kk in 0..kc2 {
+            let bptr = bp.as_ptr().add(kk * 2 * NR_I8);
+            let b0 = _mm256_loadu_si256(bptr as *const __m256i);
+            let b1 = _mm256_loadu_si256(bptr.add(16) as *const __m256i);
+            let abase = kk * 2 * MR_I8;
+            for (r, vr) in vs.iter_mut().enumerate() {
+                let a0 = *ap.get_unchecked(abase + r * 2) as u16 as u32;
+                let a1 = *ap.get_unchecked(abase + r * 2 + 1) as u16 as u32;
+                let av = _mm256_set1_epi32((a0 | (a1 << 16)) as i32);
+                vr[0] = _mm256_add_epi32(vr[0], _mm256_madd_epi16(av, b0));
+                vr[1] = _mm256_add_epi32(vr[1], _mm256_madd_epi16(av, b1));
+            }
+        }
+        for (row, vr) in acc.iter_mut().zip(vs.iter()) {
+            _mm256_storeu_si256(row.as_mut_ptr() as *mut __m256i, vr[0]);
+            _mm256_storeu_si256(row.as_mut_ptr().add(8) as *mut __m256i, vr[1]);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+#[inline]
+fn microkernel_i8(kc2: usize, ap: &[i16], bp: &[i16], acc: &mut AccI8) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime (cached); the slices
+        // are panel-sized by the packers.
+        unsafe { microkernel_i8_avx2(kc2, ap, bp, acc) };
+        return;
+    }
+    microkernel_i8_scalar(kc2, ap, bp, acc);
+}
+
+/// Cache-blocked, panel-packed int8 GEMM: `C = A * B` with i32
+/// accumulation (same shapes as [`gemm_i8_naive`]).  Single-threaded;
+/// scratch is reused across calls.  Safe for any i8 inputs and
+/// `k < 2^17` (worst-case |acc| = k * 127 * 128 stays far below i32
+/// range for every shape this runtime produces).
+pub fn gemm_i8_blocked(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    scratch: &mut GemmScratchI8,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    if m == 0 || n == 0 || k == 0 {
+        c.fill(0);
+        return;
+    }
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let bpanels = nc.div_ceil(NR_I8);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let kc2 = kc.div_ceil(2);
+            let bstride = kc2 * 2 * NR_I8;
+            ensure_len_t(&mut scratch.b_pack, bpanels * bstride);
+            pack_b_i8(b, n, pc, jc, kc, nc, &mut scratch.b_pack);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let apanels = mc.div_ceil(MR_I8);
+                let astride = kc2 * 2 * MR_I8;
+                ensure_len_t(&mut scratch.a_pack, apanels * astride);
+                pack_a_i8(a, k, ic, pc, mc, kc, &mut scratch.a_pack);
+                let mut ir = 0;
+                while ir < mc {
+                    let mr = MR_I8.min(mc - ir);
+                    let pa = (ir / MR_I8) * astride;
+                    let ap = &scratch.a_pack[pa..pa + astride];
+                    let mut jr = 0;
+                    while jr < nc {
+                        let nr = NR_I8.min(nc - jr);
+                        let pb = (jr / NR_I8) * bstride;
+                        let bp = &scratch.b_pack[pb..pb + bstride];
+                        let mut acc = [[0i32; NR_I8]; MR_I8];
+                        microkernel_i8(kc2, ap, bp, &mut acc);
+                        for r in 0..mr {
+                            let base = (ic + ir + r) * n + jc + jr;
+                            if pc == 0 {
+                                c[base..base + nr].copy_from_slice(&acc[r][..nr]);
+                            } else {
+                                for (cv, av) in c[base..base + nr].iter_mut().zip(&acc[r][..nr]) {
+                                    *cv += av;
+                                }
+                            }
+                        }
+                        jr += NR_I8;
+                    }
+                    ir += MR_I8;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// Parallel blocked int8 GEMM: the same row-range split (and optional
+/// core pinning) as the f32 [`gemm`]; bitwise equal to the
+/// single-threaded result for any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    workers: usize,
+    pin: bool,
+    scratch: &mut GemmScratchI8,
+) {
+    assert_eq!(c.len(), m * n, "C shape");
+    let workers = workers.max(1).min(m.max(1));
+    if workers == 1 || n == 0 {
+        gemm_i8_blocked(m, n, k, a, b, c, scratch);
+        return;
+    }
+    let per = m.div_ceil(workers);
+    if scratch.per_worker.len() < workers {
+        scratch.per_worker.resize_with(workers, GemmScratchI8::default);
+    }
+    std::thread::scope(|s| {
+        for ((t, c_chunk), ws) in
+            c.chunks_mut(per * n).enumerate().zip(scratch.per_worker.iter_mut())
+        {
+            let rows = c_chunk.len() / n;
+            let a_sub = &a[t * per * k..t * per * k + rows * k];
+            s.spawn(move || {
+                if pin {
+                    let _ = affinity::pin_to_core(t % affinity::core_count());
+                }
+                gemm_i8_blocked(rows, n, k, a_sub, b, c_chunk, ws);
+            });
+        }
+    });
+}
+
+/// Quantized dense layer: `y = act(dequant(Wq xq) + b)` with Wq
+/// `(out_dim x in_dim)` row-major i8, per-row scales, and a symmetric
+/// per-tensor activation scale.  i32 accumulation is exact, so the
+/// result is identical on every platform and code path (safe for
+/// `in_dim < 2^17`).
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_i8(
+    out_dim: usize,
+    in_dim: usize,
+    wq: &[i8],
+    w_scales: &[f32],
+    xq: &[i8],
+    x_scale: f32,
+    bias: Option<&[f32]>,
+    relu: bool,
+    y: &mut [f32],
+) {
+    assert_eq!(wq.len(), out_dim * in_dim, "W shape");
+    assert_eq!(w_scales.len(), out_dim, "scale shape");
+    assert_eq!(xq.len(), in_dim, "x shape");
+    assert_eq!(y.len(), out_dim, "y shape");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), out_dim, "bias shape");
+    }
+    const LANES: usize = 16;
+    for o in 0..out_dim {
+        let row = &wq[o * in_dim..(o + 1) * in_dim];
+        let mut acc = [0i32; LANES];
+        let chunks = in_dim / LANES;
+        for ci in 0..chunks {
+            let r = &row[ci * LANES..ci * LANES + LANES];
+            let xv = &xq[ci * LANES..ci * LANES + LANES];
+            for l in 0..LANES {
+                acc[l] += r[l] as i32 * xv[l] as i32;
+            }
+        }
+        let mut s: i32 = acc.iter().sum();
+        for i in chunks * LANES..in_dim {
+            s += row[i] as i32 * xq[i] as i32;
+        }
+        let mut v = s as f32 * (x_scale * w_scales[o]);
+        if let Some(b) = bias {
+            v += b[o];
+        }
+        y[o] = if relu { v.max(0.0) } else { v };
+    }
+}
+
+/// Reusable scratch of the int8 conv: quantized activation, i8 im2col
+/// columns, the i32 GEMM accumulator, and the int8 packing buffers.
+#[derive(Default)]
+pub struct ConvScratchI8 {
+    xq: Vec<i8>,
+    cols: Vec<i8>,
+    acc: Vec<i32>,
+    gemm: GemmScratchI8,
+}
+
+impl ConvScratchI8 {
+    pub fn new() -> Self {
+        ConvScratchI8::default()
+    }
+}
+
+/// Lower a quantized NHWC activation into i8 im2col columns (same
+/// traversal and layout as the f32 [`im2col`]).
+pub fn im2col_i8(spec: &Conv2dSpec, xq: &[i8], cols: &mut [i8]) {
+    assert_eq!(xq.len(), spec.in_len(), "input shape");
+    let (oh, ow, patch) = (spec.out_h(), spec.out_w(), spec.patch());
+    assert_eq!(cols.len(), oh * ow * patch, "cols shape");
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * patch;
+            for ky in 0..spec.kh {
+                let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                for kx in 0..spec.kw {
+                    let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                    let dst = base + (ky * spec.kw + kx) * spec.c_in;
+                    if iy < 0 || iy >= spec.h as isize || ix < 0 || ix >= spec.w as isize {
+                        cols[dst..dst + spec.c_in].fill(0);
+                    } else {
+                        let src = (iy as usize * spec.w + ix as usize) * spec.c_in;
+                        cols[dst..dst + spec.c_in].copy_from_slice(&xq[src..src + spec.c_in]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Int8 2-D convolution: per-tensor activation quantization, i8 im2col
+/// + blocked int8 GEMM, and the fused dequantize+bias+ReLU epilogue
+/// with per-output-channel weight scales.  `wq` is the column-quantized
+/// `(patch x c_out)` weight from [`quantize_columns`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8(
+    spec: &Conv2dSpec,
+    x: &[f32],
+    wq: &[i8],
+    w_scales: &[f32],
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    scratch: &mut ConvScratchI8,
+    workers: usize,
+) {
+    let (rows, patch) = (spec.out_h() * spec.out_w(), spec.patch());
+    assert_eq!(x.len(), spec.in_len(), "input shape");
+    assert_eq!(wq.len(), patch * spec.c_out, "weight shape");
+    assert_eq!(y.len(), spec.out_len(), "output shape");
+    ensure_len_t(&mut scratch.xq, x.len());
+    let x_scale = quant_scale(x);
+    quantize_into(x, x_scale, &mut scratch.xq[..x.len()]);
+    ensure_len_t(&mut scratch.cols, rows * patch);
+    im2col_i8(spec, &scratch.xq[..x.len()], &mut scratch.cols[..rows * patch]);
+    ensure_len_t(&mut scratch.acc, rows * spec.c_out);
+    gemm_i8(
+        rows,
+        spec.c_out,
+        patch,
+        &scratch.cols[..rows * patch],
+        wq,
+        &mut scratch.acc[..rows * spec.c_out],
+        workers,
+        false,
+        &mut scratch.gemm,
+    );
+    dequant_bias_relu(
+        &scratch.acc[..rows * spec.c_out],
+        spec.c_out,
+        x_scale,
+        w_scales,
+        bias,
+        spec.relu,
+        y,
+    );
 }
 
 /// Reference conv for tests: direct 6-loop accumulation in (ky, kx, ci)
@@ -828,5 +1369,204 @@ mod tests {
         assert_eq!(gemm_flops(2, 3, 4), 48);
         let s = small_conv_spec();
         assert_eq!(s.flops(), gemm_flops(s.out_h() * s.out_w(), s.c_out, s.patch()));
+    }
+
+    // ------------------------------------------------------- int8 path
+
+    fn randq(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| rng.f32_range(-127.0, 127.0).round() as i8).collect()
+    }
+
+    #[test]
+    fn gemm_i8_naive_hand_checked() {
+        // [1 2; 3 4] * [5 6; 7 8] = [19 22; 43 50], and a negative mix.
+        let a: [i8; 4] = [1, 2, 3, 4];
+        let b: [i8; 4] = [5, 6, 7, 8];
+        let mut c = [0i32; 4];
+        gemm_i8_naive(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [19, 22, 43, 50]);
+        let a: [i8; 2] = [-127, 127];
+        let b: [i8; 2] = [127, 127];
+        let mut c = [0i32; 1];
+        gemm_i8_naive(1, 1, 2, &a, &b, &mut c);
+        assert_eq!(c, [0]);
+    }
+
+    #[test]
+    fn gemm_i8_blocked_matches_naive_bitwise_everywhere() {
+        let mut rng = Rng::new(51);
+        // Odd k exercises the k-pair zero padding; shapes straddle
+        // partial MR_I8/NR_I8 tiles and multiple MC/NC/KC blocks.
+        let shapes =
+            [(1, 1, 1), (5, 17, 9), (8, 16, 8), (13, 70, 33), (65, 520, 257), (129, 9, 300)];
+        let mut scratch = GemmScratchI8::new();
+        for &(m, n, k) in &shapes {
+            let a = randq(&mut rng, m * k);
+            let b = randq(&mut rng, k * n);
+            let mut c_ref = vec![0i32; m * n];
+            let mut c = vec![0i32; m * n];
+            gemm_i8_naive(m, n, k, &a, &b, &mut c_ref);
+            gemm_i8_blocked(m, n, k, &a, &b, &mut c, &mut scratch);
+            assert_eq!(c, c_ref, "{m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn gemm_i8_parallel_is_bitwise_equal_for_any_worker_count() {
+        let mut rng = Rng::new(52);
+        let (m, n, k) = (70, 40, 95);
+        let a = randq(&mut rng, m * k);
+        let b = randq(&mut rng, k * n);
+        let mut c1 = vec![0i32; m * n];
+        gemm_i8_blocked(m, n, k, &a, &b, &mut c1, &mut GemmScratchI8::new());
+        for workers in [2, 3, 4, 7] {
+            let mut cw = vec![0i32; m * n];
+            gemm_i8(m, n, k, &a, &b, &mut cw, workers, false, &mut GemmScratchI8::new());
+            assert_eq!(cw, c1, "workers {workers}");
+        }
+    }
+
+    #[test]
+    fn gemm_i8_scalar_microkernel_matches_dispatch() {
+        // The runtime-dispatched kernel (AVX2 where available) and the
+        // scalar reference compute identical integers — including from
+        // a nonzero starting accumulator (both *accumulate into* acc).
+        let mut rng = Rng::new(53);
+        let kc2 = 9; // odd pair count, padded tail exercised by packers
+        let ap: Vec<i16> =
+            (0..kc2 * 2 * MR_I8).map(|_| rng.f32_range(-127.0, 127.0) as i16).collect();
+        let bp: Vec<i16> =
+            (0..kc2 * 2 * NR_I8).map(|_| rng.f32_range(-127.0, 127.0) as i16).collect();
+        let mut a1 = [[0i32; NR_I8]; MR_I8];
+        let mut a2 = [[0i32; NR_I8]; MR_I8];
+        for r in 0..MR_I8 {
+            for q in 0..NR_I8 {
+                a1[r][q] = (r * 100 + q) as i32 - 800;
+                a2[r][q] = a1[r][q];
+            }
+        }
+        microkernel_i8(kc2, &ap, &bp, &mut a1);
+        microkernel_i8_scalar(kc2, &ap, &bp, &mut a2);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn gemm_i8_degenerate_shapes_do_not_panic() {
+        let mut empty: Vec<i32> = Vec::new();
+        gemm_i8(3, 0, 4, &[0; 12], &[], &mut empty, 4, false, &mut GemmScratchI8::new());
+        let mut c = vec![1i32; 6];
+        gemm_i8(2, 3, 0, &[], &[], &mut c, 2, false, &mut GemmScratchI8::new());
+        assert_eq!(c, vec![0; 6], "k == 0 zeroes C");
+    }
+
+    #[test]
+    fn quantize_round_trips_within_half_step() {
+        let mut rng = Rng::new(54);
+        let x = randv(&mut rng, 333, 1.5);
+        let scale = quant_scale(&x);
+        assert!(scale > 0.0 && scale <= 1.5 / 127.0 + 1e-9);
+        let mut q = vec![0i8; x.len()];
+        quantize_into(&x, scale, &mut q);
+        for (v, qq) in x.iter().zip(&q) {
+            assert!((*qq as f32 * scale - v).abs() <= scale * 0.5 + 1e-6);
+            assert!(*qq != i8::MIN, "-128 must never be produced");
+        }
+        // All-zero tensor: scale 0, zeros, exact round trip.
+        let z = [0.0f32; 4];
+        assert_eq!(quant_scale(&z), 0.0);
+        let mut qz = [1i8; 4];
+        quantize_into(&z, 0.0, &mut qz);
+        assert_eq!(qz, [0i8; 4]);
+    }
+
+    #[test]
+    fn per_channel_scales_row_and_column() {
+        // 2x3 row-major: rows scale independently...
+        let w = [1.0f32, -2.0, 0.5, 0.0, 0.25, -0.125];
+        let rs = row_scales(&w, 2, 3);
+        assert!((rs[0] - 2.0 / 127.0).abs() < 1e-9);
+        assert!((rs[1] - 0.25 / 127.0).abs() < 1e-9);
+        let qr = quantize_rows(&w, 2, 3, &rs);
+        assert_eq!(qr[1], -127, "row max hits the full range");
+        assert_eq!(qr[4], 127);
+        // ...and columns of the same data scale per column.
+        let cs = column_scales(&w, 2, 3);
+        assert!((cs[0] - 1.0 / 127.0).abs() < 1e-9);
+        assert!((cs[1] - 2.0 / 127.0).abs() < 1e-9);
+        let qc = quantize_columns(&w, 2, 3, &cs);
+        assert_eq!(qc[0], 127);
+        assert_eq!(qc[1], -127);
+        // A dead channel (all zero) quantizes to zeros, no NaN.
+        let dead = [0.0f32, 1.0, 0.0, -1.0];
+        let ds = column_scales(&dead, 2, 2);
+        assert_eq!(ds[0], 0.0);
+        let qd = quantize_columns(&dead, 2, 2, &ds);
+        assert_eq!((qd[0], qd[2]), (0, 0));
+    }
+
+    #[test]
+    fn matvec_i8_matches_exact_integer_reference() {
+        let mut rng = Rng::new(55);
+        let (out_dim, in_dim) = (9, 37); // remainder lanes exercised
+        let w = randv(&mut rng, out_dim * in_dim, 1.0);
+        let x = randv(&mut rng, in_dim, 1.0);
+        let bias = randv(&mut rng, out_dim, 0.5);
+        let ws = row_scales(&w, out_dim, in_dim);
+        let wq = quantize_rows(&w, out_dim, in_dim, &ws);
+        let xs = quant_scale(&x);
+        let mut xq = vec![0i8; in_dim];
+        quantize_into(&x, xs, &mut xq);
+        let mut y = vec![0.0f32; out_dim];
+        matvec_i8(out_dim, in_dim, &wq, &ws, &xq, xs, Some(&bias), true, &mut y);
+        for o in 0..out_dim {
+            let mut acc = 0i32;
+            for i in 0..in_dim {
+                acc += wq[o * in_dim + i] as i32 * xq[i] as i32;
+            }
+            let want = (acc as f32 * (xs * ws[o]) + bias[o]).max(0.0);
+            assert_eq!(y[o], want, "row {o}");
+        }
+        // And the dequantized result tracks the f32 matvec.
+        let mut yf = vec![0.0f32; out_dim];
+        matvec(out_dim, in_dim, &w, &x, Some(&bias), true, &mut yf);
+        assert!(max_abs_diff(&y, &yf) < 0.05, "diff {}", max_abs_diff(&y, &yf));
+    }
+
+    #[test]
+    fn conv2d_i8_tracks_f32_conv() {
+        let spec = small_conv_spec();
+        let mut rng = Rng::new(56);
+        let x = randv(&mut rng, spec.in_len(), 1.0);
+        let w = randv(&mut rng, spec.patch() * spec.c_out, 0.3);
+        let bias = randv(&mut rng, spec.c_out, 0.5);
+        let ws = column_scales(&w, spec.patch(), spec.c_out);
+        let wq = quantize_columns(&w, spec.patch(), spec.c_out, &ws);
+        let mut y8 = vec![0.0f32; spec.out_len()];
+        conv2d_i8(&spec, &x, &wq, &ws, Some(&bias), &mut y8, &mut ConvScratchI8::new(), 1);
+        let mut yf = vec![0.0f32; spec.out_len()];
+        conv2d(&spec, &x, &w, Some(&bias), &mut yf, &mut ConvScratch::new(), 1);
+        // Quantization noise only: per-term error is bounded by the
+        // activation and weight scales, summed over the patch.
+        let tol = spec.patch() as f32 * (0.3 * (1.0 / 254.0) + 1.0 * (0.3 / 254.0)) + 1e-3;
+        assert!(max_abs_diff(&y8, &yf) < tol, "diff {}", max_abs_diff(&y8, &yf));
+        // Multi-worker int8 conv agrees bitwise (integer GEMM).
+        let mut y8w = vec![0.0f32; spec.out_len()];
+        conv2d_i8(&spec, &x, &wq, &ws, Some(&bias), &mut y8w, &mut ConvScratchI8::new(), 3);
+        assert_eq!(y8w, y8);
+    }
+
+    #[test]
+    fn dequant_epilogue_applies_scales_bias_relu() {
+        let acc = [127i32, -127, 254, 0];
+        let ws = [0.01f32, 0.02];
+        let mut y = [0.0f32; 4];
+        dequant_bias_relu(&acc, 2, 1.0, &ws, Some(&[0.5, 0.0]), true, &mut y);
+        assert!((y[0] - (1.27 + 0.5)).abs() < 1e-6);
+        assert_eq!(y[1], 0.0, "negative clamped by relu");
+        assert!((y[2] - 2.54).abs() < 1e-6);
+        let mut y2 = [0.0f32; 2];
+        dequant_bias_relu(&acc[..2], 2, 2.0, &ws, None, false, &mut y2);
+        assert!((y2[0] - 2.54).abs() < 1e-6);
+        assert!((y2[1] + 5.08).abs() < 1e-6);
     }
 }

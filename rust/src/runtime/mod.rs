@@ -1,9 +1,10 @@
 //! Edge-PRUNE runtime (paper §III.D): thread-per-actor engine, bounded
 //! mutex/condvar FIFOs, TCP transmit/receive FIFOs, network conditioning,
 //! device simulation, link health monitoring, metrics, the CPU tensor
-//! compute backend (blocked GEMM / conv2d / depthwise, `linalg`), the
-//! XLA/PJRT execution service, and the epoll reactor + timer wheel the
-//! serving layer's event loop runs on.
+//! compute backend (blocked GEMM / conv2d / depthwise in f32 and int8,
+//! `linalg`), the compact activation wire codec (`wire`: int8/fp16
+//! payloads across cut edges), the XLA/PJRT execution service, and the
+//! epoll reactor + timer wheel the serving layer's event loop runs on.
 
 pub mod device;
 pub mod distributed;
@@ -16,4 +17,5 @@ pub mod metrics;
 pub mod net;
 pub mod netsim;
 pub mod reactor;
+pub mod wire;
 pub mod xla_exec;

@@ -15,6 +15,7 @@
 use crate::dataflow::Token;
 use crate::runtime::kernels::{ActorKernel, FireOutcome};
 use crate::runtime::netsim::LinkShaper;
+use crate::runtime::wire::WireDtype;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -73,23 +74,47 @@ pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
 
 /// Transmit FIFO endpoint: a structural sink of the local subgraph that
 /// serializes every consumed token onto its dedicated TCP connection,
-/// paced by the link shaper.
+/// paced by the link shaper.  With a non-f32 `wire` dtype the token's
+/// activation is wire-coded first (the frame carries the *coded*
+/// payload, so the shaper paces the reduced byte count — exactly the
+/// link win the codec exists for).  Both FIFO endpoints of a cut edge
+/// must be launched with the same dtype: it is a deployment-launch
+/// contract here (the `--wire` flag on both workers), where the serving
+/// protocol negotiates it per session.  The launcher downgrades edges
+/// whose plan token size is not a whole f32 tensor to raw f32 on BOTH
+/// ends (`distributed::bind_net_kernels` — same rule the explorer's
+/// `wire_cut_bytes` prices by), so a non-f32 `wire` here requires
+/// tokens of whole-f32 length; anything else is a per-frame error.
 pub struct TxKernel {
     stream: TcpStream,
     shaper: LinkShaper,
+    wire: WireDtype,
+    /// Reused encode buffer (steady state allocates nothing).
+    enc: Vec<u8>,
 }
 
 impl TxKernel {
-    pub fn connect(addr: &str, shaper: LinkShaper, timeout: Duration) -> Result<Self> {
-        Ok(TxKernel { stream: connect_with_retry(addr, timeout)?, shaper })
+    pub fn connect(
+        addr: &str,
+        shaper: LinkShaper,
+        timeout: Duration,
+        wire: WireDtype,
+    ) -> Result<Self> {
+        Ok(TxKernel { stream: connect_with_retry(addr, timeout)?, shaper, wire, enc: Vec::new() })
     }
 }
 
 impl ActorKernel for TxKernel {
     fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
         for token in &inputs[0] {
-            let ts = self.shaper.send_slot(token.len());
-            if write_frame(&mut self.stream, token.seq, ts, &token.data).is_err() {
+            let payload: &[u8] = if self.wire == WireDtype::F32 {
+                &token.data
+            } else {
+                token.encode_wire(self.wire, &mut self.enc)?;
+                &self.enc
+            };
+            let ts = self.shaper.send_slot(payload.len());
+            if write_frame(&mut self.stream, token.seq, ts, payload).is_err() {
                 // Peer gone: wind the local subgraph down cleanly.
                 return Ok(FireOutcome::Stop);
             }
@@ -106,20 +131,28 @@ impl Drop for TxKernel {
 
 /// Receive FIFO endpoint: a structural source of the local subgraph.
 /// Blocks on the socket; applies the latency model before releasing each
-/// token downstream; Stop on EOF.
+/// token downstream; Stop on EOF.  With a non-f32 `wire` dtype the
+/// frame payload is decoded back to raw f32 token bytes before release,
+/// so downstream actors are codec-oblivious.
 pub struct RxKernel {
     stream: TcpStream,
     shaper: LinkShaper,
     out_ports: usize,
+    wire: WireDtype,
 }
 
 impl RxKernel {
     /// Bind + accept exactly one TX peer (called before engine start: "the
     /// application dataflow processing begins" only once connected).
-    pub fn accept(listener: TcpListener, shaper: LinkShaper, out_ports: usize) -> Result<Self> {
+    pub fn accept(
+        listener: TcpListener,
+        shaper: LinkShaper,
+        out_ports: usize,
+        wire: WireDtype,
+    ) -> Result<Self> {
         let (stream, _peer) = listener.accept().context("RX FIFO accept")?;
         stream.set_nodelay(true)?;
-        Ok(RxKernel { stream, shaper, out_ports })
+        Ok(RxKernel { stream, shaper, out_ports, wire })
     }
 }
 
@@ -129,6 +162,18 @@ impl ActorKernel for RxKernel {
             None => Ok(FireOutcome::Stop),
             Some((_seq, ts, payload)) => {
                 self.shaper.delivery_wait(ts);
+                let payload = if self.wire == WireDtype::F32 {
+                    payload
+                } else {
+                    // One decode allocation per coded frame.  The
+                    // blocking read path already allocates the payload
+                    // per frame (`read_frame`), so this is not the
+                    // marginal cost; the zero-alloc discipline lives in
+                    // the serving path's arena-backed decode.
+                    let mut bytes = Vec::new();
+                    crate::runtime::wire::decode_to_f32_bytes(self.wire, &payload, &mut bytes)?;
+                    bytes
+                };
                 Ok(FireOutcome::replicate(payload, self.out_ports))
             }
         }
@@ -337,14 +382,45 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let shaper = LinkShaper::new(LinkModel::ideal());
         let s2 = shaper.clone();
-        let rx_h = std::thread::spawn(move || RxKernel::accept(listener, s2, 1).unwrap());
-        let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(2)).unwrap();
+        let rx_h = std::thread::spawn(move || {
+            RxKernel::accept(listener, s2, 1, WireDtype::F32).unwrap()
+        });
+        let mut tx =
+            TxKernel::connect(&addr, shaper, Duration::from_secs(2), WireDtype::F32).unwrap();
         let mut rx = rx_h.join().unwrap();
 
         let inputs = vec![vec![Token::new(vec![7, 8, 9], 5)]];
         tx.fire(&inputs, 0).unwrap();
         let FireOutcome::Produced(out) = rx.fire(&[], 0).unwrap() else { panic!() };
         assert_eq!(out[0][0], vec![7, 8, 9]);
+        drop(tx);
+        assert!(matches!(rx.fire(&[], 0).unwrap(), FireOutcome::Stop));
+    }
+
+    #[test]
+    fn wire_coded_tx_rx_shrinks_frames_and_restores_f32_tokens() {
+        // An i8-wire FIFO pair ships ~4x fewer bytes and hands the
+        // downstream actor a raw-f32 token of the original length.
+        let listener = bind_local(0).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let shaper = LinkShaper::new(LinkModel::ideal());
+        let s2 = shaper.clone();
+        let rx_h =
+            std::thread::spawn(move || RxKernel::accept(listener, s2, 1, WireDtype::I8).unwrap());
+        let mut tx =
+            TxKernel::connect(&addr, shaper, Duration::from_secs(2), WireDtype::I8).unwrap();
+        let mut rx = rx_h.join().unwrap();
+
+        let vals: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) / 100.0).collect();
+        let token = Token::from_f32(&vals, 3);
+        tx.fire(&[vec![token.clone()]], 0).unwrap();
+        let FireOutcome::Produced(out) = rx.fire(&[], 0).unwrap() else { panic!() };
+        assert_eq!(out[0][0].len(), token.len(), "f32 byte length restored");
+        let got = crate::util::tensor::bytes_to_f32(&out[0][0]);
+        let scale = vals.iter().fold(0.0f32, |m, v| m.max(v.abs())) / 127.0;
+        for (a, b) in vals.iter().zip(&got) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6, "{a} vs {b}");
+        }
         drop(tx);
         assert!(matches!(rx.fire(&[], 0).unwrap(), FireOutcome::Stop));
     }
@@ -493,12 +569,13 @@ mod tests {
         let shaper = LinkShaper::new(LinkModel::new("lat", 0.0, 40.0));
         let s2 = shaper.clone();
         let rx_h = std::thread::spawn(move || {
-            let mut rx = RxKernel::accept(listener, s2, 1).unwrap();
+            let mut rx = RxKernel::accept(listener, s2, 1, WireDtype::F32).unwrap();
             let t0 = std::time::Instant::now();
             let out = rx.fire(&[], 0).unwrap();
             (t0.elapsed(), matches!(out, FireOutcome::Produced(_)))
         });
-        let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(2)).unwrap();
+        let mut tx =
+            TxKernel::connect(&addr, shaper, Duration::from_secs(2), WireDtype::F32).unwrap();
         tx.fire(&[vec![Token::new(vec![1u8; 256], 0)]], 0).unwrap();
         let (elapsed, produced) = rx_h.join().unwrap();
         assert!(produced);
@@ -517,14 +594,15 @@ mod tests {
         let shaper = LinkShaper::new(LinkModel::new("t", 1.0, 0.0));
         let s2 = shaper.clone();
         let rx_h = std::thread::spawn(move || {
-            let mut rx = RxKernel::accept(listener, s2, 1).unwrap();
+            let mut rx = RxKernel::accept(listener, s2, 1, WireDtype::F32).unwrap();
             let mut n = 0;
             while let FireOutcome::Produced(_) = rx.fire(&[], 0).unwrap() {
                 n += 1;
             }
             n
         });
-        let mut tx = TxKernel::connect(&addr, shaper, Duration::from_secs(2)).unwrap();
+        let mut tx =
+            TxKernel::connect(&addr, shaper, Duration::from_secs(2), WireDtype::F32).unwrap();
         let t0 = std::time::Instant::now();
         for i in 0..3 {
             tx.fire(&[vec![Token::new(vec![0u8; 50_000], i)]], i).unwrap();

@@ -1,0 +1,569 @@
+//! Compact activation wire format: the codec that lets partition-point
+//! activations cross the device-edge link as int8 (with a scale header)
+//! or fp16 instead of raw f32, cutting link bytes ~4x / ~2x per
+//! inference (the DEFER / 2-Step-Pruning observation that transmission
+//! size at the split dominates constrained links).
+//!
+//! Three dtypes:
+//!
+//! * **f32** — the legacy format: raw little-endian f32 bytes, exactly
+//!   the protocol-v2 payload.  Always supported; the transparent
+//!   fallback when either peer lacks the codec.
+//! * **f16** — IEEE 754 binary16, round-to-nearest-even.  2 bytes per
+//!   element, no header.
+//! * **i8** — symmetric per-tensor quantization (zero-point 0): a 4-byte
+//!   f32 scale header followed by one `i8` per element, where
+//!   `scale = max|x| / 127` and `q = clamp(round(x / scale), -127, 127)`.
+//!   1 byte per element; the -128 code is never produced, which is also
+//!   what keeps the int8 GEMM's paired i16 products overflow-free.
+//!
+//! **Determinism contract:** `decode(encode(x))` is a pure function of
+//! the bytes, identical on every host (round-to-nearest-even for f16,
+//! round-half-away-from-zero for i8).  The serving model exploits this:
+//! the client runs its local stages, encodes, *decodes its own payload
+//! back* and continues the chain from the decoded tensor — so client
+//! and server compute bit-identical digests at any wire dtype, and the
+//! loadgen's byte-for-byte response verification keeps working with
+//! quantization on.
+//!
+//! Negotiation: a protocol-v3 handshake carries a capability byte
+//! ([`CAP_I8`] | [`CAP_F16`]); the server intersects it with its own
+//! enabled set and replies with the chosen dtype (plus the server's
+//! compute [`Precision`]).  v2 peers carry no capability byte and get
+//! f32 frames, byte-identical to the old protocol — see
+//! `server::protocol`.
+
+use anyhow::{bail, Result};
+
+/// Capability bit: peer can encode/decode int8 activations.
+pub const CAP_I8: u8 = 1;
+/// Capability bit: peer can encode/decode fp16 activations.
+pub const CAP_F16: u8 = 2;
+
+/// Element type of activations on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireDtype {
+    #[default]
+    F32,
+    F16,
+    I8,
+}
+
+impl WireDtype {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireDtype::F32 => "f32",
+            WireDtype::F16 => "f16",
+            WireDtype::I8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<WireDtype> {
+        match s {
+            "f32" => Ok(WireDtype::F32),
+            "f16" => Ok(WireDtype::F16),
+            "int8" | "i8" => Ok(WireDtype::I8),
+            v => bail!("unknown wire dtype {v} (f32|f16|int8)"),
+        }
+    }
+
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            WireDtype::F32 => 4,
+            WireDtype::F16 => 2,
+            WireDtype::I8 => 1,
+        }
+    }
+
+    /// Fixed per-payload header (the i8 scale).
+    pub fn header_bytes(self) -> usize {
+        match self {
+            WireDtype::I8 => 4,
+            _ => 0,
+        }
+    }
+
+    /// Wire byte of the handshake reply.
+    pub fn to_u8(self) -> u8 {
+        match self {
+            WireDtype::F32 => 0,
+            WireDtype::F16 => 1,
+            WireDtype::I8 => 2,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Result<WireDtype> {
+        match b {
+            0 => Ok(WireDtype::F32),
+            1 => Ok(WireDtype::F16),
+            2 => Ok(WireDtype::I8),
+            v => bail!("bad wire dtype byte {v}"),
+        }
+    }
+
+    /// The capability bits a client advertising this dtype sends (each
+    /// dtype also implies everything cheaper to decode, so a downgrade
+    /// never fails).
+    pub fn caps(self) -> u8 {
+        match self {
+            WireDtype::F32 => 0,
+            WireDtype::F16 => CAP_F16,
+            WireDtype::I8 => CAP_I8 | CAP_F16,
+        }
+    }
+}
+
+/// Compute precision of the DNN kernels behind a plan (the
+/// `--precision` knob): f32 reference kernels or the int8 GEMM/matvec
+/// path with per-channel weight scales.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "int8" | "i8" => Ok(Precision::Int8),
+            v => bail!("unknown precision {v} (f32|int8)"),
+        }
+    }
+
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Precision::F32 => 0,
+            Precision::Int8 => 1,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Result<Precision> {
+        match b {
+            0 => Ok(Precision::F32),
+            1 => Ok(Precision::Int8),
+            v => bail!("bad precision byte {v}"),
+        }
+    }
+}
+
+/// What one serving session negotiated: the activation wire dtype and
+/// the compute precision both sides run the stage chain at.  Client and
+/// server must agree on both for the digest to stay bit-exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SessionCodec {
+    pub wire: WireDtype,
+    pub precision: Precision,
+}
+
+impl SessionCodec {
+    /// The legacy contract: raw f32 on the wire, f32 compute.
+    pub fn f32() -> SessionCodec {
+        SessionCodec::default()
+    }
+}
+
+/// Server-side negotiation: the best dtype both the client's capability
+/// bits and the server's enabled set allow (i8 > f16 > f32 — smallest
+/// wire wins).
+pub fn negotiate(client_caps: u8, server_caps: u8) -> WireDtype {
+    let both = client_caps & server_caps;
+    if both & CAP_I8 != 0 {
+        WireDtype::I8
+    } else if both & CAP_F16 != 0 {
+        WireDtype::F16
+    } else {
+        WireDtype::F32
+    }
+}
+
+/// Encoded payload size for `elems` activation elements.
+pub fn encoded_len(dtype: WireDtype, elems: usize) -> usize {
+    dtype.header_bytes() + elems * dtype.bytes_per_elem()
+}
+
+/// Element count implied by an encoded payload length (`None` when the
+/// length is not a whole number of elements for this dtype).
+pub fn decoded_elems(dtype: WireDtype, payload_len: usize) -> Option<usize> {
+    let body = payload_len.checked_sub(dtype.header_bytes())?;
+    let per = dtype.bytes_per_elem();
+    (body % per == 0).then_some(body / per)
+}
+
+/// f32-equivalent byte count of an encoded payload (what the same
+/// tensor would have cost in the legacy format) — the numerator of the
+/// wire-compression-ratio gauge.
+pub fn f32_equiv_len(dtype: WireDtype, payload_len: usize) -> usize {
+    match decoded_elems(dtype, payload_len) {
+        Some(elems) => elems * 4,
+        None => payload_len,
+    }
+}
+
+// ----------------------------------------------------------------- f16
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even (overflow to inf,
+/// NaN payload preserved in the top mantissa bits and quieted).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xff) as i32;
+    let man = b & 0x007f_ffff;
+    if exp == 255 {
+        // Inf / NaN: keep NaN-ness explicit (quiet bit 9).
+        let nan = if man != 0 { 0x0200 | ((man >> 13) as u16 & 0x03ff) } else { 0 };
+        return sign | 0x7c00 | nan;
+    }
+    let e = exp - 112; // rebias 127 -> 15
+    if e >= 31 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // Subnormal half: shift the (implicit-bit) mantissa into place.
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let mut t = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && t & 1 == 1) {
+            t += 1; // may round up to the smallest normal: still correct
+        }
+        return sign | t as u16;
+    }
+    let mut t = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && t & 1 == 1) {
+        t += 1; // mantissa carry rolls into the exponent (up to inf)
+    }
+    sign | t as u16
+}
+
+/// IEEE binary16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: renormalize into an f32 exponent.
+            let mut e = 113u32; // 127 - 14
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// --------------------------------------------------------------- codec
+
+/// Encode an activation tensor into `out` (cleared, reused across
+/// frames — no allocation once its capacity is warm).
+pub fn encode_activation(dtype: WireDtype, x: &[f32], out: &mut Vec<u8>) {
+    if dtype == WireDtype::F32 {
+        // The canonical raw-f32 serializer (clears + reuses `out`).
+        crate::util::tensor::f32_extend_bytes(x, out);
+        return;
+    }
+    out.clear();
+    out.reserve(encoded_len(dtype, x.len()));
+    match dtype {
+        WireDtype::F32 => unreachable!("handled above"),
+        WireDtype::F16 => {
+            for v in x {
+                out.extend_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+            }
+        }
+        WireDtype::I8 => {
+            let scale = crate::runtime::linalg::quant_scale(x);
+            out.extend_from_slice(&scale.to_le_bytes());
+            if scale == 0.0 {
+                out.resize(4 + x.len(), 0);
+            } else {
+                // The same quantizer step as the int8 compute path —
+                // one definition, one determinism contract.
+                let inv = 1.0 / scale;
+                for v in x {
+                    out.push(crate::runtime::linalg::quantize_one(*v, inv) as u8);
+                }
+            }
+        }
+    }
+}
+
+/// Decode an encoded activation into a caller-owned f32 slice whose
+/// length fixes the expected element count.  Allocation-free.
+pub fn decode_activation_into(dtype: WireDtype, payload: &[u8], x: &mut [f32]) -> Result<()> {
+    if decoded_elems(dtype, payload.len()) != Some(x.len()) {
+        bail!(
+            "{} payload of {} bytes does not decode to {} elements (expect {})",
+            dtype.as_str(),
+            payload.len(),
+            x.len(),
+            encoded_len(dtype, x.len())
+        );
+    }
+    match dtype {
+        WireDtype::F32 => {
+            match crate::util::tensor::cast_f32_slice(payload) {
+                Some(vals) => x.copy_from_slice(vals),
+                None => {
+                    for (dst, chunk) in x.iter_mut().zip(payload.chunks_exact(4)) {
+                        *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+                    }
+                }
+            }
+        }
+        WireDtype::F16 => {
+            for (dst, chunk) in x.iter_mut().zip(payload.chunks_exact(2)) {
+                *dst = f16_bits_to_f32(u16::from_le_bytes(chunk.try_into().unwrap()));
+            }
+        }
+        WireDtype::I8 => {
+            let scale = f32::from_le_bytes(payload[..4].try_into().unwrap());
+            for (dst, &b) in x.iter_mut().zip(&payload[4..]) {
+                *dst = (b as i8) as f32 * scale;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Decode into raw little-endian f32 bytes (the legacy token payload
+/// layout) — what an RX FIFO hands downstream actors.  `out` is
+/// cleared and reused.
+pub fn decode_to_f32_bytes(dtype: WireDtype, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    let Some(elems) = decoded_elems(dtype, payload.len()) else {
+        bail!("{} payload of {} bytes is ragged", dtype.as_str(), payload.len());
+    };
+    out.clear();
+    out.reserve(elems * 4);
+    match dtype {
+        WireDtype::F32 => out.extend_from_slice(payload),
+        WireDtype::F16 => {
+            for chunk in payload.chunks_exact(2) {
+                let v = f16_bits_to_f32(u16::from_le_bytes(chunk.try_into().unwrap()));
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        WireDtype::I8 => {
+            let scale = f32::from_le_bytes(payload[..4].try_into().unwrap());
+            for &b in &payload[4..] {
+                let v = (b as i8) as f32 * scale;
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Encode raw little-endian f32 token bytes (must be a whole number of
+/// f32s) — the TX-FIFO-side counterpart of [`decode_to_f32_bytes`].
+pub fn encode_f32_bytes(dtype: WireDtype, f32_bytes: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    if f32_bytes.len() % 4 != 0 {
+        bail!("token of {} bytes is not an f32 tensor", f32_bytes.len());
+    }
+    if dtype == WireDtype::F32 {
+        out.clear();
+        out.extend_from_slice(f32_bytes);
+        return Ok(());
+    }
+    match crate::util::tensor::cast_f32_slice(f32_bytes) {
+        Some(vals) => encode_activation(dtype, vals, out),
+        None => {
+            let vals = crate::util::tensor::bytes_to_f32(f32_bytes);
+            encode_activation(dtype, &vals, out);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn negotiation_prefers_smallest_wire() {
+        let server = CAP_I8 | CAP_F16;
+        assert_eq!(negotiate(WireDtype::I8.caps(), server), WireDtype::I8);
+        assert_eq!(negotiate(WireDtype::F16.caps(), server), WireDtype::F16);
+        assert_eq!(negotiate(0, server), WireDtype::F32);
+        // Server with the codec disabled downgrades everyone.
+        assert_eq!(negotiate(WireDtype::I8.caps(), 0), WireDtype::F32);
+        // i8-capable server without f16 still meets an f16-only client at f32.
+        assert_eq!(negotiate(CAP_F16, CAP_I8), WireDtype::F32);
+    }
+
+    #[test]
+    fn dtype_bytes_round_trip() {
+        for d in [WireDtype::F32, WireDtype::F16, WireDtype::I8] {
+            assert_eq!(WireDtype::from_u8(d.to_u8()).unwrap(), d);
+            assert_eq!(WireDtype::parse(d.as_str()).unwrap(), d);
+        }
+        assert!(WireDtype::from_u8(9).is_err());
+        for p in [Precision::F32, Precision::Int8] {
+            assert_eq!(Precision::from_u8(p.to_u8()).unwrap(), p);
+            assert_eq!(Precision::parse(p.as_str()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn f16_known_values_are_exact() {
+        // Exactly representable values survive the round trip bitwise.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, 2.0, 65504.0, -65504.0] {
+            let h = f32_to_f16_bits(v);
+            assert_eq!(f16_bits_to_f32(h), v, "{v}");
+        }
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        // Overflow saturates to inf; tiny values flush to zero.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_subnormals_round_trip() {
+        // Smallest positive subnormal half = 2^-24.
+        let tiny = f16_bits_to_f32(0x0001);
+        assert_eq!(tiny, 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+        // Largest subnormal and smallest normal.
+        assert_eq!(f32_to_f16_bits(f16_bits_to_f32(0x03ff)), 0x03ff);
+        assert_eq!(f32_to_f16_bits(f16_bits_to_f32(0x0400)), 0x0400);
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next half (1 + 2^-10):
+        // ties go to the even mantissa (1.0).
+        let tie = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(tie), 0x3c00);
+        // Just above the tie rounds up.
+        let above = 1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20);
+        assert_eq!(f32_to_f16_bits(above), 0x3c01);
+    }
+
+    #[test]
+    fn f16_error_is_bounded() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..1000 {
+            let v = rng.f32_range(-1.5, 1.5);
+            let r = f16_bits_to_f32(f32_to_f16_bits(v));
+            // Relative error <= 2^-11 for normal halves.
+            assert!((r - v).abs() <= v.abs() * 4.9e-4 + 1e-7, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn i8_codec_round_trips_within_scale() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 21.0).collect();
+        let mut enc = Vec::new();
+        encode_activation(WireDtype::I8, &x, &mut enc);
+        assert_eq!(enc.len(), encoded_len(WireDtype::I8, x.len()));
+        let mut dec = vec![0.0f32; x.len()];
+        decode_activation_into(WireDtype::I8, &enc, &mut dec).unwrap();
+        let scale = f32::from_le_bytes(enc[..4].try_into().unwrap());
+        for (a, b) in x.iter().zip(&dec) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-7, "{a} vs {b}");
+        }
+        // The extreme value is exact (it defines the scale).
+        let mx = x.iter().cloned().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(dec.iter().any(|v| (v.abs() - mx).abs() < scale * 0.5));
+    }
+
+    #[test]
+    fn i8_all_zero_tensor_encodes_scale_zero() {
+        let x = [0.0f32; 8];
+        let mut enc = Vec::new();
+        encode_activation(WireDtype::I8, &x, &mut enc);
+        assert_eq!(f32::from_le_bytes(enc[..4].try_into().unwrap()), 0.0);
+        let mut dec = [1.0f32; 8];
+        decode_activation_into(WireDtype::I8, &enc, &mut dec).unwrap();
+        assert_eq!(dec, [0.0f32; 8]);
+    }
+
+    #[test]
+    fn codec_is_idempotent_after_one_round_trip() {
+        // decode(encode(x)) is a fixed point: encoding the decoded tensor
+        // again reproduces the same bytes — the property that makes the
+        // client's "decode your own payload" trick give bit-exact
+        // client/server agreement.
+        let mut rng = crate::util::rng::Rng::new(11);
+        let x: Vec<f32> = (0..256).map(|_| rng.f32_range(-1.5, 1.5)).collect();
+        for dtype in [WireDtype::F16, WireDtype::I8] {
+            let mut e1 = Vec::new();
+            encode_activation(dtype, &x, &mut e1);
+            let mut d1 = vec![0.0f32; x.len()];
+            decode_activation_into(dtype, &e1, &mut d1).unwrap();
+            let mut e2 = Vec::new();
+            encode_activation(dtype, &d1, &mut e2);
+            let mut d2 = vec![0.0f32; x.len()];
+            decode_activation_into(dtype, &e2, &mut d2).unwrap();
+            assert_eq!(d1, d2, "{dtype:?} round trip not idempotent");
+        }
+    }
+
+    #[test]
+    fn f32_bytes_paths_agree_with_slice_paths() {
+        let x = [0.25f32, -1.0, 3.5, 0.0];
+        let raw = crate::util::tensor::f32_to_bytes(&x);
+        for dtype in [WireDtype::F32, WireDtype::F16, WireDtype::I8] {
+            let mut enc_a = Vec::new();
+            encode_activation(dtype, &x, &mut enc_a);
+            let mut enc_b = Vec::new();
+            encode_f32_bytes(dtype, &raw, &mut enc_b).unwrap();
+            assert_eq!(enc_a, enc_b, "{dtype:?}");
+            let mut back = Vec::new();
+            decode_to_f32_bytes(dtype, &enc_a, &mut back).unwrap();
+            let mut direct = vec![0.0f32; x.len()];
+            decode_activation_into(dtype, &enc_a, &mut direct).unwrap();
+            assert_eq!(back, crate::util::tensor::f32_to_bytes(&direct), "{dtype:?}");
+        }
+        assert!(encode_f32_bytes(WireDtype::I8, &raw[..5], &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_ragged_payloads() {
+        let mut x = [0.0f32; 4];
+        assert!(decode_activation_into(WireDtype::F32, &[0u8; 15], &mut x).is_err());
+        assert!(decode_activation_into(WireDtype::F16, &[0u8; 7], &mut x).is_err());
+        assert!(decode_activation_into(WireDtype::I8, &[0u8; 3], &mut x).is_err());
+        // Right shape, wrong element count.
+        assert!(decode_activation_into(WireDtype::I8, &[0u8; 4 + 5], &mut x).is_err());
+        assert_eq!(decoded_elems(WireDtype::I8, 4 + 4), Some(4));
+        assert_eq!(decoded_elems(WireDtype::I8, 2), None);
+    }
+
+    #[test]
+    fn equivalent_length_math() {
+        assert_eq!(encoded_len(WireDtype::F32, 1024), 4096);
+        assert_eq!(encoded_len(WireDtype::F16, 1024), 2048);
+        assert_eq!(encoded_len(WireDtype::I8, 1024), 1028);
+        assert_eq!(f32_equiv_len(WireDtype::I8, 1028), 4096);
+        assert_eq!(f32_equiv_len(WireDtype::F16, 2048), 4096);
+        assert_eq!(f32_equiv_len(WireDtype::F32, 4096), 4096);
+    }
+}

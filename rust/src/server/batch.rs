@@ -20,6 +20,7 @@
 use super::metrics::PlanMetrics;
 use super::model::ServerModelPlan;
 use super::session::SessionOutbox;
+use crate::runtime::wire::WireDtype;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -31,6 +32,9 @@ pub struct PendingRequest {
     pub plan: Arc<ServerModelPlan>,
     pub plan_metrics: Arc<PlanMetrics>,
     pub payload: Vec<u8>,
+    /// Wire dtype the owning session negotiated — how the worker's
+    /// shard decodes `payload`.
+    pub wire: WireDtype,
     pub enqueued: Instant,
     /// Terminal-response sink: the owning session's outbox retains the
     /// response for replay and forwards it to whatever writer is
@@ -166,6 +170,7 @@ mod tests {
             plan: plan.clone(),
             plan_metrics: Arc::new(PlanMetrics::default()),
             payload: Vec::new(),
+            wire: WireDtype::F32,
             enqueued: Instant::now(),
             reply: SessionOutbox::new(session, 8),
         }

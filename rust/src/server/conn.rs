@@ -33,6 +33,7 @@ use super::session::{Admit, ResponseSink, SessionHandle};
 use super::ServerState;
 use crate::compiler::PlanKey;
 use crate::runtime::reactor::{ByteBuf, Event, Interest, Reactor, TimerWheel, WakeHandle};
+use crate::runtime::wire::{self, Precision, SessionCodec, WireDtype};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
@@ -124,6 +125,9 @@ struct Attachment {
     /// RECONNECT takeover (the client already holds resume
     /// credentials from its original accept reply).
     resumed: bool,
+    /// Negotiated activation wire dtype of this attachment (v2 clients
+    /// always get f32).
+    wire: WireDtype,
     outbox: Arc<super::session::SessionOutbox>,
     health: Arc<crate::runtime::health::HealthMonitor>,
     plan: Arc<ServerModelPlan>,
@@ -523,6 +527,15 @@ impl EventLoop {
             return Ok(());
         };
         a.health.note_heard(frame.payload.len() + 13);
+        // Data-plane byte accounting: actual frame bytes vs what the
+        // same frame would have cost at raw f32 (only infer payloads
+        // are wire-coded; control frames count 1:1).
+        let actual = (frame.payload.len() + 13) as u64;
+        let f32_equiv = match frame.kind {
+            ReqKind::Infer => (wire::f32_equiv_len(a.wire, frame.payload.len()) + 13) as u64,
+            _ => actual,
+        };
+        self.state.metrics.wire.note_rx(actual, f32_equiv);
         match frame.kind {
             ReqKind::Bye => unreachable!("handled above"),
             ReqKind::Ping => {
@@ -570,6 +583,7 @@ impl EventLoop {
                         plan: a.plan.clone(),
                         plan_metrics: a.plan_metrics.clone(),
                         payload: frame.payload,
+                        wire: a.wire,
                         enqueued: Instant::now(),
                         reply: a.outbox.clone(),
                     };
@@ -594,13 +608,17 @@ impl EventLoop {
     // --------------------------------------------------------- handshake
 
     /// Queue a handshake reject and leave the connection draining.
-    fn reject(&mut self, conn: &mut Conn, message: String) {
+    /// `version` is the client's handshake version — a v3 client reads
+    /// the longer reply layout, so the codec bytes must be present even
+    /// on a reject (f32/f32 placeholders; never used).
+    fn reject(&mut self, conn: &mut Conn, version: u16, message: String) {
         self.state.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
         let reply = HandshakeReply {
             accepted: false,
             resumed: false,
             session_id: 0,
             token: 0,
+            codec: (version >= protocol::VERSION).then(SessionCodec::f32),
             message,
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
@@ -616,6 +634,27 @@ impl EventLoop {
     /// `Err` closes it replyless.
     fn complete_handshake(&mut self, conn: &mut Conn, hs: protocol::Handshake) -> Result<(), Teardown> {
         let resumed = hs.resume.is_some();
+        // Codec negotiation: intersect the client's capability bits with
+        // the server's enabled set (v2 clients advertise nothing and get
+        // f32).  Renegotiated on every attachment, so a RECONNECT from a
+        // differently-capable client binary still gets a sound session.
+        let negotiated = wire::negotiate(hs.wire_caps, self.state.wire_caps);
+        let version = hs.version;
+        // A v2 reply cannot carry the precision byte, so a v2 client
+        // has no way to match a non-f32 compute server — its digests
+        // would silently mismatch on every frame.  Fail fast instead.
+        if version < protocol::VERSION && self.state.precision != Precision::F32 {
+            self.reject(
+                conn,
+                version,
+                format!(
+                    "server computes at {} precision; protocol v2 cannot negotiate it \
+                     (upgrade the client or run the server at --precision f32)",
+                    self.state.precision.as_str()
+                ),
+            );
+            return Ok(());
+        }
         let (handle, plan, last_ack): (SessionHandle, Arc<ServerModelPlan>, u64) =
             if let Some(r) = hs.resume {
                 let stream = conn.stream.try_clone().map_err(|_| Teardown::Close)?;
@@ -627,7 +666,7 @@ impl EventLoop {
                 ) {
                     Ok(h) => h,
                     Err(why) => {
-                        self.reject(conn, why);
+                        self.reject(conn, version, why);
                         return Ok(());
                     }
                 };
@@ -642,7 +681,7 @@ impl EventLoop {
                     Ok(p) => (handle, p, r.last_ack),
                     Err(e) => {
                         self.state.sessions.detach_now(handle.id, handle.attach_epoch);
-                        self.reject(conn, format!("{e:#}"));
+                        self.reject(conn, version, format!("{e:#}"));
                         return Ok(());
                     }
                 }
@@ -657,7 +696,7 @@ impl EventLoop {
                 {
                     Ok(p) => p,
                     Err(e) => {
-                        self.reject(conn, format!("{e:#}"));
+                        self.reject(conn, version, format!("{e:#}"));
                         return Ok(());
                     }
                 };
@@ -677,7 +716,7 @@ impl EventLoop {
                 ) {
                     Ok(h) => h,
                     Err(why) => {
-                        self.reject(conn, why);
+                        self.reject(conn, version, why);
                         return Ok(());
                     }
                 };
@@ -694,6 +733,10 @@ impl EventLoop {
             resumed,
             session_id: handle.id,
             token: handle.token,
+            codec: (version >= protocol::VERSION).then(|| SessionCodec {
+                wire: negotiated,
+                precision: self.state.precision,
+            }),
             message: String::new(),
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
@@ -728,6 +771,7 @@ impl EventLoop {
             session_id: handle.id,
             epoch,
             resumed,
+            wire: if version >= protocol::VERSION { negotiated } else { WireDtype::F32 },
             outbox: handle.outbox,
             health: handle.health,
             plan,
@@ -758,7 +802,11 @@ impl EventLoop {
         let mut seen = std::mem::take(&mut self.seen);
         for (conn_id, resp) in scratch.drain(..) {
             if let Some(conn) = self.conns.get_mut(&conn_id) {
-                conn.outbuf.extend(&protocol::encode_response(&resp));
+                let encoded = protocol::encode_response(&resp);
+                // Response bodies are f32 digests in every codec, so
+                // actual == f32-equivalent on the TX side.
+                self.state.metrics.wire.note_tx(encoded.len() as u64, encoded.len() as u64);
+                conn.outbuf.extend(&encoded);
                 if seen.insert(conn_id) {
                     touched.push(conn_id);
                 }

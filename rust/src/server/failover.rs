@@ -27,14 +27,15 @@
 //! server.  A session-level availability accounting
 //! ([`FailoverStats`]) is exported as JSON.
 
-use super::model::{FrameScratch, MODEL_NAME};
+use super::model::{FrameScratch, MODEL_NAME, TOKEN_BYTES};
 use super::protocol::{
-    read_handshake_reply, read_response, switch_payload, write_frame, write_handshake, Handshake,
-    ReqKind, RespStatus, Response, Resume,
+    connect_client, read_response, switch_payload, write_frame, Handshake, ReqKind, RespStatus,
+    Response, Resume, V2, VERSION,
 };
 use crate::runtime::health::{HealthConfig, HealthMonitor, LinkState};
+use crate::runtime::wire::{SessionCodec, WireDtype};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -146,6 +147,12 @@ pub struct FailoverStats {
     pub handshake_rejects: u64,
     pub link_failures: u64,
     pub plan_switches: u64,
+    /// Inference-frame bytes moved over the link (and their
+    /// f32-equivalents — the wire-compression accounting).
+    pub bytes_tx: u64,
+    pub bytes_rx: u64,
+    pub f32_equiv_tx: u64,
+    pub f32_equiv_rx: u64,
 }
 
 impl FailoverStats {
@@ -175,6 +182,10 @@ impl FailoverStats {
             ("handshake_rejects", Json::from(self.handshake_rejects)),
             ("link_failures", Json::from(self.link_failures)),
             ("plan_switches", Json::from(self.plan_switches)),
+            ("bytes_tx", Json::from(self.bytes_tx)),
+            ("bytes_rx", Json::from(self.bytes_rx)),
+            ("f32_equiv_tx", Json::from(self.f32_equiv_tx)),
+            ("f32_equiv_rx", Json::from(self.f32_equiv_rx)),
             ("service_availability", Json::from(self.service_availability())),
             ("link_availability", Json::from(self.link_availability())),
         ])
@@ -197,6 +208,8 @@ pub struct FailoverConfig {
     /// While the link is considered down, probe the edge every Nth
     /// request (1 = every request); the rest go straight to local.
     pub probe_every: u64,
+    /// Requested activation wire dtype; the server may downgrade.
+    pub wire: WireDtype,
 }
 
 impl Default for FailoverConfig {
@@ -211,6 +224,7 @@ impl Default for FailoverConfig {
             reconnect_backoff: Duration::from_millis(20),
             read_timeout: Duration::from_secs(2),
             probe_every: 8,
+            wire: WireDtype::F32,
         }
     }
 }
@@ -245,6 +259,13 @@ pub struct FailoverClient {
     session: Option<(u64, u64)>,
     /// Partition point the live session currently executes at.
     session_pp: usize,
+    /// Codec the live session negotiated (f32/f32 until connected —
+    /// and exactly that against an old or codec-disabled server).
+    codec: SessionCodec,
+    /// Protocol version the live session was established at: a session
+    /// opened via the v2 fallback must also RESUME at v2 (its server
+    /// drops v3 handshakes replyless).
+    session_version: u16,
     next_seq: u64,
     /// Highest sequence whose response this client has received — the
     /// `last_ack` a RECONNECT carries.
@@ -293,6 +314,8 @@ impl FailoverClient {
             conn: None,
             session: None,
             session_pp,
+            codec: SessionCodec::f32(),
+            session_version: VERSION,
             next_seq: 1,
             last_delivered: 0,
             local_streak: 0,
@@ -313,6 +336,12 @@ impl FailoverClient {
 
     pub fn session_pp(&self) -> usize {
         self.session_pp
+    }
+
+    /// The codec the current (or most recent) session negotiated —
+    /// what a caller verifying remote digests must replicate.
+    pub fn codec(&self) -> SessionCodec {
+        self.codec
     }
 
     /// Stats plus the live link-health snapshot, one JSON object.
@@ -354,7 +383,7 @@ impl FailoverClient {
         if allow_remote {
             let attempts = self.cfg.max_attempts.max(1);
             for attempt in 0..attempts {
-                match self.try_remote(seq, input) {
+                match self.try_remote(seq, input, attempt == 0) {
                     Ok(body) => {
                         self.local_streak = 0;
                         self.last_delivered = self.last_delivered.max(seq);
@@ -409,16 +438,6 @@ impl FailoverClient {
         self.session = None;
     }
 
-    fn connect_raw(&self) -> Result<TcpStream> {
-        let stream = TcpStream::connect(&self.cfg.addr)
-            .with_context(|| format!("connecting to {}", self.cfg.addr))?;
-        stream.set_nodelay(true)?;
-        if !self.cfg.read_timeout.is_zero() {
-            stream.set_read_timeout(Some(self.cfg.read_timeout))?;
-        }
-        Ok(stream)
-    }
-
     fn note_connected(&mut self, resumed: bool) {
         if self.ever_connected {
             self.stats.reconnects += 1;
@@ -430,29 +449,35 @@ impl FailoverClient {
         self.monitor.note_recovered();
     }
 
+    fn read_timeout_opt(&self) -> Option<Duration> {
+        (!self.cfg.read_timeout.is_zero()).then_some(self.cfg.read_timeout)
+    }
+
     fn ensure_connected(&mut self) -> Result<()> {
         if self.conn.is_some() {
             return Ok(());
         }
         // RECONNECT first: a resume preserves the session's plan and
-        // replays every response we have not acknowledged.
+        // replays every response we have not acknowledged.  The resume
+        // handshake pins the version the session was established at —
+        // connect_client never version-downgrades a resume, because
+        // replayed responses were computed under the original codec.
         if let Some((sid, token)) = self.session {
-            let mut stream = self.connect_raw()?;
-            write_handshake(
-                &mut stream,
-                &Handshake {
-                    model: self.cfg.model.clone(),
-                    pp: self.session_pp,
-                    client_id: self.cfg.client_id.clone(),
-                    resume: Some(Resume {
-                        session_id: sid,
-                        token,
-                        last_ack: self.last_delivered,
-                    }),
-                },
-            )?;
-            let reply = read_handshake_reply(&mut stream)?;
+            let hello = if self.session_version == V2 {
+                Handshake::v2(&self.cfg.model, self.session_pp, &self.cfg.client_id)
+            } else {
+                Handshake::v3(
+                    &self.cfg.model,
+                    self.session_pp,
+                    &self.cfg.client_id,
+                    self.cfg.wire.caps(),
+                )
+            }
+            .with_resume(Resume { session_id: sid, token, last_ack: self.last_delivered });
+            let (stream, reply, codec) =
+                connect_client(&self.cfg.addr, &hello, self.read_timeout_opt())?;
             if reply.accepted {
+                self.codec = codec;
                 self.conn = Some(Conn { stream });
                 self.note_connected(true);
                 return Ok(());
@@ -462,21 +487,17 @@ impl FailoverClient {
             self.session = None;
         }
         let choice = self.policy.decide(self.monitor.state());
-        let mut stream = self.connect_raw()?;
-        write_handshake(
-            &mut stream,
-            &Handshake {
-                model: self.cfg.model.clone(),
-                pp: choice.pp,
-                client_id: self.cfg.client_id.clone(),
-                resume: None,
-            },
-        )?;
-        let reply = read_handshake_reply(&mut stream)?;
+        let hello =
+            Handshake::v3(&self.cfg.model, choice.pp, &self.cfg.client_id, self.cfg.wire.caps());
+        let (stream, reply, codec) =
+            connect_client(&self.cfg.addr, &hello, self.read_timeout_opt())?;
         if !reply.accepted {
             self.stats.handshake_rejects += 1;
             bail!("handshake rejected: {}", reply.message);
         }
+        self.codec = codec;
+        // `codec: None` in the reply means the session fell back to v2.
+        self.session_version = if reply.codec.is_some() { VERSION } else { V2 };
         self.session = Some((reply.session_id, reply.token));
         self.session_pp = choice.pp;
         self.conn = Some(Conn { stream });
@@ -502,19 +523,41 @@ impl FailoverClient {
         Ok(())
     }
 
-    fn try_remote(&mut self, seq: u64, input: &[f32]) -> Result<Vec<u8>> {
+    fn try_remote(&mut self, seq: u64, input: &[f32], first_attempt: bool) -> Result<Vec<u8>> {
         self.ensure_connected()?;
         let choice = self.policy.decide(self.monitor.state());
-        if choice.mode != ServingMode::Local && choice.pp != self.session_pp {
-            self.ensure_pp(choice.pp)?;
+        // Plan hot-swaps only at *fresh* sequence boundaries: a retried
+        // seq on a resumed session may be answered from the server's
+        // replay ring, i.e. by the execution at the pp it was first
+        // sent under — switching mid-seq would make the client expect a
+        // digest from a pp the server never ran that seq at.  (The
+        // digest is pp-dependent once the wire codec quantizes at the
+        // cut; at raw f32 this was unobservable.)
+        if first_attempt && choice.mode != ServingMode::Local && choice.pp != self.session_pp {
+            if let Err(e) = self.ensure_pp(choice.pp) {
+                // The switch may have applied server-side with its ack
+                // lost to the link failure, leaving the session's plan
+                // unknowable — a RESUME would keep executing at a pp
+                // the client no longer predicts.  Retire the session
+                // (nothing is in flight here: the infer frame for this
+                // seq has not been sent yet) so the retry opens a fresh
+                // one at a known pp.
+                self.session = None;
+                return Err(e);
+            }
         }
-        self.scratch.prepare_into(input, self.session_pp, &mut self.payload);
+        let codec = self.codec;
+        self.scratch.prepare_codec_into(input, self.session_pp, codec, &mut self.payload);
         let t0 = Instant::now();
         let stream = &mut self.conn.as_mut().expect("connected").stream;
         write_frame(stream, seq, ReqKind::Infer, &self.payload)?;
+        self.stats.bytes_tx += (self.payload.len() + 13) as u64;
+        self.stats.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
         let mut reject_retries = 0u32;
         loop {
             let resp = await_response(stream, &mut self.stats, seq)?;
+            self.stats.bytes_rx += (resp.body.len() + 13) as u64;
+            self.stats.f32_equiv_rx += (resp.body.len() + 13) as u64;
             match resp.status {
                 RespStatus::Ok => {
                     self.monitor.note_rtt(t0.elapsed(), self.payload.len() + resp.body.len());
@@ -530,6 +573,8 @@ impl FailoverClient {
                     }
                     std::thread::sleep(Duration::from_millis(2));
                     write_frame(stream, seq, ReqKind::Infer, &self.payload)?;
+                    self.stats.bytes_tx += (self.payload.len() + 13) as u64;
+                    self.stats.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
                 }
                 RespStatus::Error => {
                     bail!("server error for seq {seq}: {}", String::from_utf8_lossy(&resp.body))

@@ -24,16 +24,15 @@
 //! even though the affected frames complete via the local fallback.
 
 use super::failover::{availability_ratio, FailoverClient, FailoverConfig};
-use super::model::{make_input_into, FrameScratch, MODEL_NAME, TOKEN_FLOATS};
+use super::model::{make_input_into, FrameScratch, MODEL_NAME, TOKEN_BYTES, TOKEN_FLOATS};
 use super::protocol::{
-    read_handshake_reply, read_response, write_frame, write_handshake, write_request, Handshake,
-    ReqKind, RespStatus,
+    connect_client, read_response, write_frame, write_request, Handshake, ReqKind, RespStatus,
 };
-use crate::runtime::metrics::LatencyHistogram;
+use crate::runtime::metrics::{LatencyHistogram, WireCounters};
 use crate::runtime::netsim::{LinkModel, LinkShaper};
+use crate::runtime::wire::WireDtype;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -56,6 +55,10 @@ pub struct LoadgenConfig {
     /// abruptly kills its own link mid-run (no BYE) and must recover via
     /// RECONNECT/replay or local fallback.  0 = never.
     pub chaos_kill_every: u64,
+    /// Requested activation wire dtype (`--wire`): the handshake
+    /// advertises the matching capability bits and the server may
+    /// downgrade (an f32-only server always can).
+    pub wire: WireDtype,
 }
 
 impl LoadgenConfig {
@@ -78,6 +81,7 @@ impl Default for LoadgenConfig {
             seed: 7,
             resilient: false,
             chaos_kill_every: 0,
+            wire: WireDtype::F32,
         }
     }
 }
@@ -93,6 +97,11 @@ struct Tally {
     reconnects: u64,
     resumed: u64,
     replays: u64,
+    /// Data-plane bytes this client moved (and their f32 equivalents).
+    bytes_tx: u64,
+    bytes_rx: u64,
+    f32_equiv_tx: u64,
+    f32_equiv_rx: u64,
 }
 
 #[derive(Debug)]
@@ -110,6 +119,9 @@ pub struct LoadReport {
     pub replays_received: u64,
     pub wall: Duration,
     pub latency: Arc<LatencyHistogram>,
+    /// Aggregate link-byte accounting across all clients (actual vs
+    /// f32-equivalent; the compression-ratio gauge of the summary).
+    pub wire: WireCounters,
 }
 
 impl LoadReport {
@@ -155,6 +167,7 @@ impl LoadReport {
             ("wall_ms", Json::from(self.wall.as_secs_f64() * 1e3)),
             ("requests_per_sec", Json::from(self.requests_per_sec())),
             ("latency", self.latency.to_json()),
+            ("wire", self.wire.to_json()),
         ])
     }
 
@@ -183,26 +196,31 @@ impl LoadReport {
                 self.link_availability() * 100.0
             ));
         }
+        use std::sync::atomic::Ordering;
+        let (tx, rx) = (
+            self.wire.bytes_tx.load(Ordering::Relaxed),
+            self.wire.bytes_rx.load(Ordering::Relaxed),
+        );
+        if tx + rx > 0 {
+            line.push_str(&format!(
+                "; wire {:.1} KB tx / {:.1} KB rx ({:.2}x vs f32)",
+                tx as f64 / 1024.0,
+                rx as f64 / 1024.0,
+                self.wire.compression_ratio()
+            ));
+        }
         line
     }
 }
 
 /// Strict client: raw protocol, any link loss ends the session.
+/// Negotiates the wire codec (v3 with fallback); `cfg.wire` is the
+/// *requested* dtype — the server's reply decides.
 fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) -> Result<Tally> {
     let mut tally = Tally::default();
-    let mut stream = TcpStream::connect(&cfg.addr)
+    let hello = Handshake::v3(&cfg.model, cfg.pp, &format!("loadgen-{index}"), cfg.wire.caps());
+    let (mut stream, reply, codec) = connect_client(&cfg.addr, &hello, None)
         .with_context(|| format!("client {index} connecting to {}", cfg.addr))?;
-    stream.set_nodelay(true)?;
-    write_handshake(
-        &mut stream,
-        &Handshake {
-            model: cfg.model.clone(),
-            pp: cfg.pp,
-            client_id: format!("loadgen-{index}"),
-            resume: None,
-        },
-    )?;
-    let reply = read_handshake_reply(&mut stream)?;
     if !reply.accepted {
         tally.session_rejected = true;
         return Ok(tally);
@@ -216,10 +234,11 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
     let mut expected = Vec::new();
     for r in 0..cfg.requests {
         make_input_into(frame_seed(cfg.seed, index, r), &mut input);
-        scratch.frame_into(&input, cfg.pp, &mut payload, &mut expected);
+        scratch.frame_codec_into(&input, cfg.pp, codec, &mut payload, &mut expected);
         if let Some(s) = &shaper {
             // Serialization pacing + one-way propagation delay, exactly
-            // like a TX FIFO riding this link.
+            // like a TX FIFO riding this link — the coded payload's
+            // *actual* size is what paces, which is the whole point.
             let ts = s.send_slot(payload.len());
             s.delivery_wait(ts);
         }
@@ -230,8 +249,12 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
             break; // connection gone before the request left
         }
         tally.sent += 1;
+        tally.bytes_tx += (payload.len() + 13) as u64;
+        tally.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
         match read_response(&mut stream) {
             Ok(Some(resp)) => {
+                tally.bytes_rx += (resp.body.len() + 13) as u64;
+                tally.f32_equiv_rx += (resp.body.len() + 13) as u64;
                 match resp.status {
                     // Only completed inferences feed the latency
                     // histogram — fast rejects under overload would
@@ -268,6 +291,7 @@ fn resilient_client_main(
         model: cfg.model.clone(),
         pp: cfg.pp,
         client_id: format!("loadgen-{index}"),
+        wire: cfg.wire,
         ..FailoverConfig::default()
     });
     let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
@@ -279,30 +303,55 @@ fn resilient_client_main(
             fc.kill_link(); // induced mid-run link failure
         }
         make_input_into(frame_seed(cfg.seed, index, r), &mut input);
-        scratch.expected_into(&input, &mut expected);
         if let Some(s) = &shaper {
-            let ts = s.send_slot(super::model::TOKEN_BYTES);
+            // Pace on the *coded* request size (known once the session
+            // negotiated), like the strict client — otherwise the wire
+            // compression would never show up in shaped-link latency.
+            let bytes = crate::runtime::wire::encoded_len(fc.codec().wire, TOKEN_FLOATS);
+            let ts = s.send_slot(bytes);
             s.delivery_wait(ts);
         }
         let t0 = Instant::now();
         tally.sent += 1;
         match fc.infer(&input) {
-            Ok((body, served)) if body == expected => {
-                // Local fallbacks complete the frame but say nothing
-                // about serving latency; keep the histogram remote-only.
-                if !served.is_local() {
-                    latency.record(t0.elapsed());
-                } else {
-                    tally.served_local += 1;
+            Ok((body, served)) => {
+                // Clock stops at response receipt: the ground-truth
+                // recomputation below is verification overhead, not
+                // serving latency.
+                let elapsed = t0.elapsed();
+                // The ground truth depends on where (and over which
+                // codec) the frame ran: a local fallback is the pure
+                // f32 chain; a remote serving went through the wire
+                // round trip at the *served* partition point.
+                match served {
+                    super::failover::Served::Local => scratch.expected_into(&input, &mut expected),
+                    super::failover::Served::Remote { pp } => {
+                        scratch.expected_codec_into(&input, pp, fc.codec(), &mut expected)
+                    }
                 }
-                tally.ok += 1;
+                if body == expected {
+                    // Local fallbacks complete the frame but say
+                    // nothing about serving latency; keep the
+                    // histogram remote-only.
+                    if !served.is_local() {
+                        latency.record(elapsed);
+                    } else {
+                        tally.served_local += 1;
+                    }
+                    tally.ok += 1;
+                } else {
+                    tally.errors += 1; // wrong bytes
+                }
             }
-            Ok(_) => tally.errors += 1, // wrong bytes
             Err(_) => tally.errors += 1,
         }
     }
     fc.finish();
     let stats = fc.stats();
+    tally.bytes_tx = stats.bytes_tx;
+    tally.bytes_rx = stats.bytes_rx;
+    tally.f32_equiv_tx = stats.f32_equiv_tx;
+    tally.f32_equiv_rx = stats.f32_equiv_rx;
     // Admission rejects stay visible in resilient mode even though the
     // frames themselves completed locally: a client that was ever
     // refused at handshake counts as a rejected session, keeping the
@@ -354,6 +403,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         replays_received: 0,
         wall: Duration::ZERO,
         latency,
+        wire: WireCounters::new(),
     };
     // Join EVERY client before reporting or erroring — returning early
     // would leave live clients hammering the server behind the caller's
@@ -371,6 +421,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 report.reconnects += tally.reconnects;
                 report.sessions_resumed += tally.resumed;
                 report.replays_received += tally.replays;
+                report.wire.note_tx(tally.bytes_tx, tally.f32_equiv_tx);
+                report.wire.note_rx(tally.bytes_rx, tally.f32_equiv_rx);
             }
             Ok(Err(e)) => first_err = first_err.or(Some(e)),
             Err(_) => {
@@ -408,11 +460,20 @@ pub struct WaveConfig {
     pub rounds: u64,
     pub pp: usize,
     pub seed: u64,
+    /// Requested activation wire dtype (negotiated per session).
+    pub wire: WireDtype,
 }
 
 impl Default for WaveConfig {
     fn default() -> Self {
-        WaveConfig { addr: String::new(), sessions: 64, rounds: 2, pp: 2, seed: 11 }
+        WaveConfig {
+            addr: String::new(),
+            sessions: 64,
+            rounds: 2,
+            pp: 2,
+            seed: 11,
+            wire: WireDtype::F32,
+        }
     }
 }
 
@@ -452,22 +513,13 @@ pub fn run_session_wave(cfg: &WaveConfig) -> Result<WaveReport> {
     let latency = Arc::new(LatencyHistogram::new());
     let t0 = Instant::now();
     let mut streams = Vec::with_capacity(cfg.sessions);
+    let mut codec = crate::runtime::wire::SessionCodec::f32();
     for i in 0..cfg.sessions {
-        let mut s = TcpStream::connect(&cfg.addr)
+        let hello = Handshake::v3(MODEL_NAME, cfg.pp, &format!("wave-{i}"), cfg.wire.caps());
+        let (s, reply, c) = connect_client(&cfg.addr, &hello, Some(Duration::from_secs(30)))
             .with_context(|| format!("wave session {i} connecting to {}", cfg.addr))?;
-        s.set_nodelay(true)?;
-        s.set_read_timeout(Some(Duration::from_secs(30)))?;
-        write_handshake(
-            &mut s,
-            &Handshake {
-                model: MODEL_NAME.to_string(),
-                pp: cfg.pp,
-                client_id: format!("wave-{i}"),
-                resume: None,
-            },
-        )?;
-        let reply = read_handshake_reply(&mut s)?;
         anyhow::ensure!(reply.accepted, "wave session {i} rejected: {}", reply.message);
+        codec = c; // one server, one negotiation result for the wave
         streams.push(s);
     }
     let mut ok = 0u64;
@@ -484,7 +536,7 @@ pub fn run_session_wave(cfg: &WaveConfig) -> Result<WaveReport> {
         // Write to every session first (sequence numbers start at 1)...
         for (i, s) in streams.iter_mut().enumerate() {
             make_input_into(frame_seed(cfg.seed, i, r), &mut input);
-            scratch.frame_into(&input, cfg.pp, &mut payload, &mut expecteds[i]);
+            scratch.frame_codec_into(&input, cfg.pp, codec, &mut payload, &mut expecteds[i]);
             sent_at[i] = Instant::now();
             write_request(s, r + 1, &payload)?;
         }
@@ -532,6 +584,7 @@ mod tests {
             replays_received: 0,
             wall: Duration::from_millis(100),
             latency: Arc::new(LatencyHistogram::new()),
+            wire: WireCounters::new(),
         };
         assert_eq!(r.lost(), 1);
         assert!((r.requests_per_sec() - 70.0).abs() < 1e-6);

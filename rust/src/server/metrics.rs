@@ -7,7 +7,7 @@
 //! per plan key, not per request).
 
 use crate::compiler::PlanKey;
-use crate::runtime::metrics::LatencyHistogram;
+use crate::runtime::metrics::{LatencyHistogram, WireCounters};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -45,6 +45,14 @@ pub struct ServingMetrics {
     /// Backpressure: times the reactor paused a connection's reads
     /// because its write buffer crossed the high-water mark.
     pub read_pauses: AtomicU64,
+    /// Data-plane link bytes and the f32-equivalent totals behind the
+    /// wire-compression-ratio gauge.  Counts every post-handshake frame
+    /// (infer, ping, switch, bye + all responses); client-side reports
+    /// (`FailoverStats`, the loadgen tallies) count inference frames
+    /// only, so on ping/switch-heavy sessions the server's ratio reads
+    /// slightly closer to 1.0 than the clients' — same traffic,
+    /// different denominators.
+    pub wire: WireCounters,
     per_plan: Mutex<BTreeMap<PlanKey, Arc<PlanMetrics>>>,
 }
 
@@ -115,6 +123,7 @@ impl ServingMetrics {
             ("plan_switches", Json::from(self.plan_switches.load(Ordering::Relaxed))),
             ("pings", Json::from(self.pings.load(Ordering::Relaxed))),
             ("read_pauses", Json::from(self.read_pauses.load(Ordering::Relaxed))),
+            ("wire", self.wire.to_json()),
             ("queue_high_water", Json::from(self.queue_high_water.load(Ordering::Relaxed))),
             ("batch_occupancy", Json::from(self.batch_occupancy())),
             ("plans", Json::Arr(plans)),

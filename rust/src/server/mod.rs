@@ -32,9 +32,15 @@
 //! * **failover** (`failover`) — the client-side migration policy and
 //!   resilient client that choose between collaborative, degraded, and
 //!   local-only plans from `runtime::health` link signals;
+//! * **compact activation wire** (`runtime::wire`, `protocol` v3) —
+//!   infer payloads cross the link as int8/fp16 when the handshake's
+//!   capability negotiation allows, with transparent raw-f32 fallback
+//!   for old peers in either direction; the engine shards decode per
+//!   the session's negotiated dtype and can run the int8 compute path
+//!   (`--precision int8`);
 //! * **serving metrics** (`metrics`) — queue depth, batch occupancy,
 //!   per-plan p50/p95/p99 latency, reject/replay/resume/backpressure
-//!   counters;
+//!   counters, and the wire byte/compression gauges;
 //! * **loadgen** (`loadgen`) — N synthetic clients driven through
 //!   `netsim::LinkShaper` link profiles, verifying every response, with
 //!   a chaos mode that kills links mid-run, plus a single-threaded
@@ -57,6 +63,7 @@ pub mod workers;
 
 use crate::compiler::PlanCache;
 use crate::runtime::reactor::WakeHandle;
+use crate::runtime::wire::{Precision, CAP_F16, CAP_I8};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use batch::BatchQueue;
@@ -101,6 +108,16 @@ pub struct ServerConfig {
     /// backlog drains (slow readers throttle themselves, not the
     /// server).
     pub write_high_water: usize,
+    /// Wire-codec capabilities this server offers v3 clients
+    /// (`runtime::wire::{CAP_I8, CAP_F16}`); 0 forces every session to
+    /// raw f32 (the `--no-wire-codec` downgrade knob, and the stand-in
+    /// for a pre-v3 server in interop tests).
+    pub wire_caps: u8,
+    /// Compute precision of the engine shards (`--precision`).  The
+    /// handshake reply tells v3 clients, so both sides run the stage
+    /// chain identically; v2 clients only interoperate with an f32
+    /// server (their digests assume f32 stages).
+    pub precision: Precision,
 }
 
 impl Default for ServerConfig {
@@ -117,6 +134,8 @@ impl Default for ServerConfig {
             detach_linger: Duration::from_secs(30),
             replay_ring: 64,
             write_high_water: 1 << 20,
+            wire_caps: CAP_I8 | CAP_F16,
+            precision: Precision::F32,
         }
     }
 }
@@ -132,6 +151,10 @@ struct ServerState {
     idle_timeout: Duration,
     detach_linger: Duration,
     replay_ring: usize,
+    /// Wire-codec capability set offered at negotiation.
+    wire_caps: u8,
+    /// Engine-shard compute precision (returned in v3 replies).
+    precision: Precision,
 }
 
 /// A running server.  `shutdown()` tears everything down in order:
@@ -173,9 +196,12 @@ impl Server {
             idle_timeout: cfg.session_idle_timeout,
             detach_linger: cfg.detach_linger,
             replay_ring: cfg.replay_ring,
+            wire_caps: cfg.wire_caps,
+            precision: cfg.precision,
         });
 
-        let (pool, mut dispatch) = WorkerPool::spawn(workers, cfg.pin_workers, metrics.clone())?;
+        let (pool, mut dispatch) =
+            WorkerPool::spawn(workers, cfg.pin_workers, metrics.clone(), cfg.precision)?;
 
         // Dispatcher: drain the batch queue into the worker rings until
         // the queue is closed AND empty, then stop the workers.  (If this
@@ -367,20 +393,12 @@ mod tests {
         let server = Server::start(cfg).unwrap();
         // First session occupies the only slot.
         let mut first = TcpStream::connect(server.addr()).unwrap();
-        protocol::write_handshake(
-            &mut first,
-            &Handshake { model: "synthetic".into(), pp: 1, client_id: "a".into(), resume: None },
-        )
-        .unwrap();
+        protocol::write_handshake(&mut first, &Handshake::v2("synthetic", 1, "a")).unwrap();
         let reply = protocol::read_handshake_reply(&mut first).unwrap();
         assert!(reply.accepted);
         // Second is rejected with the capacity message.
         let mut second = TcpStream::connect(server.addr()).unwrap();
-        protocol::write_handshake(
-            &mut second,
-            &Handshake { model: "synthetic".into(), pp: 1, client_id: "b".into(), resume: None },
-        )
-        .unwrap();
+        protocol::write_handshake(&mut second, &Handshake::v2("synthetic", 1, "b")).unwrap();
         let reply = protocol::read_handshake_reply(&mut second).unwrap();
         assert!(!reply.accepted);
         assert!(reply.message.contains("session capacity"), "{}", reply.message);
@@ -394,11 +412,7 @@ mod tests {
     fn unknown_model_rejected_at_handshake() {
         let server = Server::start(quiet_cfg()).unwrap();
         let mut c = TcpStream::connect(server.addr()).unwrap();
-        protocol::write_handshake(
-            &mut c,
-            &Handshake { model: "vehicle".into(), pp: 3, client_id: "x".into(), resume: None },
-        )
-        .unwrap();
+        protocol::write_handshake(&mut c, &Handshake::v2("vehicle", 3, "x")).unwrap();
         let reply = protocol::read_handshake_reply(&mut c).unwrap();
         assert!(!reply.accepted);
         assert!(reply.message.contains("unknown model"), "{}", reply.message);
@@ -412,12 +426,8 @@ mod tests {
         let mut c = TcpStream::connect(server.addr()).unwrap();
         protocol::write_handshake(
             &mut c,
-            &Handshake {
-                model: "synthetic".into(),
-                pp: 2,
-                client_id: "ghost".into(),
-                resume: Some(protocol::Resume { session_id: 424242, token: 0, last_ack: 0 }),
-            },
+            &Handshake::v2("synthetic", 2, "ghost")
+                .with_resume(protocol::Resume { session_id: 424242, token: 0, last_ack: 0 }),
         )
         .unwrap();
         let reply = protocol::read_handshake_reply(&mut c).unwrap();
@@ -460,12 +470,7 @@ mod tests {
             let mut s = TcpStream::connect(server.addr()).unwrap();
             protocol::write_handshake(
                 &mut s,
-                &Handshake {
-                    model: "synthetic".into(),
-                    pp: 1,
-                    client_id: format!("inv-{i}"),
-                    resume: None,
-                },
+                &Handshake::v2("synthetic", 1, &format!("inv-{i}")),
             )
             .unwrap();
             assert!(protocol::read_handshake_reply(&mut s).unwrap().accepted);

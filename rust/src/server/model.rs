@@ -33,6 +33,7 @@ use crate::platform::{Mapping, PlatformGraph};
 use crate::runtime::device::DeviceModel;
 use crate::runtime::linalg;
 use crate::runtime::netsim::LinkModel;
+use crate::runtime::wire::{self, Precision, SessionCodec, WireDtype};
 use crate::util::arena::{Arena, ArenaBuf};
 use crate::util::rng::Rng;
 use crate::util::tensor;
@@ -82,13 +83,19 @@ fn stage_nets() -> &'static [StageNet] {
         fn gen(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
             (0..n).map(|_| rng.f32_range(-scale, scale)).collect()
         }
+        // Weight amplitudes make each stage a *contraction* for small
+        // perturbations (per-stage error gain < 1), so quantization
+        // noise injected at the wire or inside an int8 stage decays
+        // through the remaining chain instead of compounding — the
+        // property the accuracy-epsilon methodology in EXPERIMENTS.md
+        // relies on.
         (1..=NUM_STAGES)
             .map(|stage| {
                 let mut rng = Rng::new(0xED9E_5EED ^ ((stage as u64) << 8));
                 StageNet {
                     w1: gen(&mut rng, STAGE_HIDDEN * TOKEN_FLOATS, 0.05),
                     b1: gen(&mut rng, STAGE_HIDDEN, 0.5),
-                    w2: gen(&mut rng, TOKEN_FLOATS * STAGE_HIDDEN, 0.2),
+                    w2: gen(&mut rng, TOKEN_FLOATS * STAGE_HIDDEN, 0.12),
                     b2: gen(&mut rng, TOKEN_FLOATS, 0.5),
                 }
             })
@@ -96,17 +103,106 @@ fn stage_nets() -> &'static [StageNet] {
     })
 }
 
+/// Bind-time int8 calibration of one stage: per-row weight scales and
+/// row-quantized weights for both matvecs, derived once per process
+/// from the seeded f32 parameters — so every process derives the
+/// *identical* quantized network, exactly like the f32 weights.
+struct QuantStageNet {
+    w1q: Vec<i8>,
+    w1s: Vec<f32>,
+    w2q: Vec<i8>,
+    w2s: Vec<f32>,
+}
+
+fn quant_stage_nets() -> &'static [QuantStageNet] {
+    static NETS: OnceLock<Vec<QuantStageNet>> = OnceLock::new();
+    NETS.get_or_init(|| {
+        stage_nets()
+            .iter()
+            .map(|net| {
+                let w1s = linalg::row_scales(&net.w1, STAGE_HIDDEN, TOKEN_FLOATS);
+                let w2s = linalg::row_scales(&net.w2, TOKEN_FLOATS, STAGE_HIDDEN);
+                QuantStageNet {
+                    w1q: linalg::quantize_rows(&net.w1, STAGE_HIDDEN, TOKEN_FLOATS, &w1s),
+                    w1s,
+                    w2q: linalg::quantize_rows(&net.w2, TOKEN_FLOATS, STAGE_HIDDEN, &w2s),
+                    w2s,
+                }
+            })
+            .collect()
+    })
+}
+
+/// Bounded stage nonlinearity: a softsign remap into (-1.5, 1.5).
+/// Lipschitz-continuous on purpose — the previous modular fold had a
+/// jump discontinuity at the fold boundary, where a quantization-sized
+/// input perturbation produced an O(3) output jump, making any
+/// "quantized within epsilon of f32" accounting meaningless.
+#[inline]
+fn squash(v: f32) -> f32 {
+    1.5 * v / (1.0 + v.abs())
+}
+
 /// One compute stage, allocation-free: `h = relu(W1 x + b1)` then
-/// `x = wrap(W2 h + b2)` where `wrap` folds values into [-1.5, 1.5).
-/// Both matvecs run through `linalg::matvec`, whose accumulation order
-/// is fixed, so client and server agree bit-for-bit at any partition
-/// point.  `h` must be `STAGE_HIDDEN` long and `y` as long as `x`.
+/// `x = squash(W2 h + b2)` where `squash` bounds values to
+/// (-1.5, 1.5).  Both matvecs run through `linalg::matvec`, whose
+/// accumulation order is fixed, so client and server agree bit-for-bit
+/// at any partition point.  `h` must be `STAGE_HIDDEN` long and `y` as
+/// long as `x`.
 pub fn apply_stage_scratch(stage: usize, x: &mut [f32], h: &mut [f32], y: &mut [f32]) {
     let net = &stage_nets()[stage - 1];
     linalg::matvec(STAGE_HIDDEN, TOKEN_FLOATS, &net.w1, x, Some(&net.b1), true, h);
     linalg::matvec(TOKEN_FLOATS, STAGE_HIDDEN, &net.w2, h, Some(&net.b2), false, y);
     for (xi, yi) in x.iter_mut().zip(y.iter()) {
-        *xi = yi.rem_euclid(3.0) - 1.5;
+        *xi = squash(*yi);
+    }
+}
+
+/// Int8 variant of one compute stage: activations quantize per tensor
+/// (symmetric, dynamic scale), weights were row-quantized at first use,
+/// and both matvecs run `linalg::matvec_i8` with the dequantize+bias
+/// epilogue fused.  Integer accumulation is exact and the quantizer is
+/// deterministic, so — like the f32 path — client and server produce
+/// bit-identical results from identical inputs at any partition point.
+/// `xq` must be `TOKEN_FLOATS` long and `hq` `STAGE_HIDDEN` long.
+pub fn apply_stage_scratch_q(
+    stage: usize,
+    x: &mut [f32],
+    xq: &mut [i8],
+    h: &mut [f32],
+    hq: &mut [i8],
+    y: &mut [f32],
+) {
+    let net = &stage_nets()[stage - 1];
+    let qnet = &quant_stage_nets()[stage - 1];
+    let xs = linalg::quant_scale(x);
+    linalg::quantize_into(x, xs, xq);
+    linalg::matvec_i8(
+        STAGE_HIDDEN,
+        TOKEN_FLOATS,
+        &qnet.w1q,
+        &qnet.w1s,
+        xq,
+        xs,
+        Some(&net.b1),
+        true,
+        h,
+    );
+    let hs = linalg::quant_scale(h);
+    linalg::quantize_into(h, hs, hq);
+    linalg::matvec_i8(
+        TOKEN_FLOATS,
+        STAGE_HIDDEN,
+        &qnet.w2q,
+        &qnet.w2s,
+        hq,
+        hs,
+        Some(&net.b2),
+        false,
+        y,
+    );
+    for (xi, yi) in x.iter_mut().zip(y.iter()) {
+        *xi = squash(*yi);
     }
 }
 
@@ -164,14 +260,39 @@ pub fn expected_digest(input: &[f32]) -> Vec<u8> {
     out
 }
 
+/// Codec-aware client half: stages `1..pp` at the codec precision,
+/// wire-encoded payload.
+pub fn client_prepare_codec(input: &[f32], pp: usize, codec: SessionCodec) -> Vec<u8> {
+    let mut scratch = FrameScratch::new();
+    let mut out = Vec::new();
+    scratch.prepare_codec_into(input, pp, codec, &mut out);
+    out
+}
+
+/// Codec-aware ground truth (depends on `pp`: the wire round trip
+/// happens at the cut).
+pub fn expected_digest_codec(input: &[f32], pp: usize, codec: SessionCodec) -> Vec<u8> {
+    let mut scratch = FrameScratch::new();
+    let mut out = Vec::new();
+    scratch.expected_codec_into(input, pp, codec, &mut out);
+    out
+}
+
 /// Reusable client-side buffers: the loadgen runs thousands of frames
 /// per session, so the per-frame stage/digest work reuses one set of
-/// scratch vectors instead of allocating per request.
+/// scratch vectors instead of allocating per request.  The codec-aware
+/// methods also hold the quantized-activation scratch (`xq`/`hq`) and
+/// an internal wire buffer, so a quantized client loop stays
+/// allocation-free too.
 pub struct FrameScratch {
     x: Vec<f32>,
     h: Vec<f32>,
     y: Vec<f32>,
     d: Vec<f32>,
+    xq: Vec<i8>,
+    hq: Vec<i8>,
+    /// Internal wire round-trip buffer (digest-only paths).
+    wb: Vec<u8>,
 }
 
 impl Default for FrameScratch {
@@ -187,25 +308,81 @@ impl FrameScratch {
             h: vec![0.0; STAGE_HIDDEN],
             y: vec![0.0; TOKEN_FLOATS],
             d: vec![0.0; OUT_FLOATS],
+            xq: vec![0; TOKEN_FLOATS],
+            hq: vec![0; STAGE_HIDDEN],
+            wb: Vec::new(),
+        }
+    }
+
+    fn apply_stage(&mut self, k: usize, precision: Precision) {
+        let FrameScratch { x, h, y, xq, hq, .. } = self;
+        match precision {
+            Precision::F32 => apply_stage_scratch(k, x, h, y),
+            Precision::Int8 => apply_stage_scratch_q(k, x, xq, h, hq, y),
+        }
+    }
+
+    fn run_stages_codec(&mut self, input: &[f32], upto: usize, precision: Precision) {
+        self.x.copy_from_slice(input);
+        for k in 1..=upto {
+            self.apply_stage(k, precision);
         }
     }
 
     fn run_stages(&mut self, input: &[f32], upto: usize) {
-        self.x.copy_from_slice(input);
-        for k in 1..=upto {
-            apply_stage_scratch(k, &mut self.x, &mut self.h, &mut self.y);
-        }
+        self.run_stages_codec(input, upto, Precision::F32);
     }
 
-    /// Stages `1..pp` + serialization into `out` (cleared, reused).
+    /// Stages `1..pp` + serialization into `out` (cleared, reused) —
+    /// the legacy f32 contract ([`SessionCodec::f32`]).
     pub fn prepare_into(&mut self, input: &[f32], pp: usize, out: &mut Vec<u8>) {
-        self.run_stages(input, pp.saturating_sub(1));
-        tensor::f32_extend_bytes(&self.x, out);
+        self.prepare_codec_into(input, pp, SessionCodec::f32(), out);
     }
 
-    /// Full chain + digest into `out` (cleared, reused).
+    /// Stages `1..pp` at the codec's precision, then wire-encode the
+    /// intermediate activation into `out` (cleared, reused).
+    pub fn prepare_codec_into(
+        &mut self,
+        input: &[f32],
+        pp: usize,
+        codec: SessionCodec,
+        out: &mut Vec<u8>,
+    ) {
+        self.run_stages_codec(input, pp.saturating_sub(1), codec.precision);
+        wire::encode_activation(codec.wire, &self.x, out);
+    }
+
+    /// Full f32 chain + digest into `out` (cleared, reused).
     pub fn expected_into(&mut self, input: &[f32], out: &mut Vec<u8>) {
         self.run_stages(input, NUM_STAGES);
+        digest_into(&self.x, &mut self.d);
+        tensor::f32_extend_bytes(&self.d, out);
+    }
+
+    /// Ground-truth digest under a negotiated codec: stages to `pp` at
+    /// the codec precision, the wire quantize/dequantize round trip the
+    /// payload undergoes at the cut, then the remaining stages and the
+    /// digest.  Unlike the pure-f32 digest this depends on `pp` — the
+    /// wire round trip happens wherever the cut is — which is also why
+    /// the server's reply is still byte-for-byte verifiable: both sides
+    /// compute from the *decoded* activation.
+    pub fn expected_codec_into(
+        &mut self,
+        input: &[f32],
+        pp: usize,
+        codec: SessionCodec,
+        out: &mut Vec<u8>,
+    ) {
+        self.run_stages_codec(input, pp.saturating_sub(1), codec.precision);
+        // The f32 wire round trip is an exact identity — skip the copy.
+        if codec.wire != WireDtype::F32 {
+            wire::encode_activation(codec.wire, &self.x, &mut self.wb);
+            wire::decode_activation_into(codec.wire, &self.wb, &mut self.x)
+                .expect("own encoding always decodes");
+        }
+        for k in pp.max(1)..=NUM_STAGES {
+            self.apply_stage(k, codec.precision);
+        }
         digest_into(&self.x, &mut self.d);
         tensor::f32_extend_bytes(&self.d, out);
     }
@@ -215,6 +392,7 @@ impl FrameScratch {
     /// *continues in place* through `pp..=NUM_STAGES` for the digest —
     /// each stage executes exactly once, where the separate
     /// `prepare_into` + `expected_into` pair would rerun the prefix.
+    /// The legacy f32 contract.
     pub fn frame_into(
         &mut self,
         input: &[f32],
@@ -222,10 +400,30 @@ impl FrameScratch {
         payload: &mut Vec<u8>,
         expected: &mut Vec<u8>,
     ) {
-        self.run_stages(input, pp.saturating_sub(1));
-        tensor::f32_extend_bytes(&self.x, payload);
+        self.frame_codec_into(input, pp, SessionCodec::f32(), payload, expected);
+    }
+
+    /// Codec-aware single-pass payload + expected digest.  The chain
+    /// continues from the *decoded* payload (the exact tensor the
+    /// server will reconstruct), so the expected digest matches the
+    /// server byte-for-byte at any wire dtype and precision.
+    pub fn frame_codec_into(
+        &mut self,
+        input: &[f32],
+        pp: usize,
+        codec: SessionCodec,
+        payload: &mut Vec<u8>,
+        expected: &mut Vec<u8>,
+    ) {
+        self.run_stages_codec(input, pp.saturating_sub(1), codec.precision);
+        wire::encode_activation(codec.wire, &self.x, payload);
+        // The f32 round trip is an exact identity — skip the copy-back.
+        if codec.wire != WireDtype::F32 {
+            wire::decode_activation_into(codec.wire, payload, &mut self.x)
+                .expect("own encoding always decodes");
+        }
         for k in pp.max(1)..=NUM_STAGES {
-            apply_stage_scratch(k, &mut self.x, &mut self.h, &mut self.y);
+            self.apply_stage(k, codec.precision);
         }
         digest_into(&self.x, &mut self.d);
         tensor::f32_extend_bytes(&self.d, expected);
@@ -309,6 +507,9 @@ pub fn compile_server_plan(key: &PlanKey) -> Result<ServerModelPlan> {
 /// allocation and nothing else.
 pub struct EngineShard {
     plan: Arc<ServerModelPlan>,
+    /// Compute precision of the stage chain (server-wide; the
+    /// handshake reply tells clients so they match it).
+    precision: Precision,
     arena: Arena,
     /// Arena regions in allocation order: token x, hidden h, stage
     /// output y, digest d.
@@ -316,47 +517,77 @@ pub struct EngineShard {
     bh: ArenaBuf,
     by: ArenaBuf,
     bd: ArenaBuf,
+    /// Quantized-activation scratch of the int8 stage path.
+    xq: Vec<i8>,
+    hq: Vec<i8>,
     pool: TokenPool,
 }
 
 impl EngineShard {
     pub fn new(plan: Arc<ServerModelPlan>) -> Self {
+        EngineShard::with_precision(plan, Precision::F32)
+    }
+
+    pub fn with_precision(plan: Arc<ServerModelPlan>, precision: Precision) -> Self {
         let mut arena = Arena::with_capacity(2 * TOKEN_FLOATS + STAGE_HIDDEN + OUT_FLOATS);
         let bx = arena.alloc(TOKEN_FLOATS);
         let bh = arena.alloc(STAGE_HIDDEN);
         let by = arena.alloc(TOKEN_FLOATS);
         let bd = arena.alloc(OUT_FLOATS);
-        EngineShard { plan, arena, bx, bh, by, bd, pool: TokenPool::new(8) }
+        EngineShard {
+            plan,
+            precision,
+            arena,
+            bx,
+            bh,
+            by,
+            bd,
+            xq: vec![0; TOKEN_FLOATS],
+            hq: vec![0; STAGE_HIDDEN],
+            pool: TokenPool::new(8),
+        }
     }
 
     /// Run the server-side stages + sink digest over one request token,
     /// writing the response into `out` (cleared; no allocation once its
-    /// capacity is warm).
+    /// capacity is warm).  Legacy f32-wire entry point.
     pub fn infer_into(&mut self, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
+        self.infer_wire_into(payload, WireDtype::F32, out)
+    }
+
+    /// Wire-aware inference: decode the payload per the session's
+    /// negotiated dtype, run the stages at the shard's precision,
+    /// digest.  Allocation-free in steady state for every dtype.
+    pub fn infer_wire_into(
+        &mut self,
+        payload: &[u8],
+        dtype: WireDtype,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        let want = wire::encoded_len(dtype, TOKEN_FLOATS);
         ensure!(
-            payload.len() == TOKEN_BYTES,
-            "payload {} bytes, plan {} expects {TOKEN_BYTES}",
+            payload.len() == want,
+            "payload {} bytes, plan {} expects {want} ({} wire)",
             payload.len(),
-            self.plan.key
+            self.plan.key,
+            dtype.as_str()
         );
-        // Batch-assembly hot path: an aligned request payload loads into
+        // Batch-assembly hot path: an aligned f32 payload loads into
         // the scratch tensor with one memcpy (the stages mutate in
-        // place, so a borrow alone cannot replace the scratch);
-        // unaligned payloads take the per-element decode.
+        // place, so a borrow alone cannot replace the scratch); coded
+        // payloads dequantize element-wise into the same scratch.
         {
             let x = self.arena.get_mut(self.bx);
-            match tensor::cast_f32_slice(payload) {
-                Some(vals) => x.copy_from_slice(vals),
-                None => {
-                    for (dst, chunk) in x.iter_mut().zip(payload.chunks_exact(4)) {
-                        *dst = f32::from_le_bytes(chunk.try_into().unwrap());
-                    }
-                }
-            }
+            wire::decode_activation_into(dtype, payload, x)?;
         }
         for &k in &self.plan.server_stages {
             let (x, h, y) = self.arena.tri_mut(self.bx, self.bh, self.by);
-            apply_stage_scratch(k, x, h, y);
+            match self.precision {
+                Precision::F32 => apply_stage_scratch(k, x, h, y),
+                Precision::Int8 => {
+                    apply_stage_scratch_q(k, x, &mut self.xq, h, &mut self.hq, y)
+                }
+            }
         }
         let (x, d) = self.arena.pair_mut(self.bx, self.bd);
         digest_into(x, d);
@@ -368,8 +599,13 @@ impl EngineShard {
     /// from the shard's pool (allocation-free when the caller recycles
     /// bodies back via [`EngineShard::recycle`]).
     pub fn infer(&mut self, payload: &[u8]) -> Result<Vec<u8>> {
+        self.infer_wire(payload, WireDtype::F32)
+    }
+
+    /// Wire-aware variant of [`EngineShard::infer`].
+    pub fn infer_wire(&mut self, payload: &[u8], dtype: WireDtype) -> Result<Vec<u8>> {
         let mut out = self.pool.take(OUT_BYTES);
-        self.infer_into(payload, &mut out)?;
+        self.infer_wire_into(payload, dtype, &mut out)?;
         Ok(out)
     }
 
@@ -501,6 +737,90 @@ mod tests {
         let c = shard.infer(&payload).unwrap();
         assert_eq!(c, b);
         assert!(shard.pool.stats().hits >= 1);
+    }
+
+    #[test]
+    fn split_result_is_partition_invariant_under_every_codec() {
+        // The bit-exactness contract extends to every negotiated codec:
+        // the client continues from its own *decoded* payload, so the
+        // server's digest matches byte-for-byte at any wire dtype and
+        // compute precision.
+        let input = make_input(17);
+        for wire_dtype in [WireDtype::F32, WireDtype::F16, WireDtype::I8] {
+            for precision in [Precision::F32, Precision::Int8] {
+                let codec = SessionCodec { wire: wire_dtype, precision };
+                for pp in 1..=MAX_PP {
+                    let plan =
+                        Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, pp)).unwrap());
+                    let mut shard = EngineShard::with_precision(plan, precision);
+                    let payload = client_prepare_codec(&input, pp, codec);
+                    assert_eq!(
+                        payload.len(),
+                        wire::encoded_len(wire_dtype, TOKEN_FLOATS),
+                        "{codec:?} payload size"
+                    );
+                    let got = shard.infer_wire(&payload, wire_dtype).unwrap();
+                    let expected = expected_digest_codec(&input, pp, codec);
+                    assert_eq!(got, expected, "{codec:?} pp {pp} digest mismatch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_digests_stay_close_to_f32() {
+        // Wire/compute quantization perturbs the digest by a bounded
+        // epsilon (the contraction property); it must not be exactly
+        // zero either, or the quantized path is not actually running.
+        let f32_codec = SessionCodec::f32();
+        let mut max_err = 0.0f32;
+        for seed in 0..8 {
+            let input = make_input(seed);
+            let base = expected_digest_codec(&input, 3, f32_codec);
+            let quant = expected_digest_codec(
+                &input,
+                3,
+                SessionCodec { wire: WireDtype::I8, precision: Precision::F32 },
+            );
+            assert_ne!(base, quant, "i8 wire left the digest bit-identical");
+            let b = tensor::bytes_to_f32(&base);
+            let q = tensor::bytes_to_f32(&quant);
+            for (x, y) in b.iter().zip(&q) {
+                max_err = max_err.max((x - y).abs());
+            }
+        }
+        assert!(max_err < 0.5, "i8 wire digest error {max_err} out of bounds");
+        // f32 wire at f32 precision is the legacy path, bit-exact.
+        let input = make_input(3);
+        assert_eq!(expected_digest_codec(&input, 3, f32_codec), expected_digest(&input));
+    }
+
+    #[test]
+    fn frame_codec_into_agrees_with_split_helpers() {
+        let input = make_input(29);
+        let mut s = FrameScratch::new();
+        for wire_dtype in [WireDtype::F16, WireDtype::I8] {
+            let codec = SessionCodec { wire: wire_dtype, precision: Precision::Int8 };
+            for pp in 1..=MAX_PP {
+                let (mut p, mut e) = (Vec::new(), Vec::new());
+                s.frame_codec_into(&input, pp, codec, &mut p, &mut e);
+                assert_eq!(p, client_prepare_codec(&input, pp, codec), "{codec:?} pp {pp}");
+                assert_eq!(e, expected_digest_codec(&input, pp, codec), "{codec:?} pp {pp}");
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_wire_payload_size_is_an_error() {
+        let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 2)).unwrap());
+        let mut shard = EngineShard::new(plan);
+        let input = make_input(4);
+        let i8_codec = SessionCodec { wire: WireDtype::I8, ..Default::default() };
+        let i8_payload = client_prepare_codec(&input, 2, i8_codec);
+        // An i8 payload against an f32-negotiated session is refused.
+        assert!(shard.infer_wire(&i8_payload, WireDtype::F32).is_err());
+        // And the right dtype accepts it.
+        assert!(shard.infer_wire(&i8_payload, WireDtype::I8).is_ok());
     }
 
     #[test]

@@ -1,16 +1,20 @@
-//! Wire protocol (v2) of the multi-tenant edge inference server.
+//! Wire protocol (v2/v3) of the multi-tenant edge inference server.
 //!
 //! One TCP connection per client *attachment*; a logical **session**
 //! survives attachments: protocol v2 adds sequence-numbered frames, a
 //! RECONNECT handshake, and server-side response replay so a dropped
 //! link or an edge restart loses zero inferences (the fault-tolerance
-//! direction of the Edge-PRUNE follow-up paper).  All integers
-//! little-endian, mirroring the TX/RX FIFO frame format of
-//! `runtime::net`.
+//! direction of the Edge-PRUNE follow-up paper).  Protocol v3 adds the
+//! compact-activation-wire negotiation: the handshake carries a
+//! capability byte (`runtime::wire::{CAP_I8, CAP_F16}`) and the reply
+//! carries the chosen wire dtype plus the server's compute precision.
+//! All integers little-endian, mirroring the TX/RX FIFO frame format
+//! of `runtime::net`.
 //!
 //! ```text
 //! handshake  (client -> server):
-//!   [u32 magic "EPRN"][u16 version = 2][u16 pp][u8 flags]
+//!   [u32 magic "EPRN"][u16 version = 2|3][u16 pp][u8 flags]
+//!   (v3 only) [u8 wire_caps]
 //!   [u64 resume_session][u64 resume_token][u64 last_ack]
 //!   [u16 model_len][model bytes][u16 client_id_len][client_id bytes]
 //!   flags bit 0: RECONNECT — resume_session names a detached session
@@ -21,11 +25,15 @@
 //!   numbers start at 1).
 //! handshake reply (server -> client):
 //!   [u8 status (0 = accepted, 1 = rejected, 2 = resumed)][u64 session_id]
-//!   [u64 resume_token][u16 msg_len][msg bytes]
+//!   [u64 resume_token]
+//!   (to v3 clients only) [u8 wire_dtype][u8 precision]
+//!   [u16 msg_len][msg bytes]
 //! frame      (client -> server):
 //!   [u64 seq][u8 kind][u32 len][payload]
 //!   kind: 0 = infer, 1 = switch (payload [u16 new_pp]), 2 = ping,
 //!         3 = bye (clean close; frees the session slot immediately)
+//!   infer payloads are wire-coded activations (`runtime::wire`) at the
+//!   session's negotiated dtype; v2 sessions always carry raw f32.
 //! response   (server -> client):
 //!   [u64 seq][u8 status (0 = ok, 1 = rejected, 2 = error)]
 //!   [u32 len][body]
@@ -38,15 +46,34 @@
 //! with sequence > `last_ack`, in order; the client must therefore treat
 //! responses as at-least-once and dedupe by sequence number (execution
 //! itself stays exactly-once server-side — see `session::SessionOutbox`).
+//!
+//! **Compatibility:** the server accepts v2 and v3 handshakes; a v2
+//! exchange is byte-identical to the old protocol and always carries
+//! raw-f32 frames.  A v3 client talking to an *old* server gets its
+//! connection dropped at the version check — [`connect_client`]
+//! transparently falls back to a fresh v2 handshake (f32 wire), so new
+//! clients interoperate with old servers too.  Note the compatibility
+//! claim is about protocol *bytes*: response verification additionally
+//! requires both ends to build the same synthetic-model revision (the
+//! stage arithmetic is not versioned over the wire), and a v2 client
+//! cannot attach to a server running non-f32 compute precision — the
+//! reply has no precision byte to tell it, so such handshakes are
+//! rejected with an explicit reason.
 
 use crate::runtime::reactor::ByteBuf;
+use crate::runtime::wire::{Precision, SessionCodec, WireDtype};
 use anyhow::{bail, Context, Result};
 use std::fmt;
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 pub const MAGIC: u32 = 0x4550_524e; // "EPRN"
-pub const VERSION: u16 = 2;
+/// Newest protocol revision this build speaks (the server also accepts
+/// [`V2`]).
+pub const VERSION: u16 = 3;
+/// Legacy revision: no wire-capability byte, raw-f32 activations.
+pub const V2: u16 = 2;
 /// Sanity bound on any variable-length field (requests are model tokens,
 /// not bulk uploads).
 pub const MAX_PAYLOAD: u32 = 64 << 20;
@@ -73,6 +100,37 @@ pub struct Handshake {
     /// `Some` = RECONNECT to an existing session; `model`/`pp` are then
     /// informational only (the session keeps its current plan).
     pub resume: Option<Resume>,
+    /// Protocol revision this handshake is encoded at ([`V2`] or
+    /// [`VERSION`]).
+    pub version: u16,
+    /// v3 wire-capability bits (`runtime::wire::{CAP_I8, CAP_F16}`);
+    /// always 0 on a v2 handshake.
+    pub wire_caps: u8,
+}
+
+impl Handshake {
+    /// Legacy v2 handshake: raw-f32 frames, no capability byte.
+    pub fn v2(model: &str, pp: usize, client_id: &str) -> Handshake {
+        Handshake {
+            model: model.to_string(),
+            pp,
+            client_id: client_id.to_string(),
+            resume: None,
+            version: V2,
+            wire_caps: 0,
+        }
+    }
+
+    /// v3 handshake advertising `wire_caps`.
+    pub fn v3(model: &str, pp: usize, client_id: &str, wire_caps: u8) -> Handshake {
+        Handshake { version: VERSION, wire_caps, ..Handshake::v2(model, pp, client_id) }
+    }
+
+    /// Attach RECONNECT credentials.
+    pub fn with_resume(mut self, resume: Resume) -> Handshake {
+        self.resume = Some(resume);
+        self
+    }
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -85,7 +143,17 @@ pub struct HandshakeReply {
     /// Per-session resume credential: a RECONNECT must present it
     /// (0 on rejects).  Session ids alone are sequential and guessable.
     pub token: u64,
+    /// Negotiated wire dtype + server compute precision.  `Some` on the
+    /// v3 reply layout, `None` on v2 (which implies f32/f32).
+    pub codec: Option<SessionCodec>,
     pub message: String,
+}
+
+impl HandshakeReply {
+    /// The session contract this reply establishes (v2 = f32/f32).
+    pub fn session_codec(&self) -> SessionCodec {
+        self.codec.unwrap_or_default()
+    }
 }
 
 /// Client frame kinds (the `kind` byte of a v2 frame).
@@ -200,17 +268,24 @@ fn read_str(stream: &mut TcpStream) -> Result<String> {
     String::from_utf8(bytes).map_err(|_| anyhow::anyhow!("non-utf8 string field"))
 }
 
-/// Serialize a handshake (the byte layout in the module docs).
+/// Serialize a handshake at its declared version (the byte layouts in
+/// the module docs).
 pub fn encode_handshake(h: &Handshake) -> Result<Vec<u8>> {
-    let mut buf = Vec::with_capacity(40 + h.model.len() + h.client_id.len());
+    if h.version != V2 && h.version != VERSION {
+        bail!("cannot encode protocol version {}", h.version);
+    }
+    let mut buf = Vec::with_capacity(41 + h.model.len() + h.client_id.len());
     buf.extend_from_slice(&MAGIC.to_le_bytes());
-    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&h.version.to_le_bytes());
     buf.extend_from_slice(&(h.pp as u16).to_le_bytes());
     let (flags, session, token, ack) = match &h.resume {
         Some(r) => (FLAG_RESUME, r.session_id, r.token, r.last_ack),
         None => (0u8, 0u64, 0u64, 0u64),
     };
     buf.push(flags);
+    if h.version >= VERSION {
+        buf.push(h.wire_caps);
+    }
     buf.extend_from_slice(&session.to_le_bytes());
     buf.extend_from_slice(&token.to_le_bytes());
     buf.extend_from_slice(&ack.to_le_bytes());
@@ -225,9 +300,10 @@ pub fn write_handshake(stream: &mut TcpStream, h: &Handshake) -> Result<()> {
 
 pub fn read_handshake(stream: &mut TcpStream) -> Result<Handshake> {
     // Validate magic + version from the (version-independent) first 8
-    // bytes BEFORE reading the v2-only resume fields: a v1 client sends
-    // a shorter handshake, and blocking for bytes it will never send
-    // would time out instead of delivering the version-mismatch reject.
+    // bytes BEFORE reading the version-specific fields: a v1 client
+    // sends a shorter handshake, and blocking for bytes it will never
+    // send would time out instead of delivering the version-mismatch
+    // reject.
     let mut head = [0u8; 8];
     stream.read_exact(&mut head).context("handshake header")?;
     let magic = u32::from_le_bytes(head[..4].try_into().unwrap());
@@ -235,23 +311,32 @@ pub fn read_handshake(stream: &mut TcpStream) -> Result<Handshake> {
         bail!("bad handshake magic {magic:#010x} (not an edge-prune client?)");
     }
     let version = u16::from_le_bytes(head[4..6].try_into().unwrap());
-    if version != VERSION {
-        bail!("protocol version {version} unsupported (server speaks {VERSION})");
+    if version != V2 && version != VERSION {
+        bail!("protocol version {version} unsupported (server speaks {V2}..={VERSION})");
     }
     let pp = u16::from_le_bytes(head[6..8].try_into().unwrap()) as usize;
-    let mut rest = [0u8; 25];
-    stream.read_exact(&mut rest).context("handshake resume fields")?;
-    let flags = rest[0];
+    let mut flags = [0u8; 1];
+    stream.read_exact(&mut flags).context("handshake flags")?;
+    let flags = flags[0];
     if flags & !FLAG_RESUME != 0 {
         bail!("unknown handshake flags {flags:#04x}");
     }
-    let session_id = u64::from_le_bytes(rest[1..9].try_into().unwrap());
-    let token = u64::from_le_bytes(rest[9..17].try_into().unwrap());
-    let last_ack = u64::from_le_bytes(rest[17..25].try_into().unwrap());
+    let wire_caps = if version >= VERSION {
+        let mut caps = [0u8; 1];
+        stream.read_exact(&mut caps).context("handshake wire caps")?;
+        caps[0]
+    } else {
+        0
+    };
+    let mut rest = [0u8; 24];
+    stream.read_exact(&mut rest).context("handshake resume fields")?;
+    let session_id = u64::from_le_bytes(rest[..8].try_into().unwrap());
+    let token = u64::from_le_bytes(rest[8..16].try_into().unwrap());
+    let last_ack = u64::from_le_bytes(rest[16..24].try_into().unwrap());
     let resume = (flags & FLAG_RESUME != 0).then_some(Resume { session_id, token, last_ack });
     let model = read_str(stream)?;
     let client_id = read_str(stream)?;
-    Ok(Handshake { model, pp, client_id, resume })
+    Ok(Handshake { model, pp, client_id, resume, version, wire_caps })
 }
 
 /// Clip a message to the protocol's string bound on a char boundary, so
@@ -269,10 +354,13 @@ fn clip(s: &str) -> &str {
 }
 
 /// Serialize a handshake reply.  Infallible: the message is clipped to
-/// the protocol bound (the only encode failure mode).
+/// the protocol bound (the only encode failure mode).  The codec bytes
+/// are present exactly when `r.codec` is `Some` — the server sets it
+/// for v3 clients (who expect the longer layout) and leaves it `None`
+/// for v2 clients (whose layout is byte-identical to the old protocol).
 pub fn encode_handshake_reply(r: &HandshakeReply) -> Vec<u8> {
     let message = clip(&r.message);
-    let mut buf = Vec::with_capacity(19 + message.len());
+    let mut buf = Vec::with_capacity(21 + message.len());
     buf.push(if !r.accepted {
         1
     } else if r.resumed {
@@ -282,6 +370,10 @@ pub fn encode_handshake_reply(r: &HandshakeReply) -> Vec<u8> {
     });
     buf.extend_from_slice(&r.session_id.to_le_bytes());
     buf.extend_from_slice(&r.token.to_le_bytes());
+    if let Some(codec) = &r.codec {
+        buf.push(codec.wire.to_u8());
+        buf.push(codec.precision.to_u8());
+    }
     buf.extend_from_slice(&(message.len() as u16).to_le_bytes());
     buf.extend_from_slice(message.as_bytes());
     buf
@@ -291,7 +383,9 @@ pub fn write_handshake_reply(stream: &mut TcpStream, r: &HandshakeReply) -> Resu
     stream.write_all(&encode_handshake_reply(r)).context("writing handshake reply")
 }
 
-pub fn read_handshake_reply(stream: &mut TcpStream) -> Result<HandshakeReply> {
+/// Read a reply in the layout of `version` (the version the client put
+/// in its handshake — the server mirrors it).
+pub fn read_handshake_reply_v(stream: &mut TcpStream, version: u16) -> Result<HandshakeReply> {
     let mut fixed = [0u8; 17];
     stream.read_exact(&mut fixed).context("handshake reply")?;
     let (accepted, resumed) = match fixed[0] {
@@ -302,8 +396,20 @@ pub fn read_handshake_reply(stream: &mut TcpStream) -> Result<HandshakeReply> {
     };
     let session_id = u64::from_le_bytes(fixed[1..9].try_into().unwrap());
     let token = u64::from_le_bytes(fixed[9..17].try_into().unwrap());
+    let codec = if version >= VERSION {
+        let mut c = [0u8; 2];
+        stream.read_exact(&mut c).context("handshake reply codec")?;
+        Some(SessionCodec { wire: WireDtype::from_u8(c[0])?, precision: Precision::from_u8(c[1])? })
+    } else {
+        None
+    };
     let message = read_str(stream)?;
-    Ok(HandshakeReply { accepted, resumed, session_id, token, message })
+    Ok(HandshakeReply { accepted, resumed, session_id, token, codec, message })
+}
+
+/// Read a legacy v2 reply (no codec bytes).
+pub fn read_handshake_reply(stream: &mut TcpStream) -> Result<HandshakeReply> {
+    read_handshake_reply_v(stream, V2)
 }
 
 /// Serialize one v2 frame.
@@ -477,22 +583,29 @@ pub fn decode_handshake(buf: &mut ByteBuf) -> Result<Option<Handshake>, String> 
         return Err(format!("bad handshake magic {magic:#010x} (not an edge-prune client?)"));
     }
     let version = u16::from_le_bytes(b[4..6].try_into().unwrap());
-    if version != VERSION {
-        return Err(format!("protocol version {version} unsupported (server speaks {VERSION})"));
+    if version != V2 && version != VERSION {
+        return Err(format!(
+            "protocol version {version} unsupported (server speaks {V2}..={VERSION})"
+        ));
     }
     let pp = u16::from_le_bytes(b[6..8].try_into().unwrap()) as usize;
-    if b.len() < 33 {
+    // v3 inserts the wire-capability byte between flags and the resume
+    // fields; everything after shifts by one.
+    let caps_len = if version >= VERSION { 1 } else { 0 };
+    if b.len() < 33 + caps_len {
         return Ok(None);
     }
     let flags = b[8];
     if flags & !FLAG_RESUME != 0 {
         return Err(format!("unknown handshake flags {flags:#04x}"));
     }
-    let session_id = u64::from_le_bytes(b[9..17].try_into().unwrap());
-    let token = u64::from_le_bytes(b[17..25].try_into().unwrap());
-    let last_ack = u64::from_le_bytes(b[25..33].try_into().unwrap());
+    let wire_caps = if caps_len == 1 { b[9] } else { 0 };
+    let rb = 9 + caps_len;
+    let session_id = u64::from_le_bytes(b[rb..rb + 8].try_into().unwrap());
+    let token = u64::from_le_bytes(b[rb + 8..rb + 16].try_into().unwrap());
+    let last_ack = u64::from_le_bytes(b[rb + 16..rb + 24].try_into().unwrap());
     // Two length-prefixed strings: model, then client id.
-    let mut off = 33usize;
+    let mut off = rb + 24;
     let mut strings = [String::new(), String::new()];
     for slot in &mut strings {
         if b.len() < off + 2 {
@@ -513,7 +626,86 @@ pub fn decode_handshake(buf: &mut ByteBuf) -> Result<Option<Handshake>, String> 
     buf.consume(off);
     let [model, client_id] = strings;
     let resume = (flags & FLAG_RESUME != 0).then_some(Resume { session_id, token, last_ack });
-    Ok(Some(Handshake { model, pp, client_id, resume }))
+    Ok(Some(Handshake { model, pp, client_id, resume, version, wire_caps }))
+}
+
+// ---------------------------------------------------------------------
+// Client-side connection helper with version fallback.
+// ---------------------------------------------------------------------
+
+/// Connect + handshake, negotiating the wire codec.  Sends a v3
+/// handshake advertising `wire_caps`; if the server closes the
+/// connection without a reply (an old v2-only server rejects unknown
+/// versions replyless), transparently reconnects and retries the same
+/// handshake at v2 — the session then runs the legacy f32 contract.
+///
+/// The fallback applies to **fresh** handshakes only.  A RECONNECT
+/// names a session that already negotiated a codec; downgrading it on
+/// a transient v3 failure would silently change the codec under which
+/// the server's *replayed* responses were computed, making them
+/// unverifiable — so a failed v3 resume attempt propagates its error
+/// and the caller retries or falls back locally instead.
+///
+/// Returns the connected stream, the reply (callers still check
+/// `accepted`), and the negotiated [`SessionCodec`].
+pub fn connect_client(
+    addr: &str,
+    hello: &Handshake,
+    read_timeout: Option<Duration>,
+) -> Result<(TcpStream, HandshakeReply, SessionCodec)> {
+    let connect = |version: u16| -> Result<(TcpStream, HandshakeReply)> {
+        let mut stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true)?;
+        if let Some(t) = read_timeout {
+            stream.set_read_timeout(Some(t))?;
+        }
+        let h = Handshake {
+            version,
+            wire_caps: if version >= VERSION { hello.wire_caps } else { 0 },
+            ..hello.clone()
+        };
+        write_handshake(&mut stream, &h)?;
+        let reply = read_handshake_reply_v(&mut stream, version)?;
+        Ok((stream, reply))
+    };
+    // A caller that already knows its peer is v2 (a resume of a
+    // fallback session) skips the v3 attempt outright.
+    if hello.version == V2 {
+        let (stream, reply) = connect(V2)?;
+        return Ok((stream, reply, SessionCodec::f32()));
+    }
+    match connect(VERSION) {
+        Ok((stream, reply)) => {
+            let codec = reply.session_codec();
+            Ok((stream, reply, codec))
+        }
+        // Only a peer *close* during the handshake reads as the old
+        // server's version rejection.  A read timeout must not
+        // downgrade: the server may have already accepted the v3
+        // session (stranding a slot) and the downgrade would silently
+        // pin the whole session to uncompressed f32.
+        Err(e) if hello.resume.is_none() && is_peer_close(&e) => {
+            let (stream, reply) = connect(V2).map_err(|_| e)?;
+            Ok((stream, reply, SessionCodec::f32()))
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Did this handshake error come from the peer closing the connection
+/// (EOF / reset / broken pipe) — the signature of a pre-v3 server
+/// dropping an unknown version — rather than a timeout or refusal?
+fn is_peer_close(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::UnexpectedEof
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::ConnectionAborted
+                | std::io::ErrorKind::BrokenPipe
+        )
+    })
 }
 
 /// Read one response; `Ok(None)` on clean EOF (server closed).
@@ -551,12 +743,7 @@ mod tests {
     #[test]
     fn handshake_round_trip() {
         let (mut c, mut s) = pair();
-        let h = Handshake {
-            model: "synthetic".into(),
-            pp: 3,
-            client_id: "cam-7".into(),
-            resume: None,
-        };
+        let h = Handshake::v2("synthetic", 3, "cam-7");
         write_handshake(&mut c, &h).unwrap();
         assert_eq!(read_handshake(&mut s).unwrap(), h);
         let reply = HandshakeReply {
@@ -564,6 +751,7 @@ mod tests {
             resumed: false,
             session_id: 42,
             token: 0xfeed_beef,
+            codec: None,
             message: "ok".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -571,14 +759,59 @@ mod tests {
     }
 
     #[test]
+    fn v3_handshake_round_trips_with_caps_and_codec() {
+        let (mut c, mut s) = pair();
+        let h = Handshake::v3("synthetic", 2, "cam-9", WireDtype::I8.caps());
+        write_handshake(&mut c, &h).unwrap();
+        let got = read_handshake(&mut s).unwrap();
+        assert_eq!(got, h);
+        assert_eq!(got.version, VERSION);
+        assert_eq!(got.wire_caps, WireDtype::I8.caps());
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed: false,
+            session_id: 7,
+            token: 1234,
+            codec: Some(SessionCodec { wire: WireDtype::I8, precision: Precision::Int8 }),
+            message: String::new(),
+        };
+        write_handshake_reply(&mut s, &reply).unwrap();
+        let got = read_handshake_reply_v(&mut c, VERSION).unwrap();
+        assert_eq!(got, reply);
+        assert_eq!(
+            got.session_codec(),
+            SessionCodec { wire: WireDtype::I8, precision: Precision::Int8 }
+        );
+    }
+
+    #[test]
+    fn v2_handshake_bytes_are_the_legacy_layout() {
+        // Old clients must keep working unmodified: a v2 handshake is
+        // byte-identical to the pre-codec protocol (fixed 33-byte head
+        // + two length-prefixed strings), with no capability byte.
+        let h = Handshake::v2("m", 4, "c");
+        let bytes = encode_handshake(&h).unwrap();
+        assert_eq!(bytes.len(), 33 + 2 + 1 + 2 + 1);
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), V2);
+        assert_eq!(bytes[8], 0, "flags directly followed by resume fields");
+        assert_eq!(&bytes[33..35], &1u16.to_le_bytes());
+        // And a v2 reply carries no codec bytes.
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed: false,
+            session_id: 1,
+            token: 2,
+            codec: None,
+            message: String::new(),
+        };
+        assert_eq!(encode_handshake_reply(&reply).len(), 17 + 2);
+    }
+
+    #[test]
     fn reconnect_handshake_round_trips() {
         let (mut c, mut s) = pair();
-        let h = Handshake {
-            model: "synthetic".into(),
-            pp: 2,
-            client_id: "cam-7".into(),
-            resume: Some(Resume { session_id: 99, token: 7777, last_ack: 17 }),
-        };
+        let h = Handshake::v3("synthetic", 2, "cam-7", WireDtype::F16.caps())
+            .with_resume(Resume { session_id: 99, token: 7777, last_ack: 17 });
         write_handshake(&mut c, &h).unwrap();
         assert_eq!(read_handshake(&mut s).unwrap(), h);
         let reply = HandshakeReply {
@@ -586,12 +819,14 @@ mod tests {
             resumed: true,
             session_id: 99,
             token: 7777,
+            codec: Some(SessionCodec { wire: WireDtype::F16, precision: Precision::F32 }),
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
-        let got = read_handshake_reply(&mut c).unwrap();
+        let got = read_handshake_reply_v(&mut c, VERSION).unwrap();
         assert!(got.accepted && got.resumed);
         assert_eq!(got.session_id, 99);
+        assert_eq!(got.session_codec().wire, WireDtype::F16);
     }
 
     #[test]
@@ -602,6 +837,7 @@ mod tests {
             resumed: false,
             session_id: 0,
             token: 0,
+            codec: None,
             message: "server at session capacity (8 active)".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -618,12 +854,27 @@ mod tests {
             resumed: false,
             session_id: 0,
             token: 0,
+            codec: None,
             message: "x".repeat(5000),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
         let got = read_handshake_reply(&mut c).unwrap();
         assert!(!got.accepted);
         assert_eq!(got.message.len(), 1024);
+    }
+
+    #[test]
+    fn unsupported_version_is_rejected_with_range() {
+        let (mut c, mut s) = pair();
+        let mut bytes = encode_handshake(&Handshake::v2("m", 1, "c")).unwrap();
+        bytes[4..6].copy_from_slice(&9u16.to_le_bytes());
+        c.write_all(&bytes).unwrap();
+        let err = read_handshake(&mut s).unwrap_err().to_string();
+        assert!(err.contains("version 9") && err.contains("2..=3"), "{err}");
+        // The incremental decoder refuses at the same point.
+        let mut buf = ByteBuf::new();
+        buf.extend(&bytes[..8]);
+        assert!(decode_handshake(&mut buf).unwrap_err().contains("version 9"));
     }
 
     #[test]
@@ -743,23 +994,26 @@ mod tests {
 
     #[test]
     fn incremental_handshake_decode_byte_by_byte() {
-        let h = Handshake {
-            model: "synthetic".into(),
-            pp: 4,
-            client_id: "cam-22".into(),
-            resume: Some(Resume { session_id: 7, token: 99, last_ack: 3 }),
-        };
-        let bytes = encode_handshake(&h).unwrap();
-        let mut buf = ByteBuf::new();
-        let mut decoded = None;
-        for b in &bytes {
-            buf.extend(&[*b]);
-            if let Some(got) = decode_handshake(&mut buf).unwrap() {
-                decoded = Some(got);
+        // Both versions must survive one-byte delivery through the
+        // nonblocking decoder and reproduce the blocking reader's view.
+        for h in [
+            Handshake::v2("synthetic", 4, "cam-22")
+                .with_resume(Resume { session_id: 7, token: 99, last_ack: 3 }),
+            Handshake::v3("synthetic", 4, "cam-22", WireDtype::I8.caps())
+                .with_resume(Resume { session_id: 7, token: 99, last_ack: 3 }),
+        ] {
+            let bytes = encode_handshake(&h).unwrap();
+            let mut buf = ByteBuf::new();
+            let mut decoded = None;
+            for b in &bytes {
+                buf.extend(&[*b]);
+                if let Some(got) = decode_handshake(&mut buf).unwrap() {
+                    decoded = Some(got);
+                }
             }
+            assert_eq!(decoded.unwrap(), h);
+            assert!(buf.is_empty());
         }
-        assert_eq!(decoded.unwrap(), h);
-        assert!(buf.is_empty());
     }
 
     #[test]

@@ -30,6 +30,7 @@ use super::protocol::Response;
 use super::spsc;
 use crate::compiler::PlanKey;
 use crate::platform::affinity;
+use crate::runtime::wire::Precision;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -67,6 +68,7 @@ impl WorkerPool {
         workers: usize,
         pin: bool,
         metrics: Arc<ServingMetrics>,
+        precision: Precision,
     ) -> anyhow::Result<(WorkerPool, Dispatch)> {
         let workers = workers.max(1);
         let cores = affinity::core_count();
@@ -78,7 +80,7 @@ impl WorkerPool {
             let metrics = metrics.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("serve-worker-{w}"))
-                .spawn(move || worker_main(w, w % cores, pin, rx, metrics));
+                .spawn(move || worker_main(w, w % cores, pin, rx, metrics, precision));
             match spawned {
                 Ok(handle) => {
                     producers.push(tx);
@@ -166,6 +168,7 @@ fn worker_main(
     pin: bool,
     mut rx: spsc::Consumer<WorkItem>,
     metrics: Arc<ServingMetrics>,
+    precision: Precision,
 ) {
     if pin {
         if let Err(e) = affinity::pin_to_core(core) {
@@ -179,7 +182,7 @@ fn worker_main(
             Some(WorkItem::Shutdown) => break,
             Some(WorkItem::Batch(batch)) => {
                 for req in batch {
-                    run_one(&mut shards, req, &metrics);
+                    run_one(&mut shards, req, &metrics, precision);
                 }
             }
             None => {
@@ -197,11 +200,12 @@ fn run_one(
     shards: &mut BTreeMap<PlanKey, EngineShard>,
     req: PendingRequest,
     metrics: &ServingMetrics,
+    precision: Precision,
 ) {
     let shard = shards
         .entry(req.plan.key.clone())
-        .or_insert_with(|| EngineShard::new(req.plan.clone()));
-    match shard.infer(&req.payload) {
+        .or_insert_with(|| EngineShard::with_precision(req.plan.clone(), precision));
+    match shard.infer_wire(&req.payload, req.wire) {
         Ok(body) => {
             metrics.note_completed(&req.plan_metrics, req.enqueued.elapsed());
             req.reply.deliver(Response::ok(req.req_id, body));
@@ -228,7 +232,8 @@ mod tests {
     #[test]
     fn pool_processes_batches_and_shuts_down() {
         let metrics = Arc::new(ServingMetrics::new());
-        let (pool, mut dispatch) = WorkerPool::spawn(2, false, metrics.clone()).unwrap();
+        let (pool, mut dispatch) =
+            WorkerPool::spawn(2, false, metrics.clone(), Precision::F32).unwrap();
         assert_eq!(dispatch.worker_count(), 2);
 
         let key = PlanKey::new(MODEL_NAME, 2);
@@ -249,6 +254,7 @@ mod tests {
                         plan: plan.clone(),
                         plan_metrics: plan_metrics.clone(),
                         payload: client_prepare(&input, 2),
+                        wire: crate::runtime::wire::WireDtype::F32,
                         enqueued: Instant::now(),
                         reply: outbox.clone(),
                     }
@@ -273,7 +279,8 @@ mod tests {
     #[test]
     fn malformed_payload_yields_error_response() {
         let metrics = Arc::new(ServingMetrics::new());
-        let (pool, mut dispatch) = WorkerPool::spawn(1, false, metrics.clone()).unwrap();
+        let (pool, mut dispatch) =
+            WorkerPool::spawn(1, false, metrics.clone(), Precision::F32).unwrap();
         let key = PlanKey::new(MODEL_NAME, 1);
         let plan = Arc::new(compile_server_plan(&key).unwrap());
         let outbox = SessionOutbox::new(9, 8);
@@ -285,6 +292,7 @@ mod tests {
             plan: plan.clone(),
             plan_metrics: metrics.plan(&key),
             payload: vec![1, 2, 3],
+            wire: crate::runtime::wire::WireDtype::F32,
             enqueued: Instant::now(),
             reply: outbox,
         }]);

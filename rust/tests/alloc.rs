@@ -8,12 +8,14 @@
 //! no concurrent test thread can perturb the counter.
 
 use edge_prune::compiler::PlanKey;
+use edge_prune::runtime::wire::{Precision, SessionCodec, WireDtype};
 use edge_prune::server::model::{
-    client_prepare, compile_server_plan, expected_digest, make_input, EngineShard, MODEL_NAME,
+    client_prepare, client_prepare_codec, compile_server_plan, expected_digest,
+    expected_digest_codec, make_input, EngineShard, FrameScratch, MODEL_NAME,
 };
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 struct CountingAlloc;
 
@@ -43,8 +45,21 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
+/// The two tests in this binary share one global counter; the harness
+/// runs tests on parallel threads, so each test holds this lock for its
+/// ENTIRE body — warmup allocations included — or the other test's
+/// setup would land inside this one's measured window.
+static WINDOW: Mutex<()> = Mutex::new(());
+
+fn exclusive() -> std::sync::MutexGuard<'static, ()> {
+    // A poisoned lock only means the other test failed; the counter
+    // itself is still sound.
+    WINDOW.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 #[test]
 fn steady_state_infer_performs_zero_allocations() {
+    let _window = exclusive();
     let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 2)).unwrap());
     let mut shard = EngineShard::new(plan);
     let input = make_input(5);
@@ -70,6 +85,48 @@ fn steady_state_infer_performs_zero_allocations() {
         after - before,
         0,
         "steady-state EngineShard::infer allocated {} times over 100 frames",
+        after - before
+    );
+}
+
+#[test]
+fn steady_state_quantized_infer_performs_zero_allocations() {
+    // The int8 path end to end: the client side runs quantized stages
+    // and wire-encodes (FrameScratch reuse), the server side decodes
+    // the i8 payload and runs quantized stages (EngineShard scratch) —
+    // none of it may touch the heap once warm.
+    let _window = exclusive();
+    let codec = SessionCodec { wire: WireDtype::I8, precision: Precision::Int8 };
+    let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 2)).unwrap());
+    let mut shard = EngineShard::with_precision(plan, Precision::Int8);
+    let input = make_input(9);
+    let payload = client_prepare_codec(&input, 2, codec);
+    let expected = expected_digest_codec(&input, 2, codec);
+
+    // Warmup: quantized stage-net OnceLock, scratch capacities, pool.
+    let mut scratch = FrameScratch::new();
+    let mut client_payload = Vec::new();
+    let mut client_expected = Vec::new();
+    for _ in 0..5 {
+        scratch.frame_codec_into(&input, 2, codec, &mut client_payload, &mut client_expected);
+        assert_eq!(client_payload, payload);
+        assert_eq!(client_expected, expected);
+        let out = shard.infer_wire(&payload, WireDtype::I8).unwrap();
+        assert_eq!(out, expected);
+        shard.recycle(out);
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..100 {
+        scratch.frame_codec_into(&input, 2, codec, &mut client_payload, &mut client_expected);
+        let out = shard.infer_wire(&client_payload, WireDtype::I8).unwrap();
+        shard.recycle(out);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state quantized infer loop allocated {} times over 100 frames",
         after - before
     );
 }

@@ -106,16 +106,7 @@ fn session_capacity_rejects_are_explicit() {
     let mut held = Vec::new();
     for i in 0..2 {
         let mut s = TcpStream::connect(addr).unwrap();
-        write_handshake(
-            &mut s,
-            &Handshake {
-                model: "synthetic".into(),
-                pp: 1,
-                client_id: format!("hold-{i}"),
-                resume: None,
-            },
-        )
-        .unwrap();
+        write_handshake(&mut s, &Handshake::v2("synthetic", 1, &format!("hold-{i}"))).unwrap();
         assert!(read_handshake_reply(&mut s).unwrap().accepted);
         held.push(s);
     }
@@ -211,11 +202,7 @@ fn shaped_uplink_bounds_request_rate() {
 fn bad_payload_gets_error_response_and_server_survives() {
     let server = Server::start(test_cfg()).unwrap();
     let mut s = TcpStream::connect(server.addr()).unwrap();
-    write_handshake(
-        &mut s,
-        &Handshake { model: "synthetic".into(), pp: 2, client_id: "mal".into(), resume: None },
-    )
-    .unwrap();
+    write_handshake(&mut s, &Handshake::v2("synthetic", 2, "mal")).unwrap();
     assert!(read_handshake_reply(&mut s).unwrap().accepted);
     write_request(&mut s, 1, &[0xAB; 16]).unwrap(); // wrong token size
     let resp = read_response(&mut s).unwrap().unwrap();
@@ -244,11 +231,7 @@ fn bad_payload_gets_error_response_and_server_survives() {
 fn mid_stream_replay_delivers_exactly_once() {
     let server = Server::start(test_cfg()).unwrap();
     let mut s = TcpStream::connect(server.addr()).unwrap();
-    write_handshake(
-        &mut s,
-        &Handshake { model: "synthetic".into(), pp: 2, client_id: "replay".into(), resume: None },
-    )
-    .unwrap();
+    write_handshake(&mut s, &Handshake::v2("synthetic", 2, "replay")).unwrap();
     let hs = read_handshake_reply(&mut s).unwrap();
     assert!(hs.accepted && !hs.resumed);
     let session_id = hs.session_id;
@@ -278,12 +261,8 @@ fn mid_stream_replay_delivers_exactly_once() {
     let mut hijacker = TcpStream::connect(server.addr()).unwrap();
     write_handshake(
         &mut hijacker,
-        &Handshake {
-            model: "synthetic".into(),
-            pp: 2,
-            client_id: "replay".into(),
-            resume: Some(Resume { session_id, token: token ^ 1, last_ack: 0 }),
-        },
+        &Handshake::v2("synthetic", 2, "replay")
+            .with_resume(Resume { session_id, token: token ^ 1, last_ack: 0 }),
     )
     .unwrap();
     let refused = read_handshake_reply(&mut hijacker).unwrap();
@@ -296,12 +275,8 @@ fn mid_stream_replay_delivers_exactly_once() {
     let mut s = TcpStream::connect(server.addr()).unwrap();
     write_handshake(
         &mut s,
-        &Handshake {
-            model: "synthetic".into(),
-            pp: 2,
-            client_id: "replay".into(),
-            resume: Some(Resume { session_id, token, last_ack: 1 }),
-        },
+        &Handshake::v2("synthetic", 2, "replay")
+            .with_resume(Resume { session_id, token, last_ack: 1 }),
     )
     .unwrap();
     let hs2 = read_handshake_reply(&mut s).unwrap();
@@ -445,13 +420,7 @@ fn one_byte_writes_reassemble_into_frames() {
     let server = Server::start(test_cfg()).unwrap();
     let mut s = TcpStream::connect(server.addr()).unwrap();
     s.set_nodelay(true).unwrap();
-    let hs_bytes = encode_handshake(&Handshake {
-        model: "synthetic".into(),
-        pp: 2,
-        client_id: "dribble".into(),
-        resume: None,
-    })
-    .unwrap();
+    let hs_bytes = encode_handshake(&Handshake::v2("synthetic", 2, "dribble")).unwrap();
     for b in &hs_bytes {
         s.write_all(&[*b]).unwrap();
         std::thread::sleep(Duration::from_millis(1));
@@ -499,11 +468,7 @@ fn replay_burst_crosses_high_water_and_pauses_reads() {
     })
     .unwrap();
     let mut s = TcpStream::connect(server.addr()).unwrap();
-    write_handshake(
-        &mut s,
-        &Handshake { model: "synthetic".into(), pp: 2, client_id: "slow".into(), resume: None },
-    )
-    .unwrap();
+    write_handshake(&mut s, &Handshake::v2("synthetic", 2, "slow")).unwrap();
     let hs = read_handshake_reply(&mut s).unwrap();
     assert!(hs.accepted);
     // Fill the replay ring past capacity (64): the newest 64 retained.
@@ -521,12 +486,8 @@ fn replay_burst_crosses_high_water_and_pauses_reads() {
     let mut s = TcpStream::connect(server.addr()).unwrap();
     write_handshake(
         &mut s,
-        &Handshake {
-            model: "synthetic".into(),
-            pp: 2,
-            client_id: "slow".into(),
-            resume: Some(Resume { session_id: hs.session_id, token: hs.token, last_ack: 0 }),
-        },
+        &Handshake::v2("synthetic", 2, "slow")
+            .with_resume(Resume { session_id: hs.session_id, token: hs.token, last_ack: 0 }),
     )
     .unwrap();
     let reply = read_handshake_reply(&mut s).unwrap();
@@ -556,11 +517,7 @@ fn replay_burst_crosses_high_water_and_pauses_reads() {
 fn mid_frame_disconnect_detaches_not_corrupts() {
     let server = Server::start(test_cfg()).unwrap();
     let mut s = TcpStream::connect(server.addr()).unwrap();
-    write_handshake(
-        &mut s,
-        &Handshake { model: "synthetic".into(), pp: 2, client_id: "torn".into(), resume: None },
-    )
-    .unwrap();
+    write_handshake(&mut s, &Handshake::v2("synthetic", 2, "torn")).unwrap();
     let hs = read_handshake_reply(&mut s).unwrap();
     assert!(hs.accepted);
     // One complete inference first, so the session has state worth
@@ -580,12 +537,8 @@ fn mid_frame_disconnect_detaches_not_corrupts() {
     let mut s = TcpStream::connect(server.addr()).unwrap();
     write_handshake(
         &mut s,
-        &Handshake {
-            model: "synthetic".into(),
-            pp: 2,
-            client_id: "torn".into(),
-            resume: Some(Resume { session_id: hs.session_id, token: hs.token, last_ack: 1 }),
-        },
+        &Handshake::v2("synthetic", 2, "torn")
+            .with_resume(Resume { session_id: hs.session_id, token: hs.token, last_ack: 1 }),
     )
     .unwrap();
     let reply = read_handshake_reply(&mut s).unwrap();
@@ -626,6 +579,7 @@ fn accept_smoke_512_concurrent_sessions_fixed_threads() {
         rounds: 2,
         pp: 2,
         seed: 31,
+        ..WaveConfig::default()
     })
     .unwrap();
     assert_eq!(report.ok, sessions as u64 * 2, "every inference verified");
@@ -649,11 +603,7 @@ fn detached_sessions_are_reaped_after_linger() {
     })
     .unwrap();
     let mut s = TcpStream::connect(server.addr()).unwrap();
-    write_handshake(
-        &mut s,
-        &Handshake { model: "synthetic".into(), pp: 1, client_id: "linger".into(), resume: None },
-    )
-    .unwrap();
+    write_handshake(&mut s, &Handshake::v2("synthetic", 1, "linger")).unwrap();
     let hs = read_handshake_reply(&mut s).unwrap();
     assert!(hs.accepted);
     s.shutdown(std::net::Shutdown::Both).unwrap();
@@ -665,12 +615,8 @@ fn detached_sessions_are_reaped_after_linger() {
     let mut s = TcpStream::connect(server.addr()).unwrap();
     write_handshake(
         &mut s,
-        &Handshake {
-            model: "synthetic".into(),
-            pp: 1,
-            client_id: "linger".into(),
-            resume: Some(Resume { session_id: hs.session_id, token: hs.token, last_ack: 0 }),
-        },
+        &Handshake::v2("synthetic", 1, "linger")
+            .with_resume(Resume { session_id: hs.session_id, token: hs.token, last_ack: 0 }),
     )
     .unwrap();
     let reply = read_handshake_reply(&mut s).unwrap();
@@ -679,4 +625,298 @@ fn detached_sessions_are_reaped_after_linger() {
     drop(s);
     let metrics = server.shutdown();
     assert_eq!(metrics.get("sessions_reaped").unwrap().int().unwrap(), 1);
+}
+
+// ---------------------------------------------------------------------
+// Protocol-v3 wire-codec negotiation and interop (PR 5).
+// ---------------------------------------------------------------------
+
+/// New v3 clients at every wire dtype against the new server: all
+/// responses byte-verified, and the server's wire counters show the
+/// compression the codec promises (~4x at int8 for the request-heavy
+/// direction).
+#[test]
+fn wire_codec_negotiation_end_to_end() {
+    use edge_prune::runtime::wire::WireDtype;
+    let server = Server::start(test_cfg()).unwrap();
+    for (wire, min_ratio) in [(WireDtype::F16, 1.4), (WireDtype::I8, 1.4)] {
+        let report = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 2,
+            requests: 20,
+            pp: 3,
+            wire,
+            ..LoadgenConfig::default()
+        })
+        .unwrap();
+        assert_eq!(report.ok, 40, "{wire:?}: {}", report.summary());
+        assert_eq!(report.errors, 0, "{wire:?}");
+        assert_eq!(report.lost(), 0, "{wire:?}");
+        let ratio = report.wire.compression_ratio();
+        assert!(ratio > min_ratio, "{wire:?} client-side ratio {ratio}");
+        assert!(report.summary().contains("vs f32"), "summary reports the wire gauge");
+    }
+    let metrics = server.shutdown();
+    // Server-side counters saw coded requests too.
+    let wire = metrics.get("wire").unwrap();
+    assert!(wire.get("bytes_rx").unwrap().int().unwrap() > 0);
+    let ratio = wire.get("compression_ratio").unwrap().num().unwrap();
+    assert!(ratio > 1.5, "server-side ratio {ratio}");
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// int8 wire moves >= 3.5x fewer request bytes than f32 at the default
+/// partition point (the acceptance criterion, measured on live client
+/// tallies rather than the analytic sizes).
+#[test]
+fn i8_wire_cuts_bytes_per_inference() {
+    use edge_prune::runtime::wire::WireDtype;
+    use std::sync::atomic::Ordering;
+    let server = Server::start(test_cfg()).unwrap();
+    let run = |wire| {
+        run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 1,
+            requests: 10,
+            pp: 3,
+            wire,
+            ..LoadgenConfig::default()
+        })
+        .unwrap()
+    };
+    let f32_report = run(WireDtype::F32);
+    let i8_report = run(WireDtype::I8);
+    assert_eq!(f32_report.ok, 10);
+    assert_eq!(i8_report.ok, 10);
+    let f32_tx = f32_report.wire.bytes_tx.load(Ordering::Relaxed);
+    let i8_tx = i8_report.wire.bytes_tx.load(Ordering::Relaxed);
+    assert!(
+        (f32_tx as f64) / (i8_tx as f64) >= 3.5,
+        "request bytes f32 {f32_tx} vs i8 {i8_tx}"
+    );
+    server.shutdown();
+}
+
+/// A server with the codec disabled (the stand-in for a pre-v3 server
+/// config) downgrades an i8-requesting client to raw f32 frames with no
+/// semantic change.
+#[test]
+fn codec_disabled_server_downgrades_to_f32() {
+    use edge_prune::runtime::wire::WireDtype;
+    use std::sync::atomic::Ordering;
+    let server = Server::start(ServerConfig { wire_caps: 0, ..test_cfg() }).unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients: 2,
+        requests: 15,
+        pp: 2,
+        wire: WireDtype::I8,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.ok, 30, "{}", report.summary());
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.lost(), 0);
+    // Everything moved as raw f32: the ratio gauge reads ~1.
+    let ratio = report.wire.compression_ratio();
+    assert!((ratio - 1.0).abs() < 1e-9, "downgraded session ratio {ratio}");
+    assert!(report.wire.bytes_tx.load(Ordering::Relaxed) > 0);
+    server.shutdown();
+}
+
+/// Old-client interop: a raw protocol-v2 exchange (no capability byte,
+/// no codec bytes in the reply) against the new server is byte-for-byte
+/// the legacy protocol and serves f32 frames.
+#[test]
+fn v2_client_interop_against_v3_server() {
+    let server = Server::start(test_cfg()).unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(&mut s, &Handshake::v2("synthetic", 2, "old-client")).unwrap();
+    let reply = read_handshake_reply(&mut s).unwrap();
+    assert!(reply.accepted);
+    assert_eq!(reply.codec, None, "v2 reply carries no codec bytes");
+    let input = make_input(123);
+    write_request(&mut s, 1, &client_prepare(&input, 2)).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.status, RespStatus::Ok);
+    assert_eq!(resp.body, expected_digest(&input), "legacy f32 digest");
+    write_frame(&mut s, 2, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+    server.shutdown();
+}
+
+/// New-client fallback: against an old server that drops unknown
+/// protocol versions replyless, `connect_client` transparently retries
+/// at v2 and the session runs raw f32 — no semantic change.
+#[test]
+fn new_client_falls_back_to_v2_against_old_server() {
+    use edge_prune::compiler::PlanKey;
+    use edge_prune::runtime::wire::{SessionCodec, WireDtype};
+    use edge_prune::server::model::{compile_server_plan, EngineShard, MODEL_NAME};
+    use edge_prune::server::protocol::{
+        self, connect_client, read_handshake, write_handshake_reply, HandshakeReply, Response,
+    };
+    use std::io::Read;
+    use std::sync::Arc;
+
+    // Stub "old" server: rejects any version != 2 by dropping the
+    // connection after the 8-byte head (what the pre-v3 read_handshake
+    // did), then speaks plain v2 for the retry.
+    let listener = edge_prune::runtime::net::bind_local(0).unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stub = std::thread::spawn(move || {
+        // Connection 1: the client's v3 attempt.
+        let (mut c1, _) = listener.accept().unwrap();
+        let mut head = [0u8; 8];
+        c1.read_exact(&mut head).unwrap();
+        let version = u16::from_le_bytes(head[4..6].try_into().unwrap());
+        assert_eq!(version, 3, "client leads with v3");
+        drop(c1); // replyless close, as the old server did
+        // Connection 2: the v2 retry gets a real (old-style) session.
+        let (mut c2, _) = listener.accept().unwrap();
+        let hs = read_handshake(&mut c2).unwrap();
+        assert_eq!(hs.version, 2);
+        assert_eq!(hs.wire_caps, 0);
+        write_handshake_reply(
+            &mut c2,
+            &HandshakeReply {
+                accepted: true,
+                resumed: false,
+                session_id: 1,
+                token: 42,
+                codec: None,
+                message: String::new(),
+            },
+        )
+        .unwrap();
+        let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, hs.pp)).unwrap());
+        let mut shard = EngineShard::new(plan);
+        loop {
+            match protocol::read_frame(&mut c2) {
+                Ok(Some(f)) if f.kind == ReqKind::Infer => {
+                    let body = shard.infer(&f.payload).unwrap();
+                    protocol::write_response(&mut c2, &Response::ok(f.seq, body)).unwrap();
+                }
+                _ => break,
+            }
+        }
+    });
+
+    let hello = Handshake::v3("synthetic", 2, "new-client", WireDtype::I8.caps());
+    let (mut s, reply, codec) =
+        connect_client(&addr, &hello, Some(Duration::from_secs(5))).unwrap();
+    assert!(reply.accepted);
+    assert_eq!(codec, SessionCodec::f32(), "fallback session runs the legacy contract");
+    let input = make_input(7);
+    write_request(&mut s, 1, &client_prepare(&input, 2)).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.body, expected_digest(&input));
+    write_frame(&mut s, 2, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+    stub.join().unwrap();
+}
+
+/// Mixed-precision chaos (the PR-2 replay harness, quantized): i8-wire
+/// and f32-wire resilient clients hammer one server while killing their
+/// own links; every frame completes and verifies, remote or local.
+#[test]
+fn mixed_precision_chaos_loses_nothing() {
+    use edge_prune::runtime::wire::WireDtype;
+    let server = Server::start(test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+    let addr2 = addr.clone();
+    let quant = std::thread::spawn(move || {
+        run_loadgen(&LoadgenConfig {
+            addr: addr2,
+            clients: 2,
+            requests: 20,
+            pp: 2,
+            chaos_kill_every: 4,
+            wire: WireDtype::I8,
+            seed: 31,
+            ..LoadgenConfig::default()
+        })
+    });
+    let plain = run_loadgen(&LoadgenConfig {
+        addr,
+        clients: 2,
+        requests: 20,
+        pp: 3,
+        chaos_kill_every: 5,
+        seed: 32,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    let quant = quant.join().unwrap().unwrap();
+    for (name, report) in [("i8 chaos", &quant), ("f32 chaos", &plain)] {
+        assert_eq!(report.ok, 40, "{name}: {}", report.summary());
+        assert_eq!(report.errors, 0, "{name}");
+        assert_eq!(report.lost(), 0, "{name}");
+        assert!((report.service_availability() - 1.0).abs() < 1e-12, "{name}");
+        assert!(report.reconnects >= 1, "{name}");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+    assert!(metrics.get("sessions_resumed").unwrap().int().unwrap() >= 1);
+}
+
+/// A v2 client cannot attach to a non-f32-precision server: its reply
+/// has no precision byte, so every digest would silently mismatch —
+/// the handshake is rejected with an explicit reason instead.
+#[test]
+fn v2_client_rejected_by_int8_precision_server() {
+    use edge_prune::runtime::wire::Precision;
+    let server = Server::start(ServerConfig { precision: Precision::Int8, ..test_cfg() }).unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(&mut s, &Handshake::v2("synthetic", 2, "old-client")).unwrap();
+    let reply = read_handshake_reply(&mut s).unwrap();
+    assert!(!reply.accepted);
+    assert!(reply.message.contains("precision"), "{}", reply.message);
+    drop(s);
+    server.shutdown();
+}
+
+/// An int8-precision server with v3 clients: the reply's precision byte
+/// makes both sides run the quantized stage chain, so responses stay
+/// byte-verifiable end to end (including across a chaos reconnect).
+#[test]
+fn int8_precision_server_serves_verified_responses() {
+    use edge_prune::runtime::wire::{Precision, WireDtype};
+    let server = Server::start(ServerConfig { precision: Precision::Int8, ..test_cfg() }).unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients: 2,
+        requests: 15,
+        pp: 2,
+        wire: WireDtype::I8,
+        chaos_kill_every: 6,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.ok, 30, "{}", report.summary());
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.lost(), 0);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// The session wave holds its sessions at int8 wire too (the reactor's
+/// frame sizes change, nothing else).
+#[test]
+fn session_wave_runs_at_i8_wire() {
+    use edge_prune::runtime::wire::WireDtype;
+    ensure_fd_headroom(256);
+    let server = Server::start(ServerConfig { max_sessions: 80, ..test_cfg() }).unwrap();
+    let report = run_session_wave(&WaveConfig {
+        addr: server.addr().to_string(),
+        sessions: 64,
+        rounds: 2,
+        pp: 2,
+        wire: WireDtype::I8,
+        ..WaveConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.ok, 128);
+    assert_eq!(report.errors, 0);
+    server.shutdown();
 }

@@ -16,6 +16,7 @@ use edge_prune::platform::configs::Configs;
 use edge_prune::platform::{Mapping, PlatformGraph};
 use edge_prune::runtime::distributed::run_deployment;
 use edge_prune::runtime::xla_exec::{Variant, XlaService};
+use edge_prune::util::json::Json;
 use std::collections::BTreeMap;
 
 const TIME_SCALE: f64 = 4.0;
@@ -107,5 +108,17 @@ fn main() -> anyhow::Result<()> {
         "  server inference   {srv:5.1} ms = {:4.1}%  (paper:  6.3 ms / 20%)",
         srv / e2e * 100.0
     );
+    // Machine-readable summary on the last line (same `Json` schema the
+    // benches emit), so scripts can scrape the breakdown without
+    // parsing the table above.
+    let summary = Json::from_pairs(vec![
+        ("example", Json::from("latency_breakdown")),
+        ("repeats", Json::from(repeats)),
+        ("e2e_ms", Json::from(e2e)),
+        ("endpoint_ms", Json::from(ep)),
+        ("comm_ms", Json::from(comm)),
+        ("server_ms", Json::from(srv)),
+    ]);
+    println!("{summary}");
     Ok(())
 }

@@ -13,7 +13,7 @@
 //! Knobs: EP_GEMM_N (default 256), EP_ITERS (timed reps, default 5),
 //! EP_MIN_SPEEDUP, EP_MIN_SCALING, EP_PIN (pin workers, default 0).
 
-use edge_prune::benchkit::{env_or, header, stats, time_iters};
+use edge_prune::benchkit::{env_or, header, stats, time_iters, write_bench_json};
 use edge_prune::platform::affinity::core_count;
 use edge_prune::runtime::linalg::{
     conv2d, dwconv2d, gemm, gemm_flops, gemm_naive, Conv2dSpec, ConvScratch, GemmScratch,
@@ -139,8 +139,7 @@ fn main() -> anyhow::Result<()> {
         ("four_worker_scaling", Json::from(scaling)),
         ("rows", Json::Arr(rows)),
     ]);
-    std::fs::write("BENCH_kernel_flops.json", format!("{out}\n"))?;
-    println!("wrote BENCH_kernel_flops.json");
+    write_bench_json("kernel_flops", &out)?;
 
     anyhow::ensure!(
         speedup >= min_speedup,

@@ -17,7 +17,7 @@
 //! Knobs: EP_GEMM_N (256), EP_ITERS (5), EP_QUANT_FRAMES (16),
 //! EP_QUANT_MIN_SPEEDUP, EP_MIN_WIRE_RATIO, EP_QUANT_MIN_TOP1.
 
-use edge_prune::benchkit::{env_or, header, stats, time_iters};
+use edge_prune::benchkit::{env_or, header, stats, time_iters, write_bench_json};
 use edge_prune::runtime::linalg::{
     gemm_blocked, gemm_flops, gemm_i8_blocked, GemmScratch, GemmScratchI8,
 };
@@ -140,8 +140,7 @@ fn main() -> anyhow::Result<()> {
         ("top1_agreement_i8_wire", Json::from(i8_top1)),
         ("top1_agreement_full_int8", Json::from(int8_top1)),
     ]);
-    std::fs::write("BENCH_quant.json", format!("{out}\n"))?;
-    println!("wrote BENCH_quant.json");
+    write_bench_json("quant", &out)?;
 
     anyhow::ensure!(
         speedup >= min_speedup,

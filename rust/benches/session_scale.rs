@@ -9,7 +9,7 @@
 //! EP_WORKERS (worker threads; default 4 so the thread budget is
 //! deterministic), EP_SESSIONS (comma-free max tier override).
 
-use edge_prune::benchkit::{env_or, header};
+use edge_prune::benchkit::{env_or, header, write_bench_json};
 use edge_prune::platform::procinfo::{ensure_fd_headroom, os_thread_count};
 use edge_prune::server::loadgen::{run_session_wave, WaveConfig};
 use edge_prune::server::{Server, ServerConfig};
@@ -99,7 +99,6 @@ fn main() -> anyhow::Result<()> {
         ("pp", Json::from(pp)),
         ("rows", Json::Arr(rows)),
     ]);
-    std::fs::write("BENCH_session_scale.json", format!("{out}\n"))?;
-    println!("wrote BENCH_session_scale.json");
+    write_bench_json("session_scale", &out)?;
     Ok(())
 }

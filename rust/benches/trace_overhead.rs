@@ -1,0 +1,109 @@
+//! Flight-recorder overhead bench: end-to-end serving throughput with
+//! tracing fully on (every request traced, client + server spans) vs
+//! tracing disabled at runtime, on the same in-process server/loadgen
+//! pair.  Emits `BENCH_trace_overhead.json`.
+//!
+//! CI smoke assertion (EXPERIMENTS.md "Trace overhead" has the
+//! methodology): the traced wave keeps throughput within
+//! `EP_MAX_OVERHEAD_PCT` percent of the untraced wave (default 5).
+//! Waves are interleaved and the best of `EP_TRIALS` is compared on
+//! each side so scheduler noise doesn't masquerade as tracing cost.
+//!
+//! Knobs: EP_CLIENTS (4), EP_REQUESTS (per client, 300), EP_TRIALS (3),
+//! EP_MAX_OVERHEAD_PCT (5).
+
+use edge_prune::benchkit::{env_or, header, write_bench_json};
+use edge_prune::runtime::trace;
+use edge_prune::server::loadgen::{run_loadgen, LoadgenConfig};
+use edge_prune::server::{Server, ServerConfig};
+use edge_prune::util::json::Json;
+
+/// One full serve + loadgen wave; returns achieved req/s.  Tracing is a
+/// process-global toggle, so each wave resets it on the way out — the
+/// disabled wave must really run with the recorder off and drained.
+fn run_wave(traced: bool, clients: usize, requests: u64) -> anyhow::Result<f64> {
+    let server = Server::start(ServerConfig {
+        trace: traced,
+        workers: 4,
+        // Shared machines: the comparison wants identical scheduling on
+        // both sides, not exclusive cores.
+        pin_workers: false,
+        ..ServerConfig::default()
+    })?;
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients,
+        requests,
+        pp: 3,
+        seed: 42,
+        trace: traced,
+        ..LoadgenConfig::default()
+    })?;
+    server.shutdown();
+    trace::set_enabled(false);
+    let spans = trace::drain();
+    anyhow::ensure!(
+        report.errors == 0 && report.lost() == 0,
+        "wave lost work (traced={traced}): {}",
+        report.summary()
+    );
+    if traced && cfg!(feature = "trace") {
+        anyhow::ensure!(
+            report.traced == report.sent,
+            "only {}/{} requests traced at sample 1",
+            report.traced,
+            report.sent
+        );
+        anyhow::ensure!(!spans.is_empty(), "traced wave recorded no spans");
+    }
+    Ok(report.requests_per_sec())
+}
+
+fn main() -> anyhow::Result<()> {
+    let clients: usize = env_or("EP_CLIENTS", 4usize);
+    let requests: u64 = env_or("EP_REQUESTS", 300u64);
+    let trials: usize = env_or("EP_TRIALS", 3usize);
+    let max_overhead: f64 = env_or("EP_MAX_OVERHEAD_PCT", 5.0f64);
+
+    header(&format!(
+        "trace overhead: {clients} clients x {requests} req, best of {trials} \
+         (trace feature compiled: {})",
+        cfg!(feature = "trace")
+    ));
+
+    // Warmup wave so thread spawn / page faults don't land in trial 1.
+    run_wave(false, clients, requests.min(64))?;
+
+    let mut best_off = 0.0f64;
+    let mut best_on = 0.0f64;
+    for trial in 0..trials {
+        let off = run_wave(false, clients, requests)?;
+        let on = run_wave(true, clients, requests)?;
+        println!("trial {trial}: disabled {off:>8.0} req/s, traced {on:>8.0} req/s");
+        best_off = best_off.max(off);
+        best_on = best_on.max(on);
+    }
+    let overhead = (best_off - best_on) / best_off.max(1e-9) * 100.0;
+    println!(
+        "best: disabled {best_off:.0} req/s, traced {best_on:.0} req/s \
+         -> {overhead:+.2}% overhead (ceiling {max_overhead}%)"
+    );
+
+    let out = Json::from_pairs(vec![
+        ("bench", Json::from("trace_overhead")),
+        ("clients", Json::from(clients)),
+        ("requests", Json::from(requests)),
+        ("trials", Json::from(trials)),
+        ("trace_compiled", Json::from(cfg!(feature = "trace"))),
+        ("rps_disabled", Json::from(best_off)),
+        ("rps_traced", Json::from(best_on)),
+        ("overhead_pct", Json::from(overhead)),
+    ]);
+    write_bench_json("trace_overhead", &out)?;
+
+    anyhow::ensure!(
+        overhead < max_overhead,
+        "tracing costs {overhead:.2}% throughput (ceiling {max_overhead}%)"
+    );
+    Ok(())
+}

@@ -2,6 +2,7 @@
 //! simple statistics, and paper-vs-measured row printing shared by the
 //! `rust/benches/*` binaries that regenerate the paper's tables/figures.
 
+use crate::util::json::Json;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy)]
@@ -12,6 +13,32 @@ pub struct Stats {
     pub min: f64,
     pub max: f64,
     pub n: usize,
+}
+
+impl Stats {
+    /// The shared sample-statistics schema (same `Json` helper as
+    /// `RunReport::to_json`), so every bench emits rows scrapers can
+    /// parse uniformly.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("mean", Json::from(self.mean)),
+            ("p50", Json::from(self.p50)),
+            ("p95", Json::from(self.p95)),
+            ("min", Json::from(self.min)),
+            ("max", Json::from(self.max)),
+            ("n", Json::from(self.n)),
+        ])
+    }
+}
+
+/// Write `BENCH_<name>.json` (one `Json` object, newline-terminated) in
+/// the working directory — the single emission path for every bench's
+/// machine-readable output.
+pub fn write_bench_json(name: &str, out: &Json) -> std::io::Result<()> {
+    let path = format!("BENCH_{name}.json");
+    std::fs::write(&path, format!("{out}\n"))?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 pub fn stats(samples: &[f64]) -> Stats {
@@ -87,6 +114,13 @@ mod tests {
         let samples = time_iters(2, 5, || calls += 1);
         assert_eq!(calls, 7);
         assert_eq!(samples.len(), 5);
+    }
+
+    #[test]
+    fn stats_json_schema() {
+        let j = stats(&[1.0, 2.0, 3.0]).to_json();
+        assert_eq!(j.get("n").unwrap().int().unwrap(), 3);
+        assert!((j.get("mean").unwrap().num().unwrap() - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!   edge-prune serve --port 7411 --max-sessions 32 &
 //!   edge-prune loadgen --addr 127.0.0.1:7411 --clients 8 --requests 100
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use edge_prune::explorer::{format_table, sweep, SweepConfig};
 use edge_prune::models::builder::{build_graph, run_local, KernelOptions, DEFAULT_CAPACITY};
 use edge_prune::models::manifest::Manifest;
@@ -54,10 +54,17 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
            --detach-linger SECS --replay-ring N --write-high-water BYTES
            --duration SECS (0 = until killed) --precision f32|int8
            --no-wire-codec (force raw-f32 frames for every session)
+           --trace (flight-recorder spans) --trace-sample N (1 in N)
+           --metrics-addr HOST:PORT (TCP scrape endpoint: one JSON
+           snapshot of metrics + sessions + trace spans per connect)
   loadgen: --addr HOST:PORT --clients N --requests N --pp K --link NAME
            --seed S --json --resilient --chaos K (kill each client's link
            every K requests; implies --resilient)
            --wire f32|f16|int8 (requested; the server may downgrade)
+           --trace --trace-sample N (client-side spans + traced-infer
+           frames so server spans join the same trace)
+           --trace-out FILE (merged Chrome trace JSON; server spans are
+           scraped from --metrics-addr HOST:PORT when given)
 ";
 
 fn run() -> Result<()> {
@@ -276,6 +283,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ServerConfig::default().wire_caps
         },
         precision: precision(args)?,
+        trace: args.bool_flag("trace"),
+        trace_sample: args.usize_or("trace-sample", 1)? as u64,
+        metrics_addr: args.str_opt("metrics-addr").map(str::to_string),
     };
     let duration = args.usize_or("duration", 0)?;
     let server = Server::start(cfg)?;
@@ -284,6 +294,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
          model: synthetic pp 1..=5",
         server.addr()
     );
+    if let Some(addr) = server.metrics_endpoint_addr() {
+        eprintln!("edge-prune serve: metrics endpoint on {addr} (one JSON snapshot per connect)");
+    }
     if duration == 0 {
         // Serve until killed; print a status line every 10 s.
         loop {
@@ -303,12 +316,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_loadgen(args: &Args) -> Result<()> {
+    use edge_prune::runtime::trace;
     use edge_prune::server::loadgen::{run_loadgen, LoadgenConfig};
     let link = match args.str_opt("link") {
         None | Some("ideal") => None,
         Some(name) => Some(configs(args)?.link(name)?),
     };
     let chaos = args.usize_or("chaos", 0)? as u64;
+    let trace_out = args.str_opt("trace-out").map(str::to_string);
+    let metrics_addr = args.str_opt("metrics-addr").map(str::to_string);
     let cfg = LoadgenConfig {
         addr: args.str_or("addr", "127.0.0.1:7411").to_string(),
         clients: args.usize_or("clients", 8)?,
@@ -320,6 +336,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         resilient: args.bool_flag("resilient"),
         chaos_kill_every: chaos, // implies resilient via LoadgenConfig::is_resilient
         wire: wire(args)?,
+        trace: args.bool_flag("trace") || trace_out.is_some(),
+        trace_sample: args.usize_or("trace-sample", 1)? as u64,
     };
     let report = run_loadgen(&cfg)?;
     if args.bool_flag("json") {
@@ -327,10 +345,124 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     } else {
         println!("{}", report.summary());
     }
+    if cfg.trace {
+        // Client spans live in this process; server spans come from the
+        // scrape endpoint (same-host wall clocks merge onto one timeline).
+        let client_spans = trace::drain();
+        let server_spans = match &metrics_addr {
+            Some(addr) => match scrape_trace_spans(addr) {
+                Ok(spans) => spans,
+                Err(e) => {
+                    eprintln!(
+                        "edge-prune loadgen: scraping {addr} failed ({e:#}); \
+                         the trace will carry client spans only"
+                    );
+                    Vec::new()
+                }
+            },
+            None => Vec::new(),
+        };
+        print_stage_report(&client_spans, &server_spans, cfg.link.as_ref(), cfg.wire);
+        if let Some(path) = &trace_out {
+            let doc = trace::chrome_trace(&[
+                ("client", client_spans.as_slice()),
+                ("server", server_spans.as_slice()),
+            ]);
+            std::fs::write(path, doc.to_string())
+                .with_context(|| format!("writing {path}"))?;
+            eprintln!(
+                "edge-prune loadgen: wrote Chrome trace ({} client + {} server spans) to {path}",
+                client_spans.len(),
+                server_spans.len()
+            );
+        }
+    }
     if report.lost() > 0 {
         bail!("{} requests lost", report.lost());
     }
     Ok(())
+}
+
+/// One TCP connect to a `serve --metrics-addr` endpoint: the server
+/// answers with a single JSON snapshot and closes.  Returns the
+/// snapshot's trace spans (drained server-side by this scrape).
+fn scrape_trace_spans(addr: &str) -> Result<Vec<edge_prune::runtime::trace::Span>> {
+    use std::io::Read as _;
+    let mut sock = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to metrics endpoint {addr}"))?;
+    sock.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let mut body = String::new();
+    sock.read_to_string(&mut body).context("reading metrics snapshot")?;
+    let snap = edge_prune::util::json::Json::parse(&body)?;
+    let rows = snap.get("trace")?.get("spans")?.arr()?;
+    rows.iter().map(edge_prune::runtime::trace::span_from_json).collect()
+}
+
+/// Per-stage latency decomposition + cost-model calibration after a
+/// traced loadgen run: measured stage means on both sides of the wire,
+/// and the residual link time against the Explorer cost model's
+/// predicted uplink transmission for the same payload size.
+fn print_stage_report(
+    client: &[edge_prune::runtime::trace::Span],
+    server: &[edge_prune::runtime::trace::Span],
+    link: Option<&edge_prune::runtime::netsim::LinkModel>,
+    wire_dtype: WireDtype,
+) {
+    use edge_prune::runtime::trace::{mean_stage_ms, Stage};
+    let traced = client.iter().filter(|s| s.stage == Stage::Request).count();
+    if traced == 0 {
+        eprintln!("[trace] no traced requests recorded (is the server running with --trace?)");
+        return;
+    }
+    let m = |spans: &[edge_prune::runtime::trace::Span], st: Stage| {
+        mean_stage_ms(spans, st).unwrap_or(0.0)
+    };
+    eprintln!(
+        "[trace] {traced} traced requests; mean per-stage decomposition (ms): \
+         client encode {:.3} | send {:.3} | wait {:.3} | decode {:.3} | request {:.3}",
+        m(client, Stage::ClientEncode),
+        m(client, Stage::ClientSend),
+        m(client, Stage::ClientWait),
+        m(client, Stage::ClientDecode),
+        m(client, Stage::Request),
+    );
+    if server.is_empty() {
+        return;
+    }
+    let server_total = m(server, Stage::ReactorRead)
+        + m(server, Stage::BatchLinger)
+        + m(server, Stage::WorkerQueue)
+        + m(server, Stage::Infer)
+        + m(server, Stage::RespEncode);
+    eprintln!(
+        "[trace]   server: reactor read {:.3} | batch linger {:.3} | worker queue {:.3} \
+         | infer {:.3} | resp encode {:.3} (total {server_total:.3})",
+        m(server, Stage::ReactorRead),
+        m(server, Stage::BatchLinger),
+        m(server, Stage::WorkerQueue),
+        m(server, Stage::Infer),
+        m(server, Stage::RespEncode),
+    );
+    // What the client waited for minus what the server accounted for is
+    // the round-trip link share — the quantity the Explorer cost model
+    // predicts as transmission time at this payload size.
+    let transit = (m(client, Stage::ClientWait) - server_total).max(0.0);
+    let payload = edge_prune::runtime::wire::encoded_len(
+        wire_dtype,
+        edge_prune::server::model::TOKEN_FLOATS,
+    );
+    match link {
+        Some(l) => eprintln!(
+            "[trace]   calibration: measured link share {transit:.3} ms vs cost-model uplink \
+             {:.3} ms for {payload} B on {}",
+            l.tx_time_ms(payload),
+            l.name
+        ),
+        None => eprintln!(
+            "[trace]   calibration: measured link share {transit:.3} ms \
+             (unshaped link; cost model predicts ~0 for {payload} B)"
+        ),
+    }
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {

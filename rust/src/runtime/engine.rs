@@ -14,6 +14,7 @@ use crate::runtime::device::{pad_to_target, CoreSet, DeviceModel};
 use crate::runtime::fifo::Fifo;
 use crate::runtime::kernels::{ActorKernel, FireOutcome};
 use crate::runtime::metrics::{Metrics, RunReport};
+use crate::runtime::trace::{self, Stage};
 use crate::dataflow::rates::AtrCell;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -228,6 +229,9 @@ fn actor_loop_inner(
         let outcome = {
             let _core = cores.acquire();
             let _accel = accel.as_ref().map(|a| a.acquire());
+            // Process-local flight-recorder span: one per firing, on the
+            // actor's own thread (the recorder carries the thread name).
+            let _fire = trace::span(trace::LOCAL, 0, Stage::ActorFire, seq as u32);
             let t_fire = Instant::now();
             let outcome = kernel.fire(&inputs, seq)?;
             pad_to_target(t_fire.elapsed(), target_ms);

@@ -8,6 +8,7 @@
 
 use crate::dataflow::{Token, TokenPool};
 use crate::runtime::linalg::{self, Conv2dSpec, ConvScratch, ConvScratchI8};
+use crate::runtime::trace::{self, Stage};
 use crate::runtime::wire::Precision;
 use crate::util::arena::{Arena, ArenaBuf};
 use crate::util::rng::Rng;
@@ -427,7 +428,8 @@ impl DnnLayerKernel {
 }
 
 impl ActorKernel for DnnLayerKernel {
-    fn fire(&mut self, inputs: &[Vec<Token>], _seq: u64) -> anyhow::Result<FireOutcome> {
+    fn fire(&mut self, inputs: &[Vec<Token>], seq: u64) -> anyhow::Result<FireOutcome> {
+        let _kernel = trace::span(trace::LOCAL, 0, Stage::Kernel, seq as u32);
         anyhow::ensure!(!inputs.is_empty(), "{}: no input port", self.name);
         let x = inputs[0][0].to_f32();
         anyhow::ensure!(

@@ -159,12 +159,17 @@ impl WireCounters {
 /// Lock-free log-linear latency histogram (HDR-style): exact buckets
 /// below 8 µs, then 8 linear sub-buckets per power of two — quantile
 /// error is bounded at ~6% of the value, with constant memory and
-/// wait-free `record` from any number of threads.
+/// wait-free `record` from any number of threads.  Exact min/max ride
+/// alongside the buckets so extreme quantiles of a tiny sample (p99 of
+/// a 3-request run) can be clamped to observed reality instead of a
+/// bucket midpoint.
 #[derive(Debug)]
 pub struct LatencyHistogram {
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
     sum_us: AtomicU64,
+    min_us: AtomicU64,
+    max_us: AtomicU64,
 }
 
 const HIST_BUCKETS: usize = 512;
@@ -200,6 +205,8 @@ impl LatencyHistogram {
             buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_us: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
         }
     }
 
@@ -211,10 +218,26 @@ impl LatencyHistogram {
         self.buckets[hist_index(us)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact smallest recorded latency in ms (0.0 if empty).
+    pub fn min_ms(&self) -> f64 {
+        let min = self.min_us.load(Ordering::Relaxed);
+        if min == u64::MAX {
+            return 0.0;
+        }
+        min as f64 / 1e3
+    }
+
+    /// Exact largest recorded latency in ms (0.0 if empty).
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
     }
 
     pub fn mean_ms(&self) -> f64 {
@@ -226,6 +249,8 @@ impl LatencyHistogram {
     }
 
     /// Latency at quantile `q` in [0, 1], in milliseconds (0.0 if empty).
+    /// Clamped to the exact observed [min, max], so a quantile of a
+    /// small sample never reads outside what actually happened.
     pub fn quantile_ms(&self, q: f64) -> f64 {
         // Snapshot the buckets once and derive the target from that same
         // snapshot: concurrent `record_us` calls (bucket and count are
@@ -237,23 +262,36 @@ impl LatencyHistogram {
             return 0.0;
         }
         let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        // The extreme order statistics are known exactly; everything in
+        // between comes from the bucket scan, clamped to [min, max].
+        if target >= n {
+            return self.max_ms().max(self.min_ms());
+        }
+        if target == 1 {
+            return self.min_ms();
+        }
         let mut seen = 0u64;
+        let mut raw = hist_value_us(HIST_BUCKETS - 1) / 1e3;
         for (i, &c) in counts.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return hist_value_us(i) / 1e3;
+                raw = hist_value_us(i) / 1e3;
+                break;
             }
         }
-        hist_value_us(HIST_BUCKETS - 1) / 1e3
+        let (min, max) = (self.min_ms(), self.max_ms());
+        raw.clamp(min, max.max(min))
     }
 
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("count", Json::from(self.count())),
             ("mean_ms", Json::from(self.mean_ms())),
+            ("min_ms", Json::from(self.min_ms())),
             ("p50_ms", Json::from(self.quantile_ms(0.50))),
             ("p95_ms", Json::from(self.quantile_ms(0.95))),
             ("p99_ms", Json::from(self.quantile_ms(0.99))),
+            ("max_ms", Json::from(self.max_ms())),
         ])
     }
 }
@@ -329,6 +367,54 @@ mod tests {
         h.record_us(0);
         h.record_us(3);
         assert!(h.quantile_ms(1.0) <= 0.004);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_pinned() {
+        // Exact region: one bucket per microsecond below 8 µs.
+        for us in 0..8u64 {
+            assert_eq!(hist_index(us), us as usize);
+            assert_eq!(hist_value_us(us as usize), us as f64);
+        }
+        // First log-linear bucket: 8 µs has msb 3, sub-bucket 0 →
+        // index (3<<3)|0 = 24, covering [8, 9) with midpoint 8.5.
+        assert_eq!(hist_index(8), 24);
+        assert_eq!(hist_value_us(24), 8.5);
+        assert_eq!(hist_index(9), 25, "1 µs sub-bucket width below 16 µs");
+        // 1000 µs: msb 9, sub = (1000 >> 6) & 7 = 7 → index 79,
+        // bucket [960, 1024) with midpoint 992.
+        assert_eq!(hist_index(1000), (9 << 3) | 7);
+        assert_eq!(hist_value_us((9 << 3) | 7), 992.0);
+        // Power-of-two edges land in sub-bucket 0 of the next octave.
+        assert_eq!(hist_index(1024), 10 << 3);
+        assert_eq!(hist_index(1023), (9 << 3) | 7);
+        // Relative error bound: bucket width is 2^(msb-3), i.e. ≤ 1/8
+        // of the value — midpoint error ≤ ~6%.
+        for us in [100u64, 5_000, 123_456, 10_000_000] {
+            let mid = hist_value_us(hist_index(us));
+            assert!((mid - us as f64).abs() / us as f64 < 0.0625, "{us} -> {mid}");
+        }
+        // Saturating top bucket.
+        assert_eq!(hist_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_tracks_exact_min_max_and_clamps_quantiles() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.min_ms(), 0.0, "empty histogram reads neutral");
+        assert_eq!(h.max_ms(), 0.0);
+        // Three samples: bucket-midpoint p99 would overshoot the real
+        // maximum; the exact-max clamp pins it.
+        h.record_us(1_000);
+        h.record_us(2_000);
+        h.record_us(3_000);
+        assert_eq!(h.min_ms(), 1.0);
+        assert_eq!(h.max_ms(), 3.0);
+        assert_eq!(h.quantile_ms(0.99), 3.0, "p99 of 3 samples is the exact max");
+        assert_eq!(h.quantile_ms(0.0), 1.0, "p0 clamps to the exact min");
+        let j = h.to_json();
+        assert_eq!(j.get("min_ms").unwrap().num().unwrap(), 1.0);
+        assert_eq!(j.get("max_ms").unwrap().num().unwrap(), 3.0);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! compute backend (blocked GEMM / conv2d / depthwise in f32 and int8,
 //! `linalg`), the compact activation wire codec (`wire`: int8/fp16
 //! payloads across cut edges), the XLA/PJRT execution service, and the
-//! epoll reactor + timer wheel the serving layer's event loop runs on.
+//! epoll reactor + timer wheel the serving layer's event loop runs on,
+//! and the distributed flight-recorder (`trace`: per-thread lock-free
+//! span rings with wire-propagated span context).
 
 pub mod device;
 pub mod distributed;
@@ -17,5 +19,6 @@ pub mod metrics;
 pub mod net;
 pub mod netsim;
 pub mod reactor;
+pub mod trace;
 pub mod wire;
 pub mod xla_exec;

@@ -15,6 +15,7 @@
 use crate::dataflow::Token;
 use crate::runtime::kernels::{ActorKernel, FireOutcome};
 use crate::runtime::netsim::LinkShaper;
+use crate::runtime::trace::{self, Stage};
 use crate::runtime::wire::WireDtype;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -113,6 +114,9 @@ impl ActorKernel for TxKernel {
                 token.encode_wire(self.wire, &mut self.enc)?;
                 &self.enc
             };
+            // Pacing + socket write under one net-tx span (arg = coded
+            // frame size): what the link actually cost this token.
+            let _tx = trace::span(trace::LOCAL, 0, Stage::NetTx, payload.len() as u32);
             let ts = self.shaper.send_slot(payload.len());
             if write_frame(&mut self.stream, token.seq, ts, payload).is_err() {
                 // Peer gone: wind the local subgraph down cleanly.
@@ -158,6 +162,7 @@ impl RxKernel {
 
 impl ActorKernel for RxKernel {
     fn fire(&mut self, _inputs: &[Vec<Token>], _seq: u64) -> Result<FireOutcome> {
+        let _rx = trace::span(trace::LOCAL, 0, Stage::NetRx, 0);
         match read_frame(&mut self.stream)? {
             None => Ok(FireOutcome::Stop),
             Some((_seq, ts, payload)) => {

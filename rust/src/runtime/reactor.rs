@@ -30,6 +30,7 @@
 //! split, minus futures: connection state machines are explicit, so no
 //! executor is needed.
 
+use crate::runtime::trace::{self, Stage};
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::os::unix::io::{AsRawFd, RawFd};
@@ -389,6 +390,24 @@ impl<T> TimerWheel<T> {
     /// Fire everything due at or before `now`, pushing tokens in expiry
     /// order onto `expired`.
     pub fn advance(&mut self, now: Instant, expired: &mut Vec<T>) {
+        let before = expired.len();
+        let t0 = if trace::enabled() { trace::now_us() } else { 0 };
+        self.advance_inner(now, expired);
+        // Flight-recorder breadcrumb: how long the wheel walk took when
+        // it actually fired something (process-local, not per-request).
+        if t0 != 0 && expired.len() > before {
+            trace::record(
+                trace::LOCAL,
+                0,
+                Stage::TimerFire,
+                (expired.len() - before) as u32,
+                t0,
+                trace::now_us(),
+            );
+        }
+    }
+
+    fn advance_inner(&mut self, now: Instant, expired: &mut Vec<T>) {
         let target = self.ticks_at(now);
         if self.scheduled.is_empty() {
             // Nothing can fire; skip the walk (and drop stale tombstones

@@ -1,0 +1,775 @@
+//! Distributed flight-recorder tracing: per-thread lock-free span rings
+//! with cross-process span context, decomposing one inference into its
+//! per-stage latency — client encode, link transit, reactor read, batch
+//! linger, worker queue, per-layer kernel execution, response encode,
+//! client decode.  This is the observability the paper's headline
+//! end-to-end latency claim needs to be *explained* rather than merely
+//! reported, and the measured counterpart the Explorer cost model is
+//! calibrated against.
+//!
+//! Design (mirrors `server::spsc`'s ring discipline):
+//!
+//! * **Recording is wait-free and allocation-free.**  Each thread owns a
+//!   fixed-capacity SPSC ring of [`Span`]s, lazily registered on its
+//!   first recorded span (the one allocation, outside steady state).
+//!   `push` is a Relaxed tail load + Acquire head load + slot write +
+//!   Release tail store; a full ring drops the span and bumps a counter
+//!   — tracing never blocks or backs up the serving path.
+//! * **Runtime-gated and compile-out-able.**  Every record site first
+//!   checks [`enabled`], a single relaxed atomic load.  Built without
+//!   the `trace` cargo feature (in `default`), `enabled()` is a
+//!   compile-time `false` and the dead-code eliminator removes the
+//!   instrumentation entirely.  Sampling (`set_sampling`) traces one in
+//!   N requests so an always-on deployment pays the ring write only on
+//!   sampled frames.
+//! * **Span context crosses the wire.**  A traced inference carries
+//!   `[u64 trace_id][u32 parent_span]` ahead of its activation payload
+//!   (protocol v3, `CAP_TRACE`), so client- and server-side spans share
+//!   one trace and merge onto one timeline.  Timestamps are wall-clock
+//!   microseconds since `UNIX_EPOCH` — on one host (the repro setup)
+//!   both processes share the clock and the client-send → reactor-read
+//!   gap *is* the link transit.
+//! * **Draining is cold-path.**  [`drain`] walks the global recorder
+//!   registry under a mutex (serializing consumers; each ring still has
+//!   exactly one producer — its owning thread) and hands back an owned
+//!   `Vec<Span>` for export: Chrome trace-event JSON
+//!   ([`chrome_trace`], loadable in chrome://tracing / Perfetto) or the
+//!   per-stage summary ([`summary_json`]) the `--metrics-addr` scrape
+//!   endpoint serves.
+
+use crate::util::json::Json;
+use std::cell::{Cell, UnsafeCell};
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// One stage of the device–edge inference path.  The discriminant is
+/// stable (spans survive snapshot/merge across processes built from the
+/// same revision).
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Whole client-side request (root span; parent of everything).
+    Request = 0,
+    /// Client stages 1..pp + wire encode (`FrameScratch::frame_codec_into`).
+    ClientEncode = 1,
+    /// Frame write to the socket, including link-shaper pacing.
+    ClientSend = 2,
+    /// Blocking wait for the response frame.
+    ClientWait = 3,
+    /// Response verification / decode on the client.
+    ClientDecode = 4,
+    /// Reactor read readiness -> frame decoded -> request enqueued.
+    ReactorRead = 5,
+    /// Queue push -> dispatcher pop (the batch linger window).
+    BatchLinger = 6,
+    /// Dispatcher push -> worker pop (SPSC ring residence).
+    WorkerQueue = 7,
+    /// Whole server-side `EngineShard::infer_wire`.
+    Infer = 8,
+    /// One server-side layer/stage inside `Infer` (`arg` = stage index).
+    Kernel = 9,
+    /// Response wire-encode + write on the reactor thread.
+    RespEncode = 10,
+    /// Response served from the replay ring (no execution).
+    Replay = 11,
+    /// Dataflow TX FIFO frame send (`runtime::net`).
+    NetTx = 12,
+    /// Dataflow RX FIFO frame receive (`runtime::net`).
+    NetRx = 13,
+    /// Timer-wheel expiry batch (`runtime::reactor`; `arg` = fired count).
+    TimerFire = 14,
+    /// Dataflow actor firing (`runtime::engine`).
+    ActorFire = 15,
+    /// Activation wire encode (`runtime::wire`).
+    WireEncode = 16,
+    /// Activation wire decode (`runtime::wire`).
+    WireDecode = 17,
+}
+
+pub const STAGE_COUNT: usize = 18;
+
+const STAGE_NAMES: [&str; STAGE_COUNT] = [
+    "request",
+    "client_encode",
+    "client_send",
+    "client_wait",
+    "client_decode",
+    "reactor_read",
+    "batch_linger",
+    "worker_queue",
+    "infer",
+    "kernel",
+    "resp_encode",
+    "replay",
+    "net_tx",
+    "net_rx",
+    "timer_fire",
+    "actor_fire",
+    "wire_encode",
+    "wire_decode",
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        STAGE_NAMES[self as usize]
+    }
+}
+
+/// Trace id for process-local infrastructure spans that belong to no
+/// particular request (timer fires, dataflow engine runs).  Exported on
+/// the same timeline; never propagated over the wire.
+pub const LOCAL: u64 = u64::MAX;
+
+/// One completed span.  Fixed-size and `Copy` so ring slots never own
+/// heap memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Which trace this span belongs to (0 never occurs in a ring;
+    /// [`LOCAL`] marks infrastructure spans).
+    pub trace_id: u64,
+    /// Process-unique span id (>= 1).
+    pub span_id: u32,
+    /// Parent span id (0 = root / remote parent unknown).
+    pub parent: u32,
+    pub stage: Stage,
+    /// Stage-specific argument (kernel stage index, timer fire count,
+    /// payload bytes, ...).
+    pub arg: u32,
+    /// Wall-clock microseconds since `UNIX_EPOCH`.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Recorder (thread) id the span was recorded on.
+    pub tid: u32,
+}
+
+// ------------------------------------------------------------- recorders
+
+/// Spans retained per thread between drains.  A drain happens per
+/// scrape / per run summary; at serving rates the ring wraps only if
+/// nobody is listening, in which case dropping oldest-unread is the
+/// correct flight-recorder behavior (`dropped()` reports it).
+const RING_CAPACITY: usize = 4096;
+
+struct Ring {
+    id: u32,
+    name: String,
+    slots: Box<[UnsafeCell<MaybeUninit<Span>>]>,
+    /// Consumer cursor (drain side, serialized by the registry lock).
+    head: AtomicUsize,
+    /// Producer cursor (owning thread only).
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// One producer (the owning thread), one consumer at a time (registry
+// lock); the head/tail acquire/release pairs order the slot accesses.
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(id: u32, name: String) -> Ring {
+        let slots: Box<[UnsafeCell<MaybeUninit<Span>>]> =
+            (0..RING_CAPACITY).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        Ring {
+            id,
+            name,
+            slots,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Producer side (owning thread only): wait-free, allocation-free.
+    fn push(&self, span: Span) {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) >= RING_CAPACITY {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        unsafe {
+            (*self.slots[tail % RING_CAPACITY].get()).write(span);
+        }
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Consumer side (under the registry lock).
+    fn drain_into(&self, out: &mut Vec<Span>) {
+        let tail = self.tail.load(Ordering::Acquire);
+        let mut head = self.head.load(Ordering::Relaxed);
+        while head != tail {
+            let span = unsafe { (*self.slots[head % RING_CAPACITY].get()).assume_init_read() };
+            out.push(span);
+            head = head.wrapping_add(1);
+        }
+        self.head.store(head, Ordering::Release);
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Trace one in N requests (1 = every request).
+static SAMPLE: AtomicU64 = AtomicU64::new(1);
+static NEXT_SPAN: AtomicU32 = AtomicU32::new(1);
+static NEXT_RECORDER: AtomicU32 = AtomicU32::new(1);
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(0);
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static RECORDER: UnsafeCell<Option<Arc<Ring>>> = const { UnsafeCell::new(None) };
+    /// Propagated span context for call sites too deep to thread
+    /// parameters through (kernel loops, wire codecs).
+    static CURRENT: Cell<(u64, u32)> = const { Cell::new((0, 0)) };
+}
+
+/// This thread's ring, registering it on first use (the one allocation;
+/// warm it before any allocation-measured window via [`warm_recorder`]).
+fn with_recorder<R>(f: impl FnOnce(&Ring) -> R) -> R {
+    RECORDER.with(|slot| {
+        // Safety: the slot is only ever touched from its owning thread,
+        // and `f` cannot re-enter `with_recorder` (it only pushes).
+        let opt = unsafe { &mut *slot.get() };
+        if opt.is_none() {
+            let id = NEXT_RECORDER.fetch_add(1, Ordering::Relaxed);
+            let name = std::thread::current().name().unwrap_or("?").to_string();
+            let ring = Arc::new(Ring::new(id, name));
+            registry().lock().unwrap().push(ring.clone());
+            *opt = Some(ring);
+        }
+        f(opt.as_ref().unwrap())
+    })
+}
+
+// --------------------------------------------------------------- control
+
+/// Is tracing live?  A compile-time `false` without the `trace` feature
+/// (the whole subsystem then folds away); otherwise one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    cfg!(feature = "trace") && ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Trace one in `n` requests (0 and 1 both mean "every request").
+pub fn set_sampling(n: u64) {
+    SAMPLE.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Should request number `seq` be traced?  (Client-side decision: the
+/// server traces whatever arrives carrying a trace id.)
+#[inline]
+pub fn should_trace(seq: u64) -> bool {
+    enabled() && seq % SAMPLE.load(Ordering::Relaxed) == 0
+}
+
+/// A fresh process-unique nonzero trace id.  High bits are seeded from
+/// the wall clock once per process so ids from separately-started
+/// client and server processes cannot collide.
+pub fn next_trace_id() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    let seed = *SEED.get_or_init(|| {
+        let ns = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_nanos();
+        ((ns as u64) | 1) << 20
+    });
+    let id = seed.wrapping_add(NEXT_TRACE.fetch_add(1, Ordering::Relaxed));
+    // 0 means "untraced" and LOCAL is reserved.
+    if id == 0 || id == LOCAL {
+        1
+    } else {
+        id
+    }
+}
+
+fn next_span_id() -> u32 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Wall-clock microseconds since `UNIX_EPOCH` (vDSO-cheap; shared by
+/// client and server processes on one host, which is what lets their
+/// spans merge onto one timeline).
+#[inline]
+pub fn now_us() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_micros() as u64
+}
+
+/// Total spans dropped to full rings since process start.
+pub fn dropped() -> u64 {
+    registry().lock().unwrap().iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+}
+
+/// Register this thread's recorder ahead of time, so the lazy-init
+/// allocation happens outside any allocation-measured window.
+pub fn warm_recorder() {
+    if cfg!(feature = "trace") {
+        with_recorder(|_| ());
+    }
+}
+
+// ----------------------------------------------------- span propagation
+
+/// Set the span context deep call sites (kernels, wire codecs) record
+/// under.  `(0, 0)` clears it.
+pub fn set_current(trace_id: u64, parent: u32) {
+    CURRENT.with(|c| c.set((trace_id, parent)));
+}
+
+/// The propagated `(trace_id, parent_span)` for this thread, `(0, 0)`
+/// when none.
+pub fn current() -> (u64, u32) {
+    CURRENT.with(|c| c.get())
+}
+
+pub fn clear_current() {
+    set_current(0, 0);
+}
+
+// ------------------------------------------------------------ recording
+
+/// Record a completed span with explicit timestamps (the cross-thread
+/// reconstruction path: batch-linger and worker-queue windows measured
+/// from timestamps carried in `PendingRequest`).  Returns the span id
+/// (0 if tracing was off or `trace_id` is 0).
+pub fn record(
+    trace_id: u64,
+    parent: u32,
+    stage: Stage,
+    arg: u32,
+    start_us: u64,
+    end_us: u64,
+) -> u32 {
+    if !enabled() || trace_id == 0 {
+        return 0;
+    }
+    let span_id = next_span_id();
+    with_recorder(|ring| {
+        ring.push(Span {
+            trace_id,
+            span_id,
+            parent,
+            stage,
+            arg,
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            tid: ring.id,
+        });
+    });
+    span_id
+}
+
+/// RAII span: times from construction to drop.  Constructing with
+/// `trace_id == 0` (or tracing disabled) is a no-op guard.
+pub struct SpanGuard {
+    trace_id: u64,
+    parent: u32,
+    stage: Stage,
+    arg: u32,
+    start_us: u64,
+    id: u32,
+}
+
+/// Open a span under `(trace_id, parent)`.
+pub fn span(trace_id: u64, parent: u32, stage: Stage, arg: u32) -> SpanGuard {
+    if !enabled() || trace_id == 0 {
+        return SpanGuard { trace_id: 0, parent: 0, stage, arg: 0, start_us: 0, id: 0 };
+    }
+    SpanGuard { trace_id, parent, stage, arg, start_us: now_us(), id: next_span_id() }
+}
+
+/// Open a span under this thread's propagated context ([`set_current`]);
+/// a no-op guard when no context is set.
+pub fn span_current(stage: Stage, arg: u32) -> SpanGuard {
+    let (trace_id, parent) = current();
+    span(trace_id, parent, stage, arg)
+}
+
+impl SpanGuard {
+    /// The span id (to parent children under); 0 on a no-op guard.
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Is this guard actually recording?
+    pub fn live(&self) -> bool {
+        self.trace_id != 0
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.trace_id == 0 {
+            return;
+        }
+        let end = now_us();
+        let span = Span {
+            trace_id: self.trace_id,
+            span_id: self.id,
+            parent: self.parent,
+            stage: self.stage,
+            arg: self.arg,
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            tid: 0,
+        };
+        with_recorder(|ring| {
+            ring.push(Span { tid: ring.id, ..span });
+        });
+    }
+}
+
+// --------------------------------------------------------------- export
+
+/// Drain every recorder's retained spans (cold path; allocates).  Spans
+/// come back grouped by recorder, each group in record order.
+pub fn drain() -> Vec<Span> {
+    let mut out = Vec::new();
+    for ring in registry().lock().unwrap().iter() {
+        ring.drain_into(&mut out);
+    }
+    out
+}
+
+/// Recorder-id -> thread-name rows for export labeling.
+pub fn recorder_names() -> Vec<(u32, String)> {
+    registry().lock().unwrap().iter().map(|r| (r.id, r.name.clone())).collect()
+}
+
+/// Trace ids are full-range u64 (clock-seeded high bits; `LOCAL` is
+/// `u64::MAX`), which a JSON number cannot carry exactly — the shared
+/// `Json` type stores f64, whose 53-bit mantissa would collapse ids
+/// that differ only in their low (counter) bits.  They travel as hex
+/// strings instead.
+fn trace_id_json(id: u64) -> Json {
+    Json::from(format!("{id:x}"))
+}
+
+fn trace_id_from_json(v: &Json) -> anyhow::Result<u64> {
+    Ok(u64::from_str_radix(v.str()?, 16)?)
+}
+
+fn span_json(s: &Span) -> Json {
+    Json::from_pairs(vec![
+        ("trace_id", trace_id_json(s.trace_id)),
+        ("span_id", Json::from(u64::from(s.span_id))),
+        ("parent", Json::from(u64::from(s.parent))),
+        ("stage", Json::from(s.stage.name())),
+        ("arg", Json::from(u64::from(s.arg))),
+        ("start_us", Json::from(s.start_us)),
+        ("dur_us", Json::from(s.dur_us)),
+        ("tid", Json::from(u64::from(s.tid))),
+    ])
+}
+
+/// Spans as plain JSON rows (the scrape endpoint's `trace.spans` field;
+/// parse back with [`span_from_json`]).
+pub fn spans_json(spans: &[Span]) -> Json {
+    Json::Arr(spans.iter().map(span_json).collect())
+}
+
+fn stage_from_name(name: &str) -> Option<Stage> {
+    STAGE_NAMES.iter().position(|&n| n == name).map(|i| match i {
+        0 => Stage::Request,
+        1 => Stage::ClientEncode,
+        2 => Stage::ClientSend,
+        3 => Stage::ClientWait,
+        4 => Stage::ClientDecode,
+        5 => Stage::ReactorRead,
+        6 => Stage::BatchLinger,
+        7 => Stage::WorkerQueue,
+        8 => Stage::Infer,
+        9 => Stage::Kernel,
+        10 => Stage::RespEncode,
+        11 => Stage::Replay,
+        12 => Stage::NetTx,
+        13 => Stage::NetRx,
+        14 => Stage::TimerFire,
+        15 => Stage::ActorFire,
+        16 => Stage::WireEncode,
+        _ => Stage::WireDecode,
+    })
+}
+
+/// Parse one span row produced by [`spans_json`] (how `loadgen` ingests
+/// the server's spans from the scrape snapshot to merge traces).
+pub fn span_from_json(v: &Json) -> anyhow::Result<Span> {
+    let stage_name = v.get("stage")?.str()?.to_string();
+    let stage = stage_from_name(&stage_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown trace stage {stage_name:?}"))?;
+    Ok(Span {
+        trace_id: trace_id_from_json(v.get("trace_id")?)?,
+        span_id: v.get("span_id")?.int()? as u32,
+        parent: v.get("parent")?.int()? as u32,
+        stage,
+        arg: v.get("arg")?.int()? as u32,
+        start_us: v.get("start_us")?.int()? as u64,
+        dur_us: v.get("dur_us")?.int()? as u64,
+        tid: v.get("tid")?.int()? as u32,
+    })
+}
+
+/// Merge span groups into one Chrome trace-event JSON object
+/// (chrome://tracing / Perfetto "Open trace file").  Each `(name,
+/// spans)` group becomes one process on the shared wall-clock
+/// timeline; recorder ids become threads.
+pub fn chrome_trace(groups: &[(&str, &[Span])]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (pid, (name, spans)) in groups.iter().enumerate() {
+        let pid = pid as u64 + 1;
+        events.push(Json::from_pairs(vec![
+            ("name", Json::from("process_name")),
+            ("ph", Json::from("M")),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(0u64)),
+            ("args", Json::from_pairs(vec![("name", Json::from(*name))])),
+        ]));
+        let mut tids_seen: Vec<u32> = Vec::new();
+        for s in spans.iter() {
+            if !tids_seen.contains(&s.tid) {
+                tids_seen.push(s.tid);
+            }
+            events.push(Json::from_pairs(vec![
+                ("name", Json::from(s.stage.name())),
+                ("cat", Json::from("edge-prune")),
+                ("ph", Json::from("X")),
+                ("ts", Json::from(s.start_us)),
+                ("dur", Json::from(s.dur_us)),
+                ("pid", Json::from(pid)),
+                ("tid", Json::from(u64::from(s.tid))),
+                (
+                    "args",
+                    Json::from_pairs(vec![
+                        ("trace_id", trace_id_json(s.trace_id)),
+                        ("span_id", Json::from(u64::from(s.span_id))),
+                        ("parent", Json::from(u64::from(s.parent))),
+                        ("arg", Json::from(u64::from(s.arg))),
+                    ]),
+                ),
+            ]));
+        }
+        for (rid, rname) in recorder_names() {
+            if tids_seen.contains(&rid) {
+                events.push(Json::from_pairs(vec![
+                    ("name", Json::from("thread_name")),
+                    ("ph", Json::from("M")),
+                    ("pid", Json::from(pid)),
+                    ("tid", Json::from(u64::from(rid))),
+                    ("args", Json::from_pairs(vec![("name", Json::from(rname.as_str()))])),
+                ]));
+            }
+        }
+    }
+    Json::from_pairs(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+/// Per-stage aggregate over a span set: count / total / mean / min /
+/// max microseconds, one row per stage that occurred.  This is the
+/// "per-stage latency decomposition" table the scrape endpoint and the
+/// calibration report are built on.
+pub fn summary_json(spans: &[Span]) -> Json {
+    let mut count = [0u64; STAGE_COUNT];
+    let mut total = [0u64; STAGE_COUNT];
+    let mut min = [u64::MAX; STAGE_COUNT];
+    let mut max = [0u64; STAGE_COUNT];
+    for s in spans {
+        let i = s.stage as usize;
+        count[i] += 1;
+        total[i] += s.dur_us;
+        min[i] = min[i].min(s.dur_us);
+        max[i] = max[i].max(s.dur_us);
+    }
+    let rows: Vec<Json> = (0..STAGE_COUNT)
+        .filter(|&i| count[i] > 0)
+        .map(|i| {
+            Json::from_pairs(vec![
+                ("stage", Json::from(STAGE_NAMES[i])),
+                ("count", Json::from(count[i])),
+                ("total_us", Json::from(total[i])),
+                ("mean_us", Json::from(total[i] as f64 / count[i] as f64)),
+                ("min_us", Json::from(min[i])),
+                ("max_us", Json::from(max[i])),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("spans", Json::from(spans.len())),
+        ("dropped", Json::from(dropped())),
+        ("stages", Json::Arr(rows)),
+    ])
+}
+
+/// Mean duration (ms) of `stage` over a span set (`None` if absent) —
+/// the calibration report's accessor.
+pub fn mean_stage_ms(spans: &[Span], stage: Stage) -> Option<f64> {
+    let (mut n, mut total) = (0u64, 0u64);
+    for s in spans.iter().filter(|s| s.stage == stage) {
+        n += 1;
+        total += s.dur_us;
+    }
+    (n > 0).then(|| total as f64 / n as f64 / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests in this module toggle the global enable flag; serialize
+    /// them so a parallel test harness cannot interleave.
+    fn exclusive() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _x = exclusive();
+        set_enabled(false);
+        let _ = drain();
+        let g = span(42, 0, Stage::Infer, 0);
+        assert!(!g.live());
+        drop(g);
+        record(42, 0, Stage::Kernel, 1, 10, 20);
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn spans_nest_and_order_under_one_trace() {
+        let _x = exclusive();
+        set_enabled(true);
+        set_sampling(1);
+        let _ = drain();
+        let trace = next_trace_id();
+        let root = span(trace, 0, Stage::Request, 0);
+        let root_id = root.id();
+        assert!(root.live() && root_id > 0);
+        let child = span(trace, root_id, Stage::ClientEncode, 0);
+        let child_id = child.id();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        drop(child);
+        drop(root);
+        set_enabled(false);
+
+        let spans = drain();
+        assert_eq!(spans.len(), 2);
+        // Guards drop inside-out: the child is recorded first.
+        let (c, r) = (&spans[0], &spans[1]);
+        assert_eq!(c.stage, Stage::ClientEncode);
+        assert_eq!(r.stage, Stage::Request);
+        assert_eq!(c.trace_id, trace);
+        assert_eq!(r.trace_id, trace);
+        assert_eq!(c.parent, root_id);
+        assert_eq!(c.span_id, child_id);
+        // Nesting invariant: the child interval sits inside the parent.
+        assert!(c.start_us >= r.start_us);
+        assert!(c.start_us + c.dur_us <= r.start_us + r.dur_us);
+        assert!(r.dur_us >= 2_000, "parent covers the 2 ms sleep");
+    }
+
+    #[test]
+    fn explicit_record_and_current_context() {
+        let _x = exclusive();
+        set_enabled(true);
+        let _ = drain();
+        let trace = next_trace_id();
+        set_current(trace, 7);
+        let g = span_current(Stage::Kernel, 3);
+        assert!(g.live());
+        drop(g);
+        clear_current();
+        assert!(!span_current(Stage::Kernel, 0).live(), "cleared context records nothing");
+        let id = record(trace, 7, Stage::BatchLinger, 0, 100, 250);
+        assert!(id > 0);
+        set_enabled(false);
+        let spans = drain();
+        assert_eq!(spans.len(), 2);
+        let linger = spans.iter().find(|s| s.stage == Stage::BatchLinger).unwrap();
+        assert_eq!((linger.start_us, linger.dur_us, linger.parent), (100, 150, 7));
+        assert_eq!(spans.iter().find(|s| s.stage == Stage::Kernel).unwrap().arg, 3);
+    }
+
+    #[test]
+    fn full_ring_drops_instead_of_blocking() {
+        let _x = exclusive();
+        set_enabled(true);
+        let _ = drain();
+        let before = dropped();
+        let trace = next_trace_id();
+        for i in 0..(RING_CAPACITY as u32 + 100) {
+            record(trace, 0, Stage::Kernel, i, 0, 1);
+        }
+        set_enabled(false);
+        assert!(dropped() >= before + 100, "overflow increments the dropped counter");
+        let spans = drain();
+        assert_eq!(spans.iter().filter(|s| s.trace_id == trace).count(), RING_CAPACITY);
+    }
+
+    #[test]
+    fn sampling_selects_one_in_n() {
+        let _x = exclusive();
+        set_enabled(true);
+        set_sampling(8);
+        let picked = (0..64u64).filter(|&s| should_trace(s)).count();
+        assert_eq!(picked, 8);
+        set_sampling(1);
+        assert!(should_trace(17));
+        set_enabled(false);
+        assert!(!should_trace(0), "sampling never overrides the enable gate");
+    }
+
+    #[test]
+    fn chrome_export_and_json_round_trip() {
+        let _x = exclusive();
+        set_enabled(true);
+        let _ = drain();
+        let trace = next_trace_id();
+        record(trace, 0, Stage::ClientSend, 0, 1000, 1500);
+        record(trace, 0, Stage::ReactorRead, 0, 1600, 1700);
+        set_enabled(false);
+        let spans = drain();
+
+        // Plain-JSON rows parse back losslessly (the scrape transport).
+        let rows = spans_json(&spans);
+        let parsed = Json::parse(&rows.to_string()).unwrap();
+        let back: Vec<Span> =
+            parsed.arr().unwrap().iter().map(|v| span_from_json(v).unwrap()).collect();
+        assert_eq!(back, spans);
+
+        // Chrome export: one process per group, complete events, both
+        // process metadata and span events present, valid JSON.
+        let client: Vec<Span> =
+            spans.iter().filter(|s| s.stage == Stage::ClientSend).copied().collect();
+        let server: Vec<Span> =
+            spans.iter().filter(|s| s.stage == Stage::ReactorRead).copied().collect();
+        let chrome = chrome_trace(&[("client", &client), ("server", &server)]);
+        let parsed = Json::parse(&chrome.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().arr().unwrap();
+        assert!(events.iter().any(|e| e.get("ph").unwrap().str().unwrap() == "M"));
+        let xs: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").unwrap().str().unwrap() == "X").collect();
+        assert_eq!(xs.len(), 2);
+        let pids: std::collections::BTreeSet<i64> =
+            xs.iter().map(|e| e.get("pid").unwrap().int().unwrap()).collect();
+        assert_eq!(pids.len(), 2, "client and server land on distinct processes");
+
+        let summary = summary_json(&spans);
+        let stages = summary.get("stages").unwrap().arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        let send = stages
+            .iter()
+            .find(|r| r.get("stage").unwrap().str().unwrap() == "client_send")
+            .unwrap();
+        assert_eq!(send.get("mean_us").unwrap().num().unwrap(), 500.0);
+        assert_eq!(mean_stage_ms(&spans, Stage::ClientSend), Some(0.5));
+        assert_eq!(mean_stage_ms(&spans, Stage::Kernel), None);
+    }
+}

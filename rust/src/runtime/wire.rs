@@ -39,6 +39,11 @@ use anyhow::{bail, Result};
 pub const CAP_I8: u8 = 1;
 /// Capability bit: peer can encode/decode fp16 activations.
 pub const CAP_F16: u8 = 2;
+/// Capability bit: peer can send/accept flight-recorder span context
+/// (`[u64 trace_id][u32 parent_span]`) ahead of traced inference
+/// payloads — see `runtime::trace` and `server::protocol`.  Orthogonal
+/// to dtype negotiation: [`negotiate`] ignores it.
+pub const CAP_TRACE: u8 = 4;
 
 /// Element type of activations on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -280,6 +285,10 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 /// Encode an activation tensor into `out` (cleared, reused across
 /// frames — no allocation once its capacity is warm).
 pub fn encode_activation(dtype: WireDtype, x: &[f32], out: &mut Vec<u8>) {
+    let _span = crate::runtime::trace::span_current(
+        crate::runtime::trace::Stage::WireEncode,
+        x.len() as u32,
+    );
     if dtype == WireDtype::F32 {
         // The canonical raw-f32 serializer (clears + reuses `out`).
         crate::util::tensor::f32_extend_bytes(x, out);
@@ -314,6 +323,10 @@ pub fn encode_activation(dtype: WireDtype, x: &[f32], out: &mut Vec<u8>) {
 /// Decode an encoded activation into a caller-owned f32 slice whose
 /// length fixes the expected element count.  Allocation-free.
 pub fn decode_activation_into(dtype: WireDtype, payload: &[u8], x: &mut [f32]) -> Result<()> {
+    let _span = crate::runtime::trace::span_current(
+        crate::runtime::trace::Stage::WireDecode,
+        x.len() as u32,
+    );
     if decoded_elems(dtype, payload.len()) != Some(x.len()) {
         bail!(
             "{} payload of {} bytes does not decode to {} elements (expect {})",

@@ -41,6 +41,19 @@ pub struct PendingRequest {
     /// currently attached (the session may have reconnected since this
     /// request was admitted).
     pub reply: Arc<SessionOutbox>,
+    /// Flight-recorder context propagated from the client's traced
+    /// frame; `0` means the request is untraced and every span site
+    /// downstream is a no-op.
+    pub trace_id: u64,
+    /// The client-side span the server-side spans hang under.
+    pub trace_parent: u32,
+    /// Wall-clock µs at reactor admission (traced requests only) — the
+    /// left edge of the batch-linger span.
+    pub recv_us: u64,
+    /// Wall-clock µs when the dispatcher handed the batch to a worker
+    /// ring; the worker turns `recv_us..dispatched_us` into the
+    /// batch-linger span and `dispatched_us..now` into worker-queue.
+    pub dispatched_us: u64,
 }
 
 struct QueueState {
@@ -173,6 +186,10 @@ mod tests {
             wire: WireDtype::F32,
             enqueued: Instant::now(),
             reply: SessionOutbox::new(session, 8),
+            trace_id: 0,
+            trace_parent: 0,
+            recv_us: 0,
+            dispatched_us: 0,
         }
     }
 

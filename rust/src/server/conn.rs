@@ -33,6 +33,7 @@ use super::session::{Admit, ResponseSink, SessionHandle};
 use super::ServerState;
 use crate::compiler::PlanKey;
 use crate::runtime::reactor::{ByteBuf, Event, Interest, Reactor, TimerWheel, WakeHandle};
+use crate::runtime::trace::{self, Stage};
 use crate::runtime::wire::{self, Precision, SessionCodec, WireDtype};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
@@ -132,6 +133,11 @@ struct Attachment {
     health: Arc<crate::runtime::health::HealthMonitor>,
     plan: Arc<ServerModelPlan>,
     plan_metrics: Arc<super::metrics::PlanMetrics>,
+    /// Trace context of in-flight traced requests, keyed by seq, so the
+    /// completion route can stamp the response-encode span onto the
+    /// right trace.  Tiny (bounded by in-flight depth) and touched only
+    /// for traced requests.
+    traced: HashMap<u64, (u64, u32)>,
 }
 
 enum ConnState {
@@ -214,6 +220,10 @@ pub(crate) struct EventLoop {
     /// in steady state.
     touched: Vec<u64>,
     seen: std::collections::HashSet<u64>,
+    /// Wall-clock µs when the current readable event started draining
+    /// the socket (0 when tracing is off) — the left edge of the
+    /// reactor-read span for every frame decoded from that read.
+    read_start_us: u64,
 }
 
 impl EventLoop {
@@ -241,6 +251,7 @@ impl EventLoop {
                 handshaking: 0,
                 touched: Vec::new(),
                 seen: std::collections::HashSet::new(),
+                read_start_us: 0,
             },
             wake,
         ))
@@ -425,6 +436,9 @@ impl EventLoop {
     /// Pull ready bytes and run the codecs.  `Err` = the connection must
     /// die, with the given disposition.
     fn read_ready(&mut self, conn: &mut Conn) -> Result<(), Teardown> {
+        // One stamp per readable event: every frame decoded out of this
+        // read shares it as its reactor-read span start.
+        self.read_start_us = if trace::enabled() { trace::now_us() } else { 0 };
         let mut chunk = [0u8; 16 * 1024];
         for _ in 0..READS_PER_EVENT {
             match conn.stream.read(&mut chunk) {
@@ -516,6 +530,11 @@ impl EventLoop {
             // queued responses, then close the socket.
             if let ConnState::Attached(a) = &conn.state {
                 a.health.note_heard(frame.payload.len() + 13);
+                eprintln!(
+                    "[serve] session {} bye: {}",
+                    a.session_id,
+                    a.outbox.stats().summary()
+                );
                 self.state.sessions.close_if_current(a.session_id, a.epoch);
             }
             conn.state = ConnState::Draining;
@@ -529,13 +548,21 @@ impl EventLoop {
         a.health.note_heard(frame.payload.len() + 13);
         // Data-plane byte accounting: actual frame bytes vs what the
         // same frame would have cost at raw f32 (only infer payloads
-        // are wire-coded; control frames count 1:1).
+        // are wire-coded; control frames and the trace prefix count
+        // 1:1).
         let actual = (frame.payload.len() + 13) as u64;
         let f32_equiv = match frame.kind {
             ReqKind::Infer => (wire::f32_equiv_len(a.wire, frame.payload.len()) + 13) as u64,
+            ReqKind::TracedInfer => {
+                let coded = frame.payload.len().saturating_sub(protocol::TRACE_PREFIX);
+                (wire::f32_equiv_len(a.wire, coded) + 13 + protocol::TRACE_PREFIX) as u64
+            }
             _ => actual,
         };
         self.state.metrics.wire.note_rx(actual, f32_equiv);
+        if matches!(frame.kind, ReqKind::Infer | ReqKind::TracedInfer) {
+            a.outbox.stats().wire.note_rx(actual, f32_equiv);
+        }
         match frame.kind {
             ReqKind::Bye => unreachable!("handled above"),
             ReqKind::Ping => {
@@ -569,38 +596,84 @@ impl EventLoop {
                     }
                 }
             }
-            ReqKind::Infer => match a.outbox.admit(frame.seq) {
-                Admit::Replayed => {
-                    self.state.metrics.responses_replayed.fetch_add(1, Ordering::Relaxed);
-                }
-                Admit::InFlight => {
-                    self.state.metrics.duplicate_requests.fetch_add(1, Ordering::Relaxed);
-                }
-                Admit::Fresh => {
-                    let req = PendingRequest {
-                        session: a.session_id,
-                        req_id: frame.seq,
-                        plan: a.plan.clone(),
-                        plan_metrics: a.plan_metrics.clone(),
-                        payload: frame.payload,
-                        wire: a.wire,
-                        enqueued: Instant::now(),
-                        reply: a.outbox.clone(),
+            ReqKind::Infer | ReqKind::TracedInfer => {
+                // A traced frame carries its flight-recorder context
+                // ahead of the activation: peel it off so the worker
+                // decodes a plain infer payload.  The context is only
+                // honored while tracing is live — a late `--trace`
+                // toggle-off degrades kind-4 frames to plain infers.
+                let mut payload = frame.payload;
+                let mut trace_id = 0u64;
+                let mut trace_parent = 0u32;
+                if frame.kind == ReqKind::TracedInfer {
+                    let (tid, parent) = match protocol::split_trace_prefix(&payload) {
+                        Ok((tid, parent, _rest)) => (tid, parent),
+                        // Malformed trace prefix = protocol violation.
+                        Err(_) => return Err(Teardown::Close),
                     };
-                    match self.state.queue.push(req) {
-                        Ok(depth) => self.state.metrics.note_queue_depth(depth as u64),
-                        Err((back, why)) => {
-                            // Admission reject: explicit response, never
-                            // a drop (the seq frees for a later re-send).
-                            self.state
-                                .metrics
-                                .requests_rejected
-                                .fetch_add(1, Ordering::Relaxed);
-                            back.reply.deliver(Response::rejected(back.req_id, why));
+                    payload.drain(..protocol::TRACE_PREFIX);
+                    if trace::enabled() {
+                        trace_id = tid;
+                        trace_parent = parent;
+                    }
+                }
+                match a.outbox.admit(frame.seq) {
+                    Admit::Replayed => {
+                        self.state.metrics.responses_replayed.fetch_add(1, Ordering::Relaxed);
+                        if trace_id != 0 {
+                            let now = trace::now_us();
+                            trace::record(trace_id, trace_parent, Stage::Replay, 0, now, now);
+                        }
+                    }
+                    Admit::InFlight => {
+                        self.state.metrics.duplicate_requests.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Admit::Fresh => {
+                        let mut recv_us = 0u64;
+                        if trace_id != 0 {
+                            let now = trace::now_us();
+                            let start =
+                                if self.read_start_us != 0 { self.read_start_us } else { now };
+                            trace::record(
+                                trace_id,
+                                trace_parent,
+                                Stage::ReactorRead,
+                                payload.len() as u32,
+                                start,
+                                now,
+                            );
+                            recv_us = now;
+                            a.traced.insert(frame.seq, (trace_id, trace_parent));
+                        }
+                        let req = PendingRequest {
+                            session: a.session_id,
+                            req_id: frame.seq,
+                            plan: a.plan.clone(),
+                            plan_metrics: a.plan_metrics.clone(),
+                            payload,
+                            wire: a.wire,
+                            enqueued: Instant::now(),
+                            reply: a.outbox.clone(),
+                            trace_id,
+                            trace_parent,
+                            recv_us,
+                            dispatched_us: 0,
+                        };
+                        match self.state.queue.push(req) {
+                            Ok(depth) => self.state.metrics.note_queue_depth(depth as u64),
+                            Err((back, why)) => {
+                                // Admission reject: explicit response, never
+                                // a drop (the seq frees for a later re-send).
+                                self.state
+                                    .metrics
+                                    .requests_rejected
+                                    .fetch_add(1, Ordering::Relaxed);
+                                back.reply.deliver(Response::rejected(back.req_id, why));
+                            }
                         }
                     }
                 }
-            },
+            }
         }
         Ok(())
     }
@@ -619,6 +692,7 @@ impl EventLoop {
             session_id: 0,
             token: 0,
             codec: (version >= protocol::VERSION).then(SessionCodec::f32),
+            trace: false,
             message,
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
@@ -728,6 +802,11 @@ impl EventLoop {
         } else {
             self.state.metrics.sessions_admitted.fetch_add(1, Ordering::Relaxed);
         }
+        // Trace capability: granted only to v3 clients that asked for it
+        // AND only while the server's flight recorder is live — the
+        // reply bit is the client's license to send kind-4 frames.
+        let trace_ok =
+            version >= protocol::VERSION && hs.wire_caps & wire::CAP_TRACE != 0 && trace::enabled();
         let reply = HandshakeReply {
             accepted: true,
             resumed,
@@ -737,6 +816,7 @@ impl EventLoop {
                 wire: negotiated,
                 precision: self.state.precision,
             }),
+            trace: trace_ok,
             message: String::new(),
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
@@ -776,6 +856,7 @@ impl EventLoop {
             health: handle.health,
             plan,
             plan_metrics,
+            traced: HashMap::new(),
         });
         if !self.state.idle_timeout.is_zero() {
             self.set_conn_deadline(conn, self.state.idle_timeout);
@@ -802,10 +883,24 @@ impl EventLoop {
         let mut seen = std::mem::take(&mut self.seen);
         for (conn_id, resp) in scratch.drain(..) {
             if let Some(conn) = self.conns.get_mut(&conn_id) {
+                let t0 = if trace::enabled() { trace::now_us() } else { 0 };
                 let encoded = protocol::encode_response(&resp);
                 // Response bodies are f32 digests in every codec, so
                 // actual == f32-equivalent on the TX side.
                 self.state.metrics.wire.note_tx(encoded.len() as u64, encoded.len() as u64);
+                if let ConnState::Attached(a) = &mut conn.state {
+                    a.outbox.stats().wire.note_tx(encoded.len() as u64, encoded.len() as u64);
+                    if let Some((tid, parent)) = a.traced.remove(&resp.req_id) {
+                        trace::record(
+                            tid,
+                            parent,
+                            Stage::RespEncode,
+                            encoded.len() as u32,
+                            t0,
+                            trace::now_us(),
+                        );
+                    }
+                }
                 conn.outbuf.extend(&encoded);
                 if seen.insert(conn_id) {
                     touched.push(conn_id);
@@ -913,6 +1008,11 @@ impl EventLoop {
                         // exported per-session health row reads degraded
                         // until a RECONNECT recovers it.
                         a.health.note_failure();
+                        eprintln!(
+                            "[serve] session {} detached: {}",
+                            a.session_id,
+                            a.outbox.stats().summary()
+                        );
                         self.state.metrics.sessions_detached.fetch_add(1, Ordering::Relaxed);
                     }
                 }

@@ -26,11 +26,13 @@
 use super::failover::{availability_ratio, FailoverClient, FailoverConfig};
 use super::model::{make_input_into, FrameScratch, MODEL_NAME, TOKEN_BYTES, TOKEN_FLOATS};
 use super::protocol::{
-    connect_client, read_response, write_frame, write_request, Handshake, ReqKind, RespStatus,
+    connect_client, encode_trace_prefix, read_response, write_frame, write_request, Handshake,
+    ReqKind, RespStatus, TRACE_PREFIX,
 };
 use crate::runtime::metrics::{LatencyHistogram, WireCounters};
 use crate::runtime::netsim::{LinkModel, LinkShaper};
-use crate::runtime::wire::WireDtype;
+use crate::runtime::trace::{self, Stage};
+use crate::runtime::wire::{self, WireDtype};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -59,6 +61,13 @@ pub struct LoadgenConfig {
     /// advertises the matching capability bits and the server may
     /// downgrade (an f32-only server always can).
     pub wire: WireDtype,
+    /// Flight-recorder tracing: advertise `CAP_TRACE` in the handshake
+    /// and send sampled requests as traced-infer frames so the server's
+    /// spans land in the same trace as the client's (strict client
+    /// only; the resilient client never traces).
+    pub trace: bool,
+    /// Trace one in N requests per client (0/1 = every request).
+    pub trace_sample: u64,
 }
 
 impl LoadgenConfig {
@@ -82,6 +91,8 @@ impl Default for LoadgenConfig {
             resilient: false,
             chaos_kill_every: 0,
             wire: WireDtype::F32,
+            trace: false,
+            trace_sample: 1,
         }
     }
 }
@@ -97,6 +108,8 @@ struct Tally {
     reconnects: u64,
     resumed: u64,
     replays: u64,
+    /// Requests sent as traced-infer frames (span context on the wire).
+    traced: u64,
     /// Data-plane bytes this client moved (and their f32 equivalents).
     bytes_tx: u64,
     bytes_rx: u64,
@@ -117,11 +130,16 @@ pub struct LoadReport {
     pub reconnects: u64,
     pub sessions_resumed: u64,
     pub replays_received: u64,
+    /// Requests sent as traced-infer frames across all clients.
+    pub traced: u64,
     pub wall: Duration,
     pub latency: Arc<LatencyHistogram>,
     /// Aggregate link-byte accounting across all clients (actual vs
     /// f32-equivalent; the compression-ratio gauge of the summary).
     pub wire: WireCounters,
+    /// Per-session tallies, one JSON row per client in spawn order —
+    /// the client-side mirror of the server's per-session goodbye line.
+    pub per_session: Vec<Json>,
 }
 
 impl LoadReport {
@@ -164,10 +182,12 @@ impl LoadReport {
             ("replays_received", Json::from(self.replays_received)),
             ("service_availability", Json::from(self.service_availability())),
             ("link_availability", Json::from(self.link_availability())),
+            ("traced", Json::from(self.traced)),
             ("wall_ms", Json::from(self.wall.as_secs_f64() * 1e3)),
             ("requests_per_sec", Json::from(self.requests_per_sec())),
             ("latency", self.latency.to_json()),
             ("wire", self.wire.to_json()),
+            ("sessions", Json::Arr(self.per_session.clone())),
         ])
     }
 
@@ -209,6 +229,9 @@ impl LoadReport {
                 self.wire.compression_ratio()
             ));
         }
+        if self.traced > 0 {
+            line.push_str(&format!("; {} traced", self.traced));
+        }
         line
     }
 }
@@ -218,12 +241,20 @@ impl LoadReport {
 /// *requested* dtype — the server's reply decides.
 fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) -> Result<Tally> {
     let mut tally = Tally::default();
-    let hello = Handshake::v3(&cfg.model, cfg.pp, &format!("loadgen-{index}"), cfg.wire.caps());
+    let caps =
+        if cfg.trace { cfg.wire.caps() | wire::CAP_TRACE } else { cfg.wire.caps() };
+    let hello = Handshake::v3(&cfg.model, cfg.pp, &format!("loadgen-{index}"), caps);
     let (mut stream, reply, codec) = connect_client(&cfg.addr, &hello, None)
         .with_context(|| format!("client {index} connecting to {}", cfg.addr))?;
     if !reply.accepted {
         tally.session_rejected = true;
         return Ok(tally);
+    }
+    // Trace only what the server granted: a v2 or trace-disabled server
+    // never sees a traced-infer frame it could not parse.
+    let tracing = cfg.trace && reply.trace && trace::enabled();
+    if tracing {
+        trace::warm_recorder();
     }
     let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
     // Per-session reusable frame buffers: the request loop re-derives
@@ -232,9 +263,21 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
     let mut input = vec![0.0f32; TOKEN_FLOATS];
     let mut payload = Vec::new();
     let mut expected = Vec::new();
+    let mut framed = Vec::new(); // trace-prefixed request scratch
     for r in 0..cfg.requests {
+        let traced = tracing && trace::should_trace(r);
+        let trace_id = if traced { trace::next_trace_id() } else { 0 };
+        // Root span of the whole request; server-side spans hang under
+        // it via the on-wire context, so one inference renders as one
+        // tree spanning both processes.
+        let root = trace::span(trace_id, 0, Stage::Request, index as u32);
         make_input_into(frame_seed(cfg.seed, index, r), &mut input);
-        scratch.frame_codec_into(&input, cfg.pp, codec, &mut payload, &mut expected);
+        {
+            let enc = trace::span(trace_id, root.id(), Stage::ClientEncode, 0);
+            trace::set_current(trace_id, enc.id());
+            scratch.frame_codec_into(&input, cfg.pp, codec, &mut payload, &mut expected);
+            trace::clear_current();
+        }
         if let Some(s) = &shaper {
             // Serialization pacing + one-way propagation delay, exactly
             // like a TX FIFO riding this link — the coded payload's
@@ -245,14 +288,33 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
         let t0 = Instant::now();
         // Sequence numbers start at 1 (the protocol reserves 0 for
         // "nothing acked" in RECONNECT last_ack fields).
-        if write_request(&mut stream, r + 1, &payload).is_err() {
+        let sent_ok = {
+            let _send = trace::span(trace_id, root.id(), Stage::ClientSend, payload.len() as u32);
+            if traced {
+                framed.clear();
+                framed.extend_from_slice(&encode_trace_prefix(trace_id, root.id()));
+                framed.extend_from_slice(&payload);
+                write_frame(&mut stream, r + 1, ReqKind::TracedInfer, &framed).is_ok()
+            } else {
+                write_request(&mut stream, r + 1, &payload).is_ok()
+            }
+        };
+        if !sent_ok {
             break; // connection gone before the request left
         }
         tally.sent += 1;
-        tally.bytes_tx += (payload.len() + 13) as u64;
-        tally.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
-        match read_response(&mut stream) {
+        let prefix = if traced { TRACE_PREFIX } else { 0 };
+        tally.traced += traced as u64;
+        tally.bytes_tx += (payload.len() + prefix + 13) as u64;
+        tally.f32_equiv_tx += (TOKEN_BYTES + prefix + 13) as u64;
+        let resp = {
+            let _wait = trace::span(trace_id, root.id(), Stage::ClientWait, 0);
+            read_response(&mut stream)
+        };
+        match resp {
             Ok(Some(resp)) => {
+                let _dec =
+                    trace::span(trace_id, root.id(), Stage::ClientDecode, resp.body.len() as u32);
                 tally.bytes_rx += (resp.body.len() + 13) as u64;
                 tally.f32_equiv_rx += (resp.body.len() + 13) as u64;
                 match resp.status {
@@ -370,6 +432,12 @@ fn frame_seed(seed: u64, index: usize, r: u64) -> u64 {
 
 /// Drive `cfg.clients` concurrent sessions to completion.
 pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.trace {
+        // Process-global: the client threads below share the recorder
+        // registry, so the caller drains one set of client-side spans.
+        trace::set_sampling(cfg.trace_sample);
+        trace::set_enabled(true);
+    }
     let latency = Arc::new(LatencyHistogram::new());
     let resilient = cfg.is_resilient();
     let t0 = Instant::now();
@@ -401,15 +469,17 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         reconnects: 0,
         sessions_resumed: 0,
         replays_received: 0,
+        traced: 0,
         wall: Duration::ZERO,
         latency,
         wire: WireCounters::new(),
+        per_session: Vec::with_capacity(cfg.clients),
     };
     // Join EVERY client before reporting or erroring — returning early
     // would leave live clients hammering the server behind the caller's
     // back and discard their tallies.
     let mut first_err: Option<anyhow::Error> = None;
-    for h in handles {
+    for (index, h) in handles.into_iter().enumerate() {
         match h.join() {
             Ok(Ok(tally)) => {
                 report.sessions_rejected += tally.session_rejected as u64;
@@ -421,8 +491,20 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 report.reconnects += tally.reconnects;
                 report.sessions_resumed += tally.resumed;
                 report.replays_received += tally.replays;
+                report.traced += tally.traced;
                 report.wire.note_tx(tally.bytes_tx, tally.f32_equiv_tx);
                 report.wire.note_rx(tally.bytes_rx, tally.f32_equiv_rx);
+                report.per_session.push(Json::from_pairs(vec![
+                    ("client", Json::from(index)),
+                    ("sent", Json::from(tally.sent)),
+                    ("ok", Json::from(tally.ok)),
+                    ("rejected", Json::from(tally.rejected)),
+                    ("errors", Json::from(tally.errors)),
+                    ("traced", Json::from(tally.traced)),
+                    ("replays", Json::from(tally.replays)),
+                    ("bytes_tx", Json::from(tally.bytes_tx)),
+                    ("bytes_rx", Json::from(tally.bytes_rx)),
+                ]));
             }
             Ok(Err(e)) => first_err = first_err.or(Some(e)),
             Err(_) => {
@@ -582,9 +664,11 @@ mod tests {
             reconnects: 1,
             sessions_resumed: 1,
             replays_received: 0,
+            traced: 0,
             wall: Duration::from_millis(100),
             latency: Arc::new(LatencyHistogram::new()),
             wire: WireCounters::new(),
+            per_session: Vec::new(),
         };
         assert_eq!(r.lost(), 1);
         assert!((r.requests_per_sec() - 70.0).abs() < 1e-6);

@@ -21,6 +21,20 @@ pub struct PlanMetrics {
     pub latency: LatencyHistogram,
 }
 
+/// Completion counters for ONE worker thread.  Each worker owns its
+/// shard exclusively (no cross-core cache-line contention on the hot
+/// path); totals exist only as sums taken at scrape/JSON time.  This is
+/// the counter layout the thread-per-core sharding refactor needs —
+/// nothing global is written per request.
+#[derive(Debug, Default)]
+pub struct WorkerMetrics {
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    /// Time spent executing inferences, µs.
+    pub busy_us: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
 #[derive(Debug, Default)]
 pub struct ServingMetrics {
     // Admission.
@@ -31,9 +45,8 @@ pub struct ServingMetrics {
     pub batches_dispatched: AtomicU64,
     pub requests_batched: AtomicU64,
     pub queue_high_water: AtomicU64,
-    // Completion (sum over plans, kept separately for cheap reads).
-    pub requests_completed: AtomicU64,
-    pub request_errors: AtomicU64,
+    // Completion: sharded per worker, merged only at read time.
+    workers: Mutex<Vec<Arc<WorkerMetrics>>>,
     // Resilience (protocol v2: detach/resume, replay, hot-swap).
     pub sessions_detached: AtomicU64,
     pub sessions_resumed: AtomicU64,
@@ -65,6 +78,26 @@ impl ServingMetrics {
         self.per_plan.lock().unwrap().entry(key.clone()).or_default().clone()
     }
 
+    /// Worker `index`'s counter shard, creating shards up to `index` on
+    /// first use (worker spawn time, never per request).
+    pub fn worker(&self, index: usize) -> Arc<WorkerMetrics> {
+        let mut workers = self.workers.lock().unwrap();
+        while workers.len() <= index {
+            workers.push(Arc::default());
+        }
+        workers[index].clone()
+    }
+
+    /// Total completed requests, merged across worker shards.
+    pub fn requests_completed(&self) -> u64 {
+        self.workers.lock().unwrap().iter().map(|w| w.completed.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total failed requests, merged across worker shards.
+    pub fn request_errors(&self) -> u64 {
+        self.workers.lock().unwrap().iter().map(|w| w.errors.load(Ordering::Relaxed)).sum()
+    }
+
     pub fn note_queue_depth(&self, depth: u64) {
         self.queue_high_water.fetch_max(depth, Ordering::Relaxed);
     }
@@ -74,15 +107,25 @@ impl ServingMetrics {
         self.requests_batched.fetch_add(occupancy as u64, Ordering::Relaxed);
     }
 
-    pub fn note_completed(&self, plan: &PlanMetrics, latency: Duration) {
+    /// Record one completion on `worker`'s shard (and the per-plan
+    /// histogram).  No shared counter is touched.
+    pub fn note_completed(
+        &self,
+        worker: &WorkerMetrics,
+        plan: &PlanMetrics,
+        latency: Duration,
+        busy: Duration,
+    ) {
         plan.completed.fetch_add(1, Ordering::Relaxed);
         plan.latency.record(latency);
-        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        worker.completed.fetch_add(1, Ordering::Relaxed);
+        worker.latency.record(latency);
+        worker.busy_us.fetch_add(busy.as_micros() as u64, Ordering::Relaxed);
     }
 
-    pub fn note_error(&self, plan: &PlanMetrics) {
+    pub fn note_error(&self, worker: &WorkerMetrics, plan: &PlanMetrics) {
         plan.errors.fetch_add(1, Ordering::Relaxed);
-        self.request_errors.fetch_add(1, Ordering::Relaxed);
+        worker.errors.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Mean requests per dispatched batch (the coalescing win).
@@ -109,12 +152,29 @@ impl ServingMetrics {
                 ])
             })
             .collect();
+        // Scrape-time merge: the only place worker shards are summed.
+        let workers: Vec<Json> = self
+            .workers
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                Json::from_pairs(vec![
+                    ("worker", Json::from(i)),
+                    ("completed", Json::from(w.completed.load(Ordering::Relaxed))),
+                    ("errors", Json::from(w.errors.load(Ordering::Relaxed))),
+                    ("busy_us", Json::from(w.busy_us.load(Ordering::Relaxed))),
+                    ("latency", w.latency.to_json()),
+                ])
+            })
+            .collect();
         Json::from_pairs(vec![
             ("sessions_admitted", Json::from(self.sessions_admitted.load(Ordering::Relaxed))),
             ("sessions_rejected", Json::from(self.sessions_rejected.load(Ordering::Relaxed))),
-            ("requests_completed", Json::from(self.requests_completed.load(Ordering::Relaxed))),
+            ("requests_completed", Json::from(self.requests_completed())),
             ("requests_rejected", Json::from(self.requests_rejected.load(Ordering::Relaxed))),
-            ("request_errors", Json::from(self.request_errors.load(Ordering::Relaxed))),
+            ("request_errors", Json::from(self.request_errors())),
             ("sessions_detached", Json::from(self.sessions_detached.load(Ordering::Relaxed))),
             ("sessions_resumed", Json::from(self.sessions_resumed.load(Ordering::Relaxed))),
             ("sessions_reaped", Json::from(self.sessions_reaped.load(Ordering::Relaxed))),
@@ -126,6 +186,7 @@ impl ServingMetrics {
             ("wire", self.wire.to_json()),
             ("queue_high_water", Json::from(self.queue_high_water.load(Ordering::Relaxed))),
             ("batch_occupancy", Json::from(self.batch_occupancy())),
+            ("workers", Json::Arr(workers)),
             ("plans", Json::Arr(plans)),
         ])
     }
@@ -142,9 +203,32 @@ mod tests {
         let a = m.plan(&key);
         let b = m.plan(&key);
         assert!(Arc::ptr_eq(&a, &b));
-        m.note_completed(&a, Duration::from_millis(2));
+        let w = m.worker(0);
+        m.note_completed(&w, &a, Duration::from_millis(2), Duration::from_millis(1));
         assert_eq!(b.completed.load(Ordering::Relaxed), 1);
-        assert_eq!(m.requests_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.requests_completed(), 1);
+    }
+
+    #[test]
+    fn worker_shards_merge_at_read_time() {
+        let m = ServingMetrics::new();
+        let plan = m.plan(&PlanKey::new("synthetic", 2));
+        let w0 = m.worker(0);
+        let w2 = m.worker(2);
+        assert!(Arc::ptr_eq(&w0, &m.worker(0)), "shards are stable");
+        m.note_completed(&w0, &plan, Duration::from_millis(2), Duration::from_millis(1));
+        m.note_completed(&w2, &plan, Duration::from_millis(4), Duration::from_millis(3));
+        m.note_error(&w2, &plan);
+        assert_eq!(m.requests_completed(), 2);
+        assert_eq!(m.request_errors(), 1);
+        assert_eq!(w0.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(w2.busy_us.load(Ordering::Relaxed), 3_000);
+        let j = m.to_json();
+        let rows = j.get("workers").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 3, "index 1 exists but is idle");
+        assert_eq!(rows[1].get("completed").unwrap().int().unwrap(), 0);
+        assert_eq!(rows[2].get("errors").unwrap().int().unwrap(), 1);
+        assert_eq!(j.get("requests_completed").unwrap().int().unwrap(), 2);
     }
 
     #[test]
@@ -162,7 +246,8 @@ mod tests {
     fn json_snapshot_has_plan_rows() {
         let m = ServingMetrics::new();
         let p = m.plan(&PlanKey::new("synthetic", 1));
-        m.note_completed(&p, Duration::from_millis(5));
+        let w = m.worker(0);
+        m.note_completed(&w, &p, Duration::from_millis(5), Duration::from_millis(5));
         let j = m.to_json();
         assert_eq!(j.get("requests_completed").unwrap().int().unwrap(), 1);
         assert_eq!(j.get("plans").unwrap().arr().unwrap().len(), 1);

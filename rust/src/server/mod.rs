@@ -63,6 +63,7 @@ pub mod workers;
 
 use crate::compiler::PlanCache;
 use crate::runtime::reactor::WakeHandle;
+use crate::runtime::trace;
 use crate::runtime::wire::{Precision, CAP_F16, CAP_I8};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -71,6 +72,7 @@ use conn::{EventLoop, EventLoopCfg};
 use metrics::ServingMetrics;
 use model::ServerModelPlan;
 use session::SessionManager;
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -118,6 +120,18 @@ pub struct ServerConfig {
     /// chain identically; v2 clients only interoperate with an f32
     /// server (their digests assume f32 stages).
     pub precision: Precision,
+    /// Turn the flight recorder on at start (`--trace`): the handshake
+    /// grants the trace capability to v3 clients that request it, and
+    /// every span site on the serving path records.
+    pub trace: bool,
+    /// Record every Nth traced request (`--trace-sample`, min 1).
+    pub trace_sample: u64,
+    /// Bind a plaintext TCP scrape endpoint (`--metrics-addr`) that
+    /// answers every connect with one JSON snapshot — metrics, wire
+    /// counters, per-session rows, and the drained trace spans — then
+    /// closes.  `None` (the default) spawns nothing, keeping the fixed
+    /// thread inventory of a plain server.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -136,6 +150,9 @@ impl Default for ServerConfig {
             write_high_water: 1 << 20,
             wire_caps: CAP_I8 | CAP_F16,
             precision: Precision::F32,
+            trace: false,
+            trace_sample: 1,
+            metrics_addr: None,
         }
     }
 }
@@ -171,6 +188,8 @@ pub struct Server {
     dispatch_handle: Option<JoinHandle<()>>,
     pool: Option<WorkerPool>,
     worker_count: usize,
+    /// Bound scrape endpoint + its thread (only with `metrics_addr`).
+    metrics_endpoint: Option<(SocketAddr, JoinHandle<()>)>,
 }
 
 /// Socket read deadline for completing a handshake (reactor timer; an
@@ -180,6 +199,10 @@ const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
 impl Server {
     pub fn start(cfg: ServerConfig) -> Result<Server> {
+        if cfg.trace {
+            trace::set_sampling(cfg.trace_sample);
+            trace::set_enabled(true);
+        }
         let listener = TcpListener::bind(cfg.addr.as_str())
             .with_context(|| format!("binding server on {}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -216,8 +239,19 @@ impl Server {
             std::thread::Builder::new()
                 .name("serve-dispatch".into())
                 .spawn(move || {
-                    while let Some(batch) = state.queue.pop_batch(max_batch, linger) {
+                    while let Some(mut batch) = state.queue.pop_batch(max_batch, linger) {
                         state.metrics.note_batch(batch.len());
+                        // Stamp the dispatch edge on traced requests:
+                        // recv..dispatch is the batch-linger span,
+                        // dispatch..worker-pop the queue-wait span.
+                        if trace::enabled() {
+                            let now = trace::now_us();
+                            for req in &mut batch {
+                                if req.trace_id != 0 {
+                                    req.dispatched_us = now;
+                                }
+                            }
+                        }
                         dispatch.dispatch(batch);
                     }
                     dispatch.shutdown_workers();
@@ -259,6 +293,24 @@ impl Server {
             }
         };
 
+        // Scrape endpoint: strictly opt-in — a plain server keeps its
+        // fixed reactor+dispatcher+workers inventory.
+        let metrics_endpoint = match &cfg.metrics_addr {
+            None => None,
+            Some(maddr) => {
+                let mlistener = TcpListener::bind(maddr.as_str())
+                    .with_context(|| format!("binding metrics endpoint on {maddr}"))?;
+                let bound = mlistener.local_addr()?;
+                mlistener.set_nonblocking(true).context("setting metrics endpoint non-blocking")?;
+                let mstate = state.clone();
+                let handle = std::thread::Builder::new()
+                    .name("serve-metrics".into())
+                    .spawn(move || metrics_endpoint_main(mlistener, mstate))
+                    .context("spawning metrics endpoint")?;
+                Some((bound, handle))
+            }
+        };
+
         Ok(Server {
             addr,
             state,
@@ -267,6 +319,7 @@ impl Server {
             dispatch_handle: Some(dispatch_handle),
             pool: Some(pool),
             worker_count: workers,
+            metrics_endpoint,
         })
     }
 
@@ -287,10 +340,17 @@ impl Server {
     }
 
     /// The server's fixed thread inventory: 1 reactor + 1 dispatcher +
-    /// the worker pool.  Invariant under session count — the property
-    /// the session-scale bench and CI assert.
+    /// the worker pool (+1 scrape thread only when `metrics_addr` is
+    /// configured).  Invariant under session count — the property the
+    /// session-scale bench and CI assert.
     pub fn thread_count(&self) -> usize {
-        2 + self.worker_count
+        2 + self.worker_count + usize::from(self.metrics_endpoint.is_some())
+    }
+
+    /// Bound address of the `--metrics-addr` scrape endpoint, if one
+    /// was configured (the actual port, for `addr: ...:0` configs).
+    pub fn metrics_endpoint_addr(&self) -> Option<SocketAddr> {
+        self.metrics_endpoint.as_ref().map(|(addr, _)| *addr)
     }
 
     /// Metrics snapshot (also embeds the plan-cache counters and the
@@ -311,6 +371,9 @@ impl Server {
         // loop, closes every connection (sessions freed), and exits.
         self.state.shutting_down.store(true, Ordering::SeqCst);
         self.wake.wake();
+        if let Some((_, h)) = self.metrics_endpoint.take() {
+            let _ = h.join();
+        }
         if let Some(h) = self.reactor_handle.take() {
             let _ = h.join();
         }
@@ -339,6 +402,49 @@ impl Drop for Server {
         self.state.sessions.shutdown_all();
         self.state.queue.close();
     }
+}
+
+/// The scrape thread: answer every connect with one JSON snapshot and
+/// close.  A raw-TCP "write JSON, shut down the write side" exchange —
+/// `nc`/a 20-line client can scrape it, no HTTP stack needed.  Trace
+/// spans are **drained** into the snapshot, so each scrape hands out
+/// the spans recorded since the previous one exactly once.
+fn metrics_endpoint_main(listener: TcpListener, state: Arc<ServerState>) {
+    while !state.shutting_down.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut sock, _peer)) => {
+                let _ = sock.set_nonblocking(false);
+                let body = scrape_json(&state).to_string();
+                let _ = sock.write_all(body.as_bytes());
+                let _ = sock.shutdown(std::net::Shutdown::Write);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// One scrape payload: the serving metrics snapshot plus session rows
+/// and the flight recorder's drained spans/summary.
+fn scrape_json(state: &ServerState) -> Json {
+    let mut j = snapshot_json(state);
+    let spans = trace::drain();
+    if let Json::Obj(map) = &mut j {
+        map.insert("active_sessions".into(), Json::from(state.sessions.active_count()));
+        map.insert("detached_sessions".into(), Json::from(state.sessions.detached_count()));
+        map.insert("sessions".into(), state.sessions.to_json());
+        map.insert(
+            "trace".into(),
+            Json::from_pairs(vec![
+                ("enabled", Json::from(trace::enabled())),
+                ("summary", trace::summary_json(&spans)),
+                ("spans", trace::spans_json(&spans)),
+            ]),
+        );
+    }
+    j
 }
 
 /// Serving metrics + plan-cache counters as one JSON object.

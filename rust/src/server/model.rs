@@ -33,6 +33,7 @@ use crate::platform::{Mapping, PlatformGraph};
 use crate::runtime::device::DeviceModel;
 use crate::runtime::linalg;
 use crate::runtime::netsim::LinkModel;
+use crate::runtime::trace::{self, Stage};
 use crate::runtime::wire::{self, Precision, SessionCodec, WireDtype};
 use crate::util::arena::{Arena, ArenaBuf};
 use crate::util::rng::Rng;
@@ -315,6 +316,9 @@ impl FrameScratch {
     }
 
     fn apply_stage(&mut self, k: usize, precision: Precision) {
+        // Under a traced client-encode context each local stage shows up
+        // as its own kernel span; a no-op guard otherwise.
+        let _kernel = trace::span_current(Stage::Kernel, k as u32);
         let FrameScratch { x, h, y, xq, hq, .. } = self;
         match precision {
             Precision::F32 => apply_stage_scratch(k, x, h, y),
@@ -581,6 +585,9 @@ impl EngineShard {
             wire::decode_activation_into(dtype, payload, x)?;
         }
         for &k in &self.plan.server_stages {
+            // Per-layer decomposition: one kernel span per stage, parented
+            // under the worker's infer span via the propagated context.
+            let _kernel = trace::span_current(Stage::Kernel, k as u32);
             let (x, h, y) = self.arena.tri_mut(self.bx, self.bh, self.by);
             match self.precision {
                 Precision::F32 => apply_stage_scratch(k, x, h, y),

@@ -31,7 +31,11 @@
 //! frame      (client -> server):
 //!   [u64 seq][u8 kind][u32 len][payload]
 //!   kind: 0 = infer, 1 = switch (payload [u16 new_pp]), 2 = ping,
-//!         3 = bye (clean close; frees the session slot immediately)
+//!         3 = bye (clean close; frees the session slot immediately),
+//!         4 = traced infer: payload is [u64 trace_id][u32 parent_span]
+//!             followed by the activation bytes (flight-recorder span
+//!             context, `runtime::trace`; only sent on sessions whose
+//!             handshake negotiated `CAP_TRACE`)
 //!   infer payloads are wire-coded activations (`runtime::wire`) at the
 //!   session's negotiated dtype; v2 sessions always carry raw f32.
 //! response   (server -> client):
@@ -80,6 +84,13 @@ pub const MAX_PAYLOAD: u32 = 64 << 20;
 const MAX_NAME: u16 = 1024;
 /// Handshake flag bit 0: this is a RECONNECT to a detached session.
 const FLAG_RESUME: u8 = 1;
+/// Bytes of span context ahead of a traced-infer payload:
+/// `[u64 trace_id][u32 parent_span]`.
+pub const TRACE_PREFIX: usize = 12;
+/// High bit of the v3 reply's wire-dtype byte: the server accepted the
+/// client's `CAP_TRACE` and will honor traced-infer frames.  The dtype
+/// itself only ever uses the low bits.
+const REPLY_TRACE_BIT: u8 = 0x80;
 
 /// RECONNECT parameters: which session to re-attach (authenticated by
 /// the token its accept reply issued), and the highest sequence number
@@ -146,6 +157,10 @@ pub struct HandshakeReply {
     /// Negotiated wire dtype + server compute precision.  `Some` on the
     /// v3 reply layout, `None` on v2 (which implies f32/f32).
     pub codec: Option<SessionCodec>,
+    /// Server accepted the client's `CAP_TRACE`: traced-infer frames
+    /// (span context ahead of the payload) are honored on this session.
+    /// Always `false` on v2 (the reply has no byte to carry it).
+    pub trace: bool,
     pub message: String,
 }
 
@@ -168,6 +183,10 @@ pub enum ReqKind {
     /// Clean close: the session slot is freed immediately (no
     /// detach/linger — an abrupt disconnect is what lingers).
     Bye,
+    /// One inference request carrying flight-recorder span context:
+    /// payload is `[u64 trace_id][u32 parent_span]` + the token.  Only
+    /// valid on sessions that negotiated `CAP_TRACE`.
+    TracedInfer,
 }
 
 impl ReqKind {
@@ -177,6 +196,7 @@ impl ReqKind {
             ReqKind::Switch => 1,
             ReqKind::Ping => 2,
             ReqKind::Bye => 3,
+            ReqKind::TracedInfer => 4,
         }
     }
 
@@ -186,9 +206,30 @@ impl ReqKind {
             1 => Ok(ReqKind::Switch),
             2 => Ok(ReqKind::Ping),
             3 => Ok(ReqKind::Bye),
+            4 => Ok(ReqKind::TracedInfer),
             v => bail!("bad frame kind byte {v}"),
         }
     }
+}
+
+/// Serialize traced-infer span context (prepended to the activation
+/// payload of a [`ReqKind::TracedInfer`] frame).
+pub fn encode_trace_prefix(trace_id: u64, parent_span: u32) -> [u8; TRACE_PREFIX] {
+    let mut buf = [0u8; TRACE_PREFIX];
+    buf[..8].copy_from_slice(&trace_id.to_le_bytes());
+    buf[8..].copy_from_slice(&parent_span.to_le_bytes());
+    buf
+}
+
+/// Split a traced-infer payload into `(trace_id, parent_span,
+/// activation bytes)`.
+pub fn split_trace_prefix(payload: &[u8]) -> Result<(u64, u32, &[u8])> {
+    if payload.len() < TRACE_PREFIX {
+        bail!("traced-infer payload of {} bytes lacks the span context", payload.len());
+    }
+    let trace_id = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let parent = u32::from_le_bytes(payload[8..TRACE_PREFIX].try_into().unwrap());
+    Ok((trace_id, parent, &payload[TRACE_PREFIX..]))
 }
 
 /// One decoded client frame.
@@ -371,7 +412,10 @@ pub fn encode_handshake_reply(r: &HandshakeReply) -> Vec<u8> {
     buf.extend_from_slice(&r.session_id.to_le_bytes());
     buf.extend_from_slice(&r.token.to_le_bytes());
     if let Some(codec) = &r.codec {
-        buf.push(codec.wire.to_u8());
+        // Trace acceptance rides the spare high bit of the dtype byte,
+        // so the v3 reply layout is unchanged in length.
+        let trace_bit = if r.trace { REPLY_TRACE_BIT } else { 0 };
+        buf.push(codec.wire.to_u8() | trace_bit);
         buf.push(codec.precision.to_u8());
     }
     buf.extend_from_slice(&(message.len() as u16).to_le_bytes());
@@ -396,15 +440,19 @@ pub fn read_handshake_reply_v(stream: &mut TcpStream, version: u16) -> Result<Ha
     };
     let session_id = u64::from_le_bytes(fixed[1..9].try_into().unwrap());
     let token = u64::from_le_bytes(fixed[9..17].try_into().unwrap());
-    let codec = if version >= VERSION {
+    let (codec, trace) = if version >= VERSION {
         let mut c = [0u8; 2];
         stream.read_exact(&mut c).context("handshake reply codec")?;
-        Some(SessionCodec { wire: WireDtype::from_u8(c[0])?, precision: Precision::from_u8(c[1])? })
+        let codec = SessionCodec {
+            wire: WireDtype::from_u8(c[0] & !REPLY_TRACE_BIT)?,
+            precision: Precision::from_u8(c[1])?,
+        };
+        (Some(codec), c[0] & REPLY_TRACE_BIT != 0)
     } else {
-        None
+        (None, false)
     };
     let message = read_str(stream)?;
-    Ok(HandshakeReply { accepted, resumed, session_id, token, codec, message })
+    Ok(HandshakeReply { accepted, resumed, session_id, token, codec, trace, message })
 }
 
 /// Read a legacy v2 reply (no codec bytes).
@@ -752,6 +800,7 @@ mod tests {
             session_id: 42,
             token: 0xfeed_beef,
             codec: None,
+            trace: false,
             message: "ok".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -773,6 +822,7 @@ mod tests {
             session_id: 7,
             token: 1234,
             codec: Some(SessionCodec { wire: WireDtype::I8, precision: Precision::Int8 }),
+            trace: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -802,6 +852,7 @@ mod tests {
             session_id: 1,
             token: 2,
             codec: None,
+            trace: false,
             message: String::new(),
         };
         assert_eq!(encode_handshake_reply(&reply).len(), 17 + 2);
@@ -820,6 +871,7 @@ mod tests {
             session_id: 99,
             token: 7777,
             codec: Some(SessionCodec { wire: WireDtype::F16, precision: Precision::F32 }),
+            trace: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -838,6 +890,7 @@ mod tests {
             session_id: 0,
             token: 0,
             codec: None,
+            trace: false,
             message: "server at session capacity (8 active)".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -855,6 +908,7 @@ mod tests {
             session_id: 0,
             token: 0,
             codec: None,
+            trace: false,
             message: "x".repeat(5000),
         };
         write_handshake_reply(&mut s, &reply).unwrap();

@@ -24,6 +24,7 @@
 use super::protocol::{Response, RespStatus};
 use crate::compiler::PlanKey;
 use crate::runtime::health::{HealthConfig, HealthMonitor};
+use crate::runtime::metrics::{LatencyHistogram, WireCounters};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, BTreeSet};
 use std::net::TcpStream;
@@ -47,6 +48,52 @@ pub trait ResponseSink: Send {
 impl ResponseSink for mpsc::Sender<Response> {
     fn send(&self, resp: Response) -> bool {
         mpsc::Sender::send(self, resp).is_ok()
+    }
+}
+
+/// Per-session observability tallies, reported in the BYE/detach
+/// goodbye line and the per-session metrics rows.  All atomics — the
+/// reactor and the workers write here without taking the outbox lock.
+#[derive(Debug, Default)]
+pub struct SessionStats {
+    /// Data-plane bytes this session moved (inference frames and their
+    /// responses; the per-server `ServingMetrics::wire` additionally
+    /// counts control frames).
+    pub wire: WireCounters,
+    /// Terminal ok/error responses delivered.
+    pub completed: AtomicU64,
+    /// Re-sent sequences answered from the replay ring.
+    pub replayed: AtomicU64,
+    /// End-to-end request latency (admission to completion) as the
+    /// worker measured it.
+    pub latency: LatencyHistogram,
+}
+
+impl SessionStats {
+    /// One-line summary for the goodbye log:
+    /// `42 completed, 1 replayed, tx 1.3KB, rx 54.0KB, p50 1.2ms p99 3.4ms`.
+    pub fn summary(&self) -> String {
+        fn kb(bytes: u64) -> String {
+            format!("{:.1}KB", bytes as f64 / 1024.0)
+        }
+        format!(
+            "{} completed, {} replayed, tx {}, rx {}, p50 {:.1}ms p99 {:.1}ms",
+            self.completed.load(Ordering::Relaxed),
+            self.replayed.load(Ordering::Relaxed),
+            kb(self.wire.bytes_tx.load(Ordering::Relaxed)),
+            kb(self.wire.bytes_rx.load(Ordering::Relaxed)),
+            self.latency.quantile_ms(0.50),
+            self.latency.quantile_ms(0.99),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("completed", Json::from(self.completed.load(Ordering::Relaxed))),
+            ("replayed", Json::from(self.replayed.load(Ordering::Relaxed))),
+            ("wire", self.wire.to_json()),
+            ("latency", self.latency.to_json()),
+        ])
     }
 }
 
@@ -82,6 +129,7 @@ pub struct SessionOutbox {
     session_id: u64,
     ring_capacity: usize,
     inner: Mutex<OutboxState>,
+    stats: SessionStats,
 }
 
 impl SessionOutbox {
@@ -95,11 +143,18 @@ impl SessionOutbox {
                 tx: None,
                 epoch: 0,
             }),
+            stats: SessionStats::default(),
         })
     }
 
     pub fn session_id(&self) -> u64 {
         self.session_id
+    }
+
+    /// This session's observability tallies (lock-free; written by the
+    /// reactor and workers, read at goodbye/scrape time).
+    pub fn stats(&self) -> &SessionStats {
+        &self.stats
     }
 
     /// Dedupe one incoming `Infer` sequence (see [`Admit`]).  A replayed
@@ -109,6 +164,7 @@ impl SessionOutbox {
         if let Some(resp) = s.ring.get(&seq) {
             let resp = resp.clone();
             Self::forward(&mut s, resp);
+            self.stats.replayed.fetch_add(1, Ordering::Relaxed);
             return Admit::Replayed;
         }
         if s.in_flight.contains(&seq) {
@@ -126,6 +182,7 @@ impl SessionOutbox {
         let mut s = self.inner.lock().unwrap();
         s.in_flight.remove(&resp.req_id);
         if resp.status != RespStatus::Rejected {
+            self.stats.completed.fetch_add(1, Ordering::Relaxed);
             s.ring.insert(resp.req_id, resp.clone());
             while s.ring.len() > self.ring_capacity {
                 let oldest = *s.ring.keys().next().unwrap();
@@ -570,6 +627,7 @@ impl SessionManager {
                         }),
                     ),
                     ("replay_depth", Json::from(s.outbox.replay_depth())),
+                    ("stats", s.outbox.stats().to_json()),
                     ("health", s.health.to_json()),
                 ])
             })

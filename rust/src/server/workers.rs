@@ -24,17 +24,18 @@
 //! heap allocation beyond the response body the replay ring retains.
 
 use super::batch::PendingRequest;
-use super::metrics::ServingMetrics;
+use super::metrics::{ServingMetrics, WorkerMetrics};
 use super::model::EngineShard;
 use super::protocol::Response;
 use super::spsc;
 use crate::compiler::PlanKey;
 use crate::platform::affinity;
+use crate::runtime::trace::{self, Stage};
 use crate::runtime::wire::Precision;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub enum WorkItem {
     Batch(Vec<PendingRequest>),
@@ -175,6 +176,12 @@ fn worker_main(
             eprintln!("serve-worker-{index}: running unpinned: {e:#}");
         }
     }
+    // This worker's private counter shard — every per-request counter
+    // write below lands here, never on a shared cache line.
+    let shard_metrics = metrics.worker(index);
+    // Pre-register this thread's span ring so the steady state records
+    // without allocating.
+    trace::warm_recorder();
     // Shared-nothing: every worker owns its engine shards outright.
     let mut shards: BTreeMap<PlanKey, EngineShard> = BTreeMap::new();
     loop {
@@ -182,7 +189,7 @@ fn worker_main(
             Some(WorkItem::Shutdown) => break,
             Some(WorkItem::Batch(batch)) => {
                 for req in batch {
-                    run_one(&mut shards, req, &metrics, precision);
+                    run_one(&mut shards, req, index, &shard_metrics, &metrics, precision);
                 }
             }
             None => {
@@ -199,19 +206,53 @@ fn worker_main(
 fn run_one(
     shards: &mut BTreeMap<PlanKey, EngineShard>,
     req: PendingRequest,
+    index: usize,
+    worker_metrics: &WorkerMetrics,
     metrics: &ServingMetrics,
     precision: Precision,
 ) {
     let shard = shards
         .entry(req.plan.key.clone())
         .or_insert_with(|| EngineShard::with_precision(req.plan.clone(), precision));
-    match shard.infer_wire(&req.payload, req.wire) {
+    // Traced requests reconstruct the queueing stages from the wall
+    // timestamps the reactor/dispatcher stamped, then run the inference
+    // under an `infer` span; `set_current` lets the decode/kernel span
+    // sites deep inside the shard attach to this trace without having
+    // the ids threaded through their signatures.
+    if req.trace_id != 0 {
+        trace::record(
+            req.trace_id,
+            req.trace_parent,
+            Stage::BatchLinger,
+            0,
+            req.recv_us,
+            req.dispatched_us,
+        );
+        trace::record(
+            req.trace_id,
+            req.trace_parent,
+            Stage::WorkerQueue,
+            index as u32,
+            req.dispatched_us,
+            trace::now_us(),
+        );
+    }
+    let infer_span = trace::span(req.trace_id, req.trace_parent, Stage::Infer, index as u32);
+    trace::set_current(req.trace_id, infer_span.id());
+    let started = Instant::now();
+    let outcome = shard.infer_wire(&req.payload, req.wire);
+    let busy = started.elapsed();
+    trace::clear_current();
+    drop(infer_span);
+    match outcome {
         Ok(body) => {
-            metrics.note_completed(&req.plan_metrics, req.enqueued.elapsed());
+            let latency = req.enqueued.elapsed();
+            req.reply.stats().latency.record(latency);
+            metrics.note_completed(worker_metrics, &req.plan_metrics, latency, busy);
             req.reply.deliver(Response::ok(req.req_id, body));
         }
         Err(e) => {
-            metrics.note_error(&req.plan_metrics);
+            metrics.note_error(worker_metrics, &req.plan_metrics);
             req.reply.deliver(Response::error(req.req_id, &format!("{e:#}")));
         }
     }
@@ -225,9 +266,7 @@ mod tests {
     };
     use super::super::protocol::RespStatus;
     use super::super::session::SessionOutbox;
-    use std::sync::atomic::Ordering;
     use std::sync::mpsc;
-    use std::time::Instant;
 
     #[test]
     fn pool_processes_batches_and_shuts_down() {
@@ -257,6 +296,10 @@ mod tests {
                         wire: crate::runtime::wire::WireDtype::F32,
                         enqueued: Instant::now(),
                         reply: outbox.clone(),
+                        trace_id: 0,
+                        trace_parent: 0,
+                        recv_us: 0,
+                        dispatched_us: 0,
                     }
                 })
                 .collect();
@@ -272,8 +315,9 @@ mod tests {
         }
         dispatch.shutdown_workers();
         pool.join();
-        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), n);
+        assert_eq!(metrics.requests_completed(), n);
         assert_eq!(plan_metrics.latency.count(), n);
+        assert_eq!(outbox.stats().latency.count(), n, "per-session latency tallies");
     }
 
     #[test]
@@ -295,11 +339,15 @@ mod tests {
             wire: crate::runtime::wire::WireDtype::F32,
             enqueued: Instant::now(),
             reply: outbox,
+            trace_id: 0,
+            trace_parent: 0,
+            recv_us: 0,
+            dispatched_us: 0,
         }]);
         let resp = reply_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.status, RespStatus::Error);
         assert_eq!(resp.req_id, 123);
-        assert_eq!(metrics.request_errors.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.request_errors(), 1);
         dispatch.shutdown_workers();
         pool.join();
     }

@@ -90,6 +90,62 @@ fn steady_state_infer_performs_zero_allocations() {
 }
 
 #[test]
+fn traced_steady_state_infer_performs_zero_allocations() {
+    // The flight recorder's hot path (span guards, per-layer kernel
+    // spans, ring writes) must hold the zero-allocation property too:
+    // the ring is pre-registered by `warm_recorder` and spans are Copy
+    // into fixed slots, so a traced frame allocates exactly as much as
+    // an untraced one — nothing.
+    use edge_prune::runtime::trace::{self, Stage};
+    if !cfg!(feature = "trace") {
+        return;
+    }
+    let _window = exclusive();
+    let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 2)).unwrap());
+    let mut shard = EngineShard::new(plan);
+    let input = make_input(5);
+    let payload = client_prepare(&input, 2);
+    let expected = expected_digest(&input);
+
+    // Warmup: ring registration, trace-id seed, stage OnceLock, pool.
+    trace::warm_recorder();
+    trace::set_sampling(1);
+    trace::set_enabled(true);
+    for _ in 0..5 {
+        let tid = trace::next_trace_id();
+        let infer_span = trace::span(tid, 0, Stage::Infer, 0);
+        trace::set_current(tid, infer_span.id());
+        let out = shard.infer_wire(&payload, WireDtype::F32).unwrap();
+        trace::clear_current();
+        drop(infer_span);
+        assert_eq!(out, expected);
+        shard.recycle(out);
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..100 {
+        let tid = trace::next_trace_id();
+        let infer_span = trace::span(tid, 0, Stage::Infer, 0);
+        trace::set_current(tid, infer_span.id());
+        let out = shard.infer_wire(&payload, WireDtype::F32).unwrap();
+        trace::clear_current();
+        drop(infer_span);
+        shard.recycle(out);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    // Restore the process default before releasing the window; draining
+    // allocates, so it stays outside the measured region.
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    assert_eq!(
+        after - before,
+        0,
+        "traced steady-state infer allocated {} times over 100 frames",
+        after - before
+    );
+}
+
+#[test]
 fn steady_state_quantized_infer_performs_zero_allocations() {
     // The int8 path end to end: the client side runs quantized stages
     // and wire-encodes (FrameScratch reuse), the server side decodes

@@ -785,6 +785,7 @@ fn new_client_falls_back_to_v2_against_old_server() {
                 session_id: 1,
                 token: 42,
                 codec: None,
+                trace: false,
                 message: String::new(),
             },
         )
@@ -898,6 +899,202 @@ fn int8_precision_server_serves_verified_responses() {
     assert_eq!(report.lost(), 0);
     let metrics = server.shutdown();
     assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// Tracing is process-global state (one recorder registry, one enable
+/// flag), so every test that flips it serializes here and restores the
+/// disabled default before releasing the lock.
+fn trace_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Tentpole acceptance: one traced inference yields a single trace whose
+/// spans cover both sides of the wire — the client's request tree and
+/// the server's reactor/dispatch/worker/kernel tree all share the
+/// trace id the client minted, stitched by the 12-byte wire context.
+#[test]
+fn traced_inference_joins_client_and_server_spans() {
+    use edge_prune::runtime::trace::{self, Stage};
+    if !cfg!(feature = "trace") {
+        return;
+    }
+    let _serial = trace_lock();
+    let server = Server::start(ServerConfig { trace: true, ..test_cfg() }).unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients: 2,
+        requests: 8,
+        pp: 3,
+        trace: true,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    server.shutdown();
+    trace::set_enabled(false);
+    let spans = trace::drain();
+
+    assert_eq!(report.ok, 16, "{}", report.summary());
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.lost(), 0);
+    assert_eq!(report.traced, 16, "sample 1 traces every request");
+
+    // Pick one traced request and reassemble its tree.
+    let root = spans.iter().find(|s| s.stage == Stage::Request).expect("a client root span");
+    let tid = root.trace_id;
+    let count =
+        |stage: Stage| spans.iter().filter(|s| s.trace_id == tid && s.stage == stage).count();
+    for stage in [Stage::ClientEncode, Stage::ClientSend, Stage::ClientWait, Stage::ClientDecode] {
+        assert_eq!(count(stage), 1, "{stage:?} under trace {tid:#x}");
+    }
+    // Server-side spans joined the same trace via the wire context.
+    for stage in [
+        Stage::ReactorRead,
+        Stage::BatchLinger,
+        Stage::WorkerQueue,
+        Stage::Infer,
+        Stage::RespEncode,
+    ] {
+        assert_eq!(count(stage), 1, "{stage:?} under trace {tid:#x}");
+    }
+
+    // Nesting: client stages hang off the root; the server's reactor
+    // read hangs off the root too (the wire context carries the root's
+    // span id as the remote parent); per-layer kernels nest under the
+    // worker's infer span.
+    let find = |stage: Stage| {
+        spans.iter().find(|s| s.trace_id == tid && s.stage == stage).unwrap()
+    };
+    let enc = find(Stage::ClientEncode);
+    assert_eq!(enc.parent, root.span_id);
+    assert_eq!(find(Stage::ReactorRead).parent, root.span_id);
+    let infer = find(Stage::Infer);
+    let kernels = spans
+        .iter()
+        .filter(|s| s.trace_id == tid && s.stage == Stage::Kernel && s.parent == infer.span_id)
+        .count();
+    assert!(kernels >= 1, "per-layer kernel spans under the infer span");
+
+    // Ordering: a child's window sits inside its parent's (same wall
+    // clock, child guard drops first).
+    assert!(enc.start_us >= root.start_us);
+    assert!(enc.start_us + enc.dur_us <= root.start_us + root.dur_us);
+    // One process, one clock: the server's infer starts inside the
+    // client's request window.
+    assert!(infer.start_us >= root.start_us);
+    assert!(infer.start_us <= root.start_us + root.dur_us);
+}
+
+/// Downgrade: a trace-capable client against a server without `--trace`
+/// gets `trace: false` in the reply and silently sends plain infer
+/// frames — zero traced requests, zero behavioral change.
+#[test]
+fn trace_capable_client_downgrades_against_untraced_server() {
+    use edge_prune::runtime::trace;
+    let _serial = trace_lock();
+    let server = Server::start(test_cfg()).unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients: 2,
+        requests: 8,
+        pp: 2,
+        trace: true,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    server.shutdown();
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    assert_eq!(report.ok, 16, "{}", report.summary());
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.traced, 0, "server without --trace never sees traced frames");
+}
+
+/// A v2 client against a traced server: the legacy reply has no trace
+/// capability bit and the session serves verified plain frames.
+#[test]
+fn v2_client_against_traced_server_speaks_plain_protocol() {
+    use edge_prune::runtime::trace;
+    let _serial = trace_lock();
+    let server = Server::start(ServerConfig { trace: true, ..test_cfg() }).unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(&mut s, &Handshake::v2("synthetic", 2, "old-client")).unwrap();
+    let reply = read_handshake_reply(&mut s).unwrap();
+    assert!(reply.accepted);
+    assert!(!reply.trace, "v2 reply carries no trace capability");
+    let input = make_input(9);
+    write_request(&mut s, 1, &client_prepare(&input, 2)).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.status, RespStatus::Ok);
+    assert_eq!(resp.body, expected_digest(&input));
+    write_frame(&mut s, 2, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+    server.shutdown();
+    trace::set_enabled(false);
+    let _ = trace::drain();
+}
+
+/// The `--metrics-addr` scrape endpoint: one raw-TCP connect returns one
+/// JSON snapshot carrying live counters plus the drained trace spans,
+/// and a drained span never reappears on the next scrape.
+#[test]
+fn metrics_endpoint_scrape_returns_snapshot_with_trace() {
+    use edge_prune::runtime::trace::{self, Stage};
+    use edge_prune::util::json::Json;
+    use std::io::Read as _;
+    if !cfg!(feature = "trace") {
+        return;
+    }
+    let _serial = trace_lock();
+    let server = Server::start(ServerConfig {
+        trace: true,
+        metrics_addr: Some("127.0.0.1:0".to_string()),
+        ..test_cfg()
+    })
+    .unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients: 2,
+        requests: 4,
+        pp: 2,
+        trace: true,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.ok, 8, "{}", report.summary());
+
+    let scrape = |ep: std::net::SocketAddr| -> Json {
+        let mut sock = TcpStream::connect(ep).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut body = String::new();
+        sock.read_to_string(&mut body).unwrap();
+        Json::parse(&body).unwrap()
+    };
+    let ep = server.metrics_endpoint_addr().expect("endpoint bound");
+    let snap = scrape(ep);
+    assert_eq!(snap.get("requests_completed").unwrap().int().unwrap(), 8);
+    let tr = snap.get("trace").unwrap();
+    assert!(matches!(tr.get("enabled").unwrap(), Json::Bool(true)));
+    let rows = tr.get("spans").unwrap().arr().unwrap();
+    assert!(!rows.is_empty(), "scrape drains recorded spans");
+    let parsed: Vec<_> =
+        rows.iter().map(|r| trace::span_from_json(r).unwrap()).collect();
+    assert!(parsed.iter().any(|s| s.stage == Stage::Request), "client root span in scrape");
+    assert!(parsed.iter().any(|s| s.stage == Stage::Infer), "server infer span in scrape");
+
+    // Spans are handed out exactly once: the drained client roots are
+    // gone from the second snapshot (trace tests are serialized, so no
+    // one else can mint Request spans meanwhile).
+    let snap2 = scrape(ep);
+    let rows2 = snap2.get("trace").unwrap().get("spans").unwrap().arr().unwrap();
+    for r in rows2 {
+        let s = trace::span_from_json(r).unwrap();
+        assert!(s.stage != Stage::Request, "drained span reappeared in second scrape");
+    }
+
+    server.shutdown();
+    trace::set_enabled(false);
+    let _ = trace::drain();
 }
 
 /// The session wave holds its sessions at int8 wire too (the reactor's

@@ -1,102 +1,196 @@
-//! Session-scale bench: p99 latency vs concurrent session count
-//! (64 / 256 / 512) against the event-driven server, asserting the
-//! fixed-thread-inventory property along the way (OS thread count stays
-//! a small constant while sessions grow 8x).
+//! Session-scale bench: throughput vs reactor core count (1 / 2 / 4)
+//! at a fixed large session population, proving the thread-per-core
+//! server actually scales — and that the round-robin acceptor spreads
+//! sessions evenly across shards (per-core load within 25% of mean).
 //!
-//! Emits `BENCH_session_scale.json` for CI/EXPERIMENTS tracking.
+//! Emits `BENCH_session_scale.json` with per-core session / inference
+//! counts for CI/EXPERIMENTS tracking.
 //!
-//! Knobs: EP_ROUNDS (requests per session), EP_PP (partition point),
-//! EP_WORKERS (worker threads; default 4 so the thread budget is
-//! deterministic), EP_SESSIONS (comma-free max tier override).
+//! Knobs: EP_SESSIONS (total concurrent sessions, default 4096; scaled
+//! down to fd headroom), EP_ROUNDS (requests per session), EP_PP
+//! (partition point), EP_WORKERS (workers *per shard*, default 1 so
+//! the core count is the parallelism axis), EP_MIN_SCALING (required
+//! 4-core vs 1-core speedup on >=4-core hosts, default 1.5).
+
+use std::sync::Arc;
 
 use edge_prune::benchkit::{env_or, header, write_bench_json};
+use edge_prune::platform::affinity::core_count;
 use edge_prune::platform::procinfo::{ensure_fd_headroom, os_thread_count};
-use edge_prune::server::loadgen::{run_session_wave, WaveConfig};
+use edge_prune::runtime::metrics::LatencyHistogram;
+use edge_prune::server::loadgen::{run_session_wave, WaveConfig, WaveReport};
 use edge_prune::server::{Server, ServerConfig};
 use edge_prune::util::json::Json;
+
+/// Parallel wave-driver threads per tier.  Sessions are split evenly;
+/// 4 drivers keep the client side from being the bottleneck at high
+/// core counts without drowning a small host.
+const WAVES: usize = 4;
 
 fn main() -> anyhow::Result<()> {
     let rounds: u64 = env_or("EP_ROUNDS", 4u64);
     let pp: usize = env_or("EP_PP", 2usize);
-    let workers: usize = env_or("EP_WORKERS", 4usize);
-    let max_tier: usize = env_or("EP_SESSIONS", 512usize);
+    let workers: usize = env_or("EP_WORKERS", 1usize);
+    let want_sessions: usize = env_or("EP_SESSIONS", 4096usize);
+    let min_scaling: f64 = env_or("EP_MIN_SCALING", 1.5f64);
 
-    // 512 sessions need ~1100 fds in this process (server + client
-    // ends); raise the soft limit and scale tiers to what we got.
-    let headroom = ensure_fd_headroom(2 * max_tier as u64 + 256)?;
-    let tiers: Vec<usize> = [64usize, 256, 512]
-        .into_iter()
-        .filter(|&s| s <= max_tier && 2 * s as u64 + 64 <= headroom)
-        .collect();
-    anyhow::ensure!(!tiers.is_empty(), "fd headroom {headroom} too small for any tier");
+    // Each held-open session costs ~2 fds in this process (server +
+    // client ends).  Raise the soft limit, then scale the population
+    // to what we actually got, keeping it a multiple of WAVES * 4 so
+    // every wave thread and every shard tier divides it exactly.
+    let headroom = ensure_fd_headroom(2 * want_sessions as u64 + 512)?;
+    let cap = (headroom.saturating_sub(512) / 2) as usize;
+    let sessions = want_sessions.min(cap) / (WAVES * 4) * (WAVES * 4);
+    anyhow::ensure!(sessions > 0, "fd headroom {headroom} too small for any session tier");
 
+    let host_cores = core_count();
     header(&format!(
-        "session scale: p99 vs concurrent sessions (pp {pp}, {rounds} req/session, \
-         {workers} workers)"
+        "session scale: {sessions} sessions vs core count (pp {pp}, {rounds} req/session, \
+         {workers} worker/shard, host has {host_cores} cores)"
     ));
-    println!("sessions   req/s   p50-ms   p95-ms   p99-ms   os-threads");
+    println!("cores   req/s   infer-ms   p50-ms   p95-ms   p99-ms   os-threads   spread");
 
     let mut rows: Vec<Json> = Vec::new();
-    for &sessions in &tiers {
+    let mut throughput: Vec<(usize, f64)> = Vec::new();
+    for cores in [1usize, 2, 4] {
         let server = Server::start(ServerConfig {
+            cores,
+            // Round-robin accept gives a deterministic shard spread,
+            // which is what the 25%-of-mean assert below relies on.
+            accept_rr: true,
             workers,
             pin_workers: false,
-            max_sessions: sessions + 8,
+            max_sessions: sessions + 16,
             max_queue: 4 * sessions.max(256),
             ..ServerConfig::default()
         })?;
-        let report = run_session_wave(&WaveConfig {
-            addr: server.addr().to_string(),
-            sessions,
-            rounds,
-            pp,
-            seed: 42,
-            ..WaveConfig::default()
-        })?;
-        anyhow::ensure!(report.errors == 0, "response errors at {sessions} sessions");
-        anyhow::ensure!(report.ok == sessions as u64 * rounds, "lost work at {sessions}");
-        // This process runs only the bench main thread + the server's
-        // threads, so the OS count measures the real inventory: it must
-        // match the declared budget (+1 for main, +1 slack), not just
-        // stay under 16 — a regression that spawns per-session threads
-        // fails here even if thread_count()'s arithmetic was updated.
+        anyhow::ensure!(server.cores() == cores, "server came up with wrong shard count");
+
+        let per_wave = sessions / WAVES;
+        let addr = server.addr().to_string();
+        let handles: Vec<std::thread::JoinHandle<anyhow::Result<WaveReport>>> = (0..WAVES)
+            .map(|w| {
+                let cfg = WaveConfig {
+                    addr: addr.clone(),
+                    sessions: per_wave,
+                    rounds,
+                    pp,
+                    seed: 42 + w as u64,
+                    tag: format!("w{w}"),
+                    ..WaveConfig::default()
+                };
+                std::thread::spawn(move || run_session_wave(&cfg))
+            })
+            .collect();
+        let mut ok = 0u64;
+        let mut infer_wall = std::time::Duration::ZERO;
+        let latency = Arc::new(LatencyHistogram::new());
+        for h in handles {
+            let report = h.join().expect("wave thread panicked")?;
+            anyhow::ensure!(report.errors == 0, "response errors at {cores} cores");
+            ok += report.ok;
+            infer_wall = infer_wall.max(report.infer_wall);
+            latency.merge_from(&report.latency);
+        }
+        anyhow::ensure!(ok == sessions as u64 * rounds, "lost work at {cores} cores");
+
+        // Wave threads are joined, so the OS count is bench main + the
+        // server's declared inventory; a regression that spawns
+        // per-session threads fails here even if thread_count()'s
+        // arithmetic was updated to match.
         let os_threads = os_thread_count().unwrap_or(0);
-        anyhow::ensure!(
-            os_threads == 0 || os_threads < 16,
-            "thread budget blown: {os_threads} OS threads at {sessions} sessions"
-        );
         anyhow::ensure!(
             os_threads == 0 || os_threads <= server.thread_count() + 2,
             "{os_threads} OS threads exceed the declared inventory of {} (+main)",
             server.thread_count()
         );
-        let rps = report.ok as f64 / report.wall.as_secs_f64().max(1e-9);
+
+        // Per-shard load: with round-robin accept and sessions % cores
+        // == 0 the session spread is exact; inference completions may
+        // wobble with scheduling, so the 25% band is checked on both.
+        let loads = server.shard_loads();
+        anyhow::ensure!(loads.len() == cores, "shard_loads returned {} shards", loads.len());
+        let mut spread = 0.0f64;
+        for (what, vals) in [
+            ("sessions", loads.iter().map(|l| l.0).collect::<Vec<u64>>()),
+            ("inferences", loads.iter().map(|l| l.1).collect::<Vec<u64>>()),
+        ] {
+            let mean = vals.iter().sum::<u64>() as f64 / cores as f64;
+            for (shard, &v) in vals.iter().enumerate() {
+                let dev = (v as f64 - mean).abs() / mean.max(1e-9);
+                spread = spread.max(dev);
+                anyhow::ensure!(
+                    dev <= 0.25,
+                    "{what} skew on shard {shard}: {v} vs mean {mean:.1} ({:.0}% off)",
+                    dev * 100.0
+                );
+            }
+        }
+
+        let rps = ok as f64 / infer_wall.as_secs_f64().max(1e-9);
         let (p50, p95, p99) = (
-            report.latency.quantile_ms(0.50),
-            report.latency.quantile_ms(0.95),
-            report.latency.quantile_ms(0.99),
+            latency.quantile_ms(0.50),
+            latency.quantile_ms(0.95),
+            latency.quantile_ms(0.99),
         );
+        let infer_ms = infer_wall.as_secs_f64() * 1e3;
         println!(
-            "{sessions:>8} {rps:>7.0} {p50:>8.2} {p95:>8.2} {p99:>8.2} {os_threads:>12}"
+            "{cores:>5} {rps:>7.0} {infer_ms:>10.1} {p50:>8.2} {p95:>8.2} {p99:>8.2} \
+             {os_threads:>12} {:>6.0}%",
+            spread * 100.0
         );
+        let per_core: Vec<Json> = loads
+            .iter()
+            .enumerate()
+            .map(|(shard, &(admitted, completed))| {
+                Json::from_pairs(vec![
+                    ("shard", Json::from(shard)),
+                    ("sessions", Json::from(admitted)),
+                    ("inferences", Json::from(completed)),
+                ])
+            })
+            .collect();
         rows.push(Json::from_pairs(vec![
+            ("cores", Json::from(cores)),
             ("sessions", Json::from(sessions)),
-            ("ok", Json::from(report.ok)),
+            ("ok", Json::from(ok)),
             ("requests_per_sec", Json::from(rps)),
+            ("infer_wall_ms", Json::from(infer_ms)),
             ("p50_ms", Json::from(p50)),
             ("p95_ms", Json::from(p95)),
             ("p99_ms", Json::from(p99)),
             ("os_threads", Json::from(os_threads)),
             ("server_threads", Json::from(server.thread_count())),
+            ("per_core", Json::Arr(per_core)),
         ]));
+        throughput.push((cores, rps));
         server.shutdown();
+    }
+
+    // Scaling assert: only meaningful when the host really has 4 cores
+    // to run 4 shards on; oversubscribed tiers still ran above so the
+    // JSON is complete either way.
+    let tp = |c: usize| throughput.iter().find(|t| t.0 == c).map(|t| t.1);
+    if let (Some(t1), Some(t4)) = (tp(1), tp(4)) {
+        let speedup = t4 / t1.max(1e-9);
+        println!("4-core speedup over 1 core: {speedup:.2}x (floor {min_scaling:.2}x)");
+        if host_cores >= 4 {
+            anyhow::ensure!(
+                speedup >= min_scaling,
+                "4-core throughput only {speedup:.2}x of 1-core (need {min_scaling:.2}x)"
+            );
+        } else {
+            println!("host has {host_cores} cores; skipping the >= {min_scaling:.2}x assert");
+        }
     }
 
     let out = Json::from_pairs(vec![
         ("bench", Json::from("session_scale")),
-        ("workers", Json::from(workers)),
+        ("sessions", Json::from(sessions)),
+        ("workers_per_shard", Json::from(workers)),
         ("rounds", Json::from(rounds)),
         ("pp", Json::from(pp)),
+        ("host_cores", Json::from(host_cores)),
         ("rows", Json::Arr(rows)),
     ]);
     write_bench_json("session_scale", &out)?;

@@ -50,6 +50,9 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
   worker:  --role endpoint|server --pp K --no-pad --precision f32|int8
            --wire f32|f16|int8 (both workers must agree) (+ compile flags)
   serve:   --port P --bind HOST --max-sessions N --max-queue N --max-batch N
+           --cores N (thread-per-core reactor shards; workers are per
+           shard) --accept-rr (force the round-robin acceptor thread
+           instead of per-shard SO_REUSEPORT listeners)
            --batch-linger-us US --workers N --no-pin --idle-timeout SECS
            --detach-linger SECS --replay-ring N --write-high-water BYTES
            --duration SECS (0 = until killed) --precision f32|int8
@@ -263,6 +266,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_sessions = args.usize_or("max-sessions", 64)?;
     let cfg = ServerConfig {
         addr: format!("{}:{port}", args.str_or("bind", "127.0.0.1")),
+        cores: args.usize_or("cores", 1)?,
+        accept_rr: args.bool_flag("accept-rr"),
         max_sessions,
         max_queue: args.usize_or("max-queue", 1024)?,
         max_batch: args.usize_or("max-batch", 8)?,
@@ -290,9 +295,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let duration = args.usize_or("duration", 0)?;
     let server = Server::start(cfg)?;
     eprintln!(
-        "edge-prune serve: listening on {} ({max_sessions} sessions max); \
+        "edge-prune serve: listening on {} ({max_sessions} sessions max, {} core shards); \
          model: synthetic pp 1..=5",
-        server.addr()
+        server.addr(),
+        server.cores()
     );
     if let Some(addr) = server.metrics_endpoint_addr() {
         eprintln!("edge-prune serve: metrics endpoint on {addr} (one JSON snapshot per connect)");

@@ -145,6 +145,16 @@ impl WireCounters {
         equiv as f64 / actual as f64
     }
 
+    /// Fold another counter set into this one.  Pure addition in every
+    /// field, so merging N per-shard counters at scrape time is lossless:
+    /// the result is bitwise what a single shared counter would hold.
+    pub fn merge_from(&self, other: &WireCounters) {
+        self.bytes_tx.fetch_add(other.bytes_tx.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.bytes_rx.fetch_add(other.bytes_rx.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.f32_equiv_tx.fetch_add(other.f32_equiv_tx.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.f32_equiv_rx.fetch_add(other.f32_equiv_rx.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("bytes_tx", Json::from(self.bytes_tx.load(Ordering::Relaxed))),
@@ -224,6 +234,37 @@ impl LatencyHistogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact recorded-microsecond total (the mean's numerator).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the raw bucket counters, for merge-losslessness tests
+    /// and external aggregation.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Fold another histogram into this one: buckets, count, and sum add;
+    /// min/max combine by min/max.  Every derived statistic (count, sum,
+    /// min, max, every bucket — hence every quantile) of the merged
+    /// histogram equals what a single shared histogram fed the union of
+    /// samples would report, so per-shard histograms merged at scrape
+    /// time lose nothing.  An empty `other` is a no-op: its `min_us`
+    /// sentinel (`u64::MAX`) cannot lower an existing minimum.
+    pub fn merge_from(&self, other: &LatencyHistogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = src.load(Ordering::Relaxed);
+            if n != 0 {
+                dst.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_us.fetch_min(other.min_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     /// Exact smallest recorded latency in ms (0.0 if empty).
@@ -441,6 +482,78 @@ mod tests {
         let j = w.to_json();
         assert_eq!(j.get("bytes_rx").unwrap().int().unwrap(), 1041);
         assert_eq!(j.get("f32_equiv_rx").unwrap().int().unwrap(), 4109);
+    }
+
+    #[test]
+    fn histogram_merge_is_lossless() {
+        // Feed the same sample stream into one shared histogram and into
+        // four "per-shard" histograms (round-robin), merge the shards,
+        // and require bitwise agreement on count/sum/min/max and every
+        // bucket — which implies agreement on every quantile.
+        let shared = LatencyHistogram::new();
+        let shards: Vec<LatencyHistogram> =
+            (0..4).map(|_| LatencyHistogram::new()).collect();
+        let mut rng = crate::util::rng::Rng::new(0x5ca1ab1e);
+        for i in 0..10_000 {
+            // Span the exact region, the log-linear region, and the tail.
+            let us = match rng.below(4) {
+                0 => rng.below(8) as u64,
+                1 => rng.below(1 << 12) as u64,
+                2 => rng.below(1 << 22) as u64,
+                _ => 1 + (rng.next_u64() >> 24),
+            };
+            shared.record_us(us);
+            shards[i % 4].record_us(us);
+        }
+        let merged = LatencyHistogram::new();
+        for s in &shards {
+            merged.merge_from(s);
+        }
+        assert_eq!(merged.count(), shared.count());
+        assert_eq!(merged.sum_us(), shared.sum_us());
+        assert_eq!(merged.min_ms(), shared.min_ms());
+        assert_eq!(merged.max_ms(), shared.max_ms());
+        assert_eq!(merged.bucket_counts(), shared.bucket_counts());
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(merged.quantile_ms(q), shared.quantile_ms(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_with_empty_shard_is_identity() {
+        let h = LatencyHistogram::new();
+        h.record_us(250);
+        h.record_us(90_000);
+        let (min, max, count) = (h.min_ms(), h.max_ms(), h.count());
+        h.merge_from(&LatencyHistogram::new());
+        assert_eq!(h.min_ms(), min, "empty shard's u64::MAX sentinel must not leak");
+        assert_eq!(h.max_ms(), max);
+        assert_eq!(h.count(), count);
+    }
+
+    #[test]
+    fn wire_counters_merge_is_lossless() {
+        let shared = WireCounters::new();
+        let a = WireCounters::new();
+        let b = WireCounters::new();
+        for (i, w) in [(1u64, &a), (2, &b), (3, &a), (4, &b)] {
+            w.note_tx(10 * i, 40 * i);
+            w.note_rx(7 * i, 28 * i);
+            shared.note_tx(10 * i, 40 * i);
+            shared.note_rx(7 * i, 28 * i);
+        }
+        let merged = WireCounters::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        for (m, s) in [
+            (&merged.bytes_tx, &shared.bytes_tx),
+            (&merged.bytes_rx, &shared.bytes_rx),
+            (&merged.f32_equiv_tx, &shared.f32_equiv_tx),
+            (&merged.f32_equiv_rx, &shared.f32_equiv_rx),
+        ] {
+            assert_eq!(m.load(Ordering::Relaxed), s.load(Ordering::Relaxed));
+        }
+        assert_eq!(merged.compression_ratio(), shared.compression_ratio());
     }
 
     #[test]

@@ -355,6 +355,93 @@ pub fn bind_on(host: &str, port: u16) -> Result<TcpListener> {
         .with_context(|| format!("binding RX FIFO on {host}:{port}"))
 }
 
+/// `SO_REUSEPORT` listener support for the thread-per-core server: every
+/// shard binds its own listener on the SAME address and the kernel load-
+/// balances incoming connections across them — no user-space accept lock,
+/// no handoff.  `std::net::TcpListener::bind` offers no pre-bind socket
+/// options, so the socket is built raw against libc (the `affinity` /
+/// `reactor` idiom: declare exactly what we use, no crate dependency).
+/// Linux-only, IPv4-only; anything else returns `Err` and the server
+/// falls back to its round-robin acceptor thread.
+#[cfg(target_os = "linux")]
+mod reuseport_sys {
+    pub const AF_INET: i32 = 2;
+    pub const SOCK_STREAM: i32 = 1;
+    pub const SOCK_CLOEXEC: i32 = 0o2000000;
+    pub const SOL_SOCKET: i32 = 1;
+    pub const SO_REUSEADDR: i32 = 2;
+    pub const SO_REUSEPORT: i32 = 15;
+
+    /// `struct sockaddr_in`: family, big-endian port, big-endian addr,
+    /// 8 bytes of zero padding.
+    #[repr(C)]
+    pub struct SockaddrIn {
+        pub family: u16,
+        pub port_be: u16,
+        pub addr_be: u32,
+        pub zero: [u8; 8],
+    }
+
+    extern "C" {
+        pub fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        pub fn setsockopt(fd: i32, level: i32, name: i32, val: *const i32, len: u32) -> i32;
+        pub fn bind(fd: i32, addr: *const SockaddrIn, len: u32) -> i32;
+        pub fn listen(fd: i32, backlog: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// Bind a `SO_REUSEPORT` TCP listener on an IPv4 `addr`.  Multiple calls
+/// with the same address return independent listeners sharing the port;
+/// the kernel distributes incoming connections among them.
+pub fn bind_reuseport(addr: std::net::SocketAddr) -> Result<TcpListener> {
+    #[cfg(target_os = "linux")]
+    {
+        use reuseport_sys as sys;
+        use std::os::fd::FromRawFd;
+        let v4 = match addr {
+            std::net::SocketAddr::V4(v4) => v4,
+            std::net::SocketAddr::V6(_) => bail!("SO_REUSEPORT helper is IPv4-only"),
+        };
+        let fd = unsafe { sys::socket(sys::AF_INET, sys::SOCK_STREAM | sys::SOCK_CLOEXEC, 0) };
+        if fd < 0 {
+            bail!("socket(AF_INET) failed: {}", std::io::Error::last_os_error());
+        }
+        // On any failure past this point the fd must not leak.
+        let fail = |fd: i32, what: &str| -> anyhow::Error {
+            let err = std::io::Error::last_os_error();
+            unsafe { sys::close(fd) };
+            anyhow::anyhow!("{what} failed for {addr}: {err}")
+        };
+        let one: i32 = 1;
+        let len = std::mem::size_of::<i32>() as u32;
+        if unsafe { sys::setsockopt(fd, sys::SOL_SOCKET, sys::SO_REUSEADDR, &one, len) } != 0 {
+            return Err(fail(fd, "setsockopt(SO_REUSEADDR)"));
+        }
+        if unsafe { sys::setsockopt(fd, sys::SOL_SOCKET, sys::SO_REUSEPORT, &one, len) } != 0 {
+            return Err(fail(fd, "setsockopt(SO_REUSEPORT)"));
+        }
+        let sa = sys::SockaddrIn {
+            family: sys::AF_INET as u16,
+            port_be: v4.port().to_be(),
+            addr_be: u32::from(*v4.ip()).to_be(),
+            zero: [0; 8],
+        };
+        let sa_len = std::mem::size_of::<sys::SockaddrIn>() as u32;
+        if unsafe { sys::bind(fd, &sa, sa_len) } != 0 {
+            return Err(fail(fd, "bind"));
+        }
+        if unsafe { sys::listen(fd, 1024) } != 0 {
+            return Err(fail(fd, "listen"));
+        }
+        Ok(unsafe { TcpListener::from_raw_fd(fd) })
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        bail!("SO_REUSEPORT sharding unavailable on this platform ({addr})")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -616,5 +703,41 @@ mod tests {
         drop(tx);
         assert_eq!(rx_h.join().unwrap(), 3);
         assert!(el >= 140.0, "elapsed {el} ms");
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn reuseport_listeners_share_a_port() {
+        use std::io::Write as _;
+        // Two listeners on the same port: the second bind would fail with
+        // EADDRINUSE without SO_REUSEPORT.
+        let a = bind_reuseport("127.0.0.1:0".parse().unwrap()).unwrap();
+        let addr = a.local_addr().unwrap();
+        let b = bind_reuseport(addr).unwrap();
+        assert_eq!(b.local_addr().unwrap().port(), addr.port());
+        // The kernel routes each connection to exactly one listener: with
+        // both polled nonblocking, every connect is accepted once.
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        let mut accepted = 0;
+        for _ in 0..8 {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(b"x").unwrap();
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            loop {
+                match (a.accept(), b.accept()) {
+                    (Ok(_), Ok(_)) => panic!("one connect accepted twice"),
+                    (Ok(_), Err(_)) | (Err(_), Ok(_)) => {
+                        accepted += 1;
+                        break;
+                    }
+                    (Err(_), Err(_)) if std::time::Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    (Err(e), Err(_)) => panic!("connect never accepted: {e}"),
+                }
+            }
+        }
+        assert_eq!(accepted, 8);
     }
 }

@@ -1,5 +1,15 @@
 //! The event-driven serving core: every client connection as a
-//! nonblocking state machine on ONE reactor thread.
+//! nonblocking state machine on a **shard**'s reactor thread.
+//!
+//! Since the thread-per-core refactor the server runs N independent
+//! copies of this event loop (one per `--cores` shard), each owning its
+//! own reactor, timer wheel, batch queue, worker set, plan cache, and
+//! metrics instance — shared-nothing on the hot path.  The only
+//! cross-shard structures are the session directory (control plane:
+//! handshakes, resumes, reaping) and the [`ShardMailbox`] below, which
+//! carries accepted sockets (round-robin acceptor mode) and retire
+//! notices (a RECONNECT that landed on a different shard displacing the
+//! old attachment).
 //!
 //! The pre-reactor server spent ~3 OS threads per session (reader,
 //! writer, and a share of the polling acceptor).  This module replaces
@@ -23,14 +33,14 @@
 //! Session semantics (epoch-guarded detach/close, replay-then-attach
 //! ordering, exactly-once admission) are untouched: this layer only
 //! changes *who* runs the protocol, not the protocol.  The thread
-//! inventory is fixed — reactor + dispatcher + workers — regardless of
-//! session count.
+//! inventory is fixed — per shard: reactor + dispatcher + workers —
+//! regardless of session count.
 
 use super::batch::PendingRequest;
 use super::model::{self, ServerModelPlan};
 use super::protocol::{self, Frame, HandshakeReply, ReqKind, Response};
 use super::session::{Admit, ResponseSink, SessionHandle};
-use super::ServerState;
+use super::ShardState;
 use crate::compiler::PlanKey;
 use crate::runtime::reactor::{ByteBuf, Event, Interest, Reactor, TimerWheel, WakeHandle};
 use crate::runtime::trace::{self, Stage};
@@ -94,6 +104,58 @@ impl CompletionQueue {
     }
 
     fn drain_into(&self, out: &mut Vec<(u64, Response)>) {
+        let mut q = self.inner.lock().unwrap();
+        out.extend(q.drain(..));
+    }
+}
+
+// ------------------------------------------------------ shard mailbox
+
+/// One message across the shard boundary.  The mailbox is control-plane
+/// only: nothing on the steady-state infer path ever posts here.
+pub(crate) enum ShardMsg {
+    /// An accepted socket handed off by the round-robin acceptor thread
+    /// (the `SO_REUSEPORT` fallback) — the shard runs the handshake.
+    Accept(TcpStream),
+    /// A RECONNECT landed on another shard and took this shard's
+    /// connection's session over: tear the displaced connection down now
+    /// instead of waiting for its socket EOF event.  Epoch-stale by
+    /// construction, so the finalize cannot disturb the live session.
+    Retire { conn: u64 },
+}
+
+/// Cross-shard mailbox: same armed-wake discipline as the completion
+/// queue, drained at the top of the owning shard's event loop.  This is
+/// how an accepted fd and a cross-shard retire notice reach a shard; the
+/// replayable response ring itself travels by `Arc` through the session
+/// directory, so "shipping the outbox" costs one pointer.
+pub(crate) struct ShardMailbox {
+    inner: Mutex<VecDeque<ShardMsg>>,
+    armed: AtomicBool,
+    wake: WakeHandle,
+}
+
+impl ShardMailbox {
+    fn new(wake: WakeHandle) -> Arc<ShardMailbox> {
+        Arc::new(ShardMailbox {
+            inner: Mutex::new(VecDeque::new()),
+            armed: AtomicBool::new(false),
+            wake,
+        })
+    }
+
+    pub(crate) fn push(&self, msg: ShardMsg) {
+        self.inner.lock().unwrap().push_back(msg);
+        if self.armed.swap(false, Ordering::AcqRel) {
+            self.wake.wake();
+        }
+    }
+
+    fn arm(&self) {
+        self.armed.store(true, Ordering::Release);
+    }
+
+    fn drain_into(&self, out: &mut Vec<ShardMsg>) {
         let mut q = self.inner.lock().unwrap();
         out.extend(q.drain(..));
     }
@@ -195,6 +257,7 @@ enum TimerToken {
 
 // ------------------------------------------------------------ event loop
 
+#[derive(Debug, Clone, Copy)]
 pub(crate) struct EventLoopCfg {
     /// Bound on connections that have not completed a handshake.
     pub(crate) max_pending: usize,
@@ -205,14 +268,20 @@ pub(crate) struct EventLoopCfg {
 }
 
 pub(crate) struct EventLoop {
-    state: Arc<ServerState>,
+    state: Arc<ShardState>,
     cfg: EventLoopCfg,
     reactor: Reactor,
     wheel: TimerWheel<TimerToken>,
-    listener: TcpListener,
+    /// This shard's own listener (`SO_REUSEPORT`, or the single-core
+    /// listener).  `None` in round-robin acceptor mode, where sockets
+    /// arrive through the mailbox instead.
+    listener: Option<TcpListener>,
     accept_paused: bool,
     conns: HashMap<u64, Conn>,
     completions: Arc<CompletionQueue>,
+    mailbox: Arc<ShardMailbox>,
+    /// Reused drain scratch for the mailbox.
+    mail_scratch: Vec<ShardMsg>,
     next_conn: u64,
     handshaking: usize,
     /// Reused per-drain scratch for `route_completions` (first-touch
@@ -228,14 +297,17 @@ pub(crate) struct EventLoop {
 
 impl EventLoop {
     pub(crate) fn new(
-        listener: TcpListener,
-        state: Arc<ServerState>,
+        listener: Option<TcpListener>,
+        state: Arc<ShardState>,
         cfg: EventLoopCfg,
-    ) -> Result<(EventLoop, WakeHandle)> {
+    ) -> Result<(EventLoop, WakeHandle, Arc<ShardMailbox>)> {
         let reactor = Reactor::new()?;
         let wake = reactor.waker();
-        reactor.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
+        if let Some(l) = &listener {
+            reactor.register(l.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
+        }
         let completions = CompletionQueue::new(wake.clone());
+        let mailbox = ShardMailbox::new(wake.clone());
         let wheel = TimerWheel::new(Instant::now());
         Ok((
             EventLoop {
@@ -247,6 +319,8 @@ impl EventLoop {
                 accept_paused: false,
                 conns: HashMap::new(),
                 completions,
+                mailbox: mailbox.clone(),
+                mail_scratch: Vec::new(),
                 next_conn: LISTENER_TOKEN + 1,
                 handshaking: 0,
                 touched: Vec::new(),
@@ -254,6 +328,7 @@ impl EventLoop {
                 read_start_us: 0,
             },
             wake,
+            mailbox,
         ))
     }
 
@@ -263,14 +338,24 @@ impl EventLoop {
         let mut events: Vec<Event> = Vec::new();
         let mut expired: Vec<TimerToken> = Vec::new();
         let mut done: Vec<(u64, Response)> = Vec::new();
-        self.wheel.insert(Instant::now(), self.cfg.reap_period, TimerToken::Reap);
+        // Pre-register this shard's trace ring (reactor-read spans record
+        // from this thread) so the first traced frame allocates nothing.
+        trace::warm_recorder();
+        // One detach-linger reaper for the whole directory: shard 0's.
+        // Reaping is global control plane, and running it once keeps the
+        // `sessions_reaped` tally unsplit.
+        if self.state.index == 0 {
+            self.wheel.insert(Instant::now(), self.cfg.reap_period, TimerToken::Reap);
+        }
         loop {
-            // Arm-then-drain: a completion pushed after the drain sees
-            // `armed` and wakes the poll below, so nothing sleeps past a
-            // ready response.
+            // Arm-then-drain: a completion/mailbox message pushed after
+            // the drain sees `armed` and wakes the poll below, so nothing
+            // sleeps past ready work.
             self.completions.arm();
+            self.mailbox.arm();
             self.route_completions(&mut done);
-            if self.state.shutting_down.load(Ordering::SeqCst) {
+            self.drain_mailbox();
+            if self.state.shared.shutting_down.load(Ordering::SeqCst) {
                 break;
             }
             let timeout = self.wheel.next_deadline(Instant::now());
@@ -284,7 +369,7 @@ impl EventLoop {
             }
             for ev in &events {
                 match ev.token {
-                    LISTENER_TOKEN => self.accept_ready(),
+                    LISTENER_TOKEN if self.listener.is_some() => self.accept_ready(),
                     _ => self.conn_event(*ev),
                 }
             }
@@ -304,7 +389,8 @@ impl EventLoop {
     fn on_timer(&mut self, token: TimerToken) {
         match token {
             TimerToken::Reap => {
-                let reaped = self.state.sessions.reap_detached(self.state.detach_linger);
+                let reaped =
+                    self.state.shared.sessions.reap_detached(self.state.shared.detach_linger);
                 if reaped > 0 {
                     self.state
                         .metrics
@@ -314,10 +400,11 @@ impl EventLoop {
                 self.wheel.insert(Instant::now(), self.cfg.reap_period, TimerToken::Reap);
             }
             TimerToken::AcceptResume => {
+                let Some(listener) = &self.listener else { return };
                 self.accept_paused = false;
                 if self
                     .reactor
-                    .register(self.listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)
+                    .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)
                     .is_ok()
                 {
                     self.accept_ready();
@@ -335,7 +422,7 @@ impl EventLoop {
                         // "silence" is manufactured, not the client's:
                         // push the idle deadline out instead of closing
                         // a live session mid-drain.
-                        let idle = self.state.idle_timeout;
+                        let idle = self.state.shared.idle_timeout;
                         if !idle.is_zero() {
                             self.set_conn_deadline(&mut conn, idle);
                         }
@@ -367,19 +454,45 @@ impl EventLoop {
             return;
         }
         loop {
-            match self.listener.accept() {
+            let accepted = match &self.listener {
+                Some(listener) => listener.accept(),
+                None => return,
+            };
+            match accepted {
                 Ok((stream, _peer)) => self.open_conn(stream),
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(_) => {
                     // e.g. EMFILE under fd exhaustion: pause accepting
                     // briefly instead of spinning on instant failure.
                     self.accept_paused = true;
-                    let _ = self.reactor.deregister(self.listener.as_raw_fd());
+                    if let Some(listener) = &self.listener {
+                        let _ = self.reactor.deregister(listener.as_raw_fd());
+                    }
                     self.wheel.insert(Instant::now(), ACCEPT_BACKOFF, TimerToken::AcceptResume);
                     break;
                 }
             }
         }
+    }
+
+    /// Drain the cross-shard mailbox: acceptor handoffs open connections
+    /// on this shard; retire notices tear displaced connections down
+    /// (their session epoch is already stale, so the finalize is inert
+    /// toward the session itself).
+    fn drain_mailbox(&mut self) {
+        let mut msgs = std::mem::take(&mut self.mail_scratch);
+        self.mailbox.drain_into(&mut msgs);
+        for msg in msgs.drain(..) {
+            match msg {
+                ShardMsg::Accept(stream) => self.open_conn(stream),
+                ShardMsg::Retire { conn } => {
+                    if let Some(c) = self.conns.remove(&conn) {
+                        self.finalize(c, Teardown::Close);
+                    }
+                }
+            }
+        }
+        self.mail_scratch = msgs;
     }
 
     fn open_conn(&mut self, stream: TcpStream) {
@@ -521,7 +634,7 @@ impl EventLoop {
     /// twin of the old blocking read loop's match.
     fn handle_frame(&mut self, conn: &mut Conn, frame: Frame) -> Result<(), Teardown> {
         // Any complete frame is client liveness: push the idle deadline.
-        let idle = self.state.idle_timeout;
+        let idle = self.state.shared.idle_timeout;
         if !idle.is_zero() {
             self.set_conn_deadline(conn, idle);
         }
@@ -535,7 +648,7 @@ impl EventLoop {
                     a.session_id,
                     a.outbox.stats().summary()
                 );
-                self.state.sessions.close_if_current(a.session_id, a.epoch);
+                self.state.shared.sessions.close_if_current(a.session_id, a.epoch);
             }
             conn.state = ConnState::Draining;
             conn.inbuf.clear();
@@ -584,7 +697,7 @@ impl EventLoop {
                     Ok(new_plan) => {
                         a.plan = new_plan;
                         a.plan_metrics = self.state.metrics.plan(&a.plan.key);
-                        self.state.sessions.update_plan(a.session_id, a.plan.key.clone());
+                        self.state.shared.sessions.update_plan(a.session_id, a.plan.key.clone());
                         self.state.metrics.plan_switches.fetch_add(1, Ordering::Relaxed);
                         a.outbox.send_ephemeral(Response::ok(
                             frame.seq,
@@ -706,25 +819,29 @@ impl EventLoop {
     /// handshake phase.  Leaves the connection `Attached` on success or
     /// `Draining` (reject reply queued / lost takeover) otherwise;
     /// `Err` closes it replyless.
-    fn complete_handshake(&mut self, conn: &mut Conn, hs: protocol::Handshake) -> Result<(), Teardown> {
+    fn complete_handshake(
+        &mut self,
+        conn: &mut Conn,
+        hs: protocol::Handshake,
+    ) -> Result<(), Teardown> {
         let resumed = hs.resume.is_some();
         // Codec negotiation: intersect the client's capability bits with
         // the server's enabled set (v2 clients advertise nothing and get
         // f32).  Renegotiated on every attachment, so a RECONNECT from a
         // differently-capable client binary still gets a sound session.
-        let negotiated = wire::negotiate(hs.wire_caps, self.state.wire_caps);
+        let negotiated = wire::negotiate(hs.wire_caps, self.state.shared.wire_caps);
         let version = hs.version;
         // A v2 reply cannot carry the precision byte, so a v2 client
         // has no way to match a non-f32 compute server — its digests
         // would silently mismatch on every frame.  Fail fast instead.
-        if version < protocol::VERSION && self.state.precision != Precision::F32 {
+        if version < protocol::VERSION && self.state.shared.precision != Precision::F32 {
             self.reject(
                 conn,
                 version,
                 format!(
                     "server computes at {} precision; protocol v2 cannot negotiate it \
                      (upgrade the client or run the server at --precision f32)",
-                    self.state.precision.as_str()
+                    self.state.shared.precision.as_str()
                 ),
             );
             return Ok(());
@@ -732,13 +849,23 @@ impl EventLoop {
         let (handle, plan, last_ack): (SessionHandle, Arc<ServerModelPlan>, u64) =
             if let Some(r) = hs.resume {
                 let stream = conn.stream.try_clone().map_err(|_| Teardown::Close)?;
-                let handle = match self.state.sessions.try_resume(
+                let handle = match self.state.shared.sessions.try_resume(
                     r.session_id,
                     &hs.client_id,
                     r.token,
                     stream,
                 ) {
-                    Ok(h) => h,
+                    Ok((h, displaced)) => {
+                        // Cross-shard RECONNECT: the displaced attachment
+                        // may live on another shard's reactor.  Its epoch
+                        // is already stale (try_resume invalidated it),
+                        // so retiring it is pure cleanup — do it directly
+                        // when it is ours, via the mailbox otherwise.
+                        if let Some((shard, conn_id)) = displaced {
+                            self.retire_displaced(shard, conn_id);
+                        }
+                        h
+                    }
                     Err(why) => {
                         self.reject(conn, version, why);
                         return Ok(());
@@ -754,7 +881,7 @@ impl EventLoop {
                 {
                     Ok(p) => (handle, p, r.last_ack),
                     Err(e) => {
-                        self.state.sessions.detach_now(handle.id, handle.attach_epoch);
+                        self.state.shared.sessions.detach_now(handle.id, handle.attach_epoch);
                         self.reject(conn, version, format!("{e:#}"));
                         return Ok(());
                     }
@@ -781,12 +908,12 @@ impl EventLoop {
                     let _ = self.state.plans.warm(&fb, || model::compile_server_plan(&fb));
                 }
                 let stream = conn.stream.try_clone().map_err(|_| Teardown::Close)?;
-                let handle = match self.state.sessions.try_open(
+                let handle = match self.state.shared.sessions.try_open(
                     &hs.client_id,
                     key,
                     stream,
-                    self.state.replay_ring,
-                    self.state.idle_timeout,
+                    self.state.shared.replay_ring,
+                    self.state.shared.idle_timeout,
                 ) {
                     Ok(h) => h,
                     Err(why) => {
@@ -814,7 +941,7 @@ impl EventLoop {
             token: handle.token,
             codec: (version >= protocol::VERSION).then(|| SessionCodec {
                 wire: negotiated,
-                precision: self.state.precision,
+                precision: self.state.shared.precision,
             }),
             trace: trace_ok,
             message: String::new(),
@@ -845,7 +972,7 @@ impl EventLoop {
                 .fetch_add(replayed as u64, Ordering::Relaxed);
         }
         self.note_queued(conn);
-        self.state.sessions.note_attached(handle.id);
+        self.state.shared.sessions.note_attached(handle.id, self.state.index, conn.id);
         let plan_metrics = self.state.metrics.plan(&plan.key);
         conn.state = ConnState::Attached(Attachment {
             session_id: handle.id,
@@ -858,10 +985,28 @@ impl EventLoop {
             plan_metrics,
             traced: HashMap::new(),
         });
-        if !self.state.idle_timeout.is_zero() {
-            self.set_conn_deadline(conn, self.state.idle_timeout);
+        if !self.state.shared.idle_timeout.is_zero() {
+            self.set_conn_deadline(conn, self.state.shared.idle_timeout);
         }
         Ok(())
+    }
+
+    /// Tear down the connection a resume takeover displaced.  Same shard:
+    /// finalize inline (the displaced conn id is never the handshaking
+    /// one — a resume arrives on a new connection).  Different shard:
+    /// post a retire notice to its mailbox.  In both cases the displaced
+    /// attachment's epoch is stale, so the finalize leaves the session
+    /// untouched; its socket is already shut down by `try_resume`.
+    fn retire_displaced(&mut self, shard: usize, conn_id: u64) {
+        if shard == self.state.index {
+            if let Some(c) = self.conns.remove(&conn_id) {
+                self.finalize(c, Teardown::Close);
+            }
+            return;
+        }
+        if let Some(mailbox) = self.state.shared.shard_mailbox(shard) {
+            mailbox.push(ShardMsg::Retire { conn: conn_id });
+        }
     }
 
     // ------------------------------------------------------------ writes
@@ -1000,10 +1145,10 @@ impl EventLoop {
                     // failed.  (A resumed client still holds the
                     // credentials from its original accept and may
                     // RECONNECT again, so it detaches normally below.)
-                    self.state.sessions.close_if_current(a.session_id, a.epoch);
+                    self.state.shared.sessions.close_if_current(a.session_id, a.epoch);
                 }
                 Teardown::Detach => {
-                    if self.state.sessions.detach(a.session_id, a.epoch) {
+                    if self.state.shared.sessions.detach(a.session_id, a.epoch) {
                         // Abrupt loss is a link-failure signal: the
                         // exported per-session health row reads degraded
                         // until a RECONNECT recovers it.
@@ -1017,10 +1162,10 @@ impl EventLoop {
                     }
                 }
                 Teardown::Close => {
-                    self.state.sessions.close_if_current(a.session_id, a.epoch);
+                    self.state.shared.sessions.close_if_current(a.session_id, a.epoch);
                 }
                 Teardown::Shutdown => {
-                    self.state.sessions.close(a.session_id);
+                    self.state.shared.sessions.close(a.session_id);
                 }
             },
         }

@@ -544,6 +544,10 @@ pub struct WaveConfig {
     pub seed: u64,
     /// Requested activation wire dtype (negotiated per session).
     pub wire: WireDtype,
+    /// Client-id prefix (session i identifies as "{tag}-{i}").  Waves
+    /// run in parallel threads against one server must use distinct
+    /// tags so their client ids never collide.
+    pub tag: String,
 }
 
 impl Default for WaveConfig {
@@ -555,6 +559,7 @@ impl Default for WaveConfig {
             pp: 2,
             seed: 11,
             wire: WireDtype::F32,
+            tag: "wave".to_string(),
         }
     }
 }
@@ -567,6 +572,11 @@ pub struct WaveReport {
     /// Wrong bytes, error/reject responses, or read failures.
     pub errors: u64,
     pub wall: Duration,
+    /// Wall time of the request rounds only — connects excluded.  The
+    /// scaling bench derives throughput from this: the serial connect
+    /// phase is acceptor-bound and identical across core counts, so
+    /// folding it in would dampen the very effect under measurement.
+    pub infer_wall: Duration,
     pub latency: Arc<LatencyHistogram>,
 }
 
@@ -582,6 +592,7 @@ impl WaveReport {
             ("ok", Json::from(self.ok)),
             ("errors", Json::from(self.errors)),
             ("wall_ms", Json::from(self.wall.as_secs_f64() * 1e3)),
+            ("infer_wall_ms", Json::from(self.infer_wall.as_secs_f64() * 1e3)),
             ("requests_per_sec", Json::from(rps)),
             ("latency", self.latency.to_json()),
         ])
@@ -597,7 +608,8 @@ pub fn run_session_wave(cfg: &WaveConfig) -> Result<WaveReport> {
     let mut streams = Vec::with_capacity(cfg.sessions);
     let mut codec = crate::runtime::wire::SessionCodec::f32();
     for i in 0..cfg.sessions {
-        let hello = Handshake::v3(MODEL_NAME, cfg.pp, &format!("wave-{i}"), cfg.wire.caps());
+        let hello =
+            Handshake::v3(MODEL_NAME, cfg.pp, &format!("{}-{i}", cfg.tag), cfg.wire.caps());
         let (s, reply, c) = connect_client(&cfg.addr, &hello, Some(Duration::from_secs(30)))
             .with_context(|| format!("wave session {i} connecting to {}", cfg.addr))?;
         anyhow::ensure!(reply.accepted, "wave session {i} rejected: {}", reply.message);
@@ -606,6 +618,7 @@ pub fn run_session_wave(cfg: &WaveConfig) -> Result<WaveReport> {
     }
     let mut ok = 0u64;
     let mut errors = 0u64;
+    let infer_t0 = Instant::now();
     let mut sent_at = vec![Instant::now(); streams.len()];
     // One set of frame buffers serves the whole wave (the driver is
     // single-threaded by design); per-session expected digests persist
@@ -634,6 +647,7 @@ pub fn run_session_wave(cfg: &WaveConfig) -> Result<WaveReport> {
             }
         }
     }
+    let infer_wall = infer_t0.elapsed();
     // Clean close: free every server-side slot immediately.
     for s in streams.iter_mut() {
         let _ = write_frame(s, cfg.rounds + 1, ReqKind::Bye, &[]);
@@ -643,6 +657,7 @@ pub fn run_session_wave(cfg: &WaveConfig) -> Result<WaveReport> {
         ok,
         errors,
         wall: t0.elapsed(),
+        infer_wall,
         latency,
     })
 }

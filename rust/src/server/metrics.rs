@@ -128,6 +128,46 @@ impl ServingMetrics {
         worker.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Fold another `ServingMetrics` (one shard's) into this one.  Used
+    /// only at scrape time by the thread-per-core server: each shard owns
+    /// a private instance, and a scrape builds a fresh merged view, so the
+    /// hot path never touches a cross-core counter.  Counters add,
+    /// `queue_high_water` takes the max, worker shards append (preserving
+    /// per-worker rows across shards), and per-plan histograms merge
+    /// losslessly via `LatencyHistogram::merge_from`.
+    pub fn merge_from(&self, other: &ServingMetrics) {
+        let pairs = [
+            (&self.sessions_admitted, &other.sessions_admitted),
+            (&self.sessions_rejected, &other.sessions_rejected),
+            (&self.requests_rejected, &other.requests_rejected),
+            (&self.batches_dispatched, &other.batches_dispatched),
+            (&self.requests_batched, &other.requests_batched),
+            (&self.sessions_detached, &other.sessions_detached),
+            (&self.sessions_resumed, &other.sessions_resumed),
+            (&self.sessions_reaped, &other.sessions_reaped),
+            (&self.responses_replayed, &other.responses_replayed),
+            (&self.duplicate_requests, &other.duplicate_requests),
+            (&self.plan_switches, &other.plan_switches),
+            (&self.pings, &other.pings),
+            (&self.read_pauses, &other.read_pauses),
+        ];
+        for (dst, src) in pairs {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.queue_high_water
+            .fetch_max(other.queue_high_water.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.wire.merge_from(&other.wire);
+        // Appending the Arc shards keeps the merged view live and lossless
+        // (requests_completed / request_errors sum over all of them).
+        self.workers.lock().unwrap().extend(other.workers.lock().unwrap().iter().cloned());
+        for (key, src) in other.per_plan.lock().unwrap().iter() {
+            let dst = self.plan(key);
+            dst.completed.fetch_add(src.completed.load(Ordering::Relaxed), Ordering::Relaxed);
+            dst.errors.fetch_add(src.errors.load(Ordering::Relaxed), Ordering::Relaxed);
+            dst.latency.merge_from(&src.latency);
+        }
+    }
+
     /// Mean requests per dispatched batch (the coalescing win).
     pub fn batch_occupancy(&self) -> f64 {
         let batches = self.batches_dispatched.load(Ordering::Relaxed);
@@ -240,6 +280,58 @@ mod tests {
         m.note_queue_depth(7);
         m.note_queue_depth(3);
         assert_eq!(m.queue_high_water.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn shard_merge_equals_single_instance_totals() {
+        // Drive the same traffic into one shared instance and into two
+        // per-shard instances, then merge the shards: every counter, the
+        // wire totals, and the per-plan latency quantiles must agree.
+        let shared = ServingMetrics::new();
+        let shards = [ServingMetrics::new(), ServingMetrics::new()];
+        let key = PlanKey::new("synthetic", 2);
+        for i in 0..100u64 {
+            let m = &shards[(i % 2) as usize];
+            for target in [m, &shared] {
+                target.sessions_admitted.fetch_add(1, Ordering::Relaxed);
+                target.note_batch(2);
+                target.note_queue_depth(i);
+                target.wire.note_rx(100 + i, 400 + i);
+                let (w, p) = (target.worker(0), target.plan(&key));
+                target.note_completed(
+                    &w,
+                    &p,
+                    Duration::from_micros(500 + 37 * i),
+                    Duration::from_micros(100),
+                );
+            }
+        }
+        let merged = ServingMetrics::new();
+        for s in &shards {
+            merged.merge_from(s);
+        }
+        assert_eq!(merged.requests_completed(), shared.requests_completed());
+        assert_eq!(
+            merged.sessions_admitted.load(Ordering::Relaxed),
+            shared.sessions_admitted.load(Ordering::Relaxed)
+        );
+        assert_eq!(
+            merged.queue_high_water.load(Ordering::Relaxed),
+            shared.queue_high_water.load(Ordering::Relaxed)
+        );
+        assert_eq!(
+            merged.wire.bytes_rx.load(Ordering::Relaxed),
+            shared.wire.bytes_rx.load(Ordering::Relaxed)
+        );
+        assert!((merged.batch_occupancy() - shared.batch_occupancy()).abs() < 1e-12);
+        let (mp, sp) = (merged.plan(&key), shared.plan(&key));
+        assert_eq!(mp.completed.load(Ordering::Relaxed), sp.completed.load(Ordering::Relaxed));
+        assert_eq!(mp.latency.count(), sp.latency.count());
+        assert_eq!(mp.latency.sum_us(), sp.latency.sum_us());
+        assert_eq!(mp.latency.bucket_counts(), sp.latency.bucket_counts());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(mp.latency.quantile_ms(q), sp.latency.quantile_ms(q));
+        }
     }
 
     #[test]

@@ -5,23 +5,32 @@
 //! this subsystem runs a long-lived TCP service that concurrently serves
 //! many endpoint clients:
 //!
-//! * **event-driven core** (`conn`, `runtime::reactor`) — ONE reactor
-//!   thread runs the accept loop, every connection's frame codecs, all
-//!   deadline/reap timers, and the completion fan-in over an epoll
-//!   poller and a hierarchical timer wheel.  Sessions are state
-//!   machines, not threads: the server's thread inventory is fixed
-//!   (reactor + dispatcher + workers) whether it holds 1 session or
-//!   512+;
+//! * **thread-per-core shards** (`conn`, `runtime::reactor`) — the
+//!   server is `--cores N` independent shards.  Each shard owns its own
+//!   epoll reactor + timer wheel, dispatcher thread, batch queue,
+//!   worker set, plan cache, and metrics shard; the hot infer path
+//!   (read → admit → queue → worker → completion → write) touches no
+//!   cross-shard state, and shard tallies merge only at scrape time.
+//!   Connections land on shards via per-shard `SO_REUSEPORT` listeners
+//!   (kernel-spread accepts), with a round-robin acceptor-thread
+//!   fallback that hands the raw fd to a shard's mailbox *before* the
+//!   handshake.  Sessions are state machines, not threads: the thread
+//!   inventory is `cores × (reactor + dispatcher + workers)` whether
+//!   the server holds 1 session or 4096;
 //! * **session manager** (`session`) — handshake carries (model,
 //!   partition point, client id); plans are compiled once per
 //!   `(model, pp)` via the `compiler::cache::PlanCache` and shared.
 //!   Protocol v2 sessions survive link loss: abrupt disconnects detach
 //!   (state retained for `detach_linger`), a RECONNECT handshake
 //!   re-attaches and replays unacknowledged responses from the
-//!   per-session retransmit ring (`session::SessionOutbox`);
+//!   per-session retransmit ring (`session::SessionOutbox`).  The
+//!   session directory is the one cross-shard structure — control
+//!   plane only (handshake, resume, detach, reap) — so a RECONNECT
+//!   that lands on a *different* shard re-attaches there, retiring the
+//!   displaced connection on its home shard through the shard mailbox;
 //! * **admission control + micro-batching** (`batch`) — bounded session
-//!   count and queue depth, explicit reject responses, and cross-session
-//!   coalescing of same-plan requests;
+//!   count and per-shard queue depth, explicit reject responses, and
+//!   cross-session coalescing of same-plan requests;
 //! * **core-pinned worker pool** (`workers`, `spsc`) — thread-per-core
 //!   via `platform::affinity`, one engine shard per worker per plan,
 //!   SPSC hand-off instead of locks, parked (0% CPU) when idle;
@@ -40,15 +49,17 @@
 //!   (`--precision int8`);
 //! * **serving metrics** (`metrics`) — queue depth, batch occupancy,
 //!   per-plan p50/p95/p99 latency, reject/replay/resume/backpressure
-//!   counters, and the wire byte/compression gauges;
+//!   counters, and the wire byte/compression gauges; one instance per
+//!   shard, losslessly merged into a single snapshot at scrape time
+//!   (`ServingMetrics::merge_from`);
 //! * **loadgen** (`loadgen`) — N synthetic clients driven through
 //!   `netsim::LinkShaper` link profiles, verifying every response, with
 //!   a chaos mode that kills links mid-run, plus a single-threaded
 //!   session-wave driver for 512-session scale tests.
 //!
 //! Protocol details live in `protocol`; DESIGN.md documents the v2
-//! handshake, framing, the failover state machine, and the reactor's
-//! connection state machine.
+//! handshake, framing, the failover state machine, the reactor's
+//! connection state machine, and the shard layout.
 
 pub mod batch;
 pub mod conn;
@@ -62,20 +73,21 @@ pub mod spsc;
 pub mod workers;
 
 use crate::compiler::PlanCache;
+use crate::platform::affinity;
 use crate::runtime::reactor::WakeHandle;
 use crate::runtime::trace;
 use crate::runtime::wire::{Precision, CAP_F16, CAP_I8};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use batch::BatchQueue;
-use conn::{EventLoop, EventLoopCfg};
+use conn::{EventLoop, EventLoopCfg, ShardMailbox, ShardMsg};
 use metrics::ServingMetrics;
 use model::ServerModelPlan;
 use session::SessionManager;
 use std::io::Write;
-use std::net::{SocketAddr, TcpListener};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 use workers::WorkerPool;
@@ -84,18 +96,32 @@ use workers::WorkerPool;
 pub struct ServerConfig {
     /// Bind address ("127.0.0.1:0" = ephemeral port, for tests/benches).
     pub addr: String,
+    /// Reactor shards (`--cores`).  Each shard is a full serving stack
+    /// — reactor, dispatcher, batch queue, workers, plan cache, metrics
+    /// — sharing nothing on the request path.  `1` (the default) is the
+    /// degenerate single-reactor server.
+    pub cores: usize,
+    /// Force the acceptor-thread fallback even where `SO_REUSEPORT` is
+    /// available: one blocking accept loop hands connection `i` to
+    /// shard `i % cores` through its mailbox.  Placement becomes
+    /// deterministic in accept order — the cross-shard tests and the
+    /// scaling bench rely on that.
+    pub accept_rr: bool,
     /// Admission: maximum concurrent sessions (detached ones included —
     /// resumability holds the slot).
     pub max_sessions: usize,
-    /// Admission: maximum queued requests across all sessions.
+    /// Admission: maximum queued requests per shard.
     pub max_queue: usize,
     /// Dispatch: maximum requests coalesced into one batch.
     pub max_batch: usize,
     /// Dispatch: how long a forming batch waits for stragglers.
     pub batch_linger: Duration,
-    /// Worker threads (engine shards). 0 = one per core.
+    /// Worker threads (engine shards) **per reactor shard**.  0 = split
+    /// the machine: `max(1, core_count / cores)` per shard.
     pub workers: usize,
-    /// Pin worker i to core i % cores (Linux; best effort elsewhere).
+    /// Pin threads (Linux; best effort elsewhere): shard `s`'s reactor
+    /// to core `s`, its worker `w` to core `s·workers + w` (mod core
+    /// count) — shards tile the machine instead of stacking on core 0.
     pub pin_workers: bool,
     /// Reclaim a session whose client sends nothing for this long —
     /// silently-dead clients must not hold session slots forever.
@@ -127,10 +153,10 @@ pub struct ServerConfig {
     /// Record every Nth traced request (`--trace-sample`, min 1).
     pub trace_sample: u64,
     /// Bind a plaintext TCP scrape endpoint (`--metrics-addr`) that
-    /// answers every connect with one JSON snapshot — metrics, wire
-    /// counters, per-session rows, and the drained trace spans — then
-    /// closes.  `None` (the default) spawns nothing, keeping the fixed
-    /// thread inventory of a plain server.
+    /// answers every connect with one JSON snapshot — merged metrics,
+    /// wire counters, per-session and per-shard rows, and the drained
+    /// trace spans — then closes.  `None` (the default) spawns nothing,
+    /// keeping the fixed thread inventory of a plain server.
     pub metrics_addr: Option<String>,
 }
 
@@ -138,6 +164,8 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:0".to_string(),
+            cores: 1,
+            accept_rr: false,
             max_sessions: 64,
             max_queue: 1024,
             max_batch: 8,
@@ -157,37 +185,72 @@ impl Default for ServerConfig {
     }
 }
 
-/// Shared server state: everything here is interior-mutable, reached
-/// from the reactor thread, the dispatcher, and the workers.
-struct ServerState {
-    sessions: SessionManager,
-    queue: BatchQueue,
-    plans: PlanCache<ServerModelPlan>,
-    metrics: Arc<ServingMetrics>,
-    shutting_down: AtomicBool,
-    idle_timeout: Duration,
-    detach_linger: Duration,
-    replay_ring: usize,
+/// Cross-shard shared state — the control plane.  The session directory
+/// is consulted at handshake/resume/detach/reap time only; nothing on
+/// the per-request hot path reaches here.  Everything else is immutable
+/// config, plus the mailbox directory a shard uses to retire a
+/// connection displaced by a cross-shard RECONNECT.
+pub(crate) struct ServerState {
+    pub(crate) sessions: SessionManager,
+    pub(crate) shutting_down: AtomicBool,
+    pub(crate) idle_timeout: Duration,
+    pub(crate) detach_linger: Duration,
+    pub(crate) replay_ring: usize,
     /// Wire-codec capability set offered at negotiation.
-    wire_caps: u8,
+    pub(crate) wire_caps: u8,
     /// Engine-shard compute precision (returned in v3 replies).
-    precision: Precision,
+    pub(crate) precision: Precision,
+    /// One mailbox per shard, set exactly once at startup — after every
+    /// event loop exists, before any thread runs — so a cross-shard
+    /// message can never observe a partially built directory.
+    mailboxes: OnceLock<Vec<Arc<ShardMailbox>>>,
 }
 
-/// A running server.  `shutdown()` tears everything down in order:
-/// reactor (accept + sessions), batch queue (drained), workers.
-/// Dropping a `Server` without calling `shutdown` still *signals*
-/// everything to stop (threads wind down on their own) — it just
-/// doesn't join them.
-pub struct Server {
-    addr: SocketAddr,
-    state: Arc<ServerState>,
-    /// Interrupts the reactor's sleep so it observes `shutting_down`.
+impl ServerState {
+    /// Another shard's mailbox (for `ShardMsg::Retire` on cross-shard
+    /// RECONNECT, and the acceptor fallback's `ShardMsg::Accept`).
+    pub(crate) fn shard_mailbox(&self, shard: usize) -> Option<Arc<ShardMailbox>> {
+        self.mailboxes.get().and_then(|v| v.get(shard)).cloned()
+    }
+}
+
+/// One shard's private serving stack: everything the request hot path
+/// touches.  Owned by the shard's reactor/dispatcher/workers; other
+/// shards never read these — metrics and plan-cache counters are merged
+/// into one snapshot only at scrape time.
+pub(crate) struct ShardState {
+    pub(crate) index: usize,
+    pub(crate) shared: Arc<ServerState>,
+    pub(crate) queue: BatchQueue,
+    pub(crate) plans: PlanCache<ServerModelPlan>,
+    pub(crate) metrics: Arc<ServingMetrics>,
+}
+
+/// One shard's threads: the reactor, the dispatcher, and its worker
+/// pool (join handles held for orderly teardown).
+struct ShardRuntime {
+    state: Arc<ShardState>,
+    /// Interrupts the shard reactor's sleep so it observes
+    /// `shutting_down` (and drains its mailbox).
     wake: WakeHandle,
     reactor_handle: Option<JoinHandle<()>>,
     dispatch_handle: Option<JoinHandle<()>>,
     pool: Option<WorkerPool>,
-    worker_count: usize,
+}
+
+/// A running server.  `shutdown()` tears everything down in order:
+/// acceptor (if any), reactors (accept + sessions), batch queues
+/// (drained), workers.  Dropping a `Server` without calling `shutdown`
+/// still *signals* everything to stop (threads wind down on their own)
+/// — it just doesn't join them.
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    shards: Vec<ShardRuntime>,
+    /// Round-robin acceptor thread — only in the fallback/`accept_rr`
+    /// accept mode; per-shard listeners need no extra thread.
+    acceptor: Option<JoinHandle<()>>,
+    workers_per_shard: usize,
     /// Bound scrape endpoint + its thread (only with `metrics_addr`).
     metrics_endpoint: Option<(SocketAddr, JoinHandle<()>)>,
 }
@@ -203,67 +266,66 @@ impl Server {
             trace::set_sampling(cfg.trace_sample);
             trace::set_enabled(true);
         }
-        let listener = TcpListener::bind(cfg.addr.as_str())
-            .with_context(|| format!("binding server on {}", cfg.addr))?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true).context("setting acceptor non-blocking")?;
-        let workers =
-            if cfg.workers == 0 { crate::platform::affinity::core_count() } else { cfg.workers };
-        let metrics = Arc::new(ServingMetrics::new());
+        let cores = cfg.cores.max(1);
+
+        // Accept strategy.  cores == 1: one plain non-blocking listener
+        // on the only shard.  cores > 1: per-shard SO_REUSEPORT
+        // listeners (the kernel spreads connections; zero acceptor
+        // threads), falling back — or forced by `accept_rr` — to one
+        // blocking acceptor thread that hands connection i to shard
+        // i % cores through its mailbox before the handshake.
+        let mut shard_listeners: Vec<Option<TcpListener>> = (0..cores).map(|_| None).collect();
+        let mut rr_listener: Option<TcpListener> = None;
+        let addr;
+        if cores == 1 {
+            let l = TcpListener::bind(cfg.addr.as_str())
+                .with_context(|| format!("binding server on {}", cfg.addr))?;
+            addr = l.local_addr()?;
+            l.set_nonblocking(true).context("setting acceptor non-blocking")?;
+            shard_listeners[0] = Some(l);
+        } else if !cfg.accept_rr {
+            match bind_reuseport_set(&cfg.addr, cores) {
+                Ok((bound, listeners)) => {
+                    addr = bound;
+                    for (slot, l) in shard_listeners.iter_mut().zip(listeners) {
+                        *slot = Some(l);
+                    }
+                }
+                // No SO_REUSEPORT here (non-Linux, IPv6 bind, exotic
+                // failure): degrade to the acceptor thread.
+                Err(_) => {
+                    let l = TcpListener::bind(cfg.addr.as_str())
+                        .with_context(|| format!("binding server on {}", cfg.addr))?;
+                    addr = l.local_addr()?;
+                    rr_listener = Some(l);
+                }
+            }
+        } else {
+            let l = TcpListener::bind(cfg.addr.as_str())
+                .with_context(|| format!("binding server on {}", cfg.addr))?;
+            addr = l.local_addr()?;
+            rr_listener = Some(l);
+        }
+
+        let workers_per_shard = if cfg.workers == 0 {
+            (affinity::core_count() / cores).max(1)
+        } else {
+            cfg.workers
+        };
         let state = Arc::new(ServerState {
             sessions: SessionManager::new(cfg.max_sessions),
-            queue: BatchQueue::new(cfg.max_queue),
-            plans: PlanCache::new(),
-            metrics: metrics.clone(),
             shutting_down: AtomicBool::new(false),
             idle_timeout: cfg.session_idle_timeout,
             detach_linger: cfg.detach_linger,
             replay_ring: cfg.replay_ring,
             wire_caps: cfg.wire_caps,
             precision: cfg.precision,
+            mailboxes: OnceLock::new(),
         });
 
-        let (pool, mut dispatch) =
-            WorkerPool::spawn(workers, cfg.pin_workers, metrics.clone(), cfg.precision)?;
-
-        // Dispatcher: drain the batch queue into the worker rings until
-        // the queue is closed AND empty, then stop the workers.  (If this
-        // spawn fails, `dispatch` — the only handle that can stop the
-        // workers — is lost inside the dropped closure; thread-spawn
-        // failure at startup means the process is resource-exhausted and
-        // the caller is expected to abort.)
-        let dispatch_handle = {
-            let state = state.clone();
-            let max_batch = cfg.max_batch;
-            let linger = cfg.batch_linger;
-            std::thread::Builder::new()
-                .name("serve-dispatch".into())
-                .spawn(move || {
-                    while let Some(mut batch) = state.queue.pop_batch(max_batch, linger) {
-                        state.metrics.note_batch(batch.len());
-                        // Stamp the dispatch edge on traced requests:
-                        // recv..dispatch is the batch-linger span,
-                        // dispatch..worker-pop the queue-wait span.
-                        if trace::enabled() {
-                            let now = trace::now_us();
-                            for req in &mut batch {
-                                if req.trace_id != 0 {
-                                    req.dispatched_us = now;
-                                }
-                            }
-                        }
-                        dispatch.dispatch(batch);
-                    }
-                    dispatch.shutdown_workers();
-                })
-                .context("spawning dispatcher")?
-        };
-
-        // Reactor: the entire serving surface — accept, handshakes,
-        // frame codecs, timers, completion fan-out — on one thread.
         // Pre-handshake connections are bounded separately from
         // max_sessions (they are the one resource a client can hold
-        // without passing admission); the detach reaper rides the
+        // without passing admission); the detach reaper rides shard 0's
         // timer wheel.
         let loop_cfg = EventLoopCfg {
             max_pending: cfg.max_sessions.saturating_mul(2).saturating_add(16),
@@ -272,59 +334,100 @@ impl Server {
                 .max(Duration::from_millis(10)),
             write_high_water: cfg.write_high_water.max(1),
         };
-        let reactor_result = EventLoop::new(listener, state.clone(), loop_cfg).and_then(
-            |(event_loop, wake)| {
-                std::thread::Builder::new()
-                    .name("serve-reactor".into())
-                    .spawn(move || event_loop.run())
-                    .context("spawning reactor")
-                    .map(|handle| (handle, wake))
-            },
-        );
-        let (reactor_handle, wake) = match reactor_result {
-            Ok(x) => x,
-            Err(e) => {
-                // Unwind what already runs: drain/stop dispatcher +
-                // workers so a failed start leaks nothing.
-                state.queue.close();
-                let _ = dispatch_handle.join();
-                pool.join();
-                return Err(e);
+
+        // Stage 1: build every shard's state and event loop before any
+        // thread runs — the mailbox directory must be complete before
+        // the first cross-shard message can be sent.  Nothing to unwind
+        // on failure here.
+        let mut pending: Vec<(Arc<ShardState>, EventLoop, WakeHandle)> =
+            Vec::with_capacity(cores);
+        let mut mailboxes = Vec::with_capacity(cores);
+        for (index, listener) in shard_listeners.into_iter().enumerate() {
+            let shard = Arc::new(ShardState {
+                index,
+                shared: state.clone(),
+                queue: BatchQueue::new(cfg.max_queue),
+                plans: PlanCache::new(),
+                metrics: Arc::new(ServingMetrics::new()),
+            });
+            let (event_loop, wake, mailbox) = EventLoop::new(listener, shard.clone(), loop_cfg)?;
+            pending.push((shard, event_loop, wake));
+            mailboxes.push(mailbox);
+        }
+        let _ = state.mailboxes.set(mailboxes);
+
+        // Stage 2: spawn each shard's worker pool, dispatcher, and
+        // reactor; a spawn failure unwinds every shard already running.
+        let mut shards: Vec<ShardRuntime> = Vec::with_capacity(cores);
+        let mut acceptor: Option<JoinHandle<()>> = None;
+        for (shard, event_loop, wake) in pending {
+            match spawn_shard(shard, event_loop, wake, &cfg, workers_per_shard) {
+                Ok(runtime) => shards.push(runtime),
+                Err(e) => {
+                    unwind_started(&state, addr, &mut shards, &mut acceptor);
+                    return Err(e);
+                }
             }
-        };
+        }
+
+        // The acceptor fallback spawns only after every mailbox has a
+        // live reactor behind it.
+        if let Some(listener) = rr_listener {
+            let astate = state.clone();
+            let spawned = std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || acceptor_main(listener, astate, cores))
+                .context("spawning acceptor");
+            match spawned {
+                Ok(h) => acceptor = Some(h),
+                Err(e) => {
+                    unwind_started(&state, addr, &mut shards, &mut acceptor);
+                    return Err(e);
+                }
+            }
+        }
 
         // Scrape endpoint: strictly opt-in — a plain server keeps its
-        // fixed reactor+dispatcher+workers inventory.
+        // fixed shards(+acceptor) inventory.
         let metrics_endpoint = match &cfg.metrics_addr {
             None => None,
             Some(maddr) => {
-                let mlistener = TcpListener::bind(maddr.as_str())
-                    .with_context(|| format!("binding metrics endpoint on {maddr}"))?;
-                let bound = mlistener.local_addr()?;
-                mlistener.set_nonblocking(true).context("setting metrics endpoint non-blocking")?;
-                let mstate = state.clone();
-                let handle = std::thread::Builder::new()
-                    .name("serve-metrics".into())
-                    .spawn(move || metrics_endpoint_main(mlistener, mstate))
-                    .context("spawning metrics endpoint")?;
-                Some((bound, handle))
+                let spawned = (|| {
+                    let mlistener = TcpListener::bind(maddr.as_str())
+                        .with_context(|| format!("binding metrics endpoint on {maddr}"))?;
+                    let bound = mlistener.local_addr()?;
+                    mlistener
+                        .set_nonblocking(true)
+                        .context("setting metrics endpoint non-blocking")?;
+                    let mstate = state.clone();
+                    let mshards: Vec<Arc<ShardState>> =
+                        shards.iter().map(|sh| sh.state.clone()).collect();
+                    let handle = std::thread::Builder::new()
+                        .name("serve-metrics".into())
+                        .spawn(move || metrics_endpoint_main(mlistener, mstate, mshards))
+                        .context("spawning metrics endpoint")?;
+                    Ok::<_, anyhow::Error>((bound, handle))
+                })();
+                match spawned {
+                    Ok(ep) => Some(ep),
+                    Err(e) => {
+                        unwind_started(&state, addr, &mut shards, &mut acceptor);
+                        return Err(e);
+                    }
+                }
             }
         };
 
-        Ok(Server {
-            addr,
-            state,
-            wake,
-            reactor_handle: Some(reactor_handle),
-            dispatch_handle: Some(dispatch_handle),
-            pool: Some(pool),
-            worker_count: workers,
-            metrics_endpoint,
-        })
+        Ok(Server { addr, state, shards, acceptor, workers_per_shard, metrics_endpoint })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Number of reactor shards actually running.
+    pub fn cores(&self) -> usize {
+        self.shards.len()
     }
 
     pub fn active_sessions(&self) -> usize {
@@ -336,15 +439,33 @@ impl Server {
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.state.queue.depth()
+        self.shards.iter().map(|sh| sh.state.queue.depth()).sum()
     }
 
-    /// The server's fixed thread inventory: 1 reactor + 1 dispatcher +
-    /// the worker pool (+1 scrape thread only when `metrics_addr` is
-    /// configured).  Invariant under session count — the property the
-    /// session-scale bench and CI assert.
+    /// The server's fixed thread inventory: per shard, 1 reactor + 1
+    /// dispatcher + its workers; plus the round-robin acceptor (only in
+    /// fallback/`accept_rr` mode) and the scrape thread (only with
+    /// `metrics_addr`).  Invariant under session count — the property
+    /// the session-scale bench and CI assert.
     pub fn thread_count(&self) -> usize {
-        2 + self.worker_count + usize::from(self.metrics_endpoint.is_some())
+        self.shards.len() * (2 + self.workers_per_shard)
+            + usize::from(self.acceptor.is_some())
+            + usize::from(self.metrics_endpoint.is_some())
+    }
+
+    /// Per-shard `(sessions_admitted, requests_completed)` — how evenly
+    /// the accept path spread the load.  The scaling bench asserts its
+    /// spread stays within bounds.
+    pub fn shard_loads(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .iter()
+            .map(|sh| {
+                (
+                    sh.state.metrics.sessions_admitted.load(Ordering::Relaxed),
+                    sh.state.metrics.requests_completed(),
+                )
+            })
+            .collect()
     }
 
     /// Bound address of the `--metrics-addr` scrape endpoint, if one
@@ -353,10 +474,13 @@ impl Server {
         self.metrics_endpoint.as_ref().map(|(addr, _)| *addr)
     }
 
-    /// Metrics snapshot (also embeds the plan-cache counters and the
-    /// per-session attachment/health rows).
+    /// Merged metrics snapshot (also embeds the summed plan-cache
+    /// counters, the per-shard load rows, and the per-session
+    /// attachment/health rows).
     pub fn metrics_json(&self) -> Json {
-        let mut j = snapshot_json(&self.state);
+        let shard_states: Vec<Arc<ShardState>> =
+            self.shards.iter().map(|sh| sh.state.clone()).collect();
+        let mut j = snapshot_json(&self.state, &shard_states);
         if let Json::Obj(map) = &mut j {
             map.insert("active_sessions".into(), Json::from(self.active_sessions()));
             map.insert("detached_sessions".into(), Json::from(self.detached_sessions()));
@@ -365,29 +489,43 @@ impl Server {
         j
     }
 
-    /// Orderly shutdown; returns the final metrics snapshot.
+    /// Orderly shutdown; returns the final merged metrics snapshot.
     pub fn shutdown(mut self) -> Json {
-        // Flag + wake: the reactor observes the flag at the top of its
-        // loop, closes every connection (sessions freed), and exits.
+        // Flag + wake: each reactor observes the flag at the top of its
+        // loop, closes its connections (sessions freed), and exits.
         self.state.shutting_down.store(true, Ordering::SeqCst);
-        self.wake.wake();
+        for sh in &self.shards {
+            sh.wake.wake();
+        }
+        // The acceptor blocks in accept(): a connect-to-self kick makes
+        // it observe the flag and exit.
+        if let Some(h) = self.acceptor.take() {
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
         if let Some((_, h)) = self.metrics_endpoint.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.reactor_handle.take() {
-            let _ = h.join();
+        for sh in &mut self.shards {
+            if let Some(h) = sh.reactor_handle.take() {
+                let _ = h.join();
+            }
         }
-        // Refuse any handshake that raced past the reactor's exit...
+        // Refuse any handshake that raced past the reactors' exit...
         self.state.sessions.shutdown_all();
-        // ...then let the queue drain and the workers stop.
-        self.state.queue.close();
-        if let Some(h) = self.dispatch_handle.take() {
-            let _ = h.join();
+        // ...then let each shard's queue drain and its workers stop.
+        for sh in &mut self.shards {
+            sh.state.queue.close();
+            if let Some(h) = sh.dispatch_handle.take() {
+                let _ = h.join();
+            }
+            if let Some(pool) = sh.pool.take() {
+                pool.join();
+            }
         }
-        if let Some(pool) = self.pool.take() {
-            pool.join();
-        }
-        snapshot_json(&self.state)
+        let shard_states: Vec<Arc<ShardState>> =
+            self.shards.iter().map(|sh| sh.state.clone()).collect();
+        snapshot_json(&self.state, &shard_states)
     }
 }
 
@@ -395,12 +533,191 @@ impl Drop for Server {
     fn drop(&mut self) {
         // Signal-only teardown for servers dropped without `shutdown()`
         // (and a harmless no-op re-signal after an explicit shutdown):
-        // the reactor wakes, sees the flag, closes its connections and
-        // exits; the dispatcher drains then stops the workers.
+        // each reactor wakes, sees the flag, closes its connections and
+        // exits; each dispatcher drains then stops its workers.  The
+        // acceptor (if still running) is unblocked by a self-connect
+        // and winds down on its own — signal-only means no join here.
         self.state.shutting_down.store(true, Ordering::SeqCst);
-        self.wake.wake();
+        for sh in &self.shards {
+            sh.wake.wake();
+        }
+        if self.acceptor.take().is_some() {
+            let _ = TcpStream::connect(self.addr);
+        }
         self.state.sessions.shutdown_all();
-        self.state.queue.close();
+        for sh in &self.shards {
+            sh.state.queue.close();
+        }
+    }
+}
+
+/// Bind `cores` SO_REUSEPORT listeners on one address: the first bind
+/// resolves an `addr:0` request to a concrete port, the rest share it.
+/// All-or-nothing — any failure rejects the whole set and the caller
+/// falls back to the acceptor thread.
+fn bind_reuseport_set(addr: &str, cores: usize) -> Result<(SocketAddr, Vec<TcpListener>)> {
+    let target = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{addr}: no usable address"))?;
+    let first = crate::runtime::net::bind_reuseport(target)?;
+    let bound = first.local_addr()?;
+    let mut listeners = vec![first];
+    for _ in 1..cores {
+        listeners.push(crate::runtime::net::bind_reuseport(bound)?);
+    }
+    for l in &listeners {
+        l.set_nonblocking(true).context("setting shard listener non-blocking")?;
+    }
+    Ok((bound, listeners))
+}
+
+/// Spawn one shard's threads: its worker pool, its dispatcher (drains
+/// the shard queue into the worker rings until the queue is closed AND
+/// empty, then stops the workers), and its reactor.
+fn spawn_shard(
+    shard: Arc<ShardState>,
+    event_loop: EventLoop,
+    wake: WakeHandle,
+    cfg: &ServerConfig,
+    workers_per_shard: usize,
+) -> Result<ShardRuntime> {
+    let s = shard.index;
+    let (pool, mut dispatch) = WorkerPool::spawn(
+        s,
+        workers_per_shard,
+        cfg.pin_workers,
+        shard.metrics.clone(),
+        cfg.precision,
+    )?;
+
+    // (If this spawn fails, `dispatch` — the only handle that can stop
+    // this shard's workers — is lost inside the dropped closure;
+    // thread-spawn failure at startup means the process is
+    // resource-exhausted and the caller is expected to abort.)
+    let dispatch_handle = {
+        let shard = shard.clone();
+        let max_batch = cfg.max_batch;
+        let linger = cfg.batch_linger;
+        std::thread::Builder::new()
+            .name(format!("serve-dispatch-{s}"))
+            .spawn(move || {
+                while let Some(mut batch) = shard.queue.pop_batch(max_batch, linger) {
+                    shard.metrics.note_batch(batch.len());
+                    // Stamp the dispatch edge on traced requests:
+                    // recv..dispatch is the batch-linger span,
+                    // dispatch..worker-pop the queue-wait span.
+                    if trace::enabled() {
+                        let now = trace::now_us();
+                        for req in &mut batch {
+                            if req.trace_id != 0 {
+                                req.dispatched_us = now;
+                            }
+                        }
+                    }
+                    dispatch.dispatch(batch);
+                }
+                dispatch.shutdown_workers();
+            })
+            .context("spawning dispatcher")?
+    };
+
+    let pin = cfg.pin_workers;
+    let reactor_result = std::thread::Builder::new()
+        .name(format!("serve-reactor-{s}"))
+        .spawn(move || {
+            if pin {
+                // Best effort: shard s's reactor shares core s with no
+                // other reactor (its workers tile from s·workers).
+                let _ = affinity::pin_to_core(s % affinity::core_count());
+            }
+            event_loop.run()
+        })
+        .context("spawning reactor");
+    let reactor_handle = match reactor_result {
+        Ok(h) => h,
+        Err(e) => {
+            // Unwind what already runs on this shard so a failed start
+            // leaks nothing.
+            shard.queue.close();
+            let _ = dispatch_handle.join();
+            pool.join();
+            return Err(e);
+        }
+    };
+
+    Ok(ShardRuntime {
+        state: shard,
+        wake,
+        reactor_handle: Some(reactor_handle),
+        dispatch_handle: Some(dispatch_handle),
+        pool: Some(pool),
+    })
+}
+
+/// Best-effort unwind of a partially started server (some shards
+/// running, maybe an acceptor): signal, kick, join, drain — in the same
+/// order as `Server::shutdown`.
+fn unwind_started(
+    state: &Arc<ServerState>,
+    addr: SocketAddr,
+    shards: &mut Vec<ShardRuntime>,
+    acceptor: &mut Option<JoinHandle<()>>,
+) {
+    state.shutting_down.store(true, Ordering::SeqCst);
+    for sh in shards.iter() {
+        sh.wake.wake();
+    }
+    if let Some(h) = acceptor.take() {
+        let _ = TcpStream::connect(addr);
+        let _ = h.join();
+    }
+    state.sessions.shutdown_all();
+    for sh in shards.iter_mut() {
+        if let Some(h) = sh.reactor_handle.take() {
+            let _ = h.join();
+        }
+        sh.state.queue.close();
+        if let Some(h) = sh.dispatch_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(pool) = sh.pool.take() {
+            pool.join();
+        }
+    }
+}
+
+/// The acceptor fallback: a blocking accept loop that hands connection
+/// `i` to shard `i % cores` through its mailbox, *before* any bytes are
+/// read — the owning reactor runs the handshake and everything after.
+/// Used where per-shard SO_REUSEPORT listeners are unavailable, or when
+/// `accept_rr` forces deterministic placement.  `shutdown()` unblocks
+/// it with a connect-to-self kick.
+fn acceptor_main(listener: TcpListener, state: Arc<ServerState>, cores: usize) {
+    let mut next = 0usize;
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if state.shutting_down.load(Ordering::SeqCst) {
+                    // The shutdown kick (or a client that raced it) —
+                    // drop the socket and exit.
+                    return;
+                }
+                if let Some(mailbox) = state.shard_mailbox(next % cores) {
+                    mailbox.push(ShardMsg::Accept(stream));
+                }
+                next += 1;
+            }
+            Err(_) => {
+                if state.shutting_down.load(Ordering::SeqCst) {
+                    return;
+                }
+                // Transient accept failure (fd exhaustion, aborted
+                // connect): back off briefly instead of spinning.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
     }
 }
 
@@ -409,12 +726,16 @@ impl Drop for Server {
 /// `nc`/a 20-line client can scrape it, no HTTP stack needed.  Trace
 /// spans are **drained** into the snapshot, so each scrape hands out
 /// the spans recorded since the previous one exactly once.
-fn metrics_endpoint_main(listener: TcpListener, state: Arc<ServerState>) {
+fn metrics_endpoint_main(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    shards: Vec<Arc<ShardState>>,
+) {
     while !state.shutting_down.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((mut sock, _peer)) => {
                 let _ = sock.set_nonblocking(false);
-                let body = scrape_json(&state).to_string();
+                let body = scrape_json(&state, &shards).to_string();
                 let _ = sock.write_all(body.as_bytes());
                 let _ = sock.shutdown(std::net::Shutdown::Write);
             }
@@ -426,10 +747,10 @@ fn metrics_endpoint_main(listener: TcpListener, state: Arc<ServerState>) {
     }
 }
 
-/// One scrape payload: the serving metrics snapshot plus session rows
-/// and the flight recorder's drained spans/summary.
-fn scrape_json(state: &ServerState) -> Json {
-    let mut j = snapshot_json(state);
+/// One scrape payload: the merged serving-metrics snapshot plus session
+/// rows and the flight recorder's drained spans/summary.
+fn scrape_json(state: &ServerState, shards: &[Arc<ShardState>]) -> Json {
+    let mut j = snapshot_json(state, shards);
     let spans = trace::drain();
     if let Json::Obj(map) = &mut j {
         map.insert("active_sessions".into(), Json::from(state.sessions.active_count()));
@@ -447,15 +768,54 @@ fn scrape_json(state: &ServerState) -> Json {
     j
 }
 
-/// Serving metrics + plan-cache counters as one JSON object.
-fn snapshot_json(state: &ServerState) -> Json {
-    let mut j = state.metrics.to_json();
+/// Merge-at-scrape: shards never share a metrics cache line on the hot
+/// path; a snapshot folds every shard into one fresh `ServingMetrics`
+/// (lossless — counts, sums, min/max, histogram buckets all add), sums
+/// the per-shard plan-cache counters, and appends per-shard load rows.
+fn snapshot_json(state: &ServerState, shards: &[Arc<ShardState>]) -> Json {
+    let merged = ServingMetrics::new();
+    for shard in shards {
+        merged.merge_from(&shard.metrics);
+    }
+    let mut j = merged.to_json();
     if let Json::Obj(map) = &mut j {
-        map.insert("plan_cache_hits".into(), Json::from(state.plans.hits()));
-        map.insert("plan_cache_misses".into(), Json::from(state.plans.misses()));
-        map.insert("plans_warmed".into(), Json::from(state.plans.warmed()));
-        map.insert("plans_compiled".into(), Json::from(state.plans.len()));
+        map.insert(
+            "plan_cache_hits".into(),
+            Json::from(shards.iter().map(|s| s.plans.hits()).sum::<u64>()),
+        );
+        map.insert(
+            "plan_cache_misses".into(),
+            Json::from(shards.iter().map(|s| s.plans.misses()).sum::<u64>()),
+        );
+        map.insert(
+            "plans_warmed".into(),
+            Json::from(shards.iter().map(|s| s.plans.warmed()).sum::<u64>()),
+        );
+        map.insert(
+            "plans_compiled".into(),
+            Json::from(shards.iter().map(|s| s.plans.len()).sum::<usize>()),
+        );
         map.insert("sessions_evicted".into(), Json::from(state.sessions.evicted_for_capacity()));
+        map.insert("cores".into(), Json::from(shards.len()));
+        map.insert(
+            "per_shard".into(),
+            Json::Arr(
+                shards
+                    .iter()
+                    .map(|s| {
+                        Json::from_pairs(vec![
+                            ("shard", Json::from(s.index)),
+                            (
+                                "sessions_admitted",
+                                Json::from(s.metrics.sessions_admitted.load(Ordering::Relaxed)),
+                            ),
+                            ("requests_completed", Json::from(s.metrics.requests_completed())),
+                            ("request_errors", Json::from(s.metrics.request_errors())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
     }
     j
 }
@@ -586,5 +946,63 @@ mod tests {
         assert_eq!(server.thread_count(), 4);
         drop(held);
         server.shutdown();
+    }
+
+    #[test]
+    fn multi_core_rr_round_trip_and_inventory() {
+        // Forced acceptor mode: placement is deterministic, and the
+        // inventory is 2 shards × (reactor + dispatcher + 2 workers)
+        // + the acceptor thread.
+        let server =
+            Server::start(ServerConfig { cores: 2, accept_rr: true, ..quiet_cfg() }).unwrap();
+        assert_eq!(server.cores(), 2);
+        assert_eq!(server.thread_count(), 9, "2×(1+1+2) + acceptor");
+        let report = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 4,
+            requests: 8,
+            pp: 3,
+            ..LoadgenConfig::default()
+        })
+        .unwrap();
+        assert_eq!(report.ok, 32);
+        assert_eq!(report.lost(), 0);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 32);
+        assert_eq!(metrics.get("sessions_admitted").unwrap().int().unwrap(), 4);
+        assert_eq!(metrics.get("cores").unwrap().int().unwrap(), 2);
+    }
+
+    #[test]
+    fn multi_core_reuseport_round_trip() {
+        // Default accept mode at cores > 1: per-shard SO_REUSEPORT
+        // listeners where the platform has them, acceptor fallback
+        // elsewhere — the wire behavior must be identical either way.
+        let server = Server::start(ServerConfig { cores: 2, ..quiet_cfg() }).unwrap();
+        assert!(
+            (8..=9).contains(&server.thread_count()),
+            "2 shards ± the fallback acceptor, got {}",
+            server.thread_count()
+        );
+        let report = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 4,
+            requests: 8,
+            pp: 2,
+            ..LoadgenConfig::default()
+        })
+        .unwrap();
+        assert_eq!(report.ok, 32);
+        assert_eq!(report.lost(), 0);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 32);
+        // Per-shard rows cover every shard and sum to the merged total.
+        let per_shard = metrics.get("per_shard").unwrap().arr().unwrap();
+        assert_eq!(per_shard.len(), 2);
+        let summed: i64 = per_shard
+            .iter()
+            .map(|row| row.get("requests_completed").unwrap().int().unwrap())
+            .sum();
+        assert_eq!(summed, 32);
     }
 }

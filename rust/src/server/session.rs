@@ -309,6 +309,12 @@ pub struct SessionInfo {
     /// `Some(when)` while detached — the reaper frees the slot once the
     /// linger expires.
     detached_since: Option<Instant>,
+    /// Where the live attachment is parked: `(shard index, connection
+    /// id)`, recorded by `note_attached`.  A resume landing on a
+    /// *different* shard takes these coordinates and posts a retire
+    /// message to the old shard's mailbox so the displaced connection is
+    /// torn down promptly instead of waiting for its socket EOF event.
+    attached_at: Option<(usize, u64)>,
 }
 
 /// What a successful admission or resume hands the session reader.
@@ -442,6 +448,7 @@ impl SessionManager {
                 outbox: outbox.clone(),
                 health: health.clone(),
                 detached_since: None,
+                attached_at: None,
             },
         );
         Ok(SessionHandle { id, token, plan, attach_epoch: 0, outbox, health })
@@ -451,13 +458,18 @@ impl SessionManager {
     /// resume token its accept reply issued.  The stale socket (if any)
     /// is shut down so its reader unblocks and loses the epoch race; the
     /// caller must complete the attachment via `SessionOutbox::attach`.
+    ///
+    /// Also returns the displaced attachment's `(shard, conn)`
+    /// coordinates (if it was attached anywhere): the session directory
+    /// is the only structure spanning shards, so this is where a
+    /// cross-shard takeover learns whom to retire.
     pub fn try_resume(
         &self,
         session_id: u64,
         client_id: &str,
         token: u64,
         stream: TcpStream,
-    ) -> Result<SessionHandle, String> {
+    ) -> Result<(SessionHandle, Option<(usize, u64)>), String> {
         let mut active = self.active.lock().unwrap();
         if self.closed.load(Ordering::SeqCst) {
             return Err("server shutting down".to_string());
@@ -477,15 +489,19 @@ impl SessionManager {
                 let attach_epoch = info.outbox.invalidate_attachment();
                 info.stream = stream;
                 info.detached_since = None;
+                let displaced = info.attached_at.take();
                 info.health.note_recovered();
-                Ok(SessionHandle {
-                    id: info.id,
-                    token: info.token,
-                    plan: info.plan.clone(),
-                    attach_epoch,
-                    outbox: info.outbox.clone(),
-                    health: info.health.clone(),
-                })
+                Ok((
+                    SessionHandle {
+                        id: info.id,
+                        token: info.token,
+                        plan: info.plan.clone(),
+                        attach_epoch,
+                        outbox: info.outbox.clone(),
+                        health: info.health.clone(),
+                    },
+                    displaced,
+                ))
             }
         }
     }
@@ -504,6 +520,7 @@ impl SessionManager {
         match active.get_mut(&id) {
             Some(info) if info.outbox.detach(epoch) => {
                 info.detached_since = Some(Instant::now());
+                info.attached_at = None;
                 true
             }
             _ => false,
@@ -519,14 +536,18 @@ impl SessionManager {
         if let Some(info) = self.active.lock().unwrap().get_mut(&id) {
             if info.outbox.epoch_is(attach_epoch) {
                 info.detached_since = Some(Instant::now());
+                info.attached_at = None;
             }
         }
     }
 
-    /// A (re)attachment completed: clear the detach mark.
-    pub fn note_attached(&self, id: u64) {
+    /// A (re)attachment completed: clear the detach mark and record where
+    /// the attachment lives (`shard` index + connection id), so a later
+    /// cross-shard resume can retire it.
+    pub fn note_attached(&self, id: u64, shard: usize, conn: u64) {
         if let Some(info) = self.active.lock().unwrap().get_mut(&id) {
             info.detached_since = None;
+            info.attached_at = Some((shard, conn));
         }
     }
 
@@ -761,7 +782,8 @@ mod tests {
         assert!(m.detach(h.id, epoch));
         assert_eq!(m.active_count(), 1, "detached sessions still hold their slot");
         assert_eq!(m.detached_count(), 1);
-        let resumed = m.try_resume(h.id, "cam", h.token, stream()).unwrap();
+        let (resumed, displaced) = m.try_resume(h.id, "cam", h.token, stream()).unwrap();
+        assert_eq!(displaced, None, "a detached session has no attachment to retire");
         assert!(Arc::ptr_eq(&resumed.outbox, &h.outbox));
         assert_eq!(resumed.plan, key());
         assert_eq!(resumed.token, h.token);
@@ -788,12 +810,14 @@ mod tests {
         // attachment, so the old reader's detach is a no-op even in the
         // window BEFORE the new attach completes (it must not mark the
         // just-resumed session detached / eviction-eligible).
-        let resumed = m.try_resume(h.id, "cam", h.token, stream()).unwrap();
+        m.note_attached(h.id, 0, 7);
+        let (resumed, displaced) = m.try_resume(h.id, "cam", h.token, stream()).unwrap();
+        assert_eq!(displaced, Some((0, 7)), "takeover reports whom to retire");
         assert!(!m.detach(h.id, old_epoch), "stale detach in the takeover window");
         assert_eq!(m.detached_count(), 0);
         let (tx2, rx2) = mpsc::channel();
         resumed.outbox.attach(tx2, 0, resumed.attach_epoch).unwrap();
-        m.note_attached(h.id);
+        m.note_attached(h.id, 1, 9);
         // A displaced handler's attach (stale ticket) must refuse rather
         // than clobber the winner's writer.
         let (tx_stale, _rx_stale) = mpsc::channel();

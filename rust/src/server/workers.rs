@@ -60,12 +60,15 @@ pub struct Dispatch {
 const RING_CAPACITY: usize = 64;
 
 impl WorkerPool {
-    /// Spawn `workers` threads.  With `pin`, worker `i` is pinned to core
-    /// `i % core_count()` (best effort — pin failure degrades to an
+    /// Spawn `workers` threads for reactor shard `shard`.  With `pin`,
+    /// worker `w` is pinned to core `(shard·workers + w) % core_count()`
+    /// — shards tile the machine's cores instead of all stacking their
+    /// workers from core 0 (best effort — pin failure degrades to an
     /// unpinned worker, it never kills the server).  A thread-spawn
     /// failure unwinds the already-spawned workers before returning, so
     /// a failed spawn leaks nothing.
     pub fn spawn(
+        shard: usize,
         workers: usize,
         pin: bool,
         metrics: Arc<ServingMetrics>,
@@ -79,9 +82,10 @@ impl WorkerPool {
         for w in 0..workers {
             let (tx, rx) = spsc::channel::<WorkItem>(RING_CAPACITY);
             let metrics = metrics.clone();
+            let core = (shard * workers + w) % cores;
             let spawned = std::thread::Builder::new()
-                .name(format!("serve-worker-{w}"))
-                .spawn(move || worker_main(w, w % cores, pin, rx, metrics, precision));
+                .name(format!("serve-worker-{shard}-{w}"))
+                .spawn(move || worker_main(w, core, pin, rx, metrics, precision));
             match spawned {
                 Ok(handle) => {
                     producers.push(tx);
@@ -173,7 +177,8 @@ fn worker_main(
 ) {
     if pin {
         if let Err(e) = affinity::pin_to_core(core) {
-            eprintln!("serve-worker-{index}: running unpinned: {e:#}");
+            let t = std::thread::current();
+            eprintln!("{}: running unpinned: {e:#}", t.name().unwrap_or("serve-worker"));
         }
     }
     // This worker's private counter shard — every per-request counter
@@ -272,7 +277,7 @@ mod tests {
     fn pool_processes_batches_and_shuts_down() {
         let metrics = Arc::new(ServingMetrics::new());
         let (pool, mut dispatch) =
-            WorkerPool::spawn(2, false, metrics.clone(), Precision::F32).unwrap();
+            WorkerPool::spawn(0, 2, false, metrics.clone(), Precision::F32).unwrap();
         assert_eq!(dispatch.worker_count(), 2);
 
         let key = PlanKey::new(MODEL_NAME, 2);
@@ -324,7 +329,7 @@ mod tests {
     fn malformed_payload_yields_error_response() {
         let metrics = Arc::new(ServingMetrics::new());
         let (pool, mut dispatch) =
-            WorkerPool::spawn(1, false, metrics.clone(), Precision::F32).unwrap();
+            WorkerPool::spawn(0, 1, false, metrics.clone(), Precision::F32).unwrap();
         let key = PlanKey::new(MODEL_NAME, 1);
         let plan = Arc::new(compile_server_plan(&key).unwrap());
         let outbox = SessionOutbox::new(9, 8);

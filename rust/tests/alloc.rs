@@ -146,6 +146,61 @@ fn traced_steady_state_infer_performs_zero_allocations() {
 }
 
 #[test]
+fn two_shard_parallel_steady_state_stays_zero_alloc() {
+    // Thread-per-core layout in miniature: each thread owns its shard
+    // outright (state never crosses cores, like the server's reactor
+    // shards), warms it, then both run their steady-state loops
+    // concurrently inside one barrier-fenced window during which the
+    // WHOLE process must not allocate — proving per-shard zero-alloc
+    // holds under parallel execution, not just single-threaded.
+    use edge_prune::platform::affinity::pin_to_core;
+    let _window = exclusive();
+    let barrier = Arc::new(std::sync::Barrier::new(3));
+    let workers: Vec<_> = (0..2)
+        .map(|core| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let _ = pin_to_core(core); // best-effort, like the server
+                let plan =
+                    Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 2)).unwrap());
+                let mut shard = EngineShard::new(plan);
+                let input = make_input(11 + core as u64);
+                let payload = client_prepare(&input, 2);
+                let expected = expected_digest(&input);
+                for _ in 0..5 {
+                    let out = shard.infer(&payload).unwrap();
+                    assert_eq!(out, expected);
+                    shard.recycle(out);
+                }
+                barrier.wait(); // warmup done
+                barrier.wait(); // window open
+                for _ in 0..100 {
+                    let out = shard.infer(&payload).unwrap();
+                    shard.recycle(out);
+                }
+                barrier.wait(); // window closed
+                barrier.wait(); // hold until the counter is read
+            })
+        })
+        .collect();
+    barrier.wait(); // both shards warm
+    let before = ALLOCS.load(Ordering::SeqCst);
+    barrier.wait(); // open the window
+    barrier.wait(); // both loops done
+    let after = ALLOCS.load(Ordering::SeqCst);
+    barrier.wait(); // release the threads (exit allocs stay outside)
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(
+        after - before,
+        0,
+        "two-shard parallel steady state allocated {} times over 2x100 frames",
+        after - before
+    );
+}
+
+#[test]
 fn steady_state_quantized_infer_performs_zero_allocations() {
     // The int8 path end to end: the client side runs quantized stages
     // and wire-encodes (FrameScratch reuse), the server side decodes

@@ -272,6 +272,279 @@ fn engine_propagates_kernel_errors() {
     assert!(err.to_string().contains("injected failure"), "{err}");
 }
 
+// ---------------------------------------------------------------------
+// Wire-protocol codec properties: every frame kind and both handshake
+// layouts must survive the resumable decoders byte-for-byte, and
+// hostile bytes (truncation, bit flips, garbage lengths) must produce
+// a clean error or a "need more bytes" wait — never a panic, never a
+// partial consume, never an over-read.
+// ---------------------------------------------------------------------
+
+use edge_prune::runtime::reactor::ByteBuf;
+use edge_prune::server::protocol::{
+    decode_frame, decode_handshake, encode_frame, encode_handshake, encode_trace_prefix,
+    split_trace_prefix, Handshake, ReqKind, Resume, MAX_PAYLOAD,
+};
+
+fn random_kind(rng: &mut Rng) -> ReqKind {
+    match rng.below(5) {
+        0 => ReqKind::Infer,
+        1 => ReqKind::Switch,
+        2 => ReqKind::Ping,
+        3 => ReqKind::Bye,
+        _ => ReqKind::TracedInfer,
+    }
+}
+
+fn random_ascii(rng: &mut Rng, max_len: usize) -> String {
+    let n = rng.below(max_len + 1);
+    (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+fn random_handshake(rng: &mut Rng, size: usize) -> Handshake {
+    let model = random_ascii(rng, size.min(48));
+    let client = random_ascii(rng, size.min(48));
+    let pp = rng.below(1 << 16);
+    let mut h = if rng.bool(0.5) {
+        Handshake::v2(&model, pp, &client)
+    } else {
+        Handshake::v3(&model, pp, &client, rng.next_u64() as u8)
+    };
+    if rng.bool(0.5) {
+        h = h.with_resume(Resume {
+            session_id: rng.next_u64(),
+            token: rng.next_u64(),
+            last_ack: rng.next_u64(),
+        });
+    }
+    h
+}
+
+#[test]
+fn prop_every_frame_kind_round_trips_through_the_resumable_decoder() {
+    forall(
+        606,
+        80,
+        64,
+        |rng, size| {
+            let kind = random_kind(rng);
+            let payload: Vec<u8> = match kind {
+                // Traced infers carry span context ahead of the bytes.
+                ReqKind::TracedInfer => {
+                    let mut p =
+                        encode_trace_prefix(rng.next_u64(), rng.next_u64() as u32).to_vec();
+                    p.extend((0..rng.below(size * 4 + 1)).map(|_| rng.next_u64() as u8));
+                    p
+                }
+                _ => (0..rng.below(size * 4 + 1)).map(|_| rng.next_u64() as u8).collect(),
+            };
+            (rng.next_u64(), kind, payload, rng.below(4096))
+        },
+        |(seq, kind, payload, split_hint)| {
+            let bytes = encode_frame(*seq, *kind, payload).map_err(|e| format!("{e}"))?;
+            // Delivered split at an arbitrary point: the strict-prefix
+            // chunk must decode to "wait" without touching the buffer,
+            // and the remainder must complete the frame exactly.
+            let split = split_hint % bytes.len();
+            let mut buf = ByteBuf::new();
+            buf.extend(&bytes[..split]);
+            let before = buf.len();
+            match decode_frame(&mut buf) {
+                Ok(None) => {
+                    if buf.len() != before {
+                        return Err("partial decode consumed bytes".into());
+                    }
+                }
+                Ok(Some(_)) => return Err("frame completed from a strict prefix".into()),
+                Err(e) => return Err(format!("valid prefix rejected: {e}")),
+            }
+            buf.extend(&bytes[split..]);
+            let f = decode_frame(&mut buf)
+                .map_err(|e| format!("valid frame rejected: {e}"))?
+                .ok_or("complete frame not decoded")?;
+            if !buf.is_empty() {
+                return Err(format!("{} bytes over-retained after the frame", buf.len()));
+            }
+            if (f.seq, f.kind, &f.payload) != (*seq, *kind, payload) {
+                return Err("decoded frame differs from encoded".into());
+            }
+            if *kind == ReqKind::TracedInfer {
+                let (tid, span, rest) =
+                    split_trace_prefix(&f.payload).map_err(|e| format!("{e}"))?;
+                let (etid, espan, erest) = split_trace_prefix(payload).unwrap();
+                if (tid, span, rest) != (etid, espan, erest) {
+                    return Err("trace prefix mangled".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_handshakes_round_trip_byte_by_byte_at_both_versions() {
+    forall(
+        707,
+        80,
+        48,
+        |rng, size| random_handshake(rng, size),
+        |h| {
+            let bytes = encode_handshake(h).map_err(|e| format!("{e}"))?;
+            let mut buf = ByteBuf::new();
+            let mut decoded = None;
+            for (i, b) in bytes.iter().enumerate() {
+                buf.extend(&[*b]);
+                match decode_handshake(&mut buf) {
+                    Ok(Some(got)) => {
+                        if i + 1 != bytes.len() {
+                            return Err(format!("handshake completed at byte {i}"));
+                        }
+                        decoded = Some(got);
+                    }
+                    Ok(None) => {
+                        if i + 1 == bytes.len() {
+                            return Err("complete handshake not decoded".into());
+                        }
+                    }
+                    Err(e) => return Err(format!("valid prefix rejected at byte {i}: {e}")),
+                }
+            }
+            let got = decoded.ok_or("handshake never completed")?;
+            if &got != h {
+                return Err(format!("decoded {got:?} != encoded {h:?}"));
+            }
+            if !buf.is_empty() {
+                return Err("bytes over-retained after the handshake".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_frame_length_field_is_validated_before_payload() {
+    // A 13-byte header with a random declared length: the decoder must
+    // refuse an over-bound length immediately (never wait for 64 MiB of
+    // payload that will never come), wait on an in-bound one, and leave
+    // the buffer untouched either way.
+    forall(
+        808,
+        80,
+        64,
+        |rng, _| (rng.next_u64(), rng.below(5) as u8, rng.next_u64() as u32),
+        |&(seq, kind, len)| {
+            let mut header = Vec::with_capacity(13);
+            header.extend_from_slice(&seq.to_le_bytes());
+            header.push(kind);
+            header.extend_from_slice(&len.to_le_bytes());
+            let mut buf = ByteBuf::new();
+            buf.extend(&header);
+            match decode_frame(&mut buf) {
+                Err(e) => {
+                    if len <= MAX_PAYLOAD {
+                        return Err(format!("in-bound length {len} rejected: {e}"));
+                    }
+                    if buf.len() != 13 {
+                        return Err("error path consumed bytes".into());
+                    }
+                }
+                Ok(Some(f)) => {
+                    if len != 0 || !f.payload.is_empty() {
+                        return Err(format!("decoded a frame missing {len} bytes"));
+                    }
+                }
+                Ok(None) => {
+                    if len == 0 || len > MAX_PAYLOAD {
+                        return Err(format!("decoder waits on undecodable length {len}"));
+                    }
+                    if buf.len() != 13 {
+                        return Err("waiting decode consumed bytes".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bit_flipped_frames_never_panic_or_over_read() {
+    forall(
+        909,
+        120,
+        48,
+        |rng, size| {
+            let payload: Vec<u8> =
+                (0..rng.below(size * 2 + 1)).map(|_| rng.next_u64() as u8).collect();
+            let mut bytes = encode_frame(rng.next_u64(), random_kind(rng), &payload).unwrap();
+            let bit = rng.below(bytes.len() * 8);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            bytes
+        },
+        |bytes| {
+            // Whatever the flip hit (seq, kind, length, payload), the
+            // decoder must drain to a clean wait or error: every success
+            // consumes exactly its frame, and a non-advance leaves the
+            // buffer byte-for-byte intact.
+            let mut buf = ByteBuf::new();
+            buf.extend(bytes);
+            loop {
+                let before = buf.len();
+                match decode_frame(&mut buf) {
+                    Ok(Some(f)) => {
+                        if before - buf.len() != 13 + f.payload.len() {
+                            return Err("frame consumed wrong byte count".into());
+                        }
+                    }
+                    Ok(None) | Err(_) => {
+                        if buf.len() != before {
+                            return Err("non-advancing decode mutated the buffer".into());
+                        }
+                        return Ok(());
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_garbage_never_panics_either_resumable_decoder() {
+    forall(
+        1010,
+        120,
+        96,
+        |rng, size| (0..rng.below(size + 2)).map(|_| rng.next_u64() as u8).collect::<Vec<u8>>(),
+        |garbage| {
+            // Frame decoder: one burst, drained until it waits or errors
+            // (each success strictly shrinks the buffer, so this ends).
+            let mut buf = ByteBuf::new();
+            buf.extend(garbage);
+            loop {
+                let before = buf.len();
+                match decode_frame(&mut buf) {
+                    Ok(Some(_)) => {
+                        if buf.len() >= before {
+                            return Err("successful decode consumed nothing".into());
+                        }
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            // Handshake decoder: byte-by-byte; an error would close the
+            // connection, so the trickle stops there.
+            let mut buf = ByteBuf::new();
+            for b in garbage {
+                buf.extend(&[*b]);
+                if decode_handshake(&mut buf).is_err() {
+                    return Ok(());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_rng_below_is_uniform_enough() {
     // Sanity on the PRNG substrate the workloads depend on: chi-square-ish

@@ -243,15 +243,16 @@ mod tests {
     fn token_wire_round_trip() {
         use crate::runtime::wire::{decode_to_f32_bytes, WireDtype};
         let t = Token::from_f32(&[0.5, -1.25, 1.0, 0.0], 9);
-        for dtype in [WireDtype::F32, WireDtype::F16, WireDtype::I8] {
+        for dtype in [WireDtype::F32, WireDtype::F16, WireDtype::I8, WireDtype::SparseI8] {
             let mut enc = Vec::new();
             t.encode_wire(dtype, &mut enc).unwrap();
             let mut back = Vec::new();
             decode_to_f32_bytes(dtype, &enc, &mut back).unwrap();
             assert_eq!(back.len(), t.len(), "{dtype:?} length preserved");
             // Values survive within the dtype's precision (exactly for
-            // f32; these specific values are f16-exact too).
-            if dtype != WireDtype::I8 {
+            // f32; these specific values are f16-exact too; the lossy
+            // dtypes are covered by their own codec tests).
+            if dtype == WireDtype::F32 || dtype == WireDtype::F16 {
                 assert_eq!(Token::new(back, 9).as_f32(), t.as_f32(), "{dtype:?}");
             }
         }

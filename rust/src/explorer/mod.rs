@@ -140,19 +140,39 @@ pub fn cut_bytes(meta: &ModelMeta, order: &[String], pp: usize) -> usize {
         .sum()
 }
 
+/// Expected sparse-codec density (kept fraction) at partition point
+/// `pp`.  Manifest models carry no measured activations at explore
+/// time, so cuts are priced from the synthetic model's plan-build
+/// sparsity calibration where a measurement exists for that pp, capped
+/// by — and falling back to — the codec's top-k keep budget
+/// (`1 / SPARSE_KEEP_DIV`).  The budget is a hard upper bound on the
+/// density any tensor achieves, so the prediction never flatters the
+/// sparse wire.
+pub fn sparse_density_prior(pp: usize) -> f64 {
+    let budget = 1.0 / wire::SPARSE_KEEP_DIV as f64;
+    crate::server::model::calibrated_sparsity(pp)
+        .map(|c| c.density.min(budget))
+        .unwrap_or(budget)
+}
+
 /// Bytes actually crossing the cut at `dtype`: each cut edge's f32
 /// tensor re-encoded per element (plus the i8 scale header per edge).
-/// Edges whose byte count is not a whole f32 tensor ship raw.
+/// The sparse dtype is variable-length, so its cut cost is the
+/// *expected* encoded size at the calibrated density for `pp` rather
+/// than a fixed per-element width.  Edges whose byte count is not a
+/// whole f32 tensor ship raw.
 pub fn wire_cut_bytes(meta: &ModelMeta, order: &[String], pp: usize, dtype: WireDtype) -> usize {
     let endpoint: std::collections::BTreeSet<&String> = order[..pp.min(order.len())].iter().collect();
     meta.edges
         .iter()
         .filter(|e| endpoint.contains(&e.src) != endpoint.contains(&e.dst))
         .map(|e| {
-            if e.bytes % 4 == 0 {
-                wire::encoded_len(dtype, e.bytes / 4)
-            } else {
+            if e.bytes % 4 != 0 {
                 e.bytes
+            } else if dtype == WireDtype::SparseI8 {
+                wire::sparse_expected_len(e.bytes / 4, sparse_density_prior(pp))
+            } else {
+                wire::encoded_len(dtype, e.bytes / 4)
             }
         })
         .sum()
@@ -450,6 +470,38 @@ mod tests {
         let best_f32 = pf.iter().cloned().fold(f64::INFINITY, f64::min);
         let best_i8 = pq.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!(best_i8 < best_f32, "int8 best {best_i8} vs f32 best {best_f32}");
+    }
+
+    #[test]
+    fn sparse_wire_prices_below_dense_int8_and_shifts_the_optimum() {
+        let Some(meta) = meta() else { return };
+        let order = precedence_order(&meta).unwrap();
+        // Every whole-tensor cut prices at least 2x under dense int8 at
+        // the calibrated density (the top-k budget keeps <= 1/4 of the
+        // elements, and the cheaper index form is chosen per tensor).
+        for pp in 1..=4 {
+            let i8b = wire_cut_bytes(&meta, &order, pp, WireDtype::I8);
+            let spb = wire_cut_bytes(&meta, &order, pp, WireDtype::SparseI8);
+            assert!(spb * 2 <= i8b, "pp {pp}: sparse {spb} vs int8 {i8b}");
+            assert!(spb > 0, "pp {pp}: a cut edge never prices at zero");
+        }
+        assert_eq!(wire_cut_bytes(&meta, &order, 6, WireDtype::SparseI8), 0, "fully local");
+        // The N2/Ethernet sweep again: stacking sparsity on int8 makes
+        // every transmission-bound point strictly cheaper still, so the
+        // predicted optimum keeps moving toward the device.
+        let n2 = vehicle_n2();
+        let eth = LinkModel::new("eth", 11.2, 1.49);
+        let at = |dtype| -> Vec<f64> {
+            (1..=6).map(|pp| predict_endpoint_ms(&meta, &n2, &eth, &order, pp, dtype)).collect()
+        };
+        let pq = at(WireDtype::I8);
+        let ps = at(WireDtype::SparseI8);
+        for (pp, (q, s)) in pq.iter().zip(&ps).enumerate() {
+            assert!(s <= q, "pp {}: sparse {} > int8 {}", pp + 1, s, q);
+        }
+        let best_i8 = pq.iter().cloned().fold(f64::INFINITY, f64::min);
+        let best_sp = ps.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(best_sp < best_i8, "sparse best {best_sp} vs int8 best {best_i8}");
     }
 
     #[test]

@@ -45,10 +45,12 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
   compile: --endpoint NAME --server NAME --link NAME --pp K --base-port P
   explore: --endpoint NAME --server NAME --link NAME --pps 1,2,3 --frames N
            --time-scale S --json --no-pad
-           --wire f32|f16|int8 (activation wire dtype of the cut edges;
-           the cost model + live TX/RX FIFOs both honor it)
+           --wire f32|f16|int8|sparse (activation wire dtype of the cut
+           edges; the cost model + live TX/RX FIFOs both honor it —
+           sparse prices cuts at the calibrated expected encoded size)
   worker:  --role endpoint|server --pp K --no-pad --precision f32|int8
-           --wire f32|f16|int8 (both workers must agree) (+ compile flags)
+           --wire f32|f16|int8|sparse (both workers must agree)
+           (+ compile flags)
   serve:   --port P --bind HOST --max-sessions N --max-queue N --max-batch N
            --cores N (thread-per-core reactor shards; workers are per
            shard) --accept-rr (force the round-robin acceptor thread
@@ -63,7 +65,8 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
   loadgen: --addr HOST:PORT --clients N --requests N --pp K --link NAME
            --seed S --json --resilient --chaos K (kill each client's link
            every K requests; implies --resilient)
-           --wire f32|f16|int8 (requested; the server may downgrade)
+           --wire f32|f16|int8|sparse (requested; the server may
+           downgrade)
            --trace --trace-sample N (client-side spans + traced-infer
            frames so server spans join the same trace)
            --trace-out FILE (merged Chrome trace JSON; server spans are

@@ -116,6 +116,13 @@ pub struct WireCounters {
     pub bytes_rx: AtomicU64,
     pub f32_equiv_tx: AtomicU64,
     pub f32_equiv_rx: AtomicU64,
+    /// Elements carried by sparse-coded payloads (the achieved-sparsity
+    /// gauge's denominator).
+    pub sparse_elems: AtomicU64,
+    /// Coefficients those payloads actually shipped (its numerator).
+    pub sparse_nnz: AtomicU64,
+    /// Bytes saved vs the dense-i8 encoding of the same tensors.
+    pub sparse_saved: AtomicU64,
 }
 
 impl WireCounters {
@@ -131,6 +138,27 @@ impl WireCounters {
     pub fn note_rx(&self, actual: u64, f32_equiv: u64) {
         self.bytes_rx.fetch_add(actual, Ordering::Relaxed);
         self.f32_equiv_rx.fetch_add(f32_equiv, Ordering::Relaxed);
+    }
+
+    /// One sparse-coded payload went by: what its header declared
+    /// (element count, shipped coefficients) and what it actually cost,
+    /// vs the `4 + elems` bytes dense i8 would have taken.
+    pub fn note_sparse(&self, st: crate::runtime::wire::SparseStats, encoded_bytes: usize) {
+        self.sparse_elems.fetch_add(st.elems as u64, Ordering::Relaxed);
+        self.sparse_nnz.fetch_add(st.nnz as u64, Ordering::Relaxed);
+        let dense = 4 + st.elems as u64;
+        self.sparse_saved.fetch_add(dense.saturating_sub(encoded_bytes as u64), Ordering::Relaxed);
+    }
+
+    /// Fraction of elements pruned off sparse payloads: `1 - nnz/elems`
+    /// (0.0 while no sparse traffic has moved, so the idle gauge reads
+    /// neutral).
+    pub fn achieved_sparsity(&self) -> f64 {
+        let elems = self.sparse_elems.load(Ordering::Relaxed);
+        if elems == 0 {
+            return 0.0;
+        }
+        1.0 - self.sparse_nnz.load(Ordering::Relaxed) as f64 / elems as f64
     }
 
     /// f32-equivalent bytes / actual bytes over both directions
@@ -153,6 +181,9 @@ impl WireCounters {
         self.bytes_rx.fetch_add(other.bytes_rx.load(Ordering::Relaxed), Ordering::Relaxed);
         self.f32_equiv_tx.fetch_add(other.f32_equiv_tx.load(Ordering::Relaxed), Ordering::Relaxed);
         self.f32_equiv_rx.fetch_add(other.f32_equiv_rx.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sparse_elems.fetch_add(other.sparse_elems.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sparse_nnz.fetch_add(other.sparse_nnz.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sparse_saved.fetch_add(other.sparse_saved.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     pub fn to_json(&self) -> Json {
@@ -162,6 +193,8 @@ impl WireCounters {
             ("f32_equiv_tx", Json::from(self.f32_equiv_tx.load(Ordering::Relaxed))),
             ("f32_equiv_rx", Json::from(self.f32_equiv_rx.load(Ordering::Relaxed))),
             ("compression_ratio", Json::from(self.compression_ratio())),
+            ("achieved_sparsity", Json::from(self.achieved_sparsity())),
+            ("sparse_bytes_saved", Json::from(self.sparse_saved.load(Ordering::Relaxed))),
         ])
     }
 }
@@ -533,14 +566,17 @@ mod tests {
 
     #[test]
     fn wire_counters_merge_is_lossless() {
+        use crate::runtime::wire::SparseStats;
         let shared = WireCounters::new();
         let a = WireCounters::new();
         let b = WireCounters::new();
         for (i, w) in [(1u64, &a), (2, &b), (3, &a), (4, &b)] {
             w.note_tx(10 * i, 40 * i);
             w.note_rx(7 * i, 28 * i);
+            w.note_sparse(SparseStats { elems: 1024, nnz: 200 + i as usize }, 350);
             shared.note_tx(10 * i, 40 * i);
             shared.note_rx(7 * i, 28 * i);
+            shared.note_sparse(SparseStats { elems: 1024, nnz: 200 + i as usize }, 350);
         }
         let merged = WireCounters::new();
         merged.merge_from(&a);
@@ -550,10 +586,29 @@ mod tests {
             (&merged.bytes_rx, &shared.bytes_rx),
             (&merged.f32_equiv_tx, &shared.f32_equiv_tx),
             (&merged.f32_equiv_rx, &shared.f32_equiv_rx),
+            (&merged.sparse_elems, &shared.sparse_elems),
+            (&merged.sparse_nnz, &shared.sparse_nnz),
+            (&merged.sparse_saved, &shared.sparse_saved),
         ] {
             assert_eq!(m.load(Ordering::Relaxed), s.load(Ordering::Relaxed));
         }
         assert_eq!(merged.compression_ratio(), shared.compression_ratio());
+        assert_eq!(merged.achieved_sparsity(), shared.achieved_sparsity());
+    }
+
+    #[test]
+    fn sparse_gauges_read_sparsity_and_savings() {
+        use crate::runtime::wire::SparseStats;
+        let w = WireCounters::new();
+        assert_eq!(w.achieved_sparsity(), 0.0, "idle gauge is neutral");
+        // One 1024-element payload shipping 256 coefficients in 393
+        // bytes: 75% sparsity, (4 + 1024) - 393 bytes saved vs dense i8.
+        w.note_sparse(SparseStats { elems: 1024, nnz: 256 }, 393);
+        assert!((w.achieved_sparsity() - 0.75).abs() < 1e-12);
+        assert_eq!(w.sparse_saved.load(Ordering::Relaxed), 1028 - 393);
+        let j = w.to_json();
+        assert_eq!(j.get("sparse_bytes_saved").unwrap().int().unwrap(), 635);
+        assert!((j.get("achieved_sparsity").unwrap().num().unwrap() - 0.75).abs() < 1e-12);
     }
 
     #[test]

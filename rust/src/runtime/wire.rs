@@ -4,7 +4,7 @@
 //! inference (the DEFER / 2-Step-Pruning observation that transmission
 //! size at the split dominates constrained links).
 //!
-//! Three dtypes:
+//! Four dtypes:
 //!
 //! * **f32** — the legacy format: raw little-endian f32 bytes, exactly
 //!   the protocol-v2 payload.  Always supported; the transparent
@@ -16,6 +16,15 @@
 //!   `scale = max|x| / 127` and `q = clamp(round(x / scale), -127, 127)`.
 //!   1 byte per element; the -128 code is never produced, which is also
 //!   what keeps the int8 GEMM's paired i16 products overflow-free.
+//! * **sparse-i8** — top-k magnitude selection stacked on the i8
+//!   quantizer (the 2-Step-Pruning observation: the activation tensor
+//!   at the split point is heavily prunable).  Per tensor the encoder
+//!   keeps the [`SPARSE_KEEP_DIV`]-th largest |q| codes (ties resolved
+//!   by a deterministic per-frame histogram threshold), then ships them
+//!   under whichever index form is cheapest for THIS tensor — bitmap,
+//!   run-length, or a dense-i8 fallback — so the encoded size never
+//!   exceeds dense i8 plus the [`SPARSE_HEADER_BYTES`]-byte header.
+//!   See [`encode_activation`] for the frame layout.
 //!
 //! **Determinism contract:** `decode(encode(x))` is a pure function of
 //! the bytes, identical on every host (round-to-nearest-even for f16,
@@ -44,6 +53,11 @@ pub const CAP_F16: u8 = 2;
 /// payloads — see `runtime::trace` and `server::protocol`.  Orthogonal
 /// to dtype negotiation: [`negotiate`] ignores it.
 pub const CAP_TRACE: u8 = 4;
+/// Capability bit: peer can encode/decode sparse-i8 activations (top-k
+/// magnitude selection over the i8 quantizer with a bitmap/run-length
+/// index).  Implies [`CAP_I8`] | [`CAP_F16`] on the advertising side so
+/// a downgrade against an older peer always lands on a shared dtype.
+pub const CAP_SPARSE_I8: u8 = 8;
 
 /// Element type of activations on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -52,6 +66,9 @@ pub enum WireDtype {
     F32,
     F16,
     I8,
+    /// Top-k sparse selection over i8 codes; variable-length,
+    /// self-describing payload (see [`encode_activation`]).
+    SparseI8,
 }
 
 impl WireDtype {
@@ -60,6 +77,7 @@ impl WireDtype {
             WireDtype::F32 => "f32",
             WireDtype::F16 => "f16",
             WireDtype::I8 => "int8",
+            WireDtype::SparseI8 => "sparse",
         }
     }
 
@@ -68,7 +86,8 @@ impl WireDtype {
             "f32" => Ok(WireDtype::F32),
             "f16" => Ok(WireDtype::F16),
             "int8" | "i8" => Ok(WireDtype::I8),
-            v => bail!("unknown wire dtype {v} (f32|f16|int8)"),
+            "sparse" | "sparse-int8" | "sparse-i8" => Ok(WireDtype::SparseI8),
+            v => bail!("unknown wire dtype {v} (f32|f16|int8|sparse)"),
         }
     }
 
@@ -76,14 +95,18 @@ impl WireDtype {
         match self {
             WireDtype::F32 => 4,
             WireDtype::F16 => 2,
-            WireDtype::I8 => 1,
+            // Sparse ships at most one code byte per element (the dense
+            // fallback); its true per-tensor size is data-dependent.
+            WireDtype::I8 | WireDtype::SparseI8 => 1,
         }
     }
 
-    /// Fixed per-payload header (the i8 scale).
+    /// Fixed per-payload header (the i8 scale; the sparse form byte +
+    /// scale + element count).
     pub fn header_bytes(self) -> usize {
         match self {
             WireDtype::I8 => 4,
+            WireDtype::SparseI8 => SPARSE_HEADER_BYTES,
             _ => 0,
         }
     }
@@ -94,6 +117,7 @@ impl WireDtype {
             WireDtype::F32 => 0,
             WireDtype::F16 => 1,
             WireDtype::I8 => 2,
+            WireDtype::SparseI8 => 3,
         }
     }
 
@@ -102,6 +126,7 @@ impl WireDtype {
             0 => Ok(WireDtype::F32),
             1 => Ok(WireDtype::F16),
             2 => Ok(WireDtype::I8),
+            3 => Ok(WireDtype::SparseI8),
             v => bail!("bad wire dtype byte {v}"),
         }
     }
@@ -114,6 +139,7 @@ impl WireDtype {
             WireDtype::F32 => 0,
             WireDtype::F16 => CAP_F16,
             WireDtype::I8 => CAP_I8 | CAP_F16,
+            WireDtype::SparseI8 => CAP_SPARSE_I8 | CAP_I8 | CAP_F16,
         }
     }
 }
@@ -177,11 +203,13 @@ impl SessionCodec {
 }
 
 /// Server-side negotiation: the best dtype both the client's capability
-/// bits and the server's enabled set allow (i8 > f16 > f32 — smallest
-/// wire wins).
+/// bits and the server's enabled set allow (sparse-i8 > i8 > f16 > f32
+/// — smallest expected wire wins).
 pub fn negotiate(client_caps: u8, server_caps: u8) -> WireDtype {
     let both = client_caps & server_caps;
-    if both & CAP_I8 != 0 {
+    if both & CAP_SPARSE_I8 != 0 {
+        WireDtype::SparseI8
+    } else if both & CAP_I8 != 0 {
         WireDtype::I8
     } else if both & CAP_F16 != 0 {
         WireDtype::F16
@@ -190,14 +218,33 @@ pub fn negotiate(client_caps: u8, server_caps: u8) -> WireDtype {
     }
 }
 
-/// Encoded payload size for `elems` activation elements.
+/// Encoded payload size for `elems` activation elements.  For the
+/// variable-length sparse dtype this is the dense-fallback **ceiling**
+/// — the size the encoder guarantees never to exceed; use
+/// [`sparse_expected_len`] with a calibrated density for the expected
+/// size.
 pub fn encoded_len(dtype: WireDtype, elems: usize) -> usize {
     dtype.header_bytes() + elems * dtype.bytes_per_elem()
 }
 
+/// Encoded payload size when every payload of this dtype has one fixed
+/// length per element count — `None` for the data-dependent sparse
+/// dtype (validate those by decoding; the payload is self-describing).
+pub fn fixed_encoded_len(dtype: WireDtype, elems: usize) -> Option<usize> {
+    match dtype {
+        WireDtype::SparseI8 => None,
+        _ => Some(encoded_len(dtype, elems)),
+    }
+}
+
 /// Element count implied by an encoded payload length (`None` when the
-/// length is not a whole number of elements for this dtype).
+/// length is not a whole number of elements for this dtype, and always
+/// for the sparse dtype, whose length alone does not determine it —
+/// see [`sparse_stats`]).
 pub fn decoded_elems(dtype: WireDtype, payload_len: usize) -> Option<usize> {
+    if dtype == WireDtype::SparseI8 {
+        return None;
+    }
     let body = payload_len.checked_sub(dtype.header_bytes())?;
     let per = dtype.bytes_per_elem();
     (body % per == 0).then_some(body / per)
@@ -205,12 +252,291 @@ pub fn decoded_elems(dtype: WireDtype, payload_len: usize) -> Option<usize> {
 
 /// f32-equivalent byte count of an encoded payload (what the same
 /// tensor would have cost in the legacy format) — the numerator of the
-/// wire-compression-ratio gauge.
+/// wire-compression-ratio gauge.  Length-only; cannot price a sparse
+/// payload (use [`f32_equiv_bytes`] where the bytes are at hand).
 pub fn f32_equiv_len(dtype: WireDtype, payload_len: usize) -> usize {
     match decoded_elems(dtype, payload_len) {
         Some(elems) => elems * 4,
         None => payload_len,
     }
+}
+
+/// f32-equivalent byte count of an encoded payload, sparse included
+/// (the element count comes out of the sparse header).  Unparseable
+/// payloads count 1:1, like ragged ones in [`f32_equiv_len`].
+pub fn f32_equiv_bytes(dtype: WireDtype, payload: &[u8]) -> usize {
+    match dtype {
+        WireDtype::SparseI8 => match sparse_stats(payload) {
+            Some(st) => st.elems * 4,
+            None => payload.len(),
+        },
+        _ => f32_equiv_len(dtype, payload.len()),
+    }
+}
+
+// ---------------------------------------------------------- sparse i8
+//
+// Payload layout (dtype is known from negotiation, the rest is
+// self-describing):
+//
+//   [u8 form][f32 scale][u32 n]                     -- 9-byte header
+//   form 0 (dense fallback):  n i8 codes
+//   form 1 (bitmap index):    ceil(n/8) bitmap bytes, then one i8 code
+//                             per set bit, in ascending index order
+//   form 2 (run-length):      [u32 k], then k x ([u8 gap][i8 code]);
+//                             cursor += gap, out[cursor] = code,
+//                             cursor += 1 — gaps > 255 are bridged by
+//                             (255, 0) pad entries
+//
+// The encoder quantizes exactly like the i8 dtype, keeps only the top
+// n/SPARSE_KEEP_DIV codes by magnitude (deterministic per-frame
+// histogram threshold over |q|), then emits whichever form is smallest
+// for this tensor — so the total never exceeds the dense-i8 body plus
+// the 9-byte header, and an all-zero tensor costs 13 bytes.
+
+/// Sparse payload header: form byte + f32 scale + u32 element count.
+pub const SPARSE_HEADER_BYTES: usize = 9;
+/// Top-k keep fraction: the encoder ships at most `n / SPARSE_KEEP_DIV`
+/// coefficients per tensor (the largest |q|; natural zeros never ship).
+/// 4 targets ≥75% sparsity — bitmap-indexed, that is ≥2.4x below dense
+/// i8 — while the synthetic model's digest stays within the bench-gated
+/// epsilon (see `benches/sparse_wire.rs`).
+pub const SPARSE_KEEP_DIV: usize = 4;
+
+const SPARSE_FORM_DENSE: u8 = 0;
+const SPARSE_FORM_BITMAP: u8 = 1;
+const SPARSE_FORM_RLE: u8 = 2;
+
+/// What a sparse payload header + index section declare (parse-only;
+/// no code bytes are touched).  `None` if the payload is not a
+/// structurally valid sparse frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparseStats {
+    /// Decoded element count.
+    pub elems: usize,
+    /// Coefficients shipped (dense fallback counts every element).
+    pub nnz: usize,
+}
+
+/// Parse a sparse payload's header and index structure without
+/// decoding values.  Validates exactly what [`decode_activation_into`]
+/// validates, so `Some` here means the payload will decode cleanly
+/// into an `elems`-long tensor.
+pub fn sparse_stats(payload: &[u8]) -> Option<SparseStats> {
+    if payload.len() < SPARSE_HEADER_BYTES {
+        return None;
+    }
+    let form = payload[0];
+    let n = u32::from_le_bytes(payload[5..9].try_into().ok()?) as usize;
+    let body = &payload[SPARSE_HEADER_BYTES..];
+    match form {
+        SPARSE_FORM_DENSE => (body.len() == n).then_some(SparseStats { elems: n, nnz: n }),
+        SPARSE_FORM_BITMAP => {
+            let bm_len = n.div_ceil(8);
+            if body.len() < bm_len {
+                return None;
+            }
+            let (bitmap, codes) = body.split_at(bm_len);
+            // Stray bits past n would be out-of-bounds indices.
+            let tail_bits = n % 8;
+            if tail_bits != 0 && bitmap[bm_len - 1] >> tail_bits != 0 {
+                return None;
+            }
+            let nnz: usize = bitmap.iter().map(|b| b.count_ones() as usize).sum();
+            (codes.len() == nnz).then_some(SparseStats { elems: n, nnz })
+        }
+        SPARSE_FORM_RLE => {
+            if body.len() < 4 {
+                return None;
+            }
+            let k = u32::from_le_bytes(body[..4].try_into().ok()?) as usize;
+            if body.len() != 4 + k.checked_mul(2)? {
+                return None;
+            }
+            // Every entry advances the cursor by gap + 1; the final
+            // cursor must stay within n (out-of-bounds index check).
+            let mut cursor = 0usize;
+            for entry in body[4..].chunks_exact(2) {
+                cursor += entry[0] as usize + 1;
+                if cursor > n {
+                    return None;
+                }
+            }
+            Some(SparseStats { elems: n, nnz: k })
+        }
+        _ => None,
+    }
+}
+
+/// Expected sparse-encoded size for an `elems`-long tensor at a
+/// calibrated coefficient density (the cost model the Explorer prices
+/// link bytes with): header + cheapest index form at that density,
+/// never above the dense fallback.
+pub fn sparse_expected_len(elems: usize, density: f64) -> usize {
+    let nnz = ((elems as f64) * density.clamp(0.0, 1.0)).ceil() as usize;
+    let bitmap = elems.div_ceil(8) + nnz;
+    let rle = 4 + 2 * nnz;
+    SPARSE_HEADER_BYTES + bitmap.min(rle).min(elems)
+}
+
+/// Deterministic per-frame top-k threshold: the smallest `t` such that
+/// at most `n / SPARSE_KEEP_DIV` codes satisfy `|q| > t`.  Returns
+/// `(t, kept)`.  A histogram pass over |q| — O(n), no allocation.
+fn sparse_threshold(x: &[f32], inv_scale: f32) -> (u8, usize) {
+    let mut hist = [0u32; 128];
+    for v in x {
+        let q = crate::runtime::linalg::quantize_one(*v, inv_scale);
+        hist[q.unsigned_abs() as usize] += 1;
+    }
+    let target = (x.len() / SPARSE_KEEP_DIV).max(1);
+    // count(t) = how many codes have |q| > t; walk t upward until the
+    // kept set fits the budget (t = 126 always does: only |q| = 127
+    // survives it, and clamping guarantees nothing exceeds 127).
+    let mut above: usize = hist[1..].iter().map(|&c| c as usize).sum();
+    let mut t = 0u8;
+    while above > target && t < 126 {
+        t += 1;
+        above -= hist[t as usize] as usize;
+    }
+    (t, above)
+}
+
+/// RLE entry count for the kept set (pads included), plus the bitmap
+/// cost, computed in one pass so the encoder can pick the cheaper form
+/// before writing anything.
+fn sparse_rle_entries(x: &[f32], inv_scale: f32, t: u8) -> usize {
+    let mut entries = 0usize;
+    let mut prev_end = 0usize; // index after the last kept element
+    for (i, v) in x.iter().enumerate() {
+        let q = crate::runtime::linalg::quantize_one(*v, inv_scale);
+        if q.unsigned_abs() > t {
+            let gap = i - prev_end;
+            entries += gap / 256 + 1; // (255, 0) pads bridge long gaps
+            prev_end = i + 1;
+        }
+    }
+    entries
+}
+
+fn encode_sparse(x: &[f32], out: &mut Vec<u8>) {
+    let scale = crate::runtime::linalg::quant_scale(x);
+    let n = x.len();
+    let (t, nnz, rle_entries) = if scale == 0.0 {
+        (127u8, 0usize, 0usize)
+    } else {
+        let inv = 1.0 / scale;
+        let (t, nnz) = sparse_threshold(x, inv);
+        (t, nnz, sparse_rle_entries(x, inv, t))
+    };
+    let bitmap_cost = n.div_ceil(8) + nnz;
+    let rle_cost = 4 + 2 * rle_entries;
+    let dense_cost = n;
+    let (form, _cost) = [
+        (SPARSE_FORM_RLE, rle_cost),
+        (SPARSE_FORM_BITMAP, bitmap_cost),
+        (SPARSE_FORM_DENSE, dense_cost),
+    ]
+    .into_iter()
+    .min_by_key(|&(_, c)| c)
+    .unwrap();
+    out.clear();
+    out.push(form);
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    let inv = if scale == 0.0 { 0.0 } else { 1.0 / scale };
+    let keep = |v: f32| -> i8 {
+        let q = crate::runtime::linalg::quantize_one(v, inv);
+        if q.unsigned_abs() > t {
+            q
+        } else {
+            0
+        }
+    };
+    match form {
+        SPARSE_FORM_DENSE => {
+            for v in x {
+                out.push(keep(*v) as u8);
+            }
+        }
+        SPARSE_FORM_BITMAP => {
+            let bm_start = out.len();
+            out.resize(bm_start + n.div_ceil(8), 0);
+            for (i, v) in x.iter().enumerate() {
+                let q = keep(*v);
+                if q != 0 {
+                    out[bm_start + i / 8] |= 1 << (i % 8);
+                }
+            }
+            for v in x {
+                let q = keep(*v);
+                if q != 0 {
+                    out.push(q as u8);
+                }
+            }
+        }
+        _ => {
+            out.extend_from_slice(&(rle_entries as u32).to_le_bytes());
+            let mut prev_end = 0usize;
+            for (i, v) in x.iter().enumerate() {
+                let q = keep(*v);
+                if q != 0 {
+                    let mut gap = i - prev_end;
+                    while gap > 255 {
+                        out.push(255);
+                        out.push(0);
+                        gap -= 256;
+                    }
+                    out.push(gap as u8);
+                    out.push(q as u8);
+                    prev_end = i + 1;
+                }
+            }
+        }
+    }
+}
+
+/// Decode a sparse payload into `x` (zero-filled first, then kept
+/// coefficients scattered).  Strict: every structural violation —
+/// truncated index, stray bitmap bits past `n`, an RLE cursor running
+/// off the tensor, a wrong element count — is an error, never a panic
+/// or an out-of-bounds write.
+fn decode_sparse_into(payload: &[u8], x: &mut [f32]) -> Result<()> {
+    let Some(st) = sparse_stats(payload) else {
+        bail!("malformed sparse payload of {} bytes", payload.len());
+    };
+    if st.elems != x.len() {
+        bail!("sparse payload decodes {} elements, expected {}", st.elems, x.len());
+    }
+    let scale = f32::from_le_bytes(payload[1..5].try_into().unwrap());
+    x.fill(0.0);
+    let body = &payload[SPARSE_HEADER_BYTES..];
+    match payload[0] {
+        SPARSE_FORM_DENSE => {
+            for (dst, &b) in x.iter_mut().zip(body) {
+                *dst = (b as i8) as f32 * scale;
+            }
+        }
+        SPARSE_FORM_BITMAP => {
+            let bm_len = x.len().div_ceil(8);
+            let (bitmap, codes) = body.split_at(bm_len);
+            let mut next = 0usize;
+            for (i, dst) in x.iter_mut().enumerate() {
+                if bitmap[i / 8] >> (i % 8) & 1 != 0 {
+                    *dst = (codes[next] as i8) as f32 * scale;
+                    next += 1;
+                }
+            }
+        }
+        _ => {
+            let mut cursor = 0usize;
+            for entry in body[4..].chunks_exact(2) {
+                cursor += entry[0] as usize;
+                x[cursor] = (entry[1] as i8) as f32 * scale;
+                cursor += 1;
+            }
+        }
+    }
+    Ok(())
 }
 
 // ----------------------------------------------------------------- f16
@@ -298,6 +624,7 @@ pub fn encode_activation(dtype: WireDtype, x: &[f32], out: &mut Vec<u8>) {
     out.reserve(encoded_len(dtype, x.len()));
     match dtype {
         WireDtype::F32 => unreachable!("handled above"),
+        WireDtype::SparseI8 => encode_sparse(x, out),
         WireDtype::F16 => {
             for v in x {
                 out.extend_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
@@ -327,6 +654,9 @@ pub fn decode_activation_into(dtype: WireDtype, payload: &[u8], x: &mut [f32]) -
         crate::runtime::trace::Stage::WireDecode,
         x.len() as u32,
     );
+    if dtype == WireDtype::SparseI8 {
+        return decode_sparse_into(payload, x);
+    }
     if decoded_elems(dtype, payload.len()) != Some(x.len()) {
         bail!(
             "{} payload of {} bytes does not decode to {} elements (expect {})",
@@ -358,6 +688,7 @@ pub fn decode_activation_into(dtype: WireDtype, payload: &[u8], x: &mut [f32]) -
                 *dst = (b as i8) as f32 * scale;
             }
         }
+        WireDtype::SparseI8 => unreachable!("handled above"),
     }
     Ok(())
 }
@@ -366,6 +697,19 @@ pub fn decode_activation_into(dtype: WireDtype, payload: &[u8], x: &mut [f32]) -
 /// layout) — what an RX FIFO hands downstream actors.  `out` is
 /// cleared and reused.
 pub fn decode_to_f32_bytes(dtype: WireDtype, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    if dtype == WireDtype::SparseI8 {
+        let Some(st) = sparse_stats(payload) else {
+            bail!("malformed sparse payload of {} bytes", payload.len());
+        };
+        let mut vals = vec![0.0f32; st.elems];
+        decode_sparse_into(payload, &mut vals)?;
+        out.clear();
+        out.reserve(st.elems * 4);
+        for v in &vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        return Ok(());
+    }
     let Some(elems) = decoded_elems(dtype, payload.len()) else {
         bail!("{} payload of {} bytes is ragged", dtype.as_str(), payload.len());
     };
@@ -386,6 +730,7 @@ pub fn decode_to_f32_bytes(dtype: WireDtype, payload: &[u8], out: &mut Vec<u8>) 
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
+        WireDtype::SparseI8 => unreachable!("handled above"),
     }
     Ok(())
 }
@@ -425,11 +770,18 @@ mod tests {
         assert_eq!(negotiate(WireDtype::I8.caps(), 0), WireDtype::F32);
         // i8-capable server without f16 still meets an f16-only client at f32.
         assert_eq!(negotiate(CAP_F16, CAP_I8), WireDtype::F32);
+        // Sparse wins when both sides have it; an old peer on either
+        // side silently lands on the best shared dense dtype.
+        let sparse_server = CAP_SPARSE_I8 | CAP_I8 | CAP_F16;
+        assert_eq!(negotiate(WireDtype::SparseI8.caps(), sparse_server), WireDtype::SparseI8);
+        assert_eq!(negotiate(WireDtype::SparseI8.caps(), server), WireDtype::I8);
+        assert_eq!(negotiate(WireDtype::I8.caps(), sparse_server), WireDtype::I8);
+        assert_eq!(negotiate(WireDtype::SparseI8.caps(), 0), WireDtype::F32);
     }
 
     #[test]
     fn dtype_bytes_round_trip() {
-        for d in [WireDtype::F32, WireDtype::F16, WireDtype::I8] {
+        for d in [WireDtype::F32, WireDtype::F16, WireDtype::I8, WireDtype::SparseI8] {
             assert_eq!(WireDtype::from_u8(d.to_u8()).unwrap(), d);
             assert_eq!(WireDtype::parse(d.as_str()).unwrap(), d);
         }
@@ -526,7 +878,7 @@ mod tests {
         // client/server agreement.
         let mut rng = crate::util::rng::Rng::new(11);
         let x: Vec<f32> = (0..256).map(|_| rng.f32_range(-1.5, 1.5)).collect();
-        for dtype in [WireDtype::F16, WireDtype::I8] {
+        for dtype in [WireDtype::F16, WireDtype::I8, WireDtype::SparseI8] {
             let mut e1 = Vec::new();
             encode_activation(dtype, &x, &mut e1);
             let mut d1 = vec![0.0f32; x.len()];
@@ -543,7 +895,7 @@ mod tests {
     fn f32_bytes_paths_agree_with_slice_paths() {
         let x = [0.25f32, -1.0, 3.5, 0.0];
         let raw = crate::util::tensor::f32_to_bytes(&x);
-        for dtype in [WireDtype::F32, WireDtype::F16, WireDtype::I8] {
+        for dtype in [WireDtype::F32, WireDtype::F16, WireDtype::I8, WireDtype::SparseI8] {
             let mut enc_a = Vec::new();
             encode_activation(dtype, &x, &mut enc_a);
             let mut enc_b = Vec::new();
@@ -578,5 +930,148 @@ mod tests {
         assert_eq!(f32_equiv_len(WireDtype::I8, 1028), 4096);
         assert_eq!(f32_equiv_len(WireDtype::F16, 2048), 4096);
         assert_eq!(f32_equiv_len(WireDtype::F32, 4096), 4096);
+        // Sparse is data-dependent: no fixed length, no length-only
+        // equivalence — the self-describing header carries the count.
+        assert_eq!(fixed_encoded_len(WireDtype::SparseI8, 1024), None);
+        assert_eq!(fixed_encoded_len(WireDtype::I8, 1024), Some(1028));
+        assert_eq!(decoded_elems(WireDtype::SparseI8, 393), None);
+        let x: Vec<f32> = (0..1024).map(|i| (i as f32).sin()).collect();
+        let mut enc = Vec::new();
+        encode_activation(WireDtype::SparseI8, &x, &mut enc);
+        assert_eq!(f32_equiv_bytes(WireDtype::SparseI8, &enc), 4096);
+        assert_eq!(f32_equiv_bytes(WireDtype::I8, &[0u8; 1028]), 4096);
+        // At the top-k density (1/4), bitmap-indexed sparse prices well
+        // under dense i8 — the Explorer's expected-bytes model.
+        let expected = sparse_expected_len(1024, 0.25);
+        assert_eq!(expected, SPARSE_HEADER_BYTES + 1024 / 8 + 256);
+        assert!((encoded_len(WireDtype::I8, 1024) as f64) / (expected as f64) > 2.0);
+        // Degenerate densities stay within the dense ceiling.
+        assert_eq!(sparse_expected_len(1024, 0.0), SPARSE_HEADER_BYTES + 4);
+        assert_eq!(sparse_expected_len(1024, 1.0), SPARSE_HEADER_BYTES + 1024);
+        assert_eq!(sparse_expected_len(0, 0.5), SPARSE_HEADER_BYTES + 4);
+    }
+
+    #[test]
+    fn sparse_round_trips_and_never_exceeds_dense_plus_header() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        for n in [1usize, 7, 8, 9, 64, 1024] {
+            let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+            let mut enc = Vec::new();
+            encode_activation(WireDtype::SparseI8, &x, &mut enc);
+            // The hard ceiling: dense i8 body + sparse header.
+            assert!(enc.len() <= SPARSE_HEADER_BYTES + n, "n={n}: {} bytes", enc.len());
+            let st = sparse_stats(&enc).expect("encoder output must self-validate");
+            assert_eq!(st.elems, n);
+            let mut dec = vec![1.0f32; n];
+            decode_activation_into(WireDtype::SparseI8, &enc, &mut dec).unwrap();
+            // Every survivor matches the plain i8 quantizer; every
+            // pruned element is exactly zero.
+            let scale = f32::from_le_bytes(enc[1..5].try_into().unwrap());
+            let inv = 1.0 / scale;
+            for (a, b) in x.iter().zip(&dec) {
+                let q = crate::runtime::linalg::quantize_one(*a, inv);
+                assert!(*b == 0.0 || (*b - q as f32 * scale).abs() < 1e-12, "{a} -> {b}");
+            }
+            // The scale-defining max-|x| element always survives top-k.
+            let mx = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            assert!(dec.iter().any(|v| (v.abs() - mx).abs() <= scale * 0.5 + 1e-7));
+        }
+    }
+
+    #[test]
+    fn sparse_keeps_at_most_the_topk_budget_on_spread_data() {
+        // Uniform data has < 1/4 of its codes at any single magnitude,
+        // so the histogram threshold lands the kept set within budget.
+        let mut rng = crate::util::rng::Rng::new(23);
+        let x: Vec<f32> = (0..1024).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let mut enc = Vec::new();
+        encode_activation(WireDtype::SparseI8, &x, &mut enc);
+        let st = sparse_stats(&enc).unwrap();
+        assert!(st.nnz <= x.len() / SPARSE_KEEP_DIV, "kept {} of {}", st.nnz, x.len());
+        // ... which makes the encoded frame >= 2x below dense i8.
+        assert!(encoded_len(WireDtype::I8, x.len()) >= 2 * enc.len());
+    }
+
+    #[test]
+    fn sparse_picks_the_cheaper_index_form_per_tensor() {
+        // A handful of spikes in a long tensor: run-length beats bitmap.
+        let mut spiky = vec![0.0f32; 512];
+        for i in [3usize, 100, 101, 400, 511] {
+            spiky[i] = 1.0;
+        }
+        let mut enc = Vec::new();
+        encode_activation(WireDtype::SparseI8, &spiky, &mut enc);
+        assert_eq!(enc[0], SPARSE_FORM_RLE);
+        assert!(enc.len() < SPARSE_HEADER_BYTES + 512 / 8 + 5);
+        let mut dec = vec![0.0f32; 512];
+        decode_activation_into(WireDtype::SparseI8, &enc, &mut dec).unwrap();
+        assert_eq!(dec, spiky);
+        // A saturated tensor (every code at max) defeats pruning: the
+        // dense fallback caps the damage at header + n.
+        let flat = vec![1.0f32; 64];
+        encode_activation(WireDtype::SparseI8, &flat, &mut enc);
+        assert_eq!(enc[0], SPARSE_FORM_DENSE);
+        assert_eq!(enc.len(), SPARSE_HEADER_BYTES + 64);
+        decode_activation_into(WireDtype::SparseI8, &enc, &mut dec[..64]).unwrap();
+        assert_eq!(&dec[..64], &flat[..]);
+        // Spread data at the top-k density: bitmap wins.
+        let mut rng = crate::util::rng::Rng::new(29);
+        let spread: Vec<f32> = (0..1024).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        encode_activation(WireDtype::SparseI8, &spread, &mut enc);
+        assert_eq!(enc[0], SPARSE_FORM_BITMAP);
+    }
+
+    #[test]
+    fn sparse_all_zero_tensor_costs_header_plus_rle_count() {
+        let x = [0.0f32; 1024];
+        let mut enc = Vec::new();
+        encode_activation(WireDtype::SparseI8, &x, &mut enc);
+        assert_eq!(enc.len(), SPARSE_HEADER_BYTES + 4); // empty RLE list
+        let mut dec = [1.0f32; 1024];
+        decode_activation_into(WireDtype::SparseI8, &enc, &mut dec).unwrap();
+        assert_eq!(dec, [0.0f32; 1024]);
+    }
+
+    #[test]
+    fn sparse_decode_rejects_malformed_payloads() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 / 9.0).sin()).collect();
+        let mut enc = Vec::new();
+        encode_activation(WireDtype::SparseI8, &x, &mut enc);
+        let mut dec = vec![0.0f32; 64];
+        // Truncations at every boundary: shorter than the header, a cut
+        // index section, a cut code section — all errors, never panics.
+        for cut in 0..enc.len() {
+            assert!(
+                decode_activation_into(WireDtype::SparseI8, &enc[..cut], &mut dec).is_err(),
+                "truncation at {cut} must not decode"
+            );
+        }
+        // Unknown form byte.
+        let mut bad = enc.clone();
+        bad[0] = 7;
+        assert!(sparse_stats(&bad).is_none());
+        // Element-count mismatch against the caller's tensor.
+        assert!(decode_activation_into(WireDtype::SparseI8, &enc, &mut dec[..63]).is_err());
+        // Bitmap form: stray bits past n are out-of-bounds indices.
+        let mut bm = Vec::new();
+        encode_activation(WireDtype::SparseI8, &x[..9], &mut bm); // n=9 -> 2 bitmap bytes
+        if bm[0] == SPARSE_FORM_BITMAP {
+            let mut stray = bm.clone();
+            stray[SPARSE_HEADER_BYTES + 1] |= 0x80; // bit 15 of a 9-elem tensor
+            assert!(sparse_stats(&stray).is_none());
+        }
+        // RLE form: a gap that walks the cursor past n.
+        let spiky = {
+            let mut v = vec![0.0f32; 64];
+            v[60] = 1.0;
+            v
+        };
+        let mut rle = Vec::new();
+        encode_activation(WireDtype::SparseI8, &spiky, &mut rle);
+        assert_eq!(rle[0], SPARSE_FORM_RLE);
+        let mut overrun = rle.clone();
+        overrun[SPARSE_HEADER_BYTES + 4] = 255; // gap 60 -> 255: cursor 256 > 64
+        assert!(sparse_stats(&overrun).is_none());
+        assert!(decode_activation_into(WireDtype::SparseI8, &overrun, &mut dec).is_err());
     }
 }

@@ -665,10 +665,19 @@ impl EventLoop {
         // 1:1).
         let actual = (frame.payload.len() + 13) as u64;
         let f32_equiv = match frame.kind {
-            ReqKind::Infer => (wire::f32_equiv_len(a.wire, frame.payload.len()) + 13) as u64,
-            ReqKind::TracedInfer => {
-                let coded = frame.payload.len().saturating_sub(protocol::TRACE_PREFIX);
-                (wire::f32_equiv_len(a.wire, coded) + 13 + protocol::TRACE_PREFIX) as u64
+            ReqKind::Infer | ReqKind::TracedInfer => {
+                let prefix =
+                    if frame.kind == ReqKind::TracedInfer { protocol::TRACE_PREFIX } else { 0 };
+                let body = frame.payload.get(prefix..).unwrap_or(&[]);
+                // Achieved-sparsity gauges: the self-describing sparse
+                // header says how many coefficients actually shipped.
+                if a.wire == WireDtype::SparseI8 {
+                    if let Some(st) = wire::sparse_stats(body) {
+                        self.state.metrics.wire.note_sparse(st, body.len());
+                        a.outbox.stats().wire.note_sparse(st, body.len());
+                    }
+                }
+                (wire::f32_equiv_bytes(a.wire, body) + 13 + prefix) as u64
             }
             _ => actual,
         };
@@ -827,8 +836,11 @@ impl EventLoop {
         let resumed = hs.resume.is_some();
         // Codec negotiation: intersect the client's capability bits with
         // the server's enabled set (v2 clients advertise nothing and get
-        // f32).  Renegotiated on every attachment, so a RECONNECT from a
-        // differently-capable client binary still gets a sound session.
+        // f32).  This intersection only decides a FRESH session's dtype:
+        // the replay ring retains responses to payloads the client
+        // encoded under its original codec, so a RECONNECT echoes the
+        // dtype stored at admission (`SessionHandle::wire`) — never a
+        // renegotiation from the new connection's caps.
         let negotiated = wire::negotiate(hs.wire_caps, self.state.shared.wire_caps);
         let version = hs.version;
         // A v2 reply cannot carry the precision byte, so a v2 client
@@ -871,6 +883,23 @@ impl EventLoop {
                         return Ok(());
                     }
                 };
+                // A v2 RECONNECT reply cannot carry the codec byte, so a
+                // session that negotiated a coded wire has no way to keep
+                // its replay ring decodable through a v2 resume — refuse
+                // it (mirrors the v2-vs-non-f32-precision reject above).
+                if version < protocol::VERSION && handle.wire != WireDtype::F32 {
+                    self.state.shared.sessions.detach_now(handle.id, handle.attach_epoch);
+                    self.reject(
+                        conn,
+                        version,
+                        format!(
+                            "session {} negotiated a {} wire; protocol v2 cannot resume it",
+                            handle.id,
+                            handle.wire.as_str()
+                        ),
+                    );
+                    return Ok(());
+                }
                 // The session's current plan is warm by invariant; a
                 // cache miss here just recompiles it.
                 let key = handle.plan.clone();
@@ -908,9 +937,12 @@ impl EventLoop {
                     let _ = self.state.plans.warm(&fb, || model::compile_server_plan(&fb));
                 }
                 let stream = conn.stream.try_clone().map_err(|_| Teardown::Close)?;
+                let fresh_wire =
+                    if version >= protocol::VERSION { negotiated } else { WireDtype::F32 };
                 let handle = match self.state.shared.sessions.try_open(
                     &hs.client_id,
                     key,
+                    fresh_wire,
                     stream,
                     self.state.shared.replay_ring,
                     self.state.shared.idle_timeout,
@@ -934,13 +966,16 @@ impl EventLoop {
         // reply bit is the client's license to send kind-4 frames.
         let trace_ok =
             version >= protocol::VERSION && hs.wire_caps & wire::CAP_TRACE != 0 && trace::enabled();
+        // The session's dtype: what try_open stored for a fresh session,
+        // the admission-time value try_resume recalled for a RECONNECT.
+        let session_wire = handle.wire;
         let reply = HandshakeReply {
             accepted: true,
             resumed,
             session_id: handle.id,
             token: handle.token,
             codec: (version >= protocol::VERSION).then(|| SessionCodec {
-                wire: negotiated,
+                wire: session_wire,
                 precision: self.state.shared.precision,
             }),
             trace: trace_ok,
@@ -978,7 +1013,7 @@ impl EventLoop {
             session_id: handle.id,
             epoch,
             resumed,
-            wire: if version >= protocol::VERSION { negotiated } else { WireDtype::F32 },
+            wire: session_wire,
             outbox: handle.outbox,
             health: handle.health,
             plan,

@@ -115,6 +115,11 @@ struct Tally {
     bytes_rx: u64,
     f32_equiv_tx: u64,
     f32_equiv_rx: u64,
+    /// Sparse-wire gauges (sessions that negotiated the sparse dtype):
+    /// elements carried, coefficients shipped, bytes saved vs dense i8.
+    sparse_elems: u64,
+    sparse_nnz: u64,
+    sparse_saved: u64,
 }
 
 #[derive(Debug)]
@@ -229,6 +234,13 @@ impl LoadReport {
                 self.wire.compression_ratio()
             ));
         }
+        if self.wire.sparse_elems.load(Ordering::Relaxed) > 0 {
+            line.push_str(&format!(
+                "; sparsity {:.0}% ({:.1} KB saved vs dense i8)",
+                self.wire.achieved_sparsity() * 100.0,
+                self.wire.sparse_saved.load(Ordering::Relaxed) as f64 / 1024.0
+            ));
+        }
         if self.traced > 0 {
             line.push_str(&format!("; {} traced", self.traced));
         }
@@ -307,6 +319,13 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
         tally.traced += traced as u64;
         tally.bytes_tx += (payload.len() + prefix + 13) as u64;
         tally.f32_equiv_tx += (TOKEN_BYTES + prefix + 13) as u64;
+        if codec.wire == WireDtype::SparseI8 {
+            if let Some(st) = wire::sparse_stats(&payload) {
+                tally.sparse_elems += st.elems as u64;
+                tally.sparse_nnz += st.nnz as u64;
+                tally.sparse_saved += (4 + st.elems as u64).saturating_sub(payload.len() as u64);
+            }
+        }
         let resp = {
             let _wait = trace::span(trace_id, root.id(), Stage::ClientWait, 0);
             read_response(&mut stream)
@@ -494,6 +513,12 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 report.traced += tally.traced;
                 report.wire.note_tx(tally.bytes_tx, tally.f32_equiv_tx);
                 report.wire.note_rx(tally.bytes_rx, tally.f32_equiv_rx);
+                {
+                    use std::sync::atomic::Ordering;
+                    report.wire.sparse_elems.fetch_add(tally.sparse_elems, Ordering::Relaxed);
+                    report.wire.sparse_nnz.fetch_add(tally.sparse_nnz, Ordering::Relaxed);
+                    report.wire.sparse_saved.fetch_add(tally.sparse_saved, Ordering::Relaxed);
+                }
                 report.per_session.push(Json::from_pairs(vec![
                     ("client", Json::from(index)),
                     ("sent", Json::from(tally.sent)),
@@ -693,6 +718,13 @@ mod tests {
         assert_eq!(j.get("served_local").unwrap().int().unwrap(), 2);
         assert!(r.summary().contains("1 lost"));
         assert!(r.summary().contains("served-local"));
+        // The sparsity row appears only once sparse traffic has moved.
+        assert!(!r.summary().contains("sparsity"));
+        r.wire.note_sparse(crate::runtime::wire::SparseStats { elems: 1024, nnz: 256 }, 393);
+        assert!(r.summary().contains("sparsity 75%"), "{}", r.summary());
+        let j = r.to_json();
+        let saved = j.get("wire").unwrap().get("sparse_bytes_saved").unwrap().int();
+        assert_eq!(saved, Some(635));
     }
 
     #[test]

@@ -76,7 +76,7 @@ use crate::compiler::PlanCache;
 use crate::platform::affinity;
 use crate::runtime::reactor::WakeHandle;
 use crate::runtime::trace;
-use crate::runtime::wire::{Precision, CAP_F16, CAP_I8};
+use crate::runtime::wire::{Precision, CAP_F16, CAP_I8, CAP_SPARSE_I8};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use batch::BatchQueue;
@@ -137,9 +137,9 @@ pub struct ServerConfig {
     /// server).
     pub write_high_water: usize,
     /// Wire-codec capabilities this server offers v3 clients
-    /// (`runtime::wire::{CAP_I8, CAP_F16}`); 0 forces every session to
-    /// raw f32 (the `--no-wire-codec` downgrade knob, and the stand-in
-    /// for a pre-v3 server in interop tests).
+    /// (`runtime::wire::{CAP_SPARSE_I8, CAP_I8, CAP_F16}`); 0 forces
+    /// every session to raw f32 (the `--no-wire-codec` downgrade knob,
+    /// and the stand-in for a pre-v3 server in interop tests).
     pub wire_caps: u8,
     /// Compute precision of the engine shards (`--precision`).  The
     /// handshake reply tells v3 clients, so both sides run the stage
@@ -176,7 +176,7 @@ impl Default for ServerConfig {
             detach_linger: Duration::from_secs(30),
             replay_ring: 64,
             write_high_water: 1 << 20,
-            wire_caps: CAP_I8 | CAP_F16,
+            wire_caps: CAP_SPARSE_I8 | CAP_I8 | CAP_F16,
             precision: Precision::F32,
             trace: false,
             trace_sample: 1,

@@ -134,6 +134,59 @@ fn quant_stage_nets() -> &'static [QuantStageNet] {
     })
 }
 
+/// Plan-build-time sparsity calibration of one candidate split point:
+/// what the sparse wire codec *actually* costs for the activation
+/// crossing that cut, measured over a fixed set of seeded frames.
+/// Derived once per process from the deterministic model — every
+/// process measures the identical numbers, exactly like the int8
+/// weight scales — and stored on each compiled [`ServerModelPlan`] so
+/// the explorer can price expected encoded bytes instead of the dense
+/// ceiling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparsityCal {
+    /// Fraction of activation elements the codec keeps (nnz / elems).
+    pub density: f64,
+    /// Mean encoded payload size in bytes at this split point.
+    pub expected_bytes: usize,
+}
+
+/// Frames measured per split point during calibration.
+const CAL_FRAMES: u64 = 8;
+
+fn sparsity_table() -> &'static [SparsityCal; MAX_PP] {
+    static TABLE: OnceLock<[SparsityCal; MAX_PP]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        // Calibrate at the codec the sparse wire ships with in practice
+        // (int8 stage compute); the index cost is a function of the
+        // keep set, not the compute precision, so this generalizes.
+        let codec = SessionCodec { wire: WireDtype::SparseI8, precision: Precision::Int8 };
+        let mut scratch = FrameScratch::new();
+        let mut payload = Vec::new();
+        std::array::from_fn(|i| {
+            let pp = i + 1;
+            let (mut elems, mut nnz, mut bytes) = (0u64, 0u64, 0u64);
+            for seed in 0..CAL_FRAMES {
+                let input = make_input(0xCA11_B8A7 ^ seed);
+                scratch.prepare_codec_into(&input, pp, codec, &mut payload);
+                let st = wire::sparse_stats(&payload).expect("own encoding is well-formed");
+                elems += st.elems as u64;
+                nnz += st.nnz as u64;
+                bytes += payload.len() as u64;
+            }
+            SparsityCal {
+                density: nnz as f64 / elems as f64,
+                expected_bytes: (bytes / CAL_FRAMES) as usize,
+            }
+        })
+    })
+}
+
+/// Measured sparse-wire calibration for partition point `pp`, or
+/// `None` outside `1..=MAX_PP`.
+pub fn calibrated_sparsity(pp: usize) -> Option<SparsityCal> {
+    (1..=MAX_PP).contains(&pp).then(|| sparsity_table()[pp - 1])
+}
+
 /// Bounded stage nonlinearity: a softsign remap into (-1.5, 1.5).
 /// Lipschitz-continuous on purpose — the previous modular fold had a
 /// jump discontinuity at the fold boundary, where a quantization-sized
@@ -463,6 +516,8 @@ pub struct ServerModelPlan {
     /// Stage indices the server executes (ascending; may be empty for
     /// digest-only offload at pp = MAX_PP).
     pub server_stages: Vec<usize>,
+    /// Measured sparse-wire cost of the activation crossing this cut.
+    pub sparsity: SparsityCal,
 }
 
 /// Compile the synthetic model's deployment for one plan-cache key.
@@ -497,7 +552,12 @@ pub fn compile_server_plan(key: &PlanKey) -> Result<ServerModelPlan> {
         .filter_map(|n| n.strip_prefix('s').and_then(|k| k.parse::<usize>().ok()))
         .collect();
     server_stages.sort_unstable();
-    Ok(ServerModelPlan { key: key.clone(), deployment, server_stages })
+    Ok(ServerModelPlan {
+        key: key.clone(),
+        deployment,
+        server_stages,
+        sparsity: sparsity_table()[key.pp - 1],
+    })
 }
 
 /// One worker's private executor for a plan — the "engine shard".  All
@@ -568,14 +628,18 @@ impl EngineShard {
         dtype: WireDtype,
         out: &mut Vec<u8>,
     ) -> Result<()> {
-        let want = wire::encoded_len(dtype, TOKEN_FLOATS);
-        ensure!(
-            payload.len() == want,
-            "payload {} bytes, plan {} expects {want} ({} wire)",
-            payload.len(),
-            self.plan.key,
-            dtype.as_str()
-        );
+        // Fixed-size dtypes are length-checked up front; the sparse
+        // dtype is variable-length and self-describing, so its decoder
+        // validates the frame (element count included) instead.
+        if let Some(want) = wire::fixed_encoded_len(dtype, TOKEN_FLOATS) {
+            ensure!(
+                payload.len() == want,
+                "payload {} bytes, plan {} expects {want} ({} wire)",
+                payload.len(),
+                self.plan.key,
+                dtype.as_str()
+            );
+        }
         // Batch-assembly hot path: an aligned f32 payload loads into
         // the scratch tensor with one memcpy (the stages mutate in
         // place, so a borrow alone cannot replace the scratch); coded
@@ -753,7 +817,9 @@ mod tests {
         // server's digest matches byte-for-byte at any wire dtype and
         // compute precision.
         let input = make_input(17);
-        for wire_dtype in [WireDtype::F32, WireDtype::F16, WireDtype::I8] {
+        for wire_dtype in
+            [WireDtype::F32, WireDtype::F16, WireDtype::I8, WireDtype::SparseI8]
+        {
             for precision in [Precision::F32, Precision::Int8] {
                 let codec = SessionCodec { wire: wire_dtype, precision };
                 for pp in 1..=MAX_PP {
@@ -761,11 +827,15 @@ mod tests {
                         Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, pp)).unwrap());
                     let mut shard = EngineShard::with_precision(plan, precision);
                     let payload = client_prepare_codec(&input, pp, codec);
-                    assert_eq!(
-                        payload.len(),
-                        wire::encoded_len(wire_dtype, TOKEN_FLOATS),
-                        "{codec:?} payload size"
-                    );
+                    match wire::fixed_encoded_len(wire_dtype, TOKEN_FLOATS) {
+                        Some(want) => {
+                            assert_eq!(payload.len(), want, "{codec:?} payload size")
+                        }
+                        None => assert!(
+                            payload.len() <= wire::encoded_len(wire_dtype, TOKEN_FLOATS),
+                            "{codec:?} payload exceeds the dense ceiling"
+                        ),
+                    }
                     let got = shard.infer_wire(&payload, wire_dtype).unwrap();
                     let expected = expected_digest_codec(&input, pp, codec);
                     assert_eq!(got, expected, "{codec:?} pp {pp} digest mismatch");
@@ -806,7 +876,7 @@ mod tests {
     fn frame_codec_into_agrees_with_split_helpers() {
         let input = make_input(29);
         let mut s = FrameScratch::new();
-        for wire_dtype in [WireDtype::F16, WireDtype::I8] {
+        for wire_dtype in [WireDtype::F16, WireDtype::I8, WireDtype::SparseI8] {
             let codec = SessionCodec { wire: wire_dtype, precision: Precision::Int8 };
             for pp in 1..=MAX_PP {
                 let (mut p, mut e) = (Vec::new(), Vec::new());
@@ -828,6 +898,46 @@ mod tests {
         assert!(shard.infer_wire(&i8_payload, WireDtype::F32).is_err());
         // And the right dtype accepts it.
         assert!(shard.infer_wire(&i8_payload, WireDtype::I8).is_ok());
+    }
+
+    #[test]
+    fn sparse_payload_element_count_is_validated_by_the_decoder() {
+        // The sparse dtype skips the up-front fixed-length check, so
+        // the decoder itself must enforce the element count.
+        let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 2)).unwrap());
+        let mut shard = EngineShard::new(plan);
+        let small = make_input(4);
+        let mut wrong = Vec::new();
+        wire::encode_activation(WireDtype::SparseI8, &small[..512], &mut wrong);
+        assert!(shard.infer_wire(&wrong, WireDtype::SparseI8).is_err());
+        // A well-formed full-width sparse payload is accepted.
+        let codec = SessionCodec { wire: WireDtype::SparseI8, ..Default::default() };
+        let ok = client_prepare_codec(&small, 2, codec);
+        assert!(shard.infer_wire(&ok, WireDtype::SparseI8).is_ok());
+    }
+
+    #[test]
+    fn sparsity_calibration_prices_the_cut_below_dense_int8() {
+        let dense_i8 = wire::encoded_len(WireDtype::I8, TOKEN_FLOATS);
+        for pp in 1..=MAX_PP {
+            let cal = calibrated_sparsity(pp).unwrap();
+            assert!(
+                cal.density <= 1.0 / wire::SPARSE_KEEP_DIV as f64 + 1e-9,
+                "pp {pp} density {} exceeds the top-k budget",
+                cal.density
+            );
+            assert!(cal.expected_bytes >= wire::SPARSE_HEADER_BYTES);
+            assert!(
+                (cal.expected_bytes as f64) * 2.0 <= dense_i8 as f64,
+                "pp {pp} expected {} bytes misses 2x vs dense int8 ({dense_i8})",
+                cal.expected_bytes
+            );
+            // The compiled plan carries the same calibration.
+            let plan = compile_server_plan(&PlanKey::new(MODEL_NAME, pp)).unwrap();
+            assert_eq!(plan.sparsity, cal);
+        }
+        assert!(calibrated_sparsity(0).is_none());
+        assert!(calibrated_sparsity(MAX_PP + 1).is_none());
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! link or an edge restart loses zero inferences (the fault-tolerance
 //! direction of the Edge-PRUNE follow-up paper).  Protocol v3 adds the
 //! compact-activation-wire negotiation: the handshake carries a
-//! capability byte (`runtime::wire::{CAP_I8, CAP_F16}`) and the reply
-//! carries the chosen wire dtype plus the server's compute precision.
+//! capability byte (`runtime::wire::{CAP_I8, CAP_F16, CAP_SPARSE_I8}`)
+//! and the reply carries the chosen wire dtype plus the server's
+//! compute precision.
 //! All integers little-endian, mirroring the TX/RX FIFO frame format
 //! of `runtime::net`.
 //!
@@ -114,8 +115,9 @@ pub struct Handshake {
     /// Protocol revision this handshake is encoded at ([`V2`] or
     /// [`VERSION`]).
     pub version: u16,
-    /// v3 wire-capability bits (`runtime::wire::{CAP_I8, CAP_F16}`);
-    /// always 0 on a v2 handshake.
+    /// v3 wire-capability bits
+    /// (`runtime::wire::{CAP_I8, CAP_F16, CAP_SPARSE_I8}`); always 0 on
+    /// a v2 handshake.
     pub wire_caps: u8,
 }
 
@@ -832,6 +834,36 @@ mod tests {
             got.session_codec(),
             SessionCodec { wire: WireDtype::I8, precision: Precision::Int8 }
         );
+    }
+
+    #[test]
+    fn sparse_codec_and_caps_ride_the_v3_layout_unchanged() {
+        // The sparse dtype is just another capability bit + dtype byte:
+        // no new handshake fields, and the trace bit still composes.
+        let (mut c, mut s) = pair();
+        let h = Handshake::v3("synthetic", 2, "cam-11", WireDtype::SparseI8.caps());
+        write_handshake(&mut c, &h).unwrap();
+        let got = read_handshake(&mut s).unwrap();
+        assert_eq!(got, h);
+        // Sparse capability implies the cheaper dtypes (downgrade room).
+        assert_ne!(got.wire_caps & crate::runtime::wire::CAP_I8, 0);
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed: false,
+            session_id: 11,
+            token: 555,
+            codec: Some(SessionCodec {
+                wire: WireDtype::SparseI8,
+                precision: Precision::Int8,
+            }),
+            trace: true,
+            message: String::new(),
+        };
+        write_handshake_reply(&mut s, &reply).unwrap();
+        let got = read_handshake_reply_v(&mut c, VERSION).unwrap();
+        assert_eq!(got, reply);
+        assert_eq!(got.session_codec().wire, WireDtype::SparseI8);
+        assert!(got.trace, "trace bit survives alongside the sparse dtype byte");
     }
 
     #[test]

@@ -25,6 +25,7 @@ use super::protocol::{Response, RespStatus};
 use crate::compiler::PlanKey;
 use crate::runtime::health::{HealthConfig, HealthMonitor};
 use crate::runtime::metrics::{LatencyHistogram, WireCounters};
+use crate::runtime::wire::WireDtype;
 use crate::util::json::Json;
 use std::collections::{BTreeMap, BTreeSet};
 use std::net::TcpStream;
@@ -296,6 +297,13 @@ pub struct SessionInfo {
     pub client_id: String,
     /// Current plan key (updated on a mid-stream hot-swap).
     pub plan: PlanKey,
+    /// Activation wire dtype negotiated at admission.  Session-scoped
+    /// state, not connection-scoped: the replay ring retains responses
+    /// produced under this codec, and the client decodes replays with
+    /// the dtype from its FIRST accept reply — so a RECONNECT must
+    /// echo this instead of renegotiating from the new connection's
+    /// capability byte.
+    pub wire: WireDtype,
     /// Resume credential issued at admission; a RECONNECT must present
     /// it (session ids are sequential and guessable, the token is not).
     token: u64,
@@ -325,6 +333,11 @@ pub struct SessionHandle {
     /// The session's current plan key (the requested one on a fresh
     /// open; the possibly hot-swapped one on a resume).
     pub plan: PlanKey,
+    /// The session's negotiated wire dtype — fixed at admission.  A
+    /// resume reply echoes it (never the renegotiation of the new
+    /// connection's caps) so retried seqs answered from the replay
+    /// ring decode under the codec the session has always spoken.
+    pub wire: WireDtype,
     /// Attachment ticket: the outbox epoch this handle is entitled to
     /// attach at.  A newer takeover invalidates it — `attach`,
     /// `detach_now`, and `close_if_current` all check it so a handler
@@ -400,6 +413,7 @@ impl SessionManager {
         &self,
         client_id: &str,
         plan: PlanKey,
+        wire: WireDtype,
         stream: TcpStream,
         ring_capacity: usize,
         heartbeat_timeout: Duration,
@@ -443,6 +457,7 @@ impl SessionManager {
                 id,
                 client_id: client_id.to_string(),
                 plan: plan.clone(),
+                wire,
                 token,
                 stream,
                 outbox: outbox.clone(),
@@ -451,7 +466,7 @@ impl SessionManager {
                 attached_at: None,
             },
         );
-        Ok(SessionHandle { id, token, plan, attach_epoch: 0, outbox, health })
+        Ok(SessionHandle { id, token, plan, wire, attach_epoch: 0, outbox, health })
     }
 
     /// RECONNECT: take over a session's transport, authenticated by the
@@ -496,6 +511,7 @@ impl SessionManager {
                         id: info.id,
                         token: info.token,
                         plan: info.plan.clone(),
+                        wire: info.wire,
                         attach_epoch,
                         outbox: info.outbox.clone(),
                         health: info.health.clone(),
@@ -692,23 +708,23 @@ mod tests {
     #[test]
     fn admits_up_to_limit_then_rejects_with_reason() {
         let m = SessionManager::new(2);
-        let a = m.try_open("c1", key(), stream(), 8, Duration::ZERO).unwrap();
-        let b = m.try_open("c2", key(), stream(), 8, Duration::ZERO).unwrap();
+        let a = m.try_open("c1", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
+        let b = m.try_open("c2", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
         assert_ne!(a.id, b.id);
         assert_ne!(a.token, b.token, "every session gets its own resume token");
         assert_eq!(m.active_count(), 2);
-        let err = m.try_open("c3", key(), stream(), 8, Duration::ZERO).unwrap_err();
+        let err = m.try_open("c3", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap_err();
         assert!(err.contains("session capacity"), "{err}");
         // Freeing one slot re-admits.
         m.close(a.id);
-        assert!(m.try_open("c3", key(), stream(), 8, Duration::ZERO).is_ok());
+        assert!(m.try_open("c3", key(), WireDtype::F32, stream(), 8, Duration::ZERO).is_ok());
     }
 
     #[test]
     fn capacity_evicts_longest_detached_before_refusing() {
         let m = SessionManager::new(2);
-        let a = m.try_open("a", key(), stream(), 8, Duration::ZERO).unwrap();
-        let b = m.try_open("b", key(), stream(), 8, Duration::ZERO).unwrap();
+        let a = m.try_open("a", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
+        let b = m.try_open("b", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
         // Detach both; `a` first, so it is the longest-detached victim.
         let (tx_a, _rx_a) = mpsc::channel();
         let (epoch_a, _) = a.outbox.attach(tx_a, 0, a.attach_epoch).unwrap();
@@ -718,7 +734,7 @@ mod tests {
         let (epoch_b, _) = b.outbox.attach(tx_b, 0, b.attach_epoch).unwrap();
         assert!(m.detach(b.id, epoch_b));
         // A live client takes the slot instead of bouncing off capacity.
-        let c = m.try_open("c", key(), stream(), 8, Duration::ZERO).unwrap();
+        let c = m.try_open("c", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
         assert_eq!(m.active_count(), 2);
         assert_eq!(m.evicted_for_capacity(), 1);
         // The evicted session (`a`) is gone; the younger one survives.
@@ -731,7 +747,7 @@ mod tests {
     #[test]
     fn close_is_idempotent_and_snapshot_reflects_state() {
         let m = SessionManager::new(4);
-        let h = m.try_open("cam", key(), stream(), 8, Duration::ZERO).unwrap();
+        let h = m.try_open("cam", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
         assert_eq!(m.snapshot().len(), 1);
         assert_eq!(m.snapshot()[0].1, "cam");
         m.close(h.id);
@@ -742,9 +758,9 @@ mod tests {
     #[test]
     fn shutdown_refuses_new_sessions_and_resumes() {
         let m = SessionManager::new(4);
-        let h = m.try_open("before", key(), stream(), 8, Duration::ZERO).unwrap();
+        let h = m.try_open("before", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
         m.shutdown_all();
-        let err = m.try_open("after", key(), stream(), 8, Duration::ZERO).unwrap_err();
+        let err = m.try_open("after", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap_err();
         assert!(err.contains("shutting down"), "{err}");
         let err = m.try_resume(h.id, "before", h.token, stream()).unwrap_err();
         assert!(err.contains("shutting down"), "{err}");
@@ -760,7 +776,8 @@ mod tests {
         let server_side = accept.join().unwrap();
 
         let m = SessionManager::new(4);
-        m.try_open("c", key(), server_side.try_clone().unwrap(), 8, Duration::ZERO).unwrap();
+        m.try_open("c", key(), WireDtype::F32, server_side.try_clone().unwrap(), 8, Duration::ZERO)
+            .unwrap();
         let reader = std::thread::spawn(move || {
             let mut s = server_side;
             let mut buf = [0u8; 1];
@@ -776,7 +793,7 @@ mod tests {
     #[test]
     fn detach_resume_lifecycle_holds_the_slot() {
         let m = SessionManager::new(4);
-        let h = m.try_open("cam", key(), stream(), 8, Duration::ZERO).unwrap();
+        let h = m.try_open("cam", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
         let (tx, _rx) = mpsc::channel();
         let (epoch, _) = h.outbox.attach(tx, 0, h.attach_epoch).unwrap();
         assert!(m.detach(h.id, epoch));
@@ -800,9 +817,24 @@ mod tests {
     }
 
     #[test]
+    fn resume_returns_the_wire_dtype_fixed_at_admission() {
+        // The session's codec is admission-time state: whatever caps a
+        // RECONNECT handshake carries, the handle a resume returns names
+        // the ORIGINAL dtype, so the reply (and ring replays) stay on
+        // the codec the client's first accept established.
+        let m = SessionManager::new(4);
+        let h = m
+            .try_open("cam", key(), WireDtype::SparseI8, stream(), 8, Duration::ZERO)
+            .unwrap();
+        assert_eq!(h.wire, WireDtype::SparseI8);
+        let (resumed, _) = m.try_resume(h.id, "cam", h.token, stream()).unwrap();
+        assert_eq!(resumed.wire, WireDtype::SparseI8);
+    }
+
+    #[test]
     fn stale_epoch_detach_is_ignored_after_takeover() {
         let m = SessionManager::new(4);
-        let h = m.try_open("cam", key(), stream(), 8, Duration::ZERO).unwrap();
+        let h = m.try_open("cam", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
         let outbox = h.outbox.clone();
         let (tx1, _rx1) = mpsc::channel();
         let (old_epoch, _) = outbox.attach(tx1, 0, h.attach_epoch).unwrap();
@@ -832,8 +864,8 @@ mod tests {
     #[test]
     fn reaper_frees_lingering_detached_sessions_only() {
         let m = SessionManager::new(4);
-        let a = m.try_open("a", key(), stream(), 8, Duration::ZERO).unwrap();
-        let _b = m.try_open("b", key(), stream(), 8, Duration::ZERO).unwrap();
+        let a = m.try_open("a", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
+        let _b = m.try_open("b", key(), WireDtype::F32, stream(), 8, Duration::ZERO).unwrap();
         let (tx, _rx) = mpsc::channel();
         let (epoch, _) = a.outbox.attach(tx, 0, a.attach_epoch).unwrap();
         assert!(m.detach(a.id, epoch));

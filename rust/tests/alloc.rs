@@ -201,6 +201,52 @@ fn two_shard_parallel_steady_state_stays_zero_alloc() {
 }
 
 #[test]
+fn steady_state_sparse_infer_performs_zero_allocations() {
+    // The sparse-i8 path end to end: the client side quantizes,
+    // thresholds (stack histogram), and emits the bitmap/RLE index
+    // section into a reused FrameScratch buffer; the server side parses
+    // the self-describing frame and scatters the kept coefficients into
+    // its fixed tensor — none of it may touch the heap once warm.
+    // compile_server_plan also warms the process-wide
+    // sparsity-calibration table outside the measured window.
+    let _window = exclusive();
+    let codec = SessionCodec { wire: WireDtype::SparseI8, precision: Precision::Int8 };
+    let plan = Arc::new(compile_server_plan(&PlanKey::new(MODEL_NAME, 2)).unwrap());
+    let mut shard = EngineShard::with_precision(plan, Precision::Int8);
+    let input = make_input(13);
+    let payload = client_prepare_codec(&input, 2, codec);
+    let expected = expected_digest_codec(&input, 2, codec);
+
+    // Warmup: quantized stage-net OnceLock, sparsity calibration,
+    // scratch + index-section capacities, pool.
+    let mut scratch = FrameScratch::new();
+    let mut client_payload = Vec::new();
+    let mut client_expected = Vec::new();
+    for _ in 0..5 {
+        scratch.frame_codec_into(&input, 2, codec, &mut client_payload, &mut client_expected);
+        assert_eq!(client_payload, payload);
+        assert_eq!(client_expected, expected);
+        let out = shard.infer_wire(&payload, WireDtype::SparseI8).unwrap();
+        assert_eq!(out, expected);
+        shard.recycle(out);
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..100 {
+        scratch.frame_codec_into(&input, 2, codec, &mut client_payload, &mut client_expected);
+        let out = shard.infer_wire(&client_payload, WireDtype::SparseI8).unwrap();
+        shard.recycle(out);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state sparse infer loop allocated {} times over 100 frames",
+        after - before
+    );
+}
+
+#[test]
 fn steady_state_quantized_infer_performs_zero_allocations() {
     // The int8 path end to end: the client side runs quantized stages
     // and wire-encodes (FrameScratch reuse), the server side decodes

@@ -545,6 +545,167 @@ fn prop_garbage_never_panics_either_resumable_decoder() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Sparse activation codec properties: the variable-length sparse-i8
+// frame must round-trip at every tensor size a split point produces,
+// stay within its dense-plus-header ceiling, and shrug off hostile
+// index sections (truncation, trailing garbage, bit flips) with a
+// clean error — never a panic, an over-read, or an out-of-bounds
+// scatter.
+// ---------------------------------------------------------------------
+
+use edge_prune::runtime::wire::{self, WireDtype};
+
+/// Random tensor spanning the regimes the threshold encoder branches
+/// on: all-zero (RLE k=0), mostly-zero (RLE wins), moderately dense
+/// (bitmap wins), and fully dense (dense fallback) — at sizes from
+/// empty through a full synthetic split-point activation.
+fn random_sparse_tensor(rng: &mut Rng, size: usize) -> Vec<f32> {
+    let n = if rng.bool(0.15) { 1024 } else { rng.below(size * 8 + 2) };
+    let density = match rng.below(4) {
+        0 => 0.0,
+        1 => 0.05,
+        2 => 0.3,
+        _ => 1.0,
+    };
+    (0..n)
+        .map(|_| {
+            if rng.bool(density) {
+                ((rng.next_u64() % 4099) as f32 - 2049.0) / 97.0
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sparse_frames_round_trip_within_the_ceiling_and_re_encode_exactly() {
+    forall(
+        1111,
+        120,
+        64,
+        |rng, size| random_sparse_tensor(rng, size),
+        |x| {
+            let mut enc = Vec::new();
+            wire::encode_activation(WireDtype::SparseI8, x, &mut enc);
+            let ceiling = wire::encoded_len(WireDtype::SparseI8, x.len());
+            if enc.len() > ceiling {
+                return Err(format!("{} encoded bytes over ceiling {ceiling}", enc.len()));
+            }
+            let st = wire::sparse_stats(&enc).ok_or("own encoding unparsable")?;
+            if st.elems != x.len() {
+                return Err(format!("stats say {} elems, tensor has {}", st.elems, x.len()));
+            }
+            let mut y = vec![f32::NAN; x.len()];
+            wire::decode_activation_into(WireDtype::SparseI8, &enc, &mut y)
+                .map_err(|e| format!("own encoding rejected: {e}"))?;
+            if y.iter().any(|v| !v.is_finite()) {
+                return Err("decode left non-finite values".into());
+            }
+            // Re-encoding the decoded tensor reproduces the form byte,
+            // index section, and codes byte-for-byte; only the stored
+            // f32 scale may move by one ulp (127*s/127 is not exact in
+            // f32).  The digest contract never re-encodes — each hop
+            // encodes once and both sides decode the same payload — so
+            // structural stability is the property that matters.
+            let mut enc2 = Vec::new();
+            wire::encode_activation(WireDtype::SparseI8, &y, &mut enc2);
+            if enc2.len() != enc.len() || enc2[0] != enc[0] || enc2[5..] != enc[5..] {
+                return Err("re-encode changed the frame structure".into());
+            }
+            let s1 = f32::from_le_bytes(enc[1..5].try_into().unwrap());
+            let s2 = f32::from_le_bytes(enc2[1..5].try_into().unwrap());
+            if (s2 - s1).abs() > s1.abs() * 1e-6 {
+                return Err(format!("re-encoded scale drifted: {s1} -> {s2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mutated_sparse_payloads_error_cleanly_or_stay_in_bounds() {
+    forall(
+        1212,
+        160,
+        64,
+        |rng, size| {
+            let x = random_sparse_tensor(rng, size);
+            let mut enc = Vec::new();
+            wire::encode_activation(WireDtype::SparseI8, &x, &mut enc);
+            match rng.below(4) {
+                // Truncate anywhere (header, index section, codes).
+                0 => enc.truncate(rng.below(enc.len() + 1)),
+                // Trailing garbage past the declared structure.
+                1 => enc.extend((0..1 + rng.below(16)).map(|_| rng.next_u64() as u8)),
+                // Pure garbage of arbitrary length.
+                2 => {
+                    enc.clear();
+                    enc.extend((0..rng.below(64)).map(|_| rng.next_u64() as u8));
+                }
+                // One flipped bit: form, scale, count, index, or code.
+                _ => {
+                    let bit = rng.below(enc.len() * 8);
+                    enc[bit / 8] ^= 1 << (bit % 8);
+                }
+            }
+            (x.len(), enc)
+        },
+        |(n, enc)| {
+            // The parse-only validator and the decoder must agree on
+            // every mutation: a payload decodes iff `sparse_stats`
+            // accepts it at the right element count — and a decode that
+            // runs at all stays in bounds (the harness would abort on a
+            // panic or an out-of-range scatter).
+            let st = wire::sparse_stats(enc);
+            let mut out = vec![0.0f32; *n];
+            let dec = wire::decode_activation_into(WireDtype::SparseI8, enc, &mut out);
+            match (st, dec) {
+                (Some(s), Ok(())) if s.elems == *n => Ok(()),
+                (Some(s), Err(_)) if s.elems != *n => Ok(()),
+                (None, Err(_)) => Ok(()),
+                (st, dec) => Err(format!("stats {st:?} disagree with decode {dec:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn sparse_negotiation_downgrades_old_peers_across_every_capability_mask() {
+    // Exhaustive over both 8-bit capability masks: the negotiated dtype
+    // is always mutually supported, never leaves a cheaper mutual dtype
+    // on the table, and a peer that never learned the sparse bit (or
+    // any v2 peer, which advertises no bits at all) silently lands on
+    // the best dtype it does speak.
+    for client in 0..=255u8 {
+        for server in 0..=255u8 {
+            let both = client & server;
+            let dtype = wire::negotiate(client, server);
+            let need = match dtype {
+                WireDtype::F32 => 0,
+                WireDtype::F16 => wire::CAP_F16,
+                WireDtype::I8 => wire::CAP_I8,
+                WireDtype::SparseI8 => wire::CAP_SPARSE_I8,
+            };
+            assert!(
+                need == 0 || both & need != 0,
+                "{dtype:?} negotiated without mutual capability ({client:#x}/{server:#x})"
+            );
+            if both & wire::CAP_SPARSE_I8 != 0 {
+                assert_eq!(dtype, WireDtype::SparseI8, "sparse left on the table");
+            } else if both & wire::CAP_I8 != 0 {
+                assert_eq!(dtype, WireDtype::I8, "i8 left on the table");
+            } else if both & wire::CAP_F16 != 0 {
+                assert_eq!(dtype, WireDtype::F16, "f16 left on the table");
+            } else {
+                assert_eq!(dtype, WireDtype::F32, "no mutual bits must mean f32");
+            }
+        }
+    }
+    assert_eq!(wire::negotiate(0, u8::MAX), WireDtype::F32, "v2 peer downgrades to f32");
+}
+
 #[test]
 fn prop_rng_below_is_uniform_enough() {
     // Sanity on the PRNG substrate the workloads depend on: chi-square-ish

@@ -639,7 +639,9 @@ fn detached_sessions_are_reaped_after_linger() {
 fn wire_codec_negotiation_end_to_end() {
     use edge_prune::runtime::wire::WireDtype;
     let server = Server::start(test_cfg()).unwrap();
-    for (wire, min_ratio) in [(WireDtype::F16, 1.4), (WireDtype::I8, 1.4)] {
+    for (wire, min_ratio) in
+        [(WireDtype::F16, 1.4), (WireDtype::I8, 1.4), (WireDtype::SparseI8, 3.0)]
+    {
         let report = run_loadgen(&LoadgenConfig {
             addr: server.addr().to_string(),
             clients: 2,
@@ -655,6 +657,14 @@ fn wire_codec_negotiation_end_to_end() {
         let ratio = report.wire.compression_ratio();
         assert!(ratio > min_ratio, "{wire:?} client-side ratio {ratio}");
         assert!(report.summary().contains("vs f32"), "summary reports the wire gauge");
+        if wire == WireDtype::SparseI8 {
+            assert!(
+                report.wire.achieved_sparsity() > 0.5,
+                "sparse wave sparsity {}",
+                report.wire.achieved_sparsity()
+            );
+            assert!(report.summary().contains("sparsity"), "summary reports the sparsity row");
+        }
     }
     let metrics = server.shutdown();
     // Server-side counters saw coded requests too.
@@ -1237,6 +1247,155 @@ fn session_wave_runs_at_i8_wire() {
         rounds: 2,
         pp: 2,
         wire: WireDtype::I8,
+        ..WaveConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.ok, 128);
+    assert_eq!(report.errors, 0);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Sparse activation wire (ISSUE 8): session-sticky dtype across
+// RECONNECT, and the sparse wave against a sharded server.
+// ---------------------------------------------------------------------
+
+/// The wire dtype is a session property fixed at admission: a RECONNECT
+/// whose handshake advertises *different* capabilities must not
+/// renegotiate — the attach replay, a ring-answered client re-send, and
+/// fresh work all run at the dtype the session was admitted with.  A v2
+/// resume of a sparse session is refused outright: the legacy reply
+/// cannot tell the client what dtype the replay ring speaks.
+#[test]
+fn reconnect_keeps_the_admission_wire_dtype_for_replay() {
+    use edge_prune::runtime::wire::WireDtype;
+    use edge_prune::server::model::{client_prepare_codec, expected_digest_codec};
+    use edge_prune::server::protocol::connect_client;
+
+    let server = Server::start(test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+
+    // Fresh v3 session advertising sparse: negotiation lands on it.
+    let hello = Handshake::v3("synthetic", 2, "sticky", WireDtype::SparseI8.caps());
+    let (mut s, reply, codec) =
+        connect_client(&addr, &hello, Some(Duration::from_secs(5))).unwrap();
+    assert!(reply.accepted && !reply.resumed);
+    assert_eq!(codec.wire, WireDtype::SparseI8);
+
+    // Two completed inferences at the sparse codec.
+    for seq in [1u64, 2] {
+        let input = make_input(seq);
+        write_request(&mut s, seq, &client_prepare_codec(&input, 2, codec)).unwrap();
+        let resp = read_response(&mut s).unwrap().unwrap();
+        assert_eq!(resp.req_id, seq);
+        assert_eq!(resp.body, expected_digest_codec(&input, 2, codec), "seq {seq}");
+    }
+
+    // Abrupt cut, then a RECONNECT advertising only i8 (a client
+    // restarted with a narrower flag): the session must stay sparse.
+    s.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(s);
+    std::thread::sleep(Duration::from_millis(50));
+    let again = Handshake::v3("synthetic", 2, "sticky", WireDtype::I8.caps()).with_resume(Resume {
+        session_id: reply.session_id,
+        token: reply.token,
+        last_ack: 1,
+    });
+    let (mut s, reply2, codec2) =
+        connect_client(&addr, &again, Some(Duration::from_secs(5))).unwrap();
+    assert!(reply2.accepted && reply2.resumed, "{}", reply2.message);
+    assert_eq!(codec2.wire, WireDtype::SparseI8, "resume must keep the admission dtype");
+
+    // The attach replay of seq 2 comes from the ring and still verifies
+    // against the sparse-codec ground truth.
+    let replayed = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(replayed.req_id, 2);
+    assert_eq!(replayed.body, expected_digest_codec(&make_input(2), 2, codec));
+
+    // A client-side re-send of seq 2 — encoded at the session dtype —
+    // is answered from the ring, not re-executed.
+    write_request(&mut s, 2, &client_prepare_codec(&make_input(2), 2, codec)).unwrap();
+    let dup = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(dup.req_id, 2);
+    assert_eq!(dup.body, expected_digest_codec(&make_input(2), 2, codec));
+
+    // Fresh work on the resumed session runs at sparse too.
+    let input = make_input(3);
+    write_request(&mut s, 3, &client_prepare_codec(&input, 2, codec)).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.req_id, 3);
+    assert_eq!(resp.body, expected_digest_codec(&input, 2, codec));
+
+    // Cut again; a v2 resume of the sparse session is refused.
+    s.shutdown(std::net::Shutdown::Both).unwrap();
+    drop(s);
+    std::thread::sleep(Duration::from_millis(50));
+    let mut old = TcpStream::connect(server.addr()).unwrap();
+    write_handshake(
+        &mut old,
+        &Handshake::v2("synthetic", 2, "sticky").with_resume(Resume {
+            session_id: reply.session_id,
+            token: reply.token,
+            last_ack: 3,
+        }),
+    )
+    .unwrap();
+    let refused = read_handshake_reply(&mut old).unwrap();
+    assert!(!refused.accepted, "v2 resumed a sparse session");
+    assert!(refused.message.contains("wire"), "{}", refused.message);
+    drop(old);
+
+    let metrics = server.shutdown();
+    // Exactly-once held across the dtype-preserving resume: 3 distinct
+    // inferences despite seq 2 being delivered three times.
+    assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 3);
+    assert_eq!(metrics.get("sessions_resumed").unwrap().int().unwrap(), 1);
+    assert!(metrics.get("responses_replayed").unwrap().int().unwrap() >= 2);
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// Sparse chaos (the PR-2 replay harness at the new dtype): resilient
+/// sparse-wire clients hammer a 2-core round-robin server while killing
+/// their own links, so RECONNECTs cross shards with the sticky dtype.
+/// Zero lost, every response verified.
+#[test]
+fn sparse_chaos_across_shards_loses_nothing() {
+    use edge_prune::runtime::wire::WireDtype;
+    let server = Server::start(ServerConfig { cores: 2, accept_rr: true, ..test_cfg() }).unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients: 3,
+        requests: 20,
+        pp: 2,
+        chaos_kill_every: 4,
+        wire: WireDtype::SparseI8,
+        seed: 91,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.ok, 60, "{}", report.summary());
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.lost(), 0);
+    assert!((report.service_availability() - 1.0).abs() < 1e-12);
+    assert!(report.reconnects >= 1);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+    assert!(metrics.get("sessions_resumed").unwrap().int().unwrap() >= 1);
+}
+
+/// The session wave holds at the sparse wire dtype too (what the CI
+/// 64-session sparse wave runs against a 2-core server).
+#[test]
+fn session_wave_runs_at_sparse_wire() {
+    use edge_prune::runtime::wire::WireDtype;
+    ensure_fd_headroom(256);
+    let server = Server::start(ServerConfig { max_sessions: 80, ..test_cfg() }).unwrap();
+    let report = run_session_wave(&WaveConfig {
+        addr: server.addr().to_string(),
+        sessions: 64,
+        rounds: 2,
+        pp: 2,
+        wire: WireDtype::SparseI8,
         ..WaveConfig::default()
     })
     .unwrap();

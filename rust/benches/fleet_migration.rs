@@ -1,0 +1,151 @@
+//! Fleet migration bench: two in-process servers ping-pong one live
+//! sparse-wire session through rolling drains while the client keeps
+//! inferring.  Measures the control-plane hand-off (quiesce + export +
+//! peer mint + hint) and the client-side rebind (first inference after
+//! a drain, including the redirect and RECONNECT), and proves the
+//! availability story the fleet tentpole claims: zero inferences lost
+//! across every migration.  Emits `BENCH_fleet.json`.
+//!
+//! CI smoke assertions (EXPERIMENTS.md "Rolling drain" has the
+//! methodology):
+//! * service availability across the whole run >= `EP_FLEET_MIN_AVAIL`
+//!   (default 0.99; measured 1.0 — the replay ring makes every frame
+//!   land exactly once even while its session changes servers);
+//! * every drain actually moved the session (migrations followed ==
+//!   rounds) and every frame completed (zero losses, zero local
+//!   fallbacks);
+//! * every response verifies against the sparse-codec ground truth, so
+//!   the negotiated dtype demonstrably survives each move.
+//!
+//! Knobs: EP_ITERS (drain rounds, default 24), EP_FLEET_FRAMES (frames
+//! between drains, default 8), EP_FLEET_MIN_AVAIL.
+
+use edge_prune::benchkit::{env_or, header, write_bench_json};
+use edge_prune::runtime::metrics::LatencyHistogram;
+use edge_prune::runtime::wire::WireDtype;
+use edge_prune::server::failover::{FailoverClient, FailoverConfig};
+use edge_prune::server::model::{expected_digest_codec, make_input};
+use edge_prune::server::{Server, ServerConfig};
+use edge_prune::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let rounds: u64 = env_or("EP_ITERS", 24);
+    let frames_between: u64 = env_or("EP_FLEET_FRAMES", 8);
+    let min_avail: f64 = env_or("EP_FLEET_MIN_AVAIL", 0.99);
+    header("fleet migration: rolling-drain ping-pong between two servers");
+
+    let cfg = ServerConfig { workers: 2, pin_workers: false, ..ServerConfig::default() };
+    let servers = [Server::start(cfg.clone())?, Server::start(cfg)?];
+    let addrs = [servers[0].addr().to_string(), servers[1].addr().to_string()];
+
+    let pp = 2usize;
+    let mut fc = FailoverClient::new(FailoverConfig {
+        addr: addrs[0].clone(),
+        pp,
+        client_id: "fleet-bench".into(),
+        wire: WireDtype::SparseI8,
+        max_attempts: 3,
+        reconnect_backoff: Duration::from_millis(1),
+        ..FailoverConfig::default()
+    });
+
+    let drain_hist = LatencyHistogram::new();
+    let rebind_hist = LatencyHistogram::new();
+    let steady_hist = LatencyHistogram::new();
+    let mut frame = 0u64;
+    let mut verified = 0u64;
+    let mut infer = |fc: &mut FailoverClient, hist: &LatencyHistogram| -> anyhow::Result<()> {
+        let input = make_input(frame);
+        let t0 = Instant::now();
+        let (body, served) = fc.infer(&input)?;
+        hist.record(t0.elapsed());
+        anyhow::ensure!(!served.is_local(), "frame {frame} fell back to local");
+        anyhow::ensure!(
+            body == expected_digest_codec(&input, pp, fc.codec()),
+            "frame {frame} digest mismatch after {verified} verified"
+        );
+        frame += 1;
+        verified += 1;
+        Ok(())
+    };
+
+    // Warm the session (plan compile, codec negotiation) off the clock.
+    for _ in 0..4 {
+        infer(&mut fc, &steady_hist)?;
+    }
+
+    for r in 0..rounds {
+        for _ in 0..frames_between {
+            infer(&mut fc, &steady_hist)?;
+        }
+        // Rolling drain: the owner quiesces and hands the session to
+        // the other server, then rejoins the fleet — exactly the
+        // `serve --drain-on` path minus the process exit.
+        let owner = (r % 2) as usize;
+        let t0 = Instant::now();
+        let _ = servers[owner].drain_to(Some(&addrs[1 - owner]));
+        drain_hist.record(t0.elapsed());
+        servers[owner].resume_admissions();
+        // First frame after the drain pays the redirect + RECONNECT.
+        infer(&mut fc, &rebind_hist)?;
+    }
+    fc.finish();
+
+    let stats = fc.stats();
+    let avail = stats.service_availability();
+    println!(
+        "rounds {rounds}: drain p50 {:.2} ms p99 {:.2} ms | rebind p50 {:.2} ms p99 {:.2} ms | steady p50 {:.3} ms",
+        drain_hist.quantile_ms(0.5),
+        drain_hist.quantile_ms(0.99),
+        rebind_hist.quantile_ms(0.5),
+        rebind_hist.quantile_ms(0.99),
+        steady_hist.quantile_ms(0.5),
+    );
+    println!(
+        "availability {:.6} | {} frames verified | {} migrations followed",
+        avail, verified, stats.migrations_followed
+    );
+
+    let out = Json::from_pairs(vec![
+        ("rounds", Json::from(rounds)),
+        ("frames_between_drains", Json::from(frames_between)),
+        ("frames_verified", Json::from(verified)),
+        ("availability", Json::from(avail)),
+        ("migrations_followed", Json::from(stats.migrations_followed)),
+        ("reconnects", Json::from(stats.reconnects)),
+        ("drain_ms_p50", Json::from(drain_hist.quantile_ms(0.5))),
+        ("drain_ms_p99", Json::from(drain_hist.quantile_ms(0.99))),
+        ("rebind_ms_p50", Json::from(rebind_hist.quantile_ms(0.5))),
+        ("rebind_ms_p99", Json::from(rebind_hist.quantile_ms(0.99))),
+        ("steady_ms_p50", Json::from(steady_hist.quantile_ms(0.5))),
+        ("steady_ms_p99", Json::from(steady_hist.quantile_ms(0.99))),
+    ]);
+    write_bench_json("fleet", &out)?;
+
+    anyhow::ensure!(
+        avail >= min_avail,
+        "availability {avail:.4} under rolling drain below floor {min_avail}"
+    );
+    anyhow::ensure!(
+        stats.migrations_followed == rounds,
+        "only {} of {rounds} drains moved the session",
+        stats.migrations_followed
+    );
+    anyhow::ensure!(
+        stats.completed == stats.requested,
+        "lost {} inferences",
+        stats.requested - stats.completed
+    );
+
+    let [a, b] = servers;
+    let ma = a.shutdown();
+    let mb = b.shutdown();
+    let moved_out = ma.get("sessions_migrated_out")?.int().unwrap_or(0)
+        + mb.get("sessions_migrated_out")?.int().unwrap_or(0);
+    anyhow::ensure!(
+        moved_out == rounds as i64,
+        "servers ledger {moved_out} exports, expected {rounds}"
+    );
+    Ok(())
+}

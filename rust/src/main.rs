@@ -62,9 +62,19 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
            --trace (flight-recorder spans) --trace-sample N (1 in N)
            --metrics-addr HOST:PORT (TCP scrape endpoint: one JSON
            snapshot of metrics + sessions + trace spans per connect)
+           --drain-on SIGTERM|HOST:PORT (graceful drain trigger: on
+           SIGTERM — or one TCP connect to the admin endpoint, whose
+           first line names the fleet peer to migrate sessions to —
+           stop admitting, flush in-flight work, export migratable
+           sessions, print the final metrics snapshot, exit)
   loadgen: --addr HOST:PORT --clients N --requests N --pp K --link NAME
            --seed S --json --resilient --chaos K (kill each client's link
            every K requests; implies --resilient)
+           --fleet HOST:PORT,... (place sessions by rendezvous hashing
+           over these servers, rehome on server loss, follow MIGRATE
+           redirects from draining servers; implies --resilient)
+           --think-ms MS (pause between requests per client; paces a
+           wave so chaos events land mid-run without a link profile)
            --wire f32|f16|int8|sparse (requested; the server may
            downgrade)
            --trace --trace-sample N (client-side spans + traced-infer
@@ -296,6 +306,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics_addr: args.str_opt("metrics-addr").map(str::to_string),
     };
     let duration = args.usize_or("duration", 0)?;
+    // Graceful-drain trigger: a latched SIGTERM, or one connect to a
+    // tiny TCP admin endpoint whose first line names the fleet peer to
+    // migrate sessions to (empty line = drain without a handoff target).
+    let drain_on = args.str_opt("drain-on").map(str::to_string);
+    let mut drain_admin: Option<std::sync::mpsc::Receiver<(String, std::net::TcpStream)>> = None;
+    match drain_on.as_deref() {
+        None => {}
+        Some("SIGTERM") => {
+            edge_prune::server::fleet::install_drain_signal();
+            eprintln!("edge-prune serve: SIGTERM triggers a graceful drain");
+        }
+        Some(admin) => {
+            let listener = std::net::TcpListener::bind(admin)
+                .with_context(|| format!("binding drain admin endpoint {admin}"))?;
+            eprintln!(
+                "edge-prune serve: drain admin endpoint on {} (first line = handoff target)",
+                listener.local_addr()?
+            );
+            let (tx, rx) = std::sync::mpsc::channel();
+            std::thread::Builder::new()
+                .name("drain-admin".into())
+                .spawn(move || {
+                    if let Ok((stream, _)) = listener.accept() {
+                        use std::io::BufRead;
+                        let mut line = String::new();
+                        if let Ok(clone) = stream.try_clone() {
+                            let mut reader = std::io::BufReader::new(clone);
+                            let _ = reader.read_line(&mut line);
+                        }
+                        let _ = tx.send((line.trim().to_string(), stream));
+                    }
+                })
+                .context("spawning drain admin thread")?;
+            drain_admin = Some(rx);
+        }
+    }
     let server = Server::start(cfg)?;
     eprintln!(
         "edge-prune serve: listening on {} ({max_sessions} sessions max, {} core shards); \
@@ -306,19 +352,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(addr) = server.metrics_endpoint_addr() {
         eprintln!("edge-prune serve: metrics endpoint on {addr} (one JSON snapshot per connect)");
     }
-    if duration == 0 {
-        // Serve until killed; print a status line every 10 s.
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(10));
-            eprintln!(
-                "edge-prune serve: {} active sessions ({} detached), queue depth {}",
-                server.active_sessions(),
-                server.detached_sessions(),
-                server.queue_depth()
-            );
+    let deadline = (duration > 0)
+        .then(|| std::time::Instant::now() + std::time::Duration::from_secs(duration as u64));
+    let mut last_status = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        if edge_prune::server::fleet::drain_requested() {
+            eprintln!("edge-prune serve: SIGTERM received; draining");
+            let metrics = server.drain_to(None);
+            println!("{metrics}");
+            return Ok(());
+        }
+        if let Some(rx) = &drain_admin {
+            if let Ok((target, mut stream)) = rx.try_recv() {
+                let target = (!target.is_empty()).then_some(target);
+                eprintln!(
+                    "edge-prune serve: drain requested via admin endpoint (target: {})",
+                    target.as_deref().unwrap_or("none")
+                );
+                let metrics = server.drain_to(target.as_deref());
+                use std::io::Write;
+                // The requester gets the final snapshot as the drain's
+                // completion acknowledgement.
+                let _ = stream.write_all(metrics.to_string().as_bytes());
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                println!("{metrics}");
+                return Ok(());
+            }
+        }
+        match deadline {
+            Some(d) => {
+                if std::time::Instant::now() >= d {
+                    break;
+                }
+            }
+            None => {
+                if last_status.elapsed() >= std::time::Duration::from_secs(10) {
+                    last_status = std::time::Instant::now();
+                    eprintln!(
+                        "edge-prune serve: {} active sessions ({} detached), queue depth {}",
+                        server.active_sessions(),
+                        server.detached_sessions(),
+                        server.queue_depth()
+                    );
+                }
+            }
         }
     }
-    std::thread::sleep(std::time::Duration::from_secs(duration as u64));
     let metrics = server.shutdown();
     println!("{metrics}");
     Ok(())
@@ -347,6 +427,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         wire: wire(args)?,
         trace: args.bool_flag("trace") || trace_out.is_some(),
         trace_sample: args.usize_or("trace-sample", 1)? as u64,
+        fleet: match args.str_opt("fleet") {
+            Some(spec) => edge_prune::server::fleet::parse_manifest(spec)?,
+            None => Vec::new(),
+        },
+        think_ms: args.usize_or("think-ms", 0)? as u64,
     };
     let report = run_loadgen(&cfg)?;
     if args.bool_flag("json") {

@@ -58,6 +58,12 @@ pub const CAP_TRACE: u8 = 4;
 /// index).  Implies [`CAP_I8`] | [`CAP_F16`] on the advertising side so
 /// a downgrade against an older peer always lands on a shared dtype.
 pub const CAP_SPARSE_I8: u8 = 8;
+/// Capability bit: peer understands fleet session migration — it can
+/// follow a MIGRATE redirect hint (client side) or accept EXPORT/IMPORT
+/// session-image frames (server side).  Like [`CAP_TRACE`] it is
+/// orthogonal to dtype negotiation: [`negotiate`] ignores it, and a
+/// peer that lacks it simply downgrades to plain reconnect.
+pub const CAP_MIGRATE: u8 = 16;
 
 /// Element type of activations on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

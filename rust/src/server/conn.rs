@@ -37,6 +37,7 @@
 //! regardless of session count.
 
 use super::batch::PendingRequest;
+use super::fleet;
 use super::model::{self, ServerModelPlan};
 use super::protocol::{self, Frame, HandshakeReply, ReqKind, Response};
 use super::session::{Admit, ResponseSink, SessionHandle};
@@ -191,6 +192,10 @@ struct Attachment {
     /// Negotiated activation wire dtype of this attachment (v2 clients
     /// always get f32).
     wire: WireDtype,
+    /// The attachment negotiated `CAP_MIGRATE`: Export frames are
+    /// honored and a drain may redirect this client with a MIGRATE
+    /// hint.  Always false on v2.
+    migrate: bool,
     outbox: Arc<super::session::SessionOutbox>,
     health: Arc<crate::runtime::health::HealthMonitor>,
     plan: Arc<ServerModelPlan>,
@@ -208,6 +213,11 @@ enum ConnState {
     Handshake,
     /// Admitted (fresh or resumed) session attachment.
     Attached(Attachment),
+    /// A fleet peer (another server) that authenticated with the
+    /// reserved [`protocol::PEER_MODEL`] hello: it owns no session and
+    /// speaks only Import/Ping/Bye — the server-to-server half of live
+    /// migration.
+    Peer,
     /// No session (reject, post-BYE, lost takeover): flush the write
     /// buffer, then close.
     Draining,
@@ -619,9 +629,15 @@ impl EventLoop {
                     Err(_why) => return Err(Teardown::Close),
                 }
             }
-            // Attached: pull complete frames.
+            // Attached (or fleet peer): pull complete frames.
             match protocol::decode_frame(&mut conn.inbuf) {
-                Ok(Some(frame)) => self.handle_frame(conn, frame)?,
+                Ok(Some(frame)) => {
+                    if matches!(conn.state, ConnState::Peer) {
+                        self.handle_peer_frame(conn, frame)?
+                    } else {
+                        self.handle_frame(conn, frame)?
+                    }
+                }
                 Ok(None) => return Ok(()),
                 // Protocol violation: close outright — a misbehaving
                 // client must not earn a lingering detached slot.
@@ -685,8 +701,31 @@ impl EventLoop {
         if matches!(frame.kind, ReqKind::Infer | ReqKind::TracedInfer) {
             a.outbox.stats().wire.note_rx(actual, f32_equiv);
         }
+        // Export work is staged out of the match: acting on it flips
+        // `conn.state`, which the `a` borrow pins until the match ends.
+        let mut export_to: Option<String> = None;
         match frame.kind {
             ReqKind::Bye => unreachable!("handled above"),
+            ReqKind::Import => {
+                // Session images only cross fleet-peer connections; a
+                // client pushing one is a protocol violation.
+                return Err(Teardown::Close);
+            }
+            ReqKind::Export => {
+                if !a.migrate {
+                    a.outbox.send_ephemeral(Response::error(
+                        frame.seq,
+                        "session did not negotiate migration (CAP_MIGRATE)",
+                    ));
+                } else {
+                    match protocol::parse_export_payload(&frame.payload) {
+                        Ok(target) => export_to = Some(target),
+                        Err(e) => a
+                            .outbox
+                            .send_ephemeral(Response::error(frame.seq, &format!("{e:#}"))),
+                    }
+                }
+            }
             ReqKind::Ping => {
                 self.state.metrics.pings.fetch_add(1, Ordering::Relaxed);
                 a.outbox.send_ephemeral(Response::ok(frame.seq, b"pong".to_vec()));
@@ -797,6 +836,127 @@ impl EventLoop {
                 }
             }
         }
+        if let Some(target) = export_to {
+            self.export_attached(conn, frame.seq, &target);
+        }
+        Ok(())
+    }
+
+    /// Client-initiated session handoff (`Export` frame): snapshot the
+    /// session, push it to the named fleet peer, answer with a MIGRATE
+    /// hint carrying the peer-minted credentials, and release the local
+    /// slot.  Strictly all-or-nothing — any failure leaves the session
+    /// exactly where it was and the client gets an error response.
+    ///
+    /// The push is a short blocking exchange on the reactor thread
+    /// (bounded by [`fleet::EXPORT_TIMEOUT`]); migration is a
+    /// control-plane rarity, and the sessions it stalls are the ones
+    /// being handed away.
+    fn export_attached(&mut self, conn: &mut Conn, seq: u64, target: &str) {
+        let ConnState::Attached(a) = &conn.state else { return };
+        let session_id = a.session_id;
+        let epoch = a.epoch;
+        let outbox = a.outbox.clone();
+        let image = match self
+            .state
+            .shared
+            .sessions
+            .export_session(session_id, self.state.shared.precision)
+        {
+            Ok(img) => img,
+            Err(why) => {
+                outbox.send_ephemeral(Response::error(seq, &why));
+                return;
+            }
+        };
+        let (new_id, new_token) =
+            match fleet::push_session(target, &image, fleet::EXPORT_TIMEOUT) {
+                Ok(minted) => minted,
+                Err(e) => {
+                    outbox.send_ephemeral(Response::error(seq, &format!("{e:#}")));
+                    return;
+                }
+            };
+        let hint = protocol::MigrateHint {
+            addr: target.to_string(),
+            session_id: new_id,
+            token: new_token,
+        };
+        let body = match protocol::migrate_hint_payload(&hint) {
+            Ok(b) => b,
+            Err(e) => {
+                outbox.send_ephemeral(Response::error(seq, &format!("{e:#}")));
+                return;
+            }
+        };
+        self.state.metrics.sessions_migrated_out.fetch_add(1, Ordering::Relaxed);
+        eprintln!("[serve] session {session_id} exported to {target} (as {new_id})");
+        // The hint goes straight into this connection's write buffer —
+        // not through the outbox, whose sink routes by connection id and
+        // would race the teardown below (the draining close must flush
+        // the hint first, and it only waits on `outbuf`).
+        let encoded = protocol::encode_response(&Response::ok(seq, body));
+        self.state.metrics.wire.note_tx(encoded.len() as u64, encoded.len() as u64);
+        conn.outbuf.extend(&encoded);
+        self.note_queued(conn);
+        // The target owns the session now: free the local slot
+        // (epoch-guarded) and drain this connection.
+        self.state.shared.sessions.close_if_current(session_id, epoch);
+        conn.state = ConnState::Draining;
+        conn.inbuf.clear();
+        self.set_conn_deadline(conn, DRAIN_TIMEOUT);
+    }
+
+    /// One decoded frame on a fleet-peer connection.  Peers own no
+    /// session: responses are written straight to the connection buffer,
+    /// and only Import/Ping/Bye are meaningful.
+    fn handle_peer_frame(&mut self, conn: &mut Conn, frame: Frame) -> Result<(), Teardown> {
+        let idle = self.state.shared.idle_timeout;
+        if !idle.is_zero() {
+            self.set_conn_deadline(conn, idle);
+        }
+        let actual = (frame.payload.len() + 13) as u64;
+        self.state.metrics.wire.note_rx(actual, actual);
+        let resp = match frame.kind {
+            ReqKind::Ping => Response::ok(frame.seq, b"pong".to_vec()),
+            ReqKind::Bye => {
+                conn.state = ConnState::Draining;
+                conn.inbuf.clear();
+                self.set_conn_deadline(conn, DRAIN_TIMEOUT);
+                return Ok(());
+            }
+            ReqKind::Import => match protocol::parse_session_image(&frame.payload) {
+                Ok(img) => match self.state.shared.sessions.try_import(
+                    &img,
+                    self.state.shared.replay_ring,
+                    self.state.shared.idle_timeout,
+                ) {
+                    Ok((id, token)) => {
+                        self.state.metrics.sessions_migrated_in.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[serve] session {id} imported from fleet peer (client {}, {} ringed)",
+                            img.client_id,
+                            img.ring.len()
+                        );
+                        let mut body = Vec::with_capacity(16);
+                        body.extend_from_slice(&id.to_le_bytes());
+                        body.extend_from_slice(&token.to_le_bytes());
+                        Response::ok(frame.seq, body)
+                    }
+                    Err(why) => Response::error(frame.seq, &why),
+                },
+                // A malformed image is a protocol violation, not a
+                // negotiable failure.
+                Err(_) => return Err(Teardown::Close),
+            },
+            // Infer/Switch/Export/TracedInfer have no meaning without a
+            // session behind the connection.
+            _ => return Err(Teardown::Close),
+        };
+        let encoded = protocol::encode_response(&resp);
+        self.state.metrics.wire.note_tx(encoded.len() as u64, encoded.len() as u64);
+        conn.outbuf.extend(&encoded);
+        self.note_queued(conn);
         Ok(())
     }
 
@@ -815,6 +975,7 @@ impl EventLoop {
             token: 0,
             codec: (version >= protocol::VERSION).then(SessionCodec::f32),
             trace: false,
+            migrate: false,
             message,
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
@@ -822,6 +983,48 @@ impl EventLoop {
         conn.state = ConnState::Draining;
         conn.inbuf.clear();
         self.set_conn_deadline(conn, DRAIN_TIMEOUT);
+    }
+
+    /// Admit a fleet peer (the reserved [`protocol::PEER_MODEL`] hello):
+    /// no session, no plan — just a grant to push Import frames.  The
+    /// reply carries no credentials (session 0 / token 0) and the
+    /// migrate bit set; a draining or migration-disabled server rejects,
+    /// which the exporting side reads as "keep the session".
+    fn accept_peer(
+        &mut self,
+        conn: &mut Conn,
+        hs: &protocol::Handshake,
+    ) -> Result<(), Teardown> {
+        if !protocol::migrate_granted(hs.version, hs.wire_caps, self.state.shared.wire_caps) {
+            self.reject(
+                conn,
+                hs.version,
+                "fleet migration not enabled on this server".to_string(),
+            );
+            return Ok(());
+        }
+        if self.state.shared.draining.load(Ordering::SeqCst) {
+            self.reject(conn, hs.version, "server is draining; imports refused".to_string());
+            return Ok(());
+        }
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed: false,
+            session_id: 0,
+            token: 0,
+            codec: Some(SessionCodec::f32()),
+            trace: false,
+            migrate: true,
+            message: String::new(),
+        };
+        conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
+        self.note_queued(conn);
+        conn.state = ConnState::Peer;
+        let idle = self.state.shared.idle_timeout;
+        if !idle.is_zero() {
+            self.set_conn_deadline(conn, idle);
+        }
+        Ok(())
     }
 
     /// Admission: the nonblocking port of the threaded server's
@@ -834,6 +1037,21 @@ impl EventLoop {
         hs: protocol::Handshake,
     ) -> Result<(), Teardown> {
         let resumed = hs.resume.is_some();
+        // Fleet-peer hello: another server authenticating with the
+        // reserved model name to push a session image.  Intercepted
+        // before plan compile (the name is deliberately not a model —
+        // that is exactly how a pre-fleet server rejects it, which the
+        // exporter reads as "peer cannot import").
+        if !resumed && hs.model == protocol::PEER_MODEL {
+            return self.accept_peer(conn, &hs);
+        }
+        // Drain mode: fresh sessions are refused so the directory only
+        // shrinks; RECONNECTs still land — a draining server must flush
+        // retained replies and let clients claim state until handoff.
+        if !resumed && self.state.shared.draining.load(Ordering::SeqCst) {
+            self.reject(conn, hs.version, "server is draining; no new sessions".to_string());
+            return Ok(());
+        }
         // Codec negotiation: intersect the client's capability bits with
         // the server's enabled set (v2 clients advertise nothing and get
         // f32).  This intersection only decides a FRESH session's dtype:
@@ -966,6 +1184,11 @@ impl EventLoop {
         // reply bit is the client's license to send kind-4 frames.
         let trace_ok =
             version >= protocol::VERSION && hs.wire_caps & wire::CAP_TRACE != 0 && trace::enabled();
+        // Migration capability: v3 + both sides advertising CAP_MIGRATE.
+        // Connection-scoped like the trace grant — a RECONNECT through an
+        // old client library downgrades the session to plain reconnect.
+        let migrate_ok =
+            protocol::migrate_granted(version, hs.wire_caps, self.state.shared.wire_caps);
         // The session's dtype: what try_open stored for a fresh session,
         // the admission-time value try_resume recalled for a RECONNECT.
         let session_wire = handle.wire;
@@ -979,6 +1202,7 @@ impl EventLoop {
                 precision: self.state.shared.precision,
             }),
             trace: trace_ok,
+            migrate: migrate_ok,
             message: String::new(),
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
@@ -1008,12 +1232,19 @@ impl EventLoop {
         }
         self.note_queued(conn);
         self.state.shared.sessions.note_attached(handle.id, self.state.index, conn.id);
+        self.state.shared.sessions.set_migrate(handle.id, migrate_ok);
+        // The RECONNECT that lands on a freshly imported session is the
+        // moment the fleet's placement actually changed.
+        if resumed && self.state.shared.sessions.claim_imported(handle.id) {
+            self.state.metrics.placement_rebalances.fetch_add(1, Ordering::Relaxed);
+        }
         let plan_metrics = self.state.metrics.plan(&plan.key);
         conn.state = ConnState::Attached(Attachment {
             session_id: handle.id,
             epoch,
             resumed,
             wire: session_wire,
+            migrate: migrate_ok,
             outbox: handle.outbox,
             health: handle.health,
             plan,
@@ -1170,6 +1401,7 @@ impl EventLoop {
             ConnState::Handshake => {
                 self.handshaking -= 1;
             }
+            ConnState::Peer => {}
             ConnState::Draining => {}
             ConnState::Attached(a) => match mode {
                 Teardown::Detach if reply_undelivered && !a.resumed => {

@@ -29,12 +29,14 @@
 
 use super::model::{FrameScratch, MODEL_NAME, TOKEN_BYTES};
 use super::protocol::{
-    connect_client, read_response, switch_payload, write_frame, Handshake, ReqKind, RespStatus,
-    Response, Resume, V2, VERSION,
+    connect_client, export_payload, parse_migrate_hint, read_response, switch_payload,
+    write_frame, Handshake, MigrateHint, ReqKind, RespStatus, Response, Resume, MIGRATE_REQ_ID,
+    V2, VERSION,
 };
 use crate::runtime::health::{HealthConfig, HealthMonitor, LinkState};
-use crate::runtime::wire::{SessionCodec, WireDtype};
+use crate::runtime::wire::{SessionCodec, WireDtype, CAP_MIGRATE};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -113,6 +115,53 @@ impl FailoverPolicy {
     }
 }
 
+/// Capped decorrelated-jitter reconnect backoff.  Each delay is drawn
+/// uniformly from `[base, 3 * prev)` and clamped to `cap`, so a burst of
+/// failing clients spreads out fast instead of re-dialing in lockstep;
+/// a successful connect resets the window.  The jitter source is a
+/// seeded [`Rng`], so a fixed seed yields a reproducible schedule under
+/// test.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    prev: Duration,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        let cap = cap.max(base);
+        Backoff { base, cap, prev: base, rng: Rng::new(seed) }
+    }
+
+    /// Back to the base window (after a successful connect).
+    pub fn reset(&mut self) {
+        self.prev = self.base;
+    }
+
+    /// The next delay to sleep before re-dialing.  A zero base keeps
+    /// every delay zero — the config's way of disabling backoff sleeps
+    /// (e.g. in tight tests).
+    pub fn next_delay(&mut self) -> Duration {
+        if self.base.is_zero() {
+            return Duration::ZERO;
+        }
+        let base = self.base.as_micros() as u64;
+        let cap = self.cap.as_micros() as u64;
+        let hi = (self.prev.as_micros() as u64).saturating_mul(3).max(base + 1);
+        let drawn = base + self.rng.below(hi - base);
+        self.prev = Duration::from_micros(drawn.min(cap));
+        self.prev
+    }
+
+    /// Did the last delay hit the cap?  That is the "this outage is not
+    /// transient" signal the exhaustion counter records.
+    pub fn at_cap(&self) -> bool {
+        !self.base.is_zero() && self.prev >= self.cap
+    }
+}
+
 /// Shared availability math: `part / whole` with the empty case pinned
 /// to 1.0 (no demand = nothing was unavailable).  Both the client-side
 /// [`FailoverStats`] and the loadgen's aggregate report derive their
@@ -147,6 +196,12 @@ pub struct FailoverStats {
     pub handshake_rejects: u64,
     pub link_failures: u64,
     pub plan_switches: u64,
+    /// Failed remote attempts that scheduled a backoff-delayed retry.
+    pub reconnect_attempts: u64,
+    /// Backoff delays that hit the configured cap (sustained outage).
+    pub backoff_exhaustions: u64,
+    /// MIGRATE redirects followed to another fleet server.
+    pub migrations_followed: u64,
     /// Inference-frame bytes moved over the link (and their
     /// f32-equivalents — the wire-compression accounting).
     pub bytes_tx: u64,
@@ -182,6 +237,9 @@ impl FailoverStats {
             ("handshake_rejects", Json::from(self.handshake_rejects)),
             ("link_failures", Json::from(self.link_failures)),
             ("plan_switches", Json::from(self.plan_switches)),
+            ("reconnect_attempts", Json::from(self.reconnect_attempts)),
+            ("backoff_exhaustions", Json::from(self.backoff_exhaustions)),
+            ("migrations_followed", Json::from(self.migrations_followed)),
             ("bytes_tx", Json::from(self.bytes_tx)),
             ("bytes_rx", Json::from(self.bytes_rx)),
             ("f32_equiv_tx", Json::from(self.f32_equiv_tx)),
@@ -202,7 +260,14 @@ pub struct FailoverConfig {
     pub health: HealthConfig,
     /// Remote attempts per request before falling back locally.
     pub max_attempts: u32,
+    /// Base (floor) of the jittered reconnect backoff; zero disables
+    /// backoff sleeps entirely.
     pub reconnect_backoff: Duration,
+    /// Ceiling of the decorrelated-jitter reconnect backoff.
+    pub backoff_cap: Duration,
+    /// Seed of the backoff jitter source — fixed, so failure schedules
+    /// are reproducible under test.
+    pub backoff_seed: u64,
     /// Socket read deadline; a server silent past this is a failure.
     pub read_timeout: Duration,
     /// While the link is considered down, probe the edge every Nth
@@ -222,6 +287,8 @@ impl Default for FailoverConfig {
             health: HealthConfig::default(),
             max_attempts: 2,
             reconnect_backoff: Duration::from_millis(20),
+            backoff_cap: Duration::from_millis(500),
+            backoff_seed: 0xBAC_0FF,
             read_timeout: Duration::from_secs(2),
             probe_every: 8,
             wire: WireDtype::F32,
@@ -270,6 +337,8 @@ pub struct FailoverClient {
     /// Highest sequence whose response this client has received — the
     /// `last_ack` a RECONNECT carries.
     last_delivered: u64,
+    /// Jittered reconnect pacing (reset on every successful connect).
+    backoff: Backoff,
     /// Consecutive local servings (drives the down-state probe cadence).
     local_streak: u64,
     ever_connected: bool,
@@ -283,17 +352,28 @@ pub struct FailoverClient {
 
 /// Read until the terminal response for `seq` arrives, counting replayed
 /// duplicates of earlier sequences (dedupe-by-sequence: anything not
-/// `seq` has either been delivered before or will be re-requested).
+/// `seq` has either been delivered before or will be re-requested).  A
+/// MIGRATE redirect observed on the way is parked in `migrate` for the
+/// caller to apply once the exchange settles — it rides `req_id`
+/// [`MIGRATE_REQ_ID`] (below every real sequence), so a pre-migrate
+/// client falls through to the stale-replay arm and ignores it.
 fn await_response(
     stream: &mut TcpStream,
     stats: &mut FailoverStats,
     seq: u64,
+    migrate: &mut Option<MigrateHint>,
 ) -> Result<Response> {
     loop {
         match read_response(stream)? {
             None => bail!("connection closed awaiting seq {seq}"),
             Some(resp) if resp.req_id == seq => return Ok(resp),
             Some(resp) => {
+                if resp.req_id == MIGRATE_REQ_ID && resp.status == RespStatus::Ok {
+                    if let Ok(hint) = parse_migrate_hint(&resp.body) {
+                        *migrate = Some(hint);
+                        continue;
+                    }
+                }
                 if resp.req_id < seq {
                     stats.replays_received += 1;
                 }
@@ -307,6 +387,7 @@ impl FailoverClient {
         let policy = FailoverPolicy::new(cfg.pp);
         let monitor = HealthMonitor::new(cfg.health.clone());
         let session_pp = cfg.pp;
+        let backoff = Backoff::new(cfg.reconnect_backoff, cfg.backoff_cap, cfg.backoff_seed);
         FailoverClient {
             cfg,
             policy,
@@ -318,6 +399,7 @@ impl FailoverClient {
             session_version: VERSION,
             next_seq: 1,
             last_delivered: 0,
+            backoff,
             local_streak: 0,
             ever_connected: false,
             stats: FailoverStats::default(),
@@ -357,6 +439,12 @@ impl FailoverClient {
     /// current link, if any, keeps being used until it fails.
     pub fn set_addr(&mut self, addr: &str) {
         self.cfg.addr = addr.to_string();
+    }
+
+    /// The server address future (re)connects will dial — tracks both
+    /// [`set_addr`](Self::set_addr) and followed MIGRATE redirects.
+    pub fn addr(&self) -> &str {
+        &self.cfg.addr
     }
 
     /// Chaos hook: abruptly kill the live link (no BYE), as a failing
@@ -400,8 +488,15 @@ impl FailoverClient {
                         if self.policy.decide(self.monitor.state()).mode == ServingMode::Local {
                             break;
                         }
-                        if attempt + 1 < attempts && !self.cfg.reconnect_backoff.is_zero() {
-                            std::thread::sleep(self.cfg.reconnect_backoff);
+                        if attempt + 1 < attempts {
+                            self.stats.reconnect_attempts += 1;
+                            let delay = self.backoff.next_delay();
+                            if self.backoff.at_cap() {
+                                self.stats.backoff_exhaustions += 1;
+                            }
+                            if !delay.is_zero() {
+                                std::thread::sleep(delay);
+                            }
                         }
                     }
                 }
@@ -446,7 +541,57 @@ impl FailoverClient {
         if resumed {
             self.stats.sessions_resumed += 1;
         }
+        self.backoff.reset();
         self.monitor.note_recovered();
+    }
+
+    /// Follow a MIGRATE redirect: adopt the fresh credentials the target
+    /// server minted for the imported session, point future connects at
+    /// it, and retire the current link (the exporter is closing its
+    /// side).  `next_seq` and `last_delivered` survive untouched — the
+    /// image moved the replay ring, so sequence dedupe and RECONNECT
+    /// `last_ack` semantics keep working across the server change.
+    fn apply_migration(&mut self, hint: MigrateHint) {
+        self.stats.migrations_followed += 1;
+        self.cfg.addr = hint.addr;
+        self.session = Some((hint.session_id, hint.token));
+        // Migration is only ever granted on v3 sessions, and the import
+        // preserves the negotiated codec — resume at v3.
+        self.session_version = VERSION;
+        if let Some(conn) = &self.conn {
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        }
+        self.conn = None;
+    }
+
+    /// Client-initiated migration: ask the current server to export this
+    /// session to `target` (a fleet peer) and follow the returned
+    /// MIGRATE hint.  The replay ring, epoch, and negotiated wire dtype
+    /// move with the session; the next inference RECONNECTs at `target`.
+    pub fn migrate_to(&mut self, target: &str) -> Result<()> {
+        self.ensure_connected()?;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let payload = export_payload(target)?;
+        write_frame(
+            &mut self.conn.as_mut().expect("connected").stream,
+            seq,
+            ReqKind::Export,
+            &payload,
+        )?;
+        let mut hint = None;
+        let resp = await_response(
+            &mut self.conn.as_mut().expect("connected").stream,
+            &mut self.stats,
+            seq,
+            &mut hint,
+        )?;
+        if resp.status != RespStatus::Ok {
+            bail!("export to {target} refused: {}", String::from_utf8_lossy(&resp.body));
+        }
+        let hint = parse_migrate_hint(&resp.body)?;
+        self.apply_migration(hint);
+        Ok(())
     }
 
     fn read_timeout_opt(&self) -> Option<Duration> {
@@ -470,7 +615,7 @@ impl FailoverClient {
                     &self.cfg.model,
                     self.session_pp,
                     &self.cfg.client_id,
-                    self.cfg.wire.caps(),
+                    self.cfg.wire.caps() | CAP_MIGRATE,
                 )
             }
             .with_resume(Resume { session_id: sid, token, last_ack: self.last_delivered });
@@ -487,8 +632,12 @@ impl FailoverClient {
             self.session = None;
         }
         let choice = self.policy.decide(self.monitor.state());
-        let hello =
-            Handshake::v3(&self.cfg.model, choice.pp, &self.cfg.client_id, self.cfg.wire.caps());
+        let hello = Handshake::v3(
+            &self.cfg.model,
+            choice.pp,
+            &self.cfg.client_id,
+            self.cfg.wire.caps() | CAP_MIGRATE,
+        );
         let (stream, reply, codec) =
             connect_client(&self.cfg.addr, &hello, self.read_timeout_opt())?;
         if !reply.accepted {
@@ -512,14 +661,27 @@ impl FailoverClient {
         }
         let seq = self.next_seq;
         self.next_seq += 1;
-        let stream = &mut self.conn.as_mut().expect("connected").stream;
-        write_frame(stream, seq, ReqKind::Switch, &switch_payload(pp))?;
-        let resp = await_response(stream, &mut self.stats, seq)?;
+        write_frame(
+            &mut self.conn.as_mut().expect("connected").stream,
+            seq,
+            ReqKind::Switch,
+            &switch_payload(pp),
+        )?;
+        let mut hint = None;
+        let resp = await_response(
+            &mut self.conn.as_mut().expect("connected").stream,
+            &mut self.stats,
+            seq,
+            &mut hint,
+        )?;
         if resp.status != RespStatus::Ok {
             bail!("plan switch to pp {pp} refused: {}", String::from_utf8_lossy(&resp.body));
         }
         self.session_pp = pp;
         self.stats.plan_switches += 1;
+        if let Some(h) = hint {
+            self.apply_migration(h);
+        }
         Ok(())
     }
 
@@ -549,19 +711,32 @@ impl FailoverClient {
         let codec = self.codec;
         self.scratch.prepare_codec_into(input, self.session_pp, codec, &mut self.payload);
         let t0 = Instant::now();
-        let stream = &mut self.conn.as_mut().expect("connected").stream;
-        write_frame(stream, seq, ReqKind::Infer, &self.payload)?;
+        write_frame(
+            &mut self.conn.as_mut().expect("connected").stream,
+            seq,
+            ReqKind::Infer,
+            &self.payload,
+        )?;
         self.stats.bytes_tx += (self.payload.len() + 13) as u64;
         self.stats.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
         let mut reject_retries = 0u32;
-        loop {
-            let resp = await_response(stream, &mut self.stats, seq)?;
+        let mut hint: Option<MigrateHint> = None;
+        let outcome = loop {
+            let resp = match await_response(
+                &mut self.conn.as_mut().expect("connected").stream,
+                &mut self.stats,
+                seq,
+                &mut hint,
+            ) {
+                Ok(resp) => resp,
+                Err(e) => break Err(e),
+            };
             self.stats.bytes_rx += (resp.body.len() + 13) as u64;
             self.stats.f32_equiv_rx += (resp.body.len() + 13) as u64;
             match resp.status {
                 RespStatus::Ok => {
                     self.monitor.note_rtt(t0.elapsed(), self.payload.len() + resp.body.len());
-                    return Ok(resp.body);
+                    break Ok(resp.body);
                 }
                 RespStatus::Rejected => {
                     // Admission pushback: brief pause, re-send the same
@@ -569,18 +744,38 @@ impl FailoverClient {
                     self.stats.rejected_retries += 1;
                     reject_retries += 1;
                     if reject_retries > 100 {
-                        bail!("admission rejected seq {seq} {reject_retries} times");
+                        break Err(anyhow::anyhow!(
+                            "admission rejected seq {seq} {reject_retries} times"
+                        ));
                     }
                     std::thread::sleep(Duration::from_millis(2));
-                    write_frame(stream, seq, ReqKind::Infer, &self.payload)?;
+                    if let Err(e) = write_frame(
+                        &mut self.conn.as_mut().expect("connected").stream,
+                        seq,
+                        ReqKind::Infer,
+                        &self.payload,
+                    ) {
+                        break Err(e);
+                    }
                     self.stats.bytes_tx += (self.payload.len() + 13) as u64;
                     self.stats.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
                 }
                 RespStatus::Error => {
-                    bail!("server error for seq {seq}: {}", String::from_utf8_lossy(&resp.body))
+                    break Err(anyhow::anyhow!(
+                        "server error for seq {seq}: {}",
+                        String::from_utf8_lossy(&resp.body)
+                    ));
                 }
             }
+        };
+        // Apply a redirect observed during the exchange even when the
+        // exchange itself failed: a draining server hands off the
+        // session and then closes the link, so the hint and the EOF
+        // often arrive together — the retry must dial the NEW server.
+        if let Some(h) = hint {
+            self.apply_migration(h);
         }
+        outcome
     }
 
     fn try_ping(&mut self) -> Result<Duration> {
@@ -588,11 +783,19 @@ impl FailoverClient {
         let seq = self.next_seq;
         self.next_seq += 1;
         let t0 = Instant::now();
-        let stream = &mut self.conn.as_mut().expect("connected").stream;
-        write_frame(stream, seq, ReqKind::Ping, &[])?;
-        let resp = await_response(stream, &mut self.stats, seq)?;
+        write_frame(&mut self.conn.as_mut().expect("connected").stream, seq, ReqKind::Ping, &[])?;
+        let mut hint = None;
+        let resp = await_response(
+            &mut self.conn.as_mut().expect("connected").stream,
+            &mut self.stats,
+            seq,
+            &mut hint,
+        )?;
         let rtt = t0.elapsed();
         self.monitor.note_rtt(rtt, resp.body.len() + 26);
+        if let Some(h) = hint {
+            self.apply_migration(h);
+        }
         Ok(rtt)
     }
 
@@ -632,6 +835,31 @@ mod tests {
         assert_eq!(p.degraded_pp(), 4);
         let empty = FailoverPolicy::with_candidates(2, vec![]);
         assert_eq!(empty.degraded_pp(), 2, "empty candidates fall back to preferred");
+    }
+
+    #[test]
+    fn backoff_schedule_is_seed_deterministic_and_bounded() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(80);
+        let mut a = Backoff::new(base, cap, 7);
+        let mut b = Backoff::new(base, cap, 7);
+        let da: Vec<Duration> = (0..32).map(|_| a.next_delay()).collect();
+        let db: Vec<Duration> = (0..32).map(|_| b.next_delay()).collect();
+        assert_eq!(da, db, "same seed, same schedule");
+        assert!(da.iter().all(|d| *d >= base && *d <= cap), "every delay in [base, cap]");
+        let mut c = Backoff::new(base, cap, 8);
+        let dc: Vec<Duration> = (0..32).map(|_| c.next_delay()).collect();
+        assert_ne!(da, dc, "different seeds decorrelate the schedules");
+        // After a reset the window is back at the base: the next draw
+        // comes from [base, 3*base).
+        a.reset();
+        assert!(!a.at_cap());
+        let first = a.next_delay();
+        assert!(first >= base && first < base * 3);
+        // Zero base disables sleeping entirely.
+        let mut z = Backoff::new(Duration::ZERO, cap, 1);
+        assert_eq!(z.next_delay(), Duration::ZERO);
+        assert!(!z.at_cap());
     }
 
     #[test]

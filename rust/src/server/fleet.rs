@@ -1,0 +1,392 @@
+//! Fleet control plane: client-side placement over a static server
+//! manifest, plus the server-to-server session push that powers live
+//! migration and rolling drain.
+//!
+//! Placement is seeded rendezvous (highest-random-weight) hashing: every
+//! `(session key, server)` pair gets a deterministic 64-bit score and the
+//! client opens its session on the live server with the highest score.
+//! Rendezvous hashing gives the two properties a static manifest needs
+//! with no coordination at all: every client computes the same placement
+//! from the same seed, and when a server dies only the sessions it owned
+//! move (each rehomes to its second-highest score) — no ring state, no
+//! rebalancing protocol.  Liveness comes from the per-server
+//! [`HealthMonitor`] EWMAs that already drive single-link failover:
+//! a server classified `Down` is skipped at pick time and retried once
+//! its client observes a successful round trip again.
+//!
+//! Migration transport: [`push_session`] dials the target like any
+//! client, but with the reserved [`PEER_MODEL`] model name and
+//! `CAP_MIGRATE` set.  A fleet-capable server recognizes the peer hello
+//! and accepts a session image over an `Import` frame; an old server
+//! fails the unknown model at plan compile and rejects the handshake,
+//! which the exporter reads as "peer cannot import" — the downgrade path
+//! is simply not migrating (the client falls back to plain RECONNECT).
+//!
+//! Drain signal: a process-wide latch set by a raw SIGTERM handler (no
+//! libc crate — the two symbols we need are declared directly).  The
+//! handler only stores into an atomic, the async-signal-safe minimum;
+//! the serve loop polls [`drain_requested`] and runs the orderly drain
+//! from normal thread context.
+
+use crate::runtime::health::{HealthConfig, HealthMonitor, LinkState};
+use crate::runtime::wire::CAP_MIGRATE;
+use crate::server::protocol::{
+    self, Handshake, ReqKind, RespStatus, SessionImage, PEER_MODEL,
+};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Bound on one session push (dial + handshake + image + ack).  A peer
+/// slower than this keeps the session local — migration is best-effort,
+/// exactly-once delivery never depends on it.
+pub const EXPORT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Parse a fleet manifest string (`host:port,host:port,...`) into its
+/// member addresses.  Rejects empty entries and duplicates — a repeated
+/// address would silently double that server's rendezvous weight.
+pub fn parse_manifest(spec: &str) -> Result<Vec<String>> {
+    let mut out: Vec<String> = Vec::new();
+    for raw in spec.split(',') {
+        let addr = raw.trim();
+        if addr.is_empty() {
+            bail!("fleet manifest has an empty entry: {spec:?}");
+        }
+        if !addr.contains(':') {
+            bail!("fleet manifest entry {addr:?} is not host:port");
+        }
+        if out.iter().any(|a| a == addr) {
+            bail!("fleet manifest lists {addr:?} twice");
+        }
+        out.push(addr.to_string());
+    }
+    if out.is_empty() {
+        bail!("fleet manifest is empty");
+    }
+    Ok(out)
+}
+
+/// One fleet member as the placement layer sees it: its dial address and
+/// the health monitor fed by whichever client threads talk to it.
+#[derive(Debug)]
+pub struct FleetServer {
+    pub addr: String,
+    pub health: Arc<HealthMonitor>,
+}
+
+/// Client-side placement over a static fleet manifest (see the module
+/// doc for the rendezvous-hashing rationale).  Shared read-only across
+/// client threads; all mutability lives inside the health monitors.
+#[derive(Debug)]
+pub struct FleetPlacer {
+    seed: u64,
+    servers: Vec<FleetServer>,
+}
+
+/// splitmix64 finalizer: the avalanche stage used to turn the folded
+/// `(seed, server, key)` bytes into an unbiased rendezvous score.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01B3); // FNV-1a prime
+    }
+    h
+}
+
+impl FleetPlacer {
+    pub fn new(addrs: Vec<String>, seed: u64, health: HealthConfig) -> Result<FleetPlacer> {
+        if addrs.is_empty() {
+            bail!("fleet placer needs at least one server");
+        }
+        let servers = addrs
+            .into_iter()
+            .map(|addr| FleetServer {
+                addr,
+                health: Arc::new(HealthMonitor::new(health.clone())),
+            })
+            .collect();
+        Ok(FleetPlacer { seed, servers })
+    }
+
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+
+    pub fn servers(&self) -> &[FleetServer] {
+        &self.servers
+    }
+
+    /// The rendezvous score of `key` on `addr` under this placer's seed.
+    fn score(&self, key: &str, addr: &str) -> u64 {
+        mix(fold(fold(self.seed ^ 0x4550_524e, addr.as_bytes()), key.as_bytes()))
+    }
+
+    /// Place `key`: the non-`Down` server with the highest rendezvous
+    /// score.  If every server looks down, returns the best-scoring one
+    /// anyway — the caller's connect attempt is the probe that discovers
+    /// recovery (and its failure path already serves locally).
+    pub fn pick(&self, key: &str) -> &FleetServer {
+        self.pick_where(key, |_| true)
+    }
+
+    /// Place `key` on any server except `not` — the rebalance path after
+    /// the preferred owner failed or redirected us away.  `None` only
+    /// for a single-server fleet.
+    pub fn pick_excluding(&self, key: &str, not: &str) -> Option<&FleetServer> {
+        if self.servers.len() < 2 {
+            return None;
+        }
+        Some(self.pick_where(key, |s| s.addr != not))
+    }
+
+    fn pick_where(&self, key: &str, keep: impl Fn(&FleetServer) -> bool) -> &FleetServer {
+        let best = |pool: &mut dyn Iterator<Item = &FleetServer>| {
+            pool.max_by_key(|s| self.score(key, &s.addr))
+        };
+        let mut live = self
+            .servers
+            .iter()
+            .filter(|s| keep(s) && s.health.state() != LinkState::Down);
+        if let Some(s) = best(&mut live) {
+            return s;
+        }
+        let mut any = self.servers.iter().filter(|s| keep(s));
+        best(&mut any).expect("pick_where called with an empty candidate set")
+    }
+
+    /// The health monitor for `addr` (None if not a fleet member).
+    pub fn health(&self, addr: &str) -> Option<&Arc<HealthMonitor>> {
+        self.servers.iter().find(|s| s.addr == addr).map(|s| &s.health)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.servers
+                .iter()
+                .map(|s| {
+                    Json::from_pairs(vec![
+                        ("addr", Json::from(s.addr.as_str())),
+                        ("health", s.health.to_json()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Push a session image to a fleet peer and return the `(session_id,
+/// token)` the peer minted for it.  Dials the target as an ordinary v3
+/// client with the reserved [`PEER_MODEL`] hello; any rejection —
+/// old peer, no `CAP_MIGRATE`, draining target — comes back as an error
+/// and the caller keeps the session (migration is strictly
+/// all-or-nothing: the local slot is only released after the peer has
+/// acknowledged the import).
+pub fn push_session(target: &str, img: &SessionImage, timeout: Duration) -> Result<(u64, u64)> {
+    let hello = Handshake::v3(PEER_MODEL, img.pp, "fleet-export", CAP_MIGRATE);
+    let (mut stream, reply, _codec) = protocol::connect_client(target, &hello, Some(timeout))
+        .with_context(|| format!("dialing fleet peer {target}"))?;
+    if !reply.accepted {
+        bail!("fleet peer {target} rejected the peer hello: {}", reply.message);
+    }
+    if !reply.migrate {
+        // Shouldn't happen (a server that accepts PEER_MODEL grants the
+        // bit), but never strand a session on a peer that won't honor it.
+        let _ = protocol::write_frame(&mut stream, 2, ReqKind::Bye, &[]);
+        bail!("fleet peer {target} accepted but did not grant CAP_MIGRATE");
+    }
+    let payload = protocol::encode_session_image(img)?;
+    protocol::write_frame(&mut stream, 1, ReqKind::Import, &payload)
+        .with_context(|| format!("sending session image to {target}"))?;
+    let resp = protocol::read_response(&mut stream)
+        .with_context(|| format!("awaiting import ack from {target}"))?
+        .ok_or_else(|| anyhow::anyhow!("fleet peer {target} closed before acking the import"))?;
+    if resp.status != RespStatus::Ok {
+        bail!(
+            "fleet peer {target} refused the import: {}",
+            String::from_utf8_lossy(&resp.body)
+        );
+    }
+    if resp.body.len() != 16 {
+        bail!("fleet peer {target} import ack has {} bytes, want 16", resp.body.len());
+    }
+    let id = u64::from_le_bytes(resp.body[..8].try_into().unwrap());
+    let token = u64::from_le_bytes(resp.body[8..16].try_into().unwrap());
+    let _ = protocol::write_frame(&mut stream, 2, ReqKind::Bye, &[]);
+    Ok((id, token))
+}
+
+// ---------------------------------------------------------------------
+// Drain signal latch
+// ---------------------------------------------------------------------
+
+const SIGTERM: i32 = 15;
+
+static DRAIN_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_drain_signal(_sig: i32) {
+    // Async-signal-safe by construction: one atomic store, nothing else.
+    DRAIN_SIGNAL.store(true, Ordering::SeqCst);
+}
+
+extern "C" {
+    // Declared directly instead of pulling in a libc crate: `signal` and
+    // `raise` are ISO C, present in every libc this builds against.
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    fn raise(signum: i32) -> i32;
+}
+
+/// Install the SIGTERM → drain latch.  Call once from `serve` startup;
+/// afterwards a SIGTERM no longer kills the process — it flips the flag
+/// polled by [`drain_requested`] and the serve loop drains in order.
+pub fn install_drain_signal() {
+    unsafe {
+        signal(SIGTERM, on_drain_signal);
+    }
+}
+
+/// Has a SIGTERM arrived since [`install_drain_signal`]?
+pub fn drain_requested() -> bool {
+    DRAIN_SIGNAL.load(Ordering::SeqCst)
+}
+
+/// Reset the latch (tests drain the same process repeatedly).
+pub fn clear_drain_request() {
+    DRAIN_SIGNAL.store(false, Ordering::SeqCst);
+}
+
+/// Deliver SIGTERM to this process — the in-process way for a test to
+/// exercise the signal-driven drain path end to end.
+pub fn raise_drain_signal() {
+    install_drain_signal(); // never let a bare raise terminate a test run
+    unsafe {
+        raise(SIGTERM);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_rejects_garbage() {
+        let m = parse_manifest("a:1, b:2 ,c:3").unwrap();
+        assert_eq!(m, vec!["a:1", "b:2", "c:3"]);
+        assert!(parse_manifest("").is_err());
+        assert!(parse_manifest("a:1,,b:2").is_err());
+        assert!(parse_manifest("a:1,noport").is_err());
+        assert!(parse_manifest("a:1,a:1").is_err());
+    }
+
+    fn placer(seed: u64) -> FleetPlacer {
+        FleetPlacer::new(
+            vec!["s0:1".into(), "s1:1".into(), "s2:1".into()],
+            seed,
+            HealthConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_spreads() {
+        let p = placer(42);
+        let q = placer(42);
+        let mut hits = [0usize; 3];
+        for i in 0..300 {
+            let key = format!("session-{i}");
+            let a = p.pick(&key).addr.clone();
+            assert_eq!(a, q.pick(&key).addr, "same seed, same placement");
+            let idx = p.servers().iter().position(|s| s.addr == a).unwrap();
+            hits[idx] += 1;
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert!(*h > 30, "server {i} got {h}/300 sessions — not spreading");
+        }
+    }
+
+    #[test]
+    fn different_seeds_shuffle_the_mapping() {
+        let p = placer(1);
+        let q = placer(2);
+        let moved = (0..100)
+            .filter(|i| {
+                let key = format!("k{i}");
+                p.pick(&key).addr != q.pick(&key).addr
+            })
+            .count();
+        assert!(moved > 10, "only {moved}/100 keys moved across seeds");
+    }
+
+    #[test]
+    fn down_servers_are_skipped_until_recovery() {
+        let p = placer(7);
+        // Find a key owned by s1, then mark s1 down.
+        let key = (0..1000)
+            .map(|i| format!("k{i}"))
+            .find(|k| p.pick(k).addr == "s1:1")
+            .expect("some key lands on s1");
+        let h = p.health("s1:1").unwrap().clone();
+        for _ in 0..3 {
+            h.note_failure();
+        }
+        assert_eq!(h.state(), LinkState::Down);
+        let failover = p.pick(&key).addr.clone();
+        assert_ne!(failover, "s1:1", "down server still picked");
+        // Unaffected keys keep their owner (rendezvous minimal movement).
+        let stable = (0..200)
+            .map(|i| format!("k{i}"))
+            .filter(|k| {
+                let owner = placer(7).pick(k).addr.clone();
+                owner != "s1:1" && p.pick(k).addr == owner
+            })
+            .count();
+        assert!(stable > 0);
+        h.note_recovered();
+        assert_eq!(p.pick(&key).addr, "s1:1", "recovered server not reinstated");
+    }
+
+    #[test]
+    fn all_down_still_returns_a_candidate() {
+        let p = placer(3);
+        for s in p.servers() {
+            for _ in 0..3 {
+                s.health.note_failure();
+            }
+        }
+        // Still deterministic, still a member.
+        let a = p.pick("k").addr.clone();
+        assert!(p.servers().iter().any(|s| s.addr == a));
+    }
+
+    #[test]
+    fn pick_excluding_rehomes_to_another_member() {
+        let p = placer(9);
+        let owner = p.pick("victim").addr.clone();
+        let alt = p.pick_excluding("victim", &owner).unwrap().addr.clone();
+        assert_ne!(alt, owner);
+        let single =
+            FleetPlacer::new(vec!["only:1".into()], 0, HealthConfig::default()).unwrap();
+        assert!(single.pick_excluding("victim", "only:1").is_none());
+    }
+
+    #[test]
+    fn sigterm_latches_the_drain_flag() {
+        clear_drain_request();
+        install_drain_signal();
+        assert!(!drain_requested());
+        raise_drain_signal();
+        assert!(drain_requested());
+        clear_drain_request();
+        assert!(!drain_requested());
+    }
+}

@@ -24,11 +24,13 @@
 //! even though the affected frames complete via the local fallback.
 
 use super::failover::{availability_ratio, FailoverClient, FailoverConfig};
+use super::fleet::FleetPlacer;
 use super::model::{make_input_into, FrameScratch, MODEL_NAME, TOKEN_BYTES, TOKEN_FLOATS};
 use super::protocol::{
     connect_client, encode_trace_prefix, read_response, write_frame, write_request, Handshake,
     ReqKind, RespStatus, TRACE_PREFIX,
 };
+use crate::runtime::health::HealthConfig;
 use crate::runtime::metrics::{LatencyHistogram, WireCounters};
 use crate::runtime::netsim::{LinkModel, LinkShaper};
 use crate::runtime::trace::{self, Stage};
@@ -68,13 +70,23 @@ pub struct LoadgenConfig {
     pub trace: bool,
     /// Trace one in N requests per client (0/1 = every request).
     pub trace_sample: u64,
+    /// Fleet manifest (`--fleet host:port,...`): when non-empty, each
+    /// client places its session by rendezvous hashing over these
+    /// servers instead of dialing `addr`, rehomes to another member when
+    /// its server dies, and follows MIGRATE redirects from draining
+    /// servers.  Implies the resilient client.
+    pub fleet: Vec<String>,
+    /// Pause between requests per client (`--think-ms`): deterministic
+    /// wave pacing without a link profile, so chaos orchestration (kill
+    /// a server, drain another) reliably lands mid-wave.  0 = none.
+    pub think_ms: u64,
 }
 
 impl LoadgenConfig {
-    /// Chaos implies the resilient client — the single source of that
-    /// rule (the `resilient` field alone may read false under chaos).
+    /// Chaos and fleet mode imply the resilient client — the single
+    /// source of that rule (the `resilient` field alone may read false).
     pub fn is_resilient(&self) -> bool {
-        self.resilient || self.chaos_kill_every > 0
+        self.resilient || self.chaos_kill_every > 0 || !self.fleet.is_empty()
     }
 }
 
@@ -93,6 +105,8 @@ impl Default for LoadgenConfig {
             wire: WireDtype::F32,
             trace: false,
             trace_sample: 1,
+            fleet: Vec::new(),
+            think_ms: 0,
         }
     }
 }
@@ -108,6 +122,11 @@ struct Tally {
     reconnects: u64,
     resumed: u64,
     replays: u64,
+    /// MIGRATE redirects this client followed (fleet mode).
+    migrations: u64,
+    /// Times this client rehomed to another fleet member after losing
+    /// its placed server.
+    rebalances: u64,
     /// Requests sent as traced-infer frames (span context on the wire).
     traced: u64,
     /// Data-plane bytes this client moved (and their f32 equivalents).
@@ -135,6 +154,10 @@ pub struct LoadReport {
     pub reconnects: u64,
     pub sessions_resumed: u64,
     pub replays_received: u64,
+    /// MIGRATE redirects followed across all clients (fleet mode).
+    pub migrations_followed: u64,
+    /// Client rehomes onto another fleet member after a server loss.
+    pub placement_rebalances: u64,
     /// Requests sent as traced-infer frames across all clients.
     pub traced: u64,
     pub wall: Duration,
@@ -185,6 +208,8 @@ impl LoadReport {
             ("reconnects", Json::from(self.reconnects)),
             ("sessions_resumed", Json::from(self.sessions_resumed)),
             ("replays_received", Json::from(self.replays_received)),
+            ("migrations_followed", Json::from(self.migrations_followed)),
+            ("placement_rebalances", Json::from(self.placement_rebalances)),
             ("service_availability", Json::from(self.service_availability())),
             ("link_availability", Json::from(self.link_availability())),
             ("traced", Json::from(self.traced)),
@@ -239,6 +264,12 @@ impl LoadReport {
                 "; sparsity {:.0}% ({:.1} KB saved vs dense i8)",
                 self.wire.achieved_sparsity() * 100.0,
                 self.wire.sparse_saved.load(Ordering::Relaxed) as f64 / 1024.0
+            ));
+        }
+        if self.migrations_followed > 0 || self.placement_rebalances > 0 {
+            line.push_str(&format!(
+                "; {} migrations followed, {} rebalances",
+                self.migrations_followed, self.placement_rebalances
             ));
         }
         if self.traced > 0 {
@@ -351,6 +382,9 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
             }
             Ok(None) | Err(_) => break, // this request is lost
         }
+        if cfg.think_ms > 0 {
+            std::thread::sleep(Duration::from_millis(cfg.think_ms));
+        }
     }
     // Clean close: BYE frees the server-side slot immediately (an abrupt
     // drop would detach-and-linger awaiting a RECONNECT it never sends).
@@ -361,17 +395,26 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
 /// Resilient client: `FailoverClient` with optional induced link kills.
 /// Every request completes (remote or local), so `lost()` stays zero
 /// even while the chaos mode is tearing connections down mid-run.
+/// With a fleet placer, the session is placed by rendezvous hashing on
+/// the client id and rehomed onto a surviving member when its server
+/// becomes unreachable (a request that had to fall back locally).
 fn resilient_client_main(
     cfg: &LoadgenConfig,
     index: usize,
     latency: &LatencyHistogram,
+    placer: Option<&FleetPlacer>,
 ) -> Result<Tally> {
     let mut tally = Tally::default();
+    let client_id = format!("loadgen-{index}");
+    let addr = match placer {
+        Some(p) => p.pick(&client_id).addr.clone(),
+        None => cfg.addr.clone(),
+    };
     let mut fc = FailoverClient::new(FailoverConfig {
-        addr: cfg.addr.clone(),
+        addr,
         model: cfg.model.clone(),
         pp: cfg.pp,
-        client_id: format!("loadgen-{index}"),
+        client_id: client_id.clone(),
         wire: cfg.wire,
         ..FailoverConfig::default()
     });
@@ -394,8 +437,10 @@ fn resilient_client_main(
         }
         let t0 = Instant::now();
         tally.sent += 1;
+        let mut went_local = false;
         match fc.infer(&input) {
             Ok((body, served)) => {
+                went_local = served.is_local();
                 // Clock stops at response receipt: the ground-truth
                 // recomputation below is verification overhead, not
                 // serving latency.
@@ -426,6 +471,33 @@ fn resilient_client_main(
             }
             Err(_) => tally.errors += 1,
         }
+        // Fleet placement maintenance.  A request that fell back to the
+        // local plan means the placed server was unreachable through
+        // every remote attempt — feed its health monitor and rehome to
+        // the rendezvous runner-up, resetting the client's own link
+        // state so the new member is dialed immediately instead of
+        // after the down-state probe cadence.  (A transient link kill
+        // never lands here: the in-place RECONNECT absorbs it, which is
+        // what keeps session state — and exactly-once — on the server
+        // that owns it.)
+        if let Some(p) = placer {
+            if went_local {
+                if let Some(h) = p.health(fc.addr()) {
+                    h.note_failure();
+                }
+                if let Some(next) = p.pick_excluding(&client_id, fc.addr()) {
+                    let next_addr = next.addr.clone();
+                    fc.set_addr(&next_addr);
+                    fc.monitor().note_recovered();
+                    tally.rebalances += 1;
+                }
+            } else if let Some(h) = p.health(fc.addr()) {
+                h.note_recovered();
+            }
+        }
+        if cfg.think_ms > 0 {
+            std::thread::sleep(Duration::from_millis(cfg.think_ms));
+        }
     }
     fc.finish();
     let stats = fc.stats();
@@ -441,6 +513,7 @@ fn resilient_client_main(
     tally.reconnects = stats.reconnects;
     tally.resumed = stats.sessions_resumed;
     tally.replays = stats.replays_received;
+    tally.migrations = stats.migrations_followed;
     Ok(tally)
 }
 
@@ -459,17 +532,26 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
     }
     let latency = Arc::new(LatencyHistogram::new());
     let resilient = cfg.is_resilient();
+    // One placer shared by every client thread: its per-server health
+    // monitors are the fleet view — a member one client found dead is
+    // skipped by everyone's next placement.
+    let placer = if !cfg.fleet.is_empty() {
+        Some(Arc::new(FleetPlacer::new(cfg.fleet.clone(), cfg.seed, HealthConfig::default())))
+    } else {
+        None
+    };
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(cfg.clients);
     for index in 0..cfg.clients {
         let cfg = cfg.clone();
         let latency = latency.clone();
+        let placer = placer.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("loadgen-{index}"))
                 .spawn(move || {
                     if resilient {
-                        resilient_client_main(&cfg, index, &latency)
+                        resilient_client_main(&cfg, index, &latency, placer.as_deref())
                     } else {
                         client_main(&cfg, index, &latency)
                     }
@@ -488,6 +570,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         reconnects: 0,
         sessions_resumed: 0,
         replays_received: 0,
+        migrations_followed: 0,
+        placement_rebalances: 0,
         traced: 0,
         wall: Duration::ZERO,
         latency,
@@ -510,6 +594,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 report.reconnects += tally.reconnects;
                 report.sessions_resumed += tally.resumed;
                 report.replays_received += tally.replays;
+                report.migrations_followed += tally.migrations;
+                report.placement_rebalances += tally.rebalances;
                 report.traced += tally.traced;
                 report.wire.note_tx(tally.bytes_tx, tally.f32_equiv_tx);
                 report.wire.note_rx(tally.bytes_rx, tally.f32_equiv_rx);
@@ -527,6 +613,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
                     ("errors", Json::from(tally.errors)),
                     ("traced", Json::from(tally.traced)),
                     ("replays", Json::from(tally.replays)),
+                    ("migrations", Json::from(tally.migrations)),
                     ("bytes_tx", Json::from(tally.bytes_tx)),
                     ("bytes_rx", Json::from(tally.bytes_rx)),
                 ]));
@@ -704,6 +791,8 @@ mod tests {
             reconnects: 1,
             sessions_resumed: 1,
             replays_received: 0,
+            migrations_followed: 0,
+            placement_rebalances: 0,
             traced: 0,
             wall: Duration::from_millis(100),
             latency: Arc::new(LatencyHistogram::new()),

@@ -58,6 +58,16 @@ pub struct ServingMetrics {
     /// Backpressure: times the reactor paused a connection's reads
     /// because its write buffer crossed the high-water mark.
     pub read_pauses: AtomicU64,
+    // Fleet control plane (migration + drain).
+    /// Sessions installed from a fleet peer's EXPORT (the import side).
+    pub sessions_migrated_in: AtomicU64,
+    /// Sessions handed off to a fleet peer (the export side).
+    pub sessions_migrated_out: AtomicU64,
+    /// Wall time spent in drain mode, accumulated in milliseconds.
+    pub drain_duration_ms: AtomicU64,
+    /// Imported sessions claimed by their client's RECONNECT — each one
+    /// is a fleet placement that actually moved.
+    pub placement_rebalances: AtomicU64,
     /// Data-plane link bytes and the f32-equivalent totals behind the
     /// wire-compression-ratio gauge.  Counts every post-handshake frame
     /// (infer, ping, switch, bye + all responses); client-side reports
@@ -150,6 +160,10 @@ impl ServingMetrics {
             (&self.plan_switches, &other.plan_switches),
             (&self.pings, &other.pings),
             (&self.read_pauses, &other.read_pauses),
+            (&self.sessions_migrated_in, &other.sessions_migrated_in),
+            (&self.sessions_migrated_out, &other.sessions_migrated_out),
+            (&self.drain_duration_ms, &other.drain_duration_ms),
+            (&self.placement_rebalances, &other.placement_rebalances),
         ];
         for (dst, src) in pairs {
             dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
@@ -223,6 +237,19 @@ impl ServingMetrics {
             ("plan_switches", Json::from(self.plan_switches.load(Ordering::Relaxed))),
             ("pings", Json::from(self.pings.load(Ordering::Relaxed))),
             ("read_pauses", Json::from(self.read_pauses.load(Ordering::Relaxed))),
+            (
+                "sessions_migrated_in",
+                Json::from(self.sessions_migrated_in.load(Ordering::Relaxed)),
+            ),
+            (
+                "sessions_migrated_out",
+                Json::from(self.sessions_migrated_out.load(Ordering::Relaxed)),
+            ),
+            ("drain_duration_ms", Json::from(self.drain_duration_ms.load(Ordering::Relaxed))),
+            (
+                "placement_rebalances",
+                Json::from(self.placement_rebalances.load(Ordering::Relaxed)),
+            ),
             ("wire", self.wire.to_json()),
             ("queue_high_water", Json::from(self.queue_high_water.load(Ordering::Relaxed))),
             ("batch_occupancy", Json::from(self.batch_occupancy())),
@@ -332,6 +359,24 @@ mod tests {
         for q in [0.5, 0.95, 0.99] {
             assert_eq!(mp.latency.quantile_ms(q), sp.latency.quantile_ms(q));
         }
+    }
+
+    #[test]
+    fn fleet_counters_merge_and_scrape() {
+        let a = ServingMetrics::new();
+        let b = ServingMetrics::new();
+        a.sessions_migrated_out.fetch_add(3, Ordering::Relaxed);
+        a.drain_duration_ms.fetch_add(120, Ordering::Relaxed);
+        b.sessions_migrated_in.fetch_add(2, Ordering::Relaxed);
+        b.placement_rebalances.fetch_add(2, Ordering::Relaxed);
+        let merged = ServingMetrics::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        let j = merged.to_json();
+        assert_eq!(j.get("sessions_migrated_out").unwrap().int().unwrap(), 3);
+        assert_eq!(j.get("sessions_migrated_in").unwrap().int().unwrap(), 2);
+        assert_eq!(j.get("drain_duration_ms").unwrap().int().unwrap(), 120);
+        assert_eq!(j.get("placement_rebalances").unwrap().int().unwrap(), 2);
     }
 
     #[test]

@@ -64,6 +64,7 @@
 pub mod batch;
 pub mod conn;
 pub mod failover;
+pub mod fleet;
 pub mod loadgen;
 pub mod metrics;
 pub mod model;
@@ -76,7 +77,7 @@ use crate::compiler::PlanCache;
 use crate::platform::affinity;
 use crate::runtime::reactor::WakeHandle;
 use crate::runtime::trace;
-use crate::runtime::wire::{Precision, CAP_F16, CAP_I8, CAP_SPARSE_I8};
+use crate::runtime::wire::{Precision, CAP_F16, CAP_I8, CAP_MIGRATE, CAP_SPARSE_I8};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use batch::BatchQueue;
@@ -137,9 +138,11 @@ pub struct ServerConfig {
     /// server).
     pub write_high_water: usize,
     /// Wire-codec capabilities this server offers v3 clients
-    /// (`runtime::wire::{CAP_SPARSE_I8, CAP_I8, CAP_F16}`); 0 forces
-    /// every session to raw f32 (the `--no-wire-codec` downgrade knob,
-    /// and the stand-in for a pre-v3 server in interop tests).
+    /// (`runtime::wire::{CAP_SPARSE_I8, CAP_I8, CAP_F16}`), plus the
+    /// orthogonal `CAP_MIGRATE` fleet-migration grant; 0 forces every
+    /// session to raw f32 with no migration (the `--no-wire-codec`
+    /// downgrade knob, and the stand-in for a pre-v3 server in interop
+    /// tests).
     pub wire_caps: u8,
     /// Compute precision of the engine shards (`--precision`).  The
     /// handshake reply tells v3 clients, so both sides run the stage
@@ -176,7 +179,7 @@ impl Default for ServerConfig {
             detach_linger: Duration::from_secs(30),
             replay_ring: 64,
             write_high_water: 1 << 20,
-            wire_caps: CAP_SPARSE_I8 | CAP_I8 | CAP_F16,
+            wire_caps: CAP_SPARSE_I8 | CAP_I8 | CAP_F16 | CAP_MIGRATE,
             precision: Precision::F32,
             trace: false,
             trace_sample: 1,
@@ -193,6 +196,10 @@ impl Default for ServerConfig {
 pub(crate) struct ServerState {
     pub(crate) sessions: SessionManager,
     pub(crate) shutting_down: AtomicBool,
+    /// Drain mode: fresh handshakes (and fleet imports) are refused;
+    /// RECONNECTs still land so retained replies flush and redirected
+    /// clients can claim their state before the handoff.
+    pub(crate) draining: AtomicBool,
     pub(crate) idle_timeout: Duration,
     pub(crate) detach_linger: Duration,
     pub(crate) replay_ring: usize,
@@ -260,6 +267,10 @@ pub struct Server {
 /// SO_RCVTIMEO).  Also bounds how long a reject reply may drain.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// How long a drain waits for queued + in-flight work to quiesce before
+/// exporting sessions (stragglers stay local and ride plain reconnect).
+const DRAIN_FLUSH_TIMEOUT: Duration = Duration::from_secs(5);
+
 impl Server {
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         if cfg.trace {
@@ -315,6 +326,7 @@ impl Server {
         let state = Arc::new(ServerState {
             sessions: SessionManager::new(cfg.max_sessions),
             shutting_down: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
             idle_timeout: cfg.session_idle_timeout,
             detach_linger: cfg.detach_linger,
             replay_ring: cfg.replay_ring,
@@ -487,6 +499,114 @@ impl Server {
             map.insert("sessions".into(), self.state.sessions.to_json());
         }
         j
+    }
+
+    /// Is the server refusing fresh sessions (drain mode)?
+    pub fn is_draining(&self) -> bool {
+        self.state.draining.load(Ordering::SeqCst)
+    }
+
+    /// Re-open admissions after a [`Server::drain_to`] — the rolling-
+    /// drain bench ping-pongs sessions between two servers, so a
+    /// drained server must be able to rejoin the fleet.
+    pub fn resume_admissions(&self) {
+        self.state.draining.store(false, Ordering::SeqCst);
+    }
+
+    /// Zero-loss rolling drain: stop admitting fresh sessions, flush
+    /// in-flight work, then hand every migrate-capable session to
+    /// `target` — push its image, send the attached client a MIGRATE
+    /// hint (peer-minted credentials ride it), and release the local
+    /// slot.  Sessions whose attachment never negotiated `CAP_MIGRATE`
+    /// (or whose export fails) stay put and downgrade to plain
+    /// reconnect when the server finally exits.  With `target: None`
+    /// the drain only quiesces (signal-driven exit without a fleet).
+    ///
+    /// The server keeps running afterwards — callers typically
+    /// `shutdown()` next, or `resume_admissions()` to rejoin the fleet.
+    /// Returns the post-drain metrics snapshot.
+    pub fn drain_to(&self, target: Option<&str>) -> Json {
+        let t0 = std::time::Instant::now();
+        self.state.draining.store(true, Ordering::SeqCst);
+        // Flush: every admitted sequence must reach its terminal
+        // response before a session may be exported (the outbox refuses
+        // mid-flight exports).  Bounded poll — a wedged worker must not
+        // hang the drain forever.
+        let deadline = std::time::Instant::now() + DRAIN_FLUSH_TIMEOUT;
+        while (self.queue_depth() > 0 || self.state.sessions.total_in_flight() > 0)
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut exported = 0u64;
+        let mut retire: Vec<(usize, u64)> = Vec::new();
+        if let Some(target) = target {
+            for (id, outbox, migrate, attached) in self.state.sessions.drain_rows() {
+                if !migrate {
+                    continue;
+                }
+                let image = match self.state.sessions.export_session(id, self.state.precision) {
+                    Ok(img) => img,
+                    // Still in flight past the deadline (or raced a
+                    // close): leave it for plain reconnect.
+                    Err(_) => continue,
+                };
+                match fleet::push_session(target, &image, fleet::EXPORT_TIMEOUT) {
+                    Ok((new_id, new_token)) => {
+                        // Unsolicited hint (req_id 0): migrate-capable
+                        // clients redirect; anything older skips it as a
+                        // stale replay and falls back to reconnect.
+                        let hint = protocol::MigrateHint {
+                            addr: target.to_string(),
+                            session_id: new_id,
+                            token: new_token,
+                        };
+                        if let Ok(body) = protocol::migrate_hint_payload(&hint) {
+                            outbox.send_ephemeral(protocol::Response::ok(
+                                protocol::MIGRATE_REQ_ID,
+                                body,
+                            ));
+                        }
+                        self.state.sessions.close(id);
+                        if let Some(at) = attached {
+                            retire.push(at);
+                        }
+                        exported += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("[serve] drain: session {id} stays (push to {target}: {e:#})");
+                    }
+                }
+            }
+        }
+        // Retire the stale attachments so their clients see a prompt EOF
+        // instead of a read-timeout on a zombie session.  The hints ride
+        // the completion channel and the retires ride the shard mailbox;
+        // a reactor caught between routing the two could process a
+        // retire first and drop its hint unflushed, so let the hint
+        // completions settle before posting the closes (each reactor
+        // routes a woken completion within microseconds — one bounded
+        // pause covers every exported session).
+        if !retire.is_empty() {
+            std::thread::sleep(Duration::from_millis(10));
+            for (shard, conn) in retire {
+                if let Some(mb) = self.state.shard_mailbox(shard) {
+                    mb.push(ShardMsg::Retire { conn });
+                }
+            }
+        }
+        if let Some(sh) = self.shards.first() {
+            sh.state.metrics.sessions_migrated_out.fetch_add(exported, Ordering::Relaxed);
+            sh.state
+                .metrics
+                .drain_duration_ms
+                .fetch_add(t0.elapsed().as_millis() as u64, Ordering::Relaxed);
+        }
+        eprintln!(
+            "[serve] drain complete: {exported} sessions handed off in {:.0} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        self.metrics_json()
     }
 
     /// Orderly shutdown; returns the final merged metrics snapshot.

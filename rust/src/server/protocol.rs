@@ -37,6 +37,13 @@
 //!             followed by the activation bytes (flight-recorder span
 //!             context, `runtime::trace`; only sent on sessions whose
 //!             handshake negotiated `CAP_TRACE`)
+//!         5 = export: ask the server to hand THIS session off to the
+//!             fleet peer named by the payload ([u16 len][addr]); only
+//!             honored on sessions that negotiated `CAP_MIGRATE`
+//!         6 = import: server-to-server on a fleet-peer connection
+//!             (handshake model [`PEER_MODEL`]); payload is a serialized
+//!             session image ([`encode_session_image`]) — the receiver
+//!             installs it and answers ok with [u64 id][u64 token]
 //!   infer payloads are wire-coded activations (`runtime::wire`) at the
 //!   session's negotiated dtype; v2 sessions always carry raw f32.
 //! response   (server -> client):
@@ -92,6 +99,26 @@ pub const TRACE_PREFIX: usize = 12;
 /// client's `CAP_TRACE` and will honor traced-infer frames.  The dtype
 /// itself only ever uses the low bits.
 const REPLY_TRACE_BIT: u8 = 0x80;
+/// Second spare bit of the v3 reply's wire-dtype byte: the server
+/// accepted the client's `CAP_MIGRATE` and may send a MIGRATE redirect
+/// hint (an ephemeral response with `req_id` [`MIGRATE_REQ_ID`]) on
+/// this session.  Masked off before the dtype byte is interpreted, so
+/// old clients that never set the capability never see it.
+const REPLY_MIGRATE_BIT: u8 = 0x40;
+/// `req_id` of a MIGRATE redirect hint.  Real sequence numbers start at
+/// 1, and a pre-migrate client's replay dedupe (`req_id < awaited seq`)
+/// silently skips id 0 — exactly the downgrade-to-plain-reconnect
+/// behavior the capability bit promises.
+pub const MIGRATE_REQ_ID: u64 = 0;
+/// Handshake model name reserved for server-to-server fleet-peer
+/// connections (session EXPORT/IMPORT).  Not a compilable model, so a
+/// pre-fleet server rejects the handshake at plan compile — the
+/// exporting side treats that as "peer cannot import" and skips the
+/// migration.
+pub const PEER_MODEL: &str = "__fleet-peer__";
+/// Sanity bound on the number of retained responses a session image may
+/// carry (the replay ring is configured far below this).
+const MAX_RING_ENTRIES: u32 = 1 << 16;
 
 /// RECONNECT parameters: which session to re-attach (authenticated by
 /// the token its accept reply issued), and the highest sequence number
@@ -163,6 +190,10 @@ pub struct HandshakeReply {
     /// (span context ahead of the payload) are honored on this session.
     /// Always `false` on v2 (the reply has no byte to carry it).
     pub trace: bool,
+    /// Server accepted the client's `CAP_MIGRATE`: the session may be
+    /// exported to a fleet peer and the client may receive a MIGRATE
+    /// redirect hint.  Always `false` on v2.
+    pub migrate: bool,
     pub message: String,
 }
 
@@ -189,6 +220,17 @@ pub enum ReqKind {
     /// payload is `[u64 trace_id][u32 parent_span]` + the token.  Only
     /// valid on sessions that negotiated `CAP_TRACE`.
     TracedInfer,
+    /// Hand this session off to the fleet peer named by the payload
+    /// (`[u16 len][addr]`, see [`export_payload`]).  Only honored on
+    /// sessions that negotiated `CAP_MIGRATE`; the server pushes the
+    /// session image to the target, answers with a MIGRATE hint, and
+    /// releases the local slot.
+    Export,
+    /// Server-to-server session transfer on a fleet-peer connection:
+    /// payload is a serialized session image ([`encode_session_image`]).
+    /// The receiver installs it through its `SessionManager` and
+    /// answers `ok` with `[u64 new_session_id][u64 new_token]`.
+    Import,
 }
 
 impl ReqKind {
@@ -199,6 +241,8 @@ impl ReqKind {
             ReqKind::Ping => 2,
             ReqKind::Bye => 3,
             ReqKind::TracedInfer => 4,
+            ReqKind::Export => 5,
+            ReqKind::Import => 6,
         }
     }
 
@@ -209,6 +253,8 @@ impl ReqKind {
             2 => Ok(ReqKind::Ping),
             3 => Ok(ReqKind::Bye),
             4 => Ok(ReqKind::TracedInfer),
+            5 => Ok(ReqKind::Export),
+            6 => Ok(ReqKind::Import),
             v => bail!("bad frame kind byte {v}"),
         }
     }
@@ -414,10 +460,11 @@ pub fn encode_handshake_reply(r: &HandshakeReply) -> Vec<u8> {
     buf.extend_from_slice(&r.session_id.to_le_bytes());
     buf.extend_from_slice(&r.token.to_le_bytes());
     if let Some(codec) = &r.codec {
-        // Trace acceptance rides the spare high bit of the dtype byte,
-        // so the v3 reply layout is unchanged in length.
+        // Trace and migrate acceptance ride the spare high bits of the
+        // dtype byte, so the v3 reply layout is unchanged in length.
         let trace_bit = if r.trace { REPLY_TRACE_BIT } else { 0 };
-        buf.push(codec.wire.to_u8() | trace_bit);
+        let migrate_bit = if r.migrate { REPLY_MIGRATE_BIT } else { 0 };
+        buf.push(codec.wire.to_u8() | trace_bit | migrate_bit);
         buf.push(codec.precision.to_u8());
     }
     buf.extend_from_slice(&(message.len() as u16).to_le_bytes());
@@ -442,19 +489,19 @@ pub fn read_handshake_reply_v(stream: &mut TcpStream, version: u16) -> Result<Ha
     };
     let session_id = u64::from_le_bytes(fixed[1..9].try_into().unwrap());
     let token = u64::from_le_bytes(fixed[9..17].try_into().unwrap());
-    let (codec, trace) = if version >= VERSION {
+    let (codec, trace, migrate) = if version >= VERSION {
         let mut c = [0u8; 2];
         stream.read_exact(&mut c).context("handshake reply codec")?;
         let codec = SessionCodec {
-            wire: WireDtype::from_u8(c[0] & !REPLY_TRACE_BIT)?,
+            wire: WireDtype::from_u8(c[0] & !(REPLY_TRACE_BIT | REPLY_MIGRATE_BIT))?,
             precision: Precision::from_u8(c[1])?,
         };
-        (Some(codec), c[0] & REPLY_TRACE_BIT != 0)
+        (Some(codec), c[0] & REPLY_TRACE_BIT != 0, c[0] & REPLY_MIGRATE_BIT != 0)
     } else {
-        (None, false)
+        (None, false, false)
     };
     let message = read_str(stream)?;
-    Ok(HandshakeReply { accepted, resumed, session_id, token, codec, trace, message })
+    Ok(HandshakeReply { accepted, resumed, session_id, token, codec, trace, migrate, message })
 }
 
 /// Read a legacy v2 reply (no codec bytes).
@@ -553,6 +600,196 @@ pub fn parse_switch_payload(payload: &[u8]) -> Result<usize> {
         bail!("switch payload must be 2 bytes, got {}", payload.len());
     }
     Ok(u16::from_le_bytes(payload.try_into().unwrap()) as usize)
+}
+
+// ---------------------------------------------------------------------
+// Fleet migration payloads: EXPORT requests, server-to-server session
+// images (IMPORT frames), and the MIGRATE redirect hint.
+// ---------------------------------------------------------------------
+
+/// Is session migration in force between these two handshake ends?
+/// True only when both sides speak v3 *and* both advertise
+/// `CAP_MIGRATE` — every other combination (v2 peer, old v3 peer
+/// without the bit) downgrades to plain reconnect semantics.
+pub fn migrate_granted(version: u16, client_caps: u8, server_caps: u8) -> bool {
+    version >= VERSION
+        && client_caps & crate::runtime::wire::CAP_MIGRATE != 0
+        && server_caps & crate::runtime::wire::CAP_MIGRATE != 0
+}
+
+/// Payload of an `Export` frame: the fleet peer to hand this session to.
+pub fn export_payload(target: &str) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(2 + target.len());
+    write_str(&mut buf, target)?;
+    Ok(buf)
+}
+
+/// Decode an `Export` frame's payload into the target address.
+pub fn parse_export_payload(payload: &[u8]) -> Result<String> {
+    let (addr, used) = take_str(payload, 0)?;
+    if used != payload.len() {
+        bail!("export payload carries {} trailing bytes", payload.len() - used);
+    }
+    Ok(addr)
+}
+
+/// The portable image of one live session: everything the target server
+/// needs to preserve exactly-once execution across the move — identity
+/// (client id + plan), the negotiated wire dtype and compute precision,
+/// the attach epoch, the client's last acknowledged sequence, and every
+/// retained response of the replay ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionImage {
+    pub client_id: String,
+    pub model: String,
+    pub pp: usize,
+    pub wire: WireDtype,
+    pub precision: Precision,
+    pub epoch: u64,
+    pub last_ack: u64,
+    /// Retained responses in ascending sequence order.
+    pub ring: Vec<Response>,
+}
+
+/// Serialize a session image (the payload of an `Import` frame):
+/// `[u16 pp][u8 wire][u8 precision][u64 epoch][u64 last_ack]`
+/// `[u16 client_id_len][client_id][u16 model_len][model]`
+/// `[u32 ring_count]` then per entry `[u64 seq][u8 status][u32 len][body]`.
+pub fn encode_session_image(img: &SessionImage) -> Result<Vec<u8>> {
+    if img.ring.len() as u32 > MAX_RING_ENTRIES {
+        bail!("session image ring of {} entries exceeds bound", img.ring.len());
+    }
+    let mut buf = Vec::with_capacity(64 + img.ring.iter().map(|r| 13 + r.body.len()).sum::<usize>());
+    buf.extend_from_slice(&(img.pp as u16).to_le_bytes());
+    buf.push(img.wire.to_u8());
+    buf.push(img.precision.to_u8());
+    buf.extend_from_slice(&img.epoch.to_le_bytes());
+    buf.extend_from_slice(&img.last_ack.to_le_bytes());
+    write_str(&mut buf, &img.client_id)?;
+    write_str(&mut buf, &img.model)?;
+    buf.extend_from_slice(&(img.ring.len() as u32).to_le_bytes());
+    for r in &img.ring {
+        if r.body.len() as u64 > MAX_PAYLOAD as u64 {
+            bail!("ring entry body {} exceeds {MAX_PAYLOAD}", r.body.len());
+        }
+        buf.extend_from_slice(&r.req_id.to_le_bytes());
+        buf.push(r.status.to_u8());
+        buf.extend_from_slice(&(r.body.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&r.body);
+    }
+    if buf.len() as u64 > MAX_PAYLOAD as u64 {
+        bail!("session image of {} bytes exceeds {MAX_PAYLOAD}", buf.len());
+    }
+    Ok(buf)
+}
+
+/// Decode a session image.  Every length field is bounds-checked before
+/// its bytes are consumed, trailing bytes are refused, and the ring must
+/// arrive in strictly ascending sequence order — a truncated or
+/// bit-flipped image errors cleanly instead of installing a corrupt
+/// replay state.
+pub fn parse_session_image(payload: &[u8]) -> Result<SessionImage> {
+    let need = |off: usize, n: usize| -> Result<()> {
+        if payload.len() < off + n {
+            bail!("session image truncated at byte {off} (need {n} more)");
+        }
+        Ok(())
+    };
+    need(0, 20)?;
+    let pp = u16::from_le_bytes(payload[0..2].try_into().unwrap()) as usize;
+    let wire = WireDtype::from_u8(payload[2])?;
+    let precision = Precision::from_u8(payload[3])?;
+    let epoch = u64::from_le_bytes(payload[4..12].try_into().unwrap());
+    let last_ack = u64::from_le_bytes(payload[12..20].try_into().unwrap());
+    let (client_id, off) = take_str(payload, 20)?;
+    let (model, mut off) = take_str(payload, off)?;
+    need(off, 4)?;
+    let count = u32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+    if count > MAX_RING_ENTRIES {
+        bail!("session image ring of {count} entries exceeds bound");
+    }
+    off += 4;
+    let mut ring = Vec::with_capacity(count as usize);
+    let mut prev_seq = 0u64;
+    for _ in 0..count {
+        need(off, 13)?;
+        let req_id = u64::from_le_bytes(payload[off..off + 8].try_into().unwrap());
+        let status = RespStatus::from_u8(payload[off + 8])?;
+        let len = u32::from_le_bytes(payload[off + 9..off + 13].try_into().unwrap());
+        if len > MAX_PAYLOAD {
+            bail!("ring entry body {len} exceeds {MAX_PAYLOAD}");
+        }
+        if !ring.is_empty() && req_id <= prev_seq {
+            bail!("session image ring out of order at seq {req_id}");
+        }
+        prev_seq = req_id;
+        off += 13;
+        need(off, len as usize)?;
+        ring.push(Response { req_id, status, body: payload[off..off + len as usize].to_vec() });
+        off += len as usize;
+    }
+    if off != payload.len() {
+        bail!("session image carries {} trailing bytes", payload.len() - off);
+    }
+    Ok(SessionImage { client_id, model, pp, wire, precision, epoch, last_ack, ring })
+}
+
+/// A MIGRATE redirect: "your session now lives at `addr` under these
+/// fresh credentials — RECONNECT there".  Delivered as an ephemeral
+/// response with `req_id` [`MIGRATE_REQ_ID`] so pre-migrate clients
+/// skip it as a stale replay.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MigrateHint {
+    pub addr: String,
+    pub session_id: u64,
+    pub token: u64,
+}
+
+const MIGRATE_MAGIC: &[u8; 4] = b"EPMG";
+
+/// Serialize a MIGRATE hint (the body of the redirect response):
+/// `["EPMG"][u64 session_id][u64 token][u16 addr_len][addr]`.
+pub fn migrate_hint_payload(hint: &MigrateHint) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(22 + hint.addr.len());
+    buf.extend_from_slice(MIGRATE_MAGIC);
+    buf.extend_from_slice(&hint.session_id.to_le_bytes());
+    buf.extend_from_slice(&hint.token.to_le_bytes());
+    write_str(&mut buf, &hint.addr)?;
+    Ok(buf)
+}
+
+/// Decode a MIGRATE hint body; `Err` on anything that is not a
+/// well-formed hint (the client then ignores the response entirely).
+pub fn parse_migrate_hint(payload: &[u8]) -> Result<MigrateHint> {
+    if payload.len() < 20 || &payload[..4] != MIGRATE_MAGIC {
+        bail!("not a migrate hint");
+    }
+    let session_id = u64::from_le_bytes(payload[4..12].try_into().unwrap());
+    let token = u64::from_le_bytes(payload[12..20].try_into().unwrap());
+    let (addr, used) = take_str(payload, 20)?;
+    if used != payload.len() {
+        bail!("migrate hint carries {} trailing bytes", payload.len() - used);
+    }
+    Ok(MigrateHint { addr, session_id, token })
+}
+
+/// Read one bounded length-prefixed string out of `payload` at `off`;
+/// returns the string and the offset just past it.
+fn take_str(payload: &[u8], off: usize) -> Result<(String, usize)> {
+    if payload.len() < off + 2 {
+        bail!("string field truncated at byte {off}");
+    }
+    let len = u16::from_le_bytes(payload[off..off + 2].try_into().unwrap());
+    if len > MAX_NAME {
+        bail!("string field of {len} bytes exceeds protocol bound");
+    }
+    let start = off + 2;
+    if payload.len() < start + len as usize {
+        bail!("string field truncated at byte {start}");
+    }
+    let s = String::from_utf8(payload[start..start + len as usize].to_vec())
+        .map_err(|_| anyhow::anyhow!("non-utf8 string field"))?;
+    Ok((s, start + len as usize))
 }
 
 /// Serialize one response frame.  Infallible: an over-bound body (not
@@ -803,6 +1040,7 @@ mod tests {
             token: 0xfeed_beef,
             codec: None,
             trace: false,
+            migrate: false,
             message: "ok".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -825,6 +1063,7 @@ mod tests {
             token: 1234,
             codec: Some(SessionCodec { wire: WireDtype::I8, precision: Precision::Int8 }),
             trace: false,
+            migrate: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -857,6 +1096,7 @@ mod tests {
                 precision: Precision::Int8,
             }),
             trace: true,
+            migrate: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -885,6 +1125,7 @@ mod tests {
             token: 2,
             codec: None,
             trace: false,
+            migrate: false,
             message: String::new(),
         };
         assert_eq!(encode_handshake_reply(&reply).len(), 17 + 2);
@@ -904,6 +1145,7 @@ mod tests {
             token: 7777,
             codec: Some(SessionCodec { wire: WireDtype::F16, precision: Precision::F32 }),
             trace: false,
+            migrate: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -923,6 +1165,7 @@ mod tests {
             token: 0,
             codec: None,
             trace: false,
+            migrate: false,
             message: "server at session capacity (8 active)".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -941,6 +1184,7 @@ mod tests {
             token: 0,
             codec: None,
             trace: false,
+            migrate: false,
             message: "x".repeat(5000),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -1118,5 +1362,90 @@ mod tests {
         let len = u32::from_le_bytes(bytes[9..13].try_into().unwrap());
         assert!(len <= MAX_PAYLOAD);
         assert_eq!(bytes[8], RespStatus::Error.to_u8());
+    }
+
+    fn sample_image() -> SessionImage {
+        SessionImage {
+            client_id: "cam-3".into(),
+            model: "synthetic".into(),
+            pp: 2,
+            wire: WireDtype::SparseI8,
+            precision: Precision::Int8,
+            epoch: 5,
+            last_ack: 7,
+            ring: vec![
+                Response::ok(8, vec![1, 2, 3]),
+                Response::error(9, "boom"),
+                Response::ok(11, Vec::new()),
+            ],
+        }
+    }
+
+    #[test]
+    fn session_image_round_trips() {
+        let img = sample_image();
+        let bytes = encode_session_image(&img).unwrap();
+        assert_eq!(parse_session_image(&bytes).unwrap(), img);
+        // Empty ring is a valid image (a fresh session mid-drain).
+        let empty = SessionImage { ring: Vec::new(), ..img };
+        let bytes = encode_session_image(&empty).unwrap();
+        assert_eq!(parse_session_image(&bytes).unwrap(), empty);
+    }
+
+    #[test]
+    fn session_image_rejects_truncation_trailing_bytes_and_disorder() {
+        let img = sample_image();
+        let bytes = encode_session_image(&img).unwrap();
+        for cut in 0..bytes.len() {
+            assert!(parse_session_image(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(parse_session_image(&trailing).unwrap_err().to_string().contains("trailing"));
+        // An out-of-order ring (replay would be wrong) is refused.
+        let disordered = SessionImage {
+            ring: vec![Response::ok(9, vec![]), Response::ok(8, vec![])],
+            ..sample_image()
+        };
+        let bytes = encode_session_image(&disordered).unwrap();
+        assert!(parse_session_image(&bytes).unwrap_err().to_string().contains("out of order"));
+    }
+
+    #[test]
+    fn migrate_hint_and_export_payload_round_trip() {
+        let hint =
+            MigrateHint { addr: "127.0.0.1:7440".into(), session_id: 42, token: 0xdead_beef };
+        let bytes = migrate_hint_payload(&hint).unwrap();
+        assert_eq!(parse_migrate_hint(&bytes).unwrap(), hint);
+        assert!(parse_migrate_hint(&bytes[..bytes.len() - 1]).is_err());
+        assert!(parse_migrate_hint(b"pong").is_err(), "an ordinary body is not a hint");
+        let exp = export_payload("10.0.0.2:7433").unwrap();
+        assert_eq!(parse_export_payload(&exp).unwrap(), "10.0.0.2:7433");
+        assert!(parse_export_payload(&exp[..exp.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn migrate_bit_rides_the_reply_dtype_byte() {
+        let (mut c, mut s) = pair();
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed: false,
+            session_id: 3,
+            token: 99,
+            codec: Some(SessionCodec { wire: WireDtype::SparseI8, precision: Precision::Int8 }),
+            trace: true,
+            migrate: true,
+            message: String::new(),
+        };
+        write_handshake_reply(&mut s, &reply).unwrap();
+        let got = read_handshake_reply_v(&mut c, VERSION).unwrap();
+        assert_eq!(got, reply);
+        assert_eq!(got.session_codec().wire, WireDtype::SparseI8);
+        // And the grant matrix: both v3 + both capable, nothing else.
+        use crate::runtime::wire::CAP_MIGRATE;
+        assert!(migrate_granted(VERSION, CAP_MIGRATE, CAP_MIGRATE));
+        assert!(!migrate_granted(V2, CAP_MIGRATE, CAP_MIGRATE));
+        assert!(!migrate_granted(VERSION, 0, CAP_MIGRATE));
+        assert!(!migrate_granted(VERSION, CAP_MIGRATE, 0));
     }
 }

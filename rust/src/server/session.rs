@@ -120,6 +120,11 @@ struct OutboxState {
     tx: Option<Box<dyn ResponseSink>>,
     /// Bumped on every attach; guards stale detaches after a takeover.
     epoch: u64,
+    /// Highest sequence the client has ever acknowledged (via a
+    /// RECONNECT's `last_ack` or seeded from a migration image).
+    /// Carried in the session image so the target server starts from
+    /// the same delivery frontier.
+    last_ack: u64,
 }
 
 /// Per-session response path: workers deliver here, the ring retains
@@ -135,14 +140,39 @@ pub struct SessionOutbox {
 
 impl SessionOutbox {
     pub fn new(session_id: u64, ring_capacity: usize) -> Arc<Self> {
+        Self::with_state(session_id, ring_capacity, 0, 0, Vec::new())
+    }
+
+    /// Build an outbox from migrated state: the exporting server's
+    /// attach epoch, last-ack frontier, and retained replay ring carry
+    /// over verbatim, so a RECONNECT landing here behaves exactly as it
+    /// would have on the origin server.
+    pub fn import_seeded(
+        session_id: u64,
+        ring_capacity: usize,
+        epoch: u64,
+        last_ack: u64,
+        ring: Vec<Response>,
+    ) -> Arc<Self> {
+        Self::with_state(session_id, ring_capacity, epoch, last_ack, ring)
+    }
+
+    fn with_state(
+        session_id: u64,
+        ring_capacity: usize,
+        epoch: u64,
+        last_ack: u64,
+        ring: Vec<Response>,
+    ) -> Arc<Self> {
         Arc::new(SessionOutbox {
             session_id,
             ring_capacity: ring_capacity.max(1),
             inner: Mutex::new(OutboxState {
-                ring: BTreeMap::new(),
+                ring: ring.into_iter().map(|r| (r.req_id, r)).collect(),
                 in_flight: BTreeSet::new(),
                 tx: None,
-                epoch: 0,
+                epoch,
+                last_ack,
             }),
             stats: SessionStats::default(),
         })
@@ -230,6 +260,7 @@ impl SessionOutbox {
         if s.epoch != expected_epoch {
             return None;
         }
+        s.last_ack = s.last_ack.max(last_ack);
         s.ring.retain(|&seq, _| seq > last_ack);
         let mut replayed = 0usize;
         for resp in s.ring.values() {
@@ -284,6 +315,24 @@ impl SessionOutbox {
     pub fn replay_depth(&self) -> usize {
         self.inner.lock().unwrap().ring.len()
     }
+
+    /// Admitted sequences still awaiting their terminal response.
+    pub fn in_flight_depth(&self) -> usize {
+        self.inner.lock().unwrap().in_flight.len()
+    }
+
+    /// Snapshot the migratable state: `(epoch, last_ack, ring)` with the
+    /// ring in ascending sequence order.  Refused (`None`) while any
+    /// sequence is still in flight — exporting mid-execution would strand
+    /// a response neither server could replay, so the drain loop flushes
+    /// first and retries.
+    pub fn export_image(&self) -> Option<(u64, u64, Vec<Response>)> {
+        let s = self.inner.lock().unwrap();
+        if !s.in_flight.is_empty() {
+            return None;
+        }
+        Some((s.epoch, s.last_ack, s.ring.values().cloned().collect()))
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -310,10 +359,21 @@ pub struct SessionInfo {
     /// Clone of the live session socket, kept so `shutdown_all` (and a
     /// resume takeover) can kick the attached connection from outside —
     /// the shutdown surfaces as an EOF/error event on the reactor, which
-    /// tears the displaced connection state machine down.
-    stream: TcpStream,
+    /// tears the displaced connection state machine down.  `None` for a
+    /// session imported from a fleet peer that no client has claimed
+    /// yet (it has no transport until its RECONNECT lands).
+    stream: Option<TcpStream>,
     outbox: Arc<SessionOutbox>,
     health: Arc<HealthMonitor>,
+    /// Installed by a fleet-peer IMPORT and cleared by the first resume
+    /// that claims it — the scrape counts that claim as a placement
+    /// rebalance (the fleet actually moved this session).
+    imported: bool,
+    /// Did the current attachment negotiate `CAP_MIGRATE`?  Connection-
+    /// scoped like the trace grant (refreshed on every attach): only
+    /// these sessions may be exported by a drain and sent a MIGRATE
+    /// hint — everyone else downgrades to plain reconnect.
+    migrate: bool,
     /// `Some(when)` while detached — the reaper frees the slot once the
     /// linger expires.
     detached_since: Option<Instant>,
@@ -459,14 +519,144 @@ impl SessionManager {
                 plan: plan.clone(),
                 wire,
                 token,
-                stream,
+                stream: Some(stream),
                 outbox: outbox.clone(),
                 health: health.clone(),
                 detached_since: None,
                 attached_at: None,
+                imported: false,
+                migrate: false,
             },
         );
         Ok(SessionHandle { id, token, plan, wire, attach_epoch: 0, outbox, health })
+    }
+
+    /// Install a session migrated from a fleet peer.  The image's ring,
+    /// epoch, and last-ack frontier seed the outbox verbatim; fresh
+    /// `(id, token)` credentials are minted locally (ids are per-server
+    /// sequential, so the origin's id may already be taken here) and
+    /// returned for the MIGRATE hint that redirects the client.  The
+    /// session starts detached — it has no transport until the client's
+    /// RECONNECT claims it, and the ordinary detach-linger reaper frees
+    /// it if that reconnect never comes.
+    pub fn try_import(
+        &self,
+        img: &super::protocol::SessionImage,
+        ring_capacity: usize,
+        heartbeat_timeout: Duration,
+    ) -> Result<(u64, u64), String> {
+        let mut active = self.active.lock().unwrap();
+        if self.closed.load(Ordering::SeqCst) {
+            return Err("server shutting down".to_string());
+        }
+        if active.len() >= self.max_sessions {
+            return Err(format!(
+                "server at session capacity ({} active, limit {})",
+                active.len(),
+                self.max_sessions
+            ));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let token = fresh_token(id);
+        let outbox = SessionOutbox::import_seeded(
+            id,
+            ring_capacity,
+            img.epoch,
+            img.last_ack,
+            img.ring.clone(),
+        );
+        let health = Arc::new(HealthMonitor::new(HealthConfig {
+            heartbeat_timeout,
+            ..HealthConfig::default()
+        }));
+        active.insert(
+            id,
+            SessionInfo {
+                id,
+                client_id: img.client_id.clone(),
+                plan: PlanKey::new(&img.model, img.pp),
+                wire: img.wire,
+                token,
+                stream: None,
+                outbox,
+                health,
+                detached_since: Some(Instant::now()),
+                attached_at: None,
+                imported: true,
+                migrate: false,
+            },
+        );
+        Ok((id, token))
+    }
+
+    /// Snapshot a session as a portable image for EXPORT.  The session
+    /// stays registered (the caller removes it via `close` only once the
+    /// target acknowledged the transfer); refused while any sequence is
+    /// still in flight — the drain loop flushes and retries.
+    pub fn export_session(
+        &self,
+        id: u64,
+        precision: crate::runtime::wire::Precision,
+    ) -> Result<super::protocol::SessionImage, String> {
+        let active = self.active.lock().unwrap();
+        let info = active.get(&id).ok_or_else(|| format!("unknown session {id}"))?;
+        let (epoch, last_ack, ring) = info
+            .outbox
+            .export_image()
+            .ok_or_else(|| format!("session {id} has requests in flight"))?;
+        Ok(super::protocol::SessionImage {
+            client_id: info.client_id.clone(),
+            model: info.plan.model.clone(),
+            pp: info.plan.pp,
+            wire: info.wire,
+            precision,
+            epoch,
+            last_ack,
+            ring,
+        })
+    }
+
+    /// Record whether the session's current attachment negotiated
+    /// `CAP_MIGRATE` (called on every attach — the grant is
+    /// connection-scoped, like the trace capability).
+    pub fn set_migrate(&self, id: u64, granted: bool) {
+        if let Some(info) = self.active.lock().unwrap().get_mut(&id) {
+            info.migrate = granted;
+        }
+    }
+
+    /// Drain-time view of the directory: every session's id, outbox
+    /// (the channel a MIGRATE hint rides to the attached client),
+    /// whether its attachment negotiated migration, and where that
+    /// attachment is parked — after the hand-off the drain retires the
+    /// stale connection through its shard mailbox so the client sees a
+    /// prompt EOF instead of a read-timeout on a zombie session.
+    pub fn drain_rows(&self) -> Vec<(u64, Arc<SessionOutbox>, bool, Option<(usize, u64)>)> {
+        self.active
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| (s.id, s.outbox.clone(), s.migrate, s.attached_at))
+            .collect()
+    }
+
+    /// Admitted sequences awaiting their terminal response, summed over
+    /// every session — the drain loop polls this to zero before
+    /// exporting (an in-flight sequence pins its session locally).
+    pub fn total_in_flight(&self) -> usize {
+        self.active.lock().unwrap().values().map(|s| s.outbox.in_flight_depth()).sum()
+    }
+
+    /// First resume of an imported session: returns true exactly once
+    /// per import, so the scrape can count it as a placement rebalance.
+    pub fn claim_imported(&self, id: u64) -> bool {
+        match self.active.lock().unwrap().get_mut(&id) {
+            Some(info) if info.imported => {
+                info.imported = false;
+                true
+            }
+            _ => false,
+        }
     }
 
     /// RECONNECT: take over a session's transport, authenticated by the
@@ -500,9 +690,11 @@ impl SessionManager {
                 if info.client_id != client_id {
                     return Err(format!("session {session_id} belongs to another client"));
                 }
-                let _ = info.stream.shutdown(std::net::Shutdown::Both);
+                if let Some(old) = &info.stream {
+                    let _ = old.shutdown(std::net::Shutdown::Both);
+                }
                 let attach_epoch = info.outbox.invalidate_attachment();
-                info.stream = stream;
+                info.stream = Some(stream);
                 info.detached_since = None;
                 let displaced = info.attached_at.take();
                 info.health.note_recovered();
@@ -681,7 +873,9 @@ impl SessionManager {
         let active = self.active.lock().unwrap();
         self.closed.store(true, Ordering::SeqCst);
         for s in active.values() {
-            let _ = s.stream.shutdown(std::net::Shutdown::Both);
+            if let Some(stream) = &s.stream {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
         }
     }
 }
@@ -916,6 +1110,43 @@ mod tests {
         assert_eq!(rx.try_recv().unwrap().req_id, 3);
         assert_eq!(rx.try_recv().unwrap().req_id, 4);
         assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn export_import_round_trip_preserves_replay_state() {
+        use crate::runtime::wire::Precision;
+        let m = SessionManager::new(4);
+        let h =
+            m.try_open("cam", key(), WireDtype::SparseI8, stream(), 8, Duration::ZERO).unwrap();
+        let (tx, _rx) = mpsc::channel();
+        let (epoch, _) = h.outbox.attach(tx, 0, h.attach_epoch).unwrap();
+        for seq in 1..=3u64 {
+            assert_eq!(h.outbox.admit(seq), Admit::Fresh);
+            h.outbox.deliver(Response::ok(seq, vec![seq as u8]));
+        }
+        // In-flight work blocks the export until it completes.
+        assert_eq!(h.outbox.admit(4), Admit::Fresh);
+        assert!(m.export_session(h.id, Precision::F32).unwrap_err().contains("in flight"));
+        h.outbox.deliver(Response::ok(4, vec![4]));
+        let img = m.export_session(h.id, Precision::F32).unwrap();
+        assert_eq!(img.wire, WireDtype::SparseI8);
+        assert_eq!(img.epoch, epoch, "attach epoch rides the image");
+        assert_eq!(img.ring.len(), 4);
+        assert_eq!(img.model, "synthetic");
+        // Target side: install, then the client's RECONNECT claims it
+        // under the freshly minted credentials.
+        let t = SessionManager::new(4);
+        let (id, token) = t.try_import(&img, 8, Duration::ZERO).unwrap();
+        assert_eq!(t.detached_count(), 1, "imported sessions await their reconnect");
+        assert!(t.claim_imported(id));
+        assert!(!t.claim_imported(id), "an import is claimed exactly once");
+        let (resumed, _) = t.try_resume(id, "cam", token, stream()).unwrap();
+        assert_eq!(resumed.wire, WireDtype::SparseI8, "wire dtype survives the move");
+        let (tx2, rx2) = mpsc::channel();
+        let (_, replayed) = resumed.outbox.attach(tx2, 2, resumed.attach_epoch).unwrap();
+        assert_eq!(replayed, 2, "seqs 3 and 4 replay; 1 and 2 were acked at reconnect");
+        assert_eq!(rx2.try_recv().unwrap().req_id, 3);
+        assert_eq!(rx2.try_recv().unwrap().req_id, 4);
     }
 
     #[test]

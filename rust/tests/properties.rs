@@ -287,11 +287,13 @@ use edge_prune::server::protocol::{
 };
 
 fn random_kind(rng: &mut Rng) -> ReqKind {
-    match rng.below(5) {
+    match rng.below(7) {
         0 => ReqKind::Infer,
         1 => ReqKind::Switch,
         2 => ReqKind::Ping,
         3 => ReqKind::Bye,
+        4 => ReqKind::Export,
+        5 => ReqKind::Import,
         _ => ReqKind::TracedInfer,
     }
 }
@@ -431,7 +433,7 @@ fn prop_frame_length_field_is_validated_before_payload() {
         808,
         80,
         64,
-        |rng, _| (rng.next_u64(), rng.below(5) as u8, rng.next_u64() as u32),
+        |rng, _| (rng.next_u64(), rng.below(7) as u8, rng.next_u64() as u32),
         |&(seq, kind, len)| {
             let mut header = Vec::with_capacity(13);
             header.extend_from_slice(&seq.to_le_bytes());
@@ -721,4 +723,241 @@ fn prop_rng_below_is_uniform_enough() {
         let dev = (b as f64 - expect).abs() / expect;
         assert!(dev < 0.05, "bucket {i}: {b} vs {expect}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Fleet-migration codec properties: the session image (Import payload),
+// the Export target payload, and the MIGRATE hint must round-trip
+// exactly, refuse truncation and trailing garbage with a clean error,
+// and keep hostile bit flips either rejected or canonical — never a
+// panic, never an over-read.  The capability gate must downgrade every
+// v2 / no-CAP_MIGRATE peer combination.
+// ---------------------------------------------------------------------
+
+use edge_prune::server::protocol::{
+    encode_session_image, export_payload, migrate_hint_payload, parse_export_payload,
+    parse_migrate_hint, parse_session_image, MigrateHint, Response, SessionImage, VERSION,
+};
+
+fn random_image(rng: &mut Rng, size: usize) -> SessionImage {
+    use edge_prune::runtime::wire::Precision;
+    let mut seq = rng.below(4) as u64;
+    let mut ring = Vec::new();
+    for _ in 0..rng.below(size.min(8) + 1) {
+        seq += 1 + rng.below(3) as u64;
+        let body: Vec<u8> = (0..rng.below(24)).map(|_| rng.next_u64() as u8).collect();
+        ring.push(if rng.bool(0.85) {
+            Response::ok(seq, body)
+        } else {
+            Response::error(seq, "queue full")
+        });
+    }
+    SessionImage {
+        client_id: random_ascii(rng, 16),
+        model: random_ascii(rng, 16),
+        pp: rng.below(1 << 16),
+        wire: match rng.below(4) {
+            0 => WireDtype::F32,
+            1 => WireDtype::F16,
+            2 => WireDtype::I8,
+            _ => WireDtype::SparseI8,
+        },
+        precision: if rng.bool(0.5) { Precision::F32 } else { Precision::Int8 },
+        epoch: rng.next_u64(),
+        last_ack: rng.next_u64(),
+        ring,
+    }
+}
+
+#[test]
+fn prop_session_images_round_trip_and_refuse_every_truncation() {
+    forall(
+        1313,
+        80,
+        48,
+        |rng, size| random_image(rng, size),
+        |img| {
+            let bytes = encode_session_image(img).map_err(|e| format!("{e}"))?;
+            let got = parse_session_image(&bytes).map_err(|e| format!("own image rejected: {e}"))?;
+            if &got != img {
+                return Err(format!("decoded image differs: {got:?} != {img:?}"));
+            }
+            // Every strict prefix must error (the parser demands exact
+            // consumption, so no truncation can silently drop ring
+            // entries or shorten a string).
+            for cut in 0..bytes.len() {
+                if parse_session_image(&bytes[..cut]).is_ok() {
+                    return Err(format!("truncation to {cut} bytes parsed"));
+                }
+            }
+            // So must trailing garbage.
+            let mut padded = bytes.clone();
+            padded.push(0);
+            if parse_session_image(&padded).is_ok() {
+                return Err("trailing byte accepted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bit_flipped_session_images_error_or_stay_canonical() {
+    forall(
+        1414,
+        120,
+        48,
+        |rng, size| {
+            let mut bytes = encode_session_image(&random_image(rng, size)).unwrap();
+            let bit = rng.below(bytes.len() * 8);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            bytes
+        },
+        |bytes| {
+            // A flip may hit a don't-care byte (a body, an id) and still
+            // parse — but then the encoding is canonical: re-encoding
+            // the parsed image must reproduce the mutated bytes exactly.
+            // Anything else (length fields, order, enums) errors cleanly.
+            match parse_session_image(bytes) {
+                Err(_) => Ok(()),
+                Ok(img) => {
+                    let re = encode_session_image(&img).map_err(|e| format!("{e}"))?;
+                    if &re == bytes {
+                        Ok(())
+                    } else {
+                        Err("accepted image re-encodes differently".into())
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_migrate_hints_and_export_targets_round_trip_and_reject_mutation() {
+    forall(
+        1515,
+        100,
+        48,
+        |rng, size| {
+            (
+                MigrateHint {
+                    addr: random_ascii(rng, size.min(40)),
+                    session_id: rng.next_u64(),
+                    token: rng.next_u64(),
+                },
+                rng.next_u64(),
+            )
+        },
+        |(hint, salt)| {
+            let body = migrate_hint_payload(hint).map_err(|e| format!("{e}"))?;
+            let got = parse_migrate_hint(&body).map_err(|e| format!("own hint rejected: {e}"))?;
+            if &got != hint {
+                return Err(format!("decoded hint differs: {got:?}"));
+            }
+            for cut in 0..body.len() {
+                if parse_migrate_hint(&body[..cut]).is_ok() {
+                    return Err(format!("hint truncated to {cut} bytes parsed"));
+                }
+            }
+            let mut padded = body.clone();
+            padded.push(b'x');
+            if parse_migrate_hint(&padded).is_ok() {
+                return Err("hint with trailing byte accepted".into());
+            }
+            // A flip in the magic must unconditionally reject (that is
+            // what shields pre-migrate replay handling from the hint).
+            let mut magicless = body.clone();
+            magicless[(salt % 4) as usize] ^= 0x20;
+            if parse_migrate_hint(&magicless).is_ok() {
+                return Err("hint with mangled magic accepted".into());
+            }
+            // The Export target payload: same round-trip + strictness.
+            let t = export_payload(&hint.addr).map_err(|e| format!("{e}"))?;
+            let back = parse_export_payload(&t).map_err(|e| format!("{e}"))?;
+            if back != hint.addr {
+                return Err("export target mangled".into());
+            }
+            for cut in 0..t.len() {
+                if parse_export_payload(&t[..cut]).is_ok() {
+                    return Err(format!("export target truncated to {cut} parsed"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn migrate_grant_downgrades_every_old_peer_combination() {
+    use edge_prune::runtime::wire::CAP_MIGRATE;
+    use edge_prune::server::protocol::migrate_granted;
+    // Exhaustive over version x both capability masks: migration is
+    // granted exactly when the session is v3+ and BOTH sides advertise
+    // CAP_MIGRATE — a v2 peer, or a v3 peer built before the fleet bit,
+    // always lands on plain reconnect.
+    for version in [1u16, 2, VERSION, VERSION + 1] {
+        for client in 0..=255u8 {
+            for server in 0..=255u8 {
+                let want = version >= VERSION
+                    && client & CAP_MIGRATE != 0
+                    && server & CAP_MIGRATE != 0;
+                assert_eq!(
+                    migrate_granted(version, client, server),
+                    want,
+                    "v{version} {client:#x}/{server:#x}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_export_and_import_frames_survive_the_resumable_decoder_at_every_split() {
+    // The two fleet frame kinds with their real payloads (an export
+    // target, a full session image) through the same split-point
+    // discipline every other kind gets: a strict prefix waits without
+    // consuming, the remainder completes byte-for-byte.
+    forall(
+        1616,
+        80,
+        32,
+        |rng, size| {
+            let (kind, payload) = if rng.bool(0.5) {
+                (ReqKind::Export, export_payload(&random_ascii(rng, 40)).unwrap())
+            } else {
+                (ReqKind::Import, encode_session_image(&random_image(rng, size)).unwrap())
+            };
+            (rng.next_u64(), kind, payload, rng.below(1 << 16))
+        },
+        |(seq, kind, payload, split_hint)| {
+            let bytes = encode_frame(*seq, *kind, payload).map_err(|e| format!("{e}"))?;
+            let split = split_hint % bytes.len();
+            let mut buf = ByteBuf::new();
+            buf.extend(&bytes[..split]);
+            match decode_frame(&mut buf) {
+                Ok(None) => {}
+                Ok(Some(_)) => return Err("frame completed from a strict prefix".into()),
+                Err(e) => return Err(format!("valid prefix rejected: {e}")),
+            }
+            buf.extend(&bytes[split..]);
+            let f = decode_frame(&mut buf)
+                .map_err(|e| format!("valid frame rejected: {e}"))?
+                .ok_or("complete frame not decoded")?;
+            if (f.seq, f.kind, &f.payload) != (*seq, *kind, payload) {
+                return Err("decoded frame differs from encoded".into());
+            }
+            // And the payload still parses to the same structure on the
+            // far side of the frame layer.
+            match kind {
+                ReqKind::Export => {
+                    parse_export_payload(&f.payload).map_err(|e| format!("{e}"))?;
+                }
+                _ => {
+                    parse_session_image(&f.payload).map_err(|e| format!("{e}"))?;
+                }
+            }
+            Ok(())
+        },
+    );
 }

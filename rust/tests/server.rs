@@ -796,6 +796,7 @@ fn new_client_falls_back_to_v2_against_old_server() {
                 token: 42,
                 codec: None,
                 trace: false,
+                migrate: false,
                 message: String::new(),
             },
         )
@@ -1402,4 +1403,198 @@ fn session_wave_runs_at_sparse_wire() {
     assert_eq!(report.ok, 128);
     assert_eq!(report.errors, 0);
     server.shutdown();
+}
+
+/// Live migration (the fleet tentpole, client-initiated): an Export
+/// moves a sparse-wire session from server A to server B mid-stream.
+/// The replay ring, epoch, and negotiated dtype survive the move, the
+/// client never restarts, and the merged ledgers prove exactly-once.
+#[test]
+fn live_migration_moves_session_between_servers() {
+    use edge_prune::runtime::wire::WireDtype;
+    use edge_prune::server::model::expected_digest_codec;
+    let server_a = Server::start(test_cfg()).unwrap();
+    let server_b = Server::start(test_cfg()).unwrap();
+    let addr_b = server_b.addr().to_string();
+
+    let mut fc = FailoverClient::new(FailoverConfig {
+        addr: server_a.addr().to_string(),
+        pp: 2,
+        client_id: "mover".into(),
+        wire: WireDtype::SparseI8,
+        max_attempts: 3,
+        reconnect_backoff: Duration::from_millis(1),
+        ..FailoverConfig::default()
+    });
+    for i in 0..5u64 {
+        let input = make_input(i);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert!(!served.is_local(), "frame {i} before migration");
+        assert_eq!(body, expected_digest_codec(&input, 2, fc.codec()), "frame {i}");
+    }
+    assert_eq!(fc.codec().wire, WireDtype::SparseI8, "session negotiated sparse");
+
+    fc.migrate_to(&addr_b).unwrap();
+    assert_eq!(fc.addr(), addr_b, "client redirected by the hint");
+    assert_eq!(fc.stats().migrations_followed, 1);
+
+    // The same client keeps inferring: the next exchange resumes on B
+    // with the peer-minted credentials, still at the sparse dtype.
+    for i in 5..10u64 {
+        let input = make_input(i);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert!(!served.is_local(), "frame {i} after migration");
+        assert_eq!(body, expected_digest_codec(&input, 2, fc.codec()), "frame {i}");
+    }
+    assert_eq!(fc.codec().wire, WireDtype::SparseI8, "dtype survived the move");
+    fc.finish();
+    let stats = fc.stats();
+    assert_eq!(stats.completed, 10, "zero loss through the migration");
+    assert_eq!(stats.served_remote, 10);
+
+    let ma = server_a.shutdown();
+    let mb = server_b.shutdown();
+    assert_eq!(ma.get("sessions_migrated_out").unwrap().int().unwrap(), 1);
+    assert_eq!(mb.get("sessions_migrated_in").unwrap().int().unwrap(), 1);
+    // The post-migrate RECONNECT claims the imported slot: B counts it
+    // as a placement rebalance (the fleet actually moved this session).
+    assert_eq!(mb.get("placement_rebalances").unwrap().int().unwrap(), 1);
+    // Exactly-once across the pair: every frame executed on exactly one
+    // server, and the halves land where the timeline says they should.
+    let done_a = ma.get("requests_completed").unwrap().int().unwrap();
+    let done_b = mb.get("requests_completed").unwrap().int().unwrap();
+    assert_eq!(done_a, 5, "pre-migration frames ran on A");
+    assert_eq!(done_a + done_b, 10, "a={done_a} b={done_b}");
+    assert_eq!(ma.get("request_errors").unwrap().int().unwrap(), 0);
+    assert_eq!(mb.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// Signal-driven rolling drain: a real SIGTERM (raised in-process
+/// through the raw handler `serve --drain-on SIGTERM` installs) latches
+/// the flag, the drain quiesces the server and hands its session to a
+/// fleet peer, and the attached client follows the unsolicited MIGRATE
+/// hint — zero inferences lost end to end.
+#[test]
+fn signal_drain_loses_zero_inferences() {
+    use edge_prune::runtime::wire::WireDtype;
+    use edge_prune::server::fleet;
+    use edge_prune::server::model::expected_digest_codec;
+    let server_a = Server::start(test_cfg()).unwrap();
+    let server_b = Server::start(test_cfg()).unwrap();
+    let addr_b = server_b.addr().to_string();
+
+    let mut fc = FailoverClient::new(FailoverConfig {
+        addr: server_a.addr().to_string(),
+        pp: 2,
+        client_id: "drainee".into(),
+        wire: WireDtype::I8,
+        max_attempts: 3,
+        reconnect_backoff: Duration::from_millis(1),
+        ..FailoverConfig::default()
+    });
+    for i in 0..5u64 {
+        let input = make_input(i);
+        let (body, _) = fc.infer(&input).unwrap();
+        assert_eq!(body, expected_digest_codec(&input, 2, fc.codec()), "frame {i}");
+    }
+
+    // What the serve loop does on SIGTERM: the handler latches, the
+    // poll observes the latch, the drain runs from thread context.
+    fleet::raise_drain_signal();
+    assert!(fleet::drain_requested(), "SIGTERM latched the drain flag");
+    let drained = server_a.drain_to(Some(&addr_b));
+    fleet::clear_drain_request();
+    assert!(server_a.is_draining(), "drained server refuses fresh admissions");
+    assert_eq!(drained.get("sessions_migrated_out").unwrap().int().unwrap(), 1);
+    assert!(drained.get("drain_duration_ms").unwrap().int().unwrap() >= 0);
+
+    // The client sat idle through the drain; its next exchange reads
+    // the hint (then the prompt EOF from the retired attachment),
+    // redials B with the peer-minted credentials, and loses nothing.
+    for i in 5..10u64 {
+        let input = make_input(i);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert!(!served.is_local(), "frame {i} after the drain");
+        assert_eq!(body, expected_digest_codec(&input, 2, fc.codec()), "frame {i}");
+    }
+    fc.finish();
+    let stats = fc.stats();
+    assert_eq!(stats.completed, 10, "zero loss through the signal drain");
+    assert_eq!(stats.migrations_followed, 1);
+
+    let ma = server_a.shutdown();
+    let mb = server_b.shutdown();
+    assert_eq!(ma.get("sessions_migrated_out").unwrap().int().unwrap(), 1);
+    assert_eq!(mb.get("sessions_migrated_in").unwrap().int().unwrap(), 1);
+    let done = ma.get("requests_completed").unwrap().int().unwrap()
+        + mb.get("requests_completed").unwrap().int().unwrap();
+    assert_eq!(done, 10, "exactly-once across the drained pair");
+}
+
+/// Fleet chaos: loadgen places sessions by rendezvous hashing over a
+/// 3-server manifest while one server is hard-killed and a second is
+/// rolling-drained into the third mid-wave.  Zero inferences lost, and
+/// the merged server ledgers stay within the exactly-once band (a
+/// dropped-response retry may legitimately execute once per ledger on
+/// each side of a failure, never more).
+#[test]
+fn fleet_survives_kill_and_rolling_drain() {
+    use edge_prune::runtime::wire::WireDtype;
+    ensure_fd_headroom(256);
+    let server_a = Server::start(test_cfg()).unwrap();
+    let server_b = Server::start(test_cfg()).unwrap();
+    let server_c = Server::start(test_cfg()).unwrap();
+    let addr_a = server_a.addr().to_string();
+    let addr_b = server_b.addr().to_string();
+    let fleet = vec![addr_a.clone(), addr_b.clone(), server_c.addr().to_string()];
+
+    let clients = 6usize;
+    let requests = 120u64;
+    let cfg = LoadgenConfig {
+        addr: addr_a.clone(),
+        clients,
+        requests,
+        pp: 2,
+        fleet: fleet.clone(),
+        wire: WireDtype::SparseI8,
+        // ~2 ms of shaped latency per frame keeps the wave in flight
+        // long enough for the kill and the drain to land mid-run.
+        link: Some(LinkModel::new("paced", 100.0, 2.0)),
+        seed: 4242,
+        ..LoadgenConfig::default()
+    };
+    let wave = std::thread::spawn(move || run_loadgen(&cfg));
+
+    // Hard-kill one member mid-wave; its clients rehome to the
+    // rendezvous runner-up (locally-absorbed frames bridge the gap).
+    std::thread::sleep(Duration::from_millis(60));
+    let mc = server_c.shutdown();
+    // Rolling drain of a second member into a survivor; it rejoins the
+    // fleet afterwards, as a rolling restart would.
+    std::thread::sleep(Duration::from_millis(60));
+    let _ = server_a.drain_to(Some(&addr_b));
+    server_a.resume_admissions();
+
+    let report = wave.join().unwrap().unwrap();
+    let total = (clients as u64) * requests;
+    assert_eq!(report.ok, total, "{}", report.summary());
+    assert_eq!(report.errors, 0, "{}", report.summary());
+    assert_eq!(report.lost(), 0);
+
+    let ma = server_a.shutdown();
+    let mb = server_b.shutdown();
+    // Merged exactly-once ledger: every completed frame is accounted
+    // for by exactly one server execution or one local fallback.  A
+    // frame whose response died with the killed/drained server may
+    // execute once more on the recovery path — bounded by a couple of
+    // in-flight frames per client per disruption, never unbounded.
+    let merged = ma.get("requests_completed").unwrap().int().unwrap()
+        + mb.get("requests_completed").unwrap().int().unwrap()
+        + mc.get("requests_completed").unwrap().int().unwrap()
+        + report.served_local as i64;
+    assert!(merged >= total as i64, "ledger undercount: {merged} < {total}");
+    assert!(
+        merged <= (total + 4 * clients as u64) as i64,
+        "ledger overcount breaks exactly-once: {merged} vs {total}"
+    );
 }

@@ -1,0 +1,166 @@
+//! Overload shedding bench: the same deadline-carrying wave at ~2x the
+//! server's comfortable concurrency, against a no-shedding baseline and
+//! the EWMA shedding admission controller.  Measures goodput (verified
+//! completions per second — `LoadReport::requests_per_sec`) and the
+//! admitted-work p99, and proves the overload-control claims: every
+//! non-admitted request is an explicit SHED or DEADLINE_EXCEEDED (zero
+//! lost in both configs), and shedding beats the baseline's goodput by
+//! refusing infeasible work at admission instead of letting it expire
+//! in the queue.  Emits `BENCH_overload.json`.
+//!
+//! The deadline is calibrated, not hard-coded: a plain wave at the same
+//! concurrency measures the loaded p50, and the overload waves then run
+//! with that p50 as their budget — so roughly half the baseline's
+//! admitted work expires after burning queue time, on any machine.
+//!
+//! CI smoke assertions (EXPERIMENTS.md "Overload wave" has the
+//! methodology):
+//! * both waves: zero lost — ok + rejected + shed + deadline-exceeded
+//!   covers every request sent;
+//! * the baseline (shedding off) sheds nothing, the shedding config
+//!   sheds something;
+//! * shedding goodput >= baseline goodput x `EP_OVERLOAD_MIN_RATIO`
+//!   (default 1.0 — shedding must not lose);
+//! * admitted p99 under shedding <= `EP_OVERLOAD_P99_X` x the deadline
+//!   budget (default 2.0) — the controller keeps admitted work inside
+//!   its feasibility bound instead of queueing it to the edge.
+//!
+//! Knobs: EP_CLIENTS (default 16), EP_REQUESTS (per client, default
+//! 150), EP_OVERLOAD_MIN_RATIO, EP_OVERLOAD_P99_X.
+
+use edge_prune::benchkit::{env_or, header, write_bench_json};
+use edge_prune::server::loadgen::{run_loadgen, LoadgenConfig, LoadReport};
+use edge_prune::server::{Server, ServerConfig};
+use edge_prune::util::json::Json;
+
+fn overload_cfg(shed_delay_ms: f64) -> ServerConfig {
+    ServerConfig {
+        // One worker, small batches: the wave below is genuinely past
+        // capacity, whatever the host machine.
+        workers: 1,
+        pin_workers: false,
+        max_batch: 2,
+        shed_delay_ms,
+        ..ServerConfig::default()
+    }
+}
+
+fn run_wave(
+    server: &Server,
+    clients: usize,
+    requests: u64,
+    deadline_ms: u64,
+    seed: u64,
+) -> anyhow::Result<LoadReport> {
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients,
+        requests,
+        pp: 2,
+        deadline_ms,
+        priority: 0,
+        seed,
+        ..LoadgenConfig::default()
+    })?;
+    // The explicitness contract holds in every configuration: a request
+    // that was not served was refused out loud.
+    anyhow::ensure!(report.errors == 0, "response errors under overload: {}", report.summary());
+    anyhow::ensure!(report.lost() == 0, "lost requests under overload: {}", report.summary());
+    anyhow::ensure!(
+        report.ok + report.rejected + report.shed + report.deadline_exceeded == report.sent,
+        "unaccounted outcomes: {}",
+        report.summary()
+    );
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    let clients: usize = env_or("EP_CLIENTS", 16usize);
+    let requests: u64 = env_or("EP_REQUESTS", 150u64);
+    let min_ratio: f64 = env_or("EP_OVERLOAD_MIN_RATIO", 1.0);
+    let p99_x: f64 = env_or("EP_OVERLOAD_P99_X", 2.0);
+    header(&format!(
+        "overload shedding: {clients} deadline clients x {requests} req, \
+         no-shedding baseline vs EWMA admission"
+    ));
+
+    // Calibrate: the loaded p50 at this concurrency, no deadlines.
+    let server = Server::start(overload_cfg(0.0))?;
+    let calib = run_wave(&server, clients, requests.min(60), 0, 77)?;
+    server.shutdown();
+    let p50 = calib.latency.quantile_ms(0.5);
+    let deadline_ms = (p50.ceil() as u64).max(2);
+    println!("calibration: loaded p50 {p50:.2} ms -> deadline budget {deadline_ms} ms");
+
+    // Baseline: deadlines enforced, shedding off — infeasible work is
+    // only discovered once its budget is gone.
+    let server = Server::start(overload_cfg(0.0))?;
+    let base = run_wave(&server, clients, requests, deadline_ms, 78)?;
+    let base_metrics = server.shutdown();
+    anyhow::ensure!(base.shed == 0, "baseline shed with shedding disabled");
+
+    // Shedding: the queue-wait EWMA refuses infeasible work at
+    // admission, while its budget is still alive.
+    let server = Server::start(overload_cfg((p50 / 4.0).max(0.05)))?;
+    let shed = run_wave(&server, clients, requests, deadline_ms, 79)?;
+    let shed_metrics = server.shutdown();
+
+    let base_goodput = base.requests_per_sec();
+    let shed_goodput = shed.requests_per_sec();
+    let shed_p99 = shed.latency.quantile_ms(0.99);
+    println!("config     goodput/s     ok   shed   ddl-exceeded   admitted-p99-ms");
+    for (name, r) in [("baseline", &base), ("shedding", &shed)] {
+        println!(
+            "{name:<10} {:>9.0} {:>6} {:>6} {:>14} {:>17.2}",
+            r.requests_per_sec(),
+            r.ok,
+            r.shed,
+            r.deadline_exceeded,
+            r.latency.quantile_ms(0.99),
+        );
+    }
+
+    let out = Json::from_pairs(vec![
+        ("clients", Json::from(clients as u64)),
+        ("requests_per_client", Json::from(requests)),
+        ("deadline_ms", Json::from(deadline_ms)),
+        ("calibrated_p50_ms", Json::from(p50)),
+        ("baseline_goodput_rps", Json::from(base_goodput)),
+        ("baseline_ok", Json::from(base.ok)),
+        ("baseline_deadline_exceeded", Json::from(base.deadline_exceeded)),
+        ("baseline_admitted_p99_ms", Json::from(base.latency.quantile_ms(0.99))),
+        ("shed_goodput_rps", Json::from(shed_goodput)),
+        ("shed_ok", Json::from(shed.ok)),
+        ("shed_shed", Json::from(shed.shed)),
+        ("shed_deadline_exceeded", Json::from(shed.deadline_exceeded)),
+        ("shed_admitted_p99_ms", Json::from(shed_p99)),
+        (
+            "server_queue_delay_ewma_ms",
+            Json::from(shed_metrics.get("queue_delay_ewma_ms")?.num()?),
+        ),
+        ("server_requests_shed", Json::from(shed_metrics.get("requests_shed")?.int()?)),
+    ]);
+    write_bench_json("overload", &out)?;
+
+    // The server-side ledgers must agree with the clients': strict
+    // loadgen clients never re-offer a shed request, so both counters
+    // see each refusal exactly once.
+    anyhow::ensure!(
+        shed_metrics.get("requests_shed")?.int()? == shed.shed as i64,
+        "server/client shed ledgers disagree"
+    );
+    anyhow::ensure!(
+        base_metrics.get("requests_shed")?.int()? == 0,
+        "baseline server shed with shedding disabled"
+    );
+    anyhow::ensure!(shed.shed > 0, "shedding config never shed under 2x overload");
+    anyhow::ensure!(
+        shed_goodput >= base_goodput * min_ratio,
+        "shedding goodput {shed_goodput:.0}/s below baseline {base_goodput:.0}/s x {min_ratio}"
+    );
+    anyhow::ensure!(
+        shed_p99 <= (deadline_ms as f64) * p99_x,
+        "admitted p99 {shed_p99:.2} ms exceeds {p99_x}x the {deadline_ms} ms budget"
+    );
+    Ok(())
+}

@@ -67,6 +67,16 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
            first line names the fleet peer to migrate sessions to —
            stop admitting, flush in-flight work, export migratable
            sessions, print the final metrics snapshot, exit)
+           --shed-delay-ms F (overload control: shed lowest-priority
+           requests with an explicit SHED + retry-after once the
+           queue-wait EWMA crosses this bound; 0 = shedding off)
+           --shed-ewma-alpha F (queue-wait EWMA smoothing, default 0.2)
+           --rebalance-peers HOST:PORT,... --rebalance-hot-ms MS
+           (volunteer the busiest idle session to the least-loaded
+           peer after the queue-wait EWMA stays hot for MS; 0 = off)
+           --rebalance-delay-ms F (hot threshold; defaults to
+           --shed-delay-ms) --rebalance-cooldown-ms MS (min gap
+           between volunteered sessions, default 5000)
   loadgen: --addr HOST:PORT --clients N --requests N --pp K --link NAME
            --seed S --json --resilient --chaos K (kill each client's link
            every K requests; implies --resilient)
@@ -75,6 +85,11 @@ edge-prune <analyze|compile|run|explore|worker|serve|loadgen|version> [flags]
            redirects from draining servers; implies --resilient)
            --think-ms MS (pause between requests per client; paces a
            wave so chaos events land mid-run without a link profile)
+           --deadline-ms MS (per-request deadline budget carried on the
+           wire via CAP_DEADLINE; expired work answers
+           DEADLINE_EXCEEDED instead of computing; 0 = none)
+           --priority P (0-255 priority class in the deadline prefix;
+           lower classes shed first under overload)
            --wire f32|f16|int8|sparse (requested; the server may
            downgrade)
            --trace --trace-sample N (client-side spans + traced-infer
@@ -304,6 +319,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         trace: args.bool_flag("trace"),
         trace_sample: args.usize_or("trace-sample", 1)? as u64,
         metrics_addr: args.str_opt("metrics-addr").map(str::to_string),
+        shed_delay_ms: args.f64_or("shed-delay-ms", 0.0)?,
+        shed_ewma_alpha: args.f64_or("shed-ewma-alpha", 0.2)?,
+        rebalance_peers: match args.str_opt("rebalance-peers") {
+            Some(spec) => edge_prune::server::fleet::parse_manifest(spec)?,
+            None => Vec::new(),
+        },
+        rebalance_hot: std::time::Duration::from_millis(
+            args.usize_or("rebalance-hot-ms", 0)? as u64,
+        ),
+        rebalance_delay_ms: args.f64_or("rebalance-delay-ms", 0.0)?,
+        rebalance_cooldown: std::time::Duration::from_millis(
+            args.usize_or("rebalance-cooldown-ms", 5000)? as u64,
+        ),
     };
     let duration = args.usize_or("duration", 0)?;
     // Graceful-drain trigger: a latched SIGTERM, or one connect to a
@@ -432,6 +460,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             None => Vec::new(),
         },
         think_ms: args.usize_or("think-ms", 0)? as u64,
+        deadline_ms: args.usize_or("deadline-ms", 0)? as u64,
+        priority: args.usize_or("priority", 0)?.min(u8::MAX as usize) as u8,
     };
     let report = run_loadgen(&cfg)?;
     if args.bool_flag("json") {

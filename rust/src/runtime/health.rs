@@ -228,6 +228,43 @@ impl HealthMonitor {
     }
 }
 
+/// Single-writer EWMA of a delay signal (queue wait, dispatch lag) in
+/// milliseconds — the same `prev + a·(x - prev)` estimator as
+/// [`HealthMonitor`]'s RTT EWMA, reshaped for the serving hot path: the
+/// one writer (a shard's dispatcher) folds samples in with plain atomic
+/// stores, and any thread (the reactor's admission check, the metrics
+/// scrape) reads the smoothed value without taking a lock.
+#[derive(Debug, Default)]
+pub struct DelayEwma {
+    /// `f64::to_bits` of the smoothed delay (ms); `0` until seeded
+    /// (`f64::from_bits(0)` is `0.0`, the natural "no delay yet" read).
+    bits: AtomicU64,
+    /// Samples folded in so far.
+    pub samples: AtomicU64,
+}
+
+impl DelayEwma {
+    pub fn new() -> Self {
+        DelayEwma::default()
+    }
+
+    /// Fold one observed delay in.  Single-writer by contract;
+    /// concurrent readers see either the old or the new smoothed value,
+    /// never a torn one (the bits travel through one atomic).
+    pub fn observe(&self, delay_ms: f64, alpha: f64) {
+        let a = alpha.clamp(0.01, 1.0);
+        let first = self.samples.fetch_add(1, Ordering::Relaxed) == 0;
+        let prev = f64::from_bits(self.bits.load(Ordering::Relaxed));
+        let next = if first { delay_ms } else { prev + a * (delay_ms - prev) };
+        self.bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current smoothed delay in milliseconds (`0.0` before any sample).
+    pub fn value_ms(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,6 +346,20 @@ mod tests {
         m.note_rtt(Duration::from_millis(10), 100_000);
         m.note_rtt(Duration::from_millis(10), 100_000);
         assert_eq!(m.state(), LinkState::Healthy);
+    }
+
+    #[test]
+    fn delay_ewma_seeds_then_smooths_like_the_rtt_estimator() {
+        let e = DelayEwma::new();
+        assert_eq!(e.value_ms(), 0.0, "unseeded reads as zero delay");
+        e.observe(4.0, 0.5);
+        assert!((e.value_ms() - 4.0).abs() < 1e-9, "first sample seeds");
+        e.observe(12.0, 0.5);
+        assert!((e.value_ms() - 8.0).abs() < 1e-9, "alpha 0.5: 4 -> 8");
+        // Alpha is clamped into (0.01, 1.0] exactly like HealthConfig's.
+        e.observe(8.0, 5.0);
+        assert!((e.value_ms() - 8.0).abs() < 1e-9, "alpha clamps to 1.0");
+        assert_eq!(e.samples.load(Ordering::Relaxed), 3);
     }
 
     #[test]

@@ -64,6 +64,14 @@ pub const CAP_SPARSE_I8: u8 = 8;
 /// orthogonal to dtype negotiation: [`negotiate`] ignores it, and a
 /// peer that lacks it simply downgrades to plain reconnect.
 pub const CAP_MIGRATE: u8 = 16;
+/// Capability bit: peer understands end-to-end deadline propagation —
+/// it can send `[u32 budget_ms][u8 priority]` ahead of deadline-infer
+/// payloads and accept the `SHED` / `DEADLINE_EXCEEDED` response codes
+/// of the overload control plane.  Like [`CAP_TRACE`] and
+/// [`CAP_MIGRATE`] it is orthogonal to dtype negotiation: [`negotiate`]
+/// ignores it, and against an older peer the budget is silently dropped
+/// (plain infer frames, overload expressed as `rejected`).
+pub const CAP_DEADLINE: u8 = 32;
 
 /// Element type of activations on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

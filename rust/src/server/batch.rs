@@ -12,6 +12,17 @@
 //! `rejected` response — under overload the server sheds load visibly
 //! rather than letting queues grow without bound.
 //!
+//! On top of the hard depth bound sits the overload controller: the
+//! queue keeps an EWMA of observed queue wait (sampled at batch pop,
+//! the same estimator shape as `runtime::health`), and once that delay
+//! crosses the configured bound ([`ShedConfig`]) admission sheds the
+//! lowest-priority requests with an explicit retry-after hint — and
+//! refuses outright any request whose remaining deadline budget the
+//! current queue delay makes infeasible.  Already-expired requests are
+//! dropped at admission unconditionally: answering `DEADLINE_EXCEEDED`
+//! is cheaper than burning a compute slot on an answer nobody waits
+//! for.
+//!
 //! The dispatcher *parks* on the `not_empty` condvar whenever the queue
 //! is dry — together with the parked worker pool and the reactor
 //! sleeping in `epoll_wait`, an idle server has no polling loop
@@ -20,6 +31,7 @@
 use super::metrics::PlanMetrics;
 use super::model::ServerModelPlan;
 use super::session::SessionOutbox;
+use crate::runtime::health::DelayEwma;
 use crate::runtime::wire::WireDtype;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -54,6 +66,64 @@ pub struct PendingRequest {
     /// ring; the worker turns `recv_us..dispatched_us` into the
     /// batch-linger span and `dispatched_us..now` into worker-queue.
     pub dispatched_us: u64,
+    /// Absolute wall-clock deadline propagated from the client's
+    /// deadline-infer frame; `None` on plain infer frames.  Work past
+    /// its deadline is dropped before compute with an explicit
+    /// `DEADLINE_EXCEEDED` instead of burning a slot.
+    pub deadline: Option<Instant>,
+    /// Shed priority (higher survives longer under overload); plain
+    /// infer frames carry the default 0.
+    pub priority: u8,
+}
+
+impl PendingRequest {
+    /// Milliseconds of deadline budget left (`None` = no deadline).
+    pub fn remaining_ms(&self, now: Instant) -> Option<f64> {
+        self.deadline.map(|d| d.saturating_duration_since(now).as_secs_f64() * 1e3)
+    }
+
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
+}
+
+/// Overload-shedding policy of one shard's queue.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedConfig {
+    /// Queue-delay bound in milliseconds: once the observed queue-wait
+    /// EWMA crosses it, admission starts shedding the lowest priority
+    /// levels (priority p is shed while `ewma / delay_ms`, rounded
+    /// down, exceeds p).  `0.0` disables shedding — the queue then only
+    /// refuses at the hard depth bound.
+    pub delay_ms: f64,
+    /// Smoothing factor of the queue-wait EWMA (same estimator shape as
+    /// `runtime::health`).
+    pub alpha: f64,
+}
+
+impl Default for ShedConfig {
+    fn default() -> Self {
+        ShedConfig { delay_ms: 0.0, alpha: 0.2 }
+    }
+}
+
+/// Outcome of [`BatchQueue::push`].  Every refusal hands the request
+/// back so the caller can answer the client explicitly — nothing is
+/// silently dropped.
+pub enum Admission {
+    /// Admitted; carries the new queue depth.
+    Queued(usize),
+    /// Refused: the server is shutting down.
+    ShuttingDown(PendingRequest),
+    /// Refused: the queue is at its hard depth bound.
+    Full(PendingRequest),
+    /// Refused by the overload controller; the client should retry
+    /// after the hint (milliseconds).
+    Shed { req: PendingRequest, retry_after_ms: u32 },
+    /// The request's deadline budget was already spent at admission
+    /// (or the queue delay makes it unmeetable — see `Shed` for the
+    /// still-feasible-elsewhere case).
+    Expired(PendingRequest),
 }
 
 struct QueueState {
@@ -65,34 +135,82 @@ pub struct BatchQueue {
     state: Mutex<QueueState>,
     not_empty: Condvar,
     max_depth: usize,
+    shed: ShedConfig,
+    /// Queue-wait EWMA, sampled as requests leave the queue in a batch.
+    /// Written only under the state lock (pop side), read lock-free by
+    /// admission, the metrics gauge, and the rebalancer.
+    delay_ewma: DelayEwma,
 }
 
 impl BatchQueue {
     pub fn new(max_depth: usize) -> Self {
+        BatchQueue::with_shed(max_depth, ShedConfig::default())
+    }
+
+    pub fn with_shed(max_depth: usize, shed: ShedConfig) -> Self {
         assert!(max_depth > 0, "queue depth must be positive");
         BatchQueue {
             state: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
             not_empty: Condvar::new(),
             max_depth,
+            shed,
+            delay_ewma: DelayEwma::new(),
         }
     }
 
-    /// Admit one request.  Returns the new depth, or the request plus a
-    /// client-facing reason when refused (caller sends the reject — a
-    /// shutdown refusal must not read as transient overload).
-    pub fn push(&self, req: PendingRequest) -> Result<usize, (PendingRequest, &'static str)> {
+    /// Current queue-wait EWMA in milliseconds (0.0 until the first
+    /// batch pops).
+    pub fn queue_delay_ewma_ms(&self) -> f64 {
+        self.delay_ewma.value_ms()
+    }
+
+    /// Admit one request through the overload controller.  Every
+    /// refusal variant carries the request back so the caller answers
+    /// the client explicitly — a shutdown refusal must not read as
+    /// transient overload, and a shed must not read as a hard reject.
+    pub fn push(&self, req: PendingRequest) -> Admission {
         let mut s = self.state.lock().unwrap();
         if s.closed {
-            return Err((req, "server shutting down"));
+            return Admission::ShuttingDown(req);
+        }
+        let now = Instant::now();
+        // Already past its deadline: drop before it ever queues,
+        // whatever the shed policy says.
+        if req.expired(now) {
+            return Admission::Expired(req);
         }
         if s.queue.len() >= self.max_depth {
-            return Err((req, "admission: request queue full"));
+            return Admission::Full(req);
+        }
+        // Shed decisions only while work is actually queued: an empty
+        // queue admits unconditionally so a stale (non-decaying) EWMA
+        // can never livelock admission after a burst passes.
+        if self.shed.delay_ms > 0.0 && !s.queue.is_empty() {
+            let ewma = self.delay_ewma.value_ms();
+            let retry_after_ms = (ewma.ceil() as u32).max(1);
+            // Deadline-feasibility bound: if the typical queue wait
+            // already exceeds the request's remaining budget, compute
+            // would start post-deadline — shed now so the client can
+            // retry elsewhere while its budget is still alive.
+            if let Some(remaining) = req.remaining_ms(now) {
+                if remaining < ewma {
+                    return Admission::Shed { req, retry_after_ms };
+                }
+            }
+            // Graduated priority shedding: at `level` multiples of the
+            // delay bound, priorities below `floor(level)` are shed —
+            // lowest priority goes first, higher tiers survive deeper
+            // overload.
+            let level = ewma / self.shed.delay_ms;
+            if level >= 1.0 && (req.priority as f64) < level.floor() {
+                return Admission::Shed { req, retry_after_ms };
+            }
         }
         s.queue.push_back(req);
         let depth = s.queue.len();
         drop(s);
         self.not_empty.notify_one();
-        Ok(depth)
+        Admission::Queued(depth)
     }
 
     pub fn depth(&self) -> usize {
@@ -128,6 +246,14 @@ impl BatchQueue {
                     let (next, _) = self.not_empty.wait_timeout(s, residual).unwrap();
                     s = next;
                     Self::drain_matching(&mut s.queue, &key, &mut batch, max_batch);
+                }
+                // The moment a request leaves the queue is when its
+                // queue wait is known — feed the overload signal.
+                let now = Instant::now();
+                for r in &batch {
+                    let waited_ms =
+                        now.saturating_duration_since(r.enqueued).as_secs_f64() * 1e3;
+                    self.delay_ewma.observe(waited_ms, self.shed.alpha);
                 }
                 return Some(batch);
             }
@@ -190,6 +316,15 @@ mod tests {
             trace_parent: 0,
             recv_us: 0,
             dispatched_us: 0,
+            deadline: None,
+            priority: 0,
+        }
+    }
+
+    fn queue_ok(q: &BatchQueue, r: PendingRequest) {
+        match q.push(r) {
+            Admission::Queued(_) => {}
+            _ => panic!("expected the request to be admitted"),
         }
     }
 
@@ -198,10 +333,10 @@ mod tests {
         let q = BatchQueue::new(16);
         let p2 = plan(2);
         let p3 = plan(3);
-        q.push(req(1, 0, &p2)).map_err(|_| ()).unwrap();
-        q.push(req(2, 0, &p3)).map_err(|_| ()).unwrap();
-        q.push(req(3, 0, &p2)).map_err(|_| ()).unwrap();
-        q.push(req(4, 0, &p2)).map_err(|_| ()).unwrap();
+        queue_ok(&q, req(1, 0, &p2));
+        queue_ok(&q, req(2, 0, &p3));
+        queue_ok(&q, req(3, 0, &p2));
+        queue_ok(&q, req(4, 0, &p2));
         let batch = q.pop_batch(8, Duration::ZERO).unwrap();
         assert_eq!(batch.len(), 3, "all pp2 requests coalesce past the pp3 one");
         assert!(batch.iter().all(|r| r.plan.key.pp == 2));
@@ -215,7 +350,7 @@ mod tests {
         let q = BatchQueue::new(16);
         let p = plan(1);
         for i in 0..6 {
-            q.push(req(1, i, &p)).map_err(|_| ()).unwrap();
+            queue_ok(&q, req(1, i, &p));
         }
         let batch = q.pop_batch(4, Duration::ZERO).unwrap();
         assert_eq!(batch.len(), 4);
@@ -226,23 +361,24 @@ mod tests {
     fn full_queue_refuses_admission() {
         let q = BatchQueue::new(2);
         let p = plan(1);
-        assert!(q.push(req(1, 0, &p)).is_ok());
-        assert!(q.push(req(1, 1, &p)).is_ok());
-        let (back, why) = q.push(req(1, 2, &p)).err().unwrap();
-        assert_eq!(back.req_id, 2);
-        assert!(why.contains("queue full"), "{why}");
+        queue_ok(&q, req(1, 0, &p));
+        queue_ok(&q, req(1, 1, &p));
+        match q.push(req(1, 2, &p)) {
+            Admission::Full(back) => assert_eq!(back.req_id, 2),
+            _ => panic!("a full queue must refuse with Full"),
+        }
     }
 
     #[test]
     fn linger_waits_for_stragglers() {
         let q = Arc::new(BatchQueue::new(16));
         let p = plan(2);
-        q.push(req(1, 0, &p)).map_err(|_| ()).unwrap();
+        queue_ok(&q, req(1, 0, &p));
         let q2 = q.clone();
         let p2 = p.clone();
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(10));
-            q2.push(req(2, 1, &p2)).map_err(|_| ()).unwrap();
+            queue_ok(&q2, req(2, 1, &p2));
         });
         let batch = q.pop_batch(2, Duration::from_millis(300));
         h.join().unwrap();
@@ -256,7 +392,7 @@ mod tests {
         // deadline with whatever arrived, not after the drip ends.
         let q = Arc::new(BatchQueue::new(64));
         let p = plan(2);
-        q.push(req(1, 0, &p)).map_err(|_| ()).unwrap();
+        queue_ok(&q, req(1, 0, &p));
         let q2 = q.clone();
         let p2 = p.clone();
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -287,11 +423,106 @@ mod tests {
     fn close_drains_then_ends() {
         let q = BatchQueue::new(4);
         let p = plan(1);
-        q.push(req(1, 0, &p)).map_err(|_| ()).unwrap();
+        queue_ok(&q, req(1, 0, &p));
         q.close();
-        let (_, why) = q.push(req(1, 1, &p)).err().unwrap();
-        assert!(why.contains("shutting down"), "closed queue must say so, got {why}");
+        match q.push(req(1, 1, &p)) {
+            Admission::ShuttingDown(back) => assert_eq!(back.req_id, 1),
+            _ => panic!("a closed queue must refuse with ShuttingDown"),
+        }
         assert_eq!(q.pop_batch(4, Duration::ZERO).unwrap().len(), 1);
         assert!(q.pop_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn expired_request_is_dropped_at_admission() {
+        // Even with shedding disabled, a request whose deadline already
+        // passed never queues — it would burn a slot for nothing.
+        let q = BatchQueue::new(4);
+        let p = plan(1);
+        let mut r = req(1, 5, &p);
+        r.deadline = Some(Instant::now() - Duration::from_millis(1));
+        match q.push(r) {
+            Admission::Expired(back) => assert_eq!(back.req_id, 5),
+            _ => panic!("expired work must be refused with Expired"),
+        }
+        assert_eq!(q.depth(), 0);
+        // A live deadline queues normally.
+        let mut r = req(1, 6, &p);
+        r.deadline = Some(Instant::now() + Duration::from_secs(60));
+        queue_ok(&q, r);
+    }
+
+    #[test]
+    fn infeasible_deadline_is_shed_with_retry_after() {
+        let q = BatchQueue::with_shed(16, ShedConfig { delay_ms: 1000.0, alpha: 0.5 });
+        let p = plan(1);
+        queue_ok(&q, req(1, 0, &p)); // shed logic needs a non-empty queue
+        q.delay_ewma.observe(50.0, 1.0); // typical queue wait: 50 ms
+        let mut r = req(1, 1, &p);
+        r.deadline = Some(Instant::now() + Duration::from_millis(10));
+        r.priority = 7; // high priority does not rescue an unmeetable deadline
+        match q.push(r) {
+            Admission::Shed { req, retry_after_ms } => {
+                assert_eq!(req.req_id, 1);
+                assert!(retry_after_ms >= 50, "hint reflects the delay, got {retry_after_ms}");
+            }
+            _ => panic!("an unmeetable deadline must shed"),
+        }
+        // Plenty of budget sails through at the same EWMA.
+        let mut r = req(1, 2, &p);
+        r.deadline = Some(Instant::now() + Duration::from_secs(5));
+        queue_ok(&q, r);
+    }
+
+    #[test]
+    fn shedding_is_graduated_by_priority() {
+        let q = BatchQueue::with_shed(16, ShedConfig { delay_ms: 10.0, alpha: 0.5 });
+        let p = plan(1);
+        queue_ok(&q, req(1, 0, &p));
+        // EWMA at 2.5x the bound: level 2 — priorities 0 and 1 shed,
+        // priority 2 and up still admitted.
+        q.delay_ewma.observe(25.0, 1.0);
+        for prio in [0u8, 1] {
+            let mut r = req(1, 10 + prio as u64, &p);
+            r.priority = prio;
+            assert!(
+                matches!(q.push(r), Admission::Shed { .. }),
+                "priority {prio} must shed at level 2"
+            );
+        }
+        let mut r = req(1, 20, &p);
+        r.priority = 2;
+        queue_ok(&q, r);
+        // Below the bound nothing sheds, whatever the priority.
+        q.delay_ewma.observe(0.0, 1.0);
+        let r = req(1, 21, &p);
+        queue_ok(&q, r);
+    }
+
+    #[test]
+    fn empty_queue_never_sheds() {
+        // A huge stale EWMA with nothing queued must not refuse work:
+        // only popped batches decay the estimator, so shedding on an
+        // empty queue could lock admission out forever.
+        let q = BatchQueue::with_shed(16, ShedConfig { delay_ms: 1.0, alpha: 0.5 });
+        let p = plan(1);
+        q.delay_ewma.observe(10_000.0, 1.0);
+        queue_ok(&q, req(1, 0, &p));
+    }
+
+    #[test]
+    fn pop_feeds_the_queue_delay_ewma() {
+        let q = BatchQueue::new(16);
+        let p = plan(1);
+        assert_eq!(q.queue_delay_ewma_ms(), 0.0);
+        let mut r = req(1, 0, &p);
+        r.enqueued = Instant::now() - Duration::from_millis(40);
+        match q.push(r) {
+            Admission::Queued(_) => {}
+            _ => panic!("expected admission"),
+        }
+        q.pop_batch(4, Duration::ZERO).unwrap();
+        let ewma = q.queue_delay_ewma_ms();
+        assert!(ewma >= 39.0, "first sample seeds the EWMA, got {ewma}");
     }
 }

@@ -36,7 +36,7 @@
 //! inventory is fixed — per shard: reactor + dispatcher + workers —
 //! regardless of session count.
 
-use super::batch::PendingRequest;
+use super::batch::{Admission, PendingRequest};
 use super::fleet;
 use super::model::{self, ServerModelPlan};
 use super::protocol::{self, Frame, HandshakeReply, ReqKind, Response};
@@ -196,6 +196,12 @@ struct Attachment {
     /// honored and a drain may redirect this client with a MIGRATE
     /// hint.  Always false on v2.
     migrate: bool,
+    /// The attachment negotiated `CAP_DEADLINE`: kind-7 deadline-infer
+    /// frames are honored and overload refusals answer with the
+    /// explicit `Shed`/`DeadlineExceeded` statuses.  Non-granted
+    /// sessions see the same refusals downgraded to plain `Rejected`.
+    /// Always false on v2.
+    deadline: bool,
     outbox: Arc<super::session::SessionOutbox>,
     health: Arc<crate::runtime::health::HealthMonitor>,
     plan: Arc<ServerModelPlan>,
@@ -681,9 +687,12 @@ impl EventLoop {
         // 1:1).
         let actual = (frame.payload.len() + 13) as u64;
         let f32_equiv = match frame.kind {
-            ReqKind::Infer | ReqKind::TracedInfer => {
-                let prefix =
-                    if frame.kind == ReqKind::TracedInfer { protocol::TRACE_PREFIX } else { 0 };
+            ReqKind::Infer | ReqKind::TracedInfer | ReqKind::DeadlineInfer => {
+                let prefix = match frame.kind {
+                    ReqKind::TracedInfer => protocol::TRACE_PREFIX,
+                    ReqKind::DeadlineInfer => protocol::DEADLINE_PREFIX,
+                    _ => 0,
+                };
                 let body = frame.payload.get(prefix..).unwrap_or(&[]);
                 // Achieved-sparsity gauges: the self-describing sparse
                 // header says how many coefficients actually shipped.
@@ -698,7 +707,7 @@ impl EventLoop {
             _ => actual,
         };
         self.state.metrics.wire.note_rx(actual, f32_equiv);
-        if matches!(frame.kind, ReqKind::Infer | ReqKind::TracedInfer) {
+        if matches!(frame.kind, ReqKind::Infer | ReqKind::TracedInfer | ReqKind::DeadlineInfer) {
             a.outbox.stats().wire.note_rx(actual, f32_equiv);
         }
         // Export work is staged out of the match: acting on it flips
@@ -757,7 +766,7 @@ impl EventLoop {
                     }
                 }
             }
-            ReqKind::Infer | ReqKind::TracedInfer => {
+            ReqKind::Infer | ReqKind::TracedInfer | ReqKind::DeadlineInfer => {
                 // A traced frame carries its flight-recorder context
                 // ahead of the activation: peel it off so the worker
                 // decodes a plain infer payload.  The context is only
@@ -777,6 +786,34 @@ impl EventLoop {
                         trace_id = tid;
                         trace_parent = parent;
                     }
+                }
+                // A deadline frame carries its budget and priority ahead
+                // of the activation, same peel-off shape as the trace
+                // prefix.  Only valid on CAP_DEADLINE-granted sessions:
+                // the grant bit is the client's license to send kind-7
+                // frames, so an ungranted one is answered (not closed —
+                // the client may be probing a mixed fleet) and dropped.
+                let mut deadline: Option<Instant> = None;
+                let mut priority = 0u8;
+                if frame.kind == ReqKind::DeadlineInfer {
+                    if !a.deadline {
+                        a.outbox.send_ephemeral(Response::error(
+                            frame.seq,
+                            "session did not negotiate deadlines (CAP_DEADLINE)",
+                        ));
+                        return Ok(());
+                    }
+                    let (budget_ms, prio) = match protocol::split_deadline_prefix(&payload) {
+                        Ok((budget, prio, _rest)) => (budget, prio),
+                        // Malformed deadline prefix = protocol violation.
+                        Err(_) => return Err(Teardown::Close),
+                    };
+                    payload.drain(..protocol::DEADLINE_PREFIX);
+                    // The budget is relative (milliseconds left), so the
+                    // clock starts here — queue wait and compute both
+                    // burn it.  A zero budget is already expired.
+                    deadline = Some(Instant::now() + Duration::from_millis(budget_ms as u64));
+                    priority = prio;
                 }
                 match a.outbox.admit(frame.seq) {
                     Admit::Replayed => {
@@ -819,17 +856,73 @@ impl EventLoop {
                             trace_parent,
                             recv_us,
                             dispatched_us: 0,
+                            deadline,
+                            priority,
                         };
+                        // Every refusal is an explicit response, never a
+                        // drop (the seq frees for a later re-send).  The
+                        // overload statuses are CAP_DEADLINE-gated: a
+                        // non-granted session sees them downgraded to
+                        // the plain reject it already understands.
+                        let granted = a.deadline;
                         match self.state.queue.push(req) {
-                            Ok(depth) => self.state.metrics.note_queue_depth(depth as u64),
-                            Err((back, why)) => {
-                                // Admission reject: explicit response, never
-                                // a drop (the seq frees for a later re-send).
+                            Admission::Queued(depth) => {
+                                self.state.metrics.note_queue_depth(depth as u64)
+                            }
+                            Admission::ShuttingDown(back) => {
                                 self.state
                                     .metrics
                                     .requests_rejected
                                     .fetch_add(1, Ordering::Relaxed);
-                                back.reply.deliver(Response::rejected(back.req_id, why));
+                                back.reply
+                                    .deliver(Response::rejected(back.req_id, "server shutting down"));
+                            }
+                            Admission::Full(back) => {
+                                self.state
+                                    .metrics
+                                    .requests_rejected
+                                    .fetch_add(1, Ordering::Relaxed);
+                                back.reply.deliver(Response::rejected(
+                                    back.req_id,
+                                    "server overloaded: queue full",
+                                ));
+                            }
+                            Admission::Shed { req: back, retry_after_ms } => {
+                                if granted {
+                                    self.state.metrics.note_shed();
+                                    back.reply.deliver(Response::shed(
+                                        back.req_id,
+                                        retry_after_ms,
+                                        "queue delay exceeds feasibility bound",
+                                    ));
+                                } else {
+                                    self.state
+                                        .metrics
+                                        .requests_rejected
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    back.reply.deliver(Response::rejected(
+                                        back.req_id,
+                                        "server overloaded: request shed",
+                                    ));
+                                }
+                            }
+                            Admission::Expired(back) => {
+                                if granted {
+                                    self.state.metrics.note_deadline_exceeded();
+                                    back.reply.deliver(Response::deadline_exceeded(
+                                        back.req_id,
+                                        "deadline expired before admission",
+                                    ));
+                                } else {
+                                    self.state
+                                        .metrics
+                                        .requests_rejected
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    back.reply.deliver(Response::rejected(
+                                        back.req_id,
+                                        "deadline expired before admission",
+                                    ));
+                                }
                             }
                         }
                     }
@@ -976,6 +1069,7 @@ impl EventLoop {
             codec: (version >= protocol::VERSION).then(SessionCodec::f32),
             trace: false,
             migrate: false,
+            deadline: false,
             message,
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
@@ -1007,6 +1101,11 @@ impl EventLoop {
             self.reject(conn, hs.version, "server is draining; imports refused".to_string());
             return Ok(());
         }
+        // The peer reply's message doubles as a load report: the
+        // rebalancer's `fleet::probe_peer_load` dials this hello and
+        // parses `load=N` to pick the least-loaded volunteer target.
+        let load = self.state.shared.sessions.active_count()
+            + self.state.shared.sessions.total_in_flight();
         let reply = HandshakeReply {
             accepted: true,
             resumed: false,
@@ -1015,7 +1114,8 @@ impl EventLoop {
             codec: Some(SessionCodec::f32()),
             trace: false,
             migrate: true,
-            message: String::new(),
+            deadline: false,
+            message: format!("load={load}"),
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
         self.note_queued(conn);
@@ -1189,6 +1289,11 @@ impl EventLoop {
         // old client library downgrades the session to plain reconnect.
         let migrate_ok =
             protocol::migrate_granted(version, hs.wire_caps, self.state.shared.wire_caps);
+        // Deadline capability: v3 + both sides advertising CAP_DEADLINE.
+        // Like the other option bits this is connection-scoped — an old
+        // client library resuming the session downgrades it silently.
+        let deadline_ok =
+            protocol::deadline_granted(version, hs.wire_caps, self.state.shared.wire_caps);
         // The session's dtype: what try_open stored for a fresh session,
         // the admission-time value try_resume recalled for a RECONNECT.
         let session_wire = handle.wire;
@@ -1203,6 +1308,7 @@ impl EventLoop {
             }),
             trace: trace_ok,
             migrate: migrate_ok,
+            deadline: deadline_ok,
             message: String::new(),
         };
         conn.outbuf.extend(&protocol::encode_handshake_reply(&reply));
@@ -1245,6 +1351,7 @@ impl EventLoop {
             resumed,
             wire: session_wire,
             migrate: migrate_ok,
+            deadline: deadline_ok,
             outbox: handle.outbox,
             health: handle.health,
             plan,

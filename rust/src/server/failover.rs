@@ -29,12 +29,12 @@
 
 use super::model::{FrameScratch, MODEL_NAME, TOKEN_BYTES};
 use super::protocol::{
-    connect_client, export_payload, parse_migrate_hint, read_response, switch_payload,
-    write_frame, Handshake, MigrateHint, ReqKind, RespStatus, Response, Resume, MIGRATE_REQ_ID,
-    V2, VERSION,
+    connect_client, encode_deadline_prefix, export_payload, parse_migrate_hint, parse_shed_body,
+    read_response, switch_payload, write_frame, Handshake, MigrateHint, ReqKind, RespStatus,
+    Response, Resume, DEADLINE_PREFIX, MIGRATE_REQ_ID, V2, VERSION,
 };
 use crate::runtime::health::{HealthConfig, HealthMonitor, LinkState};
-use crate::runtime::wire::{SessionCodec, WireDtype, CAP_MIGRATE};
+use crate::runtime::wire::{SessionCodec, WireDtype, CAP_DEADLINE, CAP_MIGRATE};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
@@ -202,6 +202,12 @@ pub struct FailoverStats {
     pub backoff_exhaustions: u64,
     /// MIGRATE redirects followed to another fleet server.
     pub migrations_followed: u64,
+    /// Explicit SHED responses received (overload pushback with a
+    /// retry-after hint) — never double-counted as completions.
+    pub sheds_received: u64,
+    /// Explicit DEADLINE_EXCEEDED responses received — the server
+    /// refused or dropped the work because its budget ran out.
+    pub deadline_exceeded_received: u64,
     /// Inference-frame bytes moved over the link (and their
     /// f32-equivalents — the wire-compression accounting).
     pub bytes_tx: u64,
@@ -240,6 +246,8 @@ impl FailoverStats {
             ("reconnect_attempts", Json::from(self.reconnect_attempts)),
             ("backoff_exhaustions", Json::from(self.backoff_exhaustions)),
             ("migrations_followed", Json::from(self.migrations_followed)),
+            ("sheds_received", Json::from(self.sheds_received)),
+            ("deadline_exceeded_received", Json::from(self.deadline_exceeded_received)),
             ("bytes_tx", Json::from(self.bytes_tx)),
             ("bytes_rx", Json::from(self.bytes_rx)),
             ("f32_equiv_tx", Json::from(self.f32_equiv_tx)),
@@ -275,6 +283,15 @@ pub struct FailoverConfig {
     pub probe_every: u64,
     /// Requested activation wire dtype; the server may downgrade.
     pub wire: WireDtype,
+    /// End-to-end deadline budget per inference.  When set (and the
+    /// session negotiated `CAP_DEADLINE`) every remote attempt ships a
+    /// kind-7 frame carrying the budget *remaining* at send time —
+    /// retries and failovers run on the leftover, never a fresh budget.
+    /// `None` sends plain infer frames.
+    pub deadline: Option<Duration>,
+    /// Priority tier shipped with deadline frames (higher survives
+    /// deeper overload under graduated shedding).
+    pub priority: u8,
 }
 
 impl Default for FailoverConfig {
@@ -292,9 +309,25 @@ impl Default for FailoverConfig {
             read_timeout: Duration::from_secs(2),
             probe_every: 8,
             wire: WireDtype::F32,
+            deadline: None,
+            priority: 0,
         }
     }
 }
+
+/// Marker error: the request's deadline budget ran out mid-exchange.
+/// The link is fine — the work is just late — so [`FailoverClient::infer`]
+/// falls straight to the local fallback without failing the link.
+#[derive(Debug)]
+struct BudgetSpent;
+
+impl std::fmt::Display for BudgetSpent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "deadline budget spent")
+    }
+}
+
+impl std::error::Error for BudgetSpent {}
 
 /// How one inference was served.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -333,6 +366,10 @@ pub struct FailoverClient {
     /// opened via the v2 fallback must also RESUME at v2 (its server
     /// drops v3 handshakes replyless).
     session_version: u16,
+    /// The live session negotiated `CAP_DEADLINE`: kind-7 frames are
+    /// licensed.  Re-read from every handshake reply — an old server
+    /// silently downgrades to plain infer frames.
+    deadline_granted: bool,
     next_seq: u64,
     /// Highest sequence whose response this client has received — the
     /// `last_ack` a RECONNECT carries.
@@ -397,6 +434,7 @@ impl FailoverClient {
             session_pp,
             codec: SessionCodec::f32(),
             session_version: VERSION,
+            deadline_granted: false,
             next_seq: 1,
             last_delivered: 0,
             backoff,
@@ -464,6 +502,10 @@ impl FailoverClient {
         self.stats.requested += 1;
         let seq = self.next_seq;
         self.next_seq += 1;
+        // The deadline is absolute and set once per request: every
+        // retry and failover below runs on whatever budget is LEFT, not
+        // a fresh allotment.
+        let deadline = self.cfg.deadline.map(|d| Instant::now() + d);
         let allow_remote = match self.policy.decide(self.monitor.state()).mode {
             ServingMode::Local => self.local_streak % self.cfg.probe_every.max(1) == 0,
             _ => true,
@@ -471,7 +513,7 @@ impl FailoverClient {
         if allow_remote {
             let attempts = self.cfg.max_attempts.max(1);
             for attempt in 0..attempts {
-                match self.try_remote(seq, input, attempt == 0) {
+                match self.try_remote(seq, input, attempt == 0, deadline) {
                     Ok(body) => {
                         self.local_streak = 0;
                         self.last_delivered = self.last_delivered.max(seq);
@@ -483,9 +525,19 @@ impl FailoverClient {
                         }
                         return Ok((body, Served::Remote { pp }));
                     }
-                    Err(_) => {
+                    Err(e) => {
+                        if e.is::<BudgetSpent>() {
+                            // Deadline spent, link healthy: the explicit
+                            // refusal already arrived, so go straight to
+                            // the local fallback without failing the link.
+                            break;
+                        }
                         self.fail_link();
                         if self.policy.decide(self.monitor.state()).mode == ServingMode::Local {
+                            break;
+                        }
+                        if deadline.map_or(false, |d| d <= Instant::now()) {
+                            // No budget left for another remote attempt.
                             break;
                         }
                         if attempt + 1 < attempts {
@@ -615,7 +667,7 @@ impl FailoverClient {
                     &self.cfg.model,
                     self.session_pp,
                     &self.cfg.client_id,
-                    self.cfg.wire.caps() | CAP_MIGRATE,
+                    self.cfg.wire.caps() | CAP_MIGRATE | CAP_DEADLINE,
                 )
             }
             .with_resume(Resume { session_id: sid, token, last_ack: self.last_delivered });
@@ -623,6 +675,7 @@ impl FailoverClient {
                 connect_client(&self.cfg.addr, &hello, self.read_timeout_opt())?;
             if reply.accepted {
                 self.codec = codec;
+                self.deadline_granted = reply.deadline;
                 self.conn = Some(Conn { stream });
                 self.note_connected(true);
                 return Ok(());
@@ -636,7 +689,7 @@ impl FailoverClient {
             &self.cfg.model,
             choice.pp,
             &self.cfg.client_id,
-            self.cfg.wire.caps() | CAP_MIGRATE,
+            self.cfg.wire.caps() | CAP_MIGRATE | CAP_DEADLINE,
         );
         let (stream, reply, codec) =
             connect_client(&self.cfg.addr, &hello, self.read_timeout_opt())?;
@@ -645,6 +698,7 @@ impl FailoverClient {
             bail!("handshake rejected: {}", reply.message);
         }
         self.codec = codec;
+        self.deadline_granted = reply.deadline;
         // `codec: None` in the reply means the session fell back to v2.
         self.session_version = if reply.codec.is_some() { VERSION } else { V2 };
         self.session = Some((reply.session_id, reply.token));
@@ -685,7 +739,41 @@ impl FailoverClient {
         Ok(())
     }
 
-    fn try_remote(&mut self, seq: u64, input: &[f32], first_attempt: bool) -> Result<Vec<u8>> {
+    /// Write the infer frame for `seq`: a kind-7 deadline frame carrying
+    /// the budget *remaining* right now when one is set and the session
+    /// negotiated `CAP_DEADLINE`, a plain kind-0 infer otherwise (the
+    /// silent downgrade against an old server).
+    fn write_infer_frame(&mut self, seq: u64, deadline: Option<Instant>) -> Result<()> {
+        let stream = &mut self.conn.as_mut().expect("connected").stream;
+        match deadline.filter(|_| self.deadline_granted) {
+            Some(dl) => {
+                let remaining_ms = dl
+                    .saturating_duration_since(Instant::now())
+                    .as_millis()
+                    .min(u32::MAX as u128) as u32;
+                let mut buf = Vec::with_capacity(DEADLINE_PREFIX + self.payload.len());
+                buf.extend_from_slice(&encode_deadline_prefix(remaining_ms, self.cfg.priority));
+                buf.extend_from_slice(&self.payload);
+                write_frame(stream, seq, ReqKind::DeadlineInfer, &buf)?;
+                self.stats.bytes_tx += (buf.len() + 13) as u64;
+                self.stats.f32_equiv_tx += (TOKEN_BYTES + DEADLINE_PREFIX + 13) as u64;
+            }
+            None => {
+                write_frame(stream, seq, ReqKind::Infer, &self.payload)?;
+                self.stats.bytes_tx += (self.payload.len() + 13) as u64;
+                self.stats.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
+            }
+        }
+        Ok(())
+    }
+
+    fn try_remote(
+        &mut self,
+        seq: u64,
+        input: &[f32],
+        first_attempt: bool,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<u8>> {
         self.ensure_connected()?;
         let choice = self.policy.decide(self.monitor.state());
         // Plan hot-swaps only at *fresh* sequence boundaries: a retried
@@ -711,15 +799,9 @@ impl FailoverClient {
         let codec = self.codec;
         self.scratch.prepare_codec_into(input, self.session_pp, codec, &mut self.payload);
         let t0 = Instant::now();
-        write_frame(
-            &mut self.conn.as_mut().expect("connected").stream,
-            seq,
-            ReqKind::Infer,
-            &self.payload,
-        )?;
-        self.stats.bytes_tx += (self.payload.len() + 13) as u64;
-        self.stats.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
+        self.write_infer_frame(seq, deadline)?;
         let mut reject_retries = 0u32;
+        let mut shed_retries = 0u32;
         let mut hint: Option<MigrateHint> = None;
         let outcome = loop {
             let resp = match await_response(
@@ -749,16 +831,48 @@ impl FailoverClient {
                         ));
                     }
                     std::thread::sleep(Duration::from_millis(2));
-                    if let Err(e) = write_frame(
-                        &mut self.conn.as_mut().expect("connected").stream,
-                        seq,
-                        ReqKind::Infer,
-                        &self.payload,
-                    ) {
+                    if deadline.map_or(false, |d| d <= Instant::now()) {
+                        break Err(anyhow::Error::new(BudgetSpent));
+                    }
+                    if let Err(e) = self.write_infer_frame(seq, deadline) {
                         break Err(e);
                     }
-                    self.stats.bytes_tx += (self.payload.len() + 13) as u64;
-                    self.stats.f32_equiv_tx += (TOKEN_BYTES + 13) as u64;
+                }
+                RespStatus::Shed => {
+                    // Overload pushback: wait out the hint (capped, and
+                    // never past the remaining budget), then re-send the
+                    // SAME sequence — the server did not retain the shed
+                    // response, so the seq re-admits as fresh and can
+                    // never double-count.
+                    self.stats.sheds_received += 1;
+                    shed_retries += 1;
+                    if shed_retries > 100 {
+                        break Err(anyhow::anyhow!("seq {seq} shed {shed_retries} times"));
+                    }
+                    let retry_after_ms = parse_shed_body(&resp.body).map(|(ms, _)| ms).unwrap_or(1);
+                    let mut wait =
+                        Duration::from_millis(retry_after_ms as u64).min(Duration::from_millis(250));
+                    if let Some(dl) = deadline {
+                        let remaining = dl.saturating_duration_since(Instant::now());
+                        if remaining.is_zero() {
+                            break Err(anyhow::Error::new(BudgetSpent));
+                        }
+                        wait = wait.min(remaining);
+                    }
+                    std::thread::sleep(wait);
+                    if deadline.map_or(false, |d| d <= Instant::now()) {
+                        break Err(anyhow::Error::new(BudgetSpent));
+                    }
+                    if let Err(e) = self.write_infer_frame(seq, deadline) {
+                        break Err(e);
+                    }
+                }
+                RespStatus::DeadlineExceeded => {
+                    // The budget died queued or pre-compute; nothing ran
+                    // and nothing was retained.  Let the caller fall back
+                    // locally — the link itself is healthy.
+                    self.stats.deadline_exceeded_received += 1;
+                    break Err(anyhow::Error::new(BudgetSpent));
                 }
                 RespStatus::Error => {
                     break Err(anyhow::anyhow!(
@@ -936,5 +1050,62 @@ mod tests {
         fc.finish();
         let metrics = server.shutdown();
         assert_eq!(metrics.get("plan_switches").unwrap().int().unwrap(), 1);
+    }
+
+    #[test]
+    fn deadline_budget_rides_kind7_and_completes() {
+        let server = Server::start(ServerConfig {
+            workers: 2,
+            pin_workers: false,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let mut fc = FailoverClient::new(FailoverConfig {
+            addr: server.addr().to_string(),
+            pp: 2,
+            client_id: "deadline-ok".into(),
+            deadline: Some(Duration::from_secs(5)),
+            priority: 1,
+            ..FailoverConfig::default()
+        });
+        let input = make_input(3);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert_eq!(body, expected_digest(&input));
+        assert_eq!(served, Served::Remote { pp: 2 });
+        assert_eq!(fc.stats().sheds_received, 0);
+        assert_eq!(fc.stats().deadline_exceeded_received, 0);
+        fc.finish();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 1);
+        assert_eq!(metrics.get("deadline_exceeded").unwrap().int().unwrap(), 0);
+    }
+
+    #[test]
+    fn spent_budget_gets_explicit_refusal_and_local_fallback() {
+        let server = Server::start(ServerConfig {
+            workers: 2,
+            pin_workers: false,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let mut fc = FailoverClient::new(FailoverConfig {
+            addr: server.addr().to_string(),
+            pp: 2,
+            client_id: "deadline-spent".into(),
+            deadline: Some(Duration::ZERO),
+            ..FailoverConfig::default()
+        });
+        let input = make_input(9);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert_eq!(body, expected_digest(&input), "local fallback still completes the frame");
+        assert_eq!(served, Served::Local);
+        assert_eq!(fc.stats().deadline_exceeded_received, 1);
+        assert_eq!(fc.stats().completed, 1, "the explicit refusal must not double-count");
+        assert_eq!(fc.stats().link_failures, 0, "a spent budget is not a link failure");
+        fc.finish();
+        let metrics = server.shutdown();
+        // The server refused at admission and never computed the frame.
+        assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 0);
+        assert_eq!(metrics.get("deadline_exceeded").unwrap().int().unwrap(), 1);
     }
 }

@@ -226,6 +226,29 @@ pub fn push_session(target: &str, img: &SessionImage, timeout: Duration) -> Resu
     Ok((id, token))
 }
 
+/// Probe a fleet peer's load: dial the reserved [`PEER_MODEL`] hello and
+/// parse the `load=N` report the peer embeds in its accept message
+/// (active sessions + requests in flight).  The rebalancer uses this to
+/// pick the least-loaded volunteer target.  A peer that accepts but
+/// reports no load (pre-overload-control build) counts as load 0 — the
+/// import path still guards correctness, this only steers placement.
+pub fn probe_peer_load(target: &str, timeout: Duration) -> Result<usize> {
+    let hello = Handshake::v3(PEER_MODEL, 1, "fleet-probe", CAP_MIGRATE);
+    let (mut stream, reply, _codec) = protocol::connect_client(target, &hello, Some(timeout))
+        .with_context(|| format!("probing fleet peer {target}"))?;
+    if !reply.accepted {
+        bail!("fleet peer {target} rejected the probe hello: {}", reply.message);
+    }
+    let _ = protocol::write_frame(&mut stream, 1, ReqKind::Bye, &[]);
+    let load = reply
+        .message
+        .split(|c: char| c.is_whitespace() || c == ',')
+        .find_map(|tok| tok.strip_prefix("load="))
+        .and_then(|n| n.parse::<usize>().ok())
+        .unwrap_or(0);
+    Ok(load)
+}
+
 // ---------------------------------------------------------------------
 // Drain signal latch
 // ---------------------------------------------------------------------

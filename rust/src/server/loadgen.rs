@@ -27,8 +27,8 @@ use super::failover::{availability_ratio, FailoverClient, FailoverConfig};
 use super::fleet::FleetPlacer;
 use super::model::{make_input_into, FrameScratch, MODEL_NAME, TOKEN_BYTES, TOKEN_FLOATS};
 use super::protocol::{
-    connect_client, encode_trace_prefix, read_response, write_frame, write_request, Handshake,
-    ReqKind, RespStatus, TRACE_PREFIX,
+    connect_client, encode_deadline_prefix, encode_trace_prefix, parse_shed_body, read_response,
+    write_frame, write_request, Handshake, ReqKind, RespStatus, DEADLINE_PREFIX, TRACE_PREFIX,
 };
 use crate::runtime::health::HealthConfig;
 use crate::runtime::metrics::{LatencyHistogram, WireCounters};
@@ -80,6 +80,14 @@ pub struct LoadgenConfig {
     /// wave pacing without a link profile, so chaos orchestration (kill
     /// a server, drain another) reliably lands mid-wave.  0 = none.
     pub think_ms: u64,
+    /// Per-request deadline budget (`--deadline-ms`): when non-zero the
+    /// handshake advertises `CAP_DEADLINE` and every request rides a
+    /// deadline-infer frame carrying this budget; the server answers
+    /// `DEADLINE_EXCEEDED` instead of computing stale work.  0 = none.
+    pub deadline_ms: u64,
+    /// Priority class carried in the deadline prefix (`--priority`):
+    /// under overload the server sheds lower classes first.
+    pub priority: u8,
 }
 
 impl LoadgenConfig {
@@ -107,6 +115,8 @@ impl Default for LoadgenConfig {
             trace_sample: 1,
             fleet: Vec::new(),
             think_ms: 0,
+            deadline_ms: 0,
+            priority: 0,
         }
     }
 }
@@ -118,6 +128,11 @@ struct Tally {
     ok: u64,
     rejected: u64,
     errors: u64,
+    /// Requests the server explicitly refused under overload (strict
+    /// client; the resilient client absorbs sheds by retrying).
+    shed: u64,
+    /// Requests the server explicitly expired instead of computing.
+    deadline_exceeded: u64,
     served_local: u64,
     reconnects: u64,
     resumed: u64,
@@ -149,6 +164,11 @@ pub struct LoadReport {
     pub ok: u64,
     pub rejected: u64,
     pub errors: u64,
+    /// Explicit SHED refusals received (overload; strict client only —
+    /// the resilient client retries sheds after the retry-after hint).
+    pub shed: u64,
+    /// Explicit DEADLINE_EXCEEDED refusals received.
+    pub deadline_exceeded: u64,
     /// Completed via the local-only fallback plan (resilient mode).
     pub served_local: u64,
     pub reconnects: u64,
@@ -171,9 +191,12 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
-    /// Requests that were sent but never got an explicit outcome.
+    /// Requests that were sent but never got an explicit outcome.  A
+    /// shed or deadline-exceeded refusal IS an explicit outcome — the
+    /// overload acceptance gate is "nothing vanished", not "nothing was
+    /// refused".
     pub fn lost(&self) -> u64 {
-        self.sent - self.ok - self.rejected - self.errors
+        self.sent - self.ok - self.rejected - self.errors - self.shed - self.deadline_exceeded
     }
 
     pub fn requests_per_sec(&self) -> f64 {
@@ -203,6 +226,8 @@ impl LoadReport {
             ("ok", Json::from(self.ok)),
             ("rejected", Json::from(self.rejected)),
             ("errors", Json::from(self.errors)),
+            ("shed", Json::from(self.shed)),
+            ("deadline_exceeded", Json::from(self.deadline_exceeded)),
             ("lost", Json::from(self.lost())),
             ("served_local", Json::from(self.served_local)),
             ("reconnects", Json::from(self.reconnects)),
@@ -237,6 +262,12 @@ impl LoadReport {
             self.latency.quantile_ms(0.95),
             self.latency.quantile_ms(0.99),
         );
+        if self.shed > 0 || self.deadline_exceeded > 0 {
+            line.push_str(&format!(
+                "; {} shed, {} deadline-exceeded",
+                self.shed, self.deadline_exceeded
+            ));
+        }
         if self.served_local > 0 || self.reconnects > 0 {
             line.push_str(&format!(
                 "; {} served-local, {} reconnects ({} resumed), link availability {:.1}%",
@@ -284,8 +315,13 @@ impl LoadReport {
 /// *requested* dtype — the server's reply decides.
 fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) -> Result<Tally> {
     let mut tally = Tally::default();
-    let caps =
-        if cfg.trace { cfg.wire.caps() | wire::CAP_TRACE } else { cfg.wire.caps() };
+    let mut caps = cfg.wire.caps();
+    if cfg.trace {
+        caps |= wire::CAP_TRACE;
+    }
+    if cfg.deadline_ms > 0 {
+        caps |= wire::CAP_DEADLINE;
+    }
     let hello = Handshake::v3(&cfg.model, cfg.pp, &format!("loadgen-{index}"), caps);
     let (mut stream, reply, codec) = connect_client(&cfg.addr, &hello, None)
         .with_context(|| format!("client {index} connecting to {}", cfg.addr))?;
@@ -299,6 +335,10 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
     if tracing {
         trace::warm_recorder();
     }
+    // Deadlines ride only where the server granted CAP_DEADLINE; a
+    // pre-deadline server silently downgrades to plain infer frames.
+    let deadlined = cfg.deadline_ms > 0 && reply.deadline;
+    let budget_ms = cfg.deadline_ms.min(u32::MAX as u64) as u32;
     let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
     // Per-session reusable frame buffers: the request loop re-derives
     // every frame without allocating (zero-copy sweep).
@@ -338,6 +378,11 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
                 framed.extend_from_slice(&encode_trace_prefix(trace_id, root.id()));
                 framed.extend_from_slice(&payload);
                 write_frame(&mut stream, r + 1, ReqKind::TracedInfer, &framed).is_ok()
+            } else if deadlined {
+                framed.clear();
+                framed.extend_from_slice(&encode_deadline_prefix(budget_ms, cfg.priority));
+                framed.extend_from_slice(&payload);
+                write_frame(&mut stream, r + 1, ReqKind::DeadlineInfer, &framed).is_ok()
             } else {
                 write_request(&mut stream, r + 1, &payload).is_ok()
             }
@@ -346,7 +391,13 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
             break; // connection gone before the request left
         }
         tally.sent += 1;
-        let prefix = if traced { TRACE_PREFIX } else { 0 };
+        let prefix = if traced {
+            TRACE_PREFIX
+        } else if deadlined {
+            DEADLINE_PREFIX
+        } else {
+            0
+        };
         tally.traced += traced as u64;
         tally.bytes_tx += (payload.len() + prefix + 13) as u64;
         tally.f32_equiv_tx += (TOKEN_BYTES + prefix + 13) as u64;
@@ -378,6 +429,17 @@ fn client_main(cfg: &LoadgenConfig, index: usize, latency: &LatencyHistogram) ->
                     RespStatus::Ok => tally.errors += 1, // wrong bytes
                     RespStatus::Rejected => tally.rejected += 1,
                     RespStatus::Error => tally.errors += 1,
+                    // Both overload refusals are explicit outcomes (the
+                    // strict client never retries); honoring a bounded
+                    // slice of the retry-after hint keeps a shed wave
+                    // from instantly re-offering the same pressure.
+                    RespStatus::Shed => {
+                        tally.shed += 1;
+                        let retry_ms =
+                            parse_shed_body(&resp.body).map(|(ms, _)| ms).unwrap_or(1);
+                        std::thread::sleep(Duration::from_millis(u64::from(retry_ms).min(50)));
+                    }
+                    RespStatus::DeadlineExceeded => tally.deadline_exceeded += 1,
                 }
             }
             Ok(None) | Err(_) => break, // this request is lost
@@ -416,6 +478,8 @@ fn resilient_client_main(
         pp: cfg.pp,
         client_id: client_id.clone(),
         wire: cfg.wire,
+        deadline: (cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms)),
+        priority: cfg.priority,
         ..FailoverConfig::default()
     });
     let shaper = cfg.link.as_ref().map(|l| LinkShaper::new(l.clone()));
@@ -566,6 +630,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         ok: 0,
         rejected: 0,
         errors: 0,
+        shed: 0,
+        deadline_exceeded: 0,
         served_local: 0,
         reconnects: 0,
         sessions_resumed: 0,
@@ -590,6 +656,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 report.ok += tally.ok;
                 report.rejected += tally.rejected;
                 report.errors += tally.errors;
+                report.shed += tally.shed;
+                report.deadline_exceeded += tally.deadline_exceeded;
                 report.served_local += tally.served_local;
                 report.reconnects += tally.reconnects;
                 report.sessions_resumed += tally.resumed;
@@ -611,6 +679,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
                     ("ok", Json::from(tally.ok)),
                     ("rejected", Json::from(tally.rejected)),
                     ("errors", Json::from(tally.errors)),
+                    ("shed", Json::from(tally.shed)),
+                    ("deadline_exceeded", Json::from(tally.deadline_exceeded)),
                     ("traced", Json::from(tally.traced)),
                     ("replays", Json::from(tally.replays)),
                     ("migrations", Json::from(tally.migrations)),
@@ -787,6 +857,8 @@ mod tests {
             ok: 7,
             rejected: 2,
             errors: 0,
+            shed: 0,
+            deadline_exceeded: 0,
             served_local: 2,
             reconnects: 1,
             sessions_resumed: 1,
@@ -814,6 +886,18 @@ mod tests {
         let j = r.to_json();
         let saved = j.get("wire").unwrap().get("sparse_bytes_saved").unwrap().int();
         assert_eq!(saved, Some(635));
+        // Overload refusals are explicit outcomes, never "lost".
+        let mut r = r;
+        r.shed = 1;
+        assert_eq!(r.lost(), 0);
+        r.sent += 1;
+        r.deadline_exceeded = 1;
+        assert_eq!(r.lost(), 0);
+        assert!(r.summary().contains("1 shed, 1 deadline-exceeded"), "{}", r.summary());
+        let j = r.to_json();
+        assert_eq!(j.get("shed").unwrap().int(), Some(1));
+        assert_eq!(j.get("deadline_exceeded").unwrap().int(), Some(1));
+        assert_eq!(j.get("lost").unwrap().int(), Some(0));
     }
 
     #[test]

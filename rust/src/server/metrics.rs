@@ -68,6 +68,20 @@ pub struct ServingMetrics {
     /// Imported sessions claimed by their client's RECONNECT — each one
     /// is a fleet placement that actually moved.
     pub placement_rebalances: AtomicU64,
+    // Overload control plane (deadlines + shedding + rebalancing).
+    /// Requests refused by the overload controller with an explicit
+    /// SHED response (retry-after hint attached).
+    pub requests_shed: AtomicU64,
+    /// Requests dropped before compute because their deadline budget
+    /// expired (at admission, in the dispatcher, or at the worker).
+    pub deadline_exceeded: AtomicU64,
+    /// Sessions this server volunteered to a cooler fleet peer because
+    /// a shard stayed hot past the rebalance dwell.
+    pub sessions_rebalanced: AtomicU64,
+    /// Queue-wait EWMA of this shard's batch queue, µs (a gauge — the
+    /// dispatcher refreshes it each loop; merged across shards by max,
+    /// since the hottest shard is what overload decisions key on).
+    pub queue_delay_ewma_us: AtomicU64,
     /// Data-plane link bytes and the f32-equivalent totals behind the
     /// wire-compression-ratio gauge.  Counts every post-handshake frame
     /// (infer, ping, switch, bye + all responses); client-side reports
@@ -138,6 +152,23 @@ impl ServingMetrics {
         worker.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn note_shed(&self) {
+        self.requests_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Refresh the queue-delay gauge (milliseconds in, stored as µs).
+    pub fn note_queue_delay_ewma(&self, ewma_ms: f64) {
+        self.queue_delay_ewma_us.store((ewma_ms * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    pub fn queue_delay_ewma_ms(&self) -> f64 {
+        self.queue_delay_ewma_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
     /// Fold another `ServingMetrics` (one shard's) into this one.  Used
     /// only at scrape time by the thread-per-core server: each shard owns
     /// a private instance, and a scrape builds a fresh merged view, so the
@@ -164,12 +195,19 @@ impl ServingMetrics {
             (&self.sessions_migrated_out, &other.sessions_migrated_out),
             (&self.drain_duration_ms, &other.drain_duration_ms),
             (&self.placement_rebalances, &other.placement_rebalances),
+            (&self.requests_shed, &other.requests_shed),
+            (&self.deadline_exceeded, &other.deadline_exceeded),
+            (&self.sessions_rebalanced, &other.sessions_rebalanced),
         ];
         for (dst, src) in pairs {
             dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
         }
         self.queue_high_water
             .fetch_max(other.queue_high_water.load(Ordering::Relaxed), Ordering::Relaxed);
+        // The delay gauge keys overload decisions on the hottest shard,
+        // so a merged view takes the max, not the sum.
+        self.queue_delay_ewma_us
+            .fetch_max(other.queue_delay_ewma_us.load(Ordering::Relaxed), Ordering::Relaxed);
         self.wire.merge_from(&other.wire);
         // Appending the Arc shards keeps the merged view live and lossless
         // (requests_completed / request_errors sum over all of them).
@@ -250,6 +288,13 @@ impl ServingMetrics {
                 "placement_rebalances",
                 Json::from(self.placement_rebalances.load(Ordering::Relaxed)),
             ),
+            ("requests_shed", Json::from(self.requests_shed.load(Ordering::Relaxed))),
+            ("deadline_exceeded", Json::from(self.deadline_exceeded.load(Ordering::Relaxed))),
+            (
+                "sessions_rebalanced",
+                Json::from(self.sessions_rebalanced.load(Ordering::Relaxed)),
+            ),
+            ("queue_delay_ewma_ms", Json::from(self.queue_delay_ewma_ms())),
             ("wire", self.wire.to_json()),
             ("queue_high_water", Json::from(self.queue_high_water.load(Ordering::Relaxed))),
             ("batch_occupancy", Json::from(self.batch_occupancy())),
@@ -377,6 +422,27 @@ mod tests {
         assert_eq!(j.get("sessions_migrated_in").unwrap().int().unwrap(), 2);
         assert_eq!(j.get("drain_duration_ms").unwrap().int().unwrap(), 120);
         assert_eq!(j.get("placement_rebalances").unwrap().int().unwrap(), 2);
+    }
+
+    #[test]
+    fn overload_counters_merge_and_delay_gauge_takes_max() {
+        let a = ServingMetrics::new();
+        let b = ServingMetrics::new();
+        a.note_shed();
+        a.note_shed();
+        a.note_deadline_exceeded();
+        a.note_queue_delay_ewma(4.5);
+        b.sessions_rebalanced.fetch_add(1, Ordering::Relaxed);
+        b.note_queue_delay_ewma(12.25);
+        let merged = ServingMetrics::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        let j = merged.to_json();
+        assert_eq!(j.get("requests_shed").unwrap().int().unwrap(), 2);
+        assert_eq!(j.get("deadline_exceeded").unwrap().int().unwrap(), 1);
+        assert_eq!(j.get("sessions_rebalanced").unwrap().int().unwrap(), 1);
+        // The gauge is the hottest shard's view, not a sum.
+        assert!((merged.queue_delay_ewma_ms() - 12.25).abs() < 1e-9);
     }
 
     #[test]

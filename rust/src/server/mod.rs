@@ -77,10 +77,10 @@ use crate::compiler::PlanCache;
 use crate::platform::affinity;
 use crate::runtime::reactor::WakeHandle;
 use crate::runtime::trace;
-use crate::runtime::wire::{Precision, CAP_F16, CAP_I8, CAP_MIGRATE, CAP_SPARSE_I8};
+use crate::runtime::wire::{Precision, CAP_DEADLINE, CAP_F16, CAP_I8, CAP_MIGRATE, CAP_SPARSE_I8};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use batch::BatchQueue;
+use batch::{BatchQueue, ShedConfig};
 use conn::{EventLoop, EventLoopCfg, ShardMailbox, ShardMsg};
 use metrics::ServingMetrics;
 use model::ServerModelPlan;
@@ -161,6 +161,28 @@ pub struct ServerConfig {
     /// trace spans — then closes.  `None` (the default) spawns nothing,
     /// keeping the fixed thread inventory of a plain server.
     pub metrics_addr: Option<String>,
+    /// Overload shedding (`--shed-delay-ms`): per-shard queue-wait EWMA
+    /// above which low-priority and deadline-infeasible requests get an
+    /// explicit SHED response with a retry-after hint.  `0.0` (the
+    /// default) disables shedding — the queue only refuses when full.
+    pub shed_delay_ms: f64,
+    /// Smoothing factor of the queue-wait EWMA (`--shed-ewma-alpha`).
+    pub shed_ewma_alpha: f64,
+    /// Fleet peers a hot shard may volunteer sessions to
+    /// (`--rebalance-peers`, comma-separated `host:port`).  Empty
+    /// disables health-driven rebalancing.
+    pub rebalance_peers: Vec<String>,
+    /// How long the hottest shard's queue-wait EWMA must stay above
+    /// `rebalance_delay_ms` before a session is volunteered
+    /// (`--rebalance-hot-ms`).  Zero disables rebalancing.
+    pub rebalance_hot: Duration,
+    /// Queue-wait EWMA (ms) that counts as "hot" for the rebalancer
+    /// (`--rebalance-delay-ms`).  Defaults to `shed_delay_ms` when 0.
+    pub rebalance_delay_ms: f64,
+    /// Minimum spacing between volunteered sessions
+    /// (`--rebalance-cooldown-ms`) — one session at a time, then let
+    /// the EWMA react before moving another.
+    pub rebalance_cooldown: Duration,
 }
 
 impl Default for ServerConfig {
@@ -179,11 +201,17 @@ impl Default for ServerConfig {
             detach_linger: Duration::from_secs(30),
             replay_ring: 64,
             write_high_water: 1 << 20,
-            wire_caps: CAP_SPARSE_I8 | CAP_I8 | CAP_F16 | CAP_MIGRATE,
+            wire_caps: CAP_SPARSE_I8 | CAP_I8 | CAP_F16 | CAP_MIGRATE | CAP_DEADLINE,
             precision: Precision::F32,
             trace: false,
             trace_sample: 1,
             metrics_addr: None,
+            shed_delay_ms: 0.0,
+            shed_ewma_alpha: 0.2,
+            rebalance_peers: Vec::new(),
+            rebalance_hot: Duration::ZERO,
+            rebalance_delay_ms: 0.0,
+            rebalance_cooldown: Duration::from_secs(5),
         }
     }
 }
@@ -260,6 +288,9 @@ pub struct Server {
     workers_per_shard: usize,
     /// Bound scrape endpoint + its thread (only with `metrics_addr`).
     metrics_endpoint: Option<(SocketAddr, JoinHandle<()>)>,
+    /// Health-driven rebalancer thread (only with `rebalance_hot` > 0
+    /// and a non-empty peer list).
+    rebalancer: Option<JoinHandle<()>>,
 }
 
 /// Socket read deadline for completing a handshake (reactor timer; an
@@ -358,7 +389,10 @@ impl Server {
             let shard = Arc::new(ShardState {
                 index,
                 shared: state.clone(),
-                queue: BatchQueue::new(cfg.max_queue),
+                queue: BatchQueue::with_shed(
+                    cfg.max_queue,
+                    ShedConfig { delay_ms: cfg.shed_delay_ms, alpha: cfg.shed_ewma_alpha },
+                ),
                 plans: PlanCache::new(),
                 metrics: Arc::new(ServingMetrics::new()),
             });
@@ -430,7 +464,46 @@ impl Server {
             }
         };
 
-        Ok(Server { addr, state, shards, acceptor, workers_per_shard, metrics_endpoint })
+        // Health-driven rebalancer: strictly opt-in (a dwell AND at
+        // least one peer).  Control plane only — it polls the shard
+        // queue EWMAs and the session directory, never the hot path.
+        let rebalancer = if !cfg.rebalance_hot.is_zero() && !cfg.rebalance_peers.is_empty() {
+            let rstate = state.clone();
+            let rshards: Vec<Arc<ShardState>> =
+                shards.iter().map(|sh| sh.state.clone()).collect();
+            let peers = cfg.rebalance_peers.clone();
+            let hot = cfg.rebalance_hot;
+            let delay = if cfg.rebalance_delay_ms > 0.0 {
+                cfg.rebalance_delay_ms
+            } else {
+                cfg.shed_delay_ms
+            };
+            let cooldown = cfg.rebalance_cooldown;
+            let spawned = std::thread::Builder::new()
+                .name("serve-rebalance".into())
+                .spawn(move || rebalancer_main(rstate, rshards, peers, hot, delay, cooldown))
+                .context("spawning rebalancer");
+            match spawned {
+                Ok(h) => Some(h),
+                Err(e) => {
+                    unwind_started(&state, addr, &mut shards, &mut acceptor);
+                    return Err(e);
+                }
+            }
+        } else {
+            None
+        };
+
+        Ok(Server { addr, state, shards, acceptor, workers_per_shard, metrics_endpoint, rebalancer })
+    }
+
+    /// Volunteer one session to `target`: the rebalancer's move, exposed
+    /// directly so tests and operators can trigger a deterministic
+    /// handoff without waiting out a dwell.  Returns the exported
+    /// session's (old) id.
+    pub fn volunteer_once(&self, target: &str) -> Result<u64, String> {
+        let shard = self.shards.first().ok_or_else(|| "no shards".to_string())?;
+        volunteer_session(&self.state, &shard.state.metrics, target)
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -463,6 +536,7 @@ impl Server {
         self.shards.len() * (2 + self.workers_per_shard)
             + usize::from(self.acceptor.is_some())
             + usize::from(self.metrics_endpoint.is_some())
+            + usize::from(self.rebalancer.is_some())
     }
 
     /// Per-shard `(sessions_admitted, requests_completed)` — how evenly
@@ -626,6 +700,9 @@ impl Server {
         if let Some((_, h)) = self.metrics_endpoint.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.rebalancer.take() {
+            let _ = h.join();
+        }
         for sh in &mut self.shards {
             if let Some(h) = sh.reactor_handle.take() {
                 let _ = h.join();
@@ -724,6 +801,28 @@ fn spawn_shard(
             .name(format!("serve-dispatch-{s}"))
             .spawn(move || {
                 while let Some(mut batch) = shard.queue.pop_batch(max_batch, linger) {
+                    // The pop just fed the queue-wait EWMA; publish it so
+                    // scrapes (and the rebalancer's hot check) see the
+                    // hottest shard's view without touching the queue.
+                    shard.metrics.note_queue_delay_ewma(shard.queue.queue_delay_ewma_ms());
+                    // Deadline budgets spent while queued are answered
+                    // here instead of burning a worker slot on a result
+                    // the client has already abandoned.
+                    let now = std::time::Instant::now();
+                    batch.retain(|req| {
+                        if req.expired(now) {
+                            shard.metrics.note_deadline_exceeded();
+                            req.reply.deliver(protocol::Response::deadline_exceeded(
+                                req.req_id,
+                                "deadline expired in queue",
+                            ));
+                            return false;
+                        }
+                        true
+                    });
+                    if batch.is_empty() {
+                        continue;
+                    }
                     shard.metrics.note_batch(batch.len());
                     // Stamp the dispatch edge on traced requests:
                     // recv..dispatch is the batch-linger span,
@@ -839,6 +938,131 @@ fn acceptor_main(listener: TcpListener, state: Arc<ServerState>, cores: usize) {
             }
         }
     }
+}
+
+/// The health-driven rebalancer: watch the hottest shard's queue-wait
+/// EWMA, and once it stays above the hot bound for the full dwell,
+/// volunteer the most expensive idle session to the least-loaded fleet
+/// peer — one session per cooldown, so the EWMA can react between
+/// moves.  With `hot_delay_ms` at 0 any measured queue wait counts as
+/// hot (the "move work off me as soon as anything queues" posture the
+/// in-process tests use).
+fn rebalancer_main(
+    state: Arc<ServerState>,
+    shards: Vec<Arc<ShardState>>,
+    peers: Vec<String>,
+    hot_dwell: Duration,
+    hot_delay_ms: f64,
+    cooldown: Duration,
+) {
+    let poll = (hot_dwell / 4).clamp(Duration::from_millis(10), Duration::from_millis(100));
+    let mut hot_since: Option<std::time::Instant> = None;
+    let mut last_move: Option<std::time::Instant> = None;
+    while !state.shutting_down.load(Ordering::SeqCst) {
+        std::thread::sleep(poll);
+        if state.shutting_down.load(Ordering::SeqCst) {
+            return;
+        }
+        let hottest = shards.iter().map(|s| s.queue.queue_delay_ewma_ms()).fold(0.0f64, f64::max);
+        if hottest <= hot_delay_ms {
+            hot_since = None;
+            continue;
+        }
+        let now = std::time::Instant::now();
+        let since = *hot_since.get_or_insert(now);
+        if now.duration_since(since) < hot_dwell {
+            continue;
+        }
+        if last_move.map_or(false, |t| now.duration_since(t) < cooldown) {
+            continue;
+        }
+        // Least-loaded peer by live probe; unreachable peers drop out of
+        // this round instead of failing it.
+        let mut best: Option<(usize, &str)> = None;
+        for peer in &peers {
+            match fleet::probe_peer_load(peer, fleet::EXPORT_TIMEOUT) {
+                Ok(load) if best.map_or(true, |(b, _)| load < b) => {
+                    best = Some((load, peer.as_str()))
+                }
+                _ => {}
+            }
+        }
+        let Some((peer_load, target)) = best else {
+            // A dead fleet backs off like a failed move.
+            last_move = Some(now);
+            continue;
+        };
+        // Volunteering to a peer as loaded as us just sloshes sessions
+        // back and forth across the fleet.
+        let local_load = state.sessions.active_count() + state.sessions.total_in_flight();
+        if peer_load + 1 >= local_load {
+            hot_since = None;
+            continue;
+        }
+        match volunteer_session(&state, &shards[0].metrics, target) {
+            Ok(id) => {
+                eprintln!(
+                    "[serve] rebalance: session {id} volunteered to {target} \
+                     (peer load {peer_load}, local {local_load})"
+                );
+                hot_since = None;
+            }
+            Err(why) => eprintln!("[serve] rebalance skipped: {why}"),
+        }
+        last_move = Some(std::time::Instant::now());
+    }
+}
+
+/// Hand the most expensive idle migrate-capable session to `target`:
+/// export its image, push it to the peer, send the attached client an
+/// unsolicited MIGRATE hint carrying the peer-minted credentials, and
+/// free the local slot.  All-or-nothing per session — any failure
+/// leaves it exactly where it was.  Ranking by completed work moves the
+/// most load per migration; in-flight sessions are skipped (the
+/// exporter refuses them anyway) and a later sweep retries.
+fn volunteer_session(
+    state: &ServerState,
+    metrics: &ServingMetrics,
+    target: &str,
+) -> Result<u64, String> {
+    let mut rows: Vec<_> = state
+        .sessions
+        .drain_rows()
+        .into_iter()
+        .filter(|(_, outbox, migrate, _)| *migrate && outbox.in_flight_depth() == 0)
+        .map(|(id, outbox, _, attached)| {
+            let done = outbox.stats().completed.load(Ordering::Relaxed);
+            (id, outbox, attached, done)
+        })
+        .collect();
+    rows.sort_by(|a, b| b.3.cmp(&a.3));
+    let Some((id, outbox, attached, _)) = rows.into_iter().next() else {
+        return Err("no idle migrate-capable session to volunteer".to_string());
+    };
+    let image = state.sessions.export_session(id, state.precision)?;
+    let (new_id, new_token) = fleet::push_session(target, &image, fleet::EXPORT_TIMEOUT)
+        .map_err(|e| format!("push to {target}: {e:#}"))?;
+    let hint = protocol::MigrateHint {
+        addr: target.to_string(),
+        session_id: new_id,
+        token: new_token,
+    };
+    if let Ok(body) = protocol::migrate_hint_payload(&hint) {
+        outbox.send_ephemeral(protocol::Response::ok(protocol::MIGRATE_REQ_ID, body));
+    }
+    state.sessions.close(id);
+    metrics.sessions_rebalanced.fetch_add(1, Ordering::Relaxed);
+    // Retire the stale attachment so the redirected client sees a
+    // prompt EOF; let the hint completion settle first (same ordering
+    // dance as `drain_to`).
+    if let Some((shard, conn)) = attached {
+        std::thread::sleep(Duration::from_millis(10));
+        if let Some(mb) = state.shard_mailbox(shard) {
+            mb.push(ShardMsg::Retire { conn });
+        }
+    }
+    eprintln!("[serve] session {id} rebalanced to {target} (as {new_id})");
+    Ok(id)
 }
 
 /// The scrape thread: answer every connect with one JSON snapshot and

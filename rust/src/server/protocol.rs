@@ -44,11 +44,20 @@
 //!             (handshake model [`PEER_MODEL`]); payload is a serialized
 //!             session image ([`encode_session_image`]) — the receiver
 //!             installs it and answers ok with [u64 id][u64 token]
+//!         7 = deadline infer: payload is [u32 budget_ms][u8 priority]
+//!             followed by the activation bytes — the client's remaining
+//!             end-to-end budget and shed priority (higher survives
+//!             longer under overload); only sent on sessions whose
+//!             handshake negotiated `CAP_DEADLINE`
 //!   infer payloads are wire-coded activations (`runtime::wire`) at the
 //!   session's negotiated dtype; v2 sessions always carry raw f32.
 //! response   (server -> client):
-//!   [u64 seq][u8 status (0 = ok, 1 = rejected, 2 = error)]
+//!   [u64 seq][u8 status (0 = ok, 1 = rejected, 2 = error,
+//!                        3 = shed, 4 = deadline exceeded)]
 //!   [u32 len][body]
+//!   a shed body is [u32 retry_after_ms] + reason bytes; statuses 3/4
+//!   are only sent on sessions that negotiated `CAP_DEADLINE` (other
+//!   sessions see overload as plain `rejected`)
 //! ```
 //!
 //! A `rejected` response is the admission controller speaking (queue
@@ -95,6 +104,9 @@ const FLAG_RESUME: u8 = 1;
 /// Bytes of span context ahead of a traced-infer payload:
 /// `[u64 trace_id][u32 parent_span]`.
 pub const TRACE_PREFIX: usize = 12;
+/// Bytes of deadline context ahead of a deadline-infer payload:
+/// `[u32 budget_ms][u8 priority]`.
+pub const DEADLINE_PREFIX: usize = 5;
 /// High bit of the v3 reply's wire-dtype byte: the server accepted the
 /// client's `CAP_TRACE` and will honor traced-infer frames.  The dtype
 /// itself only ever uses the low bits.
@@ -105,6 +117,12 @@ const REPLY_TRACE_BIT: u8 = 0x80;
 /// this session.  Masked off before the dtype byte is interpreted, so
 /// old clients that never set the capability never see it.
 const REPLY_MIGRATE_BIT: u8 = 0x40;
+/// Third spare bit of the v3 reply's wire-dtype byte: the server
+/// accepted the client's `CAP_DEADLINE` — deadline-infer frames are
+/// honored on this session and overload may be answered with the
+/// explicit `shed` / `deadline exceeded` statuses.  Like the trace and
+/// migrate bits it is masked off before the dtype is interpreted.
+const REPLY_DEADLINE_BIT: u8 = 0x20;
 /// `req_id` of a MIGRATE redirect hint.  Real sequence numbers start at
 /// 1, and a pre-migrate client's replay dedupe (`req_id < awaited seq`)
 /// silently skips id 0 — exactly the downgrade-to-plain-reconnect
@@ -194,6 +212,10 @@ pub struct HandshakeReply {
     /// exported to a fleet peer and the client may receive a MIGRATE
     /// redirect hint.  Always `false` on v2.
     pub migrate: bool,
+    /// Server accepted the client's `CAP_DEADLINE`: deadline-infer
+    /// frames are honored and overload is answered with the explicit
+    /// `shed` / `deadline exceeded` statuses.  Always `false` on v2.
+    pub deadline: bool,
     pub message: String,
 }
 
@@ -231,6 +253,14 @@ pub enum ReqKind {
     /// The receiver installs it through its `SessionManager` and
     /// answers `ok` with `[u64 new_session_id][u64 new_token]`.
     Import,
+    /// One inference request carrying overload-control context: payload
+    /// is `[u32 budget_ms][u8 priority]` + the token.  `budget_ms` is
+    /// the client's *remaining* end-to-end budget at send time (the
+    /// server drops the work with `deadline exceeded` if it cannot start
+    /// compute inside it); `priority` orders shedding under overload
+    /// (lowest priority sheds first).  Only valid on sessions that
+    /// negotiated `CAP_DEADLINE`.
+    DeadlineInfer,
 }
 
 impl ReqKind {
@@ -243,6 +273,7 @@ impl ReqKind {
             ReqKind::TracedInfer => 4,
             ReqKind::Export => 5,
             ReqKind::Import => 6,
+            ReqKind::DeadlineInfer => 7,
         }
     }
 
@@ -255,6 +286,7 @@ impl ReqKind {
             4 => Ok(ReqKind::TracedInfer),
             5 => Ok(ReqKind::Export),
             6 => Ok(ReqKind::Import),
+            7 => Ok(ReqKind::DeadlineInfer),
             v => bail!("bad frame kind byte {v}"),
         }
     }
@@ -280,6 +312,25 @@ pub fn split_trace_prefix(payload: &[u8]) -> Result<(u64, u32, &[u8])> {
     Ok((trace_id, parent, &payload[TRACE_PREFIX..]))
 }
 
+/// Serialize deadline-infer context (prepended to the activation
+/// payload of a [`ReqKind::DeadlineInfer`] frame).
+pub fn encode_deadline_prefix(budget_ms: u32, priority: u8) -> [u8; DEADLINE_PREFIX] {
+    let mut buf = [0u8; DEADLINE_PREFIX];
+    buf[..4].copy_from_slice(&budget_ms.to_le_bytes());
+    buf[4] = priority;
+    buf
+}
+
+/// Split a deadline-infer payload into `(budget_ms, priority,
+/// activation bytes)`.
+pub fn split_deadline_prefix(payload: &[u8]) -> Result<(u32, u8, &[u8])> {
+    if payload.len() < DEADLINE_PREFIX {
+        bail!("deadline-infer payload of {} bytes lacks the deadline context", payload.len());
+    }
+    let budget_ms = u32::from_le_bytes(payload[..4].try_into().unwrap());
+    Ok((budget_ms, payload[4], &payload[DEADLINE_PREFIX..]))
+}
+
 /// One decoded client frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Frame {
@@ -293,6 +344,15 @@ pub enum RespStatus {
     Ok,
     Rejected,
     Error,
+    /// Overload shed: the admission controller refused this request to
+    /// protect admitted work.  Body is `[u32 retry_after_ms]` + reason
+    /// bytes ([`parse_shed_body`]).  Only sent on `CAP_DEADLINE`
+    /// sessions; others see shedding as plain [`RespStatus::Rejected`].
+    Shed,
+    /// The request's deadline budget expired before compute could start
+    /// (or the server judged it infeasible); the slot was not burned.
+    /// Only sent on `CAP_DEADLINE` sessions.
+    DeadlineExceeded,
 }
 
 impl RespStatus {
@@ -301,6 +361,8 @@ impl RespStatus {
             RespStatus::Ok => 0,
             RespStatus::Rejected => 1,
             RespStatus::Error => 2,
+            RespStatus::Shed => 3,
+            RespStatus::DeadlineExceeded => 4,
         }
     }
 
@@ -309,6 +371,8 @@ impl RespStatus {
             0 => Ok(RespStatus::Ok),
             1 => Ok(RespStatus::Rejected),
             2 => Ok(RespStatus::Error),
+            3 => Ok(RespStatus::Shed),
+            4 => Ok(RespStatus::DeadlineExceeded),
             v => bail!("bad response status byte {v}"),
         }
     }
@@ -333,6 +397,28 @@ impl Response {
     pub fn error(req_id: u64, why: &str) -> Self {
         Response { req_id, status: RespStatus::Error, body: why.as_bytes().to_vec() }
     }
+
+    /// Overload shed with a retry-after hint (milliseconds).
+    pub fn shed(req_id: u64, retry_after_ms: u32, why: &str) -> Self {
+        let mut body = Vec::with_capacity(4 + why.len());
+        body.extend_from_slice(&retry_after_ms.to_le_bytes());
+        body.extend_from_slice(why.as_bytes());
+        Response { req_id, status: RespStatus::Shed, body }
+    }
+
+    pub fn deadline_exceeded(req_id: u64, why: &str) -> Self {
+        Response { req_id, status: RespStatus::DeadlineExceeded, body: why.as_bytes().to_vec() }
+    }
+}
+
+/// Decode a shed response body into `(retry_after_ms, reason)`.
+pub fn parse_shed_body(body: &[u8]) -> Result<(u32, String)> {
+    if body.len() < 4 {
+        bail!("shed body of {} bytes lacks the retry-after field", body.len());
+    }
+    let retry_after_ms = u32::from_le_bytes(body[..4].try_into().unwrap());
+    let reason = String::from_utf8_lossy(&body[4..]).into_owned();
+    Ok((retry_after_ms, reason))
 }
 
 fn write_str(buf: &mut Vec<u8>, s: &str) -> Result<()> {
@@ -460,11 +546,13 @@ pub fn encode_handshake_reply(r: &HandshakeReply) -> Vec<u8> {
     buf.extend_from_slice(&r.session_id.to_le_bytes());
     buf.extend_from_slice(&r.token.to_le_bytes());
     if let Some(codec) = &r.codec {
-        // Trace and migrate acceptance ride the spare high bits of the
-        // dtype byte, so the v3 reply layout is unchanged in length.
+        // Trace, migrate, and deadline acceptance ride the spare high
+        // bits of the dtype byte, so the v3 reply layout is unchanged
+        // in length.
         let trace_bit = if r.trace { REPLY_TRACE_BIT } else { 0 };
         let migrate_bit = if r.migrate { REPLY_MIGRATE_BIT } else { 0 };
-        buf.push(codec.wire.to_u8() | trace_bit | migrate_bit);
+        let deadline_bit = if r.deadline { REPLY_DEADLINE_BIT } else { 0 };
+        buf.push(codec.wire.to_u8() | trace_bit | migrate_bit | deadline_bit);
         buf.push(codec.precision.to_u8());
     }
     buf.extend_from_slice(&(message.len() as u16).to_le_bytes());
@@ -489,19 +577,36 @@ pub fn read_handshake_reply_v(stream: &mut TcpStream, version: u16) -> Result<Ha
     };
     let session_id = u64::from_le_bytes(fixed[1..9].try_into().unwrap());
     let token = u64::from_le_bytes(fixed[9..17].try_into().unwrap());
-    let (codec, trace, migrate) = if version >= VERSION {
+    let (codec, trace, migrate, deadline) = if version >= VERSION {
         let mut c = [0u8; 2];
         stream.read_exact(&mut c).context("handshake reply codec")?;
         let codec = SessionCodec {
-            wire: WireDtype::from_u8(c[0] & !(REPLY_TRACE_BIT | REPLY_MIGRATE_BIT))?,
+            wire: WireDtype::from_u8(
+                c[0] & !(REPLY_TRACE_BIT | REPLY_MIGRATE_BIT | REPLY_DEADLINE_BIT),
+            )?,
             precision: Precision::from_u8(c[1])?,
         };
-        (Some(codec), c[0] & REPLY_TRACE_BIT != 0, c[0] & REPLY_MIGRATE_BIT != 0)
+        (
+            Some(codec),
+            c[0] & REPLY_TRACE_BIT != 0,
+            c[0] & REPLY_MIGRATE_BIT != 0,
+            c[0] & REPLY_DEADLINE_BIT != 0,
+        )
     } else {
-        (None, false, false)
+        (None, false, false, false)
     };
     let message = read_str(stream)?;
-    Ok(HandshakeReply { accepted, resumed, session_id, token, codec, trace, migrate, message })
+    Ok(HandshakeReply {
+        accepted,
+        resumed,
+        session_id,
+        token,
+        codec,
+        trace,
+        migrate,
+        deadline,
+        message,
+    })
 }
 
 /// Read a legacy v2 reply (no codec bytes).
@@ -615,6 +720,16 @@ pub fn migrate_granted(version: u16, client_caps: u8, server_caps: u8) -> bool {
     version >= VERSION
         && client_caps & crate::runtime::wire::CAP_MIGRATE != 0
         && server_caps & crate::runtime::wire::CAP_MIGRATE != 0
+}
+
+/// Is deadline propagation in force between these two handshake ends?
+/// Same shape as [`migrate_granted`]: both sides v3 *and* both
+/// advertise `CAP_DEADLINE`; every other combination downgrades to
+/// plain infer frames with overload expressed as `rejected`.
+pub fn deadline_granted(version: u16, client_caps: u8, server_caps: u8) -> bool {
+    version >= VERSION
+        && client_caps & crate::runtime::wire::CAP_DEADLINE != 0
+        && server_caps & crate::runtime::wire::CAP_DEADLINE != 0
 }
 
 /// Payload of an `Export` frame: the fleet peer to hand this session to.
@@ -1041,6 +1156,7 @@ mod tests {
             codec: None,
             trace: false,
             migrate: false,
+            deadline: false,
             message: "ok".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -1064,6 +1180,7 @@ mod tests {
             codec: Some(SessionCodec { wire: WireDtype::I8, precision: Precision::Int8 }),
             trace: false,
             migrate: false,
+            deadline: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -1097,6 +1214,7 @@ mod tests {
             }),
             trace: true,
             migrate: false,
+            deadline: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -1126,6 +1244,7 @@ mod tests {
             codec: None,
             trace: false,
             migrate: false,
+            deadline: false,
             message: String::new(),
         };
         assert_eq!(encode_handshake_reply(&reply).len(), 17 + 2);
@@ -1146,6 +1265,7 @@ mod tests {
             codec: Some(SessionCodec { wire: WireDtype::F16, precision: Precision::F32 }),
             trace: false,
             migrate: false,
+            deadline: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -1166,6 +1286,7 @@ mod tests {
             codec: None,
             trace: false,
             migrate: false,
+            deadline: false,
             message: "server at session capacity (8 active)".into(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -1185,6 +1306,7 @@ mod tests {
             codec: None,
             trace: false,
             migrate: false,
+            deadline: false,
             message: "x".repeat(5000),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -1435,6 +1557,7 @@ mod tests {
             codec: Some(SessionCodec { wire: WireDtype::SparseI8, precision: Precision::Int8 }),
             trace: true,
             migrate: true,
+            deadline: false,
             message: String::new(),
         };
         write_handshake_reply(&mut s, &reply).unwrap();
@@ -1447,5 +1570,69 @@ mod tests {
         assert!(!migrate_granted(V2, CAP_MIGRATE, CAP_MIGRATE));
         assert!(!migrate_granted(VERSION, 0, CAP_MIGRATE));
         assert!(!migrate_granted(VERSION, CAP_MIGRATE, 0));
+    }
+
+    #[test]
+    fn deadline_bit_rides_the_reply_dtype_byte() {
+        let (mut c, mut s) = pair();
+        // All three option bits set at once: the dtype must still
+        // decode (the sparse dtype exercises the highest dtype value).
+        let reply = HandshakeReply {
+            accepted: true,
+            resumed: false,
+            session_id: 5,
+            token: 77,
+            codec: Some(SessionCodec { wire: WireDtype::SparseI8, precision: Precision::Int8 }),
+            trace: true,
+            migrate: true,
+            deadline: true,
+            message: String::new(),
+        };
+        write_handshake_reply(&mut s, &reply).unwrap();
+        let got = read_handshake_reply_v(&mut c, VERSION).unwrap();
+        assert_eq!(got, reply);
+        assert_eq!(got.session_codec().wire, WireDtype::SparseI8);
+        // Grant matrix: both v3 + both capable, nothing else.
+        use crate::runtime::wire::CAP_DEADLINE;
+        assert!(deadline_granted(VERSION, CAP_DEADLINE, CAP_DEADLINE));
+        assert!(!deadline_granted(V2, CAP_DEADLINE, CAP_DEADLINE));
+        assert!(!deadline_granted(VERSION, 0, CAP_DEADLINE));
+        assert!(!deadline_granted(VERSION, CAP_DEADLINE, 0));
+    }
+
+    #[test]
+    fn deadline_prefix_round_trips_and_rejects_truncation() {
+        let mut payload = encode_deadline_prefix(250, 3).to_vec();
+        payload.extend_from_slice(&[9, 8, 7]);
+        let (budget, prio, rest) = split_deadline_prefix(&payload).unwrap();
+        assert_eq!((budget, prio, rest), (250, 3, &[9u8, 8, 7][..]));
+        // A bare prefix with no activation bytes is still well-formed...
+        let bare = encode_deadline_prefix(0, 0);
+        assert_eq!(split_deadline_prefix(&bare).unwrap().2.len(), 0);
+        // ...but anything shorter lacks the context.
+        for cut in 0..DEADLINE_PREFIX {
+            assert!(split_deadline_prefix(&payload[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn shed_and_deadline_statuses_round_trip() {
+        let (mut c, mut s) = pair();
+        write_frame(&mut c, 12, ReqKind::DeadlineInfer, &encode_deadline_prefix(100, 1)).unwrap();
+        let f = read_frame(&mut s).unwrap().unwrap();
+        assert_eq!(f.kind, ReqKind::DeadlineInfer);
+        assert_eq!(split_deadline_prefix(&f.payload).unwrap(), (100, 1, &[][..]));
+        write_response(&mut s, &Response::shed(12, 40, "queue delay 55ms over bound")).unwrap();
+        write_response(&mut s, &Response::deadline_exceeded(13, "expired in queue")).unwrap();
+        let r1 = read_response(&mut c).unwrap().unwrap();
+        assert_eq!(r1.status, RespStatus::Shed);
+        let (retry_after, reason) = parse_shed_body(&r1.body).unwrap();
+        assert_eq!(retry_after, 40);
+        assert!(reason.contains("queue delay"));
+        let r2 = read_response(&mut c).unwrap().unwrap();
+        assert_eq!(r2.status, RespStatus::DeadlineExceeded);
+        assert_eq!(String::from_utf8(r2.body).unwrap(), "expired in queue");
+        // Truncated shed body errors instead of inventing a hint.
+        assert!(parse_shed_body(&[1, 2]).is_err());
     }
 }

@@ -206,13 +206,20 @@ impl SessionOutbox {
     }
 
     /// Terminal outcome of an admitted sequence.  Ok/error responses are
-    /// retained for replay; a `rejected` response is forwarded only — a
-    /// re-sent rejected sequence must be re-admitted (and possibly
-    /// succeed this time), not replayed as a reject.
+    /// retained for replay; `rejected`, `shed`, and `deadline exceeded`
+    /// responses are forwarded only — the request was never executed, so
+    /// a re-sent sequence must be re-admitted (and possibly succeed this
+    /// time), not replayed as a refusal.  Not retaining them is also
+    /// what keeps the exactly-once ledger honest: a shed or expired
+    /// request can never be double-counted as completed after a replay.
     pub fn deliver(&self, resp: Response) {
         let mut s = self.inner.lock().unwrap();
         s.in_flight.remove(&resp.req_id);
-        if resp.status != RespStatus::Rejected {
+        let refusal = matches!(
+            resp.status,
+            RespStatus::Rejected | RespStatus::Shed | RespStatus::DeadlineExceeded
+        );
+        if !refusal {
             self.stats.completed.fetch_add(1, Ordering::Relaxed);
             s.ring.insert(resp.req_id, resp.clone());
             while s.ring.len() > self.ring_capacity {
@@ -1093,6 +1100,28 @@ mod tests {
         outbox.deliver(Response::rejected(5, "queue full"));
         assert_eq!(outbox.replay_depth(), 0);
         assert_eq!(outbox.admit(5), Admit::Fresh, "rejected seq is re-admitted");
+    }
+
+    #[test]
+    fn shed_and_expired_responses_are_not_retained_or_counted() {
+        // The exactly-once ledger: a shed/expired sequence was never
+        // executed, so it must neither replay as a refusal nor bump the
+        // completed tally — a later re-send re-admits and may succeed.
+        let outbox = SessionOutbox::new(1, 8);
+        assert_eq!(outbox.admit(5), Admit::Fresh);
+        outbox.deliver(Response::shed(5, 20, "overload"));
+        assert_eq!(outbox.replay_depth(), 0);
+        assert_eq!(outbox.stats().completed.load(Ordering::Relaxed), 0);
+        assert_eq!(outbox.admit(5), Admit::Fresh, "shed seq is re-admitted");
+        outbox.deliver(Response::deadline_exceeded(5, "expired in queue"));
+        assert_eq!(outbox.replay_depth(), 0);
+        assert_eq!(outbox.stats().completed.load(Ordering::Relaxed), 0);
+        assert_eq!(outbox.admit(5), Admit::Fresh, "expired seq is re-admitted");
+        // The retry that finally executes is counted exactly once.
+        outbox.deliver(Response::ok(5, vec![1]));
+        assert_eq!(outbox.stats().completed.load(Ordering::Relaxed), 1);
+        assert_eq!(outbox.admit(5), Admit::Replayed);
+        assert_eq!(outbox.stats().completed.load(Ordering::Relaxed), 1, "replay is not a completion");
     }
 
     #[test]

@@ -216,6 +216,15 @@ fn run_one(
     metrics: &ServingMetrics,
     precision: Precision,
 ) {
+    // Deadline-expired work is dropped before compute: answering
+    // DEADLINE_EXCEEDED costs nothing, while running the inference
+    // would burn a worker slot on an answer nobody is waiting for.
+    if req.expired(Instant::now()) {
+        metrics.note_deadline_exceeded();
+        req.reply
+            .deliver(Response::deadline_exceeded(req.req_id, "deadline expired before compute"));
+        return;
+    }
     let shard = shards
         .entry(req.plan.key.clone())
         .or_insert_with(|| EngineShard::with_precision(req.plan.clone(), precision));
@@ -305,6 +314,8 @@ mod tests {
                         trace_parent: 0,
                         recv_us: 0,
                         dispatched_us: 0,
+                        deadline: None,
+                        priority: 0,
                     }
                 })
                 .collect();
@@ -348,11 +359,53 @@ mod tests {
             trace_parent: 0,
             recv_us: 0,
             dispatched_us: 0,
+            deadline: None,
+            priority: 0,
         }]);
         let resp = reply_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.status, RespStatus::Error);
         assert_eq!(resp.req_id, 123);
         assert_eq!(metrics.request_errors(), 1);
+        dispatch.shutdown_workers();
+        pool.join();
+    }
+
+    #[test]
+    fn expired_request_is_answered_without_compute() {
+        let metrics = Arc::new(ServingMetrics::new());
+        let (pool, mut dispatch) =
+            WorkerPool::spawn(0, 1, false, metrics.clone(), Precision::F32).unwrap();
+        let key = PlanKey::new(MODEL_NAME, 2);
+        let plan = Arc::new(compile_server_plan(&key).unwrap());
+        let outbox = SessionOutbox::new(3, 8);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        outbox.attach(reply_tx, 0, 0).unwrap();
+        let input = make_input(1);
+        dispatch.dispatch(vec![PendingRequest {
+            session: 3,
+            req_id: 44,
+            plan: plan.clone(),
+            plan_metrics: metrics.plan(&key),
+            payload: client_prepare(&input, 2),
+            wire: crate::runtime::wire::WireDtype::F32,
+            enqueued: Instant::now(),
+            reply: outbox.clone(),
+            trace_id: 0,
+            trace_parent: 0,
+            recv_us: 0,
+            dispatched_us: 0,
+            deadline: Some(Instant::now() - Duration::from_millis(5)),
+            priority: 0,
+        }]);
+        let resp = reply_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, RespStatus::DeadlineExceeded);
+        assert_eq!(resp.req_id, 44);
+        assert_eq!(metrics.requests_completed(), 0, "no compute slot was burned");
+        assert_eq!(
+            outbox.stats().completed.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "an expired request is not a completion"
+        );
         dispatch.shutdown_workers();
         pool.join();
     }

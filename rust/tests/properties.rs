@@ -287,13 +287,14 @@ use edge_prune::server::protocol::{
 };
 
 fn random_kind(rng: &mut Rng) -> ReqKind {
-    match rng.below(7) {
+    match rng.below(8) {
         0 => ReqKind::Infer,
         1 => ReqKind::Switch,
         2 => ReqKind::Ping,
         3 => ReqKind::Bye,
         4 => ReqKind::Export,
         5 => ReqKind::Import,
+        6 => ReqKind::DeadlineInfer,
         _ => ReqKind::TracedInfer,
     }
 }
@@ -338,6 +339,14 @@ fn prop_every_frame_kind_round_trips_through_the_resumable_decoder() {
                     p.extend((0..rng.below(size * 4 + 1)).map(|_| rng.next_u64() as u8));
                     p
                 }
+                // Deadline infers carry budget + priority ahead of them.
+                ReqKind::DeadlineInfer => {
+                    let mut p =
+                        encode_deadline_prefix(rng.next_u64() as u32, rng.next_u64() as u8)
+                            .to_vec();
+                    p.extend((0..rng.below(size * 4 + 1)).map(|_| rng.next_u64() as u8));
+                    p
+                }
                 _ => (0..rng.below(size * 4 + 1)).map(|_| rng.next_u64() as u8).collect(),
             };
             (rng.next_u64(), kind, payload, rng.below(4096))
@@ -376,6 +385,14 @@ fn prop_every_frame_kind_round_trips_through_the_resumable_decoder() {
                 let (etid, espan, erest) = split_trace_prefix(payload).unwrap();
                 if (tid, span, rest) != (etid, espan, erest) {
                     return Err("trace prefix mangled".into());
+                }
+            }
+            if *kind == ReqKind::DeadlineInfer {
+                let (budget, prio, rest) =
+                    split_deadline_prefix(&f.payload).map_err(|e| format!("{e}"))?;
+                let (ebudget, eprio, erest) = split_deadline_prefix(payload).unwrap();
+                if (budget, prio, rest) != (ebudget, eprio, erest) {
+                    return Err("deadline prefix mangled".into());
                 }
             }
             Ok(())
@@ -433,7 +450,7 @@ fn prop_frame_length_field_is_validated_before_payload() {
         808,
         80,
         64,
-        |rng, _| (rng.next_u64(), rng.below(7) as u8, rng.next_u64() as u32),
+        |rng, _| (rng.next_u64(), rng.below(8) as u8, rng.next_u64() as u32),
         |&(seq, kind, len)| {
             let mut header = Vec::with_capacity(13);
             header.extend_from_slice(&seq.to_le_bytes());
@@ -960,4 +977,99 @@ fn prop_export_and_import_frames_survive_the_resumable_decoder_at_every_split() 
             Ok(())
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// Overload-control codec properties: the 5-byte deadline prefix and the
+// SHED body (retry-after + reason) must round-trip exactly, refuse
+// truncation with a clean error, and the CAP_DEADLINE grant must
+// downgrade every v2 / no-bit peer combination — the same discipline
+// the trace prefix and the migrate grant already uphold.
+// ---------------------------------------------------------------------
+
+use edge_prune::server::protocol::{
+    deadline_granted, encode_deadline_prefix, parse_shed_body, split_deadline_prefix,
+    DEADLINE_PREFIX,
+};
+
+#[test]
+fn prop_deadline_prefixes_are_canonical_and_reject_truncation() {
+    forall(
+        1717,
+        120,
+        64,
+        |rng, _| (rng.next_u64() as u32, rng.next_u64() as u8),
+        |&(budget, prio)| {
+            let p = encode_deadline_prefix(budget, prio);
+            if p.len() != DEADLINE_PREFIX {
+                return Err("prefix length drifted from DEADLINE_PREFIX".into());
+            }
+            let (b, pr, rest) = split_deadline_prefix(&p).map_err(|e| format!("{e}"))?;
+            if (b, pr) != (budget, prio) || !rest.is_empty() {
+                return Err(format!("round trip mangled: {b}/{pr}"));
+            }
+            // With a body attached, the split hands back exactly the body.
+            let mut framed = p.to_vec();
+            framed.extend_from_slice(&[9, 8, 7]);
+            let (b, pr, rest) = split_deadline_prefix(&framed).map_err(|e| format!("{e}"))?;
+            if (b, pr) != (budget, prio) || rest != [9, 8, 7] {
+                return Err("split consumed body bytes".into());
+            }
+            // Every strict prefix of the header errors cleanly — a torn
+            // deadline must never parse as a shorter budget.
+            for cut in 0..DEADLINE_PREFIX {
+                if split_deadline_prefix(&p[..cut]).is_ok() {
+                    return Err(format!("truncation to {cut} bytes parsed"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shed_bodies_round_trip_and_reject_truncation() {
+    forall(
+        1818,
+        100,
+        48,
+        |rng, size| (rng.next_u64(), rng.next_u64() as u32, random_ascii(rng, size.min(40))),
+        |(req_id, retry_ms, why)| {
+            let resp = Response::shed(*req_id, *retry_ms, why);
+            let (ms, reason) = parse_shed_body(&resp.body).map_err(|e| format!("{e}"))?;
+            if ms != *retry_ms || &reason != why {
+                return Err(format!("shed body mangled: {ms} '{reason}'"));
+            }
+            // The 4 retry-after bytes are mandatory: anything shorter
+            // errors instead of inventing a hint.
+            for cut in 0..4.min(resp.body.len()) {
+                if parse_shed_body(&resp.body[..cut]).is_ok() {
+                    return Err(format!("truncation to {cut} bytes parsed"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn deadline_grant_downgrades_every_old_peer_combination() {
+    use edge_prune::runtime::wire::CAP_DEADLINE;
+    // Exhaustive over version x both capability masks, the same matrix
+    // the migrate grant passes: deadlines are granted exactly when the
+    // session is v3+ and BOTH sides advertise CAP_DEADLINE.
+    for version in [1u16, 2, VERSION, VERSION + 1] {
+        for client in 0..=255u8 {
+            for server in 0..=255u8 {
+                let want = version >= VERSION
+                    && client & CAP_DEADLINE != 0
+                    && server & CAP_DEADLINE != 0;
+                assert_eq!(
+                    deadline_granted(version, client, server),
+                    want,
+                    "v{version} {client:#x}/{server:#x}"
+                );
+            }
+        }
+    }
 }

@@ -797,6 +797,7 @@ fn new_client_falls_back_to_v2_against_old_server() {
                 codec: None,
                 trace: false,
                 migrate: false,
+                deadline: false,
                 message: String::new(),
             },
         )
@@ -1597,4 +1598,329 @@ fn fleet_survives_kill_and_rolling_drain() {
         merged <= (total + 4 * clients as u64) as i64,
         "ledger overcount breaks exactly-once: {merged} vs {total}"
     );
+}
+
+/// Deadline propagation end to end: a zero-budget kind-7 frame is
+/// refused with an explicit `DEADLINE_EXCEEDED` before any compute, a
+/// real budget completes and verifies on the same session, and the
+/// server's refusal ledger matches.
+#[test]
+fn expired_deadline_gets_explicit_refusal_before_compute() {
+    use edge_prune::runtime::wire::CAP_DEADLINE;
+    use edge_prune::server::protocol::{connect_client, encode_deadline_prefix};
+    let server = Server::start(test_cfg()).unwrap();
+    let hello = Handshake::v3("synthetic", 2, "deadliner", CAP_DEADLINE);
+    let (mut s, reply, _codec) =
+        connect_client(&server.addr().to_string(), &hello, Some(Duration::from_secs(5))).unwrap();
+    assert!(reply.accepted);
+    assert!(reply.deadline, "v3 + both cap bits grants deadlines");
+
+    // Budget 0: expired on arrival, dropped at admission — no worker
+    // slot burned, the seq answered explicitly.
+    let input = make_input(1);
+    let mut framed = encode_deadline_prefix(0, 3).to_vec();
+    framed.extend_from_slice(&client_prepare(&input, 2));
+    write_frame(&mut s, 1, ReqKind::DeadlineInfer, &framed).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.req_id, 1);
+    assert_eq!(resp.status, RespStatus::DeadlineExceeded);
+
+    // A generous budget completes and verifies on the same session.
+    let input = make_input(2);
+    let mut framed = encode_deadline_prefix(30_000, 3).to_vec();
+    framed.extend_from_slice(&client_prepare(&input, 2));
+    write_frame(&mut s, 2, ReqKind::DeadlineInfer, &framed).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.status, RespStatus::Ok);
+    assert_eq!(resp.body, expected_digest(&input));
+    write_frame(&mut s, 3, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.get("deadline_exceeded").unwrap().int().unwrap(), 1);
+    assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), 1);
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// The CAP_DEADLINE downgrade matrix: no grant unless both sides
+/// advertise the bit, and a kind-7 frame on an ungranted session is an
+/// explicit error response — the session survives (the client may be
+/// probing a mixed fleet), unlike a framing violation.
+#[test]
+fn deadline_downgrade_matrix_is_explicit() {
+    use edge_prune::runtime::wire::{WireDtype, CAP_DEADLINE};
+    use edge_prune::server::protocol::{connect_client, encode_deadline_prefix};
+
+    // Client without the bit against a capable server.
+    let server = Server::start(test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+    let hello = Handshake::v3("synthetic", 2, "no-bit", WireDtype::F32.caps());
+    let (mut s, reply, _) = connect_client(&addr, &hello, Some(Duration::from_secs(5))).unwrap();
+    assert!(reply.accepted);
+    assert!(!reply.deadline, "grant requires the client bit");
+    let mut framed = encode_deadline_prefix(1_000, 0).to_vec();
+    framed.extend_from_slice(&client_prepare(&make_input(1), 2));
+    write_frame(&mut s, 1, ReqKind::DeadlineInfer, &framed).unwrap();
+    let resp = read_response(&mut s).unwrap().unwrap();
+    assert_eq!(resp.status, RespStatus::Error);
+    assert!(
+        String::from_utf8(resp.body).unwrap().contains("CAP_DEADLINE"),
+        "refusal names the missing capability"
+    );
+    // The refused frame did not tear the session down.
+    let input = make_input(2);
+    write_request(&mut s, 2, &client_prepare(&input, 2)).unwrap();
+    assert_eq!(read_response(&mut s).unwrap().unwrap().body, expected_digest(&input));
+    write_frame(&mut s, 3, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+    server.shutdown();
+
+    // Willing client against a capability-stripped server: accepted,
+    // but silently downgraded to plain infer semantics.
+    let server = Server::start(ServerConfig { wire_caps: 0, ..test_cfg() }).unwrap();
+    let hello = Handshake::v3("synthetic", 2, "willing", CAP_DEADLINE);
+    let (mut s, reply, _) =
+        connect_client(&server.addr().to_string(), &hello, Some(Duration::from_secs(5))).unwrap();
+    assert!(reply.accepted);
+    assert!(!reply.deadline, "grant requires the server bit");
+    write_frame(&mut s, 1, ReqKind::Bye, &[]).unwrap();
+    drop(s);
+    server.shutdown();
+}
+
+/// A kind-7 frame too short to carry its 5-byte deadline prefix is a
+/// protocol violation on a granted session: the connection closes
+/// cleanly (no panic, no partial parse) and the server keeps serving.
+#[test]
+fn truncated_deadline_prefix_closes_connection_cleanly() {
+    use edge_prune::runtime::wire::CAP_DEADLINE;
+    use edge_prune::server::protocol::connect_client;
+    let server = Server::start(test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+    let hello = Handshake::v3("synthetic", 2, "torn-prefix", CAP_DEADLINE);
+    let (mut s, reply, _) = connect_client(&addr, &hello, Some(Duration::from_secs(5))).unwrap();
+    assert!(reply.accepted && reply.deadline);
+    write_frame(&mut s, 1, ReqKind::DeadlineInfer, &[1, 2, 3]).unwrap();
+    match read_response(&mut s) {
+        Ok(None) | Err(_) => {}
+        Ok(Some(resp)) => panic!("expected a close, got a {:?} response", resp.status),
+    }
+    drop(s);
+    // The server survives for the next session.
+    let report = run_loadgen(&LoadgenConfig {
+        addr,
+        clients: 1,
+        requests: 5,
+        pp: 2,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert_eq!(report.ok, 5, "{}", report.summary());
+    server.shutdown();
+}
+
+/// The overload acceptance gate: a deadline-carrying wave against a
+/// deliberately starved server (one worker, tiny shed bound) sheds work
+/// — and every single non-admitted request gets an explicit outcome.
+/// Zero lost, and the server's shed ledger matches the clients' exactly
+/// (strict loadgen clients never re-offer a shed request).
+#[test]
+fn overload_wave_sheds_explicitly_with_zero_lost() {
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        max_batch: 2,
+        batch_linger: Duration::from_millis(2),
+        // Any measured queue wait crosses the bound, so shedding kicks
+        // in as soon as requests actually overlap in the queue.
+        shed_delay_ms: 0.0005,
+        ..test_cfg()
+    })
+    .unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        clients: 8,
+        requests: 25,
+        pp: 2,
+        deadline_ms: 30_000,
+        priority: 0,
+        seed: 7000,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+
+    assert_eq!(report.sent, 200, "{}", report.summary());
+    assert_eq!(report.errors, 0, "{}", report.summary());
+    assert_eq!(report.lost(), 0, "{}", report.summary());
+    assert_eq!(
+        report.ok + report.rejected + report.shed + report.deadline_exceeded,
+        report.sent,
+        "every request got an explicit outcome: {}",
+        report.summary()
+    );
+    assert!(report.shed >= 1, "the starved server shed work: {}", report.summary());
+    assert!(report.ok >= 1, "admitted work still completed");
+
+    let metrics = server.shutdown();
+    assert_eq!(
+        metrics.get("requests_shed").unwrap().int().unwrap(),
+        report.shed as i64,
+        "server and client shed ledgers agree"
+    );
+    assert_eq!(
+        metrics.get("deadline_exceeded").unwrap().int().unwrap(),
+        report.deadline_exceeded as i64
+    );
+    assert_eq!(metrics.get("requests_completed").unwrap().int().unwrap(), report.ok as i64);
+    assert!(
+        metrics.get("queue_delay_ewma_ms").unwrap().num().unwrap() > 0.0,
+        "the queue-wait gauge saw real samples"
+    );
+    assert_eq!(metrics.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// Health-driven rebalancing (the tentpole, server-initiated): a shard
+/// hot past its dwell volunteers its most expensive idle session to the
+/// least-loaded manifest peer, the attached client follows the
+/// unsolicited MIGRATE hint live, and the merged ledgers prove zero
+/// loss.
+#[test]
+fn hot_shard_volunteers_session_to_cold_peer() {
+    use edge_prune::server::fleet;
+    use edge_prune::server::model::expected_digest_codec;
+    let server_b = Server::start(test_cfg()).unwrap();
+    let addr_b = server_b.addr().to_string();
+    let server_a = Server::start(ServerConfig {
+        // "Anything measured counts as hot" posture: at a 0.0 delay
+        // bound the first popped batch makes A hot and keeps it hot
+        // (the EWMA never decays back to exactly zero), and the dwell
+        // is long enough that the move lands while the clients idle.
+        rebalance_peers: vec![addr_b.clone()],
+        rebalance_hot: Duration::from_millis(150),
+        rebalance_cooldown: Duration::from_secs(60),
+        ..test_cfg()
+    })
+    .unwrap();
+    let addr_a = server_a.addr().to_string();
+
+    // TWO sessions on A: the volunteer guard (`peer_load + 1 <
+    // local_load`) refuses to hand off a server's only session, so a
+    // single-session server can never drain itself through its own
+    // balancer.
+    let mut movers: Vec<FailoverClient> = (0..2)
+        .map(|i| {
+            FailoverClient::new(FailoverConfig {
+                addr: addr_a.clone(),
+                pp: 2,
+                client_id: format!("hot-{i}"),
+                max_attempts: 3,
+                reconnect_backoff: Duration::from_millis(1),
+                ..FailoverConfig::default()
+            })
+        })
+        .collect();
+    for i in 0..5u64 {
+        for fc in movers.iter_mut() {
+            let input = make_input(i);
+            let (body, _) = fc.infer(&input).unwrap();
+            assert_eq!(body, expected_digest_codec(&input, 2, fc.codec()), "frame {i}");
+        }
+    }
+
+    // Wait for the balancer: the dwell elapses, B probes as the cold
+    // peer, and exactly one session moves (after which load parity
+    // stops further volunteering).
+    let mut moved = false;
+    for _ in 0..400 {
+        if fleet::probe_peer_load(&addr_b, Duration::from_secs(1)).unwrap_or(0) >= 1 {
+            moved = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(moved, "rebalancer never volunteered a session to the cold peer");
+
+    // Both clients keep inferring; the redirected one follows the hint.
+    for i in 5..10u64 {
+        for fc in movers.iter_mut() {
+            let input = make_input(i);
+            let (body, served) = fc.infer(&input).unwrap();
+            assert!(!served.is_local(), "frame {i} stayed remote through the move");
+            assert_eq!(body, expected_digest_codec(&input, 2, fc.codec()), "frame {i}");
+        }
+    }
+    let mut followed = 0;
+    for mut fc in movers {
+        fc.finish();
+        let st = fc.stats();
+        followed += st.migrations_followed;
+        assert_eq!(st.completed, 10, "zero loss through the rebalance");
+    }
+    assert_eq!(followed, 1, "exactly one session was volunteered");
+
+    let ma = server_a.shutdown();
+    let mb = server_b.shutdown();
+    assert_eq!(ma.get("sessions_rebalanced").unwrap().int().unwrap(), 1);
+    assert_eq!(mb.get("sessions_migrated_in").unwrap().int().unwrap(), 1);
+    let done = ma.get("requests_completed").unwrap().int().unwrap()
+        + mb.get("requests_completed").unwrap().int().unwrap();
+    assert_eq!(done, 20, "exactly-once across the rebalanced pair");
+    assert_eq!(ma.get("request_errors").unwrap().int().unwrap(), 0);
+    assert_eq!(mb.get("request_errors").unwrap().int().unwrap(), 0);
+}
+
+/// `probe_peer_load` reads the live load a peer embeds in its fleet
+/// handshake reply, and `volunteer_once` is the rebalancer's
+/// deterministic single step — it hands one idle session over without
+/// waiting out a dwell (and without the load-parity guard).
+#[test]
+fn volunteer_once_and_peer_load_probe() {
+    use edge_prune::server::fleet;
+    use edge_prune::server::model::expected_digest_codec;
+    let server_a = Server::start(test_cfg()).unwrap();
+    let server_b = Server::start(test_cfg()).unwrap();
+    let addr_a = server_a.addr().to_string();
+    let addr_b = server_b.addr().to_string();
+
+    assert_eq!(fleet::probe_peer_load(&addr_b, Duration::from_secs(2)).unwrap(), 0);
+
+    let mut fc = FailoverClient::new(FailoverConfig {
+        addr: addr_a.clone(),
+        pp: 2,
+        client_id: "volunteered".into(),
+        max_attempts: 3,
+        reconnect_backoff: Duration::from_millis(1),
+        ..FailoverConfig::default()
+    });
+    for i in 0..3u64 {
+        let input = make_input(i);
+        let (body, _) = fc.infer(&input).unwrap();
+        assert_eq!(body, expected_digest_codec(&input, 2, fc.codec()), "frame {i}");
+    }
+    assert_eq!(
+        fleet::probe_peer_load(&addr_a, Duration::from_secs(2)).unwrap(),
+        1,
+        "an attached idle session reads back as load 1"
+    );
+
+    let moved_id = server_a.volunteer_once(&addr_b).unwrap();
+    assert!(moved_id >= 1, "volunteer returns the exported session id");
+    assert_eq!(fleet::probe_peer_load(&addr_b, Duration::from_secs(2)).unwrap(), 1);
+
+    // The client's next exchanges read the hint, redial B with the
+    // peer-minted credentials, and lose nothing.
+    for i in 3..6u64 {
+        let input = make_input(i);
+        let (body, served) = fc.infer(&input).unwrap();
+        assert!(!served.is_local(), "frame {i} after the volunteer");
+        assert_eq!(body, expected_digest_codec(&input, 2, fc.codec()), "frame {i}");
+    }
+    fc.finish();
+    let st = fc.stats();
+    assert_eq!(st.completed, 6, "zero loss through the volunteer");
+    assert_eq!(st.migrations_followed, 1);
+
+    let ma = server_a.shutdown();
+    let mb = server_b.shutdown();
+    assert_eq!(ma.get("sessions_rebalanced").unwrap().int().unwrap(), 1);
+    assert_eq!(mb.get("sessions_migrated_in").unwrap().int().unwrap(), 1);
 }
